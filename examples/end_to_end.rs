@@ -1,0 +1,119 @@
+//! End-to-end driver (the system-prompt-required validation run):
+//!
+//! 1. Layer 2/1 (build time, cached): `make artifacts` trained
+//!    LeNet-300-100 (~267k params) and LeNet5 on synth-MNIST with
+//!    variational-dropout sparsification and lowered their Pallas
+//!    forward passes to HLO.
+//! 2. This binary (pure Rust, no Python):
+//!    a. loads the sparse weights + posterior sigmas,
+//!    b. evaluates the *original* accuracy through the PJRT runtime,
+//!    c. sweeps S, compresses with the coupled RD quantizer + CABAC,
+//!    d. decompresses, re-evaluates accuracy,
+//!    e. prints the Table-1-style row and asserts the contract:
+//!       big compression, tiny accuracy delta, bit-exact container.
+//!
+//! ```bash
+//! cargo run --release --offline --example end_to_end
+//! ```
+
+use deepcabac::app;
+use deepcabac::coordinator::{sweep::default_s_grid, sweep_s, CompressionSpec};
+use deepcabac::model::CompressedModel;
+use deepcabac::report::human_bytes;
+use deepcabac::runtime::Runtime;
+use deepcabac::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "lenet300".to_string());
+    println!("=== DeepCABAC end-to-end: {model_name} ===\n");
+
+    let t_all = Timer::new();
+    let model = app::load_model(&model_name)?;
+    println!(
+        "loaded {}: {} weights in {} layers, density {:.2}% (VD-sparsified), raw {}",
+        model.manifest.name,
+        model.weight_count(),
+        model.weights.len(),
+        model.density() * 100.0,
+        human_bytes(model.raw_bytes()),
+    );
+
+    // -- original accuracy through PJRT (Python is NOT involved) --------
+    let rt = Runtime::cpu()?;
+    let t = Timer::new();
+    let before = app::evaluate_original(&rt, &model)?;
+    println!(
+        "\n[1] original eval : {:.4} ({} samples, {:.2}s, platform={})",
+        before.metric,
+        before.n_samples,
+        t.elapsed_s(),
+        rt.platform()
+    );
+
+    // -- S sweep + coupled RD quantization + CABAC ----------------------
+    let spec = CompressionSpec::default();
+    let grid = default_s_grid(17);
+    let t = Timer::new();
+    let sweep = sweep_s(&model, &grid, &spec, 1);
+    let (compressed, report) = sweep.best;
+    println!(
+        "\n[2] compression   : {} -> {} ({:.2}% of original, x{:.1}) in {:.2}s",
+        human_bytes(report.raw_bytes),
+        human_bytes(report.compressed_bytes),
+        report.ratio_percent(),
+        report.factor(),
+        t.elapsed_s(),
+    );
+    println!("    sweep probed {} S values; best S = {}", sweep.points.len(),
+             compressed.layers[0].s_param);
+    for l in &report.layers {
+        println!(
+            "      {:<8} {:>9} weights  {:>8}  {:.3} bpw",
+            l.name,
+            l.n_weights,
+            human_bytes(l.payload_bytes),
+            l.bits_per_weight()
+        );
+    }
+
+    // -- container round trip -------------------------------------------
+    let bytes = compressed.serialize();
+    let reloaded = CompressedModel::deserialize(&bytes)?;
+    assert_eq!(reloaded.serialize(), bytes, "container not bit-exact");
+    println!("\n[3] container     : {} serialized, bit-exact reload OK", human_bytes(bytes.len()));
+
+    // -- decompressed accuracy through PJRT ------------------------------
+    let t = Timer::new();
+    let after = app::evaluate_compressed(&rt, &model, &reloaded)?;
+    println!(
+        "[4] compressed eval: {:.4} ({:.2}s)",
+        after.metric,
+        t.elapsed_s()
+    );
+
+    let delta = before.metric - after.metric;
+    println!("\n=== Table-1 row ===");
+    println!(
+        "{:<10} {:<12} org {:.4} | size {} | spars {:.2}% | ratio {:.2}% | after {:.4} (Δ {:+.4})",
+        model.manifest.name,
+        app::dataset_of(&model.manifest.name),
+        before.metric,
+        human_bytes(report.raw_bytes),
+        model.density() * 100.0,
+        report.ratio_percent(),
+        after.metric,
+        -delta,
+    );
+    println!("total wall time: {:.1}s", t_all.elapsed_s());
+
+    // Contract asserts (loose enough for any healthy run).
+    assert!(report.factor() > 5.0, "compression factor suspiciously low");
+    let tolerance = if model.manifest.task == "classify" { 0.02 } else { 1.5 };
+    assert!(
+        delta.abs() < tolerance || after.metric > before.metric,
+        "accuracy drop {delta} exceeds tolerance {tolerance}"
+    );
+    println!("\nEND-TO-END OK");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! L1 kernel offload: the Rust coordinator executes the *Pallas
+//! rd_quantize kernel itself* through PJRT (artifacts/kernels/...),
+//! using it for batched candidate pre-selection, then compares against
+//! the exact sequential RD scan.
+//!
+//! This is the third way the three layers compose (besides model
+//! forwards and the codec): L3 calls L1 compute directly.
+//!
+//! ```bash
+//! cargo run --release --offline --example kernel_offload
+//! ```
+
+use deepcabac::app;
+use deepcabac::quant::QuantGrid;
+use deepcabac::runtime::{RdQuantizeKernel, Runtime};
+use deepcabac::util::{SplitMix64, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let kernel = RdQuantizeKernel::load(&rt, &app::artifacts_dir())?;
+    println!(
+        "loaded rd_quantize HLO kernel: block {} weights x {} grid points\n",
+        kernel.block_n, kernel.k
+    );
+
+    // a sparse tensor + grid, like one VGG conv layer
+    let n = 200_000;
+    let mut rng = SplitMix64::new(99);
+    let mut w = vec![0.0f32; n];
+    let mut eta = vec![1.0f32; n];
+    for i in 0..n {
+        if rng.next_f64() < 0.1 {
+            w[i] = rng.laplace(0.08) as f32;
+        }
+        eta[i] = 1.0 / (0.02 + 0.05 * rng.next_f32()).powi(2);
+    }
+    let grid = QuantGrid::from_stats(
+        w.iter().fold(0.0f32, |m, &v| m.max(v.abs())),
+        0.02,
+        40,
+    );
+    // explicit grid + a frozen rate snapshot (fresh-context estimate)
+    let levels: Vec<i32> = (-grid.max_level..=grid.max_level).collect();
+    let q: Vec<f32> = levels.iter().map(|&l| grid.value(l)).collect();
+    let cfg = deepcabac::codec::CodecConfig::default();
+    let ctxs = deepcabac::codec::ContextSet::new(&cfg);
+    let rate: Vec<f32> = levels
+        .iter()
+        .map(|&l| {
+            deepcabac::codec::RateEstimator::level_bits(&cfg, &ctxs, (false, false), l)
+        })
+        .collect();
+    let lambda = 0.02f32;
+
+    let t = Timer::new();
+    let idx = kernel.run(&w, &eta, &q, &rate, lambda)?;
+    let kernel_s = t.elapsed_s();
+
+    // native exact argmin over the same frozen snapshot
+    let t = Timer::new();
+    let mut agree = 0usize;
+    for i in 0..n {
+        let mut best = (0usize, f32::INFINITY);
+        for (j, (&qq, &rr)) in q.iter().zip(&rate).enumerate() {
+            let d = w[i] - qq;
+            let cost = eta[i] * d * d + lambda * rr;
+            if cost < best.1 {
+                best = (j, cost);
+            }
+        }
+        if best.0 == idx[i] as usize {
+            agree += 1;
+        }
+    }
+    let native_s = t.elapsed_s();
+
+    println!("kernel (PJRT, blocked)   : {:.3}s for {n} weights", kernel_s);
+    println!("native (exact, per-weight): {:.3}s", native_s);
+    println!(
+        "agreement: {agree}/{n} ({:.4}%)",
+        agree as f64 / n as f64 * 100.0
+    );
+    assert_eq!(agree, n, "blocked kernel must match the frozen-rate argmin");
+    println!("\nL1-from-L3 kernel offload OK");
+    Ok(())
+}

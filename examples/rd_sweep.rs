@@ -1,0 +1,45 @@
+//! Rate–distortion sweep (the paper's §3/§4 trade-off surface).
+//!
+//! Sweeps the Lagrangian λ and the grid coarseness S on a trained model
+//! and prints CSV series: bytes vs weighted distortion vs accuracy.
+//! This regenerates the implicit "figure" behind the paper's statement
+//! that compression is sensitive to S (they probed all S ∈ {0..256}).
+//!
+//! ```bash
+//! cargo run --release --offline --example rd_sweep -- lenet300 > rd_sweep.csv
+//! ```
+
+use deepcabac::app;
+use deepcabac::coordinator::{compress_model, CompressionSpec};
+use deepcabac::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "lenet300".to_string());
+    let with_eval = std::env::args().any(|a| a == "--eval");
+    let model = app::load_model(&model_name)?;
+    let rt = if with_eval { Some(Runtime::cpu()?) } else { None };
+
+    println!("model,lambda_scale,S,bytes,bits_per_weight,distortion,density,accuracy");
+    for &lambda_scale in &[0.0f32, 0.01, 0.05, 0.2, 1.0] {
+        for &s in &[0u32, 16, 32, 64, 96, 128, 192, 256] {
+            let spec = CompressionSpec { s, lambda_scale, ..Default::default() };
+            let (compressed, report) = compress_model(&model, &spec, 1);
+            let distortion: f64 = report.layers.iter().map(|l| l.distortion).sum();
+            let acc = match &rt {
+                Some(rt) => {
+                    format!("{:.4}", app::evaluate_compressed(rt, &model, &compressed)?.metric)
+                }
+                None => "".to_string(),
+            };
+            println!(
+                "{model_name},{lambda_scale},{s},{},{:.4},{:.6e},{:.4},{acc}",
+                report.compressed_bytes,
+                report.bits_per_weight(),
+                distortion,
+                report.density,
+            );
+        }
+    }
+    Ok(())
+}

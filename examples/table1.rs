@@ -1,0 +1,98 @@
+//! Regenerate the paper's Table 1.
+//!
+//! Small trained models (LeNet-300-100, LeNet5, Small-VGG16, FCAE) get
+//! the full treatment: S-sweep → compress → PJRT accuracy before/after.
+//! With `--large`, the VGG16 / ResNet50 / MobileNet-v1 rows are added
+//! using synthetic weights at true layer shapes (DESIGN.md §5) at 1/8
+//! channel scale (pass `--scale 1` for the true 553 MB VGG16 — slow).
+//!
+//! ```bash
+//! cargo run --release --offline --example table1 -- --large
+//! ```
+
+use deepcabac::app;
+use deepcabac::coordinator::{sweep::default_s_grid, CompressionSpec};
+use deepcabac::report::{human_bytes, Table};
+use deepcabac::synth::Arch;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let large = args.iter().any(|a| a == "--large");
+    let no_eval = args.iter().any(|a| a == "--no-eval");
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(8);
+
+    let spec = CompressionSpec::default();
+    let s_grid = default_s_grid(17);
+
+    println!("Table 1 — compression ratios with DeepCABAC (this reproduction)");
+    println!("paper reference values in brackets; datasets are synthetic substitutes\n");
+
+    let mut table = Table::new(&[
+        "Model", "Dataset", "Org.acc", "Org.size", "Spars.[%]",
+        "Comp.ratio[%]", "Acc.after", "[paper spars/ratio]",
+    ]);
+    let paper_ref = |m: &str| match m {
+        "lenet300" => "9.05 / 1.82",
+        "lenet5" => "1.90 / 0.72",
+        "smallvgg" => "7.57 / 1.6",
+        "fcae" => "55.69 / 16.15",
+        "vgg16" => "9.85 / 1.57",
+        "resnet50" => "25.40 / 5.95",
+        "mobilenet-v1" => "50.73 / 12.7",
+        _ => "-",
+    };
+
+    for name in app::SMALL_MODELS {
+        eprintln!("[table1] {name} ...");
+        let row = app::table1_small_row(name, &s_grid, &spec, 1, !no_eval)?;
+        table.row(vec![
+            row.model.clone(),
+            row.dataset.clone(),
+            fmt_metric(&row.model, row.org_metric),
+            human_bytes(row.org_bytes),
+            format!("{:.2}", row.sparsity_pct),
+            format!("{:.2}", row.ratio_pct),
+            row.metric_after
+                .map(|m| fmt_metric(&row.model, m))
+                .unwrap_or_else(|| "n/a".into()),
+            paper_ref(&row.model).into(),
+        ]);
+    }
+
+    if large {
+        for arch in [Arch::Vgg16, Arch::ResNet50, Arch::MobileNetV1] {
+            eprintln!("[table1] {} (synthetic, 1/{scale}) ...", arch.name());
+            let row = app::table1_large_row(arch, scale, &s_grid, &spec, 1, 42)?;
+            table.row(vec![
+                format!("{}*", row.model),
+                row.dataset.clone(),
+                "n/a".into(),
+                human_bytes(row.org_bytes),
+                format!("{:.2}", row.sparsity_pct),
+                format!("{:.2}", row.ratio_pct),
+                "n/a".into(),
+                paper_ref(&row.model).into(),
+            ]);
+        }
+    }
+
+    println!("{}", table.render());
+    if large {
+        println!("* synthetic weights at true layer shapes (1/{scale} channel scale);");
+        println!("  accuracy requires ImageNet — see DESIGN.md §5 substitutions.");
+    }
+    Ok(())
+}
+
+fn fmt_metric(model: &str, m: f64) -> String {
+    if model == "fcae" {
+        format!("{m:.2} dB")
+    } else {
+        format!("{:.2}%", m * 100.0)
+    }
+}

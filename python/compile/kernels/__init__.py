@@ -1,0 +1,13 @@
+"""Layer 1 — Pallas kernels (executed under ``interpret=True`` on CPU).
+
+Exports:
+    matmul       — tiled matmul + bias + activation (MXU-shaped)
+    conv2d       — im2col + matmul kernel (NCHW)
+    rd_quantize  — blocked weighted rate-distortion argmin (paper eq. 1)
+    ref          — pure-jnp oracles for all of the above
+"""
+
+from . import ref  # noqa: F401
+from .conv2d import conv2d  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .rd_quantize import rd_quantize  # noqa: F401

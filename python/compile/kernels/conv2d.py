@@ -1,0 +1,61 @@
+"""NCHW convolution = im2col (L2, plain jnp layout ops) + the Pallas
+matmul kernel (L1). This mirrors the paper's footnote 1: conv tensors are
+compressed in their cuDNN/im2col matrix form (Chetlur et al. 2014), and
+on TPU the same im2col + MXU matmul is the natural schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """x: (N,C,H,W) -> patches (N*OH*OW, C*kh*kw), plus (OH, OW).
+
+    Uses ``lax.conv_general_dilated_patches`` (an identity-kernel conv),
+    which XLA lowers to an efficient extraction — hand-rolled nested
+    gathers lowered catastrophically on CPU (30s+ per LeNet5 batch).
+    """
+    n, c, h, w = x.shape
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (n, c*kh*kw, oh, ow)
+    patches = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, c * kh * kw)
+    return patches, oh, ow
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "activation", "interpret")
+)
+def conv2d(
+    x,
+    w,
+    b=None,
+    stride: int = 1,
+    padding: int = 0,
+    activation: str | None = None,
+    interpret: bool = True,
+):
+    """NCHW conv via im2col + Pallas matmul.
+
+    x: (N,C,H,W) f32, w: (O,C,kh,kw) f32, b: (O,) f32 or None.
+    Returns (N,O,OH,OW) f32.
+    """
+    n, c, h, wdim = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch: {x.shape} vs {w.shape}"
+    patches, oh, ow = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(o, c * kh * kw).T  # (c*kh*kw, o)
+    y = matmul(patches, wmat, b, activation=activation, interpret=interpret)
+    return y.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)

@@ -1,0 +1,128 @@
+"""Pallas tiled matmul + bias + activation (Layer 1).
+
+TPU-shaped even though we execute under ``interpret=True`` on CPU (the
+Mosaic custom-call emitted for real TPUs cannot run on the CPU PJRT
+plugin — see DESIGN.md §Hardware-Adaptation):
+
+* the grid is (M/bm, N/bn, K/bk); each (i, j) output tile accumulates
+  over the k axis in VMEM, the canonical MXU-feeding schedule
+  (bm = bn = 128 matches the 128x128 systolic array; bk = 128 keeps each
+  operand tile at 64 KiB f32, comfortably inside the ~16 MiB VMEM budget
+  with double buffering),
+* accumulation is f32 (MXU accumulator width); outputs are f32,
+* bias-add + activation are fused into the last k step so each output
+  tile leaves VMEM exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred tile sizes; shrunk to divisors for small operands.
+#
+# Two targets (env PALLAS_TARGET):
+#   "tpu"            — 128x128x128: the MXU systolic shape, ~192 KiB of
+#                      f32 operand tiles, double-buffers comfortably in
+#                      the ~16 MiB VMEM. What a real TPU build uses.
+#   "cpu-interpret"  — 2048x512x512 (default here): interpret mode pays
+#                      ~ms *per grid step*, so on CPU we trade VMEM
+#                      realism for a ~30x smaller grid. Numerics are
+#                      identical (same kernel body, same f32 accumulate).
+import os
+
+if os.environ.get("PALLAS_TARGET", "cpu-interpret") == "tpu":
+    BM, BN, BK = 128, 128, 128
+else:
+    BM, BN, BK = 2048, 512, 512
+
+
+def _apply_act(y, activation):
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-y))
+    if activation in (None, "none"):
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _kernel_bias(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...][None, :], activation)
+
+
+def _kernel_nobias(x_ref, w_ref, o_ref, *, nk: int, activation):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = _apply_act(o_ref[...], activation)
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (keeps the grid exact)."""
+    t = min(dim, pref)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def matmul(x, w, b=None, activation: str | None = None, interpret: bool = True):
+    """act(x @ w + b) with a Pallas tiled kernel.
+
+    x: (M, K) f32, w: (K, N) f32, optional b: (N,) f32. Returns (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _tile(m, BM), _tile(n, BN), _tile(k, BK)
+    nk = k // bk
+
+    if b is not None:
+        kern = functools.partial(_kernel_bias, nk=nk, activation=activation)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ]
+        args = (x, w, b)
+    else:
+        kern = functools.partial(_kernel_nobias, nk=nk, activation=activation)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ]
+        args = (x, w)
+
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,80 @@
+"""Pallas blocked weighted rate-distortion argmin (Layer 1).
+
+The paper's eq. 1 assigns each weight w_i the grid index
+
+    k*(i) = argmin_k  eta_i (w_i - q_k)^2 + lambda * R_ik.
+
+The *exact* DeepCABAC coupling updates the context models after every
+weight, making R_ik position-dependent and the scan inherently
+sequential — that exact version is the Rust hot path. This kernel is the
+*blocked* variant used for candidate pre-selection and for the L1/L2
+artifact path: the rate table is a frozen snapshot R_k of the context
+states at block entry, so every weight in the block can be quantized in
+parallel. With per-block snapshots the result differs from the exact scan
+only where context drift within one block flips an argmin, which the
+Rust pipeline corrects in its sequential pass.
+
+TPU shaping: weights stream through VMEM in (8, 128)-multiple tiles
+(VPU lanes — this kernel is element-wise + a K-reduction, no MXU); the
+grid/rate tables (K <= 1024 entries, <8 KiB) are replicated into VMEM for
+every block. The cost matrix tile is (BW, K) f32 = 1 MiB at BW=256,
+K=1024 — three such tiles (cost, w, broadcast grid) fit VMEM with double
+buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BW = 256  # weights per block
+
+
+def _rdq_kernel(w_ref, eta_ref, grid_ref, rate_ref, lam_ref, o_ref):
+    w = w_ref[...]  # (bw,)
+    eta = eta_ref[...]  # (bw,)
+    q = grid_ref[...]  # (k,)
+    r = rate_ref[...]  # (k,)
+    lam = lam_ref[0]
+    d = w[:, None] - q[None, :]
+    cost = eta[:, None] * (d * d) + lam * r[None, :]
+    o_ref[...] = jnp.argmin(cost, axis=1).astype(jnp.int32)
+
+
+def _tile(dim: int, pref: int) -> int:
+    t = min(dim, pref)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rd_quantize(w, eta, grid, rate, lam, interpret: bool = True):
+    """Blocked RD argmin.
+
+    w, eta: (n,) f32; grid, rate: (k,) f32; lam: () or python float.
+    Returns (n,) int32 grid indices.
+    """
+    (n,) = w.shape
+    (k,) = grid.shape
+    assert eta.shape == (n,) and rate.shape == (k,)
+    bw = _tile(n, BW)
+    lam_arr = jnp.asarray(lam, dtype=jnp.float32).reshape(1)
+
+    return pl.pallas_call(
+        _rdq_kernel,
+        grid=(n // bw,),
+        in_specs=[
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(w, eta, grid, rate, lam_arr)

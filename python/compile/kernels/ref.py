@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated
+shapes/dtypes. They are also the fast path used during training (the
+Pallas kernels run under ``interpret=True`` on CPU, which is orders of
+magnitude slower, so the trainer uses the oracles and the AOT artifacts
+use the kernels — both are verified equal).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, b=None, activation: str | None = None):
+    """y = act(x @ w + b). x: (M,K), w: (K,N), b: (N,) or None."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    elif activation not in (None, "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def rd_quantize_ref(w, eta, grid, rate, lam):
+    """Blocked weighted rate-distortion argmin (paper eq. 1, frozen rates).
+
+    w:    (n,) float32 weights
+    eta:  (n,) float32 robustness weights (1/sigma^2)
+    grid: (k,) float32 quantization points q_k
+    rate: (k,) float32 bit-cost estimate R_k of each grid point (frozen
+          context snapshot; the exact sequential coupling lives in Rust)
+    lam:  scalar float lagrangian
+
+    Returns (n,) int32 indices into grid.
+    """
+    cost = eta[:, None] * (w[:, None] - grid[None, :]) ** 2 + lam * rate[None, :]
+    return jnp.argmin(cost, axis=1).astype(jnp.int32)
+
+
+def conv2d_ref(x, w, b=None, stride: int = 1, padding: int = 0, activation=None):
+    """NCHW conv. x: (N,C,H,W), w: (O,C,kh,kw), b: (O,)."""
+    import jax
+
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        y = y + b[None, :, None, None]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = 1.0 / (1.0 + jnp.exp(-y))
+    return y.astype(x.dtype)

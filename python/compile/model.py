@@ -1,0 +1,231 @@
+"""Layer 2 — JAX model zoo (the paper's small-model suite).
+
+Each model is a pure function of an ordered parameter list, so the same
+forward pass can be (a) trained fast with the pure-jnp oracle kernels,
+(b) AOT-lowered with the Pallas kernels into an HLO artifact whose
+*weights are runtime inputs* — the Rust coordinator feeds decompressed
+weights plus a data batch and reads back logits, which is how the
+accuracy columns of Table 1 are measured without Python on the hot path.
+
+Models (paper §4):
+    lenet300  — LeNet-300-100 MLP              (MNIST row)
+    lenet5    — LeNet5 (Caffe variant)          (MNIST row)
+    smallvgg  — Small-VGG16, channel-scaled 1/4 (CIFAR10 row; see DESIGN.md §5)
+    fcae      — fully-convolutional autoencoder (CIFAR10 PSNR row)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d as pallas_conv2d
+from .kernels import matmul as pallas_matmul
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Layer descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One parameterized layer. ``kind`` in {fc, conv}; pooling/reshape are
+    captured by ``post`` ops so the spec list fully determines the net."""
+
+    name: str
+    kind: str  # "fc" | "conv"
+    shape: tuple  # fc: (in, out); conv: (out, in, kh, kw)
+    activation: str | None = None
+    stride: int = 1
+    padding: int = 0
+    post: tuple = ()  # sequence of ("maxpool2",) / ("flatten",) / ("upsample2",)
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    input_shape: tuple  # per-sample, e.g. (1, 28, 28) or (784,)
+    layers: tuple = field(default_factory=tuple)
+    task: str = "classify"  # "classify" | "autoencode"
+    n_classes: int = 10
+
+
+def _vgg_cfg(scale: int = 4):
+    """VGG16 conv plan (channel-scaled by 1/scale) for 32x32 inputs."""
+    plan = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+            512, 512, 512, "M", 512, 512, 512, "M"]
+    return [c if c == "M" else max(8, c // scale) for c in plan]
+
+
+def _smallvgg_spec() -> ModelSpec:
+    layers: list[LayerSpec] = []
+    in_c = 3
+    i = 0
+    for c in _vgg_cfg():
+        if c == "M":
+            prev = layers[-1]
+            layers[-1] = LayerSpec(
+                prev.name, prev.kind, prev.shape, prev.activation, prev.stride,
+                prev.padding, prev.post + (("maxpool2",),),
+            )
+            continue
+        i += 1
+        layers.append(LayerSpec(f"conv{i}", "conv", (c, in_c, 3, 3), "relu", 1, 1))
+        in_c = c
+    last_c = in_c
+    prev = layers[-1]
+    layers[-1] = LayerSpec(
+        prev.name, prev.kind, prev.shape, prev.activation, prev.stride,
+        prev.padding, prev.post + (("flatten",),),
+    )
+    layers.append(LayerSpec("fc1", "fc", (last_c, last_c), "relu"))
+    layers.append(LayerSpec("fc2", "fc", (last_c, 10), None))
+    return ModelSpec("smallvgg", (3, 32, 32), tuple(layers))
+
+
+MODELS: dict[str, ModelSpec] = {
+    "lenet300": ModelSpec(
+        "lenet300",
+        (784,),
+        (
+            LayerSpec("fc1", "fc", (784, 300), "relu"),
+            LayerSpec("fc2", "fc", (300, 100), "relu"),
+            LayerSpec("fc3", "fc", (100, 10), None),
+        ),
+    ),
+    "lenet5": ModelSpec(
+        "lenet5",
+        (1, 28, 28),
+        (
+            LayerSpec("conv1", "conv", (20, 1, 5, 5), "relu", 1, 0, (("maxpool2",),)),
+            LayerSpec("conv2", "conv", (50, 20, 5, 5), "relu", 1, 0,
+                      (("maxpool2",), ("flatten",))),
+            LayerSpec("fc1", "fc", (800, 500), "relu"),
+            LayerSpec("fc2", "fc", (500, 10), None),
+        ),
+    ),
+    "smallvgg": _smallvgg_spec(),
+    "fcae": ModelSpec(
+        "fcae",
+        (3, 32, 32),
+        (
+            LayerSpec("enc1", "conv", (16, 3, 3, 3), "relu", 2, 1),
+            LayerSpec("enc2", "conv", (32, 16, 3, 3), "relu", 2, 1),
+            LayerSpec("bott", "conv", (32, 32, 3, 3), "relu", 1, 1, (("upsample2",),)),
+            LayerSpec("dec1", "conv", (16, 32, 3, 3), "relu", 1, 1, (("upsample2",),)),
+            LayerSpec("dec2", "conv", (3, 16, 3, 3), "sigmoid", 1, 1),
+        ),
+        task="autoencode",
+    ),
+}
+
+# ---------------------------------------------------------------------------
+# Parameter init / flattening
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> dict[str, dict[str, jnp.ndarray]]:
+    """He-initialised {layer: {"w": ..., "b": ...}} parameter dict."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for layer in spec.layers:
+        if layer.kind == "fc":
+            fan_in = layer.shape[0]
+            w = rng.standard_normal(layer.shape) * np.sqrt(2.0 / fan_in)
+            b = np.zeros(layer.shape[1])
+        else:
+            o, c, kh, kw = layer.shape
+            fan_in = c * kh * kw
+            w = rng.standard_normal(layer.shape) * np.sqrt(2.0 / fan_in)
+            b = np.zeros(o)
+        params[layer.name] = {
+            "w": jnp.asarray(w, dtype=jnp.float32),
+            "b": jnp.asarray(b, dtype=jnp.float32),
+        }
+    return params
+
+
+def flatten_params(spec: ModelSpec, params) -> list[jnp.ndarray]:
+    """Deterministic (w, b) * layers ordering — the HLO argument order."""
+    flat = []
+    for layer in spec.layers:
+        flat.append(params[layer.name]["w"])
+        flat.append(params[layer.name]["b"])
+    return flat
+
+
+def unflatten_params(spec: ModelSpec, flat) -> dict:
+    params = {}
+    it = iter(flat)
+    for layer in spec.layers:
+        params[layer.name] = {"w": next(it), "b": next(it)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _upsample2(x):
+    return jnp.repeat(jnp.repeat(x, 2, axis=-2), 2, axis=-1)
+
+
+def _post(x, ops):
+    for op in ops:
+        if op[0] == "maxpool2":
+            x = _maxpool2(x)
+        elif op[0] == "upsample2":
+            x = _upsample2(x)
+        elif op[0] == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise ValueError(f"unknown post op {op}")
+    return x
+
+
+def forward(spec: ModelSpec, params, x, impl: str = "jnp"):
+    """Run the model. ``impl`` selects the kernel implementation:
+    "jnp" (training-speed oracle) or "pallas" (AOT artifact path)."""
+    if impl == "pallas":
+        mm = lambda x, w, b, act: pallas_matmul(x, w, b, activation=act)
+        cv = lambda x, w, b, s, p, act: pallas_conv2d(
+            x, w, b, stride=s, padding=p, activation=act
+        )
+    else:
+        mm = lambda x, w, b, act: ref.matmul_ref(x, w, b, act)
+        cv = lambda x, w, b, s, p, act: ref.conv2d_ref(x, w, b, s, p, act)
+
+    for layer in spec.layers:
+        p = params[layer.name]
+        if layer.kind == "fc":
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = mm(x, p["w"], p["b"], layer.activation)
+        else:
+            x = cv(x, p["w"], p["b"], layer.stride, layer.padding, layer.activation)
+        x = _post(x, layer.post)
+    return x
+
+
+def forward_flat(spec: ModelSpec, flat_params, x, impl: str = "pallas"):
+    """Forward with positional parameters — the AOT entry point."""
+    return forward(spec, unflatten_params(spec, flat_params), x, impl=impl)
+
+
+def param_count(spec: ModelSpec) -> int:
+    n = 0
+    for layer in spec.layers:
+        n += int(np.prod(layer.shape))
+        n += layer.shape[1] if layer.kind == "fc" else layer.shape[0]
+    return n

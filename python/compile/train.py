@@ -1,0 +1,354 @@
+"""Build-time training + sparsification (paper §4 recipes).
+
+Two-phase recipe per model:
+
+  Phase 1 — dense training (Adam, cross-entropy or MSE).
+  Phase 2 — sparsification, one of:
+    * ``vd``  — sparse variational dropout (Molchanov et al., 2017): each
+      weight tensor gets (theta, log_sigma2); training adds the Molchanov
+      KL approximation; weights with log_alpha > TAU are pruned; the
+      posterior std sigma_i = exp(0.5 * log_sigma2_i) becomes the paper's
+      robustness parameter (eta_i = 1/sigma_i^2 in eq. 1).
+    * ``magnitude`` — iterative magnitude pruning (Han et al., 2015b)
+      followed by variance-only VD (means frozen) to estimate sigma —
+      the paper's recipe for VGG16/ResNet50.
+
+Runs once at artifact build time on the synthetic datasets; never on the
+Rust request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as datamod
+from .model import MODELS, ModelSpec, forward, init_params
+
+# Molchanov et al. (2017) KL approximation constants.
+_K1, _K2, _K3 = 0.63576, 1.87320, 1.48695
+LOG_ALPHA_THRESH = 3.0
+
+
+@dataclass
+class TrainConfig:
+    steps_dense: int = 400
+    steps_sparse: int = 400
+    batch: int = 96
+    lr: float = 1e-3
+    kl_weight: float = 1e-4  # scaled by 1/n_train implicitly via loss mean
+    seed: int = 0
+    n_train: int = 4096
+    n_eval: int = 1024
+    sparsifier: str = "vd"  # "vd" | "magnitude"
+    prune_fraction: float = 0.9  # for magnitude pruning
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; no optax in the offline env)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+def psnr(x_hat, x):
+    mse = jnp.mean((x_hat - x) ** 2)
+    return -10.0 * jnp.log10(mse + 1e-12)
+
+
+def task_loss(spec: ModelSpec, params, xb, yb):
+    out = forward(spec, params, xb, impl="jnp")
+    if spec.task == "classify":
+        return cross_entropy(out, yb)
+    return jnp.mean((out - xb) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Data plumbing
+# ---------------------------------------------------------------------------
+
+
+def load_dataset(spec: ModelSpec, cfg: TrainConfig):
+    n = cfg.n_train + cfg.n_eval
+    if spec.name in ("lenet300", "lenet5"):
+        x, y = datamod.synth_mnist(n)
+        if spec.name == "lenet300":
+            x = x.reshape(n, -1)
+    elif spec.name == "smallvgg":
+        x, y = datamod.synth_cifar(n)
+    elif spec.name == "fcae":
+        x, y = datamod.fcae_images(n), None
+    else:
+        raise ValueError(spec.name)
+    return datamod.train_eval_split(x, y, cfg.n_eval)
+
+
+def _batches(rng: np.random.Generator, n: int, batch: int):
+    while True:
+        idx = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            yield idx[i : i + batch]
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 — dense training
+# ---------------------------------------------------------------------------
+
+
+def train_dense(spec: ModelSpec, cfg: TrainConfig, xt, yt, log=print):
+    params = init_params(spec, seed=cfg.seed)
+    opt = adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, xb, yb: task_loss(spec, p, xb, yb)))
+    rng = np.random.default_rng(cfg.seed + 1)
+    bgen = _batches(rng, xt.shape[0], cfg.batch)
+    losses = []
+    for step in range(cfg.steps_dense):
+        idx = next(bgen)
+        xb = jnp.asarray(xt[idx])
+        yb = jnp.asarray(yt[idx]) if yt is not None else None
+        loss, grads = loss_grad(params, xb, yb)
+        params, opt = adam_step(params, grads, opt, cfg.lr)
+        losses.append(float(loss))
+        if step % 100 == 0 or step == cfg.steps_dense - 1:
+            log(f"  [dense {spec.name}] step {step:4d} loss {loss:.4f}")
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Phase 2a — sparse variational dropout (Molchanov et al. 2017)
+# ---------------------------------------------------------------------------
+
+
+def _kl_vd(log_alpha):
+    """Negative ELBO KL term per weight (to *minimize*)."""
+    neg_kl = (
+        _K1 * jax.nn.sigmoid(_K2 + _K3 * log_alpha)
+        - 0.5 * jnp.log1p(jnp.exp(-log_alpha))
+        - _K1
+    )
+    return -neg_kl
+
+
+def vd_init(params, init_log_sigma2: float = -8.0):
+    vd = {}
+    for lname, p in params.items():
+        vd[lname] = {
+            "theta": p["w"],
+            "log_sigma2": jnp.full_like(p["w"], init_log_sigma2),
+            "b": p["b"],
+        }
+    return vd
+
+
+def vd_log_alpha(vd_layer):
+    theta = vd_layer["theta"]
+    return jnp.clip(
+        vd_layer["log_sigma2"] - jnp.log(theta * theta + 1e-12), -10.0, 10.0
+    )
+
+
+def vd_forward_params(vd, key, sample: bool):
+    """Reparameterized sample w = theta + sigma * eps (additive noise)."""
+    params = {}
+    for i, (lname, layer) in enumerate(vd.items()):
+        theta = layer["theta"]
+        if sample:
+            sigma = jnp.exp(0.5 * layer["log_sigma2"])
+            eps = jax.random.normal(jax.random.fold_in(key, i), theta.shape)
+            w = theta + sigma * eps
+        else:
+            w = theta
+        params[lname] = {"w": w, "b": layer["b"]}
+    return params
+
+
+def train_vd(spec: ModelSpec, cfg: TrainConfig, params, xt, yt, log=print,
+             freeze_means: bool = False):
+    """Phase 2: VD fine-tuning. ``freeze_means=True`` is the paper's
+    variance-only recipe used after magnitude pruning (VGG16/ResNet50)."""
+    vd = vd_init(params)
+    opt = adam_init(vd)
+
+    def loss_fn(vd, key, xb, yb):
+        p = vd_forward_params(vd, key, sample=True)
+        tloss = task_loss(spec, p, xb, yb)
+        kl = 0.0
+        nw = 0
+        for lname in vd:
+            la = vd_log_alpha(vd[lname])
+            kl = kl + jnp.sum(_kl_vd(la))
+            nw += la.size
+        return tloss + cfg.kl_weight * kl / nw * 1000.0
+
+    loss_grad = jax.jit(jax.value_and_grad(loss_fn))
+    rng = np.random.default_rng(cfg.seed + 2)
+    bgen = _batches(rng, xt.shape[0], cfg.batch)
+    key = jax.random.PRNGKey(cfg.seed)
+    losses = []
+    mask_frozen = None
+    if freeze_means:
+        mask_frozen = {ln: vd[ln]["theta"] for ln in vd}
+    for step in range(cfg.steps_sparse):
+        idx = next(bgen)
+        xb = jnp.asarray(xt[idx])
+        yb = jnp.asarray(yt[idx]) if yt is not None else None
+        key, sub = jax.random.split(key)
+        loss, grads = loss_grad(vd, sub, xb, yb)
+        vd, opt = adam_step(vd, grads, opt, cfg.lr * 0.5)
+        if freeze_means:
+            for ln in vd:
+                vd[ln]["theta"] = mask_frozen[ln]
+        losses.append(float(loss))
+        if step % 100 == 0 or step == cfg.steps_sparse - 1:
+            log(f"  [vd {spec.name}] step {step:4d} loss {loss:.4f}")
+    return vd, losses
+
+
+def vd_extract(vd, thresh: float = LOG_ALPHA_THRESH):
+    """Prune by log_alpha and return (params, sigmas, sparsity).
+
+    sigma for pruned weights is set to the posterior std as well — the
+    quantizer uses sigma_min over *kept* weights for the grid (eq. 2) and
+    eta = 1/sigma^2 everywhere.
+    """
+    params, sigmas = {}, {}
+    kept = 0
+    total = 0
+    for lname, layer in vd.items():
+        la = vd_log_alpha(layer)
+        mask = (la < thresh).astype(jnp.float32)
+        w = layer["theta"] * mask
+        sigma = jnp.exp(0.5 * layer["log_sigma2"])
+        params[lname] = {"w": w, "b": layer["b"]}
+        sigmas[lname] = sigma
+        kept += int(jnp.sum(mask))
+        total += mask.size
+    return params, sigmas, kept / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Phase 2b — magnitude pruning (Han et al. 2015b)
+# ---------------------------------------------------------------------------
+
+
+def magnitude_prune(params, fraction: float):
+    """Zero the smallest-|w| ``fraction`` of weights, globally per layer."""
+    pruned = {}
+    for lname, p in params.items():
+        w = p["w"]
+        k = int(np.floor(fraction * w.size))
+        if k > 0:
+            thresh = jnp.sort(jnp.abs(w).ravel())[k - 1]
+            mask = (jnp.abs(w) > thresh).astype(jnp.float32)
+        else:
+            mask = jnp.ones_like(w)
+        pruned[lname] = {"w": w * mask, "b": p["b"]}
+    return pruned
+
+
+def retrain_masked(spec: ModelSpec, cfg: TrainConfig, params, xt, yt, steps, log=print):
+    """Fine-tune surviving weights with the zero mask held fixed."""
+    masks = {ln: (params[ln]["w"] != 0).astype(jnp.float32) for ln in params}
+    opt = adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, xb, yb: task_loss(spec, p, xb, yb)))
+    rng = np.random.default_rng(cfg.seed + 3)
+    bgen = _batches(rng, xt.shape[0], cfg.batch)
+    for step in range(steps):
+        idx = next(bgen)
+        xb = jnp.asarray(xt[idx])
+        yb = jnp.asarray(yt[idx]) if yt is not None else None
+        loss, grads = loss_grad(params, xb, yb)
+        params, opt = adam_step(params, grads, opt, cfg.lr * 0.3)
+        for ln in params:
+            params[ln]["w"] = params[ln]["w"] * masks[ln]
+        if step % 100 == 0 or step == steps - 1:
+            log(f"  [mag-retrain {spec.name}] step {step:4d} loss {loss:.4f}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full recipe
+# ---------------------------------------------------------------------------
+
+
+def evaluate(spec: ModelSpec, params, xe, ye, batch: int = 256):
+    outs = []
+    for i in range(0, xe.shape[0], batch):
+        outs.append(forward(spec, params, jnp.asarray(xe[i : i + batch]), impl="jnp"))
+    out = jnp.concatenate(outs)
+    if spec.task == "classify":
+        return float(accuracy(out, jnp.asarray(ye)))
+    return float(psnr(out, jnp.asarray(xe)))
+
+
+def run_recipe(name: str, cfg: TrainConfig, log=print):
+    """Train + sparsify one model; returns everything aot.py exports."""
+    spec = MODELS[name]
+    xt, yt, xe, ye = load_dataset(spec, cfg)
+    params, dense_losses = train_dense(spec, cfg, xt, yt, log=log)
+    dense_metric = evaluate(spec, params, xe, ye)
+    log(f"  [dense {name}] eval metric {dense_metric:.4f}")
+
+    if cfg.sparsifier == "vd":
+        vd, sparse_losses = train_vd(spec, cfg, params, xt, yt, log=log)
+        sparams, sigmas, density = vd_extract(vd)
+    else:
+        params = magnitude_prune(params, cfg.prune_fraction)
+        params = retrain_masked(spec, cfg, params, xt, yt, cfg.steps_sparse // 2, log=log)
+        vd, sparse_losses = train_vd(
+            spec, cfg, params, xt, yt, log=log, freeze_means=True
+        )
+        sparams, sigmas, _ = vd_extract(vd, thresh=np.inf)  # keep mask from pruning
+        for ln in sparams:  # re-apply the magnitude mask (means were frozen)
+            mask = (params[ln]["w"] != 0).astype(jnp.float32)
+            sparams[ln]["w"] = sparams[ln]["w"] * mask
+        total = sum(int(sparams[ln]["w"].size) for ln in sparams)
+        kept = sum(int(jnp.sum(sparams[ln]["w"] != 0)) for ln in sparams)
+        density = kept / total
+
+    sparse_metric = evaluate(spec, sparams, xe, ye)
+    log(f"  [{cfg.sparsifier} {name}] density {density:.4f} eval {sparse_metric:.4f}")
+    return {
+        "spec": spec,
+        "params": sparams,
+        "sigmas": sigmas,
+        "density": density,
+        "dense_metric": dense_metric,
+        "sparse_metric": sparse_metric,
+        "dense_losses": dense_losses,
+        "sparse_losses": sparse_losses,
+        "eval_x": xe,
+        "eval_y": ye,
+    }

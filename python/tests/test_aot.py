@@ -1,0 +1,84 @@
+"""AOT artifact invariants: HLO text is loadable-shaped, manifests are
+consistent, and the lowering path (Pallas kernels under jit) is stable."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text, RD_QUANT_K, RD_QUANT_N
+from compile.kernels.rd_quantize import rd_quantize
+from compile.model import MODELS, flatten_params, forward_flat, init_params
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_to_hlo_text_emits_entry():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_forward_flat_lowers_with_pallas():
+    """The exact lowering path aot.py uses must trace cleanly."""
+    spec = MODELS["lenet300"]
+    params = init_params(spec, seed=0)
+    flat = flatten_params(spec, params)
+    arg_specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in flat]
+    x_spec = jax.ShapeDtypeStruct((8,) + spec.input_shape, jnp.float32)
+
+    def fwd(*args):
+        *ps, x = args
+        return (forward_flat(spec, list(ps), x, impl="pallas"),)
+
+    text = to_hlo_text(jax.jit(fwd).lower(*arg_specs, x_spec))
+    assert "ENTRY" in text
+
+
+def test_rd_quantize_kernel_lowering_shape():
+    def fn(w, eta, grid, rate, lam):
+        return (rd_quantize(w, eta, grid, rate, lam),)
+
+    specs = [
+        jax.ShapeDtypeStruct((RD_QUANT_N,), jnp.float32),
+        jax.ShapeDtypeStruct((RD_QUANT_N,), jnp.float32),
+        jax.ShapeDtypeStruct((RD_QUANT_K,), jnp.float32),
+        jax.ShapeDtypeStruct((RD_QUANT_K,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    assert f"s32[{RD_QUANT_N}]" in text
+
+
+@pytest.mark.skipif(not ARTIFACTS.exists(), reason="run `make artifacts` first")
+def test_built_artifacts_are_consistent():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    for name in manifest["models"]:
+        mdir = ARTIFACTS / "models" / name
+        m = json.loads((mdir / "manifest.json").read_text())
+        assert m["name"] == name
+        # every layer's files exist and shapes match the manifest
+        for layer in m["layers"]:
+            w = np.load(mdir / f"{layer['name']}.w.npy")
+            s = np.load(mdir / f"{layer['name']}.sigma.npy")
+            assert list(w.shape) == layer["shape"]
+            assert w.shape == s.shape
+            assert w.dtype == np.float32
+            assert int((w != 0).sum()) == layer["nonzero"]
+        # HLO exists and is text
+        hlo = (ARTIFACTS / m["hlo"]).read_text()
+        assert "ENTRY" in hlo
+        # eval set is batch-aligned
+        x = np.load(mdir / "eval_x.npy")
+        assert x.shape[0] % m["eval_batch"] == 0
+        # density column is reproducible from the tensors
+        nz = sum(l["nonzero"] for l in m["layers"])
+        tot = sum(l["size"] for l in m["layers"])
+        assert abs(nz / tot - m["density"]) < 1e-6

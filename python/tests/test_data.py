@@ -1,0 +1,43 @@
+"""Synthetic dataset invariants: determinism, shape, learnability proxy."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_mnist_shapes_and_determinism():
+    x1, y1 = data.synth_mnist(64)
+    x2, y2 = data.synth_mnist(64)
+    assert x1.shape == (64, 1, 28, 28) and y1.shape == (64,)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.dtype == np.float32 and y1.dtype == np.int32
+
+
+def test_cifar_shapes():
+    x, y = data.synth_cifar(16)
+    assert x.shape == (16, 3, 32, 32)
+    assert set(np.unique(y)).issubset(set(range(10)))
+
+
+def test_fcae_images_range():
+    x = data.fcae_images(8)
+    assert x.shape == (8, 3, 32, 32)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_classes_are_separable():
+    """Nearest-prototype classification must beat chance by a wide margin —
+    otherwise the accuracy columns of Table 1 are meaningless."""
+    x, y = data.synth_mnist(512)
+    protos = np.stack([x[y == c].mean(axis=0) for c in range(10)])
+    d = ((x[:, None] - protos[None]) ** 2).sum(axis=(2, 3, 4))
+    acc = (d.argmin(axis=1) == y).mean()
+    assert acc > 0.8, f"prototype accuracy only {acc:.2f}"
+
+
+def test_split_is_head_tail():
+    x, y = data.synth_mnist(100)
+    xt, yt, xe, ye = data.train_eval_split(x, y, 30)
+    assert xt.shape[0] == 70 and xe.shape[0] == 30
+    np.testing.assert_array_equal(xe, x[-30:])

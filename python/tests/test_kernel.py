@@ -1,0 +1,127 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the rd-quantize parameter space); each
+kernel must match the oracle to float tolerance — this is the CORE
+correctness signal for the AOT artifacts the Rust side executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, matmul, rd_quantize, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _randf(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bias=st.booleans(),
+    act=st.sampled_from([None, "relu", "sigmoid"]),
+)
+def test_matmul_matches_ref(m, k, n, bias, act):
+    x, w = _randf(m, k), _randf(k, n)
+    b = _randf(n) if bias else None
+    got = np.asarray(matmul(x, w, b, activation=act))
+    want = np.asarray(ref.matmul_ref(x, w, b, act))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_tiled_path_exact_blocks():
+    # shapes that are exact multiples of the 128 tiles
+    x, w, b = _randf(256, 128), _randf(128, 256), _randf(256)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w, b, activation="relu")),
+        np.asarray(ref.matmul_ref(x, w, b, "relu")),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_matmul_rejects_mismatched_inner_dim():
+    with pytest.raises(AssertionError):
+        matmul(_randf(4, 5), _randf(6, 7))
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 4),
+    o=st.integers(1, 6),
+    hw=st.integers(5, 14),
+    kk=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from([0, 1, 2]),
+)
+def test_conv2d_matches_ref(n, c, o, hw, kk, stride, padding):
+    if hw + 2 * padding < kk:
+        return
+    x, w, b = _randf(n, c, hw, hw), _randf(o, c, kk, kk), _randf(o)
+    got = np.asarray(conv2d(x, w, b, stride=stride, padding=padding, activation="relu"))
+    want = np.asarray(ref.conv2d_ref(x, w, b, stride, padding, "relu"))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_conv2d_shape():
+    y = conv2d(_randf(2, 3, 8, 8), _randf(5, 3, 3, 3), None, stride=2, padding=1)
+    assert y.shape == (2, 5, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# rd_quantize
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 600),
+    k=st.integers(2, 80),
+    lam=st.floats(0.0, 5.0),
+)
+def test_rd_quantize_matches_ref(n, k, lam):
+    w = _randf(n)
+    eta = np.abs(_randf(n)) + 0.05
+    grid = np.sort(_randf(k))
+    rate = np.abs(_randf(k)) * 8.0
+    got = np.asarray(rd_quantize(w, eta, grid, rate, lam))
+    want = np.asarray(ref.rd_quantize_ref(w, eta, grid, rate, lam))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rd_quantize_zero_lambda_is_weighted_nearest():
+    """With lam=0 the argmin is pure weighted distortion = nearest point."""
+    w = _randf(512)
+    eta = np.abs(_randf(512)) + 0.1
+    grid = np.linspace(-3, 3, 33).astype(np.float32)
+    rate = np.abs(_randf(33)).astype(np.float32)
+    idx = np.asarray(rd_quantize(w, eta, grid, rate, 0.0))
+    nearest = np.argmin((w[:, None] - grid[None, :]) ** 2, axis=1)
+    np.testing.assert_array_equal(idx, nearest)
+
+
+def test_rd_quantize_huge_lambda_picks_cheapest():
+    """lam -> inf forces every weight to the cheapest grid point."""
+    w = _randf(256)
+    eta = np.ones(256, dtype=np.float32)
+    grid = np.linspace(-1, 1, 17).astype(np.float32)
+    rate = np.abs(_randf(17)) + 0.1
+    rate[5] = 0.001
+    idx = np.asarray(rd_quantize(w, eta, grid, rate.astype(np.float32), 1e9))
+    assert (idx == 5).all()

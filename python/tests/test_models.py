@@ -1,0 +1,72 @@
+"""L2 model invariants: shapes, jnp-vs-pallas equivalence, flattening."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    MODELS,
+    flatten_params,
+    forward,
+    forward_flat,
+    init_params,
+    param_count,
+    unflatten_params,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _batch(spec, n=2):
+    return jnp.asarray(RNG.standard_normal((n,) + spec.input_shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_forward_shapes(name):
+    spec = MODELS[name]
+    params = init_params(spec, seed=1)
+    out = forward(spec, params, _batch(spec), impl="jnp")
+    if spec.task == "classify":
+        assert out.shape == (2, spec.n_classes)
+    else:
+        assert out.shape == (2,) + spec.input_shape
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_pallas_equals_jnp(name):
+    """The AOT (Pallas) path must match the training (jnp) path — this is
+    what makes the Rust-side accuracy measurements valid."""
+    spec = MODELS[name]
+    params = init_params(spec, seed=2)
+    x = _batch(spec)
+    got = np.asarray(forward(spec, params, x, impl="pallas"))
+    want = np.asarray(forward(spec, params, x, impl="jnp"))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_flatten_roundtrip(name):
+    spec = MODELS[name]
+    params = init_params(spec, seed=3)
+    flat = flatten_params(spec, params)
+    assert len(flat) == 2 * len(spec.layers)
+    rec = unflatten_params(spec, flat)
+    for lname in params:
+        np.testing.assert_array_equal(params[lname]["w"], rec[lname]["w"])
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_forward_flat_matches_dict(name):
+    spec = MODELS[name]
+    params = init_params(spec, seed=4)
+    x = _batch(spec)
+    a = np.asarray(forward_flat(spec, flatten_params(spec, params), x, impl="jnp"))
+    b = np.asarray(forward(spec, params, x, impl="jnp"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_param_counts():
+    # LeNet-300-100: 784*300+300 + 300*100+100 + 100*10+10 = 266610
+    assert param_count(MODELS["lenet300"]) == 266_610
+    # LeNet5-Caffe: conv 20*1*25+20, 50*20*25+50, fc 800*500+500, 500*10+10
+    assert param_count(MODELS["lenet5"]) == 20 * 25 + 20 + 50 * 20 * 25 + 50 + 800 * 500 + 500 + 500 * 10 + 10

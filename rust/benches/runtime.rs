@@ -1,0 +1,60 @@
+//! Bench: PJRT runtime latency — HLO compile time and per-batch forward
+//! latency for every model artifact. This is the L2/L3 boundary the
+//! accuracy evaluations pay for; it must not dominate the pipeline.
+//!
+//! ```bash
+//! cargo bench --offline --bench runtime
+//! ```
+
+use deepcabac::app;
+use deepcabac::report::Table;
+use deepcabac::runtime::Runtime;
+use deepcabac::tensor::Tensor;
+use deepcabac::util::bench::bench;
+use deepcabac::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("PJRT runtime benches (platform = {})\n", rt.platform());
+    let mut t = Table::new(&[
+        "model", "compile[s]", "fwd/batch median[ms]", "samples/s", "batch",
+    ]);
+
+    for name in app::SMALL_MODELS {
+        let model = match app::load_model(name) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{name}: skipped ({e})");
+                continue;
+            }
+        };
+        let timer = Timer::new();
+        let hlo = app::artifacts_dir().join(&model.manifest.hlo);
+        let exe = rt.load_hlo_text(&hlo)?;
+        let compile_s = timer.elapsed_s();
+
+        let (x, _) = app::load_eval_set(name)?;
+        let batch = model.manifest.eval_batch;
+        let sample: usize = x.shape[1..].iter().product();
+        let mut shape = x.shape.clone();
+        shape[0] = batch;
+        let xb = Tensor::new(shape, x.data[..batch * sample].to_vec());
+        let mut args: Vec<Tensor> = Vec::new();
+        for (w, b) in model.weights.iter().zip(&model.biases) {
+            args.push(w.clone());
+            args.push(b.clone());
+        }
+        args.push(xb);
+
+        let stats = bench(1, 5, || exe.run_f32(&args).unwrap());
+        t.row(vec![
+            name.to_string(),
+            format!("{compile_s:.2}"),
+            format!("{:.1}", stats.median_s * 1e3),
+            format!("{:.0}", batch as f64 / stats.median_s),
+            batch.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Bench: regenerate Table 1 (compression side) and time each stage —
+//! the per-model end-to-end target the paper's evaluation is built on.
+//! Accuracy columns come from `examples/table1.rs` (PJRT eval); this
+//! bench focuses on sizes + pipeline wall time so it stays fast enough
+//! to run under `cargo bench`.
+//!
+//! ```bash
+//! cargo bench --offline --bench table1
+//! ```
+
+use deepcabac::app;
+use deepcabac::coordinator::{sweep::default_s_grid, CompressionSpec};
+use deepcabac::report::{human_bytes, Table};
+use deepcabac::synth::Arch;
+use deepcabac::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let spec = CompressionSpec::default();
+    let s_grid = default_s_grid(9); // coarser than the example: bench speed
+
+    let mut t = Table::new(&[
+        "row", "org size", "spars[%]", "ratio[%]", "x", "paper ratio[%]", "time[s]",
+    ]);
+
+    for name in app::SMALL_MODELS {
+        let timer = Timer::new();
+        match app::table1_small_row(name, &s_grid, &spec, 1, false) {
+            Ok(row) => {
+                t.row(vec![
+                    name.to_string(),
+                    human_bytes(row.org_bytes),
+                    format!("{:.2}", row.sparsity_pct),
+                    format!("{:.2}", row.ratio_pct),
+                    format!("x{:.1}", row.report.factor()),
+                    paper_ratio(name).to_string(),
+                    format!("{:.2}", timer.elapsed_s()),
+                ]);
+            }
+            Err(e) => {
+                eprintln!("{name}: skipped ({e}); run `make artifacts`");
+            }
+        }
+    }
+
+    for arch in [Arch::Vgg16, Arch::ResNet50, Arch::MobileNetV1] {
+        let timer = Timer::new();
+        let row = app::table1_large_row(arch, 8, &s_grid, &spec, 1, 42)?;
+        t.row(vec![
+            format!("{}*", arch.name()),
+            human_bytes(row.org_bytes),
+            format!("{:.2}", row.sparsity_pct),
+            format!("{:.2}", row.ratio_pct),
+            format!("x{:.1}", row.report.factor()),
+            paper_ratio(arch.name()).to_string(),
+            format!("{:.2}", timer.elapsed_s()),
+        ]);
+    }
+
+    println!("{}", t.render());
+    println!("* synthetic weights at true layer shapes, 1/8 channel scale (DESIGN.md §5)");
+    Ok(())
+}
+
+fn paper_ratio(name: &str) -> &'static str {
+    match name {
+        "lenet300" => "1.82",
+        "lenet5" => "0.72",
+        "smallvgg" => "1.6",
+        "fcae" => "16.15",
+        "vgg16" => "1.57",
+        "resnet50" => "5.95",
+        "mobilenet-v1" => "12.7",
+        _ => "-",
+    }
+}

@@ -1,0 +1,107 @@
+//! §Perf throughput benches — the L3 hot paths.
+//!
+//! Measures: CABAC encode/decode (Mbins/s and Mweights/s on realistic
+//! sparse tensors), the coupled RD quantizer (Mweights/s), and the
+//! baselines for context. These are the before/after numbers tracked in
+//! EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo bench --offline --bench throughput
+//! ```
+
+use deepcabac::baselines::{csr, fixed, huffman};
+use deepcabac::codec::{decode_levels, encode_levels, CodecConfig};
+use deepcabac::coordinator::{compress_tensor, CompressionSpec};
+use deepcabac::quant::{QuantGrid, RdParams, RdQuantizer};
+use deepcabac::util::bench::{bench, black_box, report_line};
+use deepcabac::util::SplitMix64;
+
+fn sparse_tensor(n: usize, density: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut w = vec![0.0f32; n];
+    let mut s = vec![0.0f32; n];
+    for i in 0..n {
+        if rng.next_f64() < density {
+            w[i] = rng.laplace(0.08) as f32;
+        }
+        s[i] = 0.02 + 0.05 * rng.next_f32();
+    }
+    (w, s)
+}
+
+fn main() {
+    let n = 1_000_000;
+    println!("== throughput (n = {n} weights, 10% dense) ==\n");
+    let (w, s) = sparse_tensor(n, 0.10, 3);
+    let grid = QuantGrid::from_tensor(&w, &s, 64);
+    let levels: Vec<i32> = w.iter().map(|&x| grid.nearest_level(x)).collect();
+    let cfg = CodecConfig::default();
+
+    // ---- entropy coding ----------------------------------------------
+    let st = bench(1, 7, || encode_levels(black_box(&levels), cfg));
+    report_line("cabac encode (levels→payload)", &st, n as f64, "Mweights/s");
+    let payload = encode_levels(&levels, cfg);
+    println!(
+        "{:<44}         {:>8} bytes  ({:.3} bits/weight)",
+        "  payload", payload.len(),
+        payload.len() as f64 * 8.0 / n as f64
+    );
+    let st = bench(1, 7, || decode_levels(black_box(&payload), n, cfg));
+    report_line("cabac decode (payload→levels)", &st, n as f64, "Mweights/s");
+
+    let st = bench(1, 7, || huffman::encode(black_box(&levels)).unwrap());
+    report_line("huffman encode (baseline)", &st, n as f64, "Mweights/s");
+    let hpayload = huffman::encode(&levels).unwrap();
+    let st = bench(1, 7, || huffman::decode(black_box(&hpayload)).unwrap());
+    report_line("huffman decode (baseline)", &st, n as f64, "Mweights/s");
+    let st = bench(1, 7, || csr::encode(black_box(&levels), csr::CsrConfig::default()).unwrap());
+    report_line("csr encode (baseline)", &st, n as f64, "Mweights/s");
+    let st = bench(1, 7, || fixed::encode(black_box(&levels)));
+    report_line("fixed-length encode (floor)", &st, n as f64, "Mweights/s");
+
+    // ---- coupled RD quantization ---------------------------------------
+    println!();
+    let q = RdQuantizer::new(cfg);
+    for lambda_scale in [0.0f32, 0.05] {
+        let mean_eta = {
+            let etas: f64 = s.iter().map(|&x| 1.0 / (x as f64 * x as f64)).sum();
+            (etas / n as f64) as f32
+        };
+        let lambda = lambda_scale * grid.delta * grid.delta * mean_eta;
+        let etas: Vec<f32> = s.iter().map(|&x| 1.0 / (x * x)).collect();
+        let st = bench(1, 5, || {
+            q.quantize_encode(
+                black_box(&w),
+                black_box(&etas),
+                &grid,
+                RdParams { lambda, window: 4 },
+            )
+        });
+        report_line(
+            &format!("rd quantize+encode (λscale={lambda_scale})"),
+            &st,
+            n as f64,
+            "Mweights/s",
+        );
+    }
+
+    // ---- full pipeline (grid + η + RD + CABAC) -------------------------
+    println!();
+    let spec = CompressionSpec { s: 64, lambda_scale: 0.05, ..Default::default() };
+    let st = bench(1, 5, || {
+        compress_tensor("bench", &[n], black_box(&w), black_box(&s), &[], &spec)
+    });
+    report_line("compress_tensor (full pipeline)", &st, n as f64, "Mweights/s");
+
+    // ---- bins/s view ----------------------------------------------------
+    let bins_per_weight = {
+        // sig bin per weight + extra bins for nonzeros (~sign + ~1.5 gr)
+        1.0 + 0.10 * 2.5
+    };
+    let st = bench(1, 7, || encode_levels(black_box(&levels), cfg));
+    println!(
+        "\ncabac engine ≈ {:.1} Mbins/s (at ~{:.2} bins/weight)",
+        st.throughput(n as f64 * bins_per_weight) / 1e6,
+        bins_per_weight
+    );
+}

@@ -1,0 +1,206 @@
+//! Application-level orchestration shared by the CLI, the examples and
+//! the benches: load artifacts, run sweeps, evaluate via PJRT, and
+//! format Table-1 rows.
+
+use crate::coordinator::{sweep_s, CompressionSpec, ModelReport};
+use crate::model::{CompressedModel, Model};
+use crate::runtime::{eval, Runtime};
+use crate::synth::{self, Arch};
+use crate::tensor::{npy, Tensor};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Locate the artifacts directory (env override for odd layouts).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DEEPCABAC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub const SMALL_MODELS: [&str; 4] = ["lenet300", "lenet5", "smallvgg", "fcae"];
+
+/// Load a trained model from `artifacts/models/<name>`.
+pub fn load_model(name: &str) -> Result<Model> {
+    let dir = artifacts_dir().join("models").join(name);
+    if !dir.exists() {
+        bail!(
+            "{dir:?} missing — run `make artifacts` first (trains the model suite)"
+        );
+    }
+    Model::load(&dir)
+}
+
+/// Load the eval set for a model.
+pub fn load_eval_set(name: &str) -> Result<(Tensor, Option<Vec<i32>>)> {
+    let dir = artifacts_dir().join("models").join(name);
+    let (xs, xd) = npy::read_npy_f32(&dir.join("eval_x.npy"))?;
+    let x = Tensor::new(xs, xd);
+    let y_path = dir.join("eval_y.npy");
+    let y = if y_path.exists() {
+        Some(npy::read_npy_i32(&y_path)?.1)
+    } else {
+        None
+    };
+    Ok((x, y))
+}
+
+/// Evaluate weights (manifest arg order: w,b per layer) through the
+/// model's PJRT executable. Weights can come from the original model or
+/// a decompressed container.
+pub fn evaluate_weights(
+    rt: &Runtime,
+    model: &Model,
+    weights: &[Tensor],
+    biases: &[Tensor],
+) -> Result<eval::EvalResult> {
+    let hlo = artifacts_dir().join(&model.manifest.hlo);
+    let exe = rt
+        .load_hlo_text(&hlo)
+        .with_context(|| format!("loading {hlo:?}"))?;
+    let (x, y) = load_eval_set(&model.manifest.name)?;
+    let mut params = Vec::with_capacity(weights.len() * 2);
+    for (w, b) in weights.iter().zip(biases) {
+        params.push(w.clone());
+        params.push(b.clone());
+    }
+    let batch = model.manifest.eval_batch;
+    if model.manifest.task == "classify" {
+        let y = y.context("classifier eval set missing labels")?;
+        eval::eval_classifier(&exe, &params, &x, &y, batch)
+    } else {
+        eval::eval_autoencoder(&exe, &params, &x, batch)
+    }
+}
+
+/// Evaluate the model's own (uncompressed) weights.
+pub fn evaluate_original(rt: &Runtime, model: &Model) -> Result<eval::EvalResult> {
+    evaluate_weights(rt, model, &model.weights, &model.biases)
+}
+
+/// Evaluate a compressed container (decompress → PJRT).
+pub fn evaluate_compressed(
+    rt: &Runtime,
+    model: &Model,
+    compressed: &CompressedModel,
+) -> Result<eval::EvalResult> {
+    let weights = crate::coordinator::pipeline::decompress(compressed);
+    evaluate_weights(rt, model, &weights, &model.biases)
+}
+
+/// One Table-1 row for a trained small model: sweep S, compress, and
+/// (optionally) evaluate pre/post accuracy via PJRT.
+pub struct Table1Row {
+    pub model: String,
+    pub dataset: String,
+    pub org_metric: f64,
+    pub org_bytes: usize,
+    pub sparsity_pct: f64,
+    pub ratio_pct: f64,
+    pub metric_after: Option<f64>,
+    pub best_s: u32,
+    pub report: ModelReport,
+    pub compressed: CompressedModel,
+}
+
+pub fn dataset_of(name: &str) -> &'static str {
+    match name {
+        "lenet300" | "lenet5" => "synth-MNIST",
+        "smallvgg" | "fcae" => "synth-CIFAR10",
+        _ => "synthetic",
+    }
+}
+
+/// Build a Table-1 row for a trained model.
+pub fn table1_small_row(
+    name: &str,
+    s_grid: &[u32],
+    spec: &CompressionSpec,
+    workers: usize,
+    with_eval: bool,
+) -> Result<Table1Row> {
+    let model = load_model(name)?;
+    let sweep = sweep_s(&model, s_grid, spec, workers);
+    let (compressed, report) = sweep.best;
+    let best_s = compressed.layers.first().map(|l| l.s_param).unwrap_or(0);
+    let (org_metric, metric_after) = if with_eval {
+        let rt = Runtime::cpu()?;
+        let orig = evaluate_original(&rt, &model)?;
+        let after = evaluate_compressed(&rt, &model, &compressed)?;
+        (orig.metric, Some(after.metric))
+    } else {
+        (model.manifest.sparse_metric, None)
+    };
+    Ok(Table1Row {
+        model: name.to_string(),
+        dataset: dataset_of(name).to_string(),
+        org_metric,
+        org_bytes: model.raw_bytes(),
+        sparsity_pct: model.density() * 100.0,
+        ratio_pct: report.ratio_percent(),
+        metric_after,
+        best_s,
+        report,
+        compressed,
+    })
+}
+
+/// Build a Table-1 row for a synthetic ImageNet-scale model (ratio only;
+/// accuracy N/A without ImageNet — DESIGN.md §5).
+pub fn table1_large_row(
+    arch: Arch,
+    scale: usize,
+    s_grid: &[u32],
+    spec: &CompressionSpec,
+    workers: usize,
+    seed: u64,
+) -> Result<Table1Row> {
+    let synth = synth::generate(arch, scale, seed);
+    // wrap into a Model-shaped compress call per layer
+    let mut best: Option<(CompressedModel, usize, u32)> = None;
+    for &s in s_grid {
+        let spec = CompressionSpec { s, ..*spec };
+        let mut layers = Vec::with_capacity(synth.layers.len());
+        let mut payload = 0usize;
+        for l in &synth.layers {
+            let (cl, rep) = crate::coordinator::compress_tensor(
+                &l.name, &l.dims, &l.weights, &l.sigmas, &[], &spec,
+            );
+            payload += rep.payload_bytes;
+            layers.push(cl);
+        }
+        let cm = CompressedModel { name: arch.name().into(), layers };
+        let better = best.as_ref().map(|&(_, b, _)| payload < b).unwrap_or(true);
+        if better {
+            best = Some((cm, payload, s));
+        }
+        let _ = workers;
+    }
+    let (compressed, _, best_s) = best.unwrap();
+    let compressed_bytes = compressed.serialize().len();
+    let raw = synth.raw_bytes();
+    let nz: usize = compressed
+        .layers
+        .iter()
+        .map(|l| l.decode_levels().iter().filter(|&&v| v != 0).count())
+        .sum();
+    let report = ModelReport {
+        name: arch.name().into(),
+        raw_bytes: raw,
+        compressed_bytes,
+        density: nz as f64 / synth.weight_count() as f64,
+        layers: vec![],
+        total_time_s: 0.0,
+    };
+    Ok(Table1Row {
+        model: arch.name().to_string(),
+        dataset: "synthetic (ImageNet shapes)".to_string(),
+        org_metric: f64::NAN,
+        org_bytes: raw,
+        sparsity_pct: synth.density() * 100.0,
+        ratio_pct: compressed_bytes as f64 / raw as f64 * 100.0,
+        metric_after: None,
+        best_s,
+        report,
+        compressed,
+    })
+}

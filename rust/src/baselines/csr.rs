@@ -1,0 +1,215 @@
+//! Han-style sparse format (Deep Compression §3): nonzero values plus
+//! relative zero-run indices capped at 2^run_bits − 1 (longer gaps insert
+//! a filler zero), optionally Huffman-coding both streams.
+
+use super::huffman;
+use crate::bitstream::{read_varint, write_varint, BitReader, BitWriter};
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct CsrConfig {
+    /// Bits per relative index (Deep Compression uses 4-8).
+    pub run_bits: u32,
+    /// Huffman-code the value & run streams (vs raw fixed-length).
+    pub huffman: bool,
+}
+
+impl Default for CsrConfig {
+    fn default() -> Self {
+        Self { run_bits: 4, huffman: true }
+    }
+}
+
+/// Split levels into (runs, values) with capped runs + filler zeros.
+/// An entry (r, v) decodes to r zeros followed by v, so a filler entry
+/// (max_run, 0) covers max_run + 1 zeros.
+fn split(levels: &[i32], max_run: u32) -> (Vec<i32>, Vec<i32>) {
+    let mut runs = Vec::new();
+    let mut vals = Vec::new();
+    let mut gap = 0u32;
+    for &l in levels {
+        if l == 0 {
+            gap += 1;
+            if gap == max_run + 1 {
+                runs.push(max_run as i32);
+                vals.push(0); // filler zero (counts as the +1)
+                gap = 0;
+            }
+        } else {
+            runs.push(gap as i32);
+            vals.push(l);
+            gap = 0;
+        }
+    }
+    (runs, vals)
+}
+
+pub fn encode(levels: &[i32], cfg: CsrConfig) -> Result<Vec<u8>> {
+    let max_run = (1u32 << cfg.run_bits) - 1;
+    let (runs, vals) = split(levels, max_run);
+    let mut out = Vec::new();
+    write_varint(&mut out, levels.len() as u64);
+    out.push(cfg.run_bits as u8);
+    out.push(cfg.huffman as u8);
+    write_varint(&mut out, vals.len() as u64);
+    if cfg.huffman {
+        let rb = huffman::encode(&runs)?;
+        let vb = huffman::encode(&vals)?;
+        write_varint(&mut out, rb.len() as u64);
+        out.extend_from_slice(&rb);
+        write_varint(&mut out, vb.len() as u64);
+        out.extend_from_slice(&vb);
+    } else {
+        let mut w = BitWriter::new();
+        for &r in &runs {
+            w.put_bits(r as u32, cfg.run_bits);
+        }
+        let max_abs = vals.iter().map(|v| v.unsigned_abs()).max().unwrap_or(0);
+        let vbits = super::fixed::bits_per_symbol(max_abs);
+        write_varint(&mut out, max_abs as u64);
+        for &v in &vals {
+            w.put_bits((v + max_abs as i32) as u32, vbits);
+        }
+        let payload = w.finish();
+        write_varint(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+    }
+    Ok(out)
+}
+
+pub fn decode(buf: &[u8]) -> Result<Vec<i32>> {
+    let mut pos = 0usize;
+    let rd = |buf: &[u8], pos: &mut usize| -> Result<u64> {
+        let (v, n) = read_varint(&buf[*pos..]).ok_or_else(|| anyhow!("varint"))?;
+        *pos += n;
+        Ok(v)
+    };
+    let n = rd(buf, &mut pos)? as usize;
+    if n > super::MAX_DECODE_ELEMS {
+        bail!("csr header claims {n} levels (limit {})", super::MAX_DECODE_ELEMS);
+    }
+    if pos + 2 > buf.len() {
+        bail!("truncated csr header");
+    }
+    let run_bits = buf[pos] as u32;
+    if run_bits == 0 || run_bits > 16 {
+        bail!("csr run_bits {run_bits} out of range");
+    }
+    let use_huffman = buf[pos + 1] != 0;
+    pos += 2;
+    let n_vals = rd(buf, &mut pos)? as usize;
+    if n_vals > n.max(1) {
+        bail!("csr claims more entries ({n_vals}) than levels ({n})");
+    }
+    let (runs, vals) = if use_huffman {
+        let rl = rd(buf, &mut pos)? as usize;
+        if pos + rl > buf.len() {
+            bail!("truncated csr run stream");
+        }
+        let runs = huffman::decode(&buf[pos..pos + rl])?;
+        pos += rl;
+        let vl = rd(buf, &mut pos)? as usize;
+        if pos + vl > buf.len() {
+            bail!("truncated csr value stream");
+        }
+        let vals = huffman::decode(&buf[pos..pos + vl])?;
+        (runs, vals)
+    } else {
+        let max_abs = rd(buf, &mut pos)? as u32;
+        let plen = rd(buf, &mut pos)? as usize;
+        if pos + plen > buf.len() {
+            bail!("truncated csr raw payload");
+        }
+        let vbits = super::fixed::bits_per_symbol(max_abs);
+        let mut r = BitReader::new(&buf[pos..pos + plen]);
+        let runs: Vec<i32> = (0..n_vals).map(|_| r.get_bits(run_bits) as i32).collect();
+        let vals: Vec<i32> =
+            (0..n_vals).map(|_| r.get_bits(vbits) as i32 - max_abs as i32).collect();
+        (runs, vals)
+    };
+    if runs.len() != vals.len() {
+        bail!("runs/vals length mismatch");
+    }
+    let mut out = Vec::with_capacity(n);
+    for (&r, &v) in runs.iter().zip(&vals) {
+        if !(0..=(1 << run_bits) - 1).contains(&r) {
+            bail!("csr run {r} outside {run_bits}-bit range");
+        }
+        for _ in 0..r {
+            out.push(0);
+        }
+        if out.len() < n {
+            out.push(v);
+        } else if v != 0 {
+            bail!("csr overrun with nonzero value");
+        }
+    }
+    while out.len() < n {
+        out.push(0);
+    }
+    if out.len() != n {
+        bail!("csr length mismatch");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn split_caps_runs() {
+        let levels = vec![0; 40];
+        let (runs, vals) = split(&levels, 15);
+        assert_eq!(runs, vec![15, 15]); // 2 fillers cover 32; tail 8 zeros implicit
+        assert_eq!(vals, vec![0, 0]);
+    }
+
+    #[test]
+    fn roundtrip_hand() {
+        for cfg in [
+            CsrConfig::default(),
+            CsrConfig { run_bits: 2, huffman: false },
+            CsrConfig { run_bits: 8, huffman: true },
+        ] {
+            for levels in [
+                vec![],
+                vec![0; 100],
+                vec![1, 0, 0, -2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 3],
+                vec![5, 5, 5],
+            ] {
+                let bytes = encode(&levels, cfg).unwrap();
+                assert_eq!(decode(&bytes).unwrap(), levels, "cfg {cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        ptest::quick("csr-roundtrip", |g| {
+            let levels = g.levels();
+            let cfg = CsrConfig {
+                run_bits: 1 + g.usize_in(0, 7) as u32,
+                huffman: g.bool(),
+            };
+            let bytes = encode(&levels, cfg).map_err(|e| e.to_string())?;
+            let got = decode(&bytes).map_err(|e| e.to_string())?;
+            if got != levels {
+                return Err(format!("mismatch cfg {cfg:?} n={}", levels.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn beats_dense_fixed_on_sparse_data() {
+        let mut rng = crate::util::SplitMix64::new(19);
+        let levels: Vec<i32> = (0..50_000)
+            .map(|_| if rng.next_f64() < 0.95 { 0 } else { 1 + rng.below(15) as i32 })
+            .collect();
+        let csr = encode(&levels, CsrConfig::default()).unwrap();
+        let dense = super::super::fixed::encode(&levels);
+        assert!(csr.len() < dense.len() / 2, "csr {} dense {}", csr.len(), dense.len());
+    }
+}

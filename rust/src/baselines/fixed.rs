@@ -1,0 +1,72 @@
+//! Fixed-length binary coding of levels — the naive floor every entropy
+//! coder must beat.
+
+use crate::bitstream::{read_varint, write_varint, BitReader, BitWriter};
+use anyhow::{anyhow, bail, Result};
+
+/// Bits needed for a symbol alphabet spanning [-max_abs, max_abs].
+pub fn bits_per_symbol(max_abs: u32) -> u32 {
+    if max_abs == 0 {
+        return 0;
+    }
+    let n_symbols = 2 * max_abs as u64 + 1;
+    64 - (n_symbols - 1).leading_zeros()
+}
+
+pub fn encode(levels: &[i32]) -> Vec<u8> {
+    let max_abs = levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(0);
+    let bps = bits_per_symbol(max_abs);
+    let mut out = Vec::new();
+    write_varint(&mut out, levels.len() as u64);
+    write_varint(&mut out, max_abs as u64);
+    let mut w = BitWriter::new();
+    for &l in levels {
+        w.put_bits((l + max_abs as i32) as u32, bps);
+    }
+    let payload = w.finish();
+    out.extend_from_slice(&payload);
+    out
+}
+
+pub fn decode(buf: &[u8]) -> Result<Vec<i32>> {
+    let (n, used1) = read_varint(buf).ok_or_else(|| anyhow!("varint"))?;
+    let (max_abs, used2) =
+        read_varint(&buf[used1..]).ok_or_else(|| anyhow!("varint"))?;
+    let bps = bits_per_symbol(max_abs as u32);
+    let need = (n as usize * bps as usize).div_ceil(8);
+    let body = &buf[used1 + used2..];
+    if body.len() < need {
+        bail!("truncated fixed-length payload");
+    }
+    let mut r = BitReader::new(body);
+    Ok((0..n)
+        .map(|_| r.get_bits(bps) as i32 - max_abs as i32)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn bps_values() {
+        assert_eq!(bits_per_symbol(0), 0);
+        assert_eq!(bits_per_symbol(1), 2); // {-1,0,1} -> 2 bits
+        assert_eq!(bits_per_symbol(3), 3); // 7 symbols -> 3 bits
+        assert_eq!(bits_per_symbol(127), 8); // 255 symbols -> 8 bits
+        assert_eq!(bits_per_symbol(128), 9);
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        ptest::quick("fixed-roundtrip", |g| {
+            let levels = g.levels();
+            let got = decode(&encode(&levels)).map_err(|e| e.to_string())?;
+            if got != levels {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! Canonical scalar Huffman coder over i32 level symbols — the entropy
+//! coding stage of Deep Compression (Han et al. 2015a), used as the
+//! primary baseline in Table 1's parenthesised comparisons.
+
+use crate::bitstream::{read_varint, write_varint, BitReader, BitWriter};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BinaryHeap, HashMap};
+
+/// Code length assignment via the standard two-queue/heap Huffman build,
+/// then canonicalization (lengths → lexicographic codes).
+#[derive(Debug, Clone)]
+pub struct HuffmanCode {
+    /// (symbol, code length) sorted canonical order.
+    pub lengths: Vec<(i32, u8)>,
+    enc: HashMap<i32, (u32, u8)>, // symbol -> (code, len)
+}
+
+impl HuffmanCode {
+    pub fn from_levels(levels: &[i32]) -> Result<Self> {
+        let mut counts: HashMap<i32, u64> = HashMap::new();
+        for &l in levels {
+            *counts.entry(l).or_insert(0) += 1;
+        }
+        Self::from_counts(&counts)
+    }
+
+    pub fn from_counts(counts: &HashMap<i32, u64>) -> Result<Self> {
+        if counts.is_empty() {
+            return Ok(Self { lengths: Vec::new(), enc: HashMap::new() });
+        }
+        if counts.len() == 1 {
+            let sym = *counts.keys().next().unwrap();
+            let lengths = vec![(sym, 1u8)];
+            return Ok(Self { enc: build_canonical(&lengths)?, lengths });
+        }
+        // node arena + heap of (Reverse(count), tie, node index)
+        enum Node {
+            Leaf(i32),
+            Internal(usize, usize),
+        }
+        let mut arena: Vec<Node> = Vec::new();
+        let mut heap: BinaryHeap<(std::cmp::Reverse<u64>, u64, usize)> = BinaryHeap::new();
+        let mut tie = 0u64;
+        let mut sorted: Vec<_> = counts.iter().collect();
+        sorted.sort(); // determinism
+        for (&sym, &c) in sorted {
+            arena.push(Node::Leaf(sym));
+            heap.push((std::cmp::Reverse(c), tie, arena.len() - 1));
+            tie += 1;
+        }
+        while heap.len() > 1 {
+            let (std::cmp::Reverse(c1), _, n1) = heap.pop().unwrap();
+            let (std::cmp::Reverse(c2), _, n2) = heap.pop().unwrap();
+            arena.push(Node::Internal(n1, n2));
+            heap.push((std::cmp::Reverse(c1 + c2), tie, arena.len() - 1));
+            tie += 1;
+        }
+        let (_, _, root) = heap.pop().unwrap();
+        let mut lengths = Vec::new();
+        fn walk(arena: &[Node], n: usize, depth: u8, out: &mut Vec<(i32, u8)>) {
+            match arena[n] {
+                Node::Leaf(s) => out.push((s, depth.max(1))),
+                Node::Internal(a, b) => {
+                    walk(arena, a, depth + 1, out);
+                    walk(arena, b, depth + 1, out);
+                }
+            }
+        }
+        walk(&arena, root, 0, &mut lengths);
+        // canonical ordering: by (length, symbol)
+        lengths.sort_by_key(|&(s, l)| (l, s));
+        Ok(Self { enc: build_canonical(&lengths)?, lengths })
+    }
+
+    pub fn code_for(&self, sym: i32) -> Option<(u32, u8)> {
+        self.enc.get(&sym).copied()
+    }
+
+    /// Average code length under the given counts (bits/symbol).
+    pub fn avg_bits(&self, counts: &HashMap<i32, u64>) -> f64 {
+        let total: u64 = counts.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        counts
+            .iter()
+            .map(|(s, &c)| c as f64 * self.enc.get(s).map(|&(_, l)| l as f64).unwrap_or(0.0))
+            .sum::<f64>()
+            / total as f64
+    }
+}
+
+fn build_canonical(lengths: &[(i32, u8)]) -> Result<HashMap<i32, (u32, u8)>> {
+    let mut enc = HashMap::new();
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &(sym, len) in lengths {
+        // canonical order requires nondecreasing, nonzero, bounded lengths
+        if len == 0 || len > 32 || len < prev_len {
+            bail!("invalid canonical code length {len} (prev {prev_len})");
+        }
+        code = code
+            .checked_shl((len - prev_len) as u32)
+            .ok_or_else(|| anyhow!("code space overflow"))?;
+        enc.insert(sym, (code, len));
+        code = code.checked_add(1).ok_or_else(|| anyhow!("code space overflow"))?;
+        prev_len = len;
+    }
+    Ok(enc)
+}
+
+/// Encode levels: header (symbol table) + canonical Huffman payload.
+pub fn encode(levels: &[i32]) -> Result<Vec<u8>> {
+    let code = HuffmanCode::from_levels(levels)?;
+    let mut out = Vec::new();
+    // header: n_symbols | (zigzag sym varint, len byte)* | n_levels
+    write_varint(&mut out, code.lengths.len() as u64);
+    for &(sym, len) in &code.lengths {
+        write_varint(&mut out, zigzag(sym));
+        out.push(len);
+    }
+    write_varint(&mut out, levels.len() as u64);
+    let mut w = BitWriter::new();
+    for &l in levels {
+        let (c, n) = code
+            .code_for(l)
+            .ok_or_else(|| anyhow!("symbol {l} missing from code"))?;
+        w.put_bits(c, n as u32);
+    }
+    let payload = w.finish();
+    write_varint(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Decode an [`encode`] stream.
+pub fn decode(buf: &[u8]) -> Result<Vec<i32>> {
+    let mut pos = 0usize;
+    let rd = |buf: &[u8], pos: &mut usize| -> Result<u64> {
+        let (v, n) = read_varint(&buf[*pos..]).ok_or_else(|| anyhow!("varint"))?;
+        *pos += n;
+        Ok(v)
+    };
+    let n_sym = rd(buf, &mut pos)? as usize;
+    if n_sym > buf.len() {
+        bail!("huffman header claims {n_sym} symbols in {} bytes", buf.len());
+    }
+    let mut lengths = Vec::with_capacity(n_sym);
+    for _ in 0..n_sym {
+        let sym = unzigzag(rd(buf, &mut pos)?);
+        if pos >= buf.len() {
+            bail!("truncated header");
+        }
+        let len = buf[pos];
+        pos += 1;
+        lengths.push((sym, len));
+    }
+    let n_levels = rd(buf, &mut pos)? as usize;
+    let plen = rd(buf, &mut pos)? as usize;
+    if pos + plen > buf.len() {
+        bail!("truncated payload");
+    }
+    // every symbol consumes >= 1 bit; reject impossible level counts
+    // before allocating (hostile headers)
+    if n_levels > plen * 8 || n_levels > super::MAX_DECODE_ELEMS {
+        bail!("huffman header claims {n_levels} levels from {plen} bytes");
+    }
+    let enc = build_canonical(&lengths)?;
+    // decode table: (code, len) -> sym
+    let dec: HashMap<(u32, u8), i32> =
+        enc.iter().map(|(&s, &(c, l))| ((c, l), s)).collect();
+    let max_len = lengths.iter().map(|&(_, l)| l).max().unwrap_or(0);
+    let mut r = BitReader::new(&buf[pos..pos + plen]);
+    let mut out = Vec::with_capacity(n_levels);
+    for _ in 0..n_levels {
+        let mut c = 0u32;
+        let mut l = 0u8;
+        loop {
+            c = (c << 1) | r.get_bit();
+            l += 1;
+            if let Some(&sym) = dec.get(&(c, l)) {
+                out.push(sym);
+                break;
+            }
+            if l > max_len {
+                bail!("invalid huffman stream");
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn zigzag(v: i32) -> u64 {
+    ((v << 1) ^ (v >> 31)) as u32 as u64
+}
+
+fn unzigzag(v: u64) -> i32 {
+    let v = v as u32;
+    ((v >> 1) as i32) ^ -((v & 1) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn roundtrip_simple() {
+        for levels in [
+            vec![],
+            vec![0],
+            vec![0, 0, 0],
+            vec![1, -1, 2, -2, 0, 0, 0, 5],
+            (-20..20).collect(),
+        ] {
+            let bytes = encode(&levels).unwrap();
+            assert_eq!(decode(&bytes).unwrap(), levels);
+        }
+    }
+
+    #[test]
+    fn near_entropy_on_skewed_data() {
+        let mut rng = crate::util::SplitMix64::new(13);
+        let levels: Vec<i32> = (0..50_000)
+            .map(|_| {
+                if rng.next_f64() < 0.9 {
+                    0
+                } else {
+                    1 + rng.below(7) as i32
+                }
+            })
+            .collect();
+        let bytes = encode(&levels).unwrap();
+        let ent = super::super::entropy_bits(&levels) / 8.0;
+        // Scalar Huffman pays the ≥1 bit/symbol floor: must be within the
+        // floor but above entropy.
+        let payload = bytes.len() as f64;
+        assert!(payload >= ent * 0.99);
+        // avg code length here ≈ 0.9·1 + 0.1·(3..4) bits ≈ 1.2–1.3 bits/sym
+        assert!(payload < levels.len() as f64 * 1.6 / 8.0 + 128.0);
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        ptest::quick("huffman-roundtrip", |g| {
+            let levels = g.levels();
+            let bytes = encode(&levels).map_err(|e| e.to_string())?;
+            let got = decode(&bytes).map_err(|e| e.to_string())?;
+            if got != levels {
+                return Err(format!("mismatch on {} levels", levels.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0, 1, -1, i32::MAX, i32::MIN, 12345, -98765] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Baseline coders for the Table 1 comparisons and the context-adaptivity
+//! ablation:
+//!
+//! * [`huffman`] — canonical scalar Huffman over quantized levels (the
+//!   coding stage of Deep Compression, Han et al. 2015a).
+//! * [`fixed`] — fixed-length binary code (the naive floor).
+//! * [`csr`] — Han-style relative-index sparse format (nonzeros + 4/8-bit
+//!   zero-run codes) with optional Huffman on top.
+//! * [`static_arith`] — binary arithmetic coding with *frozen* per-bin
+//!   probabilities (two-pass): isolates what context adaptivity buys.
+//! * [`entropy`] — empirical entropy, the scalar-coding lower bound.
+
+pub mod csr;
+pub mod fixed;
+pub mod huffman;
+pub mod static_arith;
+
+use std::collections::HashMap;
+
+/// Upper bound on decoded element counts accepted from stream headers —
+/// rejects hostile varints before any allocation (268M levels ≈ 1 GiB,
+/// comfortably above VGG16's 138M weights).
+pub const MAX_DECODE_ELEMS: usize = 1 << 28;
+
+/// Empirical zeroth-order entropy of a level stream, in bits/symbol.
+pub fn entropy(levels: &[i32]) -> f64 {
+    if levels.is_empty() {
+        return 0.0;
+    }
+    let mut counts: HashMap<i32, u64> = HashMap::new();
+    for &l in levels {
+        *counts.entry(l).or_insert(0) += 1;
+    }
+    let n = levels.len() as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Total bits of the scalar-entropy lower bound.
+pub fn entropy_bits(levels: &[i32]) -> f64 {
+    entropy(levels) * levels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_and_constant() {
+        assert_eq!(entropy(&[]), 0.0);
+        assert_eq!(entropy(&[3, 3, 3, 3]), 0.0);
+        let e = entropy(&[0, 1, 2, 3]);
+        assert!((e - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_binary_skew() {
+        let mut v = vec![0i32; 95];
+        v.extend(vec![1i32; 5]);
+        let e = entropy(&v);
+        assert!((e - 0.2864).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,234 @@
+//! Static (non-adaptive) binary arithmetic coding — the ablation that
+//! isolates the value of context *adaptivity*: identical binarization to
+//! DeepCABAC, but every bin type's probability is frozen to its empirical
+//! frequency measured in a first pass, signalled in the header, and never
+//! updated. Comparing its payload against DeepCABAC's on the same levels
+//! measures what the adaptive models buy (paper §2's motivation).
+
+use crate::bitstream::{read_varint, write_varint};
+use crate::cabac::{CabacDecoder, CabacEncoder, ContextModel};
+use crate::codec::{CodecConfig, RemainderMode};
+use anyhow::{anyhow, bail, Result};
+
+/// Nearest M-coder state to a target probability-of-one; the encoder and
+/// decoder both clamp the context there and never transition (we emulate
+/// "no adaptation" by resetting the state after every bin).
+fn state_for_p_one(p1: f64) -> ContextModel {
+    let (mps, p_lps) = if p1 <= 0.5 { (0u8, p1) } else { (1u8, 1.0 - p1) };
+    // p_lps = 0.5 * alpha^s  =>  s = log(p_lps / 0.5) / log(alpha)
+    let mut best = 0u8;
+    let mut best_err = f64::INFINITY;
+    for s in 0..63u8 {
+        let err = (crate::cabac::tables::p_lps(s) - p_lps).abs();
+        if err < best_err {
+            best_err = err;
+            best = s;
+        }
+    }
+    ContextModel { state: best, mps }
+}
+
+struct BinCounter {
+    ones: u64,
+    total: u64,
+}
+
+impl BinCounter {
+    fn p_one(&self) -> f64 {
+        if self.total == 0 {
+            0.5
+        } else {
+            (self.ones as f64 + 0.5) / (self.total as f64 + 1.0)
+        }
+    }
+}
+
+/// First pass: count each bin type's ones under the DeepCABAC binarization.
+fn count_bins(levels: &[i32], cfg: &CodecConfig) -> Vec<BinCounter> {
+    // bins: [sig, sign, gr1..grN]
+    let n = cfg.n_abs_flags as usize;
+    let mut counters: Vec<BinCounter> =
+        (0..2 + n).map(|_| BinCounter { ones: 0, total: 0 }).collect();
+    for &l in levels {
+        let sig = l != 0;
+        counters[0].total += 1;
+        counters[0].ones += sig as u64;
+        if sig {
+            counters[1].total += 1;
+            counters[1].ones += (l < 0) as u64;
+            let abs = l.unsigned_abs();
+            let mut i = 1u32;
+            while i <= cfg.n_abs_flags {
+                let greater = abs > i;
+                counters[1 + i as usize].total += 1;
+                counters[1 + i as usize].ones += greater as u64;
+                if !greater {
+                    break;
+                }
+                i += 1;
+            }
+        }
+    }
+    counters
+}
+
+pub fn encode(levels: &[i32], cfg: CodecConfig) -> Result<Vec<u8>> {
+    let counters = count_bins(levels, &cfg);
+    let models: Vec<ContextModel> =
+        counters.iter().map(|c| state_for_p_one(c.p_one())).collect();
+    let mut out = Vec::new();
+    write_varint(&mut out, levels.len() as u64);
+    out.push(cfg.n_abs_flags as u8);
+    out.push(cfg.remainder.tag());
+    out.push(cfg.remainder.param() as u8);
+    write_varint(&mut out, models.len() as u64);
+    for m in &models {
+        out.push(m.state);
+        out.push(m.mps);
+    }
+    let mut enc = CabacEncoder::new();
+    for &l in levels {
+        encode_one(&mut enc, &models, &cfg, l);
+    }
+    let payload = enc.finish();
+    write_varint(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+fn encode_one(enc: &mut CabacEncoder, models: &[ContextModel], cfg: &CodecConfig, l: i32) {
+    let sig = l != 0;
+    let mut m = models[0];
+    enc.encode(&mut m, sig as u8); // m is a copy: state never persists
+    if sig {
+        let mut m = models[1];
+        enc.encode(&mut m, (l < 0) as u8);
+        let abs = l.unsigned_abs();
+        let mut i = 1u32;
+        while i <= cfg.n_abs_flags {
+            let greater = abs > i;
+            let mut m = models[1 + i as usize];
+            enc.encode(&mut m, greater as u8);
+            if !greater {
+                return;
+            }
+            i += 1;
+        }
+        let rem = abs - cfg.n_abs_flags - 1;
+        match cfg.remainder {
+            RemainderMode::FixedLength(w) => enc.encode_bypass_bits(rem, w),
+            RemainderMode::ExpGolomb(k) => enc.encode_bypass_eg(rem, k),
+        }
+    }
+}
+
+pub fn decode(buf: &[u8]) -> Result<Vec<i32>> {
+    let mut pos = 0usize;
+    let rd = |buf: &[u8], pos: &mut usize| -> Result<u64> {
+        let (v, n) = read_varint(&buf[*pos..]).ok_or_else(|| anyhow!("varint"))?;
+        *pos += n;
+        Ok(v)
+    };
+    let n = rd(buf, &mut pos)? as usize;
+    if n > super::MAX_DECODE_ELEMS {
+        bail!("header claims {n} levels (limit {})", super::MAX_DECODE_ELEMS);
+    }
+    if pos + 3 > buf.len() {
+        bail!("truncated header");
+    }
+    let n_abs = buf[pos] as u32;
+    let remainder = RemainderMode::from_tag(buf[pos + 1], buf[pos + 2] as u32)
+        .ok_or_else(|| anyhow!("bad remainder"))?;
+    pos += 3;
+    let n_models = rd(buf, &mut pos)? as usize;
+    if pos + 2 * n_models > buf.len() {
+        bail!("truncated models");
+    }
+    let models: Vec<ContextModel> = (0..n_models)
+        .map(|i| ContextModel { state: buf[pos + 2 * i], mps: buf[pos + 2 * i + 1] })
+        .collect();
+    pos += 2 * n_models;
+    let plen = rd(buf, &mut pos)? as usize;
+    if pos + plen > buf.len() {
+        bail!("truncated payload");
+    }
+    let mut dec = CabacDecoder::new(&buf[pos..pos + plen]);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut m = models[0];
+        let sig = dec.decode(&mut m) != 0;
+        if !sig {
+            out.push(0);
+            continue;
+        }
+        let mut m = models[1];
+        let neg = dec.decode(&mut m) != 0;
+        let mut abs = 1u32;
+        let mut i = 1u32;
+        while i <= n_abs {
+            let mut m = models[1 + i as usize];
+            if dec.decode(&mut m) == 0 {
+                break;
+            }
+            abs += 1;
+            i += 1;
+        }
+        if i > n_abs {
+            let rem = match remainder {
+                RemainderMode::FixedLength(w) => dec.decode_bypass_bits(w),
+                RemainderMode::ExpGolomb(k) => dec.decode_bypass_eg(k),
+            };
+            abs = n_abs + 1 + rem;
+        }
+        out.push(if neg { -(abs as i32) } else { abs as i32 });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::encode_levels;
+    use crate::util::ptest;
+
+    #[test]
+    fn property_roundtrip() {
+        ptest::quick("static-arith-roundtrip", |g| {
+            let levels = g.levels();
+            let cfg = CodecConfig {
+                n_abs_flags: 1 + g.usize_in(0, 10) as u32,
+                remainder: RemainderMode::ExpGolomb(g.usize_in(0, 2) as u32),
+                sig_ctx_neighbors: false,
+            };
+            let bytes = encode(&levels, cfg).map_err(|e| e.to_string())?;
+            let got = decode(&bytes).map_err(|e| e.to_string())?;
+            if got != levels {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adaptive_beats_static_on_nonstationary_data() {
+        // First half dense, second half sparse: the adaptive coder tracks
+        // the shift, the static one pays the average.
+        let mut rng = crate::util::SplitMix64::new(31);
+        let mut levels = Vec::new();
+        for i in 0..60_000 {
+            let p = if i < 30_000 { 0.5 } else { 0.02 };
+            levels.push(if rng.next_f64() < p {
+                1 + rng.below(3) as i32
+            } else {
+                0
+            });
+        }
+        let cfg = CodecConfig { sig_ctx_neighbors: false, ..Default::default() };
+        let adaptive = encode_levels(&levels, cfg).len();
+        let static_ = encode(&levels, cfg).unwrap().len();
+        assert!(
+            adaptive < static_,
+            "adaptive {adaptive} should beat static {static_}"
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Robustness weighting (paper §3): η_i = 1/σ_i², where σ_i is the
+//! posterior standard deviation estimated by variational dropout at
+//! training time (Layer 2 exports it per weight). This module converts
+//! σ tensors into η tensors with the numerical guards the quantizer
+//! needs, and provides the uniform-η fallback used by the ablation.
+
+/// Convert posterior sigmas to etas (η = 1/σ²), clamping σ into
+/// [sigma_floor, ∞) so frozen weights don't produce infinite stiffness.
+pub fn etas_from_sigmas(sigmas: &[f32], sigma_floor: f32) -> Vec<f32> {
+    let floor = sigma_floor.max(1e-12);
+    sigmas
+        .iter()
+        .map(|&s| {
+            let s = s.abs().max(floor);
+            1.0 / (s * s)
+        })
+        .collect()
+}
+
+/// Uniform η = 1 (the unweighted ablation — plain rate-distortion).
+pub fn etas_uniform(n: usize) -> Vec<f32> {
+    vec![1.0; n]
+}
+
+/// A sensible σ floor for a tensor: 1e-3 × the RMS of the nonzero σs
+/// (guards against collapsed posteriors without distorting the scale).
+pub fn sigma_floor(sigmas: &[f32]) -> f32 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for &s in sigmas {
+        if s > 0.0 {
+            sum += (s as f64) * (s as f64);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return 1e-6;
+    }
+    ((sum / n as f64).sqrt() as f32) * 1e-3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_is_inverse_variance() {
+        let etas = etas_from_sigmas(&[0.5, 2.0], 1e-6);
+        assert!((etas[0] - 4.0).abs() < 1e-6);
+        assert!((etas[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_sigma_clamped() {
+        let etas = etas_from_sigmas(&[0.0, 1.0], 1e-3);
+        assert!(etas[0].is_finite());
+        assert!((etas[0] - 1e6).abs() / 1e6 < 1e-3);
+    }
+
+    #[test]
+    fn floor_scales_with_rms() {
+        let f = sigma_floor(&[0.1, 0.1, 0.0]);
+        assert!((f - 1e-4).abs() < 1e-6);
+        assert_eq!(sigma_floor(&[0.0, 0.0]), 1e-6);
+    }
+}

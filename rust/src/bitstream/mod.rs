@@ -1,0 +1,64 @@
+//! Bit-level I/O used by every entropy coder in the crate.
+//!
+//! [`BitWriter`] accumulates bits MSB-first into a byte buffer;
+//! [`BitReader`] reads them back. Both are deliberately simple and fully
+//! deterministic so that bitstreams are reproducible across platforms.
+
+mod reader;
+mod writer;
+
+pub use reader::BitReader;
+pub use writer::BitWriter;
+
+/// Write a u64 as a LEB128-style varint (7 bits per byte, MSB = continue).
+pub fn write_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read a varint written by [`write_varint`]. Returns (value, bytes read).
+pub fn read_varint(buf: &[u8]) -> Option<(u64, usize)> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    for (i, &byte) in buf.iter().enumerate() {
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let (got, n) = read_varint(&buf).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_truncated_is_none() {
+        let mut buf = Vec::new();
+        write_varint(&mut buf, u64::MAX);
+        assert!(read_varint(&buf[..buf.len() - 1]).is_none());
+    }
+}

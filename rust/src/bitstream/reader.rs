@@ -1,0 +1,78 @@
+//! MSB-first bit reader.
+
+/// Reads bits MSB-first from a byte slice. Reads past the end return 0,
+/// matching the zero padding produced by `BitWriter::finish` — entropy
+/// decoders terminate on symbol counts, not on stream exhaustion.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Read one bit; past-the-end reads yield 0.
+    #[inline]
+    pub fn get_bit(&mut self) -> u32 {
+        let byte = self.pos >> 3;
+        let bit = if byte < self.buf.len() {
+            ((self.buf[byte] >> (7 - (self.pos & 7))) & 1) as u32
+        } else {
+            0
+        };
+        self.pos += 1;
+        bit
+    }
+
+    /// Read `n <= 32` bits MSB-first.
+    #[inline]
+    pub fn get_bits(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        let mut v = 0u32;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit();
+        }
+        v
+    }
+
+    /// Current bit position.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// True once the position has passed the last real byte.
+    pub fn exhausted(&self) -> bool {
+        self.pos >= self.buf.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::BitWriter;
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        let vals = [(0b1u32, 1u32), (0b0, 1), (0xdead, 16), (0x3, 2), (0x1f, 5)];
+        for &(v, n) in &vals {
+            w.put_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.get_bits(n), v);
+        }
+    }
+
+    #[test]
+    fn past_end_reads_zero() {
+        let mut r = BitReader::new(&[0xff]);
+        assert_eq!(r.get_bits(8), 0xff);
+        assert_eq!(r.get_bits(8), 0);
+        assert!(r.exhausted());
+    }
+}

@@ -1,0 +1,86 @@
+//! CABAC decoder — mirror of the encoder's engine.
+
+use super::{tables, ContextModel};
+use crate::bitstream::BitReader;
+
+pub struct CabacDecoder<'a> {
+    value: u32,
+    range: u32,
+    r: BitReader<'a>,
+}
+
+impl<'a> CabacDecoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        let mut r = BitReader::new(buf);
+        let value = r.get_bits(9);
+        Self { value, range: 510, r }
+    }
+
+    /// Decode one bin in an adaptive context.
+    #[inline]
+    pub fn decode(&mut self, ctx: &mut ContextModel) -> u8 {
+        let q = (self.range >> 6) & 3;
+        let r_lps = tables::range_lps(ctx.state, q);
+        self.range -= r_lps;
+        let bin;
+        if self.value < self.range {
+            bin = ctx.mps;
+            ctx.state = tables::next_state_mps(ctx.state);
+        } else {
+            self.value -= self.range;
+            self.range = r_lps;
+            bin = ctx.mps ^ 1;
+            if ctx.state == 0 {
+                ctx.mps ^= 1;
+            }
+            ctx.state = tables::next_state_lps(ctx.state);
+        }
+        while self.range < 256 {
+            self.range <<= 1;
+            self.value = (self.value << 1) | self.r.get_bit();
+        }
+        bin
+    }
+
+    /// Decode one equiprobable (bypass) bin.
+    #[inline]
+    pub fn decode_bypass(&mut self) -> u8 {
+        self.value = (self.value << 1) | self.r.get_bit();
+        if self.value >= self.range {
+            self.value -= self.range;
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Decode `n` bypass bins, MSB first.
+    #[inline]
+    pub fn decode_bypass_bits(&mut self, n: u32) -> u32 {
+        let mut v = 0;
+        for _ in 0..n {
+            v = (v << 1) | self.decode_bypass() as u32;
+        }
+        v
+    }
+
+    /// Exp-Golomb order-k bypass decode.
+    pub fn decode_bypass_eg(&mut self, k: u32) -> u32 {
+        let mut k = k;
+        let mut v = 0u32;
+        while self.decode_bypass() == 1 {
+            v += 1 << k;
+            k += 1;
+        }
+        while k > 0 {
+            k -= 1;
+            v += (self.decode_bypass() as u32) << k;
+        }
+        v
+    }
+
+    /// Bits consumed from the underlying reader so far.
+    pub fn bits_read(&self) -> usize {
+        self.r.bit_pos()
+    }
+}

@@ -1,0 +1,264 @@
+//! CABAC encoder — standard AVC-style arithmetic encoding engine with
+//! outstanding-bit bookkeeping (Marpe et al. 2003, fig. 4).
+
+use super::{tables, ContextModel};
+use crate::bitstream::BitWriter;
+
+pub struct CabacEncoder {
+    low: u32,
+    range: u32,
+    outstanding: u32,
+    first_bit: bool,
+    w: BitWriter,
+    bins_coded: u64,
+}
+
+impl Default for CabacEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CabacEncoder {
+    pub fn new() -> Self {
+        Self {
+            low: 0,
+            range: 510,
+            outstanding: 0,
+            first_bit: true,
+            w: BitWriter::new(),
+            bins_coded: 0,
+        }
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { w: BitWriter::with_capacity(bytes), ..Self::new() }
+    }
+
+    #[inline]
+    fn put_bit(&mut self, b: u32) {
+        // The very first renorm output bit of the stream is a sentinel the
+        // decoder never consumes; we drop it like the AVC spec does.
+        if self.first_bit {
+            self.first_bit = false;
+        } else {
+            self.w.put_bit(b);
+        }
+        if self.outstanding > 0 {
+            self.w.put_run(1 - b, self.outstanding);
+            self.outstanding = 0;
+        }
+    }
+
+    #[inline]
+    fn renorm(&mut self) {
+        while self.range < 256 {
+            if self.low >= 512 {
+                self.low -= 512;
+                self.put_bit(1);
+            } else if self.low < 256 {
+                self.put_bit(0);
+            } else {
+                self.low -= 256;
+                self.outstanding += 1;
+            }
+            self.low <<= 1;
+            self.range <<= 1;
+        }
+    }
+
+    /// Encode one bin in an adaptive context.
+    #[inline]
+    pub fn encode(&mut self, ctx: &mut ContextModel, bin: u8) {
+        self.bins_coded += 1;
+        let q = (self.range >> 6) & 3;
+        let r_lps = tables::range_lps(ctx.state, q);
+        self.range -= r_lps;
+        if bin != ctx.mps {
+            self.low += self.range;
+            self.range = r_lps;
+            if ctx.state == 0 {
+                ctx.mps ^= 1;
+            }
+            ctx.state = tables::next_state_lps(ctx.state);
+        } else {
+            ctx.state = tables::next_state_mps(ctx.state);
+        }
+        self.renorm();
+    }
+
+    /// Encode one equiprobable (bypass) bin.
+    #[inline]
+    pub fn encode_bypass(&mut self, bin: u8) {
+        self.bins_coded += 1;
+        self.low <<= 1;
+        if bin != 0 {
+            self.low += self.range;
+        }
+        if self.low >= 1024 {
+            self.low -= 1024;
+            self.put_bit(1);
+        } else if self.low < 512 {
+            self.put_bit(0);
+        } else {
+            self.low -= 512;
+            self.outstanding += 1;
+        }
+    }
+
+    /// Encode `n` bypass bins from the low bits of `v`, MSB first.
+    #[inline]
+    pub fn encode_bypass_bits(&mut self, v: u32, n: u32) {
+        for i in (0..n).rev() {
+            self.encode_bypass(((v >> i) & 1) as u8);
+        }
+    }
+
+    /// Exp-Golomb order-k bypass code for v >= 0.
+    pub fn encode_bypass_eg(&mut self, v: u32, k: u32) {
+        let mut v = v;
+        let mut k = k;
+        // unary prefix of (1) bits while v >= 2^k
+        loop {
+            if v >= (1 << k) {
+                self.encode_bypass(1);
+                v -= 1 << k;
+                k += 1;
+            } else {
+                self.encode_bypass(0);
+                while k > 0 {
+                    k -= 1;
+                    self.encode_bypass(((v >> k) & 1) as u8);
+                }
+                break;
+            }
+        }
+    }
+
+    /// Total bins routed through the engine (regular + bypass).
+    pub fn bins_coded(&self) -> u64 {
+        self.bins_coded
+    }
+
+    /// Bits emitted so far (excluding what is still latent in low/range).
+    pub fn bits_written(&self) -> usize {
+        self.w.bit_len()
+    }
+
+    /// Flush the arithmetic state and return the byte-aligned payload.
+    pub fn finish(mut self) -> Vec<u8> {
+        // Standard flush: 2 final decisions worth of low bits.
+        self.range = 2;
+        self.renorm();
+        self.put_bit((self.low >> 9) & 1);
+        let tail = ((self.low >> 7) & 3) | 1;
+        self.w.put_bits(tail, 2);
+        self.w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::CabacDecoder;
+    use super::*;
+
+    fn roundtrip(bins: &[u8], n_ctx: usize, pick: impl Fn(usize) -> usize) {
+        let mut ctxs = vec![ContextModel::default(); n_ctx];
+        let mut enc = CabacEncoder::new();
+        for (i, &b) in bins.iter().enumerate() {
+            enc.encode(&mut ctxs[pick(i)], b);
+        }
+        let bytes = enc.finish();
+        let mut ctxs = vec![ContextModel::default(); n_ctx];
+        let mut dec = CabacDecoder::new(&bytes);
+        for (i, &b) in bins.iter().enumerate() {
+            assert_eq!(dec.decode(&mut ctxs[pick(i)]), b, "bin {i}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_constant_streams() {
+        roundtrip(&[0; 1000], 1, |_| 0);
+        roundtrip(&[1; 1000], 1, |_| 0);
+    }
+
+    #[test]
+    fn roundtrip_alternating() {
+        let bins: Vec<u8> = (0..500).map(|i| (i % 2) as u8).collect();
+        roundtrip(&bins, 2, |i| i % 2);
+    }
+
+    #[test]
+    fn skewed_stream_compresses() {
+        // 95% zeros through one adaptive context must code well under 1 bpb.
+        let mut rng = crate::util::SplitMix64::new(3);
+        let bins: Vec<u8> = (0..20_000)
+            .map(|_| if rng.next_f64() < 0.95 { 0 } else { 1 })
+            .collect();
+        let mut ctx = ContextModel::default();
+        let mut enc = CabacEncoder::new();
+        for &b in &bins {
+            enc.encode(&mut ctx, b);
+        }
+        let bytes = enc.finish();
+        let bpb = bytes.len() as f64 * 8.0 / bins.len() as f64;
+        // H(0.05) = 0.286; adaptive coder should land below 0.40.
+        assert!(bpb < 0.40, "bits/bin = {bpb}");
+    }
+
+    #[test]
+    fn bypass_roundtrip() {
+        let mut enc = CabacEncoder::new();
+        let vals = [(0u32, 1u32), (1, 1), (0b1011, 4), (0xffff, 16), (0, 8)];
+        for &(v, n) in &vals {
+            enc.encode_bypass_bits(v, n);
+        }
+        let bytes = enc.finish();
+        let mut dec = CabacDecoder::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(dec.decode_bypass_bits(n), v);
+        }
+    }
+
+    #[test]
+    fn exp_golomb_roundtrip() {
+        let mut enc = CabacEncoder::new();
+        let vals: Vec<u32> = (0..64).chain([100, 1000, 65535, 1 << 20]).collect();
+        for &v in &vals {
+            enc.encode_bypass_eg(v, 0);
+            enc.encode_bypass_eg(v, 2);
+        }
+        let bytes = enc.finish();
+        let mut dec = CabacDecoder::new(&bytes);
+        for &v in &vals {
+            assert_eq!(dec.decode_bypass_eg(0), v);
+            assert_eq!(dec.decode_bypass_eg(2), v);
+        }
+    }
+
+    #[test]
+    fn mixed_regular_bypass_roundtrip() {
+        let mut rng = crate::util::SplitMix64::new(17);
+        let mut ctxs = vec![ContextModel::default(); 4];
+        let mut enc = CabacEncoder::new();
+        let mut script = Vec::new();
+        for _ in 0..5000 {
+            let regular = rng.next_f64() < 0.7;
+            let bin = (rng.next_u64() & 1) as u8;
+            let ctx = rng.below(4) as usize;
+            if regular {
+                enc.encode(&mut ctxs[ctx], bin);
+            } else {
+                enc.encode_bypass(bin);
+            }
+            script.push((regular, bin, ctx));
+        }
+        let bytes = enc.finish();
+        let mut ctxs = vec![ContextModel::default(); 4];
+        let mut dec = CabacDecoder::new(&bytes);
+        for (i, &(regular, bin, ctx)) in script.iter().enumerate() {
+            let got = if regular { dec.decode(&mut ctxs[ctx]) } else { dec.decode_bypass() };
+            assert_eq!(got, bin, "step {i}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! M-coder probability tables, re-derived from the published design rule
+//! (Marpe, Schwarz & Wiegand, "Context-based adaptive binary arithmetic
+//! coding in the H.264/AVC video compression standard", 2003, §III):
+//!
+//! * 63 usable probability states σ = 0..62 with
+//!   `p_σ = 0.5 · α^σ`, `α = (p_62 / 0.5)^(1/62)`, `p_62 = 0.01875`.
+//! * MPS update: `p ← α·p`            ⇒ `σ ← min(σ+1, 62)`.
+//! * LPS update: `p ← α·p + (1 − α)`  ⇒ `σ ← nearest state`, flipping
+//!   the MPS when σ = 0.
+//! * The coding range R ∈ [2^8, 2^9) is quantized to four cells by bits
+//!   7..6; the LPS subrange table stores `round(R_q · p_σ)` (≥ 2) with
+//!   `R_q` the cell midpoint.
+//!
+//! Because the encoder, the decoder, *and* the rate estimator all read
+//! the same derived tables, bitstreams are self-consistent; matching the
+//! spec's table byte-for-byte is not required (and not claimed).
+
+use once_cell::sync::Lazy;
+
+pub const NUM_STATES: usize = 64;
+const ALPHA_P62: f64 = 0.01875;
+
+struct Tables {
+    range_lps: [[u16; 4]; NUM_STATES],
+    next_mps: [u8; NUM_STATES],
+    next_lps: [u8; NUM_STATES],
+    bits_mps: [f32; NUM_STATES],
+    bits_lps: [f32; NUM_STATES],
+    p_lps: [f64; NUM_STATES],
+}
+
+static TABLES: Lazy<Tables> = Lazy::new(|| {
+    let alpha = (ALPHA_P62 / 0.5).powf(1.0 / 62.0);
+    let mut p = [0.0f64; NUM_STATES];
+    for (s, v) in p.iter_mut().enumerate() {
+        *v = 0.5 * alpha.powi(s as i32);
+    }
+    // State 63 is kept as a pseudo-terminal mirror of 62 (we do not code a
+    // termination bin; streams are length-delimited by the container).
+    p[63] = p[62];
+
+    let mut range_lps = [[0u16; 4]; NUM_STATES];
+    for s in 0..NUM_STATES {
+        for q in 0..4 {
+            // Range cell q covers [256 + 64q, 256 + 64(q+1)); midpoint:
+            let rq = 256.0 + 64.0 * q as f64 + 32.0;
+            range_lps[s][q] = (rq * p[s]).round().max(2.0) as u16;
+        }
+    }
+
+    let mut next_mps = [0u8; NUM_STATES];
+    let mut next_lps = [0u8; NUM_STATES];
+    for s in 0..NUM_STATES {
+        next_mps[s] = if s >= 62 { 62 } else { (s + 1) as u8 };
+        // LPS: p' = alpha*p + (1-alpha); find nearest state index.
+        let p_new = (alpha * p[s] + (1.0 - alpha)).min(0.5);
+        let idx = (p_new / 0.5).ln() / alpha.ln();
+        next_lps[s] = idx.round().clamp(0.0, 62.0) as u8;
+    }
+
+    let mut bits_mps = [0.0f32; NUM_STATES];
+    let mut bits_lps = [0.0f32; NUM_STATES];
+    for s in 0..NUM_STATES {
+        bits_lps[s] = (-p[s].log2()) as f32;
+        bits_mps[s] = (-(1.0 - p[s]).log2()) as f32;
+    }
+
+    Tables { range_lps, next_mps, next_lps, bits_mps, bits_lps, p_lps: p }
+});
+
+/// LPS subrange for (state, range-quantizer-cell).
+#[inline]
+pub fn range_lps(state: u8, q: u32) -> u32 {
+    TABLES.range_lps[state as usize][q as usize] as u32
+}
+
+#[inline]
+pub fn next_state_mps(state: u8) -> u8 {
+    TABLES.next_mps[state as usize]
+}
+
+#[inline]
+pub fn next_state_lps(state: u8) -> u8 {
+    TABLES.next_lps[state as usize]
+}
+
+/// Fractional bits to code the MPS in `state`.
+#[inline]
+pub fn entropy_bits_mps(state: u8) -> f32 {
+    TABLES.bits_mps[state as usize]
+}
+
+/// Fractional bits to code the LPS in `state`.
+#[inline]
+pub fn entropy_bits_lps(state: u8) -> f32 {
+    TABLES.bits_lps[state as usize]
+}
+
+/// LPS probability of a state (diagnostics / tests).
+pub fn p_lps(state: u8) -> f64 {
+    TABLES.p_lps[state as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state0_is_half() {
+        assert!((p_lps(0) - 0.5).abs() < 1e-12);
+        assert_eq!(range_lps(0, 3), ((256.0 + 64.0 * 3.0 + 32.0) * 0.5f64).round() as u32);
+    }
+
+    #[test]
+    fn probabilities_decrease_geometrically() {
+        for s in 0..62u8 {
+            assert!(p_lps(s + 1) < p_lps(s));
+        }
+        assert!((p_lps(62) - 0.01875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lps_subranges_monotone_in_q_and_state() {
+        for s in 0..63u8 {
+            for q in 0..3 {
+                assert!(range_lps(s, q) <= range_lps(s, q + 1), "s={s} q={q}");
+            }
+            if s < 61 {
+                assert!(range_lps(s + 1, 0) <= range_lps(s, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn lps_subrange_lower_bound() {
+        for s in 0..NUM_STATES as u8 {
+            for q in 0..4 {
+                assert!(range_lps(s, q) >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn transitions_in_bounds() {
+        for s in 0..NUM_STATES as u8 {
+            assert!(next_state_mps(s) <= 62);
+            assert!(next_state_lps(s) <= 62);
+            // LPS observation cannot make the LPS *less* probable.
+            assert!(next_state_lps(s) <= s.max(1));
+        }
+        assert_eq!(next_state_mps(62), 62);
+    }
+
+    #[test]
+    fn entropy_bits_consistent_with_p() {
+        for s in 0..63u8 {
+            let p = p_lps(s);
+            assert!((entropy_bits_lps(s) as f64 - (-(p).log2())).abs() < 1e-5);
+            assert!((entropy_bits_mps(s) as f64 - (-(1.0 - p).log2())).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Hand-rolled CLI (clap is not in the offline registry).
+//!
+//! ```text
+//! deepcabac table1 [--large] [--scale N] [--no-eval] [--sweep N] [--workers N]
+//! deepcabac compress   --model NAME --out FILE [--s N | --sweep N] [--lambda-scale X]
+//! deepcabac decompress --in FILE --out-dir DIR
+//! deepcabac eval       --model NAME [--compressed FILE]
+//! deepcabac anatomy    [--levels "1,0,-3,..."]
+//! deepcabac sweep      --model NAME [--points N] [--lambda-scale X] --csv FILE
+//! deepcabac synth      --arch vgg16 [--scale N] [--s N]
+//! ```
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self, String> {
+        if argv.is_empty() {
+            return Err("no subcommand".into());
+        }
+        let cmd = argv[0].clone();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            }
+        }
+        Ok(Self { cmd, flags, switches })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer")),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a float")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub const USAGE: &str = "\
+deepcabac — context-adaptive binary arithmetic coding for DNN compression
+(reproduction of Wiedemann et al., ICML 2019)
+
+USAGE:
+  deepcabac table1 [--large] [--scale N] [--no-eval] [--sweep N] [--workers N]
+      Regenerate the paper's Table 1 (small trained models; --large adds
+      the synthetic ImageNet-scale rows at 1/N channel scale).
+  deepcabac compress --model NAME --out FILE [--s N | --sweep N]
+                     [--lambda-scale X] [--workers N]
+      Compress a trained model from artifacts/ into a .dcbc container.
+  deepcabac decompress --in FILE --out-dir DIR
+      Reconstruct weight tensors from a container into .npy files.
+  deepcabac eval --model NAME [--compressed FILE]
+      Accuracy/PSNR via the PJRT runtime (original or compressed weights).
+  deepcabac anatomy [--levels L1,L2,...]
+      Figure 1: per-bin trace of the binarization of a level sequence.
+  deepcabac sweep --model NAME [--points N] [--lambda-scales a,b,c] [--csv FILE]
+      Rate-distortion sweep over (S, λ) — the paper's §3/§4 trade-off.
+  deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
+      Generate + compress a synthetic ImageNet-scale model.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&sv(&["table1", "--scale", "8", "--large", "--no-eval"]))
+            .unwrap();
+        assert_eq!(a.cmd, "table1");
+        assert_eq!(a.get_usize("scale", 1).unwrap(), 8);
+        assert!(a.has("large"));
+        assert!(a.has("no-eval"));
+        assert!(!a.has("quick"));
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["compress", "stray"])).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = Args::parse(&sv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

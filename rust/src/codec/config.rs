@@ -1,0 +1,99 @@
+//! Codec configuration — the paper's encoder hyper-parameters.
+
+/// How the remainder (|level| − n − 1 once all AbsGr flags fired) is
+/// bypass-coded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RemainderMode {
+    /// Fixed-length code of the given bit width (the paper's choice; the
+    /// width is derived from the tensor's max level and stored per layer).
+    FixedLength(u32),
+    /// Exp-Golomb of order k (an extension; self-delimiting, so no width
+    /// needs to be signalled).
+    ExpGolomb(u32),
+}
+
+impl RemainderMode {
+    pub fn tag(&self) -> u8 {
+        match self {
+            RemainderMode::FixedLength(_) => 0,
+            RemainderMode::ExpGolomb(_) => 1,
+        }
+    }
+
+    pub fn param(&self) -> u32 {
+        match self {
+            RemainderMode::FixedLength(w) => *w,
+            RemainderMode::ExpGolomb(k) => *k,
+        }
+    }
+
+    pub fn from_tag(tag: u8, param: u32) -> Option<Self> {
+        match tag {
+            0 => Some(RemainderMode::FixedLength(param)),
+            1 => Some(RemainderMode::ExpGolomb(param)),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecConfig {
+    /// The paper's hyper-parameter n: number of AbsGr(i) flags before
+    /// falling through to the bypass remainder.
+    pub n_abs_flags: u32,
+    pub remainder: RemainderMode,
+    /// Condition the sigflag context on the significance of the previous
+    /// two weights in scan order (local-statistics adaptation).
+    pub sig_ctx_neighbors: bool,
+}
+
+impl Default for CodecConfig {
+    fn default() -> Self {
+        Self {
+            n_abs_flags: 10,
+            remainder: RemainderMode::ExpGolomb(0),
+            sig_ctx_neighbors: true,
+        }
+    }
+}
+
+impl CodecConfig {
+    /// Derive the fixed-length remainder width for a tensor whose largest
+    /// absolute level is `max_abs` (paper's fixed-length variant).
+    pub fn with_fixed_length_for(max_abs: u32, n_abs_flags: u32) -> Self {
+        let max_rem = max_abs.saturating_sub(n_abs_flags + 1);
+        let width = 32 - max_rem.leading_zeros().min(31);
+        let width = if max_rem == 0 { 0 } else { width };
+        Self {
+            n_abs_flags,
+            remainder: RemainderMode::FixedLength(width),
+            sig_ctx_neighbors: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_length_width_derivation() {
+        // max_abs = 12, n = 10 -> max remainder = 1 -> 1 bit
+        let cfg = CodecConfig::with_fixed_length_for(12, 10);
+        assert_eq!(cfg.remainder, RemainderMode::FixedLength(1));
+        // max_abs <= n+1 -> no remainder bits needed
+        let cfg = CodecConfig::with_fixed_length_for(11, 10);
+        assert_eq!(cfg.remainder, RemainderMode::FixedLength(0));
+        // max_abs = 300, n=10 -> rem 289 -> 9 bits
+        let cfg = CodecConfig::with_fixed_length_for(300, 10);
+        assert_eq!(cfg.remainder, RemainderMode::FixedLength(9));
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for m in [RemainderMode::FixedLength(7), RemainderMode::ExpGolomb(2)] {
+            assert_eq!(RemainderMode::from_tag(m.tag(), m.param()), Some(m));
+        }
+        assert_eq!(RemainderMode::from_tag(9, 0), None);
+    }
+}

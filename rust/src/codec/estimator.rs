@@ -1,0 +1,186 @@
+//! CABAC bit-cost estimation — the `R_ik` term of the paper's eq. 1.
+//!
+//! Given the *current* adaptive context states of a [`LevelEncoder`],
+//! [`RateEstimator::level_bits`] returns the fractional number of bits
+//! that coding a candidate level would consume right now. Because the
+//! contexts adapt as the tensor is scanned, the same level has a
+//! different cost at different positions — exactly the coupling the
+//! paper exploits ("the bit-size R_ik now also depends on the index i").
+
+use super::{CodecConfig, ContextSet, RemainderMode};
+
+pub struct RateEstimator;
+
+impl RateEstimator {
+    /// Fractional bits to code `level` under `ctxs` at a position whose
+    /// previous-two significance is `prev_sig`. Pure — no state updates.
+    pub fn level_bits(
+        cfg: &CodecConfig,
+        ctxs: &ContextSet,
+        prev_sig: (bool, bool),
+        level: i32,
+    ) -> f32 {
+        let sig_idx = ContextSet::sig_ctx_index(cfg, prev_sig);
+        if level == 0 {
+            return ctxs.sig[sig_idx].bits(0);
+        }
+        let mut bits = ctxs.sig[sig_idx].bits(1);
+        bits += ctxs.sign.bits((level < 0) as u8);
+        let abs = level.unsigned_abs();
+        let n = cfg.n_abs_flags;
+        let mut i = 1;
+        while i <= n {
+            let greater = abs > i;
+            bits += ctxs.gr[(i - 1) as usize].bits(greater as u8);
+            if !greater {
+                return bits;
+            }
+            i += 1;
+        }
+        let rem = abs - n - 1;
+        match cfg.remainder {
+            RemainderMode::FixedLength(w) => bits += w as f32,
+            RemainderMode::ExpGolomb(k) => {
+                // context-coded prefix + bypass suffix (mirror of the coder)
+                let mut v = rem;
+                let mut k = k;
+                let mut p = 0usize;
+                loop {
+                    let ctx = &ctxs.eg_prefix[p.min(super::EG_PREFIX_CTXS - 1)];
+                    if v >= (1 << k) {
+                        bits += ctx.bits(1);
+                        v -= 1 << k;
+                        k += 1;
+                        p += 1;
+                    } else {
+                        bits += ctx.bits(0) + k as f32;
+                        break;
+                    }
+                }
+            }
+        }
+        bits
+    }
+}
+
+/// Length in bins of an order-k exp-Golomb codeword for v.
+pub fn eg_len(v: u32, k: u32) -> u32 {
+    let mut v = v;
+    let mut k = k;
+    let mut len = 0;
+    loop {
+        if v >= (1 << k) {
+            len += 1;
+            v -= 1 << k;
+            k += 1;
+        } else {
+            return len + 1 + k;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::binarize::LevelEncoder;
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn eg_lengths() {
+        // order 0: 0 -> "0" (1 bin); 1 -> "10 0"? order-0 EG as implemented:
+        // v=0: stop bit + 0 suffix = 1 bin; v=1: 1, then k=1, v=0 -> stop +
+        // 1 suffix = 3 bins; v in [1,2] -> 3 bins; v in [3,6] -> 5 bins.
+        assert_eq!(eg_len(0, 0), 1);
+        assert_eq!(eg_len(1, 0), 3);
+        assert_eq!(eg_len(2, 0), 3);
+        assert_eq!(eg_len(3, 0), 5);
+        assert_eq!(eg_len(6, 0), 5);
+        assert_eq!(eg_len(7, 0), 7);
+        // order 2: v=0 -> 1 + 2 suffix bits
+        assert_eq!(eg_len(0, 2), 3);
+    }
+
+    #[test]
+    fn estimate_tracks_actual_bits() {
+        // Encode a long random stream; the summed estimates (taken right
+        // before each encode) must match the final payload size within a
+        // small relative error — this validates the estimator the RD
+        // quantizer relies on.
+        let mut rng = crate::util::SplitMix64::new(23);
+        let levels: Vec<i32> = (0..30_000)
+            .map(|_| {
+                if rng.next_f64() < 0.8 {
+                    0
+                } else {
+                    let mag = 1 + rng.below(30) as i32;
+                    if rng.next_u64() & 1 == 0 {
+                        mag
+                    } else {
+                        -mag
+                    }
+                }
+            })
+            .collect();
+        let cfg = CodecConfig::default();
+        let mut enc = LevelEncoder::new(cfg);
+        let mut est_total = 0.0f64;
+        for &l in &levels {
+            est_total +=
+                RateEstimator::level_bits(&cfg, &enc.ctxs, enc.prev_sig(), l) as f64;
+            enc.encode_level(l);
+        }
+        let actual = enc.finish().len() as f64 * 8.0;
+        let rel = (est_total - actual).abs() / actual;
+        assert!(rel < 0.02, "estimate {est_total:.0} vs actual {actual:.0} ({rel:.3})");
+    }
+
+    #[test]
+    fn property_estimate_close_over_distributions() {
+        ptest::quick("estimator-close", |g| {
+            let levels = g.levels();
+            if levels.len() < 500 {
+                return Ok(()); // relative error meaningless on tiny payloads
+            }
+            let cfg = CodecConfig::default();
+            let mut enc = LevelEncoder::new(cfg);
+            let mut est = 0.0f64;
+            for &l in &levels {
+                est += RateEstimator::level_bits(&cfg, &enc.ctxs, enc.prev_sig(), l) as f64;
+                enc.encode_level(l);
+            }
+            let actual = enc.finish().len() as f64 * 8.0;
+            if actual < 1000.0 {
+                // flush overhead (~2 bytes) dominates tiny payloads;
+                // relative error is not meaningful there
+                return Ok(());
+            }
+            let rel = (est - actual).abs() / actual;
+            if rel > 0.08 {
+                return Err(format!("estimator off by {rel:.3} on {} levels", levels.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_is_cheapest_in_fresh_context() {
+        let cfg = CodecConfig::default();
+        let ctxs = ContextSet::new(&cfg);
+        let zero = RateEstimator::level_bits(&cfg, &ctxs, (false, false), 0);
+        for l in [1, -1, 2, 7, -100] {
+            assert!(RateEstimator::level_bits(&cfg, &ctxs, (false, false), l) > zero);
+        }
+    }
+
+    #[test]
+    fn larger_magnitude_never_cheaper() {
+        let cfg = CodecConfig::default();
+        let ctxs = ContextSet::new(&cfg);
+        let mut prev = 0.0;
+        for mag in 1..200 {
+            let b = RateEstimator::level_bits(&cfg, &ctxs, (true, true), mag);
+            assert!(b + 1e-4 >= prev, "mag {mag}: {b} < {prev}");
+            prev = b;
+        }
+    }
+}

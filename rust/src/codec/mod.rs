@@ -1,0 +1,85 @@
+//! DeepCABAC weight codec — the paper's §2.1 binarization wired to the
+//! CABAC engine, plus the bit-cost estimator the RD quantizer queries.
+//!
+//! A quantized weight tensor is a flat row-major `&[i32]` of integer
+//! levels. Each level is coded as (paper fig. 1):
+//!
+//! ```text
+//! sigflag   (regular bin, ctx chosen from previous-2 significance)
+//! signflag  (regular bin, own ctx)
+//! AbsGr(i)  for i = 1..=n (regular bins, one ctx each)
+//! remainder (bypass: fixed-length or exp-Golomb)
+//! ```
+
+pub mod binarize;
+pub mod config;
+pub mod estimator;
+
+pub use binarize::{decode_levels, encode_levels, LevelDecoder, LevelEncoder};
+pub use config::{CodecConfig, RemainderMode};
+pub use estimator::RateEstimator;
+
+use crate::cabac::ContextModel;
+
+/// Number of sigflag contexts when neighbour conditioning is on
+/// (selected by how many of the previous 2 weights were significant).
+pub const SIG_CTXS: usize = 3;
+
+/// Number of contexts for the exp-Golomb remainder's *prefix* bins.
+/// Like the MPEG-NNR DeepCABAC, the unary prefix of the remainder is
+/// context-coded (one model per prefix position, shared beyond); only
+/// the suffix bits are bypass. On fine grids this is worth several bits
+/// per significant weight.
+pub const EG_PREFIX_CTXS: usize = 16;
+
+/// The full set of adaptive contexts for one tensor.
+#[derive(Debug, Clone)]
+pub struct ContextSet {
+    pub sig: [ContextModel; SIG_CTXS],
+    pub sign: ContextModel,
+    pub gr: Vec<ContextModel>, // n_abs_flags entries
+    pub eg_prefix: [ContextModel; EG_PREFIX_CTXS],
+}
+
+impl ContextSet {
+    pub fn new(cfg: &CodecConfig) -> Self {
+        Self {
+            sig: [ContextModel::default(); SIG_CTXS],
+            sign: ContextModel::default(),
+            gr: vec![ContextModel::default(); cfg.n_abs_flags as usize],
+            eg_prefix: [ContextModel::default(); EG_PREFIX_CTXS],
+        }
+    }
+
+    /// Index of the sigflag context for the current scan position.
+    #[inline]
+    pub fn sig_ctx_index(cfg: &CodecConfig, prev_sig: (bool, bool)) -> usize {
+        if cfg.sig_ctx_neighbors {
+            prev_sig.0 as usize + prev_sig.1 as usize
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_count_follows_config() {
+        let cfg = CodecConfig { n_abs_flags: 5, ..CodecConfig::default() };
+        let set = ContextSet::new(&cfg);
+        assert_eq!(set.gr.len(), 5);
+    }
+
+    #[test]
+    fn sig_ctx_selection() {
+        let on = CodecConfig { sig_ctx_neighbors: true, ..CodecConfig::default() };
+        let off = CodecConfig { sig_ctx_neighbors: false, ..CodecConfig::default() };
+        assert_eq!(ContextSet::sig_ctx_index(&on, (false, false)), 0);
+        assert_eq!(ContextSet::sig_ctx_index(&on, (true, false)), 1);
+        assert_eq!(ContextSet::sig_ctx_index(&on, (true, true)), 2);
+        assert_eq!(ContextSet::sig_ctx_index(&off, (true, true)), 0);
+    }
+}

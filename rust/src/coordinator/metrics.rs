@@ -1,0 +1,94 @@
+//! Compression pipeline metrics — the numbers Table 1 reports.
+
+use crate::model::{CompressedModel, Model};
+
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub n_weights: usize,
+    pub nonzero: usize,
+    pub payload_bytes: usize,
+    /// Σ η (w − q)² over the layer.
+    pub distortion: f64,
+    /// Estimated rate (bits) from the RD scan.
+    pub est_bits: f64,
+    pub time_s: f64,
+}
+
+impl LayerReport {
+    pub fn bits_per_weight(&self) -> f64 {
+        self.payload_bytes as f64 * 8.0 / self.n_weights.max(1) as f64
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nonzero as f64 / self.n_weights.max(1) as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub name: String,
+    /// Raw f32 size of weights + biases (the "Org. size" column).
+    pub raw_bytes: usize,
+    /// Serialized DCBC container size.
+    pub compressed_bytes: usize,
+    /// Post-quantization density (levels ≠ 0).
+    pub density: f64,
+    pub layers: Vec<LayerReport>,
+    pub total_time_s: f64,
+}
+
+impl ModelReport {
+    pub fn from_layers(
+        model: &Model,
+        compressed: &CompressedModel,
+        layers: Vec<LayerReport>,
+    ) -> Self {
+        let nonzero: usize = layers.iter().map(|l| l.nonzero).sum();
+        let total: usize = layers.iter().map(|l| l.n_weights).sum();
+        Self {
+            name: model.manifest.name.clone(),
+            raw_bytes: model.raw_bytes(),
+            compressed_bytes: compressed.serialize().len(),
+            density: nonzero as f64 / total.max(1) as f64,
+            total_time_s: layers.iter().map(|l| l.time_s).sum(),
+            layers,
+        }
+    }
+
+    /// "Comp. ratio" column: compressed size as a % of the original.
+    pub fn ratio_percent(&self) -> f64 {
+        self.compressed_bytes as f64 / self.raw_bytes.max(1) as f64 * 100.0
+    }
+
+    /// Compression factor, e.g. 63.6 for the paper's VGG16 headline.
+    pub fn factor(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        let n: usize = self.layers.iter().map(|l| l.n_weights).sum();
+        self.layers.iter().map(|l| l.payload_bytes).sum::<usize>() as f64 * 8.0
+            / n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_report_derived_stats() {
+        let r = LayerReport {
+            name: "l".into(),
+            n_weights: 1000,
+            nonzero: 100,
+            payload_bytes: 125,
+            distortion: 0.0,
+            est_bits: 1000.0,
+            time_s: 0.0,
+        };
+        assert!((r.bits_per_weight() - 1.0).abs() < 1e-12);
+        assert!((r.density() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordinator: the compression pipeline (per-layer workers,
+//! bounded queues), the S-sweep scheduler (paper §4 probes
+//! S ∈ {0,…,256} and keeps the best), and pipeline metrics.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod sweep;
+
+pub use metrics::{LayerReport, ModelReport};
+pub use pipeline::{compress_model, compress_tensor, CompressionSpec};
+pub use sweep::{sweep_s, SweepPoint, SweepResult};

@@ -1,0 +1,274 @@
+//! The per-layer compression pipeline.
+//!
+//! Every weight tensor is compressed independently ("we applied
+//! DeepCABAC on to the weight parameters of each layer separately,
+//! excluding biases and normalization parameters" — paper §4), so layers
+//! fan out onto a worker pool; results are collected in manifest order.
+
+use crate::bayes;
+use crate::codec::CodecConfig;
+use crate::model::{CompressedLayer, CompressedModel, Model};
+use crate::quant::{QuantGrid, RdParams, RdQuantizer};
+use crate::util::Timer;
+
+use super::metrics::{LayerReport, ModelReport};
+
+/// Everything that parameterizes one compression run.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionSpec {
+    /// The grid coarseness hyper-parameter S of eq. 2.
+    pub s: u32,
+    /// λ = lambda_scale · Δ² · mean(η): scale-free Lagrangian so one knob
+    /// works across layers with very different Δ and η magnitudes.
+    /// (lambda_scale = 0 recovers weighted nearest-neighbour.)
+    pub lambda_scale: f32,
+    pub cfg: CodecConfig,
+    /// η = 1/σ² (true) vs uniform η (ablation).
+    pub weighted: bool,
+    /// Candidate window for the RD scan.
+    pub window: i32,
+}
+
+impl Default for CompressionSpec {
+    fn default() -> Self {
+        Self {
+            s: 64,
+            lambda_scale: 0.05,
+            cfg: CodecConfig::default(),
+            weighted: true,
+            window: 4,
+        }
+    }
+}
+
+/// Compress one tensor; returns the layer record and its report.
+pub fn compress_tensor(
+    name: &str,
+    dims: &[usize],
+    weights: &[f32],
+    sigmas: &[f32],
+    bias: &[f32],
+    spec: &CompressionSpec,
+) -> (CompressedLayer, LayerReport) {
+    let timer = Timer::new();
+    let grid = QuantGrid::from_tensor(weights, sigmas, spec.s);
+    let etas = if spec.weighted {
+        bayes::etas_from_sigmas(sigmas, bayes::sigma_floor(sigmas))
+    } else {
+        bayes::etas_uniform(weights.len())
+    };
+    let mean_eta = etas.iter().map(|&e| e as f64).sum::<f64>() / etas.len().max(1) as f64;
+    let lambda = spec.lambda_scale * grid.delta * grid.delta * mean_eta as f32;
+    let quantizer = RdQuantizer::new(spec.cfg);
+    let res = quantizer.quantize_encode(
+        weights,
+        &etas,
+        &grid,
+        RdParams { lambda, window: spec.window },
+    );
+    let nonzero = res.levels.iter().filter(|&&l| l != 0).count();
+    let report = LayerReport {
+        name: name.to_string(),
+        n_weights: weights.len(),
+        nonzero,
+        payload_bytes: res.payload.len(),
+        distortion: res.distortion,
+        est_bits: res.est_bits,
+        time_s: timer.elapsed_s(),
+    };
+    let layer = CompressedLayer {
+        name: name.to_string(),
+        dims: dims.to_vec(),
+        grid,
+        s_param: spec.s,
+        cfg: spec.cfg,
+        n_weights: weights.len(),
+        payload: res.payload,
+        bias: bias.to_vec(),
+    };
+    (layer, report)
+}
+
+/// Compress a whole model with `workers` threads (layers fan out; results
+/// are re-assembled in manifest order).
+pub fn compress_model(
+    model: &Model,
+    spec: &CompressionSpec,
+    workers: usize,
+) -> (CompressedModel, ModelReport) {
+    let n = model.weights.len();
+    let mut slots: Vec<Option<(CompressedLayer, LayerReport)>> = (0..n).map(|_| None).collect();
+
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            slots[i] = Some(compress_layer_idx(model, i, spec));
+        }
+    } else {
+        // Work-stealing over layer indices with scoped threads; a bounded
+        // channel applies backpressure so huge layers don't pile up.
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, (CompressedLayer, LayerReport))>(
+            workers * 2,
+        );
+        std::thread::scope(|scope| {
+            for _ in 0..workers.min(n) {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = compress_layer_idx(model, i, spec);
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (i, out) in rx {
+                slots[i] = Some(out);
+            }
+        });
+    }
+
+    let mut layers = Vec::with_capacity(n);
+    let mut reports = Vec::with_capacity(n);
+    for slot in slots {
+        let (l, r) = slot.expect("layer not compressed");
+        layers.push(l);
+        reports.push(r);
+    }
+    let compressed = CompressedModel { name: model.manifest.name.clone(), layers };
+    let report = ModelReport::from_layers(model, &compressed, reports);
+    (compressed, report)
+}
+
+fn compress_layer_idx(
+    model: &Model,
+    i: usize,
+    spec: &CompressionSpec,
+) -> (CompressedLayer, LayerReport) {
+    let layer = &model.manifest.layers[i];
+    compress_tensor(
+        &layer.name,
+        &model.weights[i].shape,
+        &model.weights[i].data,
+        &model.sigmas[i].data,
+        &model.biases[i].data,
+        spec,
+    )
+}
+
+/// Reconstruct all weight tensors from a compressed model.
+pub fn decompress(compressed: &CompressedModel) -> Vec<crate::tensor::Tensor> {
+    compressed
+        .layers
+        .iter()
+        .map(|l| crate::tensor::Tensor::new(l.dims.clone(), l.decode_weights()))
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    /// Shared fixture for sibling modules' tests.
+    pub(crate) fn toy_model_pub() -> Model {
+        toy_model()
+    }
+
+    fn toy_model() -> Model {
+        use crate::model::manifest::*;
+        let mut rng = SplitMix64::new(71);
+        let mut weights = Vec::new();
+        let mut sigmas = Vec::new();
+        let mut biases = Vec::new();
+        let mut layers = Vec::new();
+        for (li, n) in [400usize, 900, 120].iter().enumerate() {
+            let mut w = vec![0.0f32; *n];
+            let mut s = vec![0.0f32; *n];
+            for i in 0..*n {
+                if rng.next_f64() > 0.8 {
+                    w[i] = rng.laplace(0.05) as f32;
+                }
+                s[i] = 0.01 + 0.1 * rng.next_f32();
+            }
+            weights.push(crate::tensor::Tensor::new(vec![*n], w));
+            sigmas.push(crate::tensor::Tensor::new(vec![*n], s));
+            biases.push(crate::tensor::Tensor::new(vec![4], vec![0.1; 4]));
+            layers.push(LayerInfo {
+                name: format!("l{li}"),
+                kind: LayerKind::Fc,
+                shape: vec![*n],
+                activation: None,
+                stride: 1,
+                padding: 0,
+                nonzero: 0,
+                size: *n,
+            });
+        }
+        Model {
+            manifest: ModelManifest {
+                name: "toy".into(),
+                task: "classify".into(),
+                input_shape: vec![4],
+                eval_batch: 2,
+                n_classes: 2,
+                param_count: 1420,
+                density: 0.2,
+                dense_metric: 1.0,
+                sparse_metric: 1.0,
+                layers,
+                hlo: "none".into(),
+                arg_order: vec![],
+            },
+            weights,
+            biases,
+            sigmas,
+        }
+    }
+
+    #[test]
+    fn compress_decompress_bounded_error() {
+        let model = toy_model();
+        let spec = CompressionSpec { lambda_scale: 0.0, ..Default::default() };
+        let (compressed, report) = compress_model(&model, &spec, 1);
+        assert_eq!(compressed.layers.len(), 3);
+        assert!(report.compressed_bytes > 0);
+        let recon = decompress(&compressed);
+        for ((orig, rec), cl) in model.weights.iter().zip(&recon).zip(&compressed.layers) {
+            assert_eq!(orig.shape, rec.shape);
+            let bound = 0.51 * cl.grid.delta;
+            let w_cap = cl.grid.value(cl.grid.max_level).abs();
+            for (a, b) in orig.data.iter().zip(&rec.data) {
+                if a.abs() <= w_cap {
+                    // λ=0: nearest-neighbour ⇒ error ≤ Δ/2 for in-range weights
+                    assert!((a - b).abs() <= bound, "a={a} b={b} Δ={}", cl.grid.delta);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let model = toy_model();
+        let spec = CompressionSpec::default();
+        let (a, _) = compress_model(&model, &spec, 1);
+        let (b, _) = compress_model(&model, &spec, 4);
+        assert_eq!(a.serialize(), b.serialize());
+    }
+
+    #[test]
+    fn weighted_vs_uniform_changes_output() {
+        let model = toy_model();
+        let (a, _) = compress_model(&model, &CompressionSpec::default(), 1);
+        let (b, _) = compress_model(
+            &model,
+            &CompressionSpec { weighted: false, ..Default::default() },
+            1,
+        );
+        assert_ne!(a.serialize(), b.serialize());
+    }
+}

@@ -1,0 +1,166 @@
+//! The S-sweep scheduler: the paper probes the grid coarseness
+//! S ∈ {0, …, 256} per model and keeps the best-compressing setting
+//! ("Since the compression result can be sensitive to the parameter S
+//! in (2), we probed the compression performance for all S ∈ {0,...,256}
+//! and selected the best performing model" — §4).
+//!
+//! A full 257-point sweep on a 100M-parameter model is expensive, so the
+//! scheduler supports arbitrary S lists (coarse-to-fine refinement is
+//! what `default_s_grid` returns) and fans candidates onto the worker
+//! pool.
+
+use super::pipeline::{compress_model, CompressionSpec};
+use super::ModelReport;
+use crate::model::{CompressedModel, Model};
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub s: u32,
+    pub compressed_bytes: usize,
+    pub density: f64,
+    pub distortion: f64,
+}
+
+#[derive(Debug)]
+pub struct SweepResult {
+    pub points: Vec<SweepPoint>,
+    pub best: (CompressedModel, ModelReport),
+}
+
+/// Coarse-to-fine S grid covering {0..=256} with ~n points.
+pub fn default_s_grid(n: usize) -> Vec<u32> {
+    if n >= 257 {
+        return (0..=256).collect();
+    }
+    let mut out: Vec<u32> = (0..n)
+        .map(|i| ((i as f64 / (n - 1).max(1) as f64) * 256.0).round() as u32)
+        .collect();
+    out.dedup();
+    out
+}
+
+/// Run the sweep; returns every probed point plus the best model
+/// (smallest container). `workers` parallelizes layers within each probe.
+pub fn sweep_s(
+    model: &Model,
+    s_values: &[u32],
+    base: &CompressionSpec,
+    workers: usize,
+) -> SweepResult {
+    assert!(!s_values.is_empty());
+    let mut points = Vec::with_capacity(s_values.len());
+    let mut best: Option<(CompressedModel, ModelReport)> = None;
+    for &s in s_values {
+        let spec = CompressionSpec { s, ..*base };
+        let (compressed, report) = compress_model(model, &spec, workers);
+        points.push(SweepPoint {
+            s,
+            compressed_bytes: report.compressed_bytes,
+            density: report.density,
+            distortion: report.layers.iter().map(|l| l.distortion).sum(),
+        });
+        let better = match &best {
+            None => true,
+            Some((_, b)) => report.compressed_bytes < b.compressed_bytes,
+        };
+        if better {
+            best = Some((compressed, report));
+        }
+    }
+    SweepResult { points, best: best.unwrap() }
+}
+
+/// Per-layer S selection (an extension over the paper, which picks one S
+/// per model): every layer independently keeps its smallest-payload S.
+/// Never worse than the global sweep on total payload bytes, since the
+/// global optimum is in each layer's candidate set.
+pub fn sweep_s_per_layer(
+    model: &Model,
+    s_values: &[u32],
+    base: &CompressionSpec,
+) -> (CompressedModel, ModelReport, Vec<(String, u32)>) {
+    assert!(!s_values.is_empty());
+    let n = model.weights.len();
+    let mut best_layers: Vec<Option<(crate::model::CompressedLayer, super::LayerReport)>> =
+        (0..n).map(|_| None).collect();
+    for &s in s_values {
+        let spec = CompressionSpec { s, ..*base };
+        for i in 0..n {
+            let layer = &model.manifest.layers[i];
+            let (cl, rep) = super::pipeline::compress_tensor(
+                &layer.name,
+                &model.weights[i].shape,
+                &model.weights[i].data,
+                &model.sigmas[i].data,
+                &model.biases[i].data,
+                &spec,
+            );
+            let better = best_layers[i]
+                .as_ref()
+                .map(|(b, _)| cl.payload.len() < b.payload.len())
+                .unwrap_or(true);
+            if better {
+                best_layers[i] = Some((cl, rep));
+            }
+        }
+    }
+    let mut layers = Vec::with_capacity(n);
+    let mut reports = Vec::with_capacity(n);
+    let mut chosen = Vec::with_capacity(n);
+    for slot in best_layers {
+        let (cl, rep) = slot.unwrap();
+        chosen.push((cl.name.clone(), cl.s_param));
+        layers.push(cl);
+        reports.push(rep);
+    }
+    let compressed = CompressedModel { name: model.manifest.name.clone(), layers };
+    let report = ModelReport::from_layers(model, &compressed, reports);
+    (compressed, report, chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_layer_never_worse_than_global() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let s = [0u32, 64, 192, 256];
+        let global = sweep_s(&model, &s, &base, 1);
+        let (_, per_layer, chosen) = sweep_s_per_layer(&model, &s, &base);
+        assert_eq!(chosen.len(), model.weights.len());
+        let global_payload: usize =
+            global.best.1.layers.iter().map(|l| l.payload_bytes).sum();
+        let per_layer_payload: usize =
+            per_layer.layers.iter().map(|l| l.payload_bytes).sum();
+        assert!(per_layer_payload <= global_payload);
+    }
+
+    #[test]
+    fn grid_shapes() {
+        assert_eq!(default_s_grid(257).len(), 257);
+        let g = default_s_grid(9);
+        assert_eq!(g.first(), Some(&0));
+        assert_eq!(g.last(), Some(&256));
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn sweep_picks_smallest() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let res = sweep_s(
+            &model,
+            &[0, 32, 128, 256],
+            &CompressionSpec::default(),
+            1,
+        );
+        let best_bytes = res.best.1.compressed_bytes;
+        assert!(res.points.iter().all(|p| p.compressed_bytes >= best_bytes));
+        // coarser grids (smaller S) must not produce *larger* payloads than
+        // the finest probe — sanity of the monotone trend
+        let s0 = res.points.iter().find(|p| p.s == 0).unwrap();
+        let s256 = res.points.iter().find(|p| p.s == 256).unwrap();
+        assert!(s0.compressed_bytes <= s256.compressed_bytes);
+    }
+}

@@ -1,0 +1,35 @@
+//! DeepCABAC — context-adaptive binary arithmetic coding for deep neural
+//! network compression.
+//!
+//! Reproduction of Wiedemann et al., "DeepCABAC: Context-adaptive binary
+//! arithmetic coding for deep neural network compression" (ICML 2019
+//! workshop / arXiv:1905.08318).
+//!
+//! Architecture (three layers, Python never on the hot path):
+//!   * L3 (this crate): the CABAC entropy codec, the weighted
+//!     rate-distortion quantizer, the per-layer compression pipeline,
+//!     baselines, and the PJRT runtime used to evaluate compressed models.
+//!   * L2 (python/compile): JAX model definitions whose forward passes are
+//!     AOT-lowered to HLO text artifacts consumed by [`runtime`].
+//!   * L1 (python/compile/kernels): Pallas kernels (matmul, im2col conv,
+//!     blocked RD argmin) called from L2, validated against pure-jnp
+//!     oracles at build time.
+
+pub mod app;
+pub mod baselines;
+pub mod bayes;
+pub mod bitstream;
+pub mod cabac;
+pub mod cli;
+pub mod codec;
+pub mod coordinator;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod synth;
+pub mod tensor;
+pub mod util;
+
+pub use bitstream::{BitReader, BitWriter};
+pub use cabac::{CabacDecoder, CabacEncoder, ContextModel};

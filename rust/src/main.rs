@@ -1,0 +1,323 @@
+//! DeepCABAC CLI entry point — see `deepcabac --help` / [`deepcabac::cli::USAGE`].
+
+use anyhow::{anyhow, bail, Context, Result};
+use deepcabac::app;
+use deepcabac::cli::{Args, USAGE};
+use deepcabac::codec::{decode_levels, CodecConfig, LevelEncoder};
+use deepcabac::coordinator::{
+    compress_model, pipeline::decompress, sweep_s, CompressionSpec,
+};
+use deepcabac::model::CompressedModel;
+use deepcabac::report::{human_bytes, Table};
+use deepcabac::runtime::Runtime;
+use deepcabac::synth::Arch;
+use deepcabac::tensor::npy;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "table1" => cmd_table1(args),
+        "compress" => cmd_compress(args),
+        "compress-npy" => cmd_compress_npy(args),
+        "decompress" => cmd_decompress(args),
+        "eval" => cmd_eval(args),
+        "anatomy" => cmd_anatomy(args),
+        "sweep" => cmd_sweep(args),
+        "synth" => cmd_synth(args),
+        other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn base_spec(args: &Args) -> Result<CompressionSpec> {
+    Ok(CompressionSpec {
+        lambda_scale: args.get_f32("lambda-scale", 0.05).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    })
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let sweep_points = args.get_usize("sweep", 17).map_err(|e| anyhow!(e))?;
+    let workers = args.get_usize("workers", 1).map_err(|e| anyhow!(e))?;
+    let scale = args.get_usize("scale", 8).map_err(|e| anyhow!(e))?;
+    let with_eval = !args.has("no-eval");
+    let spec = base_spec(args)?;
+    let s_grid = deepcabac::coordinator::sweep::default_s_grid(sweep_points);
+
+    let mut table = Table::new(&[
+        "Model", "Dataset", "Org.acc(top1)", "Org.size", "Spars.[%]",
+        "Comp.ratio[%]", "Acc.after", "best S",
+    ]);
+    for name in app::SMALL_MODELS {
+        eprintln!("[table1] {name} ...");
+        let row = app::table1_small_row(name, &s_grid, &spec, workers, with_eval)?;
+        table.row(vec![
+            row.model.clone(),
+            row.dataset.clone(),
+            format!("{:.2}", row.org_metric * metric_scale(&row.model)),
+            human_bytes(row.org_bytes),
+            format!("{:.2}", row.sparsity_pct),
+            format!("{:.2}", row.ratio_pct),
+            row.metric_after
+                .map(|m| format!("{:.2}", m * metric_scale(&row.model)))
+                .unwrap_or_else(|| "n/a".into()),
+            row.best_s.to_string(),
+        ]);
+    }
+    if args.has("large") {
+        for arch in [Arch::Vgg16, Arch::ResNet50, Arch::MobileNetV1] {
+            eprintln!("[table1] {} (synthetic, 1/{scale} scale) ...", arch.name());
+            let row =
+                app::table1_large_row(arch, scale, &s_grid, &spec, workers, 42)?;
+            table.row(vec![
+                row.model.clone(),
+                row.dataset.clone(),
+                "n/a".into(),
+                human_bytes(row.org_bytes),
+                format!("{:.2}", row.sparsity_pct),
+                format!("{:.2}", row.ratio_pct),
+                "n/a".into(),
+                row.best_s.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// classifiers report %, fcae reports PSNR dB
+fn metric_scale(model: &str) -> f64 {
+    if model == "fcae" {
+        1.0
+    } else {
+        100.0
+    }
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?;
+    let out = args.get("out").context("--out required")?;
+    let workers = args.get_usize("workers", 1).map_err(|e| anyhow!(e))?;
+    let model = app::load_model(name)?;
+    let mut spec = base_spec(args)?;
+    let (compressed, report) = if let Some(s) = args.get("s") {
+        spec.s = s.parse().context("--s expects an integer")?;
+        compress_model(&model, &spec, workers)
+    } else {
+        let points = args.get_usize("sweep", 17).map_err(|e| anyhow!(e))?;
+        let grid = deepcabac::coordinator::sweep::default_s_grid(points);
+        if args.has("per-layer") {
+            let (c, r, chosen) =
+                deepcabac::coordinator::sweep::sweep_s_per_layer(&model, &grid, &spec);
+            for (l, s) in &chosen {
+                eprintln!("  {l}: S = {s}");
+            }
+            (c, r)
+        } else {
+            sweep_s(&model, &grid, &spec, workers).best
+        }
+    };
+    std::fs::write(out, compressed.serialize())?;
+    println!(
+        "{name}: {} -> {} ({:.2}% of original, x{:.1}) S={}",
+        human_bytes(report.raw_bytes),
+        human_bytes(report.compressed_bytes),
+        report.ratio_percent(),
+        report.factor(),
+        compressed.layers.first().map(|l| l.s_param).unwrap_or(0),
+    );
+    Ok(())
+}
+
+/// Compress an arbitrary `.npy` weight tensor from disk (σ optional:
+/// without it the unweighted η = 1 ablation path is used).
+fn cmd_compress_npy(args: &Args) -> Result<()> {
+    let input = std::path::PathBuf::from(args.get("in").context("--in required")?);
+    let out = args.get("out").context("--out required")?;
+    let (shape, data) = npy::read_npy_f32(&input)?;
+    let (sigmas, weighted) = match args.get("sigma") {
+        Some(p) => {
+            let (ss, sd) = npy::read_npy_f32(std::path::Path::new(p))?;
+            anyhow::ensure!(ss == shape, "sigma shape {ss:?} != weight shape {shape:?}");
+            (sd, true)
+        }
+        None => (vec![0.05f32; data.len()], false),
+    };
+    let mut spec = base_spec(args)?;
+    spec.weighted = weighted;
+    spec.s = args.get_usize("s", 64).map_err(|e| anyhow!(e))? as u32;
+    let name = input.file_stem().and_then(|s| s.to_str()).unwrap_or("tensor");
+    let (layer, report) =
+        deepcabac::coordinator::compress_tensor(name, &shape, &data, &sigmas, &[], &spec);
+    let container = CompressedModel { name: name.into(), layers: vec![layer] };
+    std::fs::write(out, container.serialize())?;
+    println!(
+        "{name}: {} -> {} ({:.3} bits/weight, density {:.2}%)",
+        human_bytes(data.len() * 4),
+        human_bytes(report.payload_bytes),
+        report.bits_per_weight(),
+        report.density() * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let input = args.get("in").context("--in required")?;
+    let out_dir = std::path::PathBuf::from(args.get("out-dir").context("--out-dir required")?);
+    std::fs::create_dir_all(&out_dir)?;
+    let bytes = std::fs::read(input)?;
+    let compressed = CompressedModel::deserialize(&bytes)?;
+    let tensors = decompress(&compressed);
+    for (layer, t) in compressed.layers.iter().zip(&tensors) {
+        let path = out_dir.join(format!("{}.w.npy", layer.name));
+        npy::write_npy_f32(&path, &t.shape, &t.data)?;
+        println!("wrote {path:?} {:?}", t.shape);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?;
+    let model = app::load_model(name)?;
+    let rt = Runtime::cpu()?;
+    let result = if let Some(path) = args.get("compressed") {
+        let compressed = CompressedModel::deserialize(&std::fs::read(path)?)?;
+        app::evaluate_compressed(&rt, &model, &compressed)?
+    } else {
+        app::evaluate_original(&rt, &model)?
+    };
+    let unit = if model.manifest.task == "classify" { "top-1" } else { "PSNR dB" };
+    println!(
+        "{name}: {:.4} {unit} over {} samples ({:.2}s on {})",
+        result.metric,
+        result.n_samples,
+        result.exec_time_s,
+        rt.platform(),
+    );
+    Ok(())
+}
+
+fn cmd_anatomy(args: &Args) -> Result<()> {
+    let levels: Vec<i32> = args
+        .get_or("levels", "0,3,0,0,-1,14,0,1")
+        .split(',')
+        .map(|t| t.trim().parse::<i32>().context("bad level"))
+        .collect::<Result<_>>()?;
+    println!("DeepCABAC binarization trace (paper figure 1)\n");
+    let cfg = CodecConfig::default();
+    let mut enc = LevelEncoder::new(cfg);
+    println!("{:<8} {:<28} {}", "level", "bins (sig/sign/gr../rem)", "ctx p(sig=1) before");
+    for &l in &levels {
+        let p_sig = enc.ctxs.sig
+            [deepcabac::codec::ContextSet::sig_ctx_index(&cfg, enc.prev_sig())]
+        .p_one();
+        println!("{:<8} {:<28} {:.3}", l, describe_bins(l, &cfg), p_sig);
+        enc.encode_level(l);
+    }
+    let n = levels.len();
+    let payload = enc.finish();
+    println!(
+        "\n{} levels -> {} bytes ({:.2} bits/level); raw f32 would be {} bytes",
+        n,
+        payload.len(),
+        payload.len() as f64 * 8.0 / n as f64,
+        n * 4
+    );
+    let dec = decode_levels(&payload, n, cfg);
+    println!("decode roundtrip: {}", if dec == levels { "OK" } else { "MISMATCH" });
+    Ok(())
+}
+
+fn describe_bins(level: i32, cfg: &CodecConfig) -> String {
+    if level == 0 {
+        return "sig=0".into();
+    }
+    let mut s = format!("sig=1 sign={}", (level < 0) as u8);
+    let abs = level.unsigned_abs();
+    for i in 1..=cfg.n_abs_flags.min(abs + 1) {
+        if abs > i {
+            s.push_str(&format!(" gr{i}=1"));
+        } else {
+            s.push_str(&format!(" gr{i}=0"));
+            return s;
+        }
+    }
+    s.push_str(&format!(" rem={}", abs - cfg.n_abs_flags - 1));
+    s
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let name = args.get("model").context("--model required")?;
+    let points = args.get_usize("points", 17).map_err(|e| anyhow!(e))?;
+    let lambda_scales: Vec<f32> = args
+        .get_or("lambda-scales", "0,0.01,0.05,0.2,1.0")
+        .split(',')
+        .map(|t| t.trim().parse::<f32>().context("bad lambda"))
+        .collect::<Result<_>>()?;
+    let model = app::load_model(name)?;
+    let grid = deepcabac::coordinator::sweep::default_s_grid(points);
+    let mut rows = Vec::new();
+    for &ls in &lambda_scales {
+        let spec = CompressionSpec { lambda_scale: ls, ..Default::default() };
+        let res = sweep_s(&model, &grid, &spec, 1);
+        for p in &res.points {
+            rows.push(vec![
+                ls.to_string(),
+                p.s.to_string(),
+                p.compressed_bytes.to_string(),
+                format!("{:.6}", p.density),
+                format!("{:.6e}", p.distortion),
+            ]);
+        }
+    }
+    let csv = deepcabac::report::to_csv(
+        &["lambda_scale", "S", "bytes", "density", "distortion"],
+        &rows,
+    );
+    match args.get("csv") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {path}");
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let arch = Arch::parse(args.get_or("arch", "vgg16"))
+        .context("--arch must be vgg16|resnet50|mobilenet")?;
+    let scale = args.get_usize("scale", 8).map_err(|e| anyhow!(e))?;
+    let spec = CompressionSpec {
+        s: args.get_usize("s", 64).map_err(|e| anyhow!(e))? as u32,
+        ..base_spec(args)?
+    };
+    let row = app::table1_large_row(arch, scale, &[spec.s], &spec, 1, 42)?;
+    println!(
+        "{} (1/{scale} scale): {} raw, density {:.2}%, compressed {} ({:.2}%, x{:.1})",
+        arch.name(),
+        human_bytes(row.org_bytes),
+        row.sparsity_pct,
+        human_bytes(row.report.compressed_bytes),
+        row.ratio_pct,
+        row.report.factor(),
+    );
+    Ok(())
+}

@@ -1,0 +1,304 @@
+//! The `DCBC` compressed-model container format (DESIGN.md §6).
+//!
+//! ```text
+//! file   := "DCBC" u8 version | str name | varint n_layers | layer*
+//! layer  := str name | varint ndims, dims* | f32 delta | varint S
+//!           | u8 n_abs_flags | u8 rem_tag | u8 rem_param | u8 flags
+//!           | varint n_weights | varint payload_len | payload bytes
+//!           | varint bias_len | raw f32 bias bytes
+//! ```
+//!
+//! Biases (and any normalization parameters) are stored raw, as the
+//! paper compresses weight tensors only.
+
+use crate::bitstream::{read_varint, write_varint};
+use crate::codec::{decode_levels, CodecConfig, RemainderMode};
+use crate::quant::QuantGrid;
+use anyhow::{anyhow, bail, Result};
+use byteorder::{ByteOrder, LittleEndian};
+
+pub const MAGIC: &[u8; 4] = b"DCBC";
+pub const VERSION: u8 = 1;
+
+const FLAG_SIG_NEIGHBORS: u8 = 1;
+
+#[derive(Debug, Clone)]
+pub struct CompressedLayer {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub grid: QuantGrid,
+    pub s_param: u32,
+    pub cfg: CodecConfig,
+    pub n_weights: usize,
+    pub payload: Vec<u8>,
+    pub bias: Vec<f32>,
+}
+
+impl CompressedLayer {
+    /// Decode the CABAC payload back into integer levels.
+    pub fn decode_levels(&self) -> Vec<i32> {
+        decode_levels(&self.payload, self.n_weights, self.cfg)
+    }
+
+    /// Full reconstruction: levels × Δ.
+    pub fn decode_weights(&self) -> Vec<f32> {
+        self.grid.dequantize(&self.decode_levels())
+    }
+
+    /// On-disk footprint of this layer (payload + bias + header approx).
+    pub fn stored_bytes(&self) -> usize {
+        self.payload.len() + self.bias.len() * 4
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CompressedModel {
+    pub name: String,
+    pub layers: Vec<CompressedLayer>,
+}
+
+impl CompressedModel {
+    pub fn total_bytes(&self) -> usize {
+        // serialized size (exact): build lazily
+        self.serialize().len()
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.payload.len()).sum()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        write_str(&mut out, &self.name);
+        write_varint(&mut out, self.layers.len() as u64);
+        for l in &self.layers {
+            write_str(&mut out, &l.name);
+            write_varint(&mut out, l.dims.len() as u64);
+            for &d in &l.dims {
+                write_varint(&mut out, d as u64);
+            }
+            out.extend_from_slice(&l.grid.delta.to_le_bytes());
+            write_varint(&mut out, l.grid.max_level as u64);
+            write_varint(&mut out, l.s_param as u64);
+            out.push(l.cfg.n_abs_flags as u8);
+            out.push(l.cfg.remainder.tag());
+            out.push(l.cfg.remainder.param() as u8);
+            out.push(if l.cfg.sig_ctx_neighbors { FLAG_SIG_NEIGHBORS } else { 0 });
+            write_varint(&mut out, l.n_weights as u64);
+            write_varint(&mut out, l.payload.len() as u64);
+            out.extend_from_slice(&l.payload);
+            write_varint(&mut out, l.bias.len() as u64);
+            let mut bias_bytes = vec![0u8; l.bias.len() * 4];
+            LittleEndian::write_f32_into(&l.bias, &mut bias_bytes);
+            out.extend_from_slice(&bias_bytes);
+        }
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        if buf.len() < 5 || &buf[..4] != MAGIC {
+            bail!("not a DCBC container");
+        }
+        pos += 4;
+        let version = buf[pos];
+        pos += 1;
+        if version != VERSION {
+            bail!("unsupported DCBC version {version}");
+        }
+        let name = read_str(buf, &mut pos)?;
+        let n_layers = read_vi(buf, &mut pos)? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let lname = read_str(buf, &mut pos)?;
+            let ndims = read_vi(buf, &mut pos)? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(read_vi(buf, &mut pos)? as usize);
+            }
+            if pos + 4 > buf.len() {
+                bail!("truncated delta");
+            }
+            let delta = f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+            pos += 4;
+            let max_level = read_vi(buf, &mut pos)? as i32;
+            let s_param = read_vi(buf, &mut pos)? as u32;
+            if pos + 4 > buf.len() {
+                bail!("truncated codec params");
+            }
+            let n_abs_flags = buf[pos] as u32;
+            let rem_tag = buf[pos + 1];
+            let rem_param = buf[pos + 2] as u32;
+            let flags = buf[pos + 3];
+            pos += 4;
+            let remainder = RemainderMode::from_tag(rem_tag, rem_param)
+                .ok_or_else(|| anyhow!("bad remainder tag {rem_tag}"))?;
+            let n_weights = read_vi(buf, &mut pos)? as usize;
+            if n_weights > crate::baselines::MAX_DECODE_ELEMS {
+                bail!("layer claims {n_weights} weights (hostile header?)");
+            }
+            let plen = read_vi(buf, &mut pos)? as usize;
+            if pos + plen > buf.len() {
+                bail!("truncated payload");
+            }
+            let payload = buf[pos..pos + plen].to_vec();
+            pos += plen;
+            let blen = read_vi(buf, &mut pos)? as usize;
+            if pos + blen * 4 > buf.len() {
+                bail!("truncated bias");
+            }
+            let mut bias = vec![0f32; blen];
+            LittleEndian::read_f32_into(&buf[pos..pos + blen * 4], &mut bias);
+            pos += blen * 4;
+            layers.push(CompressedLayer {
+                name: lname,
+                dims,
+                grid: QuantGrid { delta, max_level },
+                s_param,
+                cfg: CodecConfig {
+                    n_abs_flags,
+                    remainder,
+                    sig_ctx_neighbors: flags & FLAG_SIG_NEIGHBORS != 0,
+                },
+                n_weights,
+                payload,
+                bias,
+            });
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in container");
+        }
+        Ok(Self { name, layers })
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    write_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = read_vi(buf, pos)? as usize;
+    if *pos + len > buf.len() {
+        bail!("truncated string");
+    }
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])?.to_string();
+    *pos += len;
+    Ok(s)
+}
+
+fn read_vi(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let (v, n) =
+        read_varint(&buf[*pos..]).ok_or_else(|| anyhow!("truncated varint"))?;
+    *pos += n;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::encode_levels;
+    use crate::util::ptest;
+
+    fn sample_model() -> CompressedModel {
+        let cfg = CodecConfig::default();
+        let levels = vec![0, 1, -2, 0, 0, 7, 0, -1];
+        CompressedModel {
+            name: "tiny".into(),
+            layers: vec![CompressedLayer {
+                name: "fc1".into(),
+                dims: vec![2, 4],
+                grid: QuantGrid { delta: 0.125, max_level: 7 },
+                s_param: 33,
+                cfg,
+                n_weights: levels.len(),
+                payload: encode_levels(&levels, cfg),
+                bias: vec![0.5, -0.25],
+            }],
+        }
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let m = sample_model();
+        let bytes = m.serialize();
+        let m2 = CompressedModel::deserialize(&bytes).unwrap();
+        assert_eq!(m2.name, "tiny");
+        assert_eq!(m2.layers.len(), 1);
+        let l = &m2.layers[0];
+        assert_eq!(l.dims, vec![2, 4]);
+        assert_eq!(l.s_param, 33);
+        assert_eq!(l.grid, m.layers[0].grid);
+        assert_eq!(l.decode_levels(), vec![0, 1, -2, 0, 0, 7, 0, -1]);
+        assert_eq!(l.bias, vec![0.5, -0.25]);
+    }
+
+    #[test]
+    fn weights_reconstruct() {
+        let m = sample_model();
+        let w = m.layers[0].decode_weights();
+        assert_eq!(w[1], 0.125);
+        assert_eq!(w[2], -0.25);
+        assert_eq!(w[5], 0.875);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = sample_model().serialize();
+        assert!(CompressedModel::deserialize(&bytes[1..]).is_err());
+        assert!(CompressedModel::deserialize(&bytes[..bytes.len() - 3]).is_err());
+        let mut bad = bytes.clone();
+        bad[4] = 99; // version
+        assert!(CompressedModel::deserialize(&bad).is_err());
+    }
+
+    #[test]
+    fn property_container_roundtrip() {
+        ptest::check(
+            ptest::Config { cases: 48, max_size: 800, ..Default::default() },
+            "container-roundtrip",
+            |g| {
+                let n_layers = g.usize_in(0, 4);
+                let mut layers = Vec::new();
+                for li in 0..n_layers {
+                    let levels = g.levels();
+                    let max_abs =
+                        levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(0);
+                    let cfg = CodecConfig {
+                        n_abs_flags: 1 + g.usize_in(0, 14) as u32,
+                        remainder: RemainderMode::ExpGolomb(g.usize_in(0, 2) as u32),
+                        sig_ctx_neighbors: g.bool(),
+                    };
+                    layers.push(CompressedLayer {
+                        name: format!("l{li}"),
+                        dims: vec![levels.len().max(1)],
+                        grid: QuantGrid {
+                            delta: 0.01 + g.rng.next_f32(),
+                            max_level: max_abs as i32,
+                        },
+                        s_param: g.usize_in(0, 256) as u32,
+                        cfg,
+                        n_weights: levels.len(),
+                        payload: encode_levels(&levels, cfg),
+                        bias: (0..g.usize_in(0, 16)).map(|_| g.f32_normal(1.0)).collect(),
+                    });
+                }
+                let m = CompressedModel { name: "p".into(), layers };
+                let bytes = m.serialize();
+                let m2 = CompressedModel::deserialize(&bytes)
+                    .map_err(|e| format!("deser: {e}"))?;
+                for (a, b) in m.layers.iter().zip(&m2.layers) {
+                    if a.decode_levels() != b.decode_levels() {
+                        return Err("level mismatch".into());
+                    }
+                    if a.bias != b.bias {
+                        return Err("bias mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Parsing of the artifact manifests written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Fc,
+    Conv,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fc" => Ok(LayerKind::Fc),
+            "conv" => Ok(LayerKind::Conv),
+            other => Err(anyhow!("unknown layer kind {other}")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: LayerKind,
+    pub shape: Vec<usize>,
+    pub activation: Option<String>,
+    pub stride: usize,
+    pub padding: usize,
+    pub nonzero: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub task: String,
+    pub input_shape: Vec<usize>,
+    pub eval_batch: usize,
+    pub n_classes: usize,
+    pub param_count: usize,
+    pub density: f64,
+    pub dense_metric: f64,
+    pub sparse_metric: f64,
+    pub layers: Vec<LayerInfo>,
+    /// HLO path relative to the artifacts root.
+    pub hlo: String,
+    pub arg_order: Vec<String>,
+}
+
+impl ModelManifest {
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = Json::parse(src).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let str_field = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing {k}"))?
+                .to_string())
+        };
+        let num_field = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let mut layers = Vec::new();
+        for l in j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing layers"))?
+        {
+            layers.push(LayerInfo {
+                name: l
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("layer name"))?
+                    .to_string(),
+                kind: LayerKind::parse(
+                    l.get("kind").and_then(Json::as_str).unwrap_or("fc"),
+                )?,
+                shape: l
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("layer shape"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                activation: l
+                    .get("activation")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                stride: l.get("stride").and_then(Json::as_usize).unwrap_or(1),
+                padding: l.get("padding").and_then(Json::as_usize).unwrap_or(0),
+                nonzero: l.get("nonzero").and_then(Json::as_usize).unwrap_or(0),
+                size: l.get("size").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(Self {
+            name: str_field("name")?,
+            task: str_field("task")?,
+            input_shape: j
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("input_shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            eval_batch: num_field("eval_batch")? as usize,
+            n_classes: num_field("n_classes").unwrap_or(0.0) as usize,
+            param_count: num_field("param_count").unwrap_or(0.0) as usize,
+            density: num_field("density").unwrap_or(0.0),
+            dense_metric: num_field("dense_metric").unwrap_or(0.0),
+            sparse_metric: num_field("sparse_metric").unwrap_or(0.0),
+            layers,
+            hlo: str_field("hlo")?,
+            arg_order: j
+                .get("arg_order")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let src = r#"{"name":"m","task":"classify","input_shape":[1,28,28],
+            "eval_batch":256,"n_classes":10,"param_count":100,"density":0.1,
+            "dense_metric":0.99,"sparse_metric":0.98,
+            "layers":[{"name":"conv1","kind":"conv","shape":[20,1,5,5],
+                       "activation":"relu","stride":1,"padding":0,"post":[],
+                       "nonzero":50,"size":500}],
+            "hlo":"hlo/m.fwd.hlo.txt","arg_order":["conv1.w","conv1.b","eval_x"]}"#;
+        let m = ModelManifest::parse(src).unwrap();
+        assert_eq!(m.layers.len(), 1);
+        assert_eq!(m.layers[0].kind, LayerKind::Conv);
+        assert_eq!(m.layers[0].shape, vec![20, 1, 5, 5]);
+        assert_eq!(m.eval_batch, 256);
+        assert_eq!(m.arg_order.len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let src = r#"{"name":"m","task":"c","input_shape":[1],"eval_batch":1,
+            "n_classes":2,"param_count":1,"density":1,"dense_metric":1,
+            "sparse_metric":1,"layers":[{"name":"x","kind":"wat","shape":[1]}],
+            "hlo":"h","arg_order":[]}"#;
+        assert!(ModelManifest::parse(src).is_err());
+    }
+}

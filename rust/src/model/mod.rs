@@ -1,0 +1,101 @@
+//! Model container: artifact manifests (JSON, written by
+//! `python/compile/aot.py`), in-memory models, and the compressed `DCBC`
+//! bitstream container.
+
+pub mod container;
+pub mod manifest;
+
+pub use container::{CompressedLayer, CompressedModel};
+pub use manifest::{LayerInfo, LayerKind, ModelManifest};
+
+use crate::tensor::{npy, Tensor};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A loaded model: weights + biases + per-weight posterior sigmas.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub manifest: ModelManifest,
+    /// Per layer, in manifest order.
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Tensor>,
+    pub sigmas: Vec<Tensor>,
+}
+
+impl Model {
+    /// Load `artifacts/models/<name>/` as written by aot.py.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_src = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let manifest = ModelManifest::parse(&manifest_src)?;
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        let mut sigmas = Vec::new();
+        for layer in &manifest.layers {
+            let (ws, wd) = npy::read_npy_f32(&dir.join(format!("{}.w.npy", layer.name)))?;
+            let (bs, bd) = npy::read_npy_f32(&dir.join(format!("{}.b.npy", layer.name)))?;
+            let (ss, sd) =
+                npy::read_npy_f32(&dir.join(format!("{}.sigma.npy", layer.name)))?;
+            weights.push(Tensor::new(ws, wd));
+            biases.push(Tensor::new(bs, bd));
+            sigmas.push(Tensor::new(ss, sd));
+        }
+        Ok(Self { manifest, weights, biases, sigmas })
+    }
+
+    /// Total number of weight parameters (excluding biases).
+    pub fn weight_count(&self) -> usize {
+        self.weights.iter().map(|t| t.len()).sum()
+    }
+
+    /// Original (uncompressed f32) size in bytes, weights + biases — the
+    /// "Org. size" column of Table 1.
+    pub fn raw_bytes(&self) -> usize {
+        self.weights.iter().map(|t| t.raw_bytes()).sum::<usize>()
+            + self.biases.iter().map(|t| t.raw_bytes()).sum::<usize>()
+    }
+
+    /// Overall weight density |w≠0|/|w| — the "Spars." column.
+    pub fn density(&self) -> f64 {
+        let nz: usize = self
+            .weights
+            .iter()
+            .map(|t| t.data.iter().filter(|&&v| v != 0.0).count())
+            .sum();
+        nz as f64 / self.weight_count().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip_synthetic_dir() {
+        let dir = std::env::temp_dir().join("dcbc_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "name": "tiny", "task": "classify", "input_shape": [4],
+            "eval_batch": 2, "n_classes": 2, "param_count": 10,
+            "density": 0.5, "dense_metric": 1.0, "sparse_metric": 1.0,
+            "sparsifier": "vd",
+            "layers": [{"name": "fc1", "kind": "fc", "shape": [4, 2],
+                        "activation": null, "stride": 1, "padding": 0,
+                        "post": [], "nonzero": 4, "size": 8}],
+            "hlo": "hlo/tiny.fwd.hlo.txt",
+            "arg_order": ["fc1.w", "fc1.b", "eval_x"]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        npy::write_npy_f32(&dir.join("fc1.w.npy"), &[4, 2],
+                           &[0.0, 1.0, -1.0, 0.0, 0.5, 0.0, 0.0, 2.0]).unwrap();
+        npy::write_npy_f32(&dir.join("fc1.b.npy"), &[2], &[0.1, -0.1]).unwrap();
+        npy::write_npy_f32(&dir.join("fc1.sigma.npy"), &[4, 2], &[0.1; 8]).unwrap();
+
+        let m = Model::load(&dir).unwrap();
+        assert_eq!(m.manifest.name, "tiny");
+        assert_eq!(m.weight_count(), 8);
+        assert!((m.density() - 0.5).abs() < 1e-12);
+        assert_eq!(m.raw_bytes(), 8 * 4 + 2 * 4);
+        assert_eq!(m.manifest.layers[0].kind, LayerKind::Fc);
+    }
+}

@@ -1,0 +1,127 @@
+//! The equidistant quantization grid of the paper's eq. 2:
+//!
+//! ```text
+//! q_k = Δ · I_k,   Δ = 2|w_max| / (2|w_max|/σ_min + S),   S, I_k ∈ Z
+//! ```
+//!
+//! `S ≥ 0` controls coarseness: S = 0 gives Δ = σ_min (grid as fine as
+//! the most sensitive weight warrants); larger S shrinks Δ, refining the
+//! grid. The paper probes S ∈ {0, …, 256} per model and keeps the best.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantGrid {
+    /// Grid step Δ.
+    pub delta: f32,
+    /// Largest level index needed to cover max|w| (levels are clamped to
+    /// [-max_level, max_level]).
+    pub max_level: i32,
+}
+
+impl QuantGrid {
+    /// Build the grid from tensor statistics per eq. 2.
+    ///
+    /// * `w_max`     — largest |w| in the tensor.
+    /// * `sigma_min` — smallest posterior std among the weights (clamped
+    ///   away from 0; an all-frozen tensor would otherwise degenerate).
+    /// * `s`         — the coarseness hyper-parameter.
+    pub fn from_stats(w_max: f32, sigma_min: f32, s: u32) -> Self {
+        let w_max = w_max.abs();
+        if w_max == 0.0 {
+            return Self { delta: 1.0, max_level: 0 };
+        }
+        let sigma_min = sigma_min.max(1e-12);
+        let denom = 2.0 * w_max / sigma_min + s as f32;
+        let delta = 2.0 * w_max / denom;
+        let max_level = (w_max / delta).round() as i32;
+        Self { delta, max_level }
+    }
+
+    /// Convenience: scan a weight slice + sigma slice.
+    pub fn from_tensor(weights: &[f32], sigmas: &[f32], s: u32) -> Self {
+        let w_max = weights.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+        // The paper's σ_min is over the network's weights; zero-valued
+        // (pruned) entries keep their posterior σ so they participate too.
+        let sigma_min = sigmas
+            .iter()
+            .copied()
+            .filter(|s| *s > 0.0)
+            .fold(f32::INFINITY, f32::min);
+        let sigma_min = if sigma_min.is_finite() { sigma_min } else { 1.0 };
+        Self::from_stats(w_max, sigma_min, s)
+    }
+
+    /// Reconstruction value of a level.
+    #[inline]
+    pub fn value(&self, level: i32) -> f32 {
+        self.delta * level as f32
+    }
+
+    /// Closest level to `w` (clamped to the representable range).
+    #[inline]
+    pub fn nearest_level(&self, w: f32) -> i32 {
+        let l = (w / self.delta).round() as i32;
+        l.clamp(-self.max_level, self.max_level)
+    }
+
+    /// Dequantize a level slice into weights.
+    pub fn dequantize(&self, levels: &[i32]) -> Vec<f32> {
+        levels.iter().map(|&l| self.value(l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_limits() {
+        // S = 0  ⇒  Δ = σ_min
+        let g = QuantGrid::from_stats(1.0, 0.01, 0);
+        assert!((g.delta - 0.01).abs() < 1e-9);
+        // S → large shrinks Δ monotonically
+        let mut prev = g.delta;
+        for s in [1u32, 4, 16, 64, 256] {
+            let d = QuantGrid::from_stats(1.0, 0.01, s).delta;
+            assert!(d < prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn grid_covers_wmax() {
+        for s in [0u32, 3, 77, 256] {
+            let g = QuantGrid::from_stats(2.5, 0.1, s);
+            // the nearest level of ±w_max must reconstruct within Δ/2
+            let rec = g.value(g.nearest_level(2.5));
+            assert!((rec - 2.5).abs() <= g.delta * 0.5 + 1e-6, "s={s}");
+        }
+    }
+
+    #[test]
+    fn delta_within_sigma_min_for_nonneg_s() {
+        // the paper: "quantisation points lie within the range of the
+        // standard deviation of each weight" for S >= 0, i.e. Δ <= σ_min.
+        for s in 0..50u32 {
+            let g = QuantGrid::from_stats(3.0, 0.05, s);
+            assert!(g.delta <= 0.05 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn degenerate_tensors() {
+        let g = QuantGrid::from_stats(0.0, 0.1, 10);
+        assert_eq!(g.max_level, 0);
+        assert_eq!(g.nearest_level(0.0), 0);
+        let g = QuantGrid::from_tensor(&[0.0, 0.0], &[0.0, 0.0], 5);
+        assert!(g.delta > 0.0);
+    }
+
+    #[test]
+    fn from_tensor_matches_from_stats() {
+        let w = [0.3f32, -1.2, 0.0, 0.7];
+        let s = [0.2f32, 0.05, 0.4, 0.1];
+        let a = QuantGrid::from_tensor(&w, &s, 13);
+        let b = QuantGrid::from_stats(1.2, 0.05, 13);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,36 @@
+//! Quantization — the paper's §3.
+//!
+//! * [`QuantGrid`] — the equidistant grid of eq. 2, parameterized by the
+//!   coarseness hyper-parameter `S`.
+//! * [`RdQuantizer`] — the coupled weighted rate–distortion quantizer of
+//!   eq. 1: for every weight it queries the CABAC rate estimator under
+//!   the *live* context states, picks the cost-minimizing level, and
+//!   immediately encodes it (so the contexts adapt exactly as the
+//!   decoder will see them).
+//! * [`nearest`] — the decoupled nearest-neighbour baseline (what
+//!   "quantize then compress" pipelines do; used in the ablations).
+
+pub mod grid;
+pub mod rd;
+
+pub use grid::QuantGrid;
+pub use rd::{QuantResult, RdQuantizer, RdParams};
+
+/// Decoupled baseline: weighted nearest-neighbour quantization onto the
+/// grid (λ = 0 in eq. 1 — distortion only).
+pub fn nearest(weights: &[f32], grid: &QuantGrid) -> Vec<i32> {
+    weights.iter().map(|&w| grid.nearest_level(w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_maps_onto_grid() {
+        let grid = QuantGrid { delta: 0.5, max_level: 4 };
+        let w = [0.0, 0.24, 0.26, -1.1, 7.0, -7.0];
+        let lv = nearest(&w, &grid);
+        assert_eq!(lv, vec![0, 0, 1, -2, 4, -4]); // clamped at ±max_level
+    }
+}

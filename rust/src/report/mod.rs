@@ -1,0 +1,98 @@
+//! Table / CSV / human-readable output for the benches and examples.
+
+/// Format bytes with the units Table 1 uses.
+pub fn human_bytes(b: usize) -> String {
+    if b >= 10_000_000 {
+        format!("{:.2} MB", b as f64 / 1e6)
+    } else if b >= 10_000 {
+        format!("{:.1} KB", b as f64 / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// A fixed-column markdown-ish table writer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, w) in cells.iter().zip(widths) {
+                out.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &widths, &mut out);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// CSV writer (no quoting needs beyond commas in our data).
+pub fn to_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(17_000), "17.0 KB");
+        assert_eq!(human_bytes(553_430_000), "553.43 MB");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "ratio"]);
+        t.row(vec!["vgg16".into(), "1.57".into()]);
+        let s = t.render();
+        assert!(s.contains("| model | ratio |"));
+        assert!(s.contains("| vgg16 | 1.57  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

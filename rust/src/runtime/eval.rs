@@ -1,0 +1,166 @@
+//! Model-quality evaluation on decompressed weights, via the PJRT
+//! executables — the accuracy / PSNR columns of Table 1.
+
+use super::Executable;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    /// top-1 accuracy for classifiers, PSNR (dB) for autoencoders.
+    pub metric: f64,
+    pub n_samples: usize,
+    pub exec_time_s: f64,
+}
+
+/// Top-1 accuracy from a (batch, n_classes) logits tensor.
+pub fn accuracy_from_logits(logits: &Tensor, labels: &[i32]) -> f64 {
+    let [n, c] = logits.shape[..] else {
+        panic!("logits must be rank 2, got {:?}", logits.shape)
+    };
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let mut arg = 0usize;
+        for j in 1..c {
+            if row[j] > row[arg] {
+                arg = j;
+            }
+        }
+        if arg as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n.max(1) as f64
+}
+
+/// PSNR (dB) between a reconstruction and its target.
+pub fn psnr(recon: &Tensor, target: &Tensor) -> f64 {
+    assert_eq!(recon.shape, target.shape);
+    let mse: f64 = recon
+        .data
+        .iter()
+        .zip(&target.data)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / recon.data.len().max(1) as f64;
+    -10.0 * (mse + 1e-12).log10()
+}
+
+/// Cap on eval batches (env `DEEPCABAC_MAX_EVAL_BATCHES`) so tests can
+/// bound the cost of the conv models' interpret-mode forwards.
+fn max_batches() -> usize {
+    std::env::var("DEEPCABAC_MAX_EVAL_BATCHES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX)
+}
+
+/// Evaluate a classifier executable over an eval set, batching at
+/// `batch` (the HLO's baked batch size). `params` are the flat weight /
+/// bias tensors in manifest `arg_order`.
+pub fn eval_classifier(
+    exe: &Executable,
+    params: &[Tensor],
+    eval_x: &Tensor,
+    eval_y: &[i32],
+    batch: usize,
+) -> Result<EvalResult> {
+    let n = eval_x.shape[0];
+    if n % batch != 0 {
+        bail!("eval set size {n} not a multiple of batch {batch}");
+    }
+    let sample_elems: usize = eval_x.shape[1..].iter().product();
+    let timer = crate::util::Timer::new();
+    let mut correct_weighted = 0.0f64;
+    let n_batches = (n / batch).min(max_batches());
+    let n = n_batches * batch;
+    for b in 0..n_batches {
+        let lo = b * batch * sample_elems;
+        let hi = (b + 1) * batch * sample_elems;
+        let mut shape = eval_x.shape.clone();
+        shape[0] = batch;
+        let xb = Tensor::new(shape, eval_x.data[lo..hi].to_vec());
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.push(xb);
+        let out = exe.run_f32(&args)?;
+        let logits = &out[0];
+        correct_weighted +=
+            accuracy_from_logits(logits, &eval_y[b * batch..(b + 1) * batch])
+                * batch as f64;
+    }
+    Ok(EvalResult {
+        metric: correct_weighted / n as f64,
+        n_samples: n,
+        exec_time_s: timer.elapsed_s(),
+    })
+}
+
+/// Evaluate an autoencoder executable (PSNR against the inputs).
+pub fn eval_autoencoder(
+    exe: &Executable,
+    params: &[Tensor],
+    eval_x: &Tensor,
+    batch: usize,
+) -> Result<EvalResult> {
+    let n = eval_x.shape[0];
+    if n % batch != 0 {
+        bail!("eval set size {n} not a multiple of batch {batch}");
+    }
+    let sample_elems: usize = eval_x.shape[1..].iter().product();
+    let timer = crate::util::Timer::new();
+    let mut mse_sum = 0.0f64;
+    let n_batches = (n / batch).min(max_batches());
+    let n = n_batches * batch;
+    for b in 0..n_batches {
+        let lo = b * batch * sample_elems;
+        let hi = (b + 1) * batch * sample_elems;
+        let mut shape = eval_x.shape.clone();
+        shape[0] = batch;
+        let xb = Tensor::new(shape, eval_x.data[lo..hi].to_vec());
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.push(xb.clone());
+        let out = exe.run_f32(&args)?;
+        let recon = &out[0];
+        let mse: f64 = recon
+            .data
+            .iter()
+            .zip(&xb.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / recon.data.len() as f64;
+        mse_sum += mse;
+    }
+    let mse = mse_sum / (n / batch) as f64;
+    Ok(EvalResult {
+        metric: -10.0 * (mse + 1e-12).log10(),
+        n_samples: n,
+        exec_time_s: timer.elapsed_s(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = Tensor::new(vec![3, 2], vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        assert!((accuracy_from_logits(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psnr_of_identical_is_huge() {
+        let t = Tensor::new(vec![4], vec![0.1, 0.2, 0.3, 0.4]);
+        assert!(psnr(&t, &t) > 100.0);
+        let noisy = Tensor::new(vec![4], vec![0.2, 0.3, 0.4, 0.5]);
+        let p = psnr(&noisy, &t);
+        assert!((p - 20.0).abs() < 1e-6); // mse = 0.01 ⇒ 20 dB
+    }
+}

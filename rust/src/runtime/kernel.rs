@@ -1,0 +1,154 @@
+//! PJRT offload of the L1 `rd_quantize` Pallas kernel.
+//!
+//! `python/compile/aot.py` exports the blocked weighted-RD argmin kernel
+//! (paper eq. 1 with a frozen rate snapshot) as its own HLO artifact at a
+//! fixed block shape (N weights, K grid points). This wrapper feeds
+//! arbitrary-length tensors through it in N-sized blocks, padding the
+//! tail — proving the Rust coordinator can execute the L1 kernel itself,
+//! not just whole model forwards.
+//!
+//! The exact sequential coupling (contexts updated per weight) remains
+//! the Rust `RdQuantizer`; the kernel path is the batched approximation
+//! used for candidate pre-selection (see kernels/rd_quantize.py). At
+//! λ = 0 both are identical (pure weighted nearest-neighbour).
+
+use super::{Executable, Runtime};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub struct RdQuantizeKernel {
+    exe: Executable,
+    pub block_n: usize,
+    pub k: usize,
+}
+
+impl RdQuantizeKernel {
+    /// Load from the artifacts root (reads `kernels/rd_quantize.json`).
+    pub fn load(rt: &Runtime, artifacts: &Path) -> Result<Self> {
+        let meta_src = std::fs::read_to_string(artifacts.join("kernels/rd_quantize.json"))
+            .context("reading kernels/rd_quantize.json (run `make artifacts`)")?;
+        let meta = Json::parse(&meta_src).map_err(|e| anyhow!("kernel meta: {e}"))?;
+        let block_n = meta.get("n").and_then(Json::as_usize).context("meta n")?;
+        let k = meta.get("k").and_then(Json::as_usize).context("meta k")?;
+        let hlo = meta.get("hlo").and_then(Json::as_str).context("meta hlo")?;
+        let exe = rt.load_hlo_text(&artifacts.join(hlo))?;
+        Ok(Self { exe, block_n, k })
+    }
+
+    /// Blocked argmin_k  eta_i (w_i − grid_k)² + λ rate_k.
+    ///
+    /// `grid`/`rate` must have ≤ K entries; they are padded with a huge
+    /// rate so padding never wins. Returns one grid index per weight.
+    pub fn run(
+        &self,
+        weights: &[f32],
+        etas: &[f32],
+        grid: &[f32],
+        rate: &[f32],
+        lambda: f32,
+    ) -> Result<Vec<i32>> {
+        anyhow::ensure!(weights.len() == etas.len(), "w/eta length mismatch");
+        anyhow::ensure!(grid.len() == rate.len(), "grid/rate length mismatch");
+        anyhow::ensure!(
+            grid.len() <= self.k,
+            "grid has {} points; kernel block supports {}",
+            grid.len(),
+            self.k
+        );
+        // pad tables to K; padded entries get +inf-ish rate so the argmin
+        // never selects them
+        let mut g = grid.to_vec();
+        let mut r = rate.to_vec();
+        g.resize(self.k, f32::MAX / 4.0);
+        r.resize(self.k, f32::MAX / 4.0);
+        let g_t = Tensor::new(vec![self.k], g);
+        let r_t = Tensor::new(vec![self.k], r);
+        let lam_t = Tensor::new(vec![], vec![lambda]);
+
+        let mut out = Vec::with_capacity(weights.len());
+        for chunk_start in (0..weights.len()).step_by(self.block_n) {
+            let end = (chunk_start + self.block_n).min(weights.len());
+            let mut wb = weights[chunk_start..end].to_vec();
+            let mut eb = etas[chunk_start..end].to_vec();
+            let valid = wb.len();
+            wb.resize(self.block_n, 0.0);
+            eb.resize(self.block_n, 1.0);
+            let res = self.exe.run_f32_i32(&[
+                Tensor::new(vec![self.block_n], wb),
+                Tensor::new(vec![self.block_n], eb),
+                g_t.clone(),
+                r_t.clone(),
+                lam_t.clone(),
+            ])?;
+            out.extend_from_slice(&res[..valid]);
+        }
+        Ok(out)
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs, returning the first tuple element as i32
+    /// (the rd_quantize kernel's index output).
+    pub fn run_f32_i32(&self, inputs: &[Tensor]) -> Result<Vec<i32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                if t.shape.is_empty() {
+                    Ok(xla::Literal::scalar(t.data[0]))
+                } else {
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data).reshape(&dims)
+                }
+            })
+            .collect::<Result<_, xla::Error>>()?;
+        let mut result = self.exe_ref().execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let elems = result.decompose_tuple()?;
+        let first = elems.into_iter().next().context("empty result tuple")?;
+        Ok(first.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn kernel_matches_native_argmin() {
+        let artifacts = crate::app::artifacts_dir();
+        if !artifacts.join("kernels/rd_quantize.json").exists() {
+            eprintln!("skipped: no kernel artifact");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let kernel = RdQuantizeKernel::load(&rt, &artifacts).unwrap();
+
+        let mut rng = SplitMix64::new(5150);
+        let n = 6000; // exercises padding (not a multiple of 4096)
+        let w: Vec<f32> = (0..n).map(|_| rng.laplace(0.1) as f32).collect();
+        let eta: Vec<f32> = (0..n).map(|_| 0.5 + rng.next_f32()).collect();
+        let k = 65;
+        let grid: Vec<f32> = (0..k).map(|i| (i as f32 - 32.0) * 0.02).collect();
+        let rate: Vec<f32> = (0..k).map(|i| 1.0 + (i as f32 - 32.0).abs() * 0.1).collect();
+        let lambda = 0.003f32;
+
+        let got = kernel.run(&w, &eta, &grid, &rate, lambda).unwrap();
+        assert_eq!(got.len(), n);
+        // native reference argmin
+        for i in 0..n {
+            let mut best = (0usize, f32::INFINITY);
+            for (j, (&q, &r)) in grid.iter().zip(&rate).enumerate() {
+                let d = w[i] - q;
+                let cost = eta[i] * d * d + lambda * r;
+                if cost < best.1 {
+                    best = (j, cost);
+                }
+            }
+            assert_eq!(got[i] as usize, best.0, "weight {i}");
+        }
+    }
+}

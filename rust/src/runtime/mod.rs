@@ -1,0 +1,83 @@
+//! PJRT runtime — loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is how the Rust coordinator measures the accuracy/PSNR of a
+//! decompressed model without any Python on the path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod eval;
+pub mod kernel;
+
+pub use eval::{accuracy_from_logits, psnr, EvalResult};
+pub use kernel::RdQuantizeKernel;
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file into an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        Ok(Executable { exe })
+    }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub(crate) fn exe_ref(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+
+    /// Execute with f32 tensor inputs; returns the elements of the result
+    /// tuple as f32 tensors (aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                if dims.is_empty() {
+                    // rank-0 scalar
+                    Ok(xla::Literal::scalar(t.data[0]))
+                } else {
+                    xla::Literal::vec1(&t.data).reshape(&dims)
+                }
+            })
+            .collect::<Result<_, xla::Error>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let elems = result.decompose_tuple()?;
+        elems
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>()?;
+                Ok(Tensor::new(dims, data))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic substitutes for assets this environment cannot provide
+//! (DESIGN.md §5):
+//!
+//! * [`bigmodel`] — ImageNet-scale weight tensors (VGG16, ResNet50,
+//!   MobileNet-v1) at their **true layer shapes**, with spike-and-slab
+//!   statistics calibrated to the paper's reported sparsities. The
+//!   compression-ratio columns of Table 1 depend only on the statistics
+//!   of the quantized levels, which these match; accuracy columns for
+//!   these rows are N/A (no ImageNet).
+
+pub mod bigmodel;
+
+pub use bigmodel::{generate, Arch, SynthLayer, SynthModel};

@@ -1,0 +1,70 @@
+//! Row-major tensors + `.npy` interchange with the Python build path.
+
+pub mod npy;
+
+pub use npy::{read_npy_f32, read_npy_i32, write_npy_f32};
+
+/// A row-major f32 tensor (all weight tensors in this crate are f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Max |w| (0 for empty tensors).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Fraction of non-zero entries.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&v| v != 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Bytes of the raw f32 representation (the "original size" of Table 1).
+    pub fn raw_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, -2.0, 1.0, 0.0, 0.0, 0.5]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.abs_max(), 2.0);
+        assert!((t.density() - 0.5).abs() < 1e-12);
+        assert_eq!(t.raw_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Minimal `.npy` (NumPy v1.0/2.0 format) reader/writer.
+//!
+//! Supports C-contiguous little-endian `<f4`, `<i4` and `<i8` arrays —
+//! exactly what `python/compile/aot.py` emits. Hand-rolled because
+//! neither serde nor ndarray-npy are in the offline registry.
+
+use anyhow::{anyhow, bail, Context, Result};
+use byteorder::{ByteOrder, LittleEndian};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+struct Header {
+    descr: String,
+    fortran: bool,
+    shape: Vec<usize>,
+    data_off: usize,
+}
+
+fn parse_header(buf: &[u8]) -> Result<Header> {
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let (major, _minor) = (buf[6], buf[7]);
+    let (hlen, hstart) = match major {
+        1 => (LittleEndian::read_u16(&buf[8..10]) as usize, 10),
+        2 | 3 => {
+            if buf.len() < 12 {
+                bail!("truncated npy v2 preamble");
+            }
+            (LittleEndian::read_u32(&buf[8..12]) as usize, 12)
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    if hstart + hlen > buf.len() {
+        bail!("npy header length {hlen} exceeds file size");
+    }
+    let header = std::str::from_utf8(&buf[hstart..hstart + hlen])
+        .context("npy header not utf8")?;
+
+    // The header is a Python dict literal:
+    // {'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }
+    let descr = extract(header, "'descr':")
+        .ok_or_else(|| anyhow!("no descr"))?
+        .trim()
+        .trim_matches(|c| c == '\'' || c == '"')
+        .to_string();
+    let fortran = extract(header, "'fortran_order':")
+        .ok_or_else(|| anyhow!("no fortran_order"))?
+        .trim()
+        .starts_with("True");
+    let shape_src = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|rest| rest.split('(').nth(1))
+        .and_then(|rest| rest.split(')').next())
+        .ok_or_else(|| anyhow!("no shape"))?;
+    let shape: Vec<usize> = shape_src
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().context("bad dim"))
+        .collect::<Result<_>>()?;
+    Ok(Header { descr, fortran, shape, data_off: hstart + hlen })
+}
+
+/// Value after `key` up to the next comma that is not inside parens.
+fn extract<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let rest = header.split(key).nth(1)?;
+    let mut depth = 0;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth -= 1,
+            ',' if depth == 0 => return Some(&rest[..i]),
+            _ => {}
+        }
+    }
+    Some(rest)
+}
+
+/// Read an `<f4` npy file into (shape, data).
+pub fn read_npy_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let h = parse_header(&buf)?;
+    if h.fortran {
+        bail!("fortran-order npy unsupported");
+    }
+    let n: usize = h.shape.iter().product();
+    let body = &buf[h.data_off..];
+    let need = |bytes: usize| -> Result<usize> {
+        let want = n.checked_mul(bytes).context("npy shape overflow")?;
+        if body.len() < want {
+            bail!("truncated npy: want {want} bytes, have {}", body.len());
+        }
+        Ok(want)
+    };
+    match h.descr.as_str() {
+        "<f4" => {
+            let want = need(4)?;
+            let mut out = vec![0f32; n];
+            LittleEndian::read_f32_into(&body[..want], &mut out);
+            Ok((h.shape, out))
+        }
+        "<f8" => {
+            let want = need(8)?;
+            let mut tmp = vec![0f64; n];
+            LittleEndian::read_f64_into(&body[..want], &mut tmp);
+            Ok((h.shape, tmp.into_iter().map(|v| v as f32).collect()))
+        }
+        d => bail!("expected float npy, got descr {d}"),
+    }
+}
+
+/// Read an `<i4`/`<i8` npy file into (shape, data as i32).
+pub fn read_npy_i32(path: &Path) -> Result<(Vec<usize>, Vec<i32>)> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let h = parse_header(&buf)?;
+    if h.fortran {
+        bail!("fortran-order npy unsupported");
+    }
+    let n: usize = h.shape.iter().product();
+    let body = &buf[h.data_off..];
+    let need = |bytes: usize| -> Result<usize> {
+        let want = n.checked_mul(bytes).context("npy shape overflow")?;
+        if body.len() < want {
+            bail!("truncated npy: want {want} bytes, have {}", body.len());
+        }
+        Ok(want)
+    };
+    match h.descr.as_str() {
+        "<i4" => {
+            let want = need(4)?;
+            let mut out = vec![0i32; n];
+            LittleEndian::read_i32_into(&body[..want], &mut out);
+            Ok((h.shape, out))
+        }
+        "<i8" => {
+            let want = need(8)?;
+            let mut tmp = vec![0i64; n];
+            LittleEndian::read_i64_into(&body[..want], &mut tmp);
+            Ok((h.shape, tmp.into_iter().map(|v| v as i32).collect()))
+        }
+        d => bail!("expected int npy, got descr {d}"),
+    }
+}
+
+/// Write an `<f4` npy v1.0 file.
+pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad to 64-byte alignment of the full preamble, newline-terminated
+    let pre = 10;
+    let total = ((pre + header.len() + 1 + 63) / 64) * 64;
+    while pre + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut body = vec![0u8; data.len() * 4];
+    LittleEndian::write_f32_into(data, &mut body);
+    f.write_all(&body)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = std::env::temp_dir().join("dcbc_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.npy");
+        let shape = vec![3usize, 4];
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 2.0).collect();
+        write_npy_f32(&p, &shape, &data).unwrap();
+        let (s, d) = read_npy_f32(&p).unwrap();
+        assert_eq!(s, shape);
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn one_dim_and_scalar_shapes() {
+        let dir = std::env::temp_dir().join("dcbc_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("v.npy");
+        write_npy_f32(&p, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let (s, d) = read_npy_f32(&p).unwrap();
+        assert_eq!(s, vec![5]);
+        assert_eq!(d.len(), 5);
+        assert_eq!(d[4], 5.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("dcbc_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.npy");
+        std::fs::write(&p, b"not an npy at all").unwrap();
+        assert!(read_npy_f32(&p).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Tiny benchmark harness (criterion is not in the offline registry).
+//! Used by the `[[bench]] harness = false` targets: warmup + N timed
+//! iterations, reporting min/median/mean.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Time `f` (which must consume/produce enough to avoid DCE — return a
+/// value and we black-box it) for `iters` iterations after `warmup` runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Stats {
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: mean,
+        iters,
+    }
+}
+
+/// Opaque value sink (std::hint::black_box re-export for stable use).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One formatted result line, consistent across benches:
+/// `name  median  throughput`
+pub fn report_line(name: &str, stats: &Stats, items: f64, unit: &str) {
+    println!(
+        "{:<44} median {:>9.3} ms   {:>10.2} {unit}",
+        name,
+        stats.median_s * 1e3,
+        stats.throughput(items) / 1e6,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench(1, 16, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min_s <= s.median_s);
+        assert!(s.median_s > 0.0);
+        assert_eq!(s.iters, 16);
+    }
+}

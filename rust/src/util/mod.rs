@@ -1,0 +1,12 @@
+//! Small self-contained utilities: deterministic RNG, a minimal JSON
+//! parser/writer (serde is not available in the offline registry), a
+//! property-testing mini-harness, and timing helpers.
+
+pub mod bench;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod timer;
+
+pub use rng::SplitMix64;
+pub use timer::Timer;

@@ -1,0 +1,167 @@
+//! Mini property-testing harness (proptest is not in the offline
+//! registry). Deterministic: each case derives from a SplitMix64 stream
+//! seeded by the case index, so failures are reproducible by index. On
+//! failure the harness retries the case with geometrically shrunk size
+//! hints and reports the smallest failing seed it found.
+
+use super::rng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Upper bound passed to generators as the "size" hint.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xDEC0DE, max_size: 2048 }
+    }
+}
+
+/// A generation context handed to the property closure.
+pub struct Gen<'a> {
+    pub rng: &'a mut SplitMix64,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.rng.below((hi as i64 - lo as i64 + 1) as u64) as i32
+    }
+
+    pub fn f32_normal(&mut self, std: f32) -> f32 {
+        (self.rng.normal() as f32) * std
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of i32 levels with a controllable sparsity/spread — the shape
+    /// of data the weight codec sees.
+    pub fn levels(&mut self) -> Vec<i32> {
+        let n = self.usize_in(0, self.size);
+        let p_zero = self.rng.next_f64();
+        let spread = 1 + self.rng.below(200) as i32;
+        (0..n)
+            .map(|_| {
+                if self.rng.next_f64() < p_zero {
+                    0
+                } else {
+                    let mag = 1 + self.rng.below(spread as u64) as i32;
+                    if self.rng.next_u64() & 1 == 0 {
+                        mag
+                    } else {
+                        -mag
+                    }
+                }
+            })
+            .collect()
+    }
+
+    pub fn f32_vec(&mut self, std: f32) -> Vec<f32> {
+        let n = self.usize_in(0, self.size);
+        (0..n).map(|_| self.f32_normal(std)).collect()
+    }
+
+    pub fn bytes(&mut self) -> Vec<u8> {
+        let n = self.usize_in(0, self.size);
+        (0..n).map(|_| self.rng.next_u64() as u8).collect()
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases; panic with the failing
+/// case index + seed on the first failure (after shrinking the size).
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = SplitMix64::new(seed);
+        let mut g = Gen { rng: &mut rng, size: cfg.max_size };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry with smaller size hints to find a smaller repro.
+            let mut best = (cfg.max_size, msg.clone());
+            let mut size = cfg.max_size / 2;
+            while size >= 1 {
+                let mut rng = SplitMix64::new(seed);
+                let mut g = Gen { rng: &mut rng, size };
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, min size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check(Config::default(), name, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        quick("reverse-reverse", |g| {
+            let v = g.bytes();
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            if r == v {
+                Ok(())
+            } else {
+                Err("reverse^2 != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure() {
+        quick("always-fails", |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn levels_generator_hits_extremes() {
+        // Over many cases we should see both all-zero and dense vectors.
+        let mut saw_zeroish = false;
+        let mut saw_dense = false;
+        check(Config { cases: 64, ..Default::default() }, "gen-cover", |g| {
+            let v = g.levels();
+            if !v.is_empty() {
+                let nz = v.iter().filter(|&&x| x != 0).count();
+                let frac = nz as f64 / v.len() as f64;
+                if frac < 0.2 {
+                    saw_zeroish = true;
+                }
+                if frac > 0.8 {
+                    saw_dense = true;
+                }
+            }
+            Ok(())
+        });
+        assert!(saw_zeroish && saw_dense);
+    }
+}

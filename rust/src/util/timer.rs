@@ -1,0 +1,33 @@
+//! Wall-clock timing helper used by the bench harness and the pipeline
+//! metrics.
+
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}

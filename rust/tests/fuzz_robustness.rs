@@ -1,0 +1,149 @@
+//! Failure injection: every deserializer must reject malformed input
+//! with an `Err` — never panic, never loop, never allocate absurdly.
+//! Inputs are (a) random bytes, (b) random truncations of valid streams,
+//! (c) single-byte corruptions of valid streams.
+
+use deepcabac::baselines::{csr, fixed, huffman, static_arith};
+use deepcabac::codec::{encode_levels, CodecConfig};
+use deepcabac::model::{CompressedLayer, CompressedModel};
+use deepcabac::quant::QuantGrid;
+use deepcabac::util::SplitMix64;
+
+fn random_levels(rng: &mut SplitMix64, n: usize) -> Vec<i32> {
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.8 {
+                0
+            } else {
+                (1 + rng.below(40) as i32) * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+            }
+        })
+        .collect()
+}
+
+/// Run a decoder over hostile inputs; the closure returns Ok(()) if the
+/// decoder returned (Ok or Err) without panicking — panics propagate and
+/// fail the test naturally.
+fn hostile_inputs(valid: &[u8], rng: &mut SplitMix64, mut decode: impl FnMut(&[u8])) {
+    // random garbage of many sizes
+    for size in [0usize, 1, 2, 7, 64, 1024] {
+        let buf: Vec<u8> = (0..size).map(|_| rng.next_u64() as u8).collect();
+        decode(&buf);
+    }
+    // truncations
+    for cut in [0usize, 1, 2, valid.len() / 2, valid.len().saturating_sub(1)] {
+        decode(&valid[..cut.min(valid.len())]);
+    }
+    // bit flips
+    for _ in 0..64 {
+        if valid.is_empty() {
+            break;
+        }
+        let mut buf = valid.to_vec();
+        let pos = rng.below(buf.len() as u64) as usize;
+        buf[pos] ^= 1 << rng.below(8);
+        decode(&buf);
+    }
+}
+
+#[test]
+fn huffman_decoder_never_panics() {
+    let mut rng = SplitMix64::new(1);
+    let levels = random_levels(&mut rng, 2000);
+    let valid = huffman::encode(&levels).unwrap();
+    hostile_inputs(&valid, &mut rng, |buf| {
+        let _ = huffman::decode(buf);
+    });
+}
+
+#[test]
+fn fixed_decoder_never_panics() {
+    let mut rng = SplitMix64::new(2);
+    let levels = random_levels(&mut rng, 2000);
+    let valid = fixed::encode(&levels);
+    hostile_inputs(&valid, &mut rng, |buf| {
+        let _ = fixed::decode(buf);
+    });
+}
+
+#[test]
+fn csr_decoder_never_panics() {
+    let mut rng = SplitMix64::new(3);
+    let levels = random_levels(&mut rng, 2000);
+    for cfg in [
+        csr::CsrConfig::default(),
+        csr::CsrConfig { run_bits: 4, huffman: false },
+    ] {
+        let valid = csr::encode(&levels, cfg).unwrap();
+        hostile_inputs(&valid, &mut rng, |buf| {
+            let _ = csr::decode(buf);
+        });
+    }
+}
+
+#[test]
+fn static_arith_decoder_never_panics() {
+    let mut rng = SplitMix64::new(4);
+    let levels = random_levels(&mut rng, 2000);
+    let cfg = CodecConfig::default();
+    let valid = static_arith::encode(&levels, cfg).unwrap();
+    hostile_inputs(&valid, &mut rng, |buf| {
+        let _ = static_arith::decode(buf);
+    });
+}
+
+#[test]
+fn container_deserializer_never_panics() {
+    let mut rng = SplitMix64::new(5);
+    let cfg = CodecConfig::default();
+    let levels = random_levels(&mut rng, 500);
+    let model = CompressedModel {
+        name: "fuzz".into(),
+        layers: vec![CompressedLayer {
+            name: "l0".into(),
+            dims: vec![levels.len()],
+            grid: QuantGrid { delta: 0.1, max_level: 41 },
+            s_param: 7,
+            cfg,
+            n_weights: levels.len(),
+            payload: encode_levels(&levels, cfg),
+            bias: vec![1.0, 2.0],
+        }],
+    };
+    let valid = model.serialize();
+    hostile_inputs(&valid, &mut rng, |buf| {
+        let _ = CompressedModel::deserialize(buf);
+    });
+}
+
+#[test]
+fn cabac_decoder_tolerates_any_payload() {
+    // The CABAC decoder is length-driven: decoding N levels from garbage
+    // must terminate and give N levels (values arbitrary but in-range
+    // per the binarization), because past-the-end reads return 0s.
+    let mut rng = SplitMix64::new(6);
+    let cfg = CodecConfig::default();
+    for _ in 0..32 {
+        let n = 1 + rng.below(500) as usize;
+        let len = rng.below(200) as usize;
+        let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let levels = deepcabac::codec::decode_levels(&buf, n, cfg);
+        assert_eq!(levels.len(), n);
+    }
+}
+
+#[test]
+fn npy_reader_never_panics() {
+    let mut rng = SplitMix64::new(7);
+    let dir = std::env::temp_dir().join("dcbc_fuzz_npy");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fuzz.npy");
+    // valid file to corrupt
+    deepcabac::tensor::npy::write_npy_f32(&path, &[8], &[0.0; 8]).unwrap();
+    let valid = std::fs::read(&path).unwrap();
+    hostile_inputs(&valid, &mut rng, |buf| {
+        std::fs::write(&path, buf).unwrap();
+        let _ = deepcabac::tensor::npy::read_npy_f32(&path);
+        let _ = deepcabac::tensor::npy::read_npy_i32(&path);
+    });
+}

@@ -1,0 +1,165 @@
+//! Integration tests over the full compression pipeline, including the
+//! real artifacts when they exist (`make artifacts`). Artifact-dependent
+//! tests skip gracefully so `cargo test` passes on a fresh checkout.
+
+use deepcabac::app;
+use deepcabac::baselines::{csr, huffman, static_arith};
+use deepcabac::codec::{decode_levels, encode_levels, CodecConfig};
+use deepcabac::coordinator::{compress_model, sweep_s, CompressionSpec};
+use deepcabac::model::CompressedModel;
+use deepcabac::synth::{self, Arch};
+
+fn have_artifacts() -> bool {
+    app::artifacts_dir().join("models/lenet300/manifest.json").exists()
+}
+
+#[test]
+fn trained_model_roundtrips_bit_exact() {
+    if !have_artifacts() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    let model = app::load_model("lenet300").unwrap();
+    let spec = CompressionSpec::default();
+    let (compressed, report) = compress_model(&model, &spec, 1);
+    assert!(report.factor() > 10.0, "factor {}", report.factor());
+
+    // container serialize/deserialize must be byte-stable
+    let bytes = compressed.serialize();
+    let re = CompressedModel::deserialize(&bytes).unwrap();
+    assert_eq!(re.serialize(), bytes);
+
+    // every layer decodes to exactly n_weights levels within grid range
+    for layer in &re.layers {
+        let levels = layer.decode_levels();
+        assert_eq!(levels.len(), layer.n_weights);
+        for &l in &levels {
+            assert!(l.abs() <= layer.grid.max_level, "level {l} outside grid");
+        }
+    }
+}
+
+#[test]
+fn deepcabac_beats_scalar_huffman_on_all_trained_layers() {
+    // The paper's core claim: CABAC's adaptive contexts beat scalar
+    // Huffman on every pre-sparsified layer.
+    if !have_artifacts() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    for name in app::SMALL_MODELS {
+        let Ok(model) = app::load_model(name) else { continue };
+        let spec = CompressionSpec { lambda_scale: 0.0, ..Default::default() };
+        let (compressed, _) = compress_model(&model, &spec, 1);
+        for layer in &compressed.layers {
+            let levels = layer.decode_levels();
+            if levels.len() < 20_000 {
+                // on tiny layers the adaptive models are still warming up
+                // and header amortization favors scalar codes; the paper's
+                // claim is about real (large) weight tensors
+                continue;
+            }
+            let h = huffman::encode(&levels).unwrap().len();
+            assert!(
+                layer.payload.len() < h,
+                "{name}/{}: cabac {} >= huffman {h}",
+                layer.name,
+                layer.payload.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_beats_baselines_on_swept_synthetic_vgg_layer() {
+    // fc6 (~400k weights at 1/16 scale), compressed the way the real
+    // pipeline does it: S swept so the grid matches the tensor (at a
+    // fixed overly-fine grid, level magnitudes explode and the
+    // Deep-Compression CSR format can win — the sweep is part of the
+    // paper's method, §4).
+    let m = synth::generate(Arch::Vgg16, 16, 9);
+    let l = &m.layers[13];
+    assert_eq!(l.name, "fc6");
+    let mut best: Option<(usize, Vec<i32>)> = None;
+    for s in [0u32, 16, 64, 128, 256] {
+        let spec = deepcabac::coordinator::CompressionSpec {
+            s,
+            lambda_scale: 0.05,
+            ..Default::default()
+        };
+        let (layer, rep) = deepcabac::coordinator::compress_tensor(
+            &l.name, &l.dims, &l.weights, &l.sigmas, &[], &spec,
+        );
+        if best.as_ref().map(|(b, _)| rep.payload_bytes < *b).unwrap_or(true) {
+            best = Some((rep.payload_bytes, layer.decode_levels()));
+        }
+    }
+    let (cabac, levels) = best.unwrap();
+    let cfg = CodecConfig::default();
+    let stat = static_arith::encode(&levels, cfg).unwrap().len();
+    let csr_b = csr::encode(&levels, csr::CsrConfig::default()).unwrap().len();
+    let huf = huffman::encode(&levels).unwrap().len();
+    // Static two-pass coding can tie on stationary data (see
+    // `static_arith::tests::adaptive_beats_static_on_nonstationary_data`
+    // for the adaptive win); require within 3% here.
+    assert!(
+        (cabac as f64) <= stat as f64 * 1.03,
+        "cabac {cabac} vs static {stat}"
+    );
+    assert!(cabac < csr_b, "cabac {cabac} vs csr {csr_b}");
+    assert!(cabac < huf, "cabac {cabac} vs huffman {huf}");
+}
+
+#[test]
+fn sweep_improves_or_matches_default_s() {
+    if !have_artifacts() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    let model = app::load_model("lenet300").unwrap();
+    let spec = CompressionSpec::default();
+    let (_, fixed) = compress_model(&model, &spec, 1);
+    let sweep = sweep_s(&model, &[0, 32, 64, 128, 256], &spec, 1);
+    assert!(sweep.best.1.compressed_bytes <= fixed.compressed_bytes);
+}
+
+#[test]
+fn lambda_monotonicity_on_trained_weights() {
+    if !have_artifacts() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    let model = app::load_model("lenet300").unwrap();
+    let mut prev = usize::MAX;
+    for ls in [0.0f32, 0.05, 0.5, 2.0] {
+        let spec = CompressionSpec { lambda_scale: ls, s: 64, ..Default::default() };
+        let (_, report) = compress_model(&model, &spec, 1);
+        assert!(
+            report.compressed_bytes <= prev,
+            "λscale={ls}: {} > {prev}",
+            report.compressed_bytes
+        );
+        prev = report.compressed_bytes;
+    }
+}
+
+#[test]
+fn full_levels_decode_equals_multiple_configs() {
+    // cross-config determinism: decoding twice yields identical levels
+    let m = synth::generate(Arch::MobileNetV1, 16, 4);
+    let l = &m.layers[2];
+    let grid = deepcabac::quant::QuantGrid::from_tensor(&l.weights, &l.sigmas, 40);
+    let levels: Vec<i32> = l.weights.iter().map(|&w| grid.nearest_level(w)).collect();
+    for cfg in [
+        CodecConfig::default(),
+        CodecConfig { sig_ctx_neighbors: false, ..Default::default() },
+        CodecConfig::with_fixed_length_for(
+            levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(1),
+            6,
+        ),
+    ] {
+        let payload = encode_levels(&levels, cfg);
+        assert_eq!(decode_levels(&payload, levels.len(), cfg), levels);
+        assert_eq!(decode_levels(&payload, levels.len(), cfg), levels);
+    }
+}

@@ -1,0 +1,82 @@
+//! Integration tests over the PJRT runtime + accuracy evaluation — the
+//! L3 ↔ L2/L1 boundary. Skip gracefully without artifacts.
+
+use deepcabac::app;
+use deepcabac::coordinator::{compress_model, CompressionSpec};
+use deepcabac::runtime::Runtime;
+
+fn have_artifacts() -> bool {
+    app::artifacts_dir().join("models/lenet300/manifest.json").exists()
+}
+
+/// Bound eval cost: the conv models' interpret-mode forwards are slow on
+/// 1 CPU core; one 256-sample batch is plenty for an integration signal.
+fn bound_eval() {
+    std::env::set_var("DEEPCABAC_MAX_EVAL_BATCHES", "1");
+}
+
+#[test]
+fn pjrt_loads_and_reproduces_training_metric() {
+    if !have_artifacts() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    let model = app::load_model("lenet300").unwrap();
+    bound_eval();
+    let rt = Runtime::cpu().unwrap();
+    let res = app::evaluate_original(&rt, &model).unwrap();
+    // The Python trainer recorded sparse_metric on the same eval set; the
+    // rust-side PJRT evaluation of the same weights must agree closely
+    // (identical graph lowered once; only eval-set truncation differs).
+    let py = model.manifest.sparse_metric;
+    assert!(
+        (res.metric - py).abs() < 0.02,
+        "rust PJRT {} vs python {}",
+        res.metric,
+        py
+    );
+}
+
+#[test]
+fn compressed_accuracy_within_tolerance() {
+    if !have_artifacts() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    bound_eval();
+    let rt = Runtime::cpu().unwrap();
+    for name in ["lenet300", "lenet5"] {
+        let Ok(model) = app::load_model(name) else { continue };
+        let before = app::evaluate_original(&rt, &model).unwrap().metric;
+        let (compressed, report) =
+            compress_model(&model, &CompressionSpec::default(), 1);
+        let after = app::evaluate_compressed(&rt, &model, &compressed).unwrap().metric;
+        assert!(report.factor() > 5.0);
+        assert!(
+            before - after < 0.02,
+            "{name}: accuracy {before} -> {after} (factor x{:.1})",
+            report.factor()
+        );
+    }
+}
+
+#[test]
+fn autoencoder_psnr_path() {
+    if !have_artifacts() || !app::artifacts_dir().join("models/fcae").exists() {
+        eprintln!("skipped: no fcae artifacts");
+        return;
+    }
+    let model = app::load_model("fcae").unwrap();
+    bound_eval();
+    let rt = Runtime::cpu().unwrap();
+    let before = app::evaluate_original(&rt, &model).unwrap();
+    assert!(before.metric > 10.0, "PSNR {} suspiciously low", before.metric);
+    let (compressed, _) = compress_model(&model, &CompressionSpec::default(), 1);
+    let after = app::evaluate_compressed(&rt, &model, &compressed).unwrap();
+    assert!(
+        before.metric - after.metric < 3.0,
+        "PSNR dropped {} -> {}",
+        before.metric,
+        after.metric
+    );
+}
