@@ -1,19 +1,27 @@
 //! §Perf throughput benches — the L3 hot paths.
 //!
 //! Measures: CABAC encode/decode (Mbins/s and Mweights/s on realistic
-//! sparse tensors), the coupled RD quantizer (Mweights/s), and the
-//! baselines for context. These are the before/after numbers tracked in
-//! EXPERIMENTS.md §Perf.
+//! sparse tensors), the coupled RD quantizer (Mweights/s), chunked
+//! intra-layer parallel encode/decode, and the baselines for context.
+//! These are the before/after numbers tracked in EXPERIMENTS.md §Perf.
 //!
 //! ```bash
-//! cargo bench --offline --bench throughput
+//! cargo bench --offline --bench throughput             # human output
+//! cargo bench --offline --bench throughput -- --json   # + BENCH_throughput.json
+//! cargo bench --offline --bench throughput -- --n 100000   # CI smoke size
 //! ```
+//!
+//! `--json [PATH]` writes machine-readable results (name → Mweights/s,
+//! bits/weight) so the perf trajectory is tracked across PRs.
+
+use std::collections::BTreeMap;
 
 use deepcabac::baselines::{csr, fixed, huffman};
 use deepcabac::codec::{decode_levels, encode_levels, CodecConfig};
-use deepcabac::coordinator::{compress_tensor, CompressionSpec};
+use deepcabac::coordinator::{compress_tensor, compress_tensor_chunked, CompressionSpec};
 use deepcabac::quant::{QuantGrid, RdParams, RdQuantizer};
 use deepcabac::util::bench::{bench, black_box, report_line};
+use deepcabac::util::json::Json;
 use deepcabac::util::SplitMix64;
 
 fn sparse_tensor(n: usize, density: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -29,8 +37,69 @@ fn sparse_tensor(n: usize, density: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
     (w, s)
 }
 
+/// Collects (name, mweights_per_s, bits_per_weight) rows for --json.
+struct Results {
+    rows: Vec<(String, f64, Option<f64>)>,
+}
+
+impl Results {
+    fn push(&mut self, name: &str, mws: f64, bpw: Option<f64>) {
+        self.rows.push((name.to_string(), mws, bpw));
+    }
+
+    fn to_json(&self, n: usize) -> Json {
+        let mut results = BTreeMap::new();
+        for (name, mws, bpw) in &self.rows {
+            let mut entry = BTreeMap::new();
+            entry.insert("mweights_per_s".to_string(), Json::Num(*mws));
+            if let Some(b) = bpw {
+                entry.insert("bits_per_weight".to_string(), Json::Num(*b));
+            }
+            results.insert(name.clone(), Json::Obj(entry));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str("throughput".to_string()));
+        top.insert("n_weights".to_string(), Json::Num(n as f64));
+        top.insert("density".to_string(), Json::Num(0.10));
+        top.insert("results".to_string(), Json::Obj(results));
+        Json::Obj(top)
+    }
+}
+
 fn main() {
-    let n = 1_000_000;
+    // hand-rolled flags (clap is not in the offline registry):
+    //   --n N          fixture size in weights (default 1M)
+    //   --json [PATH]  write machine-readable results (default
+    //                  BENCH_throughput.json in the workspace root)
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut n = 1_000_000usize;
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--n" => {
+                n = argv.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or_else(|| {
+                    eprintln!("--n expects an integer");
+                    std::process::exit(2);
+                });
+                i += 2;
+            }
+            "--json" => {
+                let next = argv.get(i + 1).filter(|v| !v.starts_with("--"));
+                json_path = Some(
+                    next.cloned().unwrap_or_else(|| "BENCH_throughput.json".to_string()),
+                );
+                i += if next.is_some() { 2 } else { 1 };
+            }
+            "--bench" => i += 1, // passed through by `cargo bench`
+            other => {
+                eprintln!("ignoring unknown flag {other:?}");
+                i += 1;
+            }
+        }
+    }
+    let mut out = Results { rows: Vec::new() };
+
     println!("== throughput (n = {n} weights, 10% dense) ==\n");
     let (w, s) = sparse_tensor(n, 0.10, 3);
     let grid = QuantGrid::from_tensor(&w, &s, 64);
@@ -41,34 +110,40 @@ fn main() {
     let st = bench(1, 7, || encode_levels(black_box(&levels), cfg));
     report_line("cabac encode (levels→payload)", &st, n as f64, "Mweights/s");
     let payload = encode_levels(&levels, cfg);
+    let bpw = payload.len() as f64 * 8.0 / n as f64;
+    out.push("cabac_encode", st.throughput(n as f64) / 1e6, Some(bpw));
     println!(
         "{:<44}         {:>8} bytes  ({:.3} bits/weight)",
-        "  payload", payload.len(),
-        payload.len() as f64 * 8.0 / n as f64
+        "  payload", payload.len(), bpw
     );
     let st = bench(1, 7, || decode_levels(black_box(&payload), n, cfg));
     report_line("cabac decode (payload→levels)", &st, n as f64, "Mweights/s");
+    out.push("cabac_decode", st.throughput(n as f64) / 1e6, Some(bpw));
 
     let st = bench(1, 7, || huffman::encode(black_box(&levels)).unwrap());
     report_line("huffman encode (baseline)", &st, n as f64, "Mweights/s");
+    out.push("huffman_encode", st.throughput(n as f64) / 1e6, None);
     let hpayload = huffman::encode(&levels).unwrap();
     let st = bench(1, 7, || huffman::decode(black_box(&hpayload)).unwrap());
     report_line("huffman decode (baseline)", &st, n as f64, "Mweights/s");
+    out.push("huffman_decode", st.throughput(n as f64) / 1e6, None);
     let st = bench(1, 7, || csr::encode(black_box(&levels), csr::CsrConfig::default()).unwrap());
     report_line("csr encode (baseline)", &st, n as f64, "Mweights/s");
+    out.push("csr_encode", st.throughput(n as f64) / 1e6, None);
     let st = bench(1, 7, || fixed::encode(black_box(&levels)));
     report_line("fixed-length encode (floor)", &st, n as f64, "Mweights/s");
+    out.push("fixed_encode", st.throughput(n as f64) / 1e6, None);
 
     // ---- coupled RD quantization ---------------------------------------
     println!();
     let q = RdQuantizer::new(cfg);
+    let mean_eta = {
+        let etas: f64 = s.iter().map(|&x| 1.0 / (x as f64 * x as f64)).sum();
+        (etas / n as f64) as f32
+    };
+    let etas: Vec<f32> = s.iter().map(|&x| 1.0 / (x * x)).collect();
     for lambda_scale in [0.0f32, 0.05] {
-        let mean_eta = {
-            let etas: f64 = s.iter().map(|&x| 1.0 / (x as f64 * x as f64)).sum();
-            (etas / n as f64) as f32
-        };
         let lambda = lambda_scale * grid.delta * grid.delta * mean_eta;
-        let etas: Vec<f32> = s.iter().map(|&x| 1.0 / (x * x)).collect();
         let st = bench(1, 5, || {
             q.quantize_encode(
                 black_box(&w),
@@ -83,6 +158,11 @@ fn main() {
             n as f64,
             "Mweights/s",
         );
+        out.push(
+            &format!("rd_quantize_encode_lambda{lambda_scale}"),
+            st.throughput(n as f64) / 1e6,
+            None,
+        );
     }
 
     // ---- full pipeline (grid + η + RD + CABAC) -------------------------
@@ -92,6 +172,57 @@ fn main() {
         compress_tensor("bench", &[n], black_box(&w), black_box(&s), &[], &spec)
     });
     report_line("compress_tensor (full pipeline)", &st, n as f64, "Mweights/s");
+    out.push("compress_tensor", st.throughput(n as f64) / 1e6, None);
+
+    // ---- chunked intra-layer parallelism -------------------------------
+    println!();
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mono_payload = compress_tensor("bench", &[n], &w, &s, &[], &spec).0.payload;
+    // bench N=4 plus N=cores, skipping degenerate/duplicate counts
+    let mut chunk_counts = vec![4u32];
+    if workers > 1 && workers != 4 {
+        chunk_counts.push(workers as u32);
+    }
+    for chunks in chunk_counts {
+        let cspec = CompressionSpec { chunks, ..spec };
+        let st = bench(1, 5, || {
+            compress_tensor_chunked(
+                "bench",
+                &[n],
+                black_box(&w),
+                black_box(&s),
+                &[],
+                &cspec,
+                workers,
+            )
+        });
+        report_line(
+            &format!("chunked encode (N={chunks}, {workers} workers)"),
+            &st,
+            n as f64,
+            "Mweights/s",
+        );
+        let (layer, _) = compress_tensor_chunked("bench", &[n], &w, &s, &[], &cspec, workers);
+        let overhead =
+            (layer.payload.len() as f64 / mono_payload.len() as f64 - 1.0) * 100.0;
+        println!(
+            "{:<44}         {:>8} bytes  ({overhead:+.3}% vs monolithic)",
+            "  chunked payload", layer.payload.len()
+        );
+        out.push(
+            &format!("chunked_encode_n{chunks}"),
+            st.throughput(n as f64) / 1e6,
+            Some(layer.payload.len() as f64 * 8.0 / n as f64),
+        );
+        let st = bench(1, 5, || black_box(&layer).decode_levels());
+        report_line(
+            &format!("chunked decode (N={chunks}, parallel)"),
+            &st,
+            n as f64,
+            "Mweights/s",
+        );
+        out.push(&format!("chunked_decode_n{chunks}"), st.throughput(n as f64) / 1e6, None);
+    }
 
     // ---- bins/s view ----------------------------------------------------
     let bins_per_weight = {
@@ -104,4 +235,10 @@ fn main() {
         st.throughput(n as f64 * bins_per_weight) / 1e6,
         bins_per_weight
     );
+
+    if let Some(path) = json_path {
+        let doc = out.to_json(n);
+        std::fs::write(&path, doc.to_string_pretty() + "\n").expect("writing bench json");
+        println!("wrote {path}");
+    }
 }

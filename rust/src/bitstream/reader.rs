@@ -38,6 +38,17 @@ impl<'a> BitReader<'a> {
         v
     }
 
+    /// Read a whole byte from a byte-aligned position; past-the-end
+    /// reads yield 0. The byte-refill CABAC decoder's fast path.
+    #[inline]
+    pub fn next_byte_or_zero(&mut self) -> u8 {
+        debug_assert_eq!(self.pos & 7, 0, "byte reads require alignment");
+        let byte = self.pos >> 3;
+        let b = if byte < self.buf.len() { self.buf[byte] } else { 0 };
+        self.pos += 8;
+        b
+    }
+
     /// Current bit position.
     pub fn bit_pos(&self) -> usize {
         self.pos
@@ -74,5 +85,16 @@ mod tests {
         assert_eq!(r.get_bits(8), 0xff);
         assert_eq!(r.get_bits(8), 0);
         assert!(r.exhausted());
+    }
+
+    #[test]
+    fn byte_reads_match_bit_reads() {
+        let data = [0xDE, 0xAD, 0xBE];
+        let mut a = BitReader::new(&data);
+        let mut b = BitReader::new(&data);
+        for _ in 0..5 {
+            assert_eq!(a.next_byte_or_zero() as u32, b.get_bits(8));
+        }
+        assert_eq!(a.bit_pos(), b.bit_pos());
     }
 }

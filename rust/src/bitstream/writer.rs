@@ -95,6 +95,44 @@ impl BitWriter {
         }
     }
 
+    /// Append a whole byte. On a byte-aligned writer this is a plain
+    /// `Vec::push` — the fast path the byte-wise CABAC renormalization
+    /// relies on; unaligned writers fall back to the bit path.
+    #[inline]
+    pub fn put_byte(&mut self, byte: u8) {
+        if self.nbits == 0 {
+            self.buf.push(byte);
+        } else {
+            self.put_bits(byte as u32, 8);
+        }
+    }
+
+    /// Append `n` copies of `byte` (CABAC outstanding-0xFF resolution).
+    #[inline]
+    pub fn put_byte_run(&mut self, byte: u8, n: u32) {
+        if self.nbits == 0 {
+            let len = self.buf.len();
+            self.buf.resize(len + n as usize, byte);
+        } else {
+            for _ in 0..n {
+                self.put_bits(byte as u32, 8);
+            }
+        }
+    }
+
+    /// Propagate an arithmetic-coder carry into the last completed byte.
+    /// No-op on an empty buffer (the CABAC encoder's dropped sentinel bit
+    /// absorbs a leading carry). The caller must guarantee the last byte
+    /// is not 0xFF (the coder defers 0xFF bytes until carries resolve).
+    #[inline]
+    pub fn carry_into_last_byte(&mut self) {
+        debug_assert_eq!(self.nbits, 0, "carry requires a byte-aligned writer");
+        if let Some(last) = self.buf.last_mut() {
+            debug_assert_ne!(*last, 0xFF, "carry would overflow a deferred byte");
+            *last = last.wrapping_add(1);
+        }
+    }
+
     /// Borrow the already-complete bytes (staged bits not included).
     pub fn bytes(&self) -> &[u8] {
         &self.buf
@@ -154,6 +192,36 @@ mod tests {
         for i in 0..1000u32 {
             assert_eq!(r.get_bits(9), i & 0x1ff, "i={i}");
         }
+    }
+
+    #[test]
+    fn byte_api_matches_bit_api() {
+        let mut a = BitWriter::new();
+        let mut b = BitWriter::new();
+        a.put_byte(0xA5);
+        a.put_byte_run(0x3C, 3);
+        b.put_bits(0xA5, 8);
+        for _ in 0..3 {
+            b.put_bits(0x3C, 8);
+        }
+        assert_eq!(a.finish(), b.finish());
+        // unaligned fallback
+        let mut c = BitWriter::new();
+        c.put_bit(1);
+        c.put_byte(0xFF);
+        assert_eq!(c.finish(), vec![0b1111_1111, 0b1000_0000]);
+    }
+
+    #[test]
+    fn carry_increments_last_byte() {
+        let mut w = BitWriter::new();
+        w.put_byte(0x7F);
+        w.carry_into_last_byte();
+        assert_eq!(w.finish(), vec![0x80]);
+        // empty buffer: carry is absorbed (dropped sentinel)
+        let mut w = BitWriter::new();
+        w.carry_into_last_byte();
+        assert!(w.finish().is_empty());
     }
 
     #[test]

@@ -1,4 +1,9 @@
-//! CABAC decoder — mirror of the encoder's engine.
+//! CABAC decoder — mirror of the encoder's engine, with **byte-wise
+//! refill**: instead of pulling one bit per renormalization step through
+//! the bit reader, it keeps up to 56 prefetched stream bits in a 64-bit
+//! register and refills whole bytes, so a renorm shift is a single
+//! mask/shift. Reads past the end of the payload yield zero bits,
+//! matching the writer's zero padding.
 
 use super::{tables, ContextModel};
 use crate::bitstream::BitReader;
@@ -6,21 +11,44 @@ use crate::bitstream::BitReader;
 pub struct CabacDecoder<'a> {
     value: u32,
     range: u32,
+    /// Prefetched stream bits: the low `pbits` bits of `pre`, MSB first.
+    pre: u64,
+    pbits: u32,
     r: BitReader<'a>,
 }
 
 impl<'a> CabacDecoder<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        let mut r = BitReader::new(buf);
-        let value = r.get_bits(9);
-        Self { value, range: 510, r }
+        let mut d = Self { value: 0, range: 510, pre: 0, pbits: 0, r: BitReader::new(buf) };
+        d.value = d.take(9);
+        d
+    }
+
+    #[cold]
+    fn refill(&mut self) {
+        while self.pbits <= 48 {
+            self.pre = (self.pre << 8) | self.r.next_byte_or_zero() as u64;
+            self.pbits += 8;
+        }
+    }
+
+    /// Consume the next `n <= 9` stream bits, MSB first.
+    #[inline]
+    fn take(&mut self, n: u32) -> u32 {
+        if self.pbits < n {
+            self.refill();
+        }
+        self.pbits -= n;
+        let v = (self.pre >> self.pbits) as u32;
+        self.pre &= (1u64 << self.pbits) - 1;
+        v
     }
 
     /// Decode one bin in an adaptive context.
     #[inline]
     pub fn decode(&mut self, ctx: &mut ContextModel) -> u8 {
-        let q = (self.range >> 6) & 3;
-        let r_lps = tables::range_lps(ctx.state, q);
+        let cell = (self.range >> 6) & 3;
+        let r_lps = tables::range_lps(ctx.state, cell);
         self.range -= r_lps;
         let bin;
         if self.value < self.range {
@@ -35,9 +63,10 @@ impl<'a> CabacDecoder<'a> {
             }
             ctx.state = tables::next_state_lps(ctx.state);
         }
-        while self.range < 256 {
-            self.range <<= 1;
-            self.value = (self.value << 1) | self.r.get_bit();
+        if self.range < 256 {
+            let shift = self.range.leading_zeros() - 23;
+            self.range <<= shift;
+            self.value = (self.value << shift) | self.take(shift);
         }
         bin
     }
@@ -45,7 +74,7 @@ impl<'a> CabacDecoder<'a> {
     /// Decode one equiprobable (bypass) bin.
     #[inline]
     pub fn decode_bypass(&mut self) -> u8 {
-        self.value = (self.value << 1) | self.r.get_bit();
+        self.value = (self.value << 1) | self.take(1);
         if self.value >= self.range {
             self.value -= self.range;
             1
@@ -65,22 +94,71 @@ impl<'a> CabacDecoder<'a> {
     }
 
     /// Exp-Golomb order-k bypass decode.
+    ///
+    /// 64-bit accumulation mirrors the encoder's overflow fix; hostile
+    /// payloads (this decoder also feeds the fuzz tests) saturate at
+    /// `u32::MAX` instead of overflowing.
     pub fn decode_bypass_eg(&mut self, k: u32) -> u32 {
         let mut k = k;
-        let mut v = 0u32;
+        let mut v: u64 = 0;
         while self.decode_bypass() == 1 {
-            v += 1 << k;
+            if k < 63 {
+                v = v.saturating_add(1u64 << k);
+            }
             k += 1;
+            if k > 96 {
+                // corrupt/hostile stream: a valid u32 cannot need this
+                break;
+            }
         }
         while k > 0 {
             k -= 1;
-            v += (self.decode_bypass() as u32) << k;
+            if self.decode_bypass() != 0 && k < 63 {
+                v = v.saturating_add(1u64 << k);
+            }
         }
-        v
+        v.min(u32::MAX as u64) as u32
     }
 
-    /// Bits consumed from the underlying reader so far.
+    /// Bits consumed from the underlying reader so far (prefetched but
+    /// unconsumed bits excluded).
     pub fn bits_read(&self) -> usize {
-        self.r.bit_pos()
+        self.r.bit_pos() - self.pbits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::CabacEncoder;
+    use super::*;
+
+    #[test]
+    fn bits_read_excludes_prefetch() {
+        let mut enc = CabacEncoder::new();
+        let mut ctx = ContextModel::default();
+        for i in 0..100u32 {
+            enc.encode(&mut ctx, (i & 1) as u8);
+        }
+        let bytes = enc.finish();
+        let mut dec = CabacDecoder::new(&bytes);
+        assert_eq!(dec.bits_read(), 9); // the 9-bit init, like the old engine
+        let mut ctx = ContextModel::default();
+        for i in 0..100u32 {
+            assert_eq!(dec.decode(&mut ctx), (i & 1) as u8);
+        }
+        assert!(dec.bits_read() <= bytes.len() * 8);
+    }
+
+    #[test]
+    fn hostile_eg_does_not_overflow() {
+        // all-ones payload drives the EG prefix as long as possible
+        let ones = vec![0xFFu8; 64];
+        let mut dec = CabacDecoder::new(&ones);
+        let v = dec.decode_bypass_eg(0);
+        assert!(v >= 1); // saturates rather than panicking
+        // all-zero payload terminates immediately
+        let zeros = vec![0u8; 8];
+        let mut dec = CabacDecoder::new(&zeros);
+        assert_eq!(dec.decode_bypass_eg(0), 0);
     }
 }

@@ -1,14 +1,37 @@
-//! CABAC encoder — standard AVC-style arithmetic encoding engine with
-//! outstanding-bit bookkeeping (Marpe et al. 2003, fig. 4).
+//! CABAC encoder — AVC-style M-coder with **byte-wise renormalization**.
+//!
+//! The classic engine (Marpe et al. 2003, fig. 4) renormalizes one bit at
+//! a time, with a three-way branch and outstanding-bit bookkeeping per
+//! step. This implementation instead accumulates renormalized bits above
+//! the 10-bit arithmetic window of a 64-bit `low` register and emits
+//! whole bytes, x264-style: carries from later additions ripple through
+//! the pending bits by plain integer addition, 0xFF bytes are deferred
+//! until the next non-0xFF byte resolves whether a carry reaches them,
+//! and a carry past the last extracted byte increments it in place.
+//! Bypass bins batch up to 16 at once (`low = (low << n) + range·v`),
+//! which turns exp-Golomb suffixes into two shifts.
+//!
+//! The emitted bitstream is **bit-identical** to the bit-wise engine's
+//! (the first renorm bit is the dropped AVC sentinel, and the flush
+//! emits `[bit9, bit8, 1]` exactly like the spec flush) — verified by
+//! the `bytewise_matches_bitwise_reference` test against a faithful
+//! port of the old per-bit implementation.
 
 use super::{tables, ContextModel};
 use crate::bitstream::BitWriter;
 
 pub struct CabacEncoder {
-    low: u32,
+    /// Bits 0..9: the arithmetic window. Bits 10..10+q: pending output
+    /// (oldest = most significant), still mutable by carries.
+    low: u64,
     range: u32,
-    outstanding: u32,
-    first_bit: bool,
+    /// Pending bit count above the window, *including* the sentinel
+    /// until it has been dropped.
+    q: u32,
+    /// Deferred 0xFF bytes that may still absorb a carry.
+    ff: u32,
+    /// False until the first byte extraction has dropped the sentinel.
+    emitted_any: bool,
     w: BitWriter,
     bins_coded: u64,
 }
@@ -24,8 +47,9 @@ impl CabacEncoder {
         Self {
             low: 0,
             range: 510,
-            outstanding: 0,
-            first_bit: true,
+            q: 0,
+            ff: 0,
+            emitted_any: false,
             w: BitWriter::new(),
             bins_coded: 0,
         }
@@ -35,35 +59,38 @@ impl CabacEncoder {
         Self { w: BitWriter::with_capacity(bytes), ..Self::new() }
     }
 
+    /// Extract completed bytes from the pending region of `low`.
     #[inline]
-    fn put_bit(&mut self, b: u32) {
-        // The very first renorm output bit of the stream is a sentinel the
-        // decoder never consumes; we drop it like the AVC spec does.
-        if self.first_bit {
-            self.first_bit = false;
-        } else {
-            self.w.put_bit(b);
+    fn put_bytes(&mut self) {
+        let top = 10 + self.q;
+        if (self.low >> top) != 0 {
+            // Carry past the pending region: ripples through every
+            // deferred 0xFF (making them 0x00) into the last real byte
+            // (or the dropped sentinel when nothing has been emitted).
+            self.low &= (1u64 << top) - 1;
+            self.w.carry_into_last_byte();
+            self.w.put_byte_run(0x00, self.ff);
+            self.ff = 0;
         }
-        if self.outstanding > 0 {
-            self.w.put_run(1 - b, self.outstanding);
-            self.outstanding = 0;
-        }
-    }
-
-    #[inline]
-    fn renorm(&mut self) {
-        while self.range < 256 {
-            if self.low >= 512 {
-                self.low -= 512;
-                self.put_bit(1);
-            } else if self.low < 256 {
-                self.put_bit(0);
-            } else {
-                self.low -= 256;
-                self.outstanding += 1;
+        loop {
+            // The first extraction takes 9 bits and drops the top one
+            // (the AVC sentinel — never consumed by the decoder).
+            let take = if self.emitted_any { 8 } else { 9 };
+            if self.q < take {
+                break;
             }
-            self.low <<= 1;
-            self.range <<= 1;
+            let shift = 10 + self.q - take;
+            let out = ((self.low >> shift) & 0xFF) as u8;
+            self.low &= (1u64 << shift) - 1;
+            self.q -= take;
+            self.emitted_any = true;
+            if out == 0xFF {
+                self.ff += 1;
+            } else {
+                self.w.put_byte_run(0xFF, self.ff);
+                self.ff = 0;
+                self.w.put_byte(out);
+            }
         }
     }
 
@@ -71,11 +98,11 @@ impl CabacEncoder {
     #[inline]
     pub fn encode(&mut self, ctx: &mut ContextModel, bin: u8) {
         self.bins_coded += 1;
-        let q = (self.range >> 6) & 3;
-        let r_lps = tables::range_lps(ctx.state, q);
+        let cell = (self.range >> 6) & 3;
+        let r_lps = tables::range_lps(ctx.state, cell);
         self.range -= r_lps;
         if bin != ctx.mps {
-            self.low += self.range;
+            self.low += self.range as u64;
             self.range = r_lps;
             if ctx.state == 0 {
                 ctx.mps ^= 1;
@@ -84,55 +111,71 @@ impl CabacEncoder {
         } else {
             ctx.state = tables::next_state_mps(ctx.state);
         }
-        self.renorm();
+        if self.range < 256 {
+            // range ∈ [2, 255]: whole renorm in one shift instead of a
+            // branchy per-bit loop.
+            let shift = self.range.leading_zeros() - 23;
+            self.range <<= shift;
+            self.low <<= shift;
+            self.q += shift;
+            self.put_bytes();
+        }
+    }
+
+    /// Batch-encode `n <= 16` equiprobable bins from the low bits of `v`:
+    /// n sequential bypass steps collapse to `low·2ⁿ + range·v`.
+    #[inline]
+    fn bypass_chunk(&mut self, v: u32, n: u32) {
+        debug_assert!(n >= 1 && n <= 16 && (v >> n) == 0);
+        self.low = (self.low << n) + (self.range as u64) * v as u64;
+        self.q += n;
+        self.put_bytes();
     }
 
     /// Encode one equiprobable (bypass) bin.
     #[inline]
     pub fn encode_bypass(&mut self, bin: u8) {
         self.bins_coded += 1;
-        self.low <<= 1;
-        if bin != 0 {
-            self.low += self.range;
-        }
-        if self.low >= 1024 {
-            self.low -= 1024;
-            self.put_bit(1);
-        } else if self.low < 512 {
-            self.put_bit(0);
-        } else {
-            self.low -= 512;
-            self.outstanding += 1;
-        }
+        self.bypass_chunk((bin & 1) as u32, 1);
     }
 
     /// Encode `n` bypass bins from the low bits of `v`, MSB first.
     #[inline]
     pub fn encode_bypass_bits(&mut self, v: u32, n: u32) {
-        for i in (0..n).rev() {
-            self.encode_bypass(((v >> i) & 1) as u8);
+        debug_assert!(n <= 32);
+        self.bins_coded += n as u64;
+        let mut n = n;
+        while n > 16 {
+            n -= 16;
+            self.bypass_chunk((v >> n) & 0xFFFF, 16);
+        }
+        if n > 0 {
+            self.bypass_chunk(v & ((1u32 << n) - 1), n);
         }
     }
 
     /// Exp-Golomb order-k bypass code for v >= 0.
+    ///
+    /// All threshold math is 64-bit: for large `v` the running order
+    /// reaches 32, where the old `1u32 << k` overflowed (debug panic).
     pub fn encode_bypass_eg(&mut self, v: u32, k: u32) {
-        let mut v = v;
+        let mut v = v as u64;
         let mut k = k;
-        // unary prefix of (1) bits while v >= 2^k
-        loop {
-            if v >= (1 << k) {
-                self.encode_bypass(1);
-                v -= 1 << k;
-                k += 1;
-            } else {
-                self.encode_bypass(0);
-                while k > 0 {
-                    k -= 1;
-                    self.encode_bypass(((v >> k) & 1) as u8);
-                }
-                break;
-            }
+        // unary prefix of (1) bins while v >= 2^k
+        while k < 63 && v >= (1u64 << k) {
+            self.encode_bypass(1);
+            v -= 1u64 << k;
+            k += 1;
         }
+        self.encode_bypass(0);
+        // suffix: k bins of v, MSB first (bins above bit 31 are zero)
+        while k > 32 {
+            let take = (k - 32).min(16);
+            self.bins_coded += take as u64;
+            self.bypass_chunk(0, take);
+            k -= take;
+        }
+        self.encode_bypass_bits(v as u32, k);
     }
 
     /// Total bins routed through the engine (regular + bypass).
@@ -147,12 +190,25 @@ impl CabacEncoder {
 
     /// Flush the arithmetic state and return the byte-aligned payload.
     pub fn finish(mut self) -> Vec<u8> {
-        // Standard flush: 2 final decisions worth of low bits.
-        self.range = 2;
-        self.renorm();
-        self.put_bit((self.low >> 9) & 1);
-        let tail = ((self.low >> 7) & 3) | 1;
-        self.w.put_bits(tail, 2);
+        // Standard flush. Setting range = 2 makes the renorm exactly 7
+        // shifts; then the spec emits [bit9, bit8, 1] of the window.
+        self.low <<= 7;
+        self.q += 7;
+        self.put_bytes();
+        self.low = (self.low << 3) | (1 << 10);
+        self.q += 3;
+        self.put_bytes();
+        // Remaining deferred 0xFFs are final (no further additions), then
+        // the sub-byte tail, zero-padded by the writer.
+        self.w.put_byte_run(0xFF, self.ff);
+        self.ff = 0;
+        if self.q > 0 {
+            let take = if self.emitted_any { self.q } else { self.q - 1 };
+            if take > 0 {
+                let pend = ((self.low >> 10) & ((1u64 << take) - 1)) as u32;
+                self.w.put_bits(pend, take);
+            }
+        }
         self.w.finish()
     }
 }
@@ -209,7 +265,7 @@ mod tests {
     #[test]
     fn bypass_roundtrip() {
         let mut enc = CabacEncoder::new();
-        let vals = [(0u32, 1u32), (1, 1), (0b1011, 4), (0xffff, 16), (0, 8)];
+        let vals = [(0u32, 1u32), (1, 1), (0b1011, 4), (0xffff, 16), (0, 8), (0xdead_beef, 32)];
         for &(v, n) in &vals {
             enc.encode_bypass_bits(v, n);
         }
@@ -237,6 +293,30 @@ mod tests {
     }
 
     #[test]
+    fn exp_golomb_u32_max_regression() {
+        // The old per-bit EG hit `1u32 << 32` (debug panic) on large
+        // remainders; the u64 path must roundtrip the full u32 range.
+        let vals = [u32::MAX, u32::MAX - 1, (1 << 31) + 1, 1 << 31];
+        let mut enc = CabacEncoder::new();
+        for &v in &vals {
+            for k in [0, 1, 5] {
+                enc.encode_bypass_eg(v, k);
+            }
+        }
+        let bytes = enc.finish();
+        let mut dec = CabacDecoder::new(&bytes);
+        for &v in &vals {
+            for k in [0, 1, 5] {
+                assert_eq!(dec.decode_bypass_eg(k), v, "v={v} k={k}");
+            }
+        }
+        // eg_len agrees with the bins actually coded
+        let mut enc = CabacEncoder::new();
+        enc.encode_bypass_eg(u32::MAX, 0);
+        assert_eq!(enc.bins_coded(), crate::codec::estimator::eg_len(u32::MAX, 0) as u64);
+    }
+
+    #[test]
     fn mixed_regular_bypass_roundtrip() {
         let mut rng = crate::util::SplitMix64::new(17);
         let mut ctxs = vec![ContextModel::default(); 4];
@@ -259,6 +339,135 @@ mod tests {
         for (i, &(regular, bin, ctx)) in script.iter().enumerate() {
             let got = if regular { dec.decode(&mut ctxs[ctx]) } else { dec.decode_bypass() };
             assert_eq!(got, bin, "step {i}");
+        }
+    }
+
+    // ---- bit-exactness against the old per-bit engine ------------------
+
+    /// Faithful port of the pre-overhaul bit-wise encoder (renorm loop +
+    /// outstanding bits), kept as the reference for byte-exactness.
+    struct BitwiseRef {
+        low: u32,
+        range: u32,
+        outstanding: u32,
+        first_bit: bool,
+        w: BitWriter,
+    }
+
+    impl BitwiseRef {
+        fn new() -> Self {
+            Self { low: 0, range: 510, outstanding: 0, first_bit: true, w: BitWriter::new() }
+        }
+
+        fn put_bit(&mut self, b: u32) {
+            if self.first_bit {
+                self.first_bit = false;
+            } else {
+                self.w.put_bit(b);
+            }
+            if self.outstanding > 0 {
+                self.w.put_run(1 - b, self.outstanding);
+                self.outstanding = 0;
+            }
+        }
+
+        fn renorm(&mut self) {
+            while self.range < 256 {
+                if self.low >= 512 {
+                    self.low -= 512;
+                    self.put_bit(1);
+                } else if self.low < 256 {
+                    self.put_bit(0);
+                } else {
+                    self.low -= 256;
+                    self.outstanding += 1;
+                }
+                self.low <<= 1;
+                self.range <<= 1;
+            }
+        }
+
+        fn encode(&mut self, ctx: &mut ContextModel, bin: u8) {
+            let cell = (self.range >> 6) & 3;
+            let r_lps = tables::range_lps(ctx.state, cell);
+            self.range -= r_lps;
+            if bin != ctx.mps {
+                self.low += self.range;
+                self.range = r_lps;
+                if ctx.state == 0 {
+                    ctx.mps ^= 1;
+                }
+                ctx.state = tables::next_state_lps(ctx.state);
+            } else {
+                ctx.state = tables::next_state_mps(ctx.state);
+            }
+            self.renorm();
+        }
+
+        fn encode_bypass(&mut self, bin: u8) {
+            self.low <<= 1;
+            if bin != 0 {
+                self.low += self.range;
+            }
+            if self.low >= 1024 {
+                self.low -= 1024;
+                self.put_bit(1);
+            } else if self.low < 512 {
+                self.put_bit(0);
+            } else {
+                self.low -= 512;
+                self.outstanding += 1;
+            }
+        }
+
+        fn finish(mut self) -> Vec<u8> {
+            self.range = 2;
+            self.renorm();
+            self.put_bit((self.low >> 9) & 1);
+            let tail = ((self.low >> 7) & 3) | 1;
+            self.w.put_bits(tail, 2);
+            self.w.finish()
+        }
+    }
+
+    #[test]
+    fn bytewise_matches_bitwise_reference() {
+        // Randomized scripts of regular + bypass bins across styles that
+        // stress carries (bypass-1 runs -> 0xFF bytes) and MPS runs.
+        let mut rng = crate::util::SplitMix64::new(0xBEEF);
+        for case in 0..40 {
+            let n = (rng.below(4000) + 1) as usize;
+            let p_bypass = match case % 3 {
+                0 => 0.2,
+                1 => 0.7,
+                _ => 0.95, // heavy bypass: maximal carry pressure
+            };
+            let script: Vec<(bool, u8, usize)> = (0..n)
+                .map(|_| {
+                    let byp = rng.next_f64() < p_bypass;
+                    let bin = if case % 2 == 0 {
+                        (rng.next_u64() & 1) as u8
+                    } else {
+                        // skew towards 1 to generate long 0xFF runs
+                        (rng.next_f64() < 0.9) as u8
+                    };
+                    (byp, bin, rng.below(3) as usize)
+                })
+                .collect();
+            let mut a = CabacEncoder::new();
+            let mut b = BitwiseRef::new();
+            let mut ctx_a = vec![ContextModel::default(); 3];
+            let mut ctx_b = vec![ContextModel::default(); 3];
+            for &(byp, bin, c) in &script {
+                if byp {
+                    a.encode_bypass(bin);
+                    b.encode_bypass(bin);
+                } else {
+                    a.encode(&mut ctx_a[c], bin);
+                    b.encode(&mut ctx_b[c], bin);
+                }
+            }
+            assert_eq!(a.finish(), b.finish(), "case {case} (n={n})");
         }
     }
 }

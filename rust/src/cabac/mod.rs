@@ -12,9 +12,11 @@
 //! * [`ContextModel`] — (state, MPS) pair, init at p = 0.5 as the paper
 //!   prescribes for network weights.
 //! * [`CabacEncoder`] / [`CabacDecoder`] — regular + bypass coding with
-//!   the standard renormalization and flush.
-//! * [`tables::entropy_bits`] — fractional bit costs per state used by
-//!   the rate–distortion quantizer (paper eq. 1's `R_ik`).
+//!   **byte-wise** renormalization (whole-byte emit/refill with carry
+//!   propagation instead of per-bit loops; bit-identical to the
+//!   classic per-bit engine) and the standard flush.
+//! * [`tables::RateTable`] — precomputed fractional bit costs per state
+//!   used by the rate–distortion quantizer (paper eq. 1's `R_ik`).
 
 pub mod decoder;
 pub mod encoder;
@@ -61,14 +63,11 @@ impl ContextModel {
     }
 
     /// Fractional bit cost of coding `bin` in this context *without*
-    /// updating the state. This is the estimator behind eq. 1's R_ik.
+    /// updating the state. This is the estimator behind eq. 1's R_ik —
+    /// one load from the precomputed [`tables::RateTable`].
     #[inline]
     pub fn bits(&self, bin: u8) -> f32 {
-        if bin == self.mps {
-            tables::entropy_bits_mps(self.state)
-        } else {
-            tables::entropy_bits_lps(self.state)
-        }
+        tables::rate_table().bits(self.state, self.mps, bin)
     }
 
     /// State transition exactly as the arithmetic coder applies it.

@@ -27,6 +27,31 @@ struct Tables {
     bits_mps: [f32; NUM_STATES],
     bits_lps: [f32; NUM_STATES],
     p_lps: [f64; NUM_STATES],
+    rate: RateTable,
+}
+
+/// Precomputed fractional-bit costs for both bins in every probability
+/// state — the H.264/HEVC RDO "fracBits" table, built once. Entry
+/// `[state][0]` is the MPS cost, `[state][1]` the LPS cost, so a rate
+/// query is one indexed load instead of a log₂ evaluation. This is the
+/// table the RD quantizer's estimator (and its memoized tail cache in
+/// `codec::estimator`) is built on.
+pub struct RateTable {
+    pairs: [[f32; 2]; NUM_STATES],
+}
+
+impl RateTable {
+    /// Cost of coding `bin` in state `(state, mps)`.
+    #[inline]
+    pub fn bits(&self, state: u8, mps: u8, bin: u8) -> f32 {
+        self.pairs[state as usize][(bin != mps) as usize]
+    }
+
+    /// Raw (MPS, LPS) cost pair for a state.
+    #[inline]
+    pub fn pair(&self, state: u8) -> [f32; 2] {
+        self.pairs[state as usize]
+    }
 }
 
 static TABLES: Lazy<Tables> = Lazy::new(|| {
@@ -65,8 +90,27 @@ static TABLES: Lazy<Tables> = Lazy::new(|| {
         bits_mps[s] = (-(1.0 - p[s]).log2()) as f32;
     }
 
-    Tables { range_lps, next_mps, next_lps, bits_mps, bits_lps, p_lps: p }
+    let mut pairs = [[0.0f32; 2]; NUM_STATES];
+    for s in 0..NUM_STATES {
+        pairs[s] = [bits_mps[s], bits_lps[s]];
+    }
+
+    Tables {
+        range_lps,
+        next_mps,
+        next_lps,
+        bits_mps,
+        bits_lps,
+        p_lps: p,
+        rate: RateTable { pairs },
+    }
 });
+
+/// The process-wide [`RateTable`] (built with the coder tables).
+#[inline]
+pub fn rate_table() -> &'static RateTable {
+    &TABLES.rate
+}
 
 /// LPS subrange for (state, range-quantizer-cell).
 #[inline]
@@ -157,6 +201,18 @@ mod tests {
             let p = p_lps(s);
             assert!((entropy_bits_lps(s) as f64 - (-(p).log2())).abs() < 1e-5);
             assert!((entropy_bits_mps(s) as f64 - (-(1.0 - p).log2())).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rate_table_matches_entropy_bits() {
+        let rt = rate_table();
+        for s in 0..NUM_STATES as u8 {
+            assert_eq!(rt.bits(s, 0, 0), entropy_bits_mps(s));
+            assert_eq!(rt.bits(s, 0, 1), entropy_bits_lps(s));
+            assert_eq!(rt.bits(s, 1, 1), entropy_bits_mps(s));
+            assert_eq!(rt.bits(s, 1, 0), entropy_bits_lps(s));
+            assert_eq!(rt.pair(s), [entropy_bits_mps(s), entropy_bits_lps(s)]);
         }
     }
 }

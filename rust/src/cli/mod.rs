@@ -81,8 +81,11 @@ USAGE:
       Regenerate the paper's Table 1 (small trained models; --large adds
       the synthetic ImageNet-scale rows at 1/N channel scale).
   deepcabac compress --model NAME --out FILE [--s N | --sweep N]
-                     [--lambda-scale X] [--workers N]
+                     [--lambda-scale X] [--workers N] [--chunks N]
       Compress a trained model from artifacts/ into a .dcbc container.
+      --chunks N > 1 splits every tensor into N independently coded
+      streams (container v2) so one giant layer encodes and decodes in
+      parallel; N = 1 (default) keeps the original v1 bitstream.
   deepcabac decompress --in FILE --out-dir DIR
       Reconstruct weight tensors from a container into .npy files.
   deepcabac eval --model NAME [--compressed FILE]

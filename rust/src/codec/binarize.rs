@@ -1,18 +1,23 @@
 //! Binarization of quantized weight levels (paper §2.1 / figure 1) and
 //! the streaming encoder/decoder over a whole tensor.
 
+use super::estimator::RateCache;
 use super::{CodecConfig, ContextSet, RemainderMode};
 use crate::cabac::{CabacDecoder, CabacEncoder};
 
 /// Streaming level encoder: owns the CABAC engine + contexts and tracks
 /// the previous-two significance for context selection. The RD quantizer
-/// drives it weight by weight (choose level → `encode_level`).
+/// drives it weight by weight (estimate candidates → choose level →
+/// `encode_level`). It also owns the memoized rate cache the estimator
+/// uses, invalidated whenever a nonzero encode touches the gr/eg
+/// contexts.
 pub struct LevelEncoder {
     pub enc: CabacEncoder,
     pub ctxs: ContextSet,
     cfg: CodecConfig,
     prev_sig: (bool, bool), // (previous, one-before-previous)
     count: u64,
+    rate_cache: RateCache,
 }
 
 impl LevelEncoder {
@@ -23,6 +28,7 @@ impl LevelEncoder {
             cfg,
             prev_sig: (false, false),
             count: 0,
+            rate_cache: RateCache::new(),
         }
     }
 
@@ -39,6 +45,22 @@ impl LevelEncoder {
         self.prev_sig
     }
 
+    /// Fractional bits to code `level` at the current position — the
+    /// memoized equivalent of [`super::RateEstimator::level_bits`]
+    /// (bit-identical, but O(1) amortized per candidate: sig/sign costs
+    /// are single RateTable loads and the gr/remainder tail comes from
+    /// the per-magnitude cache).
+    #[inline]
+    pub fn estimate_level_bits(&mut self, level: i32) -> f32 {
+        let sig_idx = ContextSet::sig_ctx_index(&self.cfg, self.prev_sig);
+        if level == 0 {
+            return self.ctxs.sig[sig_idx].bits(0);
+        }
+        self.ctxs.sig[sig_idx].bits(1)
+            + self.ctxs.sign.bits((level < 0) as u8)
+            + self.rate_cache.tail_bits(&self.cfg, &self.ctxs, level.unsigned_abs())
+    }
+
     /// Encode one level and update all adaptive state.
     pub fn encode_level(&mut self, level: i32) {
         let cfg = self.cfg;
@@ -46,6 +68,9 @@ impl LevelEncoder {
         let sig = level != 0;
         self.enc.encode(&mut self.ctxs.sig[sig_idx], sig as u8);
         if sig {
+            // gr/eg-prefix/sign contexts are about to change: memoized
+            // tail costs are stale from here on.
+            self.rate_cache.invalidate();
             let negative = level < 0;
             self.enc.encode(&mut self.ctxs.sign, negative as u8);
             let abs = level.unsigned_abs();
@@ -66,23 +91,31 @@ impl LevelEncoder {
                 match cfg.remainder {
                     RemainderMode::FixedLength(w) => self.enc.encode_bypass_bits(rem, w),
                     RemainderMode::ExpGolomb(k) => {
-                        // context-coded EG prefix, bypass suffix (NNR-style)
-                        let mut v = rem;
+                        // context-coded EG prefix, bypass suffix (NNR-style);
+                        // 64-bit thresholds: k reaches 32 for huge remainders
+                        let mut v = rem as u64;
                         let mut k = k;
                         let mut p = 0usize;
                         loop {
-                            if v >= (1 << k) {
+                            if k < 63 && v >= (1u64 << k) {
                                 let ctx = &mut self.ctxs.eg_prefix
                                     [p.min(super::EG_PREFIX_CTXS - 1)];
                                 self.enc.encode(ctx, 1);
-                                v -= 1 << k;
+                                v -= 1u64 << k;
                                 k += 1;
                                 p += 1;
                             } else {
                                 let ctx = &mut self.ctxs.eg_prefix
                                     [p.min(super::EG_PREFIX_CTXS - 1)];
                                 self.enc.encode(ctx, 0);
-                                self.enc.encode_bypass_bits(v, k);
+                                // suffix: k bins of v, MSB first
+                                let mut k = k;
+                                while k > 32 {
+                                    let take = (k - 32).min(16);
+                                    self.enc.encode_bypass_bits(0, take);
+                                    k -= take;
+                                }
+                                self.enc.encode_bypass_bits(v as u32, k);
                                 break;
                             }
                         }
@@ -143,27 +176,47 @@ impl<'a> LevelDecoder<'a> {
                 let rem = match cfg.remainder {
                     RemainderMode::FixedLength(w) => self.dec.decode_bypass_bits(w),
                     RemainderMode::ExpGolomb(k) => {
-                        let mut v = 0u32;
+                        // 64-bit accumulation (encoder mirror); hostile
+                        // payloads saturate instead of overflowing
+                        let mut v = 0u64;
                         let mut k = k;
                         let mut p = 0usize;
                         loop {
                             let ctx = &mut self.ctxs.eg_prefix
                                 [p.min(super::EG_PREFIX_CTXS - 1)];
                             if self.dec.decode(ctx) == 1 {
-                                v += 1 << k;
+                                if k < 63 {
+                                    v = v.saturating_add(1u64 << k);
+                                }
                                 k += 1;
                                 p += 1;
+                                if k > 96 {
+                                    break; // corrupt stream guard
+                                }
                             } else {
-                                v += self.dec.decode_bypass_bits(k);
+                                // suffix: k bins, MSB first (encoder pads
+                                // bins above bit 31 with zeros)
+                                let mut k = k;
+                                while k > 32 {
+                                    let take = (k - 32).min(16);
+                                    self.dec.decode_bypass_bits(take);
+                                    k -= take;
+                                }
+                                v = v.saturating_add(self.dec.decode_bypass_bits(k) as u64);
                                 break;
                             }
                         }
-                        v
+                        v.min(u32::MAX as u64) as u32
                     }
                 };
-                abs = n + 1 + rem;
+                abs = (n + 1).saturating_add(rem);
             }
-            level = if negative { -(abs as i32) } else { abs as i32 };
+            // |i32::MIN| is representable only when negative
+            level = if negative {
+                (-(abs.min(1u32 << 31) as i64)) as i32
+            } else {
+                abs.min(i32::MAX as u32) as i32
+            };
         }
         self.prev_sig = (sig, self.prev_sig.0);
         level

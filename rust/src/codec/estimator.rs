@@ -6,6 +6,27 @@
 //! contexts adapt as the tensor is scanned, the same level has a
 //! different cost at different positions — exactly the coupling the
 //! paper exploits ("the bit-size R_ik now also depends on the index i").
+//!
+//! §Perf: the RD scan evaluates ~9–13 candidate levels per weight, and
+//! the naive estimator re-walks the whole binarization (up to `n`
+//! AbsGr bins plus the exp-Golomb prefix) for each. Two observations
+//! make that O(1) amortized:
+//!
+//! 1. All per-bin costs come from the precomputed
+//!    [`crate::cabac::tables::RateTable`] (H.264-style "fracBits"), so a
+//!    single bin is one load.
+//! 2. The cost of everything *after* the sign bin depends only on
+//!    `|level|` and the gr/eg-prefix context states — which only change
+//!    when a **nonzero** level is encoded. [`RateCache`] memoizes those
+//!    tail costs per magnitude and is invalidated by a generation
+//!    counter the encoder bumps on nonzero encodes; across the zero
+//!    runs that dominate sparse tensors the cache stays hot.
+//!
+//! The memoized path is **bit-identical** to the naive one: both sum
+//! the same f32 terms in the same order via the shared [`tail_bits`]
+//! (verified by `property_cached_matches_naive_bitwise`).
+//!
+//! [`LevelEncoder`]: super::binarize::LevelEncoder
 
 use super::{CodecConfig, ContextSet, RemainderMode};
 
@@ -13,7 +34,8 @@ pub struct RateEstimator;
 
 impl RateEstimator {
     /// Fractional bits to code `level` under `ctxs` at a position whose
-    /// previous-two significance is `prev_sig`. Pure — no state updates.
+    /// previous-two significance is `prev_sig`. Pure — no state updates,
+    /// no cache. The reference the memoized path is tested against.
     pub fn level_bits(
         cfg: &CodecConfig,
         ctxs: &ContextSet,
@@ -24,54 +46,121 @@ impl RateEstimator {
         if level == 0 {
             return ctxs.sig[sig_idx].bits(0);
         }
-        let mut bits = ctxs.sig[sig_idx].bits(1);
-        bits += ctxs.sign.bits((level < 0) as u8);
-        let abs = level.unsigned_abs();
-        let n = cfg.n_abs_flags;
-        let mut i = 1;
-        while i <= n {
-            let greater = abs > i;
-            bits += ctxs.gr[(i - 1) as usize].bits(greater as u8);
-            if !greater {
-                return bits;
-            }
-            i += 1;
+        ctxs.sig[sig_idx].bits(1)
+            + ctxs.sign.bits((level < 0) as u8)
+            + tail_bits(cfg, ctxs, level.unsigned_abs())
+    }
+}
+
+/// Cost of everything after the sign bin — the AbsGr(i) chain plus the
+/// remainder — for a magnitude `abs >= 1`.
+///
+/// Shared by the naive estimator and [`RateCache`] so both produce
+/// bit-identical f32 sums (f32 addition is order-sensitive; one
+/// accumulation order, one function).
+pub(crate) fn tail_bits(cfg: &CodecConfig, ctxs: &ContextSet, abs: u32) -> f32 {
+    debug_assert!(abs >= 1);
+    let mut bits = 0.0f32;
+    let n = cfg.n_abs_flags;
+    let mut i = 1;
+    while i <= n {
+        let greater = abs > i;
+        bits += ctxs.gr[(i - 1) as usize].bits(greater as u8);
+        if !greater {
+            return bits;
         }
-        let rem = abs - n - 1;
-        match cfg.remainder {
-            RemainderMode::FixedLength(w) => bits += w as f32,
-            RemainderMode::ExpGolomb(k) => {
-                // context-coded prefix + bypass suffix (mirror of the coder)
-                let mut v = rem;
-                let mut k = k;
-                let mut p = 0usize;
-                loop {
-                    let ctx = &ctxs.eg_prefix[p.min(super::EG_PREFIX_CTXS - 1)];
-                    if v >= (1 << k) {
-                        bits += ctx.bits(1);
-                        v -= 1 << k;
-                        k += 1;
-                        p += 1;
-                    } else {
-                        bits += ctx.bits(0) + k as f32;
-                        break;
-                    }
+        i += 1;
+    }
+    let rem = abs - n - 1;
+    match cfg.remainder {
+        RemainderMode::FixedLength(w) => bits += w as f32,
+        RemainderMode::ExpGolomb(k) => {
+            // context-coded prefix + bypass suffix (mirror of the coder);
+            // 64-bit thresholds: k reaches 32 for u32-sized remainders
+            let mut v = rem as u64;
+            let mut k = k;
+            let mut p = 0usize;
+            loop {
+                let ctx = &ctxs.eg_prefix[p.min(super::EG_PREFIX_CTXS - 1)];
+                if k < 63 && v >= (1u64 << k) {
+                    bits += ctx.bits(1);
+                    v -= 1u64 << k;
+                    k += 1;
+                    p += 1;
+                } else {
+                    bits += ctx.bits(0) + k as f32;
+                    break;
                 }
             }
         }
-        bits
+    }
+    bits
+}
+
+/// Largest |level| whose tail cost is memoized; beyond this the (rare)
+/// candidate falls back to the direct walk. Grids in this codebase top
+/// out at a few hundred levels.
+const MAX_CACHED_ABS: usize = 4096;
+
+/// Memoized tail costs per magnitude, invalidated by a generation
+/// counter (bumped by the encoder whenever a nonzero level updates the
+/// gr/eg-prefix contexts). Storage is allocated lazily on first use.
+#[derive(Debug, Clone)]
+pub struct RateCache {
+    tail: Vec<f32>,
+    tag: Vec<u64>,
+    gen: u64,
+}
+
+impl Default for RateCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateCache {
+    pub fn new() -> Self {
+        // gen starts at 1 so zeroed tags read as stale
+        Self { tail: Vec::new(), tag: Vec::new(), gen: 1 }
+    }
+
+    /// Drop all memoized tails (contexts feeding them changed).
+    #[inline]
+    pub fn invalidate(&mut self) {
+        self.gen += 1;
+    }
+
+    /// Memoized [`tail_bits`]. Bit-identical to the direct call.
+    #[inline]
+    pub fn tail_bits(&mut self, cfg: &CodecConfig, ctxs: &ContextSet, abs: u32) -> f32 {
+        let idx = (abs - 1) as usize;
+        if idx >= MAX_CACHED_ABS {
+            return tail_bits(cfg, ctxs, abs);
+        }
+        if idx >= self.tail.len() {
+            self.tail.resize(MAX_CACHED_ABS, 0.0);
+            self.tag.resize(MAX_CACHED_ABS, 0);
+        }
+        if self.tag[idx] != self.gen {
+            self.tail[idx] = tail_bits(cfg, ctxs, abs);
+            self.tag[idx] = self.gen;
+        }
+        self.tail[idx]
     }
 }
 
 /// Length in bins of an order-k exp-Golomb codeword for v.
+///
+/// 64-bit thresholds: for `v` near `u32::MAX` the running order reaches
+/// 32, where `1u32 << k` would panic in debug builds.
 pub fn eg_len(v: u32, k: u32) -> u32 {
-    let mut v = v;
+    let mut v = v as u64;
     let mut k = k;
     let mut len = 0;
     loop {
-        if v >= (1 << k) {
+        if k < 63 && v >= (1u64 << k) {
             len += 1;
-            v -= 1 << k;
+            v -= 1u64 << k;
             k += 1;
         } else {
             return len + 1 + k;
@@ -98,6 +187,17 @@ mod tests {
         assert_eq!(eg_len(7, 0), 7);
         // order 2: v=0 -> 1 + 2 suffix bits
         assert_eq!(eg_len(0, 2), 3);
+    }
+
+    #[test]
+    fn eg_len_u32_max_regression() {
+        // u32::MAX: 32 prefix ones + stop + 32 suffix bits (the prefix
+        // loop reaches k = 32, where `1u32 << k` used to panic)
+        assert_eq!(eg_len(u32::MAX, 0), 65);
+        // one less never reaches k = 32: 31 ones + stop + 31 suffix
+        assert_eq!(eg_len(u32::MAX - 1, 0), 63);
+        // large order start: one prefix one, stop, 32 suffix bits
+        assert_eq!(eg_len(u32::MAX, 31), 34);
     }
 
     #[test]
@@ -160,6 +260,50 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn property_cached_matches_naive_bitwise() {
+        // The memoized RateTable/tail-cache path must return *bit-identical*
+        // f32 costs to the naive walk, across random context states reached
+        // by real encoding, all candidate magnitudes, and all configs.
+        ptest::check(
+            ptest::Config { cases: 64, max_size: 600, ..Default::default() },
+            "cached-estimator-parity",
+            |g| {
+                let cfg = if g.bool() {
+                    CodecConfig {
+                        n_abs_flags: 1 + g.usize_in(0, 12) as u32,
+                        remainder: RemainderMode::ExpGolomb(g.usize_in(0, 3) as u32),
+                        sig_ctx_neighbors: g.bool(),
+                    }
+                } else {
+                    CodecConfig::with_fixed_length_for(200, 1 + g.usize_in(0, 8) as u32)
+                };
+                let levels = g.levels();
+                let mut enc = LevelEncoder::new(cfg);
+                for (step, &l) in levels.iter().enumerate() {
+                    // probe a spread of candidates at this context state
+                    for cand in [-200, -37, -3, -1, 0, 1, 2, 5, 40, 4097] {
+                        let naive =
+                            RateEstimator::level_bits(&cfg, &enc.ctxs, enc.prev_sig(), cand);
+                        let cached = enc.estimate_level_bits(cand);
+                        if naive.to_bits() != cached.to_bits() {
+                            return Err(format!(
+                                "step {step} cand {cand}: naive {naive} != cached {cached}"
+                            ));
+                        }
+                        // probe twice: the second hit comes from the cache
+                        let cached2 = enc.estimate_level_bits(cand);
+                        if cached2.to_bits() != naive.to_bits() {
+                            return Err(format!("step {step} cand {cand}: cache hit differs"));
+                        }
+                    }
+                    enc.encode_level(l);
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

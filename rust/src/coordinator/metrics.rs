@@ -8,6 +8,9 @@ pub struct LayerReport {
     pub n_weights: usize,
     pub nonzero: usize,
     pub payload_bytes: usize,
+    /// Independently coded chunks (container v2 intra-layer parallelism);
+    /// 1 = the monolithic v1 stream.
+    pub n_chunks: usize,
     /// Σ η (w − q)² over the layer.
     pub distortion: f64,
     /// Estimated rate (bits) from the RD scan.
@@ -71,6 +74,12 @@ impl ModelReport {
         self.layers.iter().map(|l| l.payload_bytes).sum::<usize>() as f64 * 8.0
             / n.max(1) as f64
     }
+
+    /// Total independently decodable streams across all layers (equals
+    /// the layer count for monolithic containers).
+    pub fn total_chunks(&self) -> usize {
+        self.layers.iter().map(|l| l.n_chunks).sum()
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +93,7 @@ mod tests {
             n_weights: 1000,
             nonzero: 100,
             payload_bytes: 125,
+            n_chunks: 1,
             distortion: 0.0,
             est_bits: 1000.0,
             time_s: 0.0,

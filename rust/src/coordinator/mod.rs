@@ -7,5 +7,7 @@ pub mod pipeline;
 pub mod sweep;
 
 pub use metrics::{LayerReport, ModelReport};
-pub use pipeline::{compress_model, compress_tensor, CompressionSpec};
+pub use pipeline::{
+    compress_model, compress_tensor, compress_tensor_chunked, CompressionSpec,
+};
 pub use sweep::{sweep_s, SweepPoint, SweepResult};

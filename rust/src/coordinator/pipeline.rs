@@ -7,8 +7,8 @@
 
 use crate::bayes;
 use crate::codec::CodecConfig;
-use crate::model::{CompressedLayer, CompressedModel, Model};
-use crate::quant::{QuantGrid, RdParams, RdQuantizer};
+use crate::model::{ChunkInfo, CompressedLayer, CompressedModel, Model};
+use crate::quant::{QuantGrid, QuantResult, RdParams, RdQuantizer};
 use crate::util::Timer;
 
 use super::metrics::{LayerReport, ModelReport};
@@ -27,6 +27,12 @@ pub struct CompressionSpec {
     pub weighted: bool,
     /// Candidate window for the RD scan.
     pub window: i32,
+    /// Intra-layer chunk count (container-format v2). 1 = monolithic,
+    /// bit-for-bit the original single-stream format. N > 1 splits each
+    /// tensor into N independently coded streams (contexts reset per
+    /// chunk) so one giant layer fans across the worker pool on encode
+    /// *and* decode, at a small rate cost from the context restarts.
+    pub chunks: u32,
 }
 
 impl Default for CompressionSpec {
@@ -37,11 +43,12 @@ impl Default for CompressionSpec {
             cfg: CodecConfig::default(),
             weighted: true,
             window: 4,
+            chunks: 1,
         }
     }
 }
 
-/// Compress one tensor; returns the layer record and its report.
+/// Compress one tensor on the current thread; honors `spec.chunks`.
 pub fn compress_tensor(
     name: &str,
     dims: &[usize],
@@ -49,6 +56,24 @@ pub fn compress_tensor(
     sigmas: &[f32],
     bias: &[f32],
     spec: &CompressionSpec,
+) -> (CompressedLayer, LayerReport) {
+    compress_tensor_chunked(name, dims, weights, sigmas, bias, spec, 1)
+}
+
+/// Compress one tensor, fanning its chunks over up to `workers` threads.
+///
+/// Grid, η, and λ are derived from the **whole** tensor regardless of
+/// chunking, so the only difference between chunk counts is where the
+/// adaptive contexts restart — N=1 reproduces the monolithic payload
+/// byte-for-byte.
+pub fn compress_tensor_chunked(
+    name: &str,
+    dims: &[usize],
+    weights: &[f32],
+    sigmas: &[f32],
+    bias: &[f32],
+    spec: &CompressionSpec,
+    workers: usize,
 ) -> (CompressedLayer, LayerReport) {
     let timer = Timer::new();
     let grid = QuantGrid::from_tensor(weights, sigmas, spec.s);
@@ -59,21 +84,46 @@ pub fn compress_tensor(
     };
     let mean_eta = etas.iter().map(|&e| e as f64).sum::<f64>() / etas.len().max(1) as f64;
     let lambda = spec.lambda_scale * grid.delta * grid.delta * mean_eta as f32;
+    let params = RdParams { lambda, window: spec.window };
     let quantizer = RdQuantizer::new(spec.cfg);
-    let res = quantizer.quantize_encode(
-        weights,
-        &etas,
-        &grid,
-        RdParams { lambda, window: spec.window },
-    );
-    let nonzero = res.levels.iter().filter(|&&l| l != 0).count();
+
+    let n = weights.len();
+    let n_chunks = (spec.chunks.max(1) as usize).min(n.max(1));
+    let spans = chunk_spans(n, n_chunks);
+
+    let results: Vec<QuantResult> = if spans.len() <= 1 {
+        vec![quantizer.quantize_encode(weights, &etas, &grid, params)]
+    } else {
+        crate::util::par::map_indexed(spans.len(), workers, |i| {
+            let (lo, hi) = spans[i];
+            quantizer.quantize_encode(&weights[lo..hi], &etas[lo..hi], &grid, params)
+        })
+    };
+
+    let mut levels = Vec::with_capacity(n);
+    let mut payload = Vec::new();
+    let mut chunks = Vec::with_capacity(results.len());
+    let (mut distortion, mut est_bits) = (0.0f64, 0.0f64);
+    for r in results {
+        chunks.push(ChunkInfo { n_weights: r.levels.len(), bytes: r.payload.len() });
+        levels.extend_from_slice(&r.levels);
+        payload.extend_from_slice(&r.payload);
+        distortion += r.distortion;
+        est_bits += r.est_bits;
+    }
+    if chunks.len() <= 1 {
+        chunks.clear(); // canonical monolithic representation (v1 format)
+    }
+
+    let nonzero = levels.iter().filter(|&&l| l != 0).count();
     let report = LayerReport {
         name: name.to_string(),
-        n_weights: weights.len(),
+        n_weights: n,
         nonzero,
-        payload_bytes: res.payload.len(),
-        distortion: res.distortion,
-        est_bits: res.est_bits,
+        payload_bytes: payload.len(),
+        n_chunks: chunks.len().max(1),
+        distortion,
+        est_bits,
         time_s: timer.elapsed_s(),
     };
     let layer = CompressedLayer {
@@ -82,15 +132,40 @@ pub fn compress_tensor(
         grid,
         s_param: spec.s,
         cfg: spec.cfg,
-        n_weights: weights.len(),
-        payload: res.payload,
+        n_weights: n,
+        payload,
+        chunks,
         bias: bias.to_vec(),
     };
     (layer, report)
 }
 
-/// Compress a whole model with `workers` threads (layers fan out; results
-/// are re-assembled in manifest order).
+/// Even contiguous split of `n` items into `k` spans (first `n % k`
+/// spans get one extra item). Returns (lo, hi) pairs.
+fn chunk_spans(n: usize, k: usize) -> Vec<(usize, usize)> {
+    let k = k.max(1);
+    if n == 0 {
+        return vec![(0, 0)];
+    }
+    let (base, extra) = (n / k, n % k);
+    let mut spans = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            break;
+        }
+        spans.push((lo, lo + len));
+        lo += len;
+    }
+    spans
+}
+
+/// Compress a whole model with `workers` threads. With `spec.chunks == 1`
+/// layers fan out onto the pool (results re-assembled in manifest
+/// order); with intra-layer chunking enabled, layers are processed in
+/// order and each layer's chunks fan across the pool instead — the mode
+/// for models whose runtime is dominated by one giant tensor.
 pub fn compress_model(
     model: &Model,
     spec: &CompressionSpec,
@@ -99,7 +174,20 @@ pub fn compress_model(
     let n = model.weights.len();
     let mut slots: Vec<Option<(CompressedLayer, LayerReport)>> = (0..n).map(|_| None).collect();
 
-    if workers <= 1 || n <= 1 {
+    if spec.chunks > 1 {
+        for i in 0..n {
+            let layer = &model.manifest.layers[i];
+            slots[i] = Some(compress_tensor_chunked(
+                &layer.name,
+                &model.weights[i].shape,
+                &model.weights[i].data,
+                &model.sigmas[i].data,
+                &model.biases[i].data,
+                spec,
+                workers,
+            ));
+        }
+    } else if workers <= 1 || n <= 1 {
         for i in 0..n {
             slots[i] = Some(compress_layer_idx(model, i, spec));
         }
@@ -258,6 +346,127 @@ pub(crate) mod tests {
         let (a, _) = compress_model(&model, &spec, 1);
         let (b, _) = compress_model(&model, &spec, 4);
         assert_eq!(a.serialize(), b.serialize());
+    }
+
+    fn sparse_fixture(n: usize, density: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = SplitMix64::new(seed);
+        let mut w = vec![0.0f32; n];
+        let mut s = vec![0.0f32; n];
+        for i in 0..n {
+            if rng.next_f64() < density {
+                w[i] = rng.laplace(0.08) as f32;
+            }
+            s[i] = 0.02 + 0.05 * rng.next_f32();
+        }
+        (w, s)
+    }
+
+    #[test]
+    fn n1_chunk_reproduces_monolithic_payload() {
+        // chunks = 1 must be byte-for-byte the single-stream encode the
+        // format has always produced (and stays in the v1 container).
+        let (w, s) = sparse_fixture(20_000, 0.1, 11);
+        let spec = CompressionSpec::default();
+        assert_eq!(spec.chunks, 1);
+        let (layer, rep) = compress_tensor("t", &[w.len()], &w, &s, &[], &spec);
+        assert!(layer.chunks.is_empty());
+        assert_eq!(rep.n_chunks, 1);
+
+        // the pre-chunking reference path: one QuantResult over the tensor
+        let grid = QuantGrid::from_tensor(&w, &s, spec.s);
+        let etas = bayes::etas_from_sigmas(&s, bayes::sigma_floor(&s));
+        let mean_eta =
+            etas.iter().map(|&e| e as f64).sum::<f64>() / etas.len().max(1) as f64;
+        let lambda = spec.lambda_scale * grid.delta * grid.delta * mean_eta as f32;
+        let reference = RdQuantizer::new(spec.cfg).quantize_encode(
+            &w,
+            &etas,
+            &grid,
+            RdParams { lambda, window: spec.window },
+        );
+        assert_eq!(layer.payload, reference.payload);
+        assert_eq!(layer.decode_levels(), reference.levels);
+    }
+
+    #[test]
+    fn chunked_encode_deterministic_and_roundtrips() {
+        let (w, s) = sparse_fixture(30_000, 0.1, 23);
+        for chunks in [2u32, 4, 7] {
+            let spec = CompressionSpec { chunks, ..Default::default() };
+            let (a, rep) =
+                compress_tensor_chunked("t", &[w.len()], &w, &s, &[], &spec, 1);
+            let (b, _) = compress_tensor_chunked("t", &[w.len()], &w, &s, &[], &spec, 4);
+            assert_eq!(a.payload, b.payload, "chunks={chunks}");
+            assert_eq!(a.chunks, b.chunks, "chunks={chunks}");
+            assert_eq!(rep.n_chunks, chunks as usize);
+            // decode (serial and chunk-parallel) equals per-span re-encode
+            let grid = QuantGrid::from_tensor(&w, &s, spec.s);
+            let etas = bayes::etas_from_sigmas(&s, bayes::sigma_floor(&s));
+            let mean_eta =
+                etas.iter().map(|&e| e as f64).sum::<f64>() / etas.len().max(1) as f64;
+            let lambda = spec.lambda_scale * grid.delta * grid.delta * mean_eta as f32;
+            let mut expected = Vec::new();
+            let mut lo = 0usize;
+            for c in &a.chunks {
+                let hi = lo + c.n_weights;
+                let r = RdQuantizer::new(spec.cfg).quantize_encode(
+                    &w[lo..hi],
+                    &etas[lo..hi],
+                    &grid,
+                    RdParams { lambda, window: spec.window },
+                );
+                expected.extend_from_slice(&r.levels);
+                lo = hi;
+            }
+            assert_eq!(a.decode_levels_with(1), expected, "chunks={chunks}");
+            assert_eq!(a.decode_levels(), expected, "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn chunk_rate_overhead_is_small() {
+        // context restarts cost a warmup per chunk; on a realistic
+        // fixture the overhead must stay low (< 2% at the bench's scale,
+        // checked there too — this is the fast guard)
+        let (w, s) = sparse_fixture(120_000, 0.1, 31);
+        let mono = compress_tensor(
+            "t",
+            &[w.len()],
+            &w,
+            &s,
+            &[],
+            &CompressionSpec::default(),
+        )
+        .0
+        .payload
+        .len() as f64;
+        for (chunks, bound) in [(2u32, 1.02), (8, 1.05)] {
+            let spec = CompressionSpec { chunks, ..Default::default() };
+            let chunked = compress_tensor_chunked("t", &[w.len()], &w, &s, &[], &spec, 2)
+                .0
+                .payload
+                .len() as f64;
+            assert!(
+                chunked <= mono * bound,
+                "chunks={chunks}: {chunked} vs {mono} (bound {bound})"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_model_parallel_matches_serial() {
+        let model = toy_model();
+        let spec = CompressionSpec { chunks: 3, ..Default::default() };
+        let (a, ra) = compress_model(&model, &spec, 1);
+        let (b, _) = compress_model(&model, &spec, 4);
+        assert_eq!(a.serialize(), b.serialize());
+        assert!(a.is_chunked());
+        assert!(ra.layers.iter().all(|l| l.n_chunks == 3));
+        // chunked container roundtrips through serialization
+        let re = crate::model::CompressedModel::deserialize(&a.serialize()).unwrap();
+        for (x, y) in a.layers.iter().zip(&re.layers) {
+            assert_eq!(x.decode_levels(), y.decode_levels());
+        }
     }
 
     #[test]

@@ -47,8 +47,13 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn base_spec(args: &Args) -> Result<CompressionSpec> {
+    let chunks = args.get_usize("chunks", 1).map_err(|e| anyhow!(e))?;
+    if chunks == 0 || chunks > deepcabac::model::container::MAX_CHUNKS {
+        bail!("--chunks must be in 1..={}", deepcabac::model::container::MAX_CHUNKS);
+    }
     Ok(CompressionSpec {
         lambda_scale: args.get_f32("lambda-scale", 0.05).map_err(|e| anyhow!(e))?,
+        chunks: chunks as u32,
         ..Default::default()
     })
 }
@@ -136,12 +141,17 @@ fn cmd_compress(args: &Args) -> Result<()> {
     };
     std::fs::write(out, compressed.serialize())?;
     println!(
-        "{name}: {} -> {} ({:.2}% of original, x{:.1}) S={}",
+        "{name}: {} -> {} ({:.2}% of original, x{:.1}) S={}{}",
         human_bytes(report.raw_bytes),
         human_bytes(report.compressed_bytes),
         report.ratio_percent(),
         report.factor(),
         compressed.layers.first().map(|l| l.s_param).unwrap_or(0),
+        if compressed.is_chunked() {
+            format!(" chunks={}", report.total_chunks())
+        } else {
+            String::new()
+        },
     );
     Ok(())
 }

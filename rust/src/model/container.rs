@@ -4,9 +4,19 @@
 //! file   := "DCBC" u8 version | str name | varint n_layers | layer*
 //! layer  := str name | varint ndims, dims* | f32 delta | varint S
 //!           | u8 n_abs_flags | u8 rem_tag | u8 rem_param | u8 flags
+//!           | chunk_table(v2 only)
 //!           | varint n_weights | varint payload_len | payload bytes
 //!           | varint bias_len | raw f32 bias bytes
+//! chunk_table := varint n_chunks | (varint n_weights, varint bytes)*
 //! ```
+//!
+//! Version 1 is the original single-stream layout. Version 2 adds a
+//! per-layer **chunk table**: a tensor may be split into N independently
+//! decodable CABAC streams (contexts reset at each chunk boundary, byte
+//! offsets derivable from the table) so encode *and* decode of one giant
+//! layer fan out across threads. Serialization emits v1 whenever no
+//! layer is chunked, so unchunked containers are byte-identical to the
+//! old format; the reader accepts both versions.
 //!
 //! Biases (and any normalization parameters) are stored raw, as the
 //! paper compresses weight tensors only.
@@ -18,9 +28,24 @@ use anyhow::{anyhow, bail, Result};
 use byteorder::{ByteOrder, LittleEndian};
 
 pub const MAGIC: &[u8; 4] = b"DCBC";
+/// Original single-stream layout.
 pub const VERSION: u8 = 1;
+/// Chunked layout (only emitted when some layer has > 1 chunk).
+pub const VERSION_CHUNKED: u8 = 2;
 
 const FLAG_SIG_NEIGHBORS: u8 = 1;
+
+/// Sanity cap on the per-layer chunk count (hostile-header guard).
+pub const MAX_CHUNKS: usize = 1 << 16;
+
+/// One independently decodable slice of a chunked layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkInfo {
+    /// Levels coded in this chunk.
+    pub n_weights: usize,
+    /// Payload bytes of this chunk's CABAC stream.
+    pub bytes: usize,
+}
 
 #[derive(Debug, Clone)]
 pub struct CompressedLayer {
@@ -30,14 +55,53 @@ pub struct CompressedLayer {
     pub s_param: u32,
     pub cfg: CodecConfig,
     pub n_weights: usize,
+    /// Concatenated CABAC payload (all chunks back to back).
     pub payload: Vec<u8>,
+    /// Chunk table; empty or single-entry means one monolithic stream
+    /// (the payload is then bit-identical to the v1 format's).
+    pub chunks: Vec<ChunkInfo>,
     pub bias: Vec<f32>,
 }
 
 impl CompressedLayer {
-    /// Decode the CABAC payload back into integer levels.
+    /// Number of independently decodable streams in this layer.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len().max(1)
+    }
+
+    /// Decode the CABAC payload back into integer levels. Chunked
+    /// layers decode their chunks in parallel (contexts reset per
+    /// chunk, exactly as the encoder coded them).
     pub fn decode_levels(&self) -> Vec<i32> {
-        decode_levels(&self.payload, self.n_weights, self.cfg)
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        self.decode_levels_with(workers)
+    }
+
+    /// [`Self::decode_levels`] with an explicit worker cap.
+    pub fn decode_levels_with(&self, workers: usize) -> Vec<i32> {
+        if self.chunks.len() <= 1 {
+            return decode_levels(&self.payload, self.n_weights, self.cfg);
+        }
+        // (byte offset, weight count) per chunk
+        let mut spans = Vec::with_capacity(self.chunks.len());
+        let (mut off, mut total_w) = (0usize, 0usize);
+        for c in &self.chunks {
+            spans.push((off, c.n_weights));
+            off += c.bytes;
+            total_w += c.n_weights;
+        }
+        debug_assert_eq!(off, self.payload.len());
+        debug_assert_eq!(total_w, self.n_weights);
+        let decoded = crate::util::par::map_indexed(self.chunks.len(), workers, |i| {
+            let (off, nw) = spans[i];
+            let end = off + self.chunks[i].bytes;
+            decode_levels(&self.payload[off..end], nw, self.cfg)
+        });
+        let mut levels = Vec::with_capacity(self.n_weights);
+        for s in decoded {
+            levels.extend_from_slice(&s);
+        }
+        levels
     }
 
     /// Full reconstruction: levels × Δ.
@@ -67,10 +131,16 @@ impl CompressedModel {
         self.layers.iter().map(|l| l.payload.len()).sum()
     }
 
+    /// True if any layer carries a multi-chunk table (forces version 2).
+    pub fn is_chunked(&self) -> bool {
+        self.layers.iter().any(|l| l.chunks.len() > 1)
+    }
+
     pub fn serialize(&self) -> Vec<u8> {
+        let version = if self.is_chunked() { VERSION_CHUNKED } else { VERSION };
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
-        out.push(VERSION);
+        out.push(version);
         write_str(&mut out, &self.name);
         write_varint(&mut out, self.layers.len() as u64);
         for l in &self.layers {
@@ -86,6 +156,20 @@ impl CompressedModel {
             out.push(l.cfg.remainder.tag());
             out.push(l.cfg.remainder.param() as u8);
             out.push(if l.cfg.sig_ctx_neighbors { FLAG_SIG_NEIGHBORS } else { 0 });
+            if version == VERSION_CHUNKED {
+                if l.chunks.len() > 1 {
+                    write_varint(&mut out, l.chunks.len() as u64);
+                    for c in &l.chunks {
+                        write_varint(&mut out, c.n_weights as u64);
+                        write_varint(&mut out, c.bytes as u64);
+                    }
+                } else {
+                    // monolithic layer inside a chunked container
+                    write_varint(&mut out, 1);
+                    write_varint(&mut out, l.n_weights as u64);
+                    write_varint(&mut out, l.payload.len() as u64);
+                }
+            }
             write_varint(&mut out, l.n_weights as u64);
             write_varint(&mut out, l.payload.len() as u64);
             out.extend_from_slice(&l.payload);
@@ -105,16 +189,16 @@ impl CompressedModel {
         pos += 4;
         let version = buf[pos];
         pos += 1;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_CHUNKED {
             bail!("unsupported DCBC version {version}");
         }
         let name = read_str(buf, &mut pos)?;
         let n_layers = read_vi(buf, &mut pos)? as usize;
-        let mut layers = Vec::with_capacity(n_layers);
+        let mut layers = Vec::with_capacity(n_layers.min(1 << 16));
         for _ in 0..n_layers {
             let lname = read_str(buf, &mut pos)?;
             let ndims = read_vi(buf, &mut pos)? as usize;
-            let mut dims = Vec::with_capacity(ndims);
+            let mut dims = Vec::with_capacity(ndims.min(1 << 8));
             for _ in 0..ndims {
                 dims.push(read_vi(buf, &mut pos)? as usize);
             }
@@ -135,6 +219,22 @@ impl CompressedModel {
             pos += 4;
             let remainder = RemainderMode::from_tag(rem_tag, rem_param)
                 .ok_or_else(|| anyhow!("bad remainder tag {rem_tag}"))?;
+            let mut chunks = Vec::new();
+            if version == VERSION_CHUNKED {
+                let n_chunks = read_vi(buf, &mut pos)? as usize;
+                if n_chunks == 0 || n_chunks > MAX_CHUNKS {
+                    bail!("layer claims {n_chunks} chunks (hostile header?)");
+                }
+                chunks.reserve(n_chunks.min(1 << 10));
+                for _ in 0..n_chunks {
+                    let cw = read_vi(buf, &mut pos)? as usize;
+                    let cb = read_vi(buf, &mut pos)? as usize;
+                    chunks.push(ChunkInfo { n_weights: cw, bytes: cb });
+                }
+                if n_chunks == 1 {
+                    chunks.clear(); // canonical monolithic representation
+                }
+            }
             let n_weights = read_vi(buf, &mut pos)? as usize;
             if n_weights > crate::baselines::MAX_DECODE_ELEMS {
                 bail!("layer claims {n_weights} weights (hostile header?)");
@@ -143,10 +243,27 @@ impl CompressedModel {
             if pos + plen > buf.len() {
                 bail!("truncated payload");
             }
+            // a chunk table must tile the payload and the weight count
+            if !chunks.is_empty() {
+                let (mut ws, mut bs) = (0usize, 0usize);
+                for c in &chunks {
+                    ws = ws
+                        .checked_add(c.n_weights)
+                        .ok_or_else(|| anyhow!("chunk weight overflow"))?;
+                    bs = bs
+                        .checked_add(c.bytes)
+                        .ok_or_else(|| anyhow!("chunk byte overflow"))?;
+                }
+                if ws != n_weights || bs != plen {
+                    bail!(
+                        "chunk table inconsistent: {ws}/{n_weights} weights, {bs}/{plen} bytes"
+                    );
+                }
+            }
             let payload = buf[pos..pos + plen].to_vec();
             pos += plen;
             let blen = read_vi(buf, &mut pos)? as usize;
-            if pos + blen * 4 > buf.len() {
+            if blen > crate::baselines::MAX_DECODE_ELEMS || pos + blen * 4 > buf.len() {
                 bail!("truncated bias");
             }
             let mut bias = vec![0f32; blen];
@@ -164,6 +281,7 @@ impl CompressedModel {
                 },
                 n_weights,
                 payload,
+                chunks,
                 bias,
             });
         }
@@ -215,8 +333,33 @@ mod tests {
                 cfg,
                 n_weights: levels.len(),
                 payload: encode_levels(&levels, cfg),
+                chunks: vec![],
                 bias: vec![0.5, -0.25],
             }],
+        }
+    }
+
+    fn chunked_layer(levels: &[i32], n_chunks: usize, cfg: CodecConfig) -> CompressedLayer {
+        // encode each chunk independently (contexts reset), concatenate
+        let n_chunks = n_chunks.max(1);
+        let per = ((levels.len() + n_chunks - 1) / n_chunks).max(1);
+        let mut payload = Vec::new();
+        let mut chunks = Vec::new();
+        for part in levels.chunks(per) {
+            let bytes = encode_levels(part, cfg);
+            chunks.push(ChunkInfo { n_weights: part.len(), bytes: bytes.len() });
+            payload.extend_from_slice(&bytes);
+        }
+        CompressedLayer {
+            name: "chunky".into(),
+            dims: vec![levels.len().max(1)],
+            grid: QuantGrid { delta: 0.1, max_level: 200 },
+            s_param: 5,
+            cfg,
+            n_weights: levels.len(),
+            payload,
+            chunks,
+            bias: vec![],
         }
     }
 
@@ -242,6 +385,58 @@ mod tests {
         assert_eq!(w[1], 0.125);
         assert_eq!(w[2], -0.25);
         assert_eq!(w[5], 0.875);
+    }
+
+    #[test]
+    fn unchunked_serialization_is_version_1() {
+        // byte-compatibility: containers without chunked layers keep the
+        // original format, version byte included
+        let m = sample_model();
+        assert!(!m.is_chunked());
+        assert_eq!(m.serialize()[4], VERSION);
+    }
+
+    #[test]
+    fn chunked_roundtrip_v2() {
+        let cfg = CodecConfig::default();
+        let mut rng = crate::util::SplitMix64::new(42);
+        let levels: Vec<i32> = (0..5000)
+            .map(|_| {
+                if rng.next_f64() < 0.85 {
+                    0
+                } else {
+                    (1 + rng.below(50) as i32) * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+                }
+            })
+            .collect();
+        for n_chunks in [2usize, 3, 8] {
+            let layer = chunked_layer(&levels, n_chunks, cfg);
+            assert_eq!(layer.n_chunks(), n_chunks);
+            let m = CompressedModel { name: "c".into(), layers: vec![layer] };
+            assert!(m.is_chunked());
+            let bytes = m.serialize();
+            assert_eq!(bytes[4], VERSION_CHUNKED);
+            let m2 = CompressedModel::deserialize(&bytes).unwrap();
+            // byte-stable re-serialization
+            assert_eq!(m2.serialize(), bytes);
+            // parallel and serial chunk decode agree with the source levels
+            assert_eq!(m2.layers[0].decode_levels_with(1), levels, "serial n={n_chunks}");
+            assert_eq!(m2.layers[0].decode_levels(), levels, "parallel n={n_chunks}");
+        }
+    }
+
+    #[test]
+    fn rejects_inconsistent_chunk_table() {
+        let cfg = CodecConfig::default();
+        let levels: Vec<i32> = (0..200).map(|i| (i % 5 - 2) as i32).collect();
+        let mut layer = chunked_layer(&levels, 3, cfg);
+        layer.chunks[0].n_weights += 1;
+        let m = CompressedModel { name: "bad".into(), layers: vec![layer] };
+        assert!(CompressedModel::deserialize(&m.serialize()).is_err());
+        let mut layer = chunked_layer(&levels, 3, cfg);
+        layer.chunks[2].bytes -= 1;
+        let m = CompressedModel { name: "bad".into(), layers: vec![layer] };
+        assert!(CompressedModel::deserialize(&m.serialize()).is_err());
     }
 
     #[test]
@@ -271,27 +466,43 @@ mod tests {
                         remainder: RemainderMode::ExpGolomb(g.usize_in(0, 2) as u32),
                         sig_ctx_neighbors: g.bool(),
                     };
-                    layers.push(CompressedLayer {
-                        name: format!("l{li}"),
-                        dims: vec![levels.len().max(1)],
-                        grid: QuantGrid {
-                            delta: 0.01 + g.rng.next_f32(),
-                            max_level: max_abs as i32,
-                        },
-                        s_param: g.usize_in(0, 256) as u32,
-                        cfg,
-                        n_weights: levels.len(),
-                        payload: encode_levels(&levels, cfg),
-                        bias: (0..g.usize_in(0, 16)).map(|_| g.f32_normal(1.0)).collect(),
-                    });
+                    // mix monolithic and chunked layers in one container
+                    let n_chunks = if g.bool() { 1 } else { 1 + g.usize_in(0, 5) };
+                    let mut layer = if n_chunks > 1 && !levels.is_empty() {
+                        chunked_layer(&levels, n_chunks, cfg)
+                    } else {
+                        CompressedLayer {
+                            name: String::new(),
+                            dims: vec![levels.len().max(1)],
+                            grid: QuantGrid { delta: 0.0, max_level: 0 },
+                            s_param: 0,
+                            cfg,
+                            n_weights: levels.len(),
+                            payload: encode_levels(&levels, cfg),
+                            chunks: vec![],
+                            bias: vec![],
+                        }
+                    };
+                    layer.name = format!("l{li}");
+                    layer.grid =
+                        QuantGrid { delta: 0.01 + g.rng.next_f32(), max_level: max_abs as i32 };
+                    layer.s_param = g.usize_in(0, 256) as u32;
+                    layer.bias = (0..g.usize_in(0, 16)).map(|_| g.f32_normal(1.0)).collect();
+                    layers.push(layer);
                 }
                 let m = CompressedModel { name: "p".into(), layers };
                 let bytes = m.serialize();
                 let m2 = CompressedModel::deserialize(&bytes)
                     .map_err(|e| format!("deser: {e}"))?;
+                if m2.serialize() != bytes {
+                    return Err("re-serialization not byte-stable".into());
+                }
                 for (a, b) in m.layers.iter().zip(&m2.layers) {
                     if a.decode_levels() != b.decode_levels() {
                         return Err("level mismatch".into());
+                    }
+                    if a.chunks != b.chunks {
+                        return Err("chunk table mismatch".into());
                     }
                     if a.bias != b.bias {
                         return Err("bias mismatch".into());

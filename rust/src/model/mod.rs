@@ -5,7 +5,7 @@
 pub mod container;
 pub mod manifest;
 
-pub use container::{CompressedLayer, CompressedModel};
+pub use container::{ChunkInfo, CompressedLayer, CompressedModel};
 pub use manifest::{LayerInfo, LayerKind, ModelManifest};
 
 use crate::tensor::{npy, Tensor};

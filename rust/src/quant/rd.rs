@@ -74,7 +74,7 @@ impl RdQuantizer {
 
         for (&w, &eta) in weights.iter().zip(etas) {
             let (level, cost_d, cost_r) =
-                self.pick_level(&enc, w, eta, grid, params);
+                self.pick_level(&mut enc, w, eta, grid, params);
             distortion += cost_d as f64;
             est_bits += cost_r as f64;
             enc.encode_level(level);
@@ -85,29 +85,29 @@ impl RdQuantizer {
 
     /// Choose the RD-optimal level for one weight under the encoder's
     /// current context states. Returns (level, distortion, rate_bits).
+    /// Rate queries go through the encoder's memoized estimator
+    /// (bit-identical to `RateEstimator::level_bits`, O(1) amortized).
     #[inline]
     fn pick_level(
         &self,
-        enc: &LevelEncoder,
+        enc: &mut LevelEncoder,
         w: f32,
         eta: f32,
         grid: &QuantGrid,
         params: RdParams,
     ) -> (i32, f32, f32) {
-        let cfg = &self.cfg;
-        let prev = enc.prev_sig();
         let nearest = grid.nearest_level(w);
         // Fast path for pruned weights (the majority in sparse tensors):
         // only level 0 and ±1 can win — any |level| ≥ 2 has both more
         // distortion and more rate than ±1. Cuts the candidate scan ~3x.
         if w == 0.0 {
-            let r0 = RateEstimator::level_bits(cfg, &enc.ctxs, prev, 0);
+            let r0 = enc.estimate_level_bits(0);
             let c0 = params.lambda * r0;
             let mut best = (0i32, c0, 0.0f32, r0);
             if grid.max_level >= 1 && params.lambda > 0.0 {
                 let d1 = eta * grid.delta * grid.delta;
                 for level in [-1i32, 1] {
-                    let r = RateEstimator::level_bits(cfg, &enc.ctxs, prev, level);
+                    let r = enc.estimate_level_bits(level);
                     let cost = d1 + params.lambda * r;
                     if cost < best.1 {
                         best = (level, cost, d1, r);
@@ -123,7 +123,7 @@ impl RdQuantizer {
         let mut eval = |level: i32| {
             let dq = w - grid.value(level);
             let d = eta * dq * dq;
-            let r = RateEstimator::level_bits(cfg, &enc.ctxs, prev, level);
+            let r = enc.estimate_level_bits(level);
             let cost = d + params.lambda * r;
             if cost < best.1 {
                 best = (level, cost, d, r);

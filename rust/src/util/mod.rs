@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod ptest;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,59 @@
+//! Scoped-thread fan-out shared by the coordinator's chunk encoder and
+//! the container's chunk decoder.
+
+/// Apply `f` to every index in `0..n` across up to `workers` scoped
+/// threads (work-stealing via an atomic counter); results come back in
+/// index order. `workers <= 1` (or `n <= 1`) runs inline.
+pub fn map_indexed<T: Send>(
+    n: usize,
+    workers: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let workers = workers.clamp(1, n.max(1));
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, T)>();
+    let f = &f;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, out) in rx {
+            slots[i] = Some(out);
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker dropped an index")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        let out = map_indexed(37, 4, |i| i * i);
+        assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let serial = map_indexed(10, 1, |i| format!("x{i}"));
+        let parallel = map_indexed(10, 8, |i| format!("x{i}"));
+        assert_eq!(serial, parallel);
+        assert!(map_indexed(0, 4, |i| i).is_empty());
+    }
+}

@@ -107,10 +107,48 @@ fn container_deserializer_never_panics() {
             cfg,
             n_weights: levels.len(),
             payload: encode_levels(&levels, cfg),
+            chunks: vec![],
             bias: vec![1.0, 2.0],
         }],
     };
     let valid = model.serialize();
+    hostile_inputs(&valid, &mut rng, |buf| {
+        let _ = CompressedModel::deserialize(buf);
+    });
+}
+
+#[test]
+fn chunked_container_deserializer_never_panics() {
+    // same hostile battery against the v2 (chunk-table) layout
+    let mut rng = SplitMix64::new(15);
+    let cfg = CodecConfig::default();
+    let levels = random_levels(&mut rng, 600);
+    let half = levels.len() / 2;
+    let (p0, p1) = (encode_levels(&levels[..half], cfg), encode_levels(&levels[half..], cfg));
+    let mut payload = p0.clone();
+    payload.extend_from_slice(&p1);
+    let model = CompressedModel {
+        name: "fuzz2".into(),
+        layers: vec![CompressedLayer {
+            name: "l0".into(),
+            dims: vec![levels.len()],
+            grid: QuantGrid { delta: 0.1, max_level: 41 },
+            s_param: 7,
+            cfg,
+            n_weights: levels.len(),
+            payload,
+            chunks: vec![
+                deepcabac::model::ChunkInfo { n_weights: half, bytes: p0.len() },
+                deepcabac::model::ChunkInfo { n_weights: levels.len() - half, bytes: p1.len() },
+            ],
+            bias: vec![0.5],
+        }],
+    };
+    let valid = model.serialize();
+    assert_eq!(
+        CompressedModel::deserialize(&valid).unwrap().layers[0].decode_levels(),
+        levels
+    );
     hostile_inputs(&valid, &mut rng, |buf| {
         let _ = CompressedModel::deserialize(buf);
     });

@@ -1,0 +1,181 @@
+//! Offline API-compatible subset of the `anyhow` crate (vendored shim).
+//!
+//! Provides the pieces this workspace uses: [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` / `ensure!` macros. Context
+//! chains print with `{:#}` like the real crate.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of underlying causes.
+///
+/// Deliberately does **not** implement `std::error::Error`, mirroring the
+/// real crate — that is what makes the blanket
+/// `impl<E: std::error::Error> From<E> for Error` coherent.
+pub struct Error {
+    msg: String,
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap with an outer context message (the real crate's `Error::context`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        let mut chain = vec![self.msg];
+        chain.extend(self.chain);
+        Self { msg: c.to_string(), chain }
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(|s| s.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for c in &self.chain {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for c in &self.chain {
+            write!(f, "\n\nCaused by:\n    {c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { msg: e.to_string(), chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(c)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into())
+    }
+
+    #[test]
+    fn context_chains_render_alternate() {
+        let e = io_err().context("loading config").unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: gone");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e: Error = None::<u8>.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        fn f(v: u8) -> Result<u8> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 9 {
+                bail!("nine");
+            }
+            Ok(v)
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(f(12).unwrap_err().to_string(), "v too big: 12");
+    }
+}

@@ -1,0 +1,84 @@
+//! Offline API-compatible subset of the `byteorder` crate (vendored
+//! shim): the `LittleEndian` reads/writes `tensor/npy.rs` and
+//! `model/container.rs` use. Panics on short buffers, like the original.
+
+/// Byte-order trait carrying the slice conversion methods.
+pub trait ByteOrder {
+    fn read_u16(buf: &[u8]) -> u16;
+    fn read_u32(buf: &[u8]) -> u32;
+    fn read_f32_into(src: &[u8], dst: &mut [f32]);
+    fn read_f64_into(src: &[u8], dst: &mut [f64]);
+    fn read_i32_into(src: &[u8], dst: &mut [i32]);
+    fn read_i64_into(src: &[u8], dst: &mut [i64]);
+    fn write_f32_into(src: &[f32], dst: &mut [u8]);
+}
+
+pub enum LittleEndian {}
+
+macro_rules! read_into {
+    ($src:ident, $dst:ident, $ty:ty, $w:expr) => {{
+        assert!(
+            $src.len() >= $dst.len() * $w,
+            "source too short: {} bytes for {} elems",
+            $src.len(),
+            $dst.len()
+        );
+        for (i, out) in $dst.iter_mut().enumerate() {
+            *out = <$ty>::from_le_bytes($src[i * $w..(i + 1) * $w].try_into().unwrap());
+        }
+    }};
+}
+
+impl ByteOrder for LittleEndian {
+    fn read_u16(buf: &[u8]) -> u16 {
+        u16::from_le_bytes(buf[..2].try_into().unwrap())
+    }
+
+    fn read_u32(buf: &[u8]) -> u32 {
+        u32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+
+    fn read_f32_into(src: &[u8], dst: &mut [f32]) {
+        read_into!(src, dst, f32, 4)
+    }
+
+    fn read_f64_into(src: &[u8], dst: &mut [f64]) {
+        read_into!(src, dst, f64, 8)
+    }
+
+    fn read_i32_into(src: &[u8], dst: &mut [i32]) {
+        read_into!(src, dst, i32, 4)
+    }
+
+    fn read_i64_into(src: &[u8], dst: &mut [i64]) {
+        read_into!(src, dst, i64, 8)
+    }
+
+    fn write_f32_into(src: &[f32], dst: &mut [u8]) {
+        assert!(dst.len() >= src.len() * 4, "destination too short");
+        for (i, v) in src.iter().enumerate() {
+            dst[i * 4..(i + 1) * 4].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.5f32, -0.25, 3.0e10, f32::MIN_POSITIVE];
+        let mut bytes = vec![0u8; 16];
+        LittleEndian::write_f32_into(&vals, &mut bytes);
+        let mut back = [0f32; 4];
+        LittleEndian::read_f32_into(&bytes, &mut back);
+        assert_eq!(vals, back);
+    }
+
+    #[test]
+    fn scalar_reads() {
+        assert_eq!(LittleEndian::read_u16(&[0x34, 0x12]), 0x1234);
+        assert_eq!(LittleEndian::read_u32(&[0x78, 0x56, 0x34, 0x12]), 0x12345678);
+    }
+}

@@ -1,0 +1,46 @@
+//! Offline API-compatible subset of `once_cell` (vendored shim):
+//! `sync::Lazy` implemented on `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Lazily-initialized static value; the initializer runs at most once.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Self { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<u32> = Lazy::new(|| 40 + 2);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(*N, 42);
+        assert_eq!(*N, 42);
+    }
+}
