@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Serve-path smoke test, run by CI from the rust/ directory:
+#   1. synthesize a chunked .dcbc container
+#   2. start `deepcabac serve` on an ephemeral port
+#   3. `deepcabac fetch` the container through the streaming decoder and
+#      diff every reconstructed tensor against the batch `decompress` path
+#   4. run a 32-client loadgen and leave BENCH_serve.json for upload
+set -euo pipefail
+
+BIN=${BIN:-target/release/deepcabac}
+WORK=$(mktemp -d)
+mkdir -p "$WORK/models"
+
+cleanup() {
+  [ -n "${SERVER_PID:-}" ] && kill "$SERVER_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== synth a chunked container =="
+"$BIN" synth --arch mobilenet --scale 32 --s 40 --chunks 4 \
+  --out "$WORK/models/mobilenet.dcbc"
+
+echo "== start server on an ephemeral port =="
+"$BIN" serve --dir "$WORK/models" --addr 127.0.0.1:0 --cache-mb 32 --workers 4 \
+  > "$WORK/serve.log" 2>&1 &
+SERVER_PID=$!
+
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#^listening on http://##p' "$WORK/serve.log" | head -n1)
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$WORK/serve.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never announced its port"; cat "$WORK/serve.log"; exit 1; }
+echo "server at $ADDR"
+
+echo "== streaming fetch vs batch decompress =="
+"$BIN" fetch --url "http://$ADDR/models/mobilenet" --out-dir "$WORK/fetched"
+"$BIN" decompress --in "$WORK/models/mobilenet.dcbc" --out-dir "$WORK/batch"
+for f in "$WORK/batch"/*.npy; do
+  cmp "$f" "$WORK/fetched/$(basename "$f")"
+done
+echo "all tensors byte-identical"
+
+echo "== single-layer random-access fetch =="
+"$BIN" fetch --url "http://$ADDR/models/mobilenet" --layer 0 --out-dir "$WORK/single"
+
+echo "== 32-client loadgen =="
+"$BIN" loadgen --url "http://$ADDR" --clients 32 --requests 8 --out BENCH_serve.json
+cat BENCH_serve.json

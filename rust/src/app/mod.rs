@@ -175,7 +175,13 @@ pub fn table1_large_row(
         }
         let _ = workers;
     }
-    let (compressed, _, best_s) = best.unwrap();
+    let (compressed, _, best_s) = best.ok_or_else(|| {
+        anyhow::anyhow!(
+            "S sweep over {} candidate(s) produced no compressed model \
+             (empty --sweep grid?)",
+            s_grid.len()
+        )
+    })?;
     let compressed_bytes = compressed.serialize().len();
     let raw = synth.raw_bytes();
     let nz: usize = compressed
@@ -203,4 +209,19 @@ pub fn table1_large_row(
         report,
         compressed,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CompressionSpec;
+
+    #[test]
+    fn empty_s_sweep_is_an_error_not_a_panic() {
+        // regression: an empty candidate grid used to hit best.unwrap()
+        let spec = CompressionSpec::default();
+        let err = table1_large_row(Arch::MobileNetV1, 64, &[], &spec, 1, 7)
+            .expect_err("empty sweep must fail");
+        assert!(err.to_string().contains("no compressed model"), "{err}");
+    }
 }

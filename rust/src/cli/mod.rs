@@ -60,6 +60,17 @@ impl Args {
         }
     }
 
+    /// Like [`Self::get_usize`] but rejects 0 with a usage error — the
+    /// uniform validator for count-like flags (`--workers`, `--clients`,
+    /// `--requests`, `--chunks`, …) where zero is always a mistake.
+    pub fn get_count(&self, name: &str, default: usize) -> Result<usize, String> {
+        let v = self.get_usize(name, default)?;
+        if v == 0 {
+            return Err(format!("--{name} must be >= 1"));
+        }
+        Ok(v)
+    }
+
     pub fn get_f32(&self, name: &str, default: f32) -> Result<f32, String> {
         match self.get(name) {
             None => Ok(default),
@@ -95,7 +106,28 @@ USAGE:
   deepcabac sweep --model NAME [--points N] [--lambda-scales a,b,c] [--csv FILE]
       Rate-distortion sweep over (S, λ) — the paper's §3/§4 trade-off.
   deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
-      Generate + compress a synthetic ImageNet-scale model.
+                  [--out FILE]
+      Generate + compress a synthetic ImageNet-scale model (--out writes
+      the .dcbc container, e.g. to seed a serve directory).
+  deepcabac serve --dir DIR [--addr HOST:PORT] [--cache-mb N] [--workers N]
+      Serve every .dcbc container in DIR over HTTP: GET /models,
+      /models/{m}/manifest, /models/{m}/layers/{l} (compressed bytes,
+      Range supported), /models/{m}/layers/{l}/weights (server-side
+      decode through an LRU cache of --cache-mb), /stats, /healthz.
+      --addr defaults to 127.0.0.1:8080; port 0 picks an ephemeral port
+      (printed on startup).
+  deepcabac fetch --url http://HOST:PORT/models/NAME [--layer L]
+                  [--out-dir DIR] [--workers N]
+      Fetch a model from a serve endpoint. Without --layer the whole
+      container is streamed through the incremental decoder (layers
+      materialize while bytes arrive); --layer L (index or name) fetches
+      one layer's decoded weights via random access. --out-dir writes
+      {layer}.w.npy files.
+  deepcabac loadgen --url http://HOST:PORT [--clients N] [--requests M]
+                    [--out FILE]
+      Load-generate against a serve endpoint (mixed compressed-bytes and
+      decoded-weights GETs) and report p50/p99 latency + throughput;
+      --out writes BENCH_serve.json-style machine-readable results.
 ";
 
 #[cfg(test)]
@@ -126,5 +158,60 @@ mod tests {
     fn typed_accessor_errors() {
         let a = Args::parse(&sv(&["x", "--n", "abc"])).unwrap();
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn count_flags_reject_zero_uniformly() {
+        // --workers 0 and --clients 0 must fail as usage errors, not leak
+        // into downstream code
+        let a = Args::parse(&sv(&["serve", "--workers", "0"])).unwrap();
+        assert!(a.get_count("workers", 4).unwrap_err().contains("must be >= 1"));
+        let a = Args::parse(&sv(&["loadgen", "--clients", "0"])).unwrap();
+        assert!(a.get_count("clients", 8).unwrap_err().contains("must be >= 1"));
+        // defaults and positive values pass through
+        let a = Args::parse(&sv(&["serve"])).unwrap();
+        assert_eq!(a.get_count("workers", 4).unwrap(), 4);
+        let a = Args::parse(&sv(&["serve", "--workers", "16"])).unwrap();
+        assert_eq!(a.get_count("workers", 4).unwrap(), 16);
+        // non-integers still error through the same path
+        let a = Args::parse(&sv(&["serve", "--workers", "many"])).unwrap();
+        assert!(a.get_count("workers", 4).is_err());
+    }
+
+    #[test]
+    fn parses_serve_flags() {
+        let a = Args::parse(&sv(&[
+            "serve", "--dir", "models/", "--addr", "127.0.0.1:0", "--cache-mb", "128",
+            "--workers", "8",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "serve");
+        assert_eq!(a.get("dir"), Some("models/"));
+        assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
+        assert_eq!(a.get_usize("cache-mb", 64).unwrap(), 128);
+        assert_eq!(a.get_count("workers", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn parses_fetch_and_loadgen_flags() {
+        let a = Args::parse(&sv(&[
+            "fetch", "--url", "http://127.0.0.1:8080/models/lenet5", "--layer", "fc1",
+            "--out-dir", "/tmp/w",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "fetch");
+        assert_eq!(a.get("url"), Some("http://127.0.0.1:8080/models/lenet5"));
+        assert_eq!(a.get("layer"), Some("fc1"));
+        assert_eq!(a.get("out-dir"), Some("/tmp/w"));
+
+        let a = Args::parse(&sv(&[
+            "loadgen", "--url", "http://127.0.0.1:8080", "--clients", "32",
+            "--requests", "16", "--out", "BENCH_serve.json",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "loadgen");
+        assert_eq!(a.get_count("clients", 8).unwrap(), 32);
+        assert_eq!(a.get_count("requests", 32).unwrap(), 16);
+        assert_eq!(a.get("out"), Some("BENCH_serve.json"));
     }
 }

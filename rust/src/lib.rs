@@ -27,6 +27,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod synth;
 pub mod tensor;
 pub mod util;

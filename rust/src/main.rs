@@ -1,6 +1,7 @@
 //! DeepCABAC CLI entry point — see `deepcabac --help` / [`deepcabac::cli::USAGE`].
 
 use anyhow::{anyhow, bail, Context, Result};
+use byteorder::ByteOrder as _;
 use deepcabac::app;
 use deepcabac::cli::{Args, USAGE};
 use deepcabac::codec::{decode_levels, CodecConfig, LevelEncoder};
@@ -42,13 +43,16 @@ fn run(args: &Args) -> Result<()> {
         "anatomy" => cmd_anatomy(args),
         "sweep" => cmd_sweep(args),
         "synth" => cmd_synth(args),
+        "serve" => cmd_serve(args),
+        "fetch" => cmd_fetch(args),
+        "loadgen" => cmd_loadgen(args),
         other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
 
 fn base_spec(args: &Args) -> Result<CompressionSpec> {
-    let chunks = args.get_usize("chunks", 1).map_err(|e| anyhow!(e))?;
-    if chunks == 0 || chunks > deepcabac::model::container::MAX_CHUNKS {
+    let chunks = args.get_count("chunks", 1).map_err(|e| anyhow!(e))?;
+    if chunks > deepcabac::model::container::MAX_CHUNKS {
         bail!("--chunks must be in 1..={}", deepcabac::model::container::MAX_CHUNKS);
     }
     Ok(CompressionSpec {
@@ -60,7 +64,7 @@ fn base_spec(args: &Args) -> Result<CompressionSpec> {
 
 fn cmd_table1(args: &Args) -> Result<()> {
     let sweep_points = args.get_usize("sweep", 17).map_err(|e| anyhow!(e))?;
-    let workers = args.get_usize("workers", 1).map_err(|e| anyhow!(e))?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
     let scale = args.get_usize("scale", 8).map_err(|e| anyhow!(e))?;
     let with_eval = !args.has("no-eval");
     let spec = base_spec(args)?;
@@ -119,7 +123,7 @@ fn metric_scale(model: &str) -> f64 {
 fn cmd_compress(args: &Args) -> Result<()> {
     let name = args.get("model").context("--model required")?;
     let out = args.get("out").context("--out required")?;
-    let workers = args.get_usize("workers", 1).map_err(|e| anyhow!(e))?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
     let model = app::load_model(name)?;
     let mut spec = base_spec(args)?;
     let (compressed, report) = if let Some(s) = args.get("s") {
@@ -329,5 +333,173 @@ fn cmd_synth(args: &Args) -> Result<()> {
         row.ratio_pct,
         row.report.factor(),
     );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, row.compressed.serialize())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = deepcabac::serve::ServeOptions {
+        dir: std::path::PathBuf::from(args.get("dir").context("--dir required")?),
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        cache_bytes: args.get_usize("cache-mb", 64).map_err(|e| anyhow!(e))? << 20,
+        workers: args
+            .get_count(
+                "workers",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            )
+            .map_err(|e| anyhow!(e))?,
+    };
+    let handle = deepcabac::serve::server::start(opts.clone())?;
+    // the smoke script greps this exact line for the ephemeral port
+    println!("listening on http://{}", handle.addr());
+    println!(
+        "serving {:?} ({} workers, {} cache)",
+        opts.dir,
+        opts.workers,
+        human_bytes(opts.cache_bytes),
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    // foreground server: block until killed
+    loop {
+        std::thread::park();
+    }
+}
+
+/// Layer names from a remote container (or response header) are
+/// attacker-controlled: reduce them to a single safe path component so
+/// `--out-dir` writes can never traverse outside the output directory.
+fn safe_file_stem(name: &str) -> String {
+    let cleaned: String = name
+        .chars()
+        .map(|c| {
+            if c.is_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '_' }
+        })
+        .collect();
+    let cleaned = cleaned.trim_matches('.').to_string();
+    if cleaned.is_empty() {
+        "layer".to_string()
+    } else {
+        cleaned
+    }
+}
+
+fn cmd_fetch(args: &Args) -> Result<()> {
+    use deepcabac::serve::http;
+    use deepcabac::serve::{StreamDecoder, StreamEvent};
+
+    let url = args.get("url").context("--url required (http://HOST:PORT/models/NAME)")?;
+    let (addr, path) = http::parse_url(url)?;
+    let path = path.trim_end_matches('/').to_string();
+    let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+
+    if let Some(layer) = args.get("layer") {
+        // random access: one layer's server-side-decoded weights
+        let resp = http::get(&addr, &format!("{path}/layers/{layer}/weights"), None)?;
+        anyhow::ensure!(resp.status == 200, "HTTP {} fetching layer {layer}", resp.status);
+        let dims: Vec<usize> = resp
+            .header("x-dims")
+            .unwrap_or("")
+            .split(',')
+            .filter_map(|d| d.parse().ok())
+            .collect();
+        let name = resp.header("x-layer-name").unwrap_or(layer).to_string();
+        anyhow::ensure!(resp.body.len() % 4 == 0, "weight body not f32-aligned");
+        let mut weights = vec![0f32; resp.body.len() / 4];
+        byteorder::LittleEndian::read_f32_into(&resp.body, &mut weights);
+        println!(
+            "{name}: {} weights, dims {dims:?}, {} (cache {})",
+            weights.len(),
+            human_bytes(resp.body.len()),
+            resp.header("x-cache").unwrap_or("?"),
+        );
+        if let Some(d) = &out_dir {
+            let shape = if dims.is_empty() { vec![weights.len()] } else { dims };
+            let p = d.join(format!("{}.w.npy", safe_file_stem(&name)));
+            npy::write_npy_f32(&p, &shape, &weights)?;
+            println!("wrote {p:?}");
+        }
+        return Ok(());
+    }
+
+    // whole container: drive the streaming decoder straight off the socket
+    let mut dec = StreamDecoder::new();
+    let mut layers = Vec::new();
+    let (status, _headers, err_body) = http::get_streaming(&addr, &path, None, &mut |chunk| {
+        for ev in dec.feed(chunk)? {
+            match ev {
+                StreamEvent::Start { model, version, n_layers } => {
+                    eprintln!("[fetch] {model} v{version}: {n_layers} layers incoming");
+                }
+                StreamEvent::Chunk { layer, chunk, n_chunks, .. } => {
+                    if n_chunks > 1 {
+                        eprintln!("[fetch]   layer {layer}: chunk {}/{n_chunks}", chunk + 1);
+                    }
+                }
+                StreamEvent::Layer(l) => {
+                    eprintln!(
+                        "[fetch] layer {} ({}): {} weights decoded mid-stream",
+                        l.index,
+                        l.name,
+                        l.n_weights
+                    );
+                    layers.push(*l);
+                }
+                StreamEvent::End => {}
+            }
+        }
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        status == 200,
+        "HTTP {status} fetching {url}: {}",
+        String::from_utf8_lossy(&err_body)
+    );
+    dec.finish()?;
+    println!(
+        "{}: {} layers, {} container bytes streamed",
+        url,
+        layers.len(),
+        dec.bytes_consumed(),
+    );
+    if let Some(d) = &out_dir {
+        for l in &layers {
+            let p = d.join(format!("{}.w.npy", safe_file_stem(&l.name)));
+            npy::write_npy_f32(&p, &l.dims, &l.weights)?;
+            println!("wrote {p:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let opts = deepcabac::serve::loadgen::LoadgenOptions {
+        url: args.get("url").context("--url required (http://HOST:PORT)")?.to_string(),
+        clients: args.get_count("clients", 8).map_err(|e| anyhow!(e))?,
+        requests: args.get_count("requests", 32).map_err(|e| anyhow!(e))?,
+        out: Some(std::path::PathBuf::from(args.get_or("out", "BENCH_serve.json"))),
+    };
+    let report = deepcabac::serve::loadgen::run(&opts)?;
+    println!(
+        "{} clients x {} requests: {} ok / {} failed, p50 {:.2} ms, p99 {:.2} ms, {:.0} req/s, {}",
+        opts.clients,
+        opts.requests,
+        report.total_requests - report.failures,
+        report.failures,
+        report.p50_ms,
+        report.p99_ms,
+        report.throughput_rps,
+        human_bytes(report.bytes_transferred as usize),
+    );
+    if let Some(out) = &opts.out {
+        println!("wrote {out:?}");
+    }
+    anyhow::ensure!(report.failures == 0, "{} requests failed", report.failures);
     Ok(())
 }

@@ -38,6 +38,12 @@ const FLAG_SIG_NEIGHBORS: u8 = 1;
 /// Sanity cap on the per-layer chunk count (hostile-header guard).
 pub const MAX_CHUNKS: usize = 1 << 16;
 
+/// Hostile-header guard on embedded strings (model/layer names).
+pub const MAX_NAME_BYTES: usize = 1 << 20;
+
+/// Hostile-header guard on tensor rank.
+pub const MAX_DIMS: usize = 1 << 16;
+
 /// One independently decodable slice of a chunked layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ChunkInfo {
@@ -45,6 +51,17 @@ pub struct ChunkInfo {
     pub n_weights: usize,
     /// Payload bytes of this chunk's CABAC stream.
     pub bytes: usize,
+}
+
+/// A [`ChunkInfo`] resolved to its byte position inside a layer payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpan {
+    /// Byte offset of this chunk's CABAC stream within the layer payload.
+    pub offset: usize,
+    /// Byte length of the stream.
+    pub bytes: usize,
+    /// Levels coded in this chunk.
+    pub n_weights: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -79,29 +96,29 @@ impl CompressedLayer {
 
     /// [`Self::decode_levels`] with an explicit worker cap.
     pub fn decode_levels_with(&self, workers: usize) -> Vec<i32> {
-        if self.chunks.len() <= 1 {
+        let spans = self.chunk_spans();
+        if spans.len() <= 1 {
             return decode_levels(&self.payload, self.n_weights, self.cfg);
         }
-        // (byte offset, weight count) per chunk
-        let mut spans = Vec::with_capacity(self.chunks.len());
-        let (mut off, mut total_w) = (0usize, 0usize);
-        for c in &self.chunks {
-            spans.push((off, c.n_weights));
-            off += c.bytes;
-            total_w += c.n_weights;
-        }
-        debug_assert_eq!(off, self.payload.len());
-        debug_assert_eq!(total_w, self.n_weights);
-        let decoded = crate::util::par::map_indexed(self.chunks.len(), workers, |i| {
-            let (off, nw) = spans[i];
-            let end = off + self.chunks[i].bytes;
-            decode_levels(&self.payload[off..end], nw, self.cfg)
+        let decoded = crate::util::par::map_indexed(spans.len(), workers, |i| {
+            let s = spans[i];
+            decode_levels(&self.payload[s.offset..s.offset + s.bytes], s.n_weights, self.cfg)
         });
         let mut levels = Vec::with_capacity(self.n_weights);
         for s in decoded {
             levels.extend_from_slice(&s);
         }
         levels
+    }
+
+    /// Byte extent of every independently decodable CABAC stream inside
+    /// [`Self::payload`], in scan order — a single whole-payload span for
+    /// monolithic layers. This is the random-access map the streaming
+    /// decoder and the serving index are built on: each span can be
+    /// handed to [`decode_levels`] on its own (contexts reset at every
+    /// chunk boundary, exactly as the encoder coded them).
+    pub fn chunk_spans(&self) -> Vec<ChunkSpan> {
+        resolve_spans(&self.chunks, self.n_weights, self.payload.len())
     }
 
     /// Full reconstruction: levels × Δ.
@@ -182,136 +199,286 @@ impl CompressedModel {
     }
 
     pub fn deserialize(buf: &[u8]) -> Result<Self> {
-        let mut pos = 0usize;
-        if buf.len() < 5 || &buf[..4] != MAGIC {
-            bail!("not a DCBC container");
-        }
-        pos += 4;
-        let version = buf[pos];
-        pos += 1;
-        if version != VERSION && version != VERSION_CHUNKED {
-            bail!("unsupported DCBC version {version}");
-        }
-        let name = read_str(buf, &mut pos)?;
-        let n_layers = read_vi(buf, &mut pos)? as usize;
-        let mut layers = Vec::with_capacity(n_layers.min(1 << 16));
-        for _ in 0..n_layers {
-            let lname = read_str(buf, &mut pos)?;
-            let ndims = read_vi(buf, &mut pos)? as usize;
-            let mut dims = Vec::with_capacity(ndims.min(1 << 8));
-            for _ in 0..ndims {
-                dims.push(read_vi(buf, &mut pos)? as usize);
-            }
-            if pos + 4 > buf.len() {
-                bail!("truncated delta");
-            }
-            let delta = f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
-            pos += 4;
-            let max_level = read_vi(buf, &mut pos)? as i32;
-            let s_param = read_vi(buf, &mut pos)? as u32;
-            if pos + 4 > buf.len() {
-                bail!("truncated codec params");
-            }
-            let n_abs_flags = buf[pos] as u32;
-            let rem_tag = buf[pos + 1];
-            let rem_param = buf[pos + 2] as u32;
-            let flags = buf[pos + 3];
-            pos += 4;
-            let remainder = RemainderMode::from_tag(rem_tag, rem_param)
-                .ok_or_else(|| anyhow!("bad remainder tag {rem_tag}"))?;
-            let mut chunks = Vec::new();
-            if version == VERSION_CHUNKED {
-                let n_chunks = read_vi(buf, &mut pos)? as usize;
-                if n_chunks == 0 || n_chunks > MAX_CHUNKS {
-                    bail!("layer claims {n_chunks} chunks (hostile header?)");
+        let (prefix, mut pos) = match parse_container_prefix(buf)? {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => bail!("truncated container prelude"),
+        };
+        let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 16));
+        for _ in 0..prefix.n_layers {
+            let hdr = match parse_layer_header(&buf[pos..], prefix.version)? {
+                Parsed::Complete(h, n) => {
+                    pos += n;
+                    h
                 }
-                chunks.reserve(n_chunks.min(1 << 10));
-                for _ in 0..n_chunks {
-                    let cw = read_vi(buf, &mut pos)? as usize;
-                    let cb = read_vi(buf, &mut pos)? as usize;
-                    chunks.push(ChunkInfo { n_weights: cw, bytes: cb });
-                }
-                if n_chunks == 1 {
-                    chunks.clear(); // canonical monolithic representation
-                }
-            }
-            let n_weights = read_vi(buf, &mut pos)? as usize;
-            if n_weights > crate::baselines::MAX_DECODE_ELEMS {
-                bail!("layer claims {n_weights} weights (hostile header?)");
-            }
-            let plen = read_vi(buf, &mut pos)? as usize;
-            if pos + plen > buf.len() {
+                Parsed::NeedMore => bail!("truncated layer header"),
+            };
+            if hdr.payload_len > buf.len() - pos {
                 bail!("truncated payload");
             }
-            // a chunk table must tile the payload and the weight count
-            if !chunks.is_empty() {
-                let (mut ws, mut bs) = (0usize, 0usize);
-                for c in &chunks {
-                    ws = ws
-                        .checked_add(c.n_weights)
-                        .ok_or_else(|| anyhow!("chunk weight overflow"))?;
-                    bs = bs
-                        .checked_add(c.bytes)
-                        .ok_or_else(|| anyhow!("chunk byte overflow"))?;
+            let payload = buf[pos..pos + hdr.payload_len].to_vec();
+            pos += hdr.payload_len;
+            let blen = match parse_varint_prefix(&buf[pos..])? {
+                Parsed::Complete(v, n) => {
+                    pos += n;
+                    v as usize
                 }
-                if ws != n_weights || bs != plen {
-                    bail!(
-                        "chunk table inconsistent: {ws}/{n_weights} weights, {bs}/{plen} bytes"
-                    );
-                }
-            }
-            let payload = buf[pos..pos + plen].to_vec();
-            pos += plen;
-            let blen = read_vi(buf, &mut pos)? as usize;
-            if blen > crate::baselines::MAX_DECODE_ELEMS || pos + blen * 4 > buf.len() {
+                Parsed::NeedMore => bail!("truncated bias"),
+            };
+            if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
                 bail!("truncated bias");
             }
             let mut bias = vec![0f32; blen];
             LittleEndian::read_f32_into(&buf[pos..pos + blen * 4], &mut bias);
             pos += blen * 4;
             layers.push(CompressedLayer {
-                name: lname,
-                dims,
-                grid: QuantGrid { delta, max_level },
-                s_param,
-                cfg: CodecConfig {
-                    n_abs_flags,
-                    remainder,
-                    sig_ctx_neighbors: flags & FLAG_SIG_NEIGHBORS != 0,
-                },
-                n_weights,
+                name: hdr.name,
+                dims: hdr.dims,
+                grid: hdr.grid,
+                s_param: hdr.s_param,
+                cfg: hdr.cfg,
+                n_weights: hdr.n_weights,
                 payload,
-                chunks,
+                chunks: hdr.chunks,
                 bias,
             });
         }
         if pos != buf.len() {
             bail!("trailing bytes in container");
         }
-        Ok(Self { name, layers })
+        Ok(Self { name: prefix.name, layers })
     }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental (resumable) container parsing
+//
+// Everything below parses container structures out of a byte *prefix*, so
+// both the batch [`CompressedModel::deserialize`] above and the push-based
+// streaming decoder (`serve::stream`) and random-access index
+// (`serve::index`) share one definition of the format. `NeedMore` always
+// means "this is a valid start of a container — feed more bytes";
+// structural corruption is an `Err`.
+// ---------------------------------------------------------------------------
+
+/// Outcome of parsing a structure from a byte prefix.
+#[derive(Debug)]
+pub enum Parsed<T> {
+    /// Parsed successfully; `.1` is the number of bytes consumed.
+    Complete(T, usize),
+    /// Valid so far, but the structure is not complete yet.
+    NeedMore,
+}
+
+/// Container prelude: magic, version, model name and layer count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ContainerPrefix {
+    pub version: u8,
+    pub name: String,
+    pub n_layers: usize,
+}
+
+/// Everything in a layer record before the payload bytes, plus the payload
+/// length — enough to locate and independently decode every chunk without
+/// touching the rest of the container.
+#[derive(Debug, Clone)]
+pub struct LayerHeader {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub grid: QuantGrid,
+    pub s_param: u32,
+    pub cfg: CodecConfig,
+    /// Canonicalized like [`CompressedLayer::chunks`]: empty = monolithic.
+    pub chunks: Vec<ChunkInfo>,
+    pub n_weights: usize,
+    pub payload_len: usize,
+}
+
+impl LayerHeader {
+    /// Chunk extents relative to the start of this layer's payload
+    /// (mirror of [`CompressedLayer::chunk_spans`]; always ≥ 1 span).
+    pub fn chunk_spans(&self) -> Vec<ChunkSpan> {
+        resolve_spans(&self.chunks, self.n_weights, self.payload_len)
+    }
+}
+
+fn resolve_spans(chunks: &[ChunkInfo], n_weights: usize, payload_len: usize) -> Vec<ChunkSpan> {
+    if chunks.len() <= 1 {
+        return vec![ChunkSpan { offset: 0, bytes: payload_len, n_weights }];
+    }
+    let mut spans = Vec::with_capacity(chunks.len());
+    let mut off = 0usize;
+    for c in chunks {
+        spans.push(ChunkSpan { offset: off, bytes: c.bytes, n_weights: c.n_weights });
+        off += c.bytes;
+    }
+    debug_assert_eq!(off, payload_len);
+    spans
+}
+
+/// Prefix-parsing cursor: every accessor returns `Ok(None)` when it runs
+/// out of bytes (resume later with a longer prefix) and `Err` only on
+/// structurally invalid input.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn varint(&mut self) -> Result<Option<u64>> {
+        match read_varint(&self.buf[self.pos..]) {
+            Some((v, n)) => {
+                self.pos += n;
+                Ok(Some(v))
+            }
+            // 10 bytes always decide a u64 varint — still undecided means
+            // an overlong encoding, not a short buffer
+            None if self.buf.len() - self.pos >= 10 => bail!("malformed varint"),
+            None => Ok(None),
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    fn string(&mut self, what: &str) -> Result<Option<String>> {
+        let Some(len) = self.varint()? else { return Ok(None) };
+        if len as usize > MAX_NAME_BYTES {
+            bail!("{what} claims {len} bytes (hostile header?)");
+        }
+        let Some(bytes) = self.take(len as usize) else { return Ok(None) };
+        Ok(Some(std::str::from_utf8(bytes)?.to_string()))
+    }
+}
+
+/// Grabs a cursor accessor's value or reports `NeedMore` to the caller.
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return Ok(Parsed::NeedMore),
+        }
+    };
+}
+
+/// Parse the container prelude from a byte prefix.
+pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
+    // reject a wrong magic as early as the bytes allow
+    let probe = buf.len().min(4);
+    if buf[..probe] != MAGIC[..probe] {
+        bail!("not a DCBC container");
+    }
+    if buf.len() < 5 {
+        return Ok(Parsed::NeedMore);
+    }
+    let version = buf[4];
+    if version != VERSION && version != VERSION_CHUNKED {
+        bail!("unsupported DCBC version {version}");
+    }
+    let mut cur = Cur { buf, pos: 5 };
+    let name = need!(cur.string("model name")?);
+    let n_layers = need!(cur.varint()?) as usize;
+    Ok(Parsed::Complete(ContainerPrefix { version, name, n_layers }, cur.pos))
+}
+
+/// Parse one layer header (everything before the payload bytes) from a
+/// byte prefix starting at the layer record.
+pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>> {
+    let mut cur = Cur { buf, pos: 0 };
+    let name = need!(cur.string("layer name")?);
+    let ndims = need!(cur.varint()?) as usize;
+    if ndims > MAX_DIMS {
+        bail!("layer claims rank {ndims} (hostile header?)");
+    }
+    let mut dims = Vec::with_capacity(ndims.min(1 << 8));
+    for _ in 0..ndims {
+        dims.push(need!(cur.varint()?) as usize);
+    }
+    let delta = f32::from_le_bytes(need!(cur.take(4)).try_into().unwrap());
+    let max_level = need!(cur.varint()?) as i32;
+    let s_param = need!(cur.varint()?) as u32;
+    let params = need!(cur.take(4));
+    let (n_abs_flags, rem_tag, rem_param, flags) =
+        (params[0] as u32, params[1], params[2] as u32, params[3]);
+    let remainder = RemainderMode::from_tag(rem_tag, rem_param)
+        .ok_or_else(|| anyhow!("bad remainder tag {rem_tag}"))?;
+    let mut chunks = Vec::new();
+    if version == VERSION_CHUNKED {
+        let n_chunks = need!(cur.varint()?) as usize;
+        if n_chunks == 0 || n_chunks > MAX_CHUNKS {
+            bail!("layer claims {n_chunks} chunks (hostile header?)");
+        }
+        chunks.reserve(n_chunks.min(1 << 10));
+        for _ in 0..n_chunks {
+            let cw = need!(cur.varint()?) as usize;
+            let cb = need!(cur.varint()?) as usize;
+            chunks.push(ChunkInfo { n_weights: cw, bytes: cb });
+        }
+        if n_chunks == 1 {
+            chunks.clear(); // canonical monolithic representation
+        }
+    }
+    let n_weights = need!(cur.varint()?) as usize;
+    if n_weights > crate::baselines::MAX_DECODE_ELEMS {
+        bail!("layer claims {n_weights} weights (hostile header?)");
+    }
+    let payload_len = need!(cur.varint()?) as usize;
+    // hostile-header guard: even fully adversarial CABAC output (every
+    // bin mispredicted at the ~6 bits/bin worst case across sig, sign,
+    // up to 255 gr flags and the EG chain) stays far below 512
+    // bytes/weight, so anything bigger cannot be a real payload — and
+    // without this cap a streaming decoder could be made to buffer an
+    // arbitrarily large claimed payload
+    if payload_len > n_weights.saturating_mul(512).saturating_add(4096) {
+        bail!("layer claims {payload_len} payload bytes for {n_weights} weights (hostile header?)");
+    }
+    // a chunk table must tile the payload and the weight count
+    if !chunks.is_empty() {
+        let (mut ws, mut bs) = (0usize, 0usize);
+        for c in &chunks {
+            ws = ws
+                .checked_add(c.n_weights)
+                .ok_or_else(|| anyhow!("chunk weight overflow"))?;
+            bs = bs.checked_add(c.bytes).ok_or_else(|| anyhow!("chunk byte overflow"))?;
+        }
+        if ws != n_weights || bs != payload_len {
+            bail!("chunk table inconsistent: {ws}/{n_weights} weights, {bs}/{payload_len} bytes");
+        }
+    }
+    Ok(Parsed::Complete(
+        LayerHeader {
+            name,
+            dims,
+            grid: QuantGrid { delta, max_level },
+            s_param,
+            cfg: CodecConfig {
+                n_abs_flags,
+                remainder,
+                sig_ctx_neighbors: flags & FLAG_SIG_NEIGHBORS != 0,
+            },
+            chunks,
+            n_weights,
+            payload_len,
+        },
+        cur.pos,
+    ))
+}
+
+/// Parse a bare varint (e.g. the bias length field) from a byte prefix.
+pub fn parse_varint_prefix(buf: &[u8]) -> Result<Parsed<u64>> {
+    let mut cur = Cur { buf, pos: 0 };
+    let v = need!(cur.varint()?);
+    Ok(Parsed::Complete(v, cur.pos))
 }
 
 fn write_str(out: &mut Vec<u8>, s: &str) {
     write_varint(out, s.len() as u64);
     out.extend_from_slice(s.as_bytes());
-}
-
-fn read_str(buf: &[u8], pos: &mut usize) -> Result<String> {
-    let len = read_vi(buf, pos)? as usize;
-    if *pos + len > buf.len() {
-        bail!("truncated string");
-    }
-    let s = std::str::from_utf8(&buf[*pos..*pos + len])?.to_string();
-    *pos += len;
-    Ok(s)
-}
-
-fn read_vi(buf: &[u8], pos: &mut usize) -> Result<u64> {
-    let (v, n) =
-        read_varint(&buf[*pos..]).ok_or_else(|| anyhow!("truncated varint"))?;
-    *pos += n;
-    Ok(v)
 }
 
 #[cfg(test)]
@@ -422,6 +589,98 @@ mod tests {
             // parallel and serial chunk decode agree with the source levels
             assert_eq!(m2.layers[0].decode_levels_with(1), levels, "serial n={n_chunks}");
             assert_eq!(m2.layers[0].decode_levels(), levels, "parallel n={n_chunks}");
+        }
+    }
+
+    #[test]
+    fn decode_levels_with_agrees_across_worker_counts() {
+        // worker count must never change the decoded levels: 1 (inline),
+        // 2 (fewer workers than chunks), n_chunks (one per chunk) and
+        // more workers than chunks all agree with the source levels.
+        let cfg = CodecConfig::default();
+        let mut rng = crate::util::SplitMix64::new(7);
+        let levels: Vec<i32> = (0..4096)
+            .map(|_| {
+                if rng.next_f64() < 0.8 {
+                    0
+                } else {
+                    (1 + rng.below(30) as i32) * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+                }
+            })
+            .collect();
+        for n_chunks in [1usize, 3, 6] {
+            let layer = chunked_layer(&levels, n_chunks, cfg);
+            for workers in [1usize, 2, n_chunks, n_chunks + 5] {
+                assert_eq!(
+                    layer.decode_levels_with(workers),
+                    levels,
+                    "n_chunks={n_chunks} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_spans_tile_payload() {
+        let cfg = CodecConfig::default();
+        let levels: Vec<i32> = (0..1000).map(|i| (i % 7 - 3) as i32).collect();
+        // monolithic: one whole-payload span
+        let mono = chunked_layer(&levels, 1, cfg);
+        assert_eq!(
+            mono.chunk_spans(),
+            vec![ChunkSpan { offset: 0, bytes: mono.payload.len(), n_weights: 1000 }]
+        );
+        // chunked: spans are contiguous, ordered, and cover everything
+        let layer = chunked_layer(&levels, 4, cfg);
+        let spans = layer.chunk_spans();
+        assert_eq!(spans.len(), 4);
+        let mut off = 0usize;
+        let mut nw = 0usize;
+        for s in &spans {
+            assert_eq!(s.offset, off);
+            off += s.bytes;
+            nw += s.n_weights;
+        }
+        assert_eq!(off, layer.payload.len());
+        assert_eq!(nw, layer.n_weights);
+    }
+
+    #[test]
+    fn incremental_prefix_parsers_match_batch() {
+        // the shared prefix parsers must consume exactly the bytes the
+        // serializer wrote, and report NeedMore (never Err) on every
+        // strict prefix of a valid container
+        let cfg = CodecConfig::default();
+        let levels: Vec<i32> = (0..300).map(|i| (i % 11 - 5) as i32).collect();
+        let m = CompressedModel {
+            name: "px".into(),
+            layers: vec![chunked_layer(&levels, 3, cfg)],
+        };
+        let bytes = m.serialize();
+        let (prefix, used) = match parse_container_prefix(&bytes).unwrap() {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => panic!("full buffer must parse"),
+        };
+        assert_eq!(prefix.version, VERSION_CHUNKED);
+        assert_eq!(prefix.name, "px");
+        assert_eq!(prefix.n_layers, 1);
+        let hdr = match parse_layer_header(&bytes[used..], prefix.version).unwrap() {
+            Parsed::Complete(h, _) => h,
+            Parsed::NeedMore => panic!("full buffer must parse"),
+        };
+        assert_eq!(hdr.name, "chunky");
+        assert_eq!(hdr.n_weights, 300);
+        assert_eq!(hdr.chunks.len(), 3);
+        assert_eq!(
+            hdr.payload_len,
+            hdr.chunks.iter().map(|c| c.bytes).sum::<usize>()
+        );
+        // prefixes of the prelude: NeedMore, not Err
+        for cut in 0..used {
+            assert!(
+                matches!(parse_container_prefix(&bytes[..cut]).unwrap(), Parsed::NeedMore),
+                "cut={cut}"
+            );
         }
     }
 

@@ -1,0 +1,214 @@
+//! Byte-budgeted LRU cache for server-side-decoded layers.
+//!
+//! Keyed by `(model, layer index)`, value is the dequantized weight
+//! vector behind an `Arc` so eviction never invalidates an in-flight
+//! response. The decode itself runs *outside* the lock — concurrent
+//! misses on the same layer may decode twice, but a slow decode never
+//! blocks hits on other layers (first writer wins; the loser adopts the
+//! resident entry).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+type Key = (String, usize);
+
+struct Entry {
+    weights: Arc<Vec<f32>>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    /// Monotone recency clock.
+    tick: u64,
+    resident_bytes: usize,
+    budget_bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Point-in-time cache counters (served at `GET /stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub resident_bytes: usize,
+    pub budget_bytes: usize,
+}
+
+pub struct DecodedCache {
+    inner: Mutex<Inner>,
+}
+
+impl DecodedCache {
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+                budget_bytes,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Fetch `key`, decoding via `decode` on a miss. Returns the weights
+    /// plus whether this call was served from cache (the authoritative
+    /// `X-Cache` signal — computed under the same lock as the lookup, so
+    /// it cannot race with concurrent evictions). An entry larger than
+    /// the whole budget is returned but not retained.
+    pub fn get_or_decode(
+        &self,
+        model: &str,
+        layer: usize,
+        decode: impl FnOnce() -> Result<Vec<f32>>,
+    ) -> Result<(Arc<Vec<f32>>, bool)> {
+        {
+            let mut g = self.inner.lock().expect("cache lock");
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&(model.to_string(), layer)) {
+                e.last_used = tick;
+                let weights = e.weights.clone();
+                g.hits += 1;
+                return Ok((weights, true));
+            }
+            g.misses += 1;
+        }
+        // decode outside the lock
+        let weights = Arc::new(decode()?);
+        let bytes = weights.len() * 4;
+        let mut g = self.inner.lock().expect("cache lock");
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.map.get_mut(&(model.to_string(), layer)) {
+            // another thread decoded the same layer meanwhile — adopt its
+            // entry so all handlers share one allocation (still a miss
+            // from this caller's perspective: we did decode)
+            e.last_used = tick;
+            return Ok((e.weights.clone(), false));
+        }
+        if bytes > g.budget_bytes {
+            return Ok((weights, false)); // too big to ever cache
+        }
+        g.resident_bytes += bytes;
+        g.map.insert(
+            (model.to_string(), layer),
+            Entry { weights: weights.clone(), bytes, last_used: tick },
+        );
+        // evict least-recently-used entries (never the one just inserted)
+        while g.resident_bytes > g.budget_bytes {
+            let victim = g
+                .map
+                .iter()
+                .filter(|(k, _)| !(k.0 == model && k.1 == layer))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = g.map.remove(&k) {
+                        g.resident_bytes -= e.bytes;
+                        g.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        Ok((weights, false))
+    }
+
+    /// True if the key is currently resident (test/diagnostic helper —
+    /// does not touch recency or counters).
+    pub fn contains(&self, model: &str, layer: usize) -> bool {
+        let g = self.inner.lock().expect("cache lock");
+        g.map.contains_key(&(model.to_string(), layer))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("cache lock");
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            entries: g.map.len(),
+            resident_bytes: g.resident_bytes,
+            budget_bytes: g.budget_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(cache: &DecodedCache, model: &str, layer: usize, n: usize) -> Arc<Vec<f32>> {
+        cache.get_or_decode(model, layer, || Ok(vec![layer as f32; n])).unwrap().0
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let c = DecodedCache::new(1 << 20);
+        let (a, was_hit) = c.get_or_decode("m", 0, || Ok(vec![0.0; 100])).unwrap();
+        assert!(!was_hit);
+        let (b, was_hit) = c.get_or_decode("m", 0, || Ok(vec![0.0; 100])).unwrap();
+        assert!(was_hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.resident_bytes, 400);
+    }
+
+    #[test]
+    fn lru_eviction_order_and_budget() {
+        // budget fits two 100-element layers (800 B), not three
+        let c = DecodedCache::new(800);
+        fill(&c, "m", 0, 100);
+        fill(&c, "m", 1, 100);
+        fill(&c, "m", 0, 100); // touch 0 → 1 becomes LRU
+        fill(&c, "m", 2, 100); // evicts 1
+        assert!(c.contains("m", 0));
+        assert!(!c.contains("m", 1));
+        assert!(c.contains("m", 2));
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.resident_bytes <= 800);
+    }
+
+    #[test]
+    fn oversized_entry_not_retained() {
+        let c = DecodedCache::new(100);
+        let w = fill(&c, "m", 0, 1000); // 4000 B > 100 B budget
+        assert_eq!(w.len(), 1000);
+        assert!(!c.contains("m", 0));
+        assert_eq!(c.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn distinct_models_do_not_collide() {
+        let c = DecodedCache::new(1 << 20);
+        fill(&c, "a", 0, 10);
+        fill(&c, "b", 0, 20);
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(fill(&c, "a", 0, 10).len(), 10);
+        assert_eq!(fill(&c, "b", 0, 20).len(), 20);
+    }
+
+    #[test]
+    fn decode_error_propagates_and_is_not_cached() {
+        let c = DecodedCache::new(1 << 20);
+        let r = c.get_or_decode("m", 3, || anyhow::bail!("corrupt layer"));
+        assert!(r.is_err());
+        assert!(!c.contains("m", 3));
+        // a later good decode succeeds
+        assert_eq!(fill(&c, "m", 3, 5).len(), 5);
+    }
+}

@@ -1,0 +1,370 @@
+//! Minimal HTTP/1.1 framing over `std::net` — just enough for the model
+//! delivery server and its clients: GET requests, `Content-Length`
+//! bodies, `Range: bytes=…` on both sides, `Connection: close`
+//! semantics. Deliberately not a general HTTP implementation.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Cap on request head size (hostile-client guard).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// A parsed request head (the server never needs bodies).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    headers: Vec<(String, String)>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse `Range: bytes=a-b` against a body of `len` bytes, with RFC
+    /// 7233 semantics: `Ignored` when the header is absent, malformed,
+    /// uses an unknown unit, or asks for multipart ranges (the server
+    /// must then answer 200 with the full body), `Satisfiable` with the
+    /// half-open range when it can be honored (→ 206), `Unsatisfiable`
+    /// only for a syntactically valid single bytes-range that lies
+    /// outside the body (→ 416).
+    pub fn byte_range(&self, len: usize) -> RangeOutcome {
+        let Some(spec) = self.header("range") else { return RangeOutcome::Ignored };
+        let spec = spec.trim();
+        let Some(spec) = spec.strip_prefix("bytes=") else {
+            return RangeOutcome::Ignored; // unknown unit: MUST ignore
+        };
+        if spec.contains(',') {
+            return RangeOutcome::Ignored; // multipart unsupported: serve full
+        }
+        let Some((a, b)) = spec.split_once('-') else { return RangeOutcome::Ignored };
+        let (start, end) = match (a.trim(), b.trim()) {
+            ("", "") => return RangeOutcome::Ignored,
+            // suffix range: last N bytes
+            ("", n) => {
+                let Ok(n) = n.parse::<usize>() else { return RangeOutcome::Ignored };
+                if n == 0 {
+                    return RangeOutcome::Unsatisfiable;
+                }
+                (len.saturating_sub(n), len)
+            }
+            (s, "") => {
+                let Ok(s) = s.parse::<usize>() else { return RangeOutcome::Ignored };
+                (s, len)
+            }
+            (s, e) => {
+                let (Ok(s), Ok(e)) = (s.parse::<usize>(), e.parse::<usize>()) else {
+                    return RangeOutcome::Ignored;
+                };
+                (s, e.saturating_add(1).min(len))
+            }
+        };
+        if start >= len || start >= end {
+            return RangeOutcome::Unsatisfiable;
+        }
+        RangeOutcome::Satisfiable(start..end)
+    }
+}
+
+/// Outcome of [`Request::byte_range`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RangeOutcome {
+    /// No usable Range header — serve the full body with 200.
+    Ignored,
+    /// Serve this slice with 206.
+    Satisfiable(std::ops::Range<usize>),
+    /// Answer 416 with `Content-Range: bytes */len`.
+    Unsatisfiable,
+}
+
+/// Make a container/user-supplied string safe to embed in a response
+/// header: control characters (notably CR/LF — response splitting) are
+/// replaced with `_`.
+pub fn sanitize_header_value(s: &str) -> String {
+    s.chars().map(|c| if c.is_control() { '_' } else { c }).collect()
+}
+
+/// Read and parse one request head off the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    // hard-cap everything read while parsing the head, so a hostile
+    // client cannot grow a single header line without bound
+    let mut reader = BufReader::new(Read::take(&mut *stream, MAX_HEAD_BYTES as u64));
+    let mut head = Vec::new();
+    loop {
+        let mut line = Vec::new();
+        let n = reader.read_until(b'\n', &mut line)?;
+        if n == 0 {
+            if head.len() + line.len() >= MAX_HEAD_BYTES {
+                bail!("request head too large");
+            }
+            bail!("connection closed mid-request");
+        }
+        if line == b"\r\n" || line == b"\n" {
+            break;
+        }
+        head.extend_from_slice(&line);
+        if head.len() >= MAX_HEAD_BYTES {
+            bail!("request head too large");
+        }
+    }
+    let head = std::str::from_utf8(&head).context("non-utf8 request head")?;
+    let mut lines = head.lines();
+    let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    Ok(Request { method, path, headers })
+}
+
+/// Write a full response (status line, standard headers, body).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Convenience error response (plain-text body).
+pub fn write_error(stream: &mut TcpStream, status: u16, reason: &str, msg: &str) -> Result<()> {
+    write_response(stream, status, reason, "text/plain", &[], msg.as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// Client side
+// ---------------------------------------------------------------------------
+
+/// Split `http://host:port/path` into (`host:port`, `/path`).
+pub fn parse_url(url: &str) -> Result<(String, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| anyhow!("only http:// URLs are supported: {url}"))?;
+    let (addr, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    if addr.is_empty() {
+        bail!("empty host in {url}");
+    }
+    let addr =
+        if addr.contains(':') { addr.to_string() } else { format!("{addr}:80") };
+    Ok((addr, path.to_string()))
+}
+
+/// A client-side response.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Blocking GET, whole body in memory.
+pub fn get(addr: &str, path: &str, range: Option<(u64, u64)>) -> Result<ClientResponse> {
+    let mut body = Vec::new();
+    let (status, headers, err_body) = get_streaming(addr, path, range, &mut |chunk| {
+        body.extend_from_slice(chunk);
+        Ok(())
+    })?;
+    // non-2xx bodies bypass the sink; splice them back for the caller
+    if body.is_empty() {
+        body = err_body;
+    }
+    Ok(ClientResponse { status, headers, body })
+}
+
+/// Blocking GET that hands body bytes to `sink` as they arrive off the
+/// socket — this is what drives [`super::stream::StreamDecoder`] for
+/// over-the-wire incremental decode. The sink only ever sees **2xx**
+/// bodies; a non-2xx body (an error page, not payload) is collected and
+/// returned as the third tuple element instead, so callers can report
+/// the status without feeding garbage into a decoder.
+pub fn get_streaming(
+    addr: &str,
+    path: &str,
+    range: Option<(u64, u64)>,
+    sink: &mut dyn FnMut(&[u8]) -> Result<()>,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    // a stalled/saturated server must surface as an error, not a hang
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+    let range_hdr = match range {
+        Some((a, b)) => format!("Range: bytes={a}-{b}\r\n"),
+        None => String::new(),
+    };
+    let req = format!(
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\n{range_hdr}Connection: close\r\n\r\n"
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    // status line
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let proto = parts.next().unwrap_or("");
+    if !proto.starts_with("HTTP/1.") {
+        bail!("not an HTTP response: {line:?}");
+    }
+    let status: u16 = parts.next().unwrap_or("").parse().context("bad status")?;
+    // headers
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("connection closed in response head");
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    let content_length: Option<usize> = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok());
+    // body: stream until Content-Length is satisfied (or EOF without one)
+    let ok = (200..300).contains(&status);
+    let mut err_body = Vec::new();
+    let mut remaining = content_length;
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        if remaining == Some(0) {
+            break;
+        }
+        let want = match remaining {
+            Some(r) => r.min(chunk.len()),
+            None => chunk.len(),
+        };
+        let n = reader.read(&mut chunk[..want])?;
+        if n == 0 {
+            if let Some(r) = remaining {
+                if r > 0 {
+                    bail!("connection closed {r} bytes early");
+                }
+            }
+            break;
+        }
+        if ok {
+            sink(&chunk[..n])?;
+        } else if err_body.len() < 64 * 1024 {
+            err_body.extend_from_slice(&chunk[..n]);
+        }
+        if let Some(r) = remaining.as_mut() {
+            *r -= n;
+        }
+    }
+    Ok((status, headers, err_body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_with_range(spec: Option<&str>) -> Request {
+        let mut headers = vec![("Host".to_string(), "x".to_string())];
+        if let Some(s) = spec {
+            headers.push(("Range".to_string(), s.to_string()));
+        }
+        Request { method: "GET".into(), path: "/".into(), headers }
+    }
+
+    #[test]
+    fn range_parsing() {
+        use RangeOutcome::*;
+        let r = |spec| req_with_range(spec).byte_range(100);
+        assert_eq!(r(None), Ignored);
+        assert_eq!(r(Some("bytes=0-9")), Satisfiable(0..10));
+        assert_eq!(r(Some("bytes=90-")), Satisfiable(90..100));
+        assert_eq!(r(Some("bytes=-10")), Satisfiable(90..100));
+        // end clamps to len
+        assert_eq!(r(Some("bytes=50-500")), Satisfiable(50..100));
+        // syntactically valid but outside the body → 416
+        assert_eq!(r(Some("bytes=100-")), Unsatisfiable);
+        assert_eq!(r(Some("bytes=9-3")), Unsatisfiable);
+        assert_eq!(r(Some("bytes=-0")), Unsatisfiable);
+        // malformed / unknown unit / multipart → RFC 7233 says ignore
+        assert_eq!(r(Some("bytes=")), Ignored);
+        assert_eq!(r(Some("bytes=x-y")), Ignored);
+        assert_eq!(r(Some("items=0-4")), Ignored);
+        assert_eq!(r(Some("bytes=0-4,10-12")), Ignored);
+    }
+
+    #[test]
+    fn header_value_sanitization() {
+        assert_eq!(sanitize_header_value("conv1"), "conv1");
+        assert_eq!(
+            sanitize_header_value("x\r\nSet-Cookie: evil=1"),
+            "x__Set-Cookie: evil=1"
+        );
+        assert_eq!(sanitize_header_value("a\tb\u{7f}c"), "a_b_c");
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive() {
+        let r = req_with_range(Some("bytes=0-0"));
+        assert!(r.header("RANGE").is_some());
+        assert!(r.header("host").is_some());
+        assert!(r.header("cookie").is_none());
+    }
+
+    #[test]
+    fn url_parsing() {
+        assert_eq!(
+            parse_url("http://127.0.0.1:8080/models/x").unwrap(),
+            ("127.0.0.1:8080".to_string(), "/models/x".to_string())
+        );
+        assert_eq!(
+            parse_url("http://example.com").unwrap(),
+            ("example.com:80".to_string(), "/".to_string())
+        );
+        assert!(parse_url("https://x/y").is_err());
+        assert!(parse_url("ftp://x").is_err());
+        assert!(parse_url("http:///path").is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! Random-access reader over a serialized `.dcbc` container.
+//!
+//! [`ContainerIndex::build`] walks the v1/v2 headers once (skipping every
+//! payload byte) and records absolute byte ranges for each layer's
+//! payload, each chunk inside it, and the raw bias bytes. A client can
+//! then fetch and decode a single layer — or a single chunk — without
+//! touching the rest of the file; the server's `Range` support and the
+//! decoded-layer cache are both built on this.
+
+use crate::codec::{decode_levels, CodecConfig};
+use crate::model::container::{
+    parse_container_prefix, parse_layer_header, parse_varint_prefix, Parsed,
+};
+use crate::quant::QuantGrid;
+use crate::util::par;
+use anyhow::{anyhow, bail, Result};
+use byteorder::{ByteOrder, LittleEndian};
+use std::ops::Range;
+
+/// One chunk's absolute position in the container file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexedChunk {
+    /// Levels coded in this chunk.
+    pub n_weights: usize,
+    /// Absolute byte range of the chunk's CABAC stream.
+    pub bytes: Range<usize>,
+}
+
+/// One layer's metadata + absolute byte ranges.
+#[derive(Debug, Clone)]
+pub struct IndexedLayer {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub grid: QuantGrid,
+    pub s_param: u32,
+    pub cfg: CodecConfig,
+    pub n_weights: usize,
+    /// Absolute byte range of the whole CABAC payload.
+    pub payload: Range<usize>,
+    /// Per-chunk ranges tiling `payload` (≥ 1 entry).
+    pub chunks: Vec<IndexedChunk>,
+    /// Absolute byte range of the raw little-endian f32 bias bytes.
+    pub bias: Range<usize>,
+}
+
+impl IndexedLayer {
+    pub fn bias_count(&self) -> usize {
+        self.bias.len() / 4
+    }
+}
+
+/// Byte-level map of one container: everything needed for random access.
+#[derive(Debug, Clone)]
+pub struct ContainerIndex {
+    pub model: String,
+    pub version: u8,
+    pub container_len: usize,
+    pub layers: Vec<IndexedLayer>,
+}
+
+impl ContainerIndex {
+    /// Build the index by scanning headers only — O(header bytes), no
+    /// payload is read or decoded.
+    pub fn build(buf: &[u8]) -> Result<Self> {
+        let (prefix, mut pos) = match parse_container_prefix(buf)? {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => bail!("truncated container prelude"),
+        };
+        let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 16));
+        for _ in 0..prefix.n_layers {
+            let hdr = match parse_layer_header(&buf[pos..], prefix.version)? {
+                Parsed::Complete(h, n) => {
+                    pos += n;
+                    h
+                }
+                Parsed::NeedMore => bail!("truncated layer header"),
+            };
+            if hdr.payload_len > buf.len() - pos {
+                bail!("truncated payload");
+            }
+            let payload = pos..pos + hdr.payload_len;
+            let chunks = hdr
+                .chunk_spans()
+                .into_iter()
+                .map(|s| IndexedChunk {
+                    n_weights: s.n_weights,
+                    bytes: pos + s.offset..pos + s.offset + s.bytes,
+                })
+                .collect();
+            pos += hdr.payload_len;
+            let blen = match parse_varint_prefix(&buf[pos..])? {
+                Parsed::Complete(v, n) => {
+                    pos += n;
+                    v as usize
+                }
+                Parsed::NeedMore => bail!("truncated bias"),
+            };
+            if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
+                bail!("truncated bias");
+            }
+            let bias = pos..pos + blen * 4;
+            pos += blen * 4;
+            layers.push(IndexedLayer {
+                name: hdr.name,
+                dims: hdr.dims,
+                grid: hdr.grid,
+                s_param: hdr.s_param,
+                cfg: hdr.cfg,
+                n_weights: hdr.n_weights,
+                payload,
+                chunks,
+                bias,
+            });
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in container");
+        }
+        Ok(Self {
+            model: prefix.name,
+            version: prefix.version,
+            container_len: buf.len(),
+            layers,
+        })
+    }
+
+    /// Resolve a layer by name (`"conv1"`) or by index (`"3"`). An exact
+    /// name match wins over the numeric interpretation, so a model whose
+    /// layers are *named* with digits never silently serves a different
+    /// layer than the one asked for.
+    pub fn resolve(&self, id: &str) -> Option<usize> {
+        if let Some(i) = self.layers.iter().position(|l| l.name == id) {
+            return Some(i);
+        }
+        match id.parse::<usize>() {
+            Ok(i) if i < self.layers.len() => Some(i),
+            _ => None,
+        }
+    }
+
+    /// The compressed payload bytes of one layer.
+    pub fn layer_payload<'a>(&self, buf: &'a [u8], layer: usize) -> Result<&'a [u8]> {
+        let l = self.layer(layer)?;
+        buf.get(l.payload.clone())
+            .ok_or_else(|| anyhow!("container buffer shorter than index"))
+    }
+
+    /// Decode one layer's integer levels straight out of the container
+    /// buffer, fanning chunks over up to `workers` threads. Identical to
+    /// [`crate::model::CompressedLayer::decode_levels_with`].
+    pub fn decode_layer_levels(
+        &self,
+        buf: &[u8],
+        layer: usize,
+        workers: usize,
+    ) -> Result<Vec<i32>> {
+        let l = self.layer(layer)?;
+        if self.container_len != buf.len() {
+            bail!("container buffer shorter than index");
+        }
+        let decoded = par::map_indexed(l.chunks.len(), workers, |i| {
+            let c = &l.chunks[i];
+            decode_levels(&buf[c.bytes.clone()], c.n_weights, l.cfg)
+        });
+        let mut levels = Vec::with_capacity(l.n_weights);
+        for s in decoded {
+            levels.extend_from_slice(&s);
+        }
+        Ok(levels)
+    }
+
+    /// Decode one layer's reconstructed weights (levels × Δ).
+    pub fn decode_layer_weights(
+        &self,
+        buf: &[u8],
+        layer: usize,
+        workers: usize,
+    ) -> Result<Vec<f32>> {
+        let l = self.layer(layer)?;
+        let levels = self.decode_layer_levels(buf, layer, workers)?;
+        Ok(l.grid.dequantize(&levels))
+    }
+
+    /// One layer's raw bias values.
+    pub fn layer_bias(&self, buf: &[u8], layer: usize) -> Result<Vec<f32>> {
+        let l = self.layer(layer)?;
+        let bytes = buf
+            .get(l.bias.clone())
+            .ok_or_else(|| anyhow!("container buffer shorter than index"))?;
+        let mut bias = vec![0f32; bytes.len() / 4];
+        LittleEndian::read_f32_into(bytes, &mut bias);
+        Ok(bias)
+    }
+
+    fn layer(&self, i: usize) -> Result<&IndexedLayer> {
+        self.layers.get(i).ok_or_else(|| {
+            anyhow!("layer {i} out of range (container has {})", self.layers.len())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{encode_levels, CodecConfig};
+    use crate::model::{ChunkInfo, CompressedLayer, CompressedModel};
+    use crate::util::SplitMix64;
+
+    fn build_model(chunked: bool) -> CompressedModel {
+        let cfg = CodecConfig::default();
+        let mut rng = SplitMix64::new(21);
+        let mut layers = Vec::new();
+        for (li, n) in [900usize, 333, 80].iter().enumerate() {
+            let levels: Vec<i32> = (0..*n)
+                .map(|_| {
+                    if rng.next_f64() < 0.7 {
+                        0
+                    } else {
+                        (1 + rng.below(20) as i32)
+                            * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+                    }
+                })
+                .collect();
+            let n_chunks = if chunked && li != 2 { 3 } else { 1 };
+            let per = ((levels.len() + n_chunks - 1) / n_chunks).max(1);
+            let mut payload = Vec::new();
+            let mut chunks = Vec::new();
+            for part in levels.chunks(per) {
+                let bytes = encode_levels(part, cfg);
+                chunks.push(ChunkInfo { n_weights: part.len(), bytes: bytes.len() });
+                payload.extend_from_slice(&bytes);
+            }
+            if chunks.len() <= 1 {
+                chunks.clear();
+            }
+            layers.push(CompressedLayer {
+                name: format!("l{li}"),
+                dims: vec![levels.len()],
+                grid: crate::quant::QuantGrid { delta: 0.0625, max_level: 25 },
+                s_param: 9,
+                cfg,
+                n_weights: levels.len(),
+                payload,
+                chunks,
+                bias: (0..li).map(|b| b as f32 * 0.5).collect(),
+            });
+        }
+        CompressedModel { name: "indexed".into(), layers }
+    }
+
+    #[test]
+    fn index_matches_batch_decode() {
+        for chunked in [false, true] {
+            let model = build_model(chunked);
+            let bytes = model.serialize();
+            let idx = ContainerIndex::build(&bytes).unwrap();
+            assert_eq!(idx.model, "indexed");
+            assert_eq!(idx.layers.len(), model.layers.len());
+            assert_eq!(idx.container_len, bytes.len());
+            for (i, l) in model.layers.iter().enumerate() {
+                // payload range points at the exact stored payload bytes
+                assert_eq!(idx.layer_payload(&bytes, i).unwrap(), &l.payload[..]);
+                // chunk ranges tile the payload range
+                let il = &idx.layers[i];
+                assert_eq!(il.chunks.len(), l.n_chunks());
+                assert_eq!(il.chunks.first().unwrap().bytes.start, il.payload.start);
+                assert_eq!(il.chunks.last().unwrap().bytes.end, il.payload.end);
+                // random-access decode == batch decode, serial and parallel
+                for workers in [1usize, 4] {
+                    assert_eq!(
+                        idx.decode_layer_levels(&bytes, i, workers).unwrap(),
+                        l.decode_levels(),
+                        "layer {i} workers {workers}"
+                    );
+                }
+                let got: Vec<u32> = idx
+                    .decode_layer_weights(&bytes, i, 2)
+                    .unwrap()
+                    .iter()
+                    .map(|w| w.to_bits())
+                    .collect();
+                let want: Vec<u32> =
+                    l.decode_weights().iter().map(|w| w.to_bits()).collect();
+                assert_eq!(got, want);
+                assert_eq!(idx.layer_bias(&bytes, i).unwrap(), l.bias);
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_by_index_and_name() {
+        let bytes = build_model(true).serialize();
+        let idx = ContainerIndex::build(&bytes).unwrap();
+        assert_eq!(idx.resolve("0"), Some(0));
+        assert_eq!(idx.resolve("l2"), Some(2));
+        assert_eq!(idx.resolve("7"), None);
+        assert_eq!(idx.resolve("nope"), None);
+        assert!(idx.decode_layer_levels(&bytes, 99, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_containers() {
+        let bytes = build_model(true).serialize();
+        assert!(ContainerIndex::build(&bytes[..bytes.len() - 2]).is_err());
+        assert!(ContainerIndex::build(&bytes[1..]).is_err());
+        let mut bad = bytes.clone();
+        bad[4] = 42;
+        assert!(ContainerIndex::build(&bad).is_err());
+    }
+}

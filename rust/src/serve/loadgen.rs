@@ -1,0 +1,256 @@
+//! Concurrent-client load generator for the model-delivery server.
+//!
+//! Spawns `clients` threads, each issuing `requests` GETs against a mix
+//! of the compressed-bytes and decoded-weights endpoints (layers picked
+//! round-robin across every model the server lists), and reports
+//! p50/p99/mean latency + throughput, machine-readable to
+//! `BENCH_serve.json`.
+
+use super::http;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Server base URL, e.g. `http://127.0.0.1:8080`.
+    pub url: String,
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    /// Where to write the JSON report (None = don't write).
+    pub out: Option<PathBuf>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub total_requests: usize,
+    pub failures: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub throughput_rps: f64,
+    pub wall_s: f64,
+    pub bytes_transferred: u64,
+    pub bytes_requests: usize,
+    pub weights_requests: usize,
+}
+
+/// One target the mix rotates over.
+#[derive(Debug, Clone)]
+struct Target {
+    model: String,
+    layer: usize,
+}
+
+/// Discover every (model, layer) pair the server offers.
+fn discover(addr: &str, base_path: &str) -> Result<Vec<Target>> {
+    let resp = http::get(addr, &format!("{base_path}/models"), None)?;
+    if resp.status != 200 {
+        bail!("GET {base_path}/models returned {}", resp.status);
+    }
+    let listing = Json::parse(std::str::from_utf8(&resp.body)?)
+        .map_err(|e| anyhow::anyhow!("bad /models JSON: {e}"))?;
+    let mut targets = Vec::new();
+    for m in listing.get("models").and_then(|m| m.as_arr()).unwrap_or(&[]) {
+        let Some(name) = m.get("name").and_then(|n| n.as_str()) else { continue };
+        let layers = m.get("layers").and_then(|l| l.as_usize()).unwrap_or(0);
+        for layer in 0..layers {
+            targets.push(Target { model: name.to_string(), layer });
+        }
+    }
+    if targets.is_empty() {
+        bail!("server lists no layers to fetch");
+    }
+    Ok(targets)
+}
+
+/// Run the load; returns the aggregate report (and writes `out` if set).
+pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    let (addr, base_path) = http::parse_url(&opts.url)?;
+    let base_path = base_path.trim_end_matches('/').to_string();
+    let targets = discover(&addr, &base_path)?;
+
+    struct ClientResult {
+        latencies_ms: Vec<f64>,
+        failures: usize,
+        bytes: u64,
+        bytes_requests: usize,
+        weights_requests: usize,
+    }
+
+    let t0 = Instant::now();
+    let results: Vec<ClientResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|c| {
+                let addr = &addr;
+                let base_path = &base_path;
+                let targets = &targets;
+                scope.spawn(move || {
+                    let mut r = ClientResult {
+                        latencies_ms: Vec::with_capacity(opts.requests),
+                        failures: 0,
+                        bytes: 0,
+                        bytes_requests: 0,
+                        weights_requests: 0,
+                    };
+                    for i in 0..opts.requests {
+                        let t = &targets[(c + i * 7) % targets.len()];
+                        // alternate compressed-bytes and decoded-weights
+                        let weights = (c + i) % 2 == 1;
+                        let path = if weights {
+                            r.weights_requests += 1;
+                            format!(
+                                "{base_path}/models/{}/layers/{}/weights",
+                                t.model, t.layer
+                            )
+                        } else {
+                            r.bytes_requests += 1;
+                            format!("{base_path}/models/{}/layers/{}", t.model, t.layer)
+                        };
+                        let rt0 = Instant::now();
+                        match http::get(addr, &path, None) {
+                            Ok(resp) if resp.status == 200 => {
+                                r.latencies_ms
+                                    .push(rt0.elapsed().as_secs_f64() * 1e3);
+                                r.bytes += resp.body.len() as u64;
+                            }
+                            Ok(resp) => {
+                                eprintln!(
+                                    "[loadgen] {} -> HTTP {}",
+                                    path, resp.status
+                                );
+                                r.failures += 1;
+                            }
+                            Err(e) => {
+                                eprintln!("[loadgen] {path} -> {e}");
+                                r.failures += 1;
+                            }
+                        }
+                    }
+                    r
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut failures = 0usize;
+    let mut bytes = 0u64;
+    let (mut breq, mut wreq) = (0usize, 0usize);
+    for r in results {
+        latencies.extend_from_slice(&r.latencies_ms);
+        failures += r.failures;
+        bytes += r.bytes;
+        breq += r.bytes_requests;
+        wreq += r.weights_requests;
+    }
+    if latencies.is_empty() {
+        bail!("all {} requests failed", opts.clients * opts.requests);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let report = LoadgenReport {
+        total_requests: opts.clients * opts.requests,
+        failures,
+        p50_ms: percentile(&latencies, 50.0),
+        p99_ms: percentile(&latencies, 99.0),
+        mean_ms: latencies.iter().sum::<f64>() / latencies.len() as f64,
+        min_ms: latencies[0],
+        max_ms: latencies[latencies.len() - 1],
+        throughput_rps: latencies.len() as f64 / wall_s.max(1e-9),
+        wall_s,
+        bytes_transferred: bytes,
+        bytes_requests: breq,
+        weights_requests: wreq,
+    };
+    if let Some(path) = &opts.out {
+        std::fs::write(path, to_json(opts, &report).to_string_pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+    }
+    Ok(report)
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
+    json::obj(vec![
+        ("bench", json::s("serve")),
+        ("url", json::s(&opts.url)),
+        ("clients", json::num(opts.clients as f64)),
+        ("requests_per_client", json::num(opts.requests as f64)),
+        ("total_requests", json::num(r.total_requests as f64)),
+        ("failures", json::num(r.failures as f64)),
+        ("p50_ms", json::num(r.p50_ms)),
+        ("p99_ms", json::num(r.p99_ms)),
+        ("mean_ms", json::num(r.mean_ms)),
+        ("min_ms", json::num(r.min_ms)),
+        ("max_ms", json::num(r.max_ms)),
+        ("throughput_rps", json::num(r.throughput_rps)),
+        ("wall_s", json::num(r.wall_s)),
+        ("bytes_transferred", json::num(r.bytes_transferred as f64)),
+        (
+            "mix",
+            json::obj(vec![
+                ("layer_bytes", json::num(r.bytes_requests as f64)),
+                ("layer_weights", json::num(r.weights_requests as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 51.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let opts = LoadgenOptions {
+            url: "http://x:1".into(),
+            clients: 2,
+            requests: 3,
+            out: None,
+        };
+        let r = LoadgenReport {
+            total_requests: 6,
+            failures: 0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            mean_ms: 1.2,
+            min_ms: 0.8,
+            max_ms: 2.0,
+            throughput_rps: 100.0,
+            wall_s: 0.06,
+            bytes_transferred: 1234,
+            bytes_requests: 3,
+            weights_requests: 3,
+        };
+        let j = to_json(&opts, &r);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(parsed.get("failures").unwrap().as_usize().unwrap(), 0);
+        assert!(parsed.get("p50_ms").is_some());
+        assert!(parsed.get("p99_ms").is_some());
+        assert_eq!(parsed.path("mix.layer_bytes").unwrap().as_usize().unwrap(), 3);
+    }
+}

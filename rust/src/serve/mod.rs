@@ -1,0 +1,36 @@
+//! Model-delivery serving over `.dcbc` containers.
+//!
+//! DeepCABAC's deployment target is transmitting compressed networks to
+//! many resource-constrained clients (paper §1; arXiv:1907.11900 frames
+//! it explicitly as a transmission codec). This subsystem turns the
+//! batch codec into that delivery path, dependency-free (`std::net` +
+//! [`crate::util::par`]):
+//!
+//! * [`stream`] — a push-based incremental decoder: `feed()` bytes as
+//!   they arrive off the wire, get fully decoded layers (and, within a
+//!   layer, completed v2 chunks) as soon as their bytes are complete,
+//!   without ever buffering the whole container.
+//! * [`index`] — [`index::ContainerIndex`]: per-layer / per-chunk byte
+//!   ranges built from the v1/v2 headers alone, so one layer can be
+//!   fetched and decoded without touching the rest of the file.
+//! * [`cache`] — byte-budgeted LRU over decoded layers, shared by every
+//!   connection handler.
+//! * [`http`] — minimal HTTP/1.1 framing (server + client side) with
+//!   `Range` support.
+//! * [`server`] — `TcpListener` accept loop bounded by a
+//!   [`crate::util::par::WorkerPool`], serving manifests, compressed
+//!   layer bytes and server-side-decoded weights.
+//! * [`loadgen`] — concurrent-client load generator reporting p50/p99
+//!   latency + throughput to `BENCH_serve.json`.
+
+pub mod cache;
+pub mod http;
+pub mod index;
+pub mod loadgen;
+pub mod server;
+pub mod stream;
+
+pub use cache::{CacheStats, DecodedCache};
+pub use index::ContainerIndex;
+pub use server::{ServeOptions, ServerHandle};
+pub use stream::{DecodedLayer, StreamDecoder, StreamEvent};

@@ -1,0 +1,400 @@
+//! The model-delivery server: a `TcpListener` accept loop whose
+//! connection handlers run on a bounded [`WorkerPool`].
+//!
+//! Endpoints (all GET, `Connection: close`):
+//!
+//! ```text
+//! /healthz                           liveness probe
+//! /stats                             cache + traffic counters (JSON)
+//! /models                            model listing (JSON)
+//! /models/{m}                        whole .dcbc container  [Range OK]
+//! /models/{m}/manifest               layer/chunk byte map (JSON)
+//! /models/{m}/layers/{l}             compressed layer payload [Range OK]
+//! /models/{m}/layers/{l}/weights     decoded f32 LE weights (cached)
+//! ```
+//!
+//! `{l}` is a layer index or a layer name. Weights decodes go through a
+//! byte-budgeted LRU ([`super::cache::DecodedCache`]); `X-Cache:
+//! hit|miss` reports what happened. Containers are mmap-free
+//! whole-file loads — the index keeps per-layer byte ranges so `Range`
+//! requests and layer fetches never copy more than they serve.
+
+use super::cache::{CacheStats, DecodedCache};
+use super::http::{self, Request};
+use super::index::ContainerIndex;
+use crate::util::json::{self, Json};
+use crate::util::par::WorkerPool;
+use anyhow::{bail, Context, Result};
+use byteorder::{ByteOrder, LittleEndian};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Directory scanned (non-recursively) for `*.dcbc` containers.
+    pub dir: PathBuf,
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 = ephemeral).
+    pub addr: String,
+    /// Decoded-layer cache budget in bytes.
+    pub cache_bytes: usize,
+    /// Concurrent connection handlers (and per-layer decode fan-out cap).
+    pub workers: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            dir: PathBuf::from("."),
+            addr: "127.0.0.1:8080".into(),
+            cache_bytes: 64 << 20,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// One loaded container.
+pub struct ModelEntry {
+    pub bytes: Arc<Vec<u8>>,
+    pub index: Arc<ContainerIndex>,
+}
+
+struct ServerState {
+    models: BTreeMap<String, ModelEntry>,
+    cache: DecodedCache,
+    /// Worker cap for intra-layer (chunk) decode fan-out.
+    decode_workers: usize,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Handle to a running server; dropping it does NOT stop the server —
+/// call [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    state: Arc<ServerState>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.state.cache.stats()
+    }
+
+    pub fn request_count(&self) -> u64 {
+        self.state.requests.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, drain in-flight handlers, join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept() call
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Scan `dir` for `*.dcbc` files, index each one. The model name is the
+/// file stem (`lenet5.dcbc` → `lenet5`).
+pub fn load_model_dir(dir: &PathBuf) -> Result<BTreeMap<String, ModelEntry>> {
+    let mut models = BTreeMap::new();
+    let entries = std::fs::read_dir(dir).with_context(|| format!("reading {dir:?}"))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("dcbc") {
+            continue;
+        }
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let index =
+            ContainerIndex::build(&bytes).with_context(|| format!("indexing {path:?}"))?;
+        models.insert(
+            stem.to_string(),
+            ModelEntry { bytes: Arc::new(bytes), index: Arc::new(index) },
+        );
+    }
+    if models.is_empty() {
+        bail!("no .dcbc containers found in {dir:?}");
+    }
+    Ok(models)
+}
+
+/// Bind, spawn the accept loop, and return immediately.
+pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
+    let models = load_model_dir(&opts.dir)?;
+    let listener =
+        TcpListener::bind(&opts.addr).with_context(|| format!("binding {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    let state = Arc::new(ServerState {
+        models,
+        cache: DecodedCache::new(opts.cache_bytes),
+        decode_workers: opts.workers,
+        requests: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_state = state.clone();
+    let accept_stop = stop.clone();
+    let workers = opts.workers;
+    let accept_thread = std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || {
+            let pool = WorkerPool::new(workers);
+            for conn in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let state = accept_state.clone();
+                        pool.execute(move || handle_connection(stream, &state));
+                    }
+                    Err(e) => {
+                        eprintln!("[serve] accept error: {e}");
+                    }
+                }
+            }
+            // pool drop drains in-flight handlers
+        })
+        .context("spawning accept thread")?;
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), state })
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_error(&mut stream, 400, "Bad Request", &format!("{e}"));
+            return;
+        }
+    };
+    if let Err(e) = route(&mut stream, &req, state) {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = http::write_error(&mut stream, 500, "Internal Server Error", &format!("{e:#}"));
+    }
+}
+
+fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<()> {
+    if req.method != "GET" {
+        return http::write_error(stream, 405, "Method Not Allowed", "GET only");
+    }
+    let path = req.path.split('?').next().unwrap_or("");
+    let parts: Vec<&str> = path.split('/').filter(|p| !p.is_empty()).collect();
+    match parts.as_slice() {
+        ["healthz"] => http::write_response(stream, 200, "OK", "text/plain", &[], b"ok"),
+        ["stats"] => {
+            let s = state.cache.stats();
+            let body = json::obj(vec![
+                ("requests", json::num(state.requests.load(Ordering::Relaxed) as f64)),
+                ("errors", json::num(state.errors.load(Ordering::Relaxed) as f64)),
+                (
+                    "cache",
+                    json::obj(vec![
+                        ("hits", json::num(s.hits as f64)),
+                        ("misses", json::num(s.misses as f64)),
+                        ("evictions", json::num(s.evictions as f64)),
+                        ("entries", json::num(s.entries as f64)),
+                        ("resident_bytes", json::num(s.resident_bytes as f64)),
+                        ("budget_bytes", json::num(s.budget_bytes as f64)),
+                    ]),
+                ),
+            ]);
+            write_json(stream, 200, "OK", &body)
+        }
+        ["models"] => {
+            let list = state
+                .models
+                .iter()
+                .map(|(name, m)| {
+                    json::obj(vec![
+                        ("name", json::s(name)),
+                        ("layers", json::num(m.index.layers.len() as f64)),
+                        ("bytes", json::num(m.bytes.len() as f64)),
+                        ("version", json::num(m.index.version as f64)),
+                    ])
+                })
+                .collect();
+            write_json(stream, 200, "OK", &json::obj(vec![("models", json::arr(list))]))
+        }
+        ["models", name] => {
+            let Some(m) = state.models.get(*name) else {
+                return not_found(stream, name);
+            };
+            write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream")
+        }
+        ["models", name, "manifest"] => {
+            let Some(m) = state.models.get(*name) else {
+                return not_found(stream, name);
+            };
+            write_json(stream, 200, "OK", &manifest_json(name, &m.index))
+        }
+        ["models", name, "layers", layer] => {
+            let Some(m) = state.models.get(*name) else {
+                return not_found(stream, name);
+            };
+            let Some(li) = m.index.resolve(layer) else {
+                return not_found(stream, layer);
+            };
+            let payload = m.index.layer_payload(&m.bytes, li)?;
+            write_bytes_ranged(stream, req, payload, "application/octet-stream")
+        }
+        ["models", name, "layers", layer, "weights"] => {
+            let Some(m) = state.models.get(*name) else {
+                return not_found(stream, name);
+            };
+            let Some(li) = m.index.resolve(layer) else {
+                return not_found(stream, layer);
+            };
+            let (weights, was_hit) = state.cache.get_or_decode(name, li, || {
+                m.index.decode_layer_weights(&m.bytes, li, state.decode_workers)
+            })?;
+            let mut body = vec![0u8; weights.len() * 4];
+            LittleEndian::write_f32_into(&weights, &mut body);
+            let dims = m.index.layers[li]
+                .dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            let headers = [
+                ("X-Cache", if was_hit { "hit" } else { "miss" }.to_string()),
+                ("X-Dims", dims),
+                // container-supplied name: strip CR/LF/controls so a
+                // hostile layer name cannot inject response headers
+                ("X-Layer-Name", http::sanitize_header_value(&m.index.layers[li].name)),
+            ];
+            http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/octet-stream",
+                &headers,
+                &body,
+            )
+        }
+        _ => not_found(stream, path),
+    }
+}
+
+fn not_found(stream: &mut TcpStream, what: &str) -> Result<()> {
+    http::write_error(stream, 404, "Not Found", &format!("no such resource: {what}"))
+}
+
+fn write_json(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) -> Result<()> {
+    http::write_response(
+        stream,
+        status,
+        reason,
+        "application/json",
+        &[],
+        body.to_string_compact().as_bytes(),
+    )
+}
+
+/// Serve `bytes` honoring an optional single `Range` header (RFC 7233:
+/// ignored/malformed ranges get the full 200, satisfiable ones 206,
+/// out-of-bounds ones 416).
+fn write_bytes_ranged(
+    stream: &mut TcpStream,
+    req: &Request,
+    bytes: &[u8],
+    content_type: &str,
+) -> Result<()> {
+    match req.byte_range(bytes.len()) {
+        http::RangeOutcome::Ignored => http::write_response(
+            stream,
+            200,
+            "OK",
+            content_type,
+            &[("Accept-Ranges", "bytes".to_string())],
+            bytes,
+        ),
+        http::RangeOutcome::Satisfiable(r) => {
+            let headers = [
+                ("Accept-Ranges", "bytes".to_string()),
+                (
+                    "Content-Range",
+                    format!("bytes {}-{}/{}", r.start, r.end - 1, bytes.len()),
+                ),
+            ];
+            http::write_response(
+                stream,
+                206,
+                "Partial Content",
+                content_type,
+                &headers,
+                &bytes[r],
+            )
+        }
+        http::RangeOutcome::Unsatisfiable => {
+            let headers = [("Content-Range", format!("bytes */{}", bytes.len()))];
+            http::write_response(
+                stream,
+                416,
+                "Range Not Satisfiable",
+                "text/plain",
+                &headers,
+                b"unsatisfiable range",
+            )
+        }
+    }
+}
+
+/// The manifest the server publishes per model: layer metadata + the
+/// byte map that enables client-side random access.
+fn manifest_json(name: &str, index: &ContainerIndex) -> Json {
+    let layers = index
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let chunks = l
+                .chunks
+                .iter()
+                .map(|c| {
+                    json::obj(vec![
+                        ("offset", json::num(c.bytes.start as f64)),
+                        ("bytes", json::num(c.bytes.len() as f64)),
+                        ("n_weights", json::num(c.n_weights as f64)),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("index", json::num(i as f64)),
+                ("name", json::s(&l.name)),
+                (
+                    "dims",
+                    json::arr(l.dims.iter().map(|&d| json::num(d as f64)).collect()),
+                ),
+                ("n_weights", json::num(l.n_weights as f64)),
+                ("delta", json::num(l.grid.delta as f64)),
+                ("s_param", json::num(l.s_param as f64)),
+                ("payload_offset", json::num(l.payload.start as f64)),
+                ("payload_bytes", json::num(l.payload.len() as f64)),
+                ("bias_count", json::num(l.bias_count() as f64)),
+                ("chunks", json::arr(chunks)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("model", json::s(name)),
+        ("container_name", json::s(&index.model)),
+        ("version", json::num(index.version as f64)),
+        ("container_bytes", json::num(index.container_len as f64)),
+        ("layers", json::arr(layers)),
+    ])
+}

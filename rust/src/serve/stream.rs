@@ -1,0 +1,595 @@
+//! Push-based incremental container decoder.
+//!
+//! [`StreamDecoder::feed`] accepts bytes in whatever pieces the wire
+//! delivers them and emits [`StreamEvent`]s the moment enough input has
+//! arrived: the container prelude, every completed chunk (decoded
+//! immediately — CABAC contexts reset at chunk boundaries, so a chunk is
+//! decodable as soon as its last byte lands), and every completed layer
+//! with fully reconstructed weights. Memory stays bounded by the largest
+//! single chunk plus undecoded slack, never the whole container.
+//!
+//! The produced weights are byte-for-byte identical to the batch
+//! [`CompressedModel::decode_weights`][crate::model::CompressedLayer::decode_weights]
+//! path — both decode the same spans with the same engine and dequantize
+//! on the same grid (see `property_stream_matches_batch`).
+
+use crate::codec::decode_levels;
+use crate::model::container::{
+    parse_container_prefix, parse_layer_header, parse_varint_prefix, ChunkSpan, LayerHeader,
+    Parsed,
+};
+use crate::quant::QuantGrid;
+use anyhow::{bail, Result};
+use byteorder::{ByteOrder, LittleEndian};
+
+/// A fully reconstructed layer, emitted as soon as its bytes completed.
+#[derive(Debug, Clone)]
+pub struct DecodedLayer {
+    /// Position of this layer in the container.
+    pub index: usize,
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub grid: QuantGrid,
+    pub s_param: u32,
+    pub n_weights: usize,
+    /// Dequantized weights (levels × Δ), identical to the batch decoder's.
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Everything a [`StreamDecoder`] can announce while bytes arrive.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// Container prelude parsed.
+    Start { model: String, version: u8, n_layers: usize },
+    /// One independently coded CABAC stream finished decoding. Monolithic
+    /// layers emit exactly one of these (chunk 0 of 1).
+    Chunk { layer: usize, chunk: usize, n_chunks: usize, n_weights: usize },
+    /// A layer's payload and bias are complete: reconstructed weights.
+    Layer(Box<DecodedLayer>),
+    /// The container ended cleanly (all layers delivered).
+    End,
+}
+
+enum State {
+    /// Waiting for magic/version/name/layer count.
+    Prelude,
+    /// Waiting for the next layer's header.
+    LayerHeader,
+    /// Draining the current layer's chunks as their bytes complete.
+    Chunks { hdr: LayerHeader, spans: Vec<ChunkSpan>, next: usize, levels: Vec<i32> },
+    /// Payload done; waiting for the bias length + bytes.
+    Bias { hdr: LayerHeader, levels: Vec<i32>, bias_len: Option<usize> },
+    /// Clean end of container.
+    Done,
+    /// A structural error was reported; all further input is rejected.
+    Failed,
+}
+
+/// Push-based streaming `.dcbc` decoder. See the module docs.
+pub struct StreamDecoder {
+    state: State,
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted away after every feed).
+    pos: usize,
+    /// Total bytes consumed over the decoder's lifetime.
+    consumed: u64,
+    version: u8,
+    n_layers: usize,
+    layer_idx: usize,
+}
+
+impl Default for StreamDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self {
+            state: State::Prelude,
+            buf: Vec::new(),
+            pos: 0,
+            consumed: 0,
+            version: 0,
+            n_layers: 0,
+            layer_idx: 0,
+        }
+    }
+
+    /// Total container bytes consumed so far.
+    pub fn bytes_consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// True once the container has been fully decoded.
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, State::Done)
+    }
+
+    /// Push the next bytes off the wire; returns every event they
+    /// completed. A structural error poisons the decoder: the error is
+    /// returned and every later call fails too.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Vec<StreamEvent>> {
+        if matches!(self.state, State::Failed) {
+            bail!("stream decoder already failed");
+        }
+        self.buf.extend_from_slice(bytes);
+        let mut events = Vec::new();
+        let res = self.advance(&mut events);
+        // compact the consumed prefix so memory tracks undecoded slack
+        self.consumed += self.pos as u64;
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+        if let Err(e) = res {
+            self.state = State::Failed;
+            return Err(e);
+        }
+        Ok(events)
+    }
+
+    /// Signal end-of-input: succeeds only if the container ended cleanly
+    /// with no bytes left over.
+    pub fn finish(&self) -> Result<()> {
+        match &self.state {
+            State::Done if self.pos == self.buf.len() => Ok(()),
+            State::Done => bail!("trailing bytes after container end"),
+            State::Failed => bail!("stream decoder already failed"),
+            State::Prelude => bail!("truncated container: prelude incomplete"),
+            State::LayerHeader => bail!(
+                "truncated container: layer {}/{} header incomplete",
+                self.layer_idx,
+                self.n_layers
+            ),
+            State::Chunks { next, spans, .. } => bail!(
+                "truncated container: layer {}/{} stopped at chunk {}/{}",
+                self.layer_idx,
+                self.n_layers,
+                next,
+                spans.len()
+            ),
+            State::Bias { .. } => bail!(
+                "truncated container: layer {}/{} bias incomplete",
+                self.layer_idx,
+                self.n_layers
+            ),
+        }
+    }
+
+    fn rest(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    /// Run the state machine until it stalls on missing input.
+    fn advance(&mut self, events: &mut Vec<StreamEvent>) -> Result<()> {
+        loop {
+            match std::mem::replace(&mut self.state, State::Failed) {
+                State::Prelude => match parse_container_prefix(self.rest())? {
+                    Parsed::Complete(p, used) => {
+                        self.pos += used;
+                        self.version = p.version;
+                        self.n_layers = p.n_layers;
+                        events.push(StreamEvent::Start {
+                            model: p.name,
+                            version: p.version,
+                            n_layers: p.n_layers,
+                        });
+                        if self.n_layers == 0 {
+                            events.push(StreamEvent::End);
+                            self.state = State::Done;
+                        } else {
+                            self.state = State::LayerHeader;
+                        }
+                    }
+                    Parsed::NeedMore => {
+                        self.state = State::Prelude;
+                        return Ok(());
+                    }
+                },
+                State::LayerHeader => match parse_layer_header(self.rest(), self.version)? {
+                    Parsed::Complete(hdr, used) => {
+                        self.pos += used;
+                        let spans = hdr.chunk_spans();
+                        // cap the pre-allocation: n_weights is attacker
+                        // controlled until the payload actually decodes
+                        let levels = Vec::with_capacity(hdr.n_weights.min(1 << 20));
+                        self.state = State::Chunks { hdr, spans, next: 0, levels };
+                    }
+                    Parsed::NeedMore => {
+                        self.state = State::LayerHeader;
+                        return Ok(());
+                    }
+                },
+                State::Chunks { hdr, spans, mut next, mut levels } => {
+                    // decode every chunk whose bytes are fully buffered
+                    while next < spans.len() && self.rest().len() >= spans[next].bytes {
+                        let span = spans[next];
+                        let chunk = &self.rest()[..span.bytes];
+                        levels.extend_from_slice(&decode_levels(
+                            chunk,
+                            span.n_weights,
+                            hdr.cfg,
+                        ));
+                        self.pos += span.bytes;
+                        events.push(StreamEvent::Chunk {
+                            layer: self.layer_idx,
+                            chunk: next,
+                            n_chunks: spans.len(),
+                            n_weights: span.n_weights,
+                        });
+                        next += 1;
+                    }
+                    if next < spans.len() {
+                        self.state = State::Chunks { hdr, spans, next, levels };
+                        return Ok(());
+                    }
+                    self.state = State::Bias { hdr, levels, bias_len: None };
+                }
+                State::Bias { hdr, levels, mut bias_len } => {
+                    if bias_len.is_none() {
+                        match parse_varint_prefix(self.rest())? {
+                            Parsed::Complete(v, used) => {
+                                let blen = v as usize;
+                                if blen > crate::baselines::MAX_DECODE_ELEMS {
+                                    bail!("layer claims {blen} biases (hostile header?)");
+                                }
+                                self.pos += used;
+                                bias_len = Some(blen);
+                            }
+                            Parsed::NeedMore => {
+                                self.state = State::Bias { hdr, levels, bias_len };
+                                return Ok(());
+                            }
+                        }
+                    }
+                    let blen = bias_len.expect("set above");
+                    if self.rest().len() < blen * 4 {
+                        self.state = State::Bias { hdr, levels, bias_len };
+                        return Ok(());
+                    }
+                    let mut bias = vec![0f32; blen];
+                    LittleEndian::read_f32_into(&self.rest()[..blen * 4], &mut bias);
+                    self.pos += blen * 4;
+                    events.push(StreamEvent::Layer(Box::new(DecodedLayer {
+                        index: self.layer_idx,
+                        name: hdr.name,
+                        dims: hdr.dims,
+                        grid: hdr.grid,
+                        s_param: hdr.s_param,
+                        n_weights: hdr.n_weights,
+                        weights: hdr.grid.dequantize(&levels),
+                        bias,
+                    })));
+                    self.layer_idx += 1;
+                    if self.layer_idx == self.n_layers {
+                        events.push(StreamEvent::End);
+                        self.state = State::Done;
+                    } else {
+                        self.state = State::LayerHeader;
+                    }
+                }
+                State::Done => {
+                    self.state = State::Done;
+                    if self.pos < self.buf.len() {
+                        bail!("trailing bytes after container end");
+                    }
+                    return Ok(());
+                }
+                State::Failed => unreachable!("feed rejects a failed decoder"),
+            }
+        }
+    }
+}
+
+/// Decode a whole in-memory container through the streaming path —
+/// convenience for tests and the `fetch` CLI fallback.
+pub fn decode_all(bytes: &[u8]) -> Result<Vec<DecodedLayer>> {
+    let mut dec = StreamDecoder::new();
+    let events = dec.feed(bytes)?;
+    dec.finish()?;
+    Ok(events
+        .into_iter()
+        .filter_map(|e| match e {
+            StreamEvent::Layer(l) => Some(*l),
+            _ => None,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{encode_levels, CodecConfig, RemainderMode};
+    use crate::model::{ChunkInfo, CompressedLayer, CompressedModel};
+    use crate::util::{ptest, SplitMix64};
+
+    fn rand_levels(rng: &mut SplitMix64, n: usize, p_zero: f64, spread: u64) -> Vec<i32> {
+        (0..n)
+            .map(|_| {
+                if rng.next_f64() < p_zero {
+                    0
+                } else {
+                    (1 + rng.below(spread) as i32)
+                        * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+                }
+            })
+            .collect()
+    }
+
+    fn layer_from_levels(
+        name: &str,
+        levels: &[i32],
+        n_chunks: usize,
+        cfg: CodecConfig,
+        bias: Vec<f32>,
+    ) -> CompressedLayer {
+        let n_chunks = n_chunks.max(1);
+        let per = ((levels.len() + n_chunks - 1) / n_chunks).max(1);
+        let mut payload = Vec::new();
+        let mut chunks = Vec::new();
+        for part in levels.chunks(per) {
+            let bytes = encode_levels(part, cfg);
+            chunks.push(ChunkInfo { n_weights: part.len(), bytes: bytes.len() });
+            payload.extend_from_slice(&bytes);
+        }
+        if chunks.len() <= 1 {
+            chunks.clear();
+        }
+        let max_abs = levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(0);
+        CompressedLayer {
+            name: name.into(),
+            dims: vec![levels.len().max(1)],
+            grid: crate::quant::QuantGrid { delta: 0.03125, max_level: max_abs as i32 },
+            s_param: 17,
+            cfg,
+            n_weights: levels.len(),
+            payload,
+            chunks,
+            bias,
+        }
+    }
+
+    fn sample_container(seed: u64, chunked: bool) -> CompressedModel {
+        let mut rng = SplitMix64::new(seed);
+        let cfg = CodecConfig::default();
+        let cfg2 = CodecConfig {
+            n_abs_flags: 3,
+            remainder: RemainderMode::ExpGolomb(1),
+            sig_ctx_neighbors: false,
+        };
+        let l0 = rand_levels(&mut rng, 700, 0.85, 40);
+        let l1 = rand_levels(&mut rng, 1200, 0.6, 12);
+        let l2 = rand_levels(&mut rng, 64, 0.3, 5);
+        CompressedModel {
+            name: "streamtest".into(),
+            layers: vec![
+                layer_from_levels("conv1", &l0, if chunked { 4 } else { 1 }, cfg, vec![1.0, -2.5]),
+                layer_from_levels("conv2", &l1, if chunked { 3 } else { 1 }, cfg2, vec![]),
+                layer_from_levels("fc", &l2, 1, cfg, vec![0.25; 8]),
+            ],
+        }
+    }
+
+    /// Feed `bytes` split at the given granularity and collect all events.
+    fn feed_in_splits(
+        bytes: &[u8],
+        splits: impl Iterator<Item = usize>,
+    ) -> Result<Vec<StreamEvent>> {
+        let mut dec = StreamDecoder::new();
+        let mut events = Vec::new();
+        let mut pos = 0usize;
+        for sz in splits {
+            if pos >= bytes.len() {
+                break;
+            }
+            let end = (pos + sz.max(1)).min(bytes.len());
+            events.extend(dec.feed(&bytes[pos..end])?);
+            pos = end;
+        }
+        if pos < bytes.len() {
+            events.extend(dec.feed(&bytes[pos..])?);
+        }
+        dec.finish()?;
+        Ok(events)
+    }
+
+    fn layers_of(events: Vec<StreamEvent>) -> Vec<DecodedLayer> {
+        events
+            .into_iter()
+            .filter_map(|e| match e {
+                StreamEvent::Layer(l) => Some(*l),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn assert_matches_batch(model: &CompressedModel, decoded: &[DecodedLayer]) {
+        assert_eq!(decoded.len(), model.layers.len());
+        for (got, want) in decoded.iter().zip(&model.layers) {
+            assert_eq!(got.name, want.name);
+            assert_eq!(got.dims, want.dims);
+            assert_eq!(got.n_weights, want.n_weights);
+            // byte-for-byte: compare the f32 bit patterns
+            let gw: Vec<u32> = got.weights.iter().map(|w| w.to_bits()).collect();
+            let ww: Vec<u32> = want.decode_weights().iter().map(|w| w.to_bits()).collect();
+            assert_eq!(gw, ww, "layer {}", want.name);
+            assert_eq!(got.bias, want.bias);
+        }
+    }
+
+    #[test]
+    fn one_byte_dribble_matches_batch_v1_and_v2() {
+        for chunked in [false, true] {
+            let model = sample_container(3, chunked);
+            let bytes = model.serialize();
+            let events = feed_in_splits(&bytes, std::iter::repeat(1)).unwrap();
+            assert_matches_batch(&model, &layers_of(events));
+        }
+    }
+
+    #[test]
+    fn whole_buffer_matches_batch() {
+        for chunked in [false, true] {
+            let model = sample_container(4, chunked);
+            let bytes = model.serialize();
+            let events = feed_in_splits(&bytes, std::iter::once(bytes.len())).unwrap();
+            let mut saw_start = false;
+            let mut saw_end = false;
+            let mut chunk_events = 0usize;
+            for e in &events {
+                match e {
+                    StreamEvent::Start { model: m, n_layers, .. } => {
+                        saw_start = true;
+                        assert_eq!(m, "streamtest");
+                        assert_eq!(*n_layers, 3);
+                    }
+                    StreamEvent::Chunk { .. } => chunk_events += 1,
+                    StreamEvent::End => saw_end = true,
+                    StreamEvent::Layer(_) => {}
+                }
+            }
+            assert!(saw_start && saw_end);
+            let expected_chunks: usize =
+                model.layers.iter().map(|l| l.n_chunks()).sum();
+            assert_eq!(chunk_events, expected_chunks);
+            assert_matches_batch(&model, &layers_of(events));
+        }
+    }
+
+    #[test]
+    fn empty_container_streams() {
+        let model = CompressedModel { name: "empty".into(), layers: vec![] };
+        let bytes = model.serialize();
+        let events = feed_in_splits(&bytes, std::iter::repeat(1)).unwrap();
+        assert!(matches!(events.last(), Some(StreamEvent::End)));
+        assert!(layers_of(events).is_empty());
+    }
+
+    #[test]
+    fn property_stream_matches_batch_randomized_splits() {
+        ptest::check(
+            ptest::Config { cases: 40, max_size: 600, ..Default::default() },
+            "stream-matches-batch",
+            |g| {
+                let n_layers = g.usize_in(1, 3);
+                let mut layers = Vec::new();
+                for li in 0..n_layers {
+                    let levels = g.levels();
+                    let cfg = CodecConfig {
+                        n_abs_flags: 1 + g.usize_in(0, 8) as u32,
+                        remainder: RemainderMode::ExpGolomb(g.usize_in(0, 2) as u32),
+                        sig_ctx_neighbors: g.bool(),
+                    };
+                    let n_chunks = if g.bool() { 1 } else { 1 + g.usize_in(0, 4) };
+                    let bias = (0..g.usize_in(0, 6)).map(|_| g.f32_normal(1.0)).collect();
+                    layers.push(layer_from_levels(
+                        &format!("l{li}"),
+                        &levels,
+                        n_chunks,
+                        cfg,
+                        bias,
+                    ));
+                }
+                let model = CompressedModel { name: "p".into(), layers };
+                let bytes = model.serialize();
+                // randomized split sizes, 1 byte .. whole buffer
+                let mut dec = StreamDecoder::new();
+                let mut events = Vec::new();
+                let mut pos = 0usize;
+                while pos < bytes.len() {
+                    let sz = g.usize_in(1, bytes.len().min(257));
+                    let end = (pos + sz).min(bytes.len());
+                    events.extend(
+                        dec.feed(&bytes[pos..end]).map_err(|e| format!("feed: {e}"))?,
+                    );
+                    pos = end;
+                }
+                dec.finish().map_err(|e| format!("finish: {e}"))?;
+                if dec.bytes_consumed() != bytes.len() as u64 {
+                    return Err("consumed != container length".into());
+                }
+                let decoded = layers_of(events);
+                if decoded.len() != model.layers.len() {
+                    return Err("missing layers".into());
+                }
+                for (got, want) in decoded.iter().zip(&model.layers) {
+                    let gw: Vec<u32> = got.weights.iter().map(|w| w.to_bits()).collect();
+                    let ww: Vec<u32> =
+                        want.decode_weights().iter().map(|w| w.to_bits()).collect();
+                    if gw != ww {
+                        return Err(format!("weight mismatch in {}", want.name));
+                    }
+                    if got.bias != want.bias {
+                        return Err("bias mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn truncation_reports_structured_error_no_panic() {
+        for chunked in [false, true] {
+            let model = sample_container(9, chunked);
+            let bytes = model.serialize();
+            for cut in [0usize, 1, 4, 5, 9, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1]
+            {
+                let mut dec = StreamDecoder::new();
+                // feeding a valid prefix must never error...
+                dec.feed(&bytes[..cut]).unwrap();
+                // ...but finishing early must, with a structured message
+                let err = dec.finish().unwrap_err().to_string();
+                assert!(
+                    err.contains("truncated") || err.contains("incomplete"),
+                    "cut={cut}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_and_trailing_bytes_are_rejected() {
+        // wrong magic fails fast
+        let mut dec = StreamDecoder::new();
+        assert!(dec.feed(b"NOPE....").is_err());
+        // a failed decoder stays failed
+        assert!(dec.feed(b"DCBC").is_err());
+
+        // trailing bytes after a clean end
+        let bytes = sample_container(2, true).serialize();
+        let mut dec = StreamDecoder::new();
+        dec.feed(&bytes).unwrap();
+        assert!(dec.feed(b"x").is_err());
+
+        // corrupted version byte
+        let mut bad = bytes.clone();
+        bad[4] = 77;
+        let mut dec = StreamDecoder::new();
+        assert!(dec.feed(&bad).is_err());
+
+        // random garbage after the magic must error, not panic
+        let mut rng = SplitMix64::new(33);
+        for _ in 0..32 {
+            let mut buf = b"DCBC".to_vec();
+            buf.push(if rng.next_u64() & 1 == 0 { 1 } else { 2 });
+            buf.extend((0..200).map(|_| rng.next_u64() as u8));
+            let mut dec = StreamDecoder::new();
+            match dec.feed(&buf) {
+                Ok(_) => {
+                    // structurally plausible prefix — must still refuse to finish
+                    assert!(dec.finish().is_err() || dec.is_done());
+                }
+                Err(_) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn decode_all_convenience() {
+        let model = sample_container(5, true);
+        let layers = decode_all(&model.serialize()).unwrap();
+        assert_matches_batch(&model, &layers);
+    }
+}

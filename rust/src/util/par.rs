@@ -1,5 +1,6 @@
 //! Scoped-thread fan-out shared by the coordinator's chunk encoder and
-//! the container's chunk decoder.
+//! the container's chunk decoder, plus the persistent [`WorkerPool`]
+//! that bounds the model-delivery server's connection handling.
 
 /// Apply `f` to every index in `0..n` across up to `workers` scoped
 /// threads (work-stealing via an atomic counter); results come back in
@@ -39,6 +40,77 @@ pub fn map_indexed<T: Send>(
     slots.into_iter().map(|s| s.expect("worker dropped an index")).collect()
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent fixed-size thread pool (`std` only). At most `size` jobs
+/// run concurrently and at most `4 × size` queue; [`WorkerPool::execute`]
+/// **blocks** once the queue is full — that backpressure is what bounds
+/// the serve accept loop (pending sockets stay in the kernel backlog
+/// instead of accumulating fds in an unbounded queue). Never call
+/// `execute` from inside a job: with the queue full it would deadlock.
+/// A panicking job is caught and logged; the worker survives it.
+/// Dropping the pool drains the queue: already-submitted jobs still run,
+/// then workers exit.
+pub struct WorkerPool {
+    tx: Option<std::sync::mpsc::SyncSender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(size * 4);
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only to pick up a job, not to run it
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break,
+                        };
+                        match job {
+                            Ok(job) => {
+                                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                                    .is_err()
+                                {
+                                    eprintln!("[pool] worker job panicked (recovered)");
+                                }
+                            }
+                            Err(_) => break, // all senders gone
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue a job; it runs as soon as a worker frees up. Blocks while
+    /// the queue is at capacity (see the type docs).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Box::new(job));
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue → workers exit after draining it
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +127,40 @@ mod tests {
         let parallel = map_indexed(10, 8, |i| format!("x{i}"));
         assert_eq!(serial, parallel);
         assert!(map_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs_before_drop_returns() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(4);
+            assert_eq!(pool.size(), 4);
+            for _ in 0..64 {
+                let counter = counter.clone();
+                pool.execute(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits for the queue to drain
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(1);
+            pool.execute(|| panic!("boom"));
+            let counter = counter.clone();
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // the single worker recovered from the panic and ran the next job
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 }

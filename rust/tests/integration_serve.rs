@@ -1,0 +1,215 @@
+//! End-to-end serving tests: a real `TcpListener` server over a temp
+//! directory of `.dcbc` containers, exercised by the HTTP client, the
+//! streaming decoder, and a ≥32-client loadgen run.
+
+use deepcabac::codec::{encode_levels, CodecConfig, RemainderMode};
+use deepcabac::model::{ChunkInfo, CompressedLayer, CompressedModel};
+use deepcabac::quant::QuantGrid;
+use deepcabac::serve::http;
+use deepcabac::serve::loadgen::{self, LoadgenOptions};
+use deepcabac::serve::server::{start, ServeOptions};
+use deepcabac::serve::stream::{StreamDecoder, StreamEvent};
+use deepcabac::util::json::Json;
+use deepcabac::util::SplitMix64;
+use std::path::PathBuf;
+
+fn make_layer(name: &str, n: usize, n_chunks: usize, seed: u64, cfg: CodecConfig) -> CompressedLayer {
+    let mut rng = SplitMix64::new(seed);
+    let levels: Vec<i32> = (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.75 {
+                0
+            } else {
+                (1 + rng.below(25) as i32) * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+            }
+        })
+        .collect();
+    let n_chunks = n_chunks.max(1);
+    let per = ((levels.len() + n_chunks - 1) / n_chunks).max(1);
+    let mut payload = Vec::new();
+    let mut chunks = Vec::new();
+    for part in levels.chunks(per) {
+        let bytes = encode_levels(part, cfg);
+        chunks.push(ChunkInfo { n_weights: part.len(), bytes: bytes.len() });
+        payload.extend_from_slice(&bytes);
+    }
+    if chunks.len() <= 1 {
+        chunks.clear();
+    }
+    CompressedLayer {
+        name: name.into(),
+        dims: vec![n.max(4) / 4, 4],
+        grid: QuantGrid { delta: 0.05, max_level: 30 },
+        s_param: 12,
+        cfg,
+        n_weights: levels.len(),
+        payload,
+        chunks,
+        bias: vec![0.5, -0.5],
+    }
+}
+
+/// Two models on disk: one v1 (monolithic) and one v2 (chunked).
+/// `tag` keeps the two tests (threads of one process) in separate dirs.
+fn write_model_dir(tag: &str) -> (PathBuf, Vec<CompressedModel>) {
+    let dir =
+        std::env::temp_dir().join(format!("dcbc_serve_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CodecConfig::default();
+    let cfg2 = CodecConfig {
+        n_abs_flags: 2,
+        remainder: RemainderMode::ExpGolomb(1),
+        sig_ctx_neighbors: false,
+    };
+    let alpha = CompressedModel {
+        name: "alpha".into(),
+        layers: vec![
+            make_layer("conv1", 2000, 1, 1, cfg),
+            make_layer("fc1", 400, 1, 2, cfg2),
+        ],
+    };
+    let beta = CompressedModel {
+        name: "beta".into(),
+        layers: vec![
+            make_layer("conv1", 3000, 4, 3, cfg),
+            make_layer("conv2", 1500, 3, 4, cfg),
+            make_layer("fc", 100, 1, 5, cfg),
+        ],
+    };
+    std::fs::write(dir.join("alpha.dcbc"), alpha.serialize()).unwrap();
+    std::fs::write(dir.join("beta.dcbc"), beta.serialize()).unwrap();
+    (dir, vec![alpha, beta])
+}
+
+fn f32_le_bytes(w: &[f32]) -> Vec<u8> {
+    w.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+#[test]
+fn server_end_to_end() {
+    let (dir, models) = write_model_dir("e2e");
+    let handle = start(ServeOptions {
+        dir: dir.clone(),
+        addr: "127.0.0.1:0".into(),
+        cache_bytes: 1 << 20,
+        workers: 8,
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // -- listing + health -------------------------------------------------
+    let resp = http::get(&addr, "/healthz", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let resp = http::get(&addr, "/models", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let listing = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let listed = listing.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(listed.len(), 2);
+    assert_eq!(listed[0].get("name").unwrap().as_str().unwrap(), "alpha");
+    assert_eq!(listed[1].get("layers").unwrap().as_usize().unwrap(), 3);
+
+    // -- manifest ---------------------------------------------------------
+    let resp = http::get(&addr, "/models/beta/manifest", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let manifest = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_eq!(manifest.get("version").unwrap().as_usize().unwrap(), 2);
+    let mlayers = manifest.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(mlayers.len(), 3);
+    assert_eq!(
+        mlayers[0].get("chunks").unwrap().as_arr().unwrap().len(),
+        models[1].layers[0].n_chunks()
+    );
+
+    // -- compressed layer bytes, by index and by name, with Range ---------
+    let want_payload = &models[1].layers[1].payload;
+    let by_index = http::get(&addr, "/models/beta/layers/1", None).unwrap();
+    assert_eq!(by_index.status, 200);
+    assert_eq!(&by_index.body, want_payload);
+    let by_name = http::get(&addr, "/models/beta/layers/conv2", None).unwrap();
+    assert_eq!(&by_name.body, want_payload);
+    let ranged = http::get(&addr, "/models/beta/layers/1", Some((4, 11))).unwrap();
+    assert_eq!(ranged.status, 206);
+    assert_eq!(&ranged.body, &want_payload[4..12]);
+    assert!(ranged.header("content-range").unwrap().starts_with("bytes 4-11/"));
+    let bad_range =
+        http::get(&addr, "/models/beta/layers/1", Some((1 << 30, 1 << 30))).unwrap();
+    assert_eq!(bad_range.status, 416);
+
+    // -- whole container + streaming decode over the wire -----------------
+    let mut dec = StreamDecoder::new();
+    let mut streamed: Vec<(String, Vec<f32>)> = Vec::new();
+    let (status, _, _) = http::get_streaming(&addr, "/models/beta", None, &mut |chunk| {
+        for ev in dec.feed(chunk)? {
+            if let StreamEvent::Layer(l) = ev {
+                streamed.push((l.name.clone(), l.weights));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    dec.finish().unwrap();
+    assert_eq!(streamed.len(), 3);
+    for ((name, weights), layer) in streamed.iter().zip(&models[1].layers) {
+        assert_eq!(name, &layer.name);
+        assert_eq!(f32_le_bytes(weights), f32_le_bytes(&layer.decode_weights()));
+    }
+
+    // -- decoded weights endpoint + LRU cache hit on repeat ---------------
+    let first = http::get(&addr, "/models/alpha/layers/0/weights", None).unwrap();
+    assert_eq!(first.status, 200);
+    assert_eq!(first.header("x-cache"), Some("miss"));
+    assert_eq!(first.body, f32_le_bytes(&models[0].layers[0].decode_weights()));
+    let hits_before = handle.cache_stats().hits;
+    let second = http::get(&addr, "/models/alpha/layers/0/weights", None).unwrap();
+    assert_eq!(second.header("x-cache"), Some("hit"));
+    assert_eq!(second.body, first.body);
+    assert!(handle.cache_stats().hits > hits_before, "repeat fetch must hit the LRU");
+
+    // -- unknown resources ------------------------------------------------
+    assert_eq!(http::get(&addr, "/models/nope", None).unwrap().status, 404);
+    assert_eq!(http::get(&addr, "/models/alpha/layers/99", None).unwrap().status, 404);
+    assert_eq!(http::get(&addr, "/nope", None).unwrap().status, 404);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn loadgen_32_clients_zero_failures() {
+    let (dir, _models) = write_model_dir("loadgen");
+    let handle = start(ServeOptions {
+        dir: dir.clone(),
+        addr: "127.0.0.1:0".into(),
+        cache_bytes: 8 << 20,
+        workers: 8,
+    })
+    .unwrap();
+    let out = dir.join("BENCH_serve.json");
+    let report = loadgen::run(&LoadgenOptions {
+        url: format!("http://{}", handle.addr()),
+        clients: 32,
+        requests: 6,
+        out: Some(out.clone()),
+    })
+    .unwrap();
+
+    // ≥ 32 concurrent clients over mixed endpoints, zero failed requests
+    assert_eq!(report.total_requests, 32 * 6);
+    assert_eq!(report.failures, 0, "no request may fail");
+    assert!(report.bytes_requests > 0 && report.weights_requests > 0, "mix must cover both endpoints");
+    assert!(report.p50_ms > 0.0 && report.p99_ms >= report.p50_ms);
+
+    // repeat weight fetches across clients must have hit the LRU
+    assert!(handle.cache_stats().hits > 0, "expected cache hits under load");
+
+    // the machine-readable report landed with the latency percentiles
+    let json = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(json.get("failures").unwrap().as_usize().unwrap(), 0);
+    assert!(json.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(json.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(json.get("clients").unwrap().as_usize().unwrap(), 32);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
