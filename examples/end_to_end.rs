@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let spec = CompressionSpec::default();
     let grid = default_s_grid(17);
     let t = Timer::new();
-    let sweep = sweep_s(&model, &grid, &spec, 1);
+    let sweep = sweep_s(&model, &grid, &spec, 1)?;
     let (compressed, report) = sweep.best;
     println!(
         "\n[2] compression   : {} -> {} ({:.2}% of original, x{:.1}) in {:.2}s",

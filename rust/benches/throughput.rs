@@ -149,7 +149,7 @@ fn main() {
                 black_box(&w),
                 black_box(&etas),
                 &grid,
-                RdParams { lambda, window: 4 },
+                RdParams { lambda },
             )
         });
         report_line(

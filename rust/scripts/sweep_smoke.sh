@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# S-sweep engine smoke test, run by CI from the rust/ directory:
+#   1. coarse-to-fine sweep on a synthetic model — parallel with early
+#      abandonment — plus the serial no-abandon reference (the binary
+#      itself asserts both select a byte-identical container)
+#   2. assert BENCH_sweep.json is well-formed and that the refinement
+#      path actually abandoned probes (the fan-out + budget engaged)
+#   3. roundtrip the best-S container through `decompress`
+set -euo pipefail
+
+BIN=${BIN:-target/release/deepcabac}
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+echo "== parallel sweep (+ serial reference) =="
+"$BIN" sweep --arch mobilenet --scale 8 --points 9 --workers 4 \
+  --compare-serial --out "$WORK/best.dcbc" --json BENCH_sweep.json
+cat BENCH_sweep.json
+
+echo "== BENCH_sweep.json well-formed =="
+python3 - <<'EOF'
+import json
+
+b = json.load(open("BENCH_sweep.json"))
+assert b["bench"] == "sweep", b
+for key in ("model", "workers", "points_per_round", "rounds", "probes_total",
+            "probes_abandoned", "best_s", "best_bytes", "wall_s",
+            "wall_s_serial", "points"):
+    assert key in b, f"missing {key}"
+assert b["workers"] == 4 and b["points_per_round"] == 9
+assert b["probes_total"] == len(b["points"]) > 9, "refinement never ran"
+assert b["rounds"] > 1, "refinement never ran"
+assert b["probes_abandoned"] > 0, "refinement abandoned no probes"
+assert sum(p["abandoned"] for p in b["points"]) == b["probes_abandoned"]
+completed = [p["bytes"] for p in b["points"] if not p["abandoned"]]
+assert completed and min(completed) == b["best_bytes"], "best != min(points)"
+assert 0 <= b["best_s"] <= 256
+print(f"BENCH_sweep.json OK: {b['probes_total']} probes / {b['rounds']} rounds, "
+      f"{b['probes_abandoned']} abandoned, best S = {b['best_s']} "
+      f"({b['best_bytes']} bytes), wall {b['wall_s']:.2f}s "
+      f"vs serial {b['wall_s_serial']:.2f}s")
+EOF
+
+echo "== best-S container roundtrips =="
+"$BIN" decompress --in "$WORK/best.dcbc" --out-dir "$WORK/out"
+N=$(ls "$WORK/out"/*.npy | wc -l)
+[ "$N" -gt 0 ] || { echo "no tensors decoded"; exit 1; }
+echo "decoded $N tensors from the best-S container"

@@ -119,7 +119,7 @@ pub fn table1_small_row(
     with_eval: bool,
 ) -> Result<Table1Row> {
     let model = load_model(name)?;
-    let sweep = sweep_s(&model, s_grid, spec, workers);
+    let sweep = sweep_s(&model, s_grid, spec, workers)?;
     let (compressed, report) = sweep.best;
     let best_s = compressed.layers.first().map(|l| l.s_param).unwrap_or(0);
     let (org_metric, metric_after) = if with_eval {

@@ -6,7 +6,9 @@
 //! deepcabac decompress --in FILE --out-dir DIR
 //! deepcabac eval       --model NAME [--compressed FILE]
 //! deepcabac anatomy    [--levels "1,0,-3,..."]
-//! deepcabac sweep      --model NAME [--points N] [--lambda-scale X] --csv FILE
+//! deepcabac sweep      (--model NAME | --arch vgg16) [--points N] [--workers N]
+//!                      [--sweep-exhaustive] [--no-abandon] [--compare-serial]
+//!                      [--json FILE] [--csv FILE] [--out FILE]
 //! deepcabac synth      --arch vgg16 [--scale N] [--s N]
 //! ```
 
@@ -103,8 +105,20 @@ USAGE:
       Accuracy/PSNR via the PJRT runtime (original or compressed weights).
   deepcabac anatomy [--levels L1,L2,...]
       Figure 1: per-bin trace of the binarization of a level sequence.
-  deepcabac sweep --model NAME [--points N] [--lambda-scales a,b,c] [--csv FILE]
-      Rate-distortion sweep over (S, λ) — the paper's §3/§4 trade-off.
+  deepcabac sweep (--model NAME | --arch vgg16|resnet50|mobilenet [--scale N]
+                  [--seed N]) [--points N] [--workers N] [--lambda-scale X]
+                  [--sweep-exhaustive] [--no-abandon] [--compare-serial]
+                  [--json FILE] [--csv FILE] [--out FILE]
+      The paper's §4 grid-coarseness sweep on the parallel incremental
+      engine: coarse-to-fine refinement over S ∈ {0..256} ((layer × S)
+      probe tasks fanned over --workers threads, per-layer statistics
+      shared across probes, refinement probes abandoned the moment they
+      cannot beat the incumbent — byte-identical winner either way).
+      --sweep-exhaustive probes all 257 points; --no-abandon disables
+      early abandonment; --compare-serial also times the serial sweep
+      and verifies it selects the identical container. Writes the
+      rate-distortion frontier to --json (default BENCH_sweep.json),
+      per-point CSV to --csv, and the best container to --out.
   deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
                   [--out FILE]
       Generate + compress a synthetic ImageNet-scale model (--out writes
@@ -176,6 +190,30 @@ mod tests {
         // non-integers still error through the same path
         let a = Args::parse(&sv(&["serve", "--workers", "many"])).unwrap();
         assert!(a.get_count("workers", 4).is_err());
+    }
+
+    #[test]
+    fn parses_sweep_flags() {
+        let a = Args::parse(&sv(&[
+            "sweep", "--arch", "mobilenet", "--scale", "32", "--points", "9",
+            "--workers", "4", "--sweep-exhaustive", "--no-abandon",
+            "--compare-serial", "--json", "B.json", "--out", "best.dcbc",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "sweep");
+        assert_eq!(a.get("arch"), Some("mobilenet"));
+        assert_eq!(a.get_count("points", 17).unwrap(), 9);
+        assert_eq!(a.get_count("workers", 1).unwrap(), 4);
+        assert!(a.has("sweep-exhaustive"));
+        assert!(a.has("no-abandon"));
+        assert!(a.has("compare-serial"));
+        assert_eq!(a.get_or("json", "BENCH_sweep.json"), "B.json");
+        assert_eq!(a.get("out"), Some("best.dcbc"));
+        // --points 0 / --sweep 0 are usage errors, not downstream panics
+        let a = Args::parse(&sv(&["sweep", "--points", "0"])).unwrap();
+        assert!(a.get_count("points", 17).is_err());
+        let a = Args::parse(&sv(&["table1", "--sweep", "0"])).unwrap();
+        assert!(a.get_count("sweep", 17).is_err());
     }
 
     #[test]

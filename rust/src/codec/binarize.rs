@@ -131,6 +131,16 @@ impl LevelEncoder {
         self.count
     }
 
+    /// Payload bytes buffered so far — a **monotone lower bound** on the
+    /// final [`Self::finish`] length (the arithmetic flush appends the
+    /// last ~2–3 bytes, and up to a few bits plus deferred carry bytes
+    /// are still latent in the engine). The sweep engine's early-abandon
+    /// budget polls this: once the lower bound exceeds the budget, the
+    /// finished payload necessarily would too.
+    pub fn bytes_buffered(&self) -> usize {
+        self.enc.bits_written() / 8
+    }
+
     pub fn finish(self) -> Vec<u8> {
         self.enc.finish()
     }

@@ -82,6 +82,22 @@ impl ModelReport {
     }
 }
 
+/// Aggregate statistics of one S-sweep run — the numbers
+/// `BENCH_sweep.json` records next to the per-point frontier.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    /// Sweep points probed (each point = one S value over all layers).
+    pub probes_total: usize,
+    /// Points abandoned early because their running payload could no
+    /// longer beat the best completed container.
+    pub probes_abandoned: usize,
+    /// Scheduling rounds executed (1 for a flat sweep; coarse round +
+    /// refinement rounds for the coarse-to-fine driver).
+    pub rounds: usize,
+    /// Wall clock of the whole sweep.
+    pub wall_s: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

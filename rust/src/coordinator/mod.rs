@@ -1,13 +1,19 @@
 //! Layer-3 coordinator: the compression pipeline (per-layer workers,
-//! bounded queues), the S-sweep scheduler (paper §4 probes
-//! S ∈ {0,…,256} and keeps the best), and pipeline metrics.
+//! bounded queues), the parallel incremental S-sweep engine (paper §4
+//! probes S ∈ {0,…,256} and keeps the best; the engine fans (layer × S)
+//! probe tasks onto a worker pool, hoists per-tensor statistics across
+//! probes, and early-abandons probes that can no longer win), and
+//! pipeline metrics.
 
 pub mod metrics;
 pub mod pipeline;
 pub mod sweep;
 
-pub use metrics::{LayerReport, ModelReport};
+pub use metrics::{LayerReport, ModelReport, SweepStats};
 pub use pipeline::{
-    compress_model, compress_tensor, compress_tensor_chunked, CompressionSpec,
+    compress_model, compress_tensor, compress_tensor_chunked, CompressionSpec, LayerStats,
 };
-pub use sweep::{sweep_s, SweepPoint, SweepResult};
+pub use sweep::{
+    sweep_s, sweep_s_auto, sweep_s_per_layer, SweepEngine, SweepOptions, SweepPoint,
+    SweepResult,
+};

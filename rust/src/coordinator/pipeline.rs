@@ -4,6 +4,12 @@
 //! DeepCABAC on to the weight parameters of each layer separately,
 //! excluding biases and normalization parameters" — paper §4), so layers
 //! fan out onto a worker pool; results are collected in manifest order.
+//!
+//! The per-tensor invariants of eq. 1/eq. 2 — w_max, σ_min, the η
+//! vector, mean(η) — do **not** depend on the grid coarseness S, so they
+//! are hoisted into [`LayerStats`]: the S-sweep engine computes them
+//! once per layer and shares them across every probe of that layer
+//! instead of recomputing them per (layer × S) probe.
 
 use crate::bayes;
 use crate::codec::CodecConfig;
@@ -25,8 +31,6 @@ pub struct CompressionSpec {
     pub cfg: CodecConfig,
     /// η = 1/σ² (true) vs uniform η (ablation).
     pub weighted: bool,
-    /// Candidate window for the RD scan.
-    pub window: i32,
     /// Intra-layer chunk count (container-format v2). 1 = monolithic,
     /// bit-for-bit the original single-stream format. N > 1 splits each
     /// tensor into N independently coded streams (contexts reset per
@@ -42,9 +46,57 @@ impl Default for CompressionSpec {
             lambda_scale: 0.05,
             cfg: CodecConfig::default(),
             weighted: true,
-            window: 4,
             chunks: 1,
         }
+    }
+}
+
+/// Per-tensor invariants shared by every probe of an S sweep. Building
+/// the grid from these via [`LayerStats::grid`] is exactly equivalent to
+/// [`QuantGrid::from_tensor`] on the raw tensors (same folds, same
+/// fallbacks), so hoisting changes no bytes.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// max |w| over the tensor (the w_max of eq. 2).
+    pub w_max: f32,
+    /// Smallest positive σ (1.0 fallback for all-zero σ tensors),
+    /// matching the [`QuantGrid::from_tensor`] convention.
+    pub sigma_min: f32,
+    /// η_i = 1/σ_i² (or all-ones for the unweighted ablation).
+    pub etas: Vec<f32>,
+    /// mean(η) in f64, the λ normalizer.
+    pub mean_eta: f64,
+}
+
+impl LayerStats {
+    pub fn compute(weights: &[f32], sigmas: &[f32], weighted: bool) -> Self {
+        let w_max = weights.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+        let sigma_min = sigmas
+            .iter()
+            .copied()
+            .filter(|s| *s > 0.0)
+            .fold(f32::INFINITY, f32::min);
+        let sigma_min = if sigma_min.is_finite() { sigma_min } else { 1.0 };
+        let etas = if weighted {
+            bayes::etas_from_sigmas(sigmas, bayes::sigma_floor(sigmas))
+        } else {
+            bayes::etas_uniform(weights.len())
+        };
+        let mean_eta =
+            etas.iter().map(|&e| e as f64).sum::<f64>() / etas.len().max(1) as f64;
+        Self { w_max, sigma_min, etas, mean_eta }
+    }
+
+    /// Eq. 2 grid for coarseness `s` — identical to
+    /// `QuantGrid::from_tensor(weights, sigmas, s)`.
+    pub fn grid(&self, s: u32) -> QuantGrid {
+        QuantGrid::from_stats(self.w_max, self.sigma_min, s)
+    }
+
+    /// λ = lambda_scale · Δ² · mean(η) (the same f32 expression, in the
+    /// same order, as the pre-hoisting pipeline computed inline).
+    pub fn lambda(&self, lambda_scale: f32, grid: &QuantGrid) -> f32 {
+        lambda_scale * grid.delta * grid.delta * self.mean_eta as f32
     }
 }
 
@@ -75,31 +127,99 @@ pub fn compress_tensor_chunked(
     spec: &CompressionSpec,
     workers: usize,
 ) -> (CompressedLayer, LayerReport) {
+    let stats = LayerStats::compute(weights, sigmas, spec.weighted);
+    compress_tensor_with_stats(name, dims, weights, bias, spec, &stats, workers)
+}
+
+/// [`compress_tensor_chunked`] with the per-tensor invariants supplied
+/// by the caller (the sweep engine computes them once per layer).
+pub fn compress_tensor_with_stats(
+    name: &str,
+    dims: &[usize],
+    weights: &[f32],
+    bias: &[f32],
+    spec: &CompressionSpec,
+    stats: &LayerStats,
+    workers: usize,
+) -> (CompressedLayer, LayerReport) {
     let timer = Timer::new();
-    let grid = QuantGrid::from_tensor(weights, sigmas, spec.s);
-    let etas = if spec.weighted {
-        bayes::etas_from_sigmas(sigmas, bayes::sigma_floor(sigmas))
-    } else {
-        bayes::etas_uniform(weights.len())
-    };
-    let mean_eta = etas.iter().map(|&e| e as f64).sum::<f64>() / etas.len().max(1) as f64;
-    let lambda = spec.lambda_scale * grid.delta * grid.delta * mean_eta as f32;
-    let params = RdParams { lambda, window: spec.window };
+    let grid = stats.grid(spec.s);
+    let params = RdParams { lambda: stats.lambda(spec.lambda_scale, &grid) };
     let quantizer = RdQuantizer::new(spec.cfg);
+    let etas = &stats.etas;
 
     let n = weights.len();
     let n_chunks = (spec.chunks.max(1) as usize).min(n.max(1));
     let spans = chunk_spans(n, n_chunks);
 
     let results: Vec<QuantResult> = if spans.len() <= 1 {
-        vec![quantizer.quantize_encode(weights, &etas, &grid, params)]
+        vec![quantizer.quantize_encode(weights, etas, &grid, params)]
     } else {
         crate::util::par::map_indexed(spans.len(), workers, |i| {
             let (lo, hi) = spans[i];
             quantizer.quantize_encode(&weights[lo..hi], &etas[lo..hi], &grid, params)
         })
     };
+    assemble_layer(name, dims, bias, spec, grid, n, results, &timer)
+}
 
+/// Budgeted variant for sweep probes: chunks run sequentially on the
+/// calling worker, and the encode aborts — returning `None` — the moment
+/// `base_bytes` (payload accumulated by earlier layers of the same
+/// probe) plus the bytes produced so far exceed `budget_bytes`. Since
+/// the byte counts only ever grow, an abandoned probe could not have
+/// finished within budget, so abandonment never changes which probe
+/// wins. A `Some` result is byte-identical to the unbudgeted path.
+pub fn compress_tensor_budgeted(
+    name: &str,
+    dims: &[usize],
+    weights: &[f32],
+    bias: &[f32],
+    spec: &CompressionSpec,
+    stats: &LayerStats,
+    base_bytes: usize,
+    budget_bytes: usize,
+) -> Option<(CompressedLayer, LayerReport)> {
+    let timer = Timer::new();
+    let grid = stats.grid(spec.s);
+    let params = RdParams { lambda: stats.lambda(spec.lambda_scale, &grid) };
+    let quantizer = RdQuantizer::new(spec.cfg);
+
+    let n = weights.len();
+    let n_chunks = (spec.chunks.max(1) as usize).min(n.max(1));
+    let spans = chunk_spans(n, n_chunks);
+
+    let mut results = Vec::with_capacity(spans.len());
+    let mut acc = 0usize;
+    for &(lo, hi) in &spans {
+        let r = quantizer.quantize_encode_budgeted(
+            &weights[lo..hi],
+            &stats.etas[lo..hi],
+            &grid,
+            params,
+            base_bytes.saturating_add(acc),
+            budget_bytes,
+        )?;
+        acc += r.payload.len();
+        results.push(r);
+    }
+    Some(assemble_layer(name, dims, bias, spec, grid, n, results, &timer))
+}
+
+/// Stitch chunk results into a [`CompressedLayer`] + [`LayerReport`]
+/// (shared by the parallel-chunk and budgeted paths, so both produce the
+/// same bytes for the same inputs).
+#[allow(clippy::too_many_arguments)]
+fn assemble_layer(
+    name: &str,
+    dims: &[usize],
+    bias: &[f32],
+    spec: &CompressionSpec,
+    grid: QuantGrid,
+    n: usize,
+    results: Vec<QuantResult>,
+    timer: &Timer,
+) -> (CompressedLayer, LayerReport) {
     let mut levels = Vec::with_capacity(n);
     let mut payload = Vec::new();
     let mut chunks = Vec::with_capacity(results.len());
@@ -162,68 +282,39 @@ fn chunk_spans(n: usize, k: usize) -> Vec<(usize, usize)> {
 }
 
 /// Compress a whole model with `workers` threads. With `spec.chunks == 1`
-/// layers fan out onto the pool (results re-assembled in manifest
-/// order); with intra-layer chunking enabled, layers are processed in
-/// order and each layer's chunks fan across the pool instead — the mode
-/// for models whose runtime is dominated by one giant tensor.
+/// layers fan out via [`crate::util::par::map_indexed`] (results
+/// re-assembled in manifest order); with intra-layer chunking enabled,
+/// layers are processed in order and each layer's chunks fan across the
+/// threads instead — the mode for models whose runtime is dominated by
+/// one giant tensor.
 pub fn compress_model(
     model: &Model,
     spec: &CompressionSpec,
     workers: usize,
 ) -> (CompressedModel, ModelReport) {
     let n = model.weights.len();
-    let mut slots: Vec<Option<(CompressedLayer, LayerReport)>> = (0..n).map(|_| None).collect();
-
-    if spec.chunks > 1 {
-        for i in 0..n {
-            let layer = &model.manifest.layers[i];
-            slots[i] = Some(compress_tensor_chunked(
-                &layer.name,
-                &model.weights[i].shape,
-                &model.weights[i].data,
-                &model.sigmas[i].data,
-                &model.biases[i].data,
-                spec,
-                workers,
-            ));
-        }
-    } else if workers <= 1 || n <= 1 {
-        for i in 0..n {
-            slots[i] = Some(compress_layer_idx(model, i, spec));
-        }
+    let outs: Vec<(CompressedLayer, LayerReport)> = if spec.chunks > 1 {
+        (0..n)
+            .map(|i| {
+                let layer = &model.manifest.layers[i];
+                compress_tensor_chunked(
+                    &layer.name,
+                    &model.weights[i].shape,
+                    &model.weights[i].data,
+                    &model.sigmas[i].data,
+                    &model.biases[i].data,
+                    spec,
+                    workers,
+                )
+            })
+            .collect()
     } else {
-        // Work-stealing over layer indices with scoped threads; a bounded
-        // channel applies backpressure so huge layers don't pile up.
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, (CompressedLayer, LayerReport))>(
-            workers * 2,
-        );
-        std::thread::scope(|scope| {
-            for _ in 0..workers.min(n) {
-                let tx = tx.clone();
-                let next = &next;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let out = compress_layer_idx(model, i, spec);
-                    if tx.send((i, out)).is_err() {
-                        break;
-                    }
-                });
-            }
-            drop(tx);
-            for (i, out) in rx {
-                slots[i] = Some(out);
-            }
-        });
-    }
+        crate::util::par::map_indexed(n, workers, |i| compress_layer_idx(model, i, spec))
+    };
 
     let mut layers = Vec::with_capacity(n);
     let mut reports = Vec::with_capacity(n);
-    for slot in slots {
-        let (l, r) = slot.expect("layer not compressed");
+    for (l, r) in outs {
         layers.push(l);
         reports.push(r);
     }
@@ -382,10 +473,55 @@ pub(crate) mod tests {
             &w,
             &etas,
             &grid,
-            RdParams { lambda, window: spec.window },
+            RdParams { lambda },
         );
         assert_eq!(layer.payload, reference.payload);
         assert_eq!(layer.decode_levels(), reference.levels);
+    }
+
+    #[test]
+    fn stats_hoisting_is_byte_identical() {
+        // LayerStats::compute + compress_tensor_with_stats must reproduce
+        // the from-raw-tensors path exactly (grid, λ, payload).
+        let (w, s) = sparse_fixture(10_000, 0.15, 17);
+        for weighted in [true, false] {
+            for sv in [0u32, 40, 256] {
+                let spec = CompressionSpec { s: sv, weighted, ..Default::default() };
+                let (a, _) = compress_tensor("t", &[w.len()], &w, &s, &[], &spec);
+                let stats = LayerStats::compute(&w, &s, weighted);
+                assert_eq!(stats.grid(sv), QuantGrid::from_tensor(&w, &s, sv));
+                let (b, _) =
+                    compress_tensor_with_stats("t", &[w.len()], &w, &[], &spec, &stats, 1);
+                assert_eq!(a.payload, b.payload, "S={sv} weighted={weighted}");
+                assert_eq!(a.grid, b.grid, "S={sv} weighted={weighted}");
+            }
+        }
+    }
+
+    #[test]
+    fn budgeted_tensor_compress_identical_or_none() {
+        let (w, s) = sparse_fixture(30_000, 0.1, 29);
+        let spec = CompressionSpec { chunks: 3, ..Default::default() };
+        let stats = LayerStats::compute(&w, &s, spec.weighted);
+        let (full, _) = compress_tensor_chunked("t", &[w.len()], &w, &s, &[], &spec, 2);
+        let (b, _) = compress_tensor_budgeted(
+            "t", &[w.len()], &w, &[], &spec, &stats, 0, usize::MAX,
+        )
+        .expect("unbounded budget");
+        assert_eq!(full.payload, b.payload);
+        assert_eq!(full.chunks, b.chunks);
+        // a budget below the final size abandons (mid-chunk or at a
+        // chunk boundary, both count)
+        assert!(compress_tensor_budgeted(
+            "t", &[w.len()], &w, &[], &spec, &stats, 0, full.payload.len() / 3,
+        )
+        .is_none());
+        // base_bytes shifts the same budget
+        assert!(compress_tensor_budgeted(
+            "t", &[w.len()], &w, &[], &spec, &stats,
+            full.payload.len(), full.payload.len() + full.payload.len() / 3,
+        )
+        .is_none());
     }
 
     #[test]
@@ -413,7 +549,7 @@ pub(crate) mod tests {
                     &w[lo..hi],
                     &etas[lo..hi],
                     &grid,
-                    RdParams { lambda, window: spec.window },
+                    RdParams { lambda },
                 );
                 expected.extend_from_slice(&r.levels);
                 lo = hi;

@@ -1,30 +1,91 @@
-//! The S-sweep scheduler: the paper probes the grid coarseness
-//! S ∈ {0, …, 256} per model and keeps the best-compressing setting
-//! ("Since the compression result can be sensitive to the parameter S
-//! in (2), we probed the compression performance for all S ∈ {0,...,256}
-//! and selected the best performing model" — §4).
+//! The parallel, incremental S-sweep engine.
 //!
-//! A full 257-point sweep on a 100M-parameter model is expensive, so the
-//! scheduler supports arbitrary S lists (coarse-to-fine refinement is
-//! what `default_s_grid` returns) and fans candidates onto the worker
-//! pool.
+//! The paper probes the grid coarseness S ∈ {0, …, 256} per model and
+//! keeps the best-compressing setting ("Since the compression result can
+//! be sensitive to the parameter S in (2), we probed the compression
+//! performance for all S ∈ {0,...,256} and selected the best performing
+//! model" — §4). Done naively that is ~257× the cost of one full
+//! compression. This engine attacks the sweep on three axes:
+//!
+//! 1. **Parallel probes** — the sweep expands into (layer × S) probe
+//!    tasks fanned onto a shared [`WorkerPool`]. A point's layer tasks
+//!    are *chained* (layer ℓ+1 is dispatched when layer ℓ completes, by
+//!    the coordinator thread — jobs never submit jobs, which would
+//!    deadlock the pool's bounded queue), so parallelism comes from many
+//!    S points in flight at once and every point's running payload total
+//!    is deterministic.
+//! 2. **Hoisted invariants** — w_max, σ_min, η, mean(η) do not depend on
+//!    S, so they are computed once per layer ([`LayerStats`]) and shared
+//!    by all of that layer's probes.
+//! 3. **Early abandonment** — once some point has completed, any probe
+//!    whose accumulated payload can no longer fit inside the best
+//!    container is aborted mid-scan. The budget is
+//!    `best_serialized − min_overhead` where `min_overhead` is a lower
+//!    bound on a container's non-payload bytes, so an abandoned point
+//!    provably serializes strictly larger than the incumbent:
+//!    **abandonment never changes the winner**, and because budgets are
+//!    fixed per round the set of abandoned points is a pure function of
+//!    the schedule — identical across worker counts (the determinism
+//!    tests pin both properties).
+//!
+//! On top of the engine, [`sweep_s_auto`] runs a coarse-to-fine driver:
+//! probe a coarse grid, then repeatedly refine around the argmin until
+//! every integer between its probed neighbours has been tried
+//! (`exhaustive` forces all 257 points in one round instead).
 
-use super::pipeline::{compress_model, CompressionSpec};
-use super::ModelReport;
-use crate::model::{CompressedModel, Model};
+use super::metrics::{LayerReport, ModelReport, SweepStats};
+use super::pipeline::{self, CompressionSpec, LayerStats};
+use crate::model::{CompressedLayer, CompressedModel, Model};
+use crate::util::par::WorkerPool;
+use crate::util::Timer;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+use std::sync::{mpsc, Arc};
 
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub s: u32,
+    /// Serialized container size at this S. For abandoned probes this is
+    /// the payload accumulated before the abort — a lower bound, recorded
+    /// so the frontier report still shows *why* the point lost.
     pub compressed_bytes: usize,
     pub density: f64,
     pub distortion: f64,
+    /// True if the probe was cut short by the early-abandon budget
+    /// (density/distortion are then 0 — the point never completed).
+    pub abandoned: bool,
+    /// Summed wall clock of this point's probe tasks (reporting only —
+    /// not deterministic, excluded from the determinism tests).
+    pub wall_s: f64,
 }
 
 #[derive(Debug)]
 pub struct SweepResult {
+    /// Every probed point, in schedule order (deterministic).
     pub points: Vec<SweepPoint>,
+    /// The best (smallest-container) probe; ties go to the earlier
+    /// schedule position, exactly like the original serial sweep.
     pub best: (CompressedModel, ModelReport),
+    pub stats: SweepStats,
+}
+
+/// Options for [`sweep_s_auto`].
+#[derive(Debug, Clone, Copy)]
+pub struct SweepOptions {
+    /// Points per scheduling round (coarse grid size and refinement
+    /// fan-out).
+    pub points: usize,
+    pub workers: usize,
+    /// Probe all 257 values in one round instead of coarse-to-fine.
+    pub exhaustive: bool,
+    /// Early-abandon refinement probes that can no longer win.
+    pub abandon: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self { points: 17, workers: 1, exhaustive: false, abandon: true }
+    }
 }
 
 /// Coarse-to-fine S grid covering {0..=256} with ~n points.
@@ -39,96 +100,505 @@ pub fn default_s_grid(n: usize) -> Vec<u32> {
     out
 }
 
-/// Run the sweep; returns every probed point plus the best model
-/// (smallest container). `workers` parallelizes layers within each probe.
+/// Shared, immutable probe context — cloned out of the caller's model
+/// once so probe tasks are `'static` for the worker pool.
+struct ProbeCtx {
+    model: Model,
+    stats: Vec<LayerStats>,
+    base: CompressionSpec,
+    /// Lower bound on the serialized non-payload bytes of any container
+    /// this model/spec can produce (see [`min_overhead`]).
+    min_overhead: usize,
+}
+
+struct Best {
+    s: u32,
+    bytes: usize,
+    model: CompressedModel,
+    report: ModelReport,
+}
+
+/// LEB128 length of a varint (mirrors `bitstream::write_varint`).
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+/// Lower bound on the non-payload bytes of a serialized container for
+/// `model`: every S-independent field is counted exactly, and each
+/// S-dependent varint (max_level, s_param, payload_len) at its 1-byte
+/// minimum; v2 chunk tables are omitted (they only add bytes). Used to
+/// convert the best *serialized* size into a *payload* budget:
+/// `payload(p) > best_bytes − min_overhead` implies
+/// `serialized(p) > best_bytes`.
+fn min_overhead(model: &Model) -> usize {
+    let mut c = 4 + 1; // magic + version
+    c += varint_len(model.manifest.name.len() as u64) + model.manifest.name.len();
+    c += varint_len(model.weights.len() as u64);
+    for i in 0..model.weights.len() {
+        let name = &model.manifest.layers[i].name;
+        let dims = &model.weights[i].shape;
+        c += varint_len(name.len() as u64) + name.len();
+        c += varint_len(dims.len() as u64);
+        for &d in dims {
+            c += varint_len(d as u64);
+        }
+        c += 4; // grid delta (f32)
+        c += 1; // max_level varint, ≥ 1 byte
+        c += 1; // s_param varint, ≥ 1 byte
+        c += 4; // codec config bytes
+        c += varint_len(model.weights[i].data.len() as u64); // n_weights
+        c += 1; // payload_len varint, ≥ 1 byte
+        let bl = model.biases[i].data.len();
+        c += varint_len(bl as u64) + bl * 4;
+    }
+    c
+}
+
+/// The reusable sweep engine: create once, feed scheduling rounds, then
+/// [`SweepEngine::finish`]. Rounds are barriers — the abandon budget is
+/// fixed when a round starts, which is what makes the abandoned set
+/// deterministic.
+pub struct SweepEngine {
+    ctx: Arc<ProbeCtx>,
+    pool: WorkerPool,
+    probed: BTreeSet<u32>,
+    points: Vec<SweepPoint>,
+    best: Option<Best>,
+    rounds: usize,
+    abandoned: usize,
+    timer: Timer,
+}
+
+impl SweepEngine {
+    /// Precomputes [`LayerStats`] for every layer (in parallel) and
+    /// clones the model once so probe tasks can outlive the caller's
+    /// borrow.
+    pub fn new(model: &Model, base: &CompressionSpec, workers: usize) -> Self {
+        let stats = crate::util::par::map_indexed(model.weights.len(), workers, |i| {
+            LayerStats::compute(&model.weights[i].data, &model.sigmas[i].data, base.weighted)
+        });
+        let min_overhead = min_overhead(model);
+        // Slim clone: σ tensors are already folded into LayerStats and
+        // nothing downstream reads them, so don't hold a second
+        // weights-sized copy for the engine's lifetime.
+        let slim = Model {
+            manifest: model.manifest.clone(),
+            weights: model.weights.clone(),
+            biases: model.biases.clone(),
+            sigmas: model
+                .weights
+                .iter()
+                .map(|_| crate::tensor::Tensor::new(vec![0], vec![]))
+                .collect(),
+        };
+        Self {
+            ctx: Arc::new(ProbeCtx {
+                model: slim,
+                stats,
+                base: *base,
+                min_overhead,
+            }),
+            pool: WorkerPool::new(workers),
+            probed: BTreeSet::new(),
+            points: Vec::new(),
+            best: None,
+            rounds: 0,
+            abandoned: 0,
+            timer: Timer::new(),
+        }
+    }
+
+    /// S of the best completed probe so far.
+    pub fn best_s(&self) -> Option<u32> {
+        self.best.as_ref().map(|b| b.s)
+    }
+
+    /// Payload-byte budget derived from the incumbent (see the module
+    /// docs); `usize::MAX` (never abandon) until a first point completes.
+    fn budget(&self) -> usize {
+        self.best
+            .as_ref()
+            .map(|b| b.bytes.saturating_sub(self.ctx.min_overhead))
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Probe every not-yet-probed S in `s_list` (duplicates and repeats
+    /// are skipped), with early abandonment iff `abandon`. The budget is
+    /// fixed on entry, so which probes get abandoned depends only on the
+    /// schedule — not on worker count or timing.
+    pub fn run_round(&mut self, s_list: &[u32], abandon: bool) {
+        let s_list: Vec<u32> =
+            s_list.iter().copied().filter(|s| self.probed.insert(*s)).collect();
+        if s_list.is_empty() {
+            return;
+        }
+        self.rounds += 1;
+        let budget = if abandon { self.budget() } else { usize::MAX };
+        let (points, round_best) = run_probes(&self.ctx, &self.pool, &s_list, budget);
+        self.abandoned += points.iter().filter(|p| p.abandoned).count();
+        self.points.extend(points);
+        if let Some(rb) = round_best {
+            // strict < : earlier rounds win ties, matching the serial
+            // sweep's first-smallest selection
+            let better = self.best.as_ref().map(|b| rb.bytes < b.bytes).unwrap_or(true);
+            if better {
+                self.best = Some(rb);
+            }
+        }
+    }
+
+    pub fn finish(self) -> Result<SweepResult> {
+        let Some(best) = self.best else {
+            bail!(
+                "S sweep completed no probe points ({} scheduled) — \
+                 the candidate grid must contain at least one S value",
+                self.points.len()
+            );
+        };
+        Ok(SweepResult {
+            best: (best.model, best.report),
+            stats: SweepStats {
+                probes_total: self.points.len(),
+                probes_abandoned: self.abandoned,
+                rounds: self.rounds,
+                wall_s: self.timer.elapsed_s(),
+            },
+            points: self.points,
+        })
+    }
+}
+
+/// One scheduling round: chained (layer × S) tasks on the pool, returning
+/// the per-point records in `s_list` order plus the round's best
+/// completed container (smallest bytes, ties to the earlier schedule
+/// index — independent of completion order).
+fn run_probes(
+    ctx: &Arc<ProbeCtx>,
+    pool: &WorkerPool,
+    s_list: &[u32],
+    budget: usize,
+) -> (Vec<SweepPoint>, Option<Best>) {
+    let n_layers = ctx.model.weights.len();
+    let n_points = s_list.len();
+    let mut points: Vec<Option<SweepPoint>> = (0..n_points).map(|_| None).collect();
+    let mut best: Option<Best> = None;
+    let mut best_idx = usize::MAX;
+
+    // Degenerate zero-layer model: every probe is an empty container.
+    if n_layers == 0 {
+        for (p, &s) in s_list.iter().enumerate() {
+            let compressed =
+                CompressedModel { name: ctx.model.manifest.name.clone(), layers: vec![] };
+            let report = ModelReport::from_layers(&ctx.model, &compressed, vec![]);
+            points[p] = Some(SweepPoint {
+                s,
+                compressed_bytes: report.compressed_bytes,
+                density: report.density,
+                distortion: 0.0,
+                abandoned: false,
+                wall_s: 0.0,
+            });
+            if best.is_none() {
+                best = Some(Best { s, bytes: report.compressed_bytes, model: compressed, report });
+            }
+        }
+        return (points.into_iter().map(|p| p.unwrap()).collect(), best);
+    }
+
+    struct PState {
+        layers: Vec<CompressedLayer>,
+        reports: Vec<LayerReport>,
+        bytes: usize,
+        wall: f64,
+    }
+    let mut st: Vec<PState> = (0..n_points)
+        .map(|_| PState {
+            layers: Vec::with_capacity(n_layers),
+            reports: Vec::with_capacity(n_layers),
+            bytes: 0,
+            wall: 0.0,
+        })
+        .collect();
+
+    // Err(()) marks a panicked probe task: the pool catches worker
+    // panics (and survives), so without this marker the coordinator
+    // would wait on a Done message that never comes and hang forever.
+    type Done = (usize, usize, f64, Result<Option<(CompressedLayer, LayerReport)>, ()>);
+    let (tx, rx) = mpsc::channel::<Done>();
+    let submit = |p: usize, l: usize, base_bytes: usize| {
+        let ctx = Arc::clone(ctx);
+        let tx = tx.clone();
+        let s = s_list[p];
+        pool.execute(move || {
+            let t = Timer::new();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let spec = CompressionSpec { s, ..ctx.base };
+                pipeline::compress_tensor_budgeted(
+                    &ctx.model.manifest.layers[l].name,
+                    &ctx.model.weights[l].shape,
+                    &ctx.model.weights[l].data,
+                    &ctx.model.biases[l].data,
+                    &spec,
+                    &ctx.stats[l],
+                    base_bytes,
+                    budget,
+                )
+            }))
+            .map_err(|_| ());
+            let _ = tx.send((p, l, t.elapsed_s(), out));
+        });
+    };
+
+    // At most one in-flight task per point; in-flight points are capped
+    // at half the pool's queue capacity (= 2 × pool size), which keeps
+    // the bounded queue from ever blocking the coordinator and bounds
+    // the memory held by partially-built containers.
+    let inflight_cap = (pool.queue_capacity() / 2).max(1);
+    let mut seeded = 0usize;
+    let mut completed = 0usize;
+    while seeded < n_points && seeded < inflight_cap {
+        submit(seeded, 0, 0);
+        seeded += 1;
+    }
+    while completed < n_points {
+        let (p, l, wall, out) = rx.recv().expect("sweep probe channel closed");
+        // re-raise worker panics on the coordinator (like the scoped
+        // threads the engine replaced) instead of hanging the sweep
+        let out = out.unwrap_or_else(|()| {
+            panic!("sweep probe task panicked (S={}, layer {l})", s_list[p])
+        });
+        st[p].wall += wall;
+        // None => finished (abandoned or complete); Some(next) continues
+        let finished: Option<bool> = match out {
+            Some((cl, rep)) => {
+                st[p].bytes += cl.payload.len();
+                st[p].layers.push(cl);
+                st[p].reports.push(rep);
+                if l + 1 == n_layers {
+                    Some(false)
+                } else if st[p].bytes > budget {
+                    Some(true) // boundary abandon: already over budget
+                } else {
+                    submit(p, l + 1, st[p].bytes);
+                    None
+                }
+            }
+            None => Some(true), // in-layer abandon
+        };
+        if let Some(abandoned) = finished {
+            completed += 1;
+            let ps = &mut st[p];
+            let layers = std::mem::take(&mut ps.layers);
+            let reports = std::mem::take(&mut ps.reports);
+            if abandoned {
+                points[p] = Some(SweepPoint {
+                    s: s_list[p],
+                    compressed_bytes: ps.bytes,
+                    density: 0.0,
+                    distortion: 0.0,
+                    abandoned: true,
+                    wall_s: ps.wall,
+                });
+            } else {
+                let compressed =
+                    CompressedModel { name: ctx.model.manifest.name.clone(), layers };
+                let report = ModelReport::from_layers(&ctx.model, &compressed, reports);
+                points[p] = Some(SweepPoint {
+                    s: s_list[p],
+                    compressed_bytes: report.compressed_bytes,
+                    density: report.density,
+                    distortion: report.layers.iter().map(|r| r.distortion).sum(),
+                    abandoned: false,
+                    wall_s: ps.wall,
+                });
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        report.compressed_bytes < b.bytes
+                            || (report.compressed_bytes == b.bytes && p < best_idx)
+                    }
+                };
+                if better {
+                    best_idx = p;
+                    best = Some(Best {
+                        s: s_list[p],
+                        bytes: report.compressed_bytes,
+                        model: compressed,
+                        report,
+                    });
+                }
+            }
+            if seeded < n_points {
+                submit(seeded, 0, 0);
+                seeded += 1;
+            }
+        }
+    }
+    (points.into_iter().map(|p| p.expect("probe point resolved")).collect(), best)
+}
+
+/// Run a flat sweep over an explicit S list (single round, no
+/// abandonment — every point completes with full stats). `workers`
+/// parallelizes probe points across the pool. Errors on an empty list
+/// instead of panicking.
 pub fn sweep_s(
     model: &Model,
     s_values: &[u32],
     base: &CompressionSpec,
     workers: usize,
-) -> SweepResult {
-    assert!(!s_values.is_empty());
-    let mut points = Vec::with_capacity(s_values.len());
-    let mut best: Option<(CompressedModel, ModelReport)> = None;
-    for &s in s_values {
-        let spec = CompressionSpec { s, ..*base };
-        let (compressed, report) = compress_model(model, &spec, workers);
-        points.push(SweepPoint {
-            s,
-            compressed_bytes: report.compressed_bytes,
-            density: report.density,
-            distortion: report.layers.iter().map(|l| l.distortion).sum(),
-        });
-        let better = match &best {
-            None => true,
-            Some((_, b)) => report.compressed_bytes < b.compressed_bytes,
-        };
-        if better {
-            best = Some((compressed, report));
-        }
+) -> Result<SweepResult> {
+    if s_values.is_empty() {
+        bail!(
+            "S sweep needs at least one candidate value \
+             (empty grid — was --sweep/--points set to 0?)"
+        );
     }
-    SweepResult { points, best: best.unwrap() }
+    let mut eng = SweepEngine::new(model, base, workers);
+    eng.run_round(s_values, false);
+    eng.finish()
+}
+
+/// Coarse-to-fine sweep: probe `default_s_grid(opts.points)`, then
+/// refine around the argmin until every integer between its probed
+/// neighbours has been tried. Refinement rounds run with the
+/// early-abandon budget when `opts.abandon` is set; the first (coarse)
+/// round always completes fully so the frontier report covers the whole
+/// range. `opts.exhaustive` probes all 257 values in one round instead.
+pub fn sweep_s_auto(
+    model: &Model,
+    opts: &SweepOptions,
+    base: &CompressionSpec,
+) -> Result<SweepResult> {
+    if opts.points == 0 {
+        bail!("sweep --points must be >= 1");
+    }
+    let mut eng = SweepEngine::new(model, base, opts.workers);
+    if opts.exhaustive {
+        let all: Vec<u32> = (0..=256).collect();
+        if opts.abandon {
+            // seed a coarse incumbent first so the full 257-point round
+            // runs with a budget: most far-from-optimal probes then die
+            // within their first layers (still selection-neutral)
+            eng.run_round(&default_s_grid(opts.points), false);
+            eng.run_round(&all, true);
+        } else {
+            eng.run_round(&all, false);
+        }
+        return eng.finish();
+    }
+    // at least the two endpoints, or refinement has no bracket to close
+    // in on (--points 1 would otherwise silently probe S=0 alone)
+    eng.run_round(&default_s_grid(opts.points.max(2)), false);
+    while let Some(best_s) = eng.best_s() {
+        let next = refine_grid(&eng.probed, best_s, opts.points);
+        if next.is_empty() {
+            break;
+        }
+        eng.run_round(&next, opts.abandon);
+    }
+    eng.finish()
+}
+
+/// Up to `per_round` evenly spaced unprobed integers strictly between
+/// the nearest probed neighbours of `best_s`. Empty when the bracket is
+/// exhausted (refinement converged).
+fn refine_grid(probed: &BTreeSet<u32>, best_s: u32, per_round: usize) -> Vec<u32> {
+    let lo = probed.range(..best_s).next_back().copied().unwrap_or(best_s);
+    let hi = probed.range(best_s + 1..).next().copied().unwrap_or(best_s);
+    let cands: Vec<u32> = (lo..=hi).filter(|s| !probed.contains(s)).collect();
+    if cands.len() <= per_round.max(1) {
+        return cands;
+    }
+    (0..per_round)
+        .map(|i| cands[((i as f64 + 0.5) / per_round as f64 * cands.len() as f64) as usize])
+        .collect()
 }
 
 /// Per-layer S selection (an extension over the paper, which picks one S
 /// per model): every layer independently keeps its smallest-payload S.
 /// Never worse than the global sweep on total payload bytes, since the
-/// global optimum is in each layer's candidate set.
+/// global optimum is in each layer's candidate set. Per-layer stats are
+/// hoisted across the S candidates, and a probe is abandoned as soon as
+/// its payload exceeds the layer's incumbent (selection-neutral: equal
+/// payloads never replace the incumbent either).
 pub fn sweep_s_per_layer(
     model: &Model,
     s_values: &[u32],
     base: &CompressionSpec,
-) -> (CompressedModel, ModelReport, Vec<(String, u32)>) {
-    assert!(!s_values.is_empty());
+) -> Result<(CompressedModel, ModelReport, Vec<(String, u32)>)> {
+    if s_values.is_empty() {
+        bail!(
+            "S sweep needs at least one candidate value \
+             (empty grid — was --sweep/--points set to 0?)"
+        );
+    }
+    let mut seen = BTreeSet::new();
+    let s_values: Vec<u32> = s_values.iter().copied().filter(|s| seen.insert(*s)).collect();
     let n = model.weights.len();
-    let mut best_layers: Vec<Option<(crate::model::CompressedLayer, super::LayerReport)>> =
-        (0..n).map(|_| None).collect();
-    for &s in s_values {
-        let spec = CompressionSpec { s, ..*base };
-        for i in 0..n {
-            let layer = &model.manifest.layers[i];
-            let (cl, rep) = super::pipeline::compress_tensor(
-                &layer.name,
+    let mut layers = Vec::with_capacity(n);
+    let mut reports = Vec::with_capacity(n);
+    let mut chosen = Vec::with_capacity(n);
+    for i in 0..n {
+        let li = &model.manifest.layers[i];
+        let stats =
+            LayerStats::compute(&model.weights[i].data, &model.sigmas[i].data, base.weighted);
+        let mut best: Option<(CompressedLayer, LayerReport)> = None;
+        for &s in &s_values {
+            let spec = CompressionSpec { s, ..*base };
+            let budget =
+                best.as_ref().map(|(b, _)| b.payload.len()).unwrap_or(usize::MAX);
+            let Some((cl, rep)) = pipeline::compress_tensor_budgeted(
+                &li.name,
                 &model.weights[i].shape,
                 &model.weights[i].data,
-                &model.sigmas[i].data,
                 &model.biases[i].data,
                 &spec,
-            );
-            let better = best_layers[i]
+                &stats,
+                0,
+                budget,
+            ) else {
+                continue; // abandoned: payload already exceeded this layer's best
+            };
+            let better = best
                 .as_ref()
                 .map(|(b, _)| cl.payload.len() < b.payload.len())
                 .unwrap_or(true);
             if better {
-                best_layers[i] = Some((cl, rep));
+                best = Some((cl, rep));
             }
         }
-    }
-    let mut layers = Vec::with_capacity(n);
-    let mut reports = Vec::with_capacity(n);
-    let mut chosen = Vec::with_capacity(n);
-    for slot in best_layers {
-        let (cl, rep) = slot.unwrap();
+        // the first S candidate runs with an unbounded budget, so a best
+        // always exists by the time we get here
+        let (cl, rep) = best.expect("first S candidate is never abandoned");
         chosen.push((cl.name.clone(), cl.s_param));
         layers.push(cl);
         reports.push(rep);
     }
     let compressed = CompressedModel { name: model.manifest.name.clone(), layers };
     let report = ModelReport::from_layers(model, &compressed, reports);
-    (compressed, report, chosen)
+    Ok((compressed, report, chosen))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn point_fields(p: &SweepPoint) -> (u32, usize, bool, f64, f64) {
+        (p.s, p.compressed_bytes, p.abandoned, p.density, p.distortion)
+    }
+
     #[test]
     fn per_layer_never_worse_than_global() {
         let model = super::super::pipeline::tests::toy_model_pub();
         let base = CompressionSpec::default();
         let s = [0u32, 64, 192, 256];
-        let global = sweep_s(&model, &s, &base, 1);
-        let (_, per_layer, chosen) = sweep_s_per_layer(&model, &s, &base);
+        let global = sweep_s(&model, &s, &base, 1).unwrap();
+        let (_, per_layer, chosen) = sweep_s_per_layer(&model, &s, &base).unwrap();
         assert_eq!(chosen.len(), model.weights.len());
         let global_payload: usize =
             global.best.1.layers.iter().map(|l| l.payload_bytes).sum();
@@ -147,6 +617,21 @@ mod tests {
     }
 
     #[test]
+    fn empty_grid_is_an_error_not_a_panic() {
+        // regression: an empty S list used to hit assert!/unwrap panics
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let err = sweep_s(&model, &[], &base, 1).expect_err("empty grid must fail");
+        assert!(err.to_string().contains("at least one candidate"), "{err}");
+        let err =
+            sweep_s_per_layer(&model, &[], &base).expect_err("empty grid must fail");
+        assert!(err.to_string().contains("at least one candidate"), "{err}");
+        assert!(default_s_grid(0).is_empty()); // …and this is why sweep_s checks
+        let opts = SweepOptions { points: 0, ..Default::default() };
+        assert!(sweep_s_auto(&model, &opts, &base).is_err());
+    }
+
+    #[test]
     fn sweep_picks_smallest() {
         let model = super::super::pipeline::tests::toy_model_pub();
         let res = sweep_s(
@@ -154,13 +639,244 @@ mod tests {
             &[0, 32, 128, 256],
             &CompressionSpec::default(),
             1,
-        );
+        )
+        .unwrap();
         let best_bytes = res.best.1.compressed_bytes;
         assert!(res.points.iter().all(|p| p.compressed_bytes >= best_bytes));
+        assert!(res.points.iter().all(|p| !p.abandoned));
+        assert_eq!(res.stats.probes_total, 4);
+        assert_eq!(res.stats.probes_abandoned, 0);
+        assert_eq!(res.stats.rounds, 1);
         // coarser grids (smaller S) must not produce *larger* payloads than
         // the finest probe — sanity of the monotone trend
         let s0 = res.points.iter().find(|p| p.s == 0).unwrap();
         let s256 = res.points.iter().find(|p| p.s == 256).unwrap();
         assert!(s0.compressed_bytes <= s256.compressed_bytes);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_byte_identical() {
+        // tentpole invariant: the parallel engine is bit-for-bit the
+        // serial sweep — same best container, same point list.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let grid = [0u32, 16, 48, 96, 160, 224, 256];
+        let serial = sweep_s(&model, &grid, &base, 1).unwrap();
+        for workers in [2usize, 4, 8] {
+            let par = sweep_s(&model, &grid, &base, workers).unwrap();
+            assert_eq!(
+                serial.best.0.serialize(),
+                par.best.0.serialize(),
+                "workers={workers}"
+            );
+            assert_eq!(serial.points.len(), par.points.len());
+            for (a, b) in serial.points.iter().zip(&par.points) {
+                assert_eq!(point_fields(a), point_fields(b), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn refine_with_abandon_matches_serial_no_abandon() {
+        // the kept winner must be byte-identical whether or not probes
+        // are abandoned, at any worker count, and the probe schedule +
+        // abandoned set must be deterministic.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let reference = sweep_s_auto(
+            &model,
+            &SweepOptions { points: 5, workers: 1, exhaustive: false, abandon: false },
+            &base,
+        )
+        .unwrap();
+        let mut abandon_runs = Vec::new();
+        for workers in [1usize, 2, 4, 8] {
+            let res = sweep_s_auto(
+                &model,
+                &SweepOptions { points: 5, workers, exhaustive: false, abandon: true },
+                &base,
+            )
+            .unwrap();
+            assert_eq!(
+                reference.best.0.serialize(),
+                res.best.0.serialize(),
+                "workers={workers}"
+            );
+            // identical probe schedule (abandonment never changes the
+            // best-S trajectory, so refinement visits the same points)
+            let sched: Vec<u32> = res.points.iter().map(|p| p.s).collect();
+            let ref_sched: Vec<u32> = reference.points.iter().map(|p| p.s).collect();
+            assert_eq!(sched, ref_sched, "workers={workers}");
+            // completed points carry identical stats to the no-abandon run
+            for (a, b) in reference.points.iter().zip(&res.points) {
+                if !b.abandoned {
+                    assert_eq!(point_fields(a), point_fields(b), "workers={workers}");
+                }
+            }
+            abandon_runs.push(res);
+        }
+        // the abandoned set and partial byte counts are identical across
+        // worker counts (round-fixed budgets + chained accounting)
+        let first = &abandon_runs[0];
+        for run in &abandon_runs[1..] {
+            let a: Vec<_> = first.points.iter().map(point_fields).collect();
+            let b: Vec<_> = run.points.iter().map(point_fields).collect();
+            assert_eq!(a, b);
+            assert_eq!(first.stats.probes_abandoned, run.stats.probes_abandoned);
+        }
+    }
+
+    #[test]
+    fn early_abandon_kills_oversized_probes_and_is_selection_neutral() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        // reference: the same schedule, fully completed
+        let full =
+            sweep_s(&model, &[0, 8, 16, 224, 240, 256], &base, 1).unwrap();
+        let mut eng = SweepEngine::new(&model, &base, 4);
+        eng.run_round(&[0, 8, 16], false);
+        // far-from-optimal probes in a budgeted round: S≈256 payloads are
+        // well above the S≈0 incumbent, so they must be cut short
+        eng.run_round(&[224, 240, 256], true);
+        let res = eng.finish().unwrap();
+        assert_eq!(res.best.0.serialize(), full.best.0.serialize());
+        assert!(
+            res.stats.probes_abandoned > 0,
+            "oversized probes were not abandoned: {:?}",
+            res.points
+        );
+        assert_eq!(res.stats.rounds, 2);
+        // abandoned partials are lower bounds that already exceed the
+        // payload budget story: they must never be the minimum
+        let best_bytes = res.best.1.compressed_bytes;
+        for p in res.points.iter().filter(|p| !p.abandoned) {
+            assert!(p.compressed_bytes >= best_bytes);
+        }
+    }
+
+    #[test]
+    fn refinement_beats_or_matches_coarse_grid() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let coarse = sweep_s(&model, &default_s_grid(5), &base, 1).unwrap();
+        let refined = sweep_s_auto(
+            &model,
+            &SweepOptions { points: 5, workers: 2, exhaustive: false, abandon: true },
+            &base,
+        )
+        .unwrap();
+        assert!(
+            refined.best.1.compressed_bytes <= coarse.best.1.compressed_bytes,
+            "refinement must never lose to its own coarse round"
+        );
+        assert!(refined.stats.rounds >= 1);
+        assert!(refined.stats.probes_total >= coarse.stats.probes_total);
+    }
+
+    #[test]
+    fn exhaustive_covers_all_257_points() {
+        // tiny model keeps this cheap; exhaustive is the paper's exact
+        // protocol and the refinement driver's ground truth
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let res = sweep_s_auto(
+            &model,
+            &SweepOptions { points: 9, workers: 8, exhaustive: true, abandon: false },
+            &base,
+        )
+        .unwrap();
+        assert_eq!(res.stats.probes_total, 257);
+        assert_eq!(res.stats.rounds, 1);
+        // exhaustive + abandon: same winner, same 257-point coverage,
+        // via a seeded coarse round + one budgeted full round
+        let ex_ab = sweep_s_auto(
+            &model,
+            &SweepOptions { points: 9, workers: 4, exhaustive: true, abandon: true },
+            &base,
+        )
+        .unwrap();
+        // same optimum size (the schedules differ, so on an exact byte
+        // tie the winning S may differ — the minimum cannot)
+        assert_eq!(ex_ab.best.1.compressed_bytes, res.best.1.compressed_bytes);
+        assert_eq!(ex_ab.stats.probes_total, 257);
+        assert_eq!(ex_ab.stats.rounds, 2);
+        let refined = sweep_s_auto(
+            &model,
+            &SweepOptions { points: 9, workers: 8, exhaustive: false, abandon: true },
+            &base,
+        )
+        .unwrap();
+        // refinement can at best match the exhaustive protocol…
+        assert!(
+            refined.best.1.compressed_bytes >= res.best.1.compressed_bytes
+        );
+        // …and must converge to a probed local optimum: both integer
+        // neighbours of its argmin were visited
+        let best_s = refined.best.0.layers[0].s_param;
+        for nb in [best_s.saturating_sub(1), (best_s + 1).min(256)] {
+            if nb != best_s {
+                assert!(
+                    refined.points.iter().any(|p| p.s == nb),
+                    "neighbour S={nb} of argmin S={best_s} never probed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn min_overhead_is_a_lower_bound_on_real_serialized_overhead() {
+        // the selection-neutrality proof rests on
+        //   serialize().len() − Σ payload ≥ min_overhead
+        // for every container this model can produce; pin the hand-mirrored
+        // byte accounting to the real serializer across S and chunk configs
+        // so layout drift in `serialize` is caught here.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let oh = min_overhead(&model);
+        assert!(oh > 0);
+        for s in [0u32, 7, 64, 200, 256] {
+            for chunks in [1u32, 3] {
+                let spec = CompressionSpec { s, chunks, ..Default::default() };
+                let (c, _) = super::super::pipeline::compress_model(&model, &spec, 1);
+                let payload: usize = c.layers.iter().map(|l| l.payload.len()).sum();
+                let real_overhead = c.serialize().len() - payload;
+                assert!(
+                    oh <= real_overhead,
+                    "S={s} chunks={chunks}: min_overhead {oh} > real {real_overhead}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_point_sweep_still_brackets_the_range() {
+        // regression: --points 1 used to probe S=0 alone and report it as
+        // the sweep optimum; the driver must cover both endpoints and
+        // refine between them
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let res = sweep_s_auto(
+            &model,
+            &SweepOptions { points: 1, workers: 2, exhaustive: false, abandon: true },
+            &CompressionSpec::default(),
+        )
+        .unwrap();
+        assert!(res.points.iter().any(|p| p.s == 0));
+        assert!(res.points.iter().any(|p| p.s == 256));
+        assert!(res.stats.probes_total >= 3, "no refinement happened");
+    }
+
+    #[test]
+    fn refine_grid_brackets() {
+        let probed: BTreeSet<u32> = [0u32, 64, 128, 192, 256].into_iter().collect();
+        let g = refine_grid(&probed, 64, 4);
+        assert!(!g.is_empty() && g.len() <= 4);
+        assert!(g.iter().all(|&s| s > 0 && s < 128 && s != 64));
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        // exhausted bracket → empty
+        let probed: BTreeSet<u32> = (10u32..=14).collect();
+        assert!(refine_grid(&probed, 12, 4).is_empty());
+        // edge argmin: bracket extends only inward
+        let probed: BTreeSet<u32> = [0u32, 64].into_iter().collect();
+        let g = refine_grid(&probed, 0, 3);
+        assert!(g.iter().all(|&s| s > 0 && s < 64));
     }
 }

@@ -6,13 +6,16 @@ use deepcabac::app;
 use deepcabac::cli::{Args, USAGE};
 use deepcabac::codec::{decode_levels, CodecConfig, LevelEncoder};
 use deepcabac::coordinator::{
-    compress_model, pipeline::decompress, sweep_s, CompressionSpec,
+    compress_model, pipeline::decompress, sweep_s, sweep_s_auto, CompressionSpec,
+    SweepOptions, SweepResult,
 };
 use deepcabac::model::CompressedModel;
 use deepcabac::report::{human_bytes, Table};
 use deepcabac::runtime::Runtime;
 use deepcabac::synth::Arch;
 use deepcabac::tensor::npy;
+use deepcabac::util::json::{self, Json};
+use deepcabac::util::Timer;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -63,7 +66,7 @@ fn base_spec(args: &Args) -> Result<CompressionSpec> {
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {
-    let sweep_points = args.get_usize("sweep", 17).map_err(|e| anyhow!(e))?;
+    let sweep_points = args.get_count("sweep", 17).map_err(|e| anyhow!(e))?;
     let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
     let scale = args.get_usize("scale", 8).map_err(|e| anyhow!(e))?;
     let with_eval = !args.has("no-eval");
@@ -130,17 +133,17 @@ fn cmd_compress(args: &Args) -> Result<()> {
         spec.s = s.parse().context("--s expects an integer")?;
         compress_model(&model, &spec, workers)
     } else {
-        let points = args.get_usize("sweep", 17).map_err(|e| anyhow!(e))?;
+        let points = args.get_count("sweep", 17).map_err(|e| anyhow!(e))?;
         let grid = deepcabac::coordinator::sweep::default_s_grid(points);
         if args.has("per-layer") {
             let (c, r, chosen) =
-                deepcabac::coordinator::sweep::sweep_s_per_layer(&model, &grid, &spec);
+                deepcabac::coordinator::sweep::sweep_s_per_layer(&model, &grid, &spec)?;
             for (l, s) in &chosen {
                 eprintln!("  {l}: S = {s}");
             }
             (c, r)
         } else {
-            sweep_s(&model, &grid, &spec, workers).best
+            sweep_s(&model, &grid, &spec, workers)?.best
         }
     };
     std::fs::write(out, compressed.serialize())?;
@@ -166,10 +169,12 @@ fn cmd_compress_npy(args: &Args) -> Result<()> {
     let input = std::path::PathBuf::from(args.get("in").context("--in required")?);
     let out = args.get("out").context("--out required")?;
     let (shape, data) = npy::read_npy_f32(&input)?;
+    deepcabac::tensor::validate_finite(&format!("{input:?} weights"), &data)?;
     let (sigmas, weighted) = match args.get("sigma") {
         Some(p) => {
             let (ss, sd) = npy::read_npy_f32(std::path::Path::new(p))?;
             anyhow::ensure!(ss == shape, "sigma shape {ss:?} != weight shape {shape:?}");
+            deepcabac::tensor::validate_finite(&format!("{p:?} sigma"), &sd)?;
             (sd, true)
         }
         None => (vec![0.05f32; data.len()], false),
@@ -277,42 +282,146 @@ fn describe_bins(level: i32, cfg: &CodecConfig) -> String {
     s
 }
 
+/// The S-sweep subcommand: drive the parallel incremental engine
+/// (coarse-to-fine refinement with early abandonment, or `--sweep-exhaustive`
+/// for all 257 points) and emit the rate–distortion frontier as
+/// `BENCH_sweep.json` (+ optional CSV / best-container output).
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let name = args.get("model").context("--model required")?;
-    let points = args.get_usize("points", 17).map_err(|e| anyhow!(e))?;
-    let lambda_scales: Vec<f32> = args
-        .get_or("lambda-scales", "0,0.01,0.05,0.2,1.0")
-        .split(',')
-        .map(|t| t.trim().parse::<f32>().context("bad lambda"))
-        .collect::<Result<_>>()?;
-    let model = app::load_model(name)?;
-    let grid = deepcabac::coordinator::sweep::default_s_grid(points);
-    let mut rows = Vec::new();
-    for &ls in &lambda_scales {
-        let spec = CompressionSpec { lambda_scale: ls, ..Default::default() };
-        let res = sweep_s(&model, &grid, &spec, 1);
-        for p in &res.points {
-            rows.push(vec![
-                ls.to_string(),
-                p.s.to_string(),
-                p.compressed_bytes.to_string(),
-                format!("{:.6}", p.density),
-                format!("{:.6e}", p.distortion),
-            ]);
-        }
-    }
-    let csv = deepcabac::report::to_csv(
-        &["lambda_scale", "S", "bytes", "density", "distortion"],
-        &rows,
+    let points = args.get_count("points", 17).map_err(|e| anyhow!(e))?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+    let opts = SweepOptions {
+        points,
+        workers,
+        exhaustive: args.has("sweep-exhaustive"),
+        abandon: !args.has("no-abandon"),
+    };
+    let spec = base_spec(args)?;
+    let (name, model) = if let Some(m) = args.get("model") {
+        (m.to_string(), app::load_model(m)?)
+    } else if let Some(a) = args.get("arch") {
+        let arch = Arch::parse(a).context("--arch must be vgg16|resnet50|mobilenet")?;
+        let scale = args.get_count("scale", 8).map_err(|e| anyhow!(e))?;
+        let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
+        (
+            arch.name().to_string(),
+            deepcabac::synth::generate(arch, scale, seed).to_model(),
+        )
+    } else {
+        bail!("sweep needs --model NAME or --arch vgg16|resnet50|mobilenet");
+    };
+
+    let res = sweep_s_auto(&model, &opts, &spec)?;
+    let best_s = res.best.0.layers.first().map(|l| l.s_param).unwrap_or(0);
+    println!(
+        "{name}: best S = {best_s} -> {} ({:.2}% of original, x{:.1}); \
+         {} probes in {} rounds, {} abandoned, {:.2}s ({} workers)",
+        human_bytes(res.best.1.compressed_bytes),
+        res.best.1.ratio_percent(),
+        res.best.1.factor(),
+        res.stats.probes_total,
+        res.stats.rounds,
+        res.stats.probes_abandoned,
+        res.stats.wall_s,
+        workers,
     );
-    match args.get("csv") {
-        Some(path) => {
-            std::fs::write(path, &csv)?;
-            println!("wrote {path}");
-        }
-        None => print!("{csv}"),
+
+    // serial reference (same schedule, one worker): wall-clock baseline
+    // for the fan-out, and a live check that the parallel engine selects
+    // a byte-identical container
+    let wall_serial = if args.has("compare-serial") {
+        let t = Timer::new();
+        let serial = sweep_s_auto(&model, &SweepOptions { workers: 1, ..opts }, &spec)?;
+        let wall = t.elapsed_s();
+        anyhow::ensure!(
+            serial.best.0.serialize() == res.best.0.serialize(),
+            "parallel sweep selected a different container than the \
+             serial sweep (worker-count determinism violated)"
+        );
+        println!(
+            "serial reference: {:.2}s (parallel speedup x{:.2})",
+            wall,
+            wall / res.stats.wall_s.max(1e-9),
+        );
+        Some(wall)
+    } else {
+        None
+    };
+
+    let json_path = args.get_or("json", "BENCH_sweep.json");
+    std::fs::write(json_path, sweep_to_json(&name, &opts, &res, wall_serial).to_string_pretty())?;
+    println!("wrote {json_path}");
+
+    if let Some(csv_path) = args.get("csv") {
+        let rows: Vec<Vec<String>> = res
+            .points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.s.to_string(),
+                    p.compressed_bytes.to_string(),
+                    format!("{:.6}", p.density),
+                    format!("{:.6e}", p.distortion),
+                    (p.abandoned as u8).to_string(),
+                    format!("{:.3}", p.wall_s * 1e3),
+                ]
+            })
+            .collect();
+        let csv = deepcabac::report::to_csv(
+            &["S", "bytes", "density", "distortion", "abandoned", "wall_ms"],
+            &rows,
+        );
+        std::fs::write(csv_path, &csv)?;
+        println!("wrote {csv_path}");
+    }
+
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, res.best.0.serialize())?;
+        println!("wrote {out}");
     }
     Ok(())
+}
+
+fn sweep_to_json(
+    name: &str,
+    opts: &SweepOptions,
+    res: &SweepResult,
+    wall_serial: Option<f64>,
+) -> Json {
+    let best_s = res.best.0.layers.first().map(|l| l.s_param).unwrap_or(0);
+    let points: Vec<Json> = res
+        .points
+        .iter()
+        .map(|p| {
+            json::obj(vec![
+                ("s", json::num(p.s as f64)),
+                ("bytes", json::num(p.compressed_bytes as f64)),
+                ("density", json::num(p.density)),
+                ("distortion", json::num(p.distortion)),
+                ("abandoned", Json::Bool(p.abandoned)),
+                ("wall_ms", json::num(p.wall_s * 1e3)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("bench", json::s("sweep")),
+        ("model", json::s(name)),
+        ("workers", json::num(opts.workers as f64)),
+        ("points_per_round", json::num(opts.points as f64)),
+        ("exhaustive", Json::Bool(opts.exhaustive)),
+        ("abandon", Json::Bool(opts.abandon)),
+        ("rounds", json::num(res.stats.rounds as f64)),
+        ("probes_total", json::num(res.stats.probes_total as f64)),
+        ("probes_abandoned", json::num(res.stats.probes_abandoned as f64)),
+        ("best_s", json::num(best_s as f64)),
+        ("best_bytes", json::num(res.best.1.compressed_bytes as f64)),
+        ("raw_bytes", json::num(res.best.1.raw_bytes as f64)),
+        ("wall_s", json::num(res.stats.wall_s)),
+        ("points", json::arr(points)),
+    ];
+    if let Some(w) = wall_serial {
+        fields.push(("wall_s_serial", json::num(w)));
+    }
+    json::obj(fields)
 }
 
 fn cmd_synth(args: &Args) -> Result<()> {

@@ -36,6 +36,12 @@ impl Model {
             let (bs, bd) = npy::read_npy_f32(&dir.join(format!("{}.b.npy", layer.name)))?;
             let (ss, sd) =
                 npy::read_npy_f32(&dir.join(format!("{}.sigma.npy", layer.name)))?;
+            // A NaN weight would silently quantize to level 0 with zero
+            // recorded distortion, and NaN/Inf σ poisons the eq. 2 grid
+            // statistics: fail loudly at load, naming layer and index.
+            crate::tensor::validate_finite(&format!("layer {:?} weights", layer.name), &wd)?;
+            crate::tensor::validate_finite(&format!("layer {:?} bias", layer.name), &bd)?;
+            crate::tensor::validate_finite(&format!("layer {:?} sigma", layer.name), &sd)?;
             weights.push(Tensor::new(ws, wd));
             biases.push(Tensor::new(bs, bd));
             sigmas.push(Tensor::new(ss, sd));
@@ -97,5 +103,27 @@ mod tests {
         assert!((m.density() - 0.5).abs() < 1e-12);
         assert_eq!(m.raw_bytes(), 8 * 4 + 2 * 4);
         assert_eq!(m.manifest.layers[0].kind, LayerKind::Fc);
+
+        // regression: a NaN weight or an Inf sigma must fail the load
+        // with an error naming the layer and the flat index — not load
+        // silently and encode level 0 with distortion 0.0
+        npy::write_npy_f32(
+            &dir.join("fc1.w.npy"),
+            &[4, 2],
+            &[0.0, 1.0, -1.0, f32::NAN, 0.5, 0.0, 0.0, 2.0],
+        )
+        .unwrap();
+        let err = Model::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("fc1"), "{err}");
+        assert!(err.contains("weights[3]"), "{err}");
+        assert!(err.contains("NaN"), "{err}");
+        npy::write_npy_f32(&dir.join("fc1.w.npy"), &[4, 2],
+                           &[0.0, 1.0, -1.0, 0.0, 0.5, 0.0, 0.0, 2.0]).unwrap();
+        npy::write_npy_f32(&dir.join("fc1.sigma.npy"), &[4, 2],
+                           &[0.1, 0.1, f32::INFINITY, 0.1, 0.1, 0.1, 0.1, 0.1]).unwrap();
+        let err = Model::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("sigma[2]"), "{err}");
+        npy::write_npy_f32(&dir.join("fc1.sigma.npy"), &[4, 2], &[0.1; 8]).unwrap();
+        assert!(Model::load(&dir).is_ok());
     }
 }

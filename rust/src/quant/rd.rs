@@ -9,31 +9,46 @@
 //! weight, so quantization and entropy coding are a single coupled scan
 //! (the paper's central design point; decoupled pipelines lose this).
 //!
-//! Candidate pruning: the cost is a parabola in the level with its
-//! vertex at w/Δ, plus a rate term that grows monotonically with |level|
-//! (sign-symmetric, piecewise). The argmin therefore lies between 0 and
-//! the nearest level. We scan (a) a ±window around the nearest level,
-//! (b) a halving ladder nearest/2, nearest/4, … toward 0 (catches the
-//! mid-range optima that appear at large λ), and (c) level 0 itself.
-//! The property tests compare against the exhaustive full-grid scan.
+//! Candidate pruning: candidates are visited **outward from the
+//! distortion vertex** w/Δ (two frontiers, one descending and one
+//! ascending, always expanding the one closer to the vertex). Along each
+//! frontier the distortion term is monotone non-decreasing, and the rate
+//! term satisfies λ·R ≥ 0, so the moment a frontier's distortion alone
+//! exceeds the best total cost found so far, every remaining candidate
+//! on that frontier is strictly worse and the frontier is closed. The
+//! scan therefore evaluates exactly the candidates that could still win
+//! and is **provably identical** to the exhaustive full-grid argmin
+//! (ties broken toward the smaller level, matching the exhaustive scan
+//! order), at a few rate queries per weight for realistic λ.
+//!
+//! The previous scheme (±window around the nearest level plus a halving
+//! ladder toward 0) was *not* exact: levels in `1..=window` were never
+//! evaluated when the nearest level sat far from 0, the region between
+//! the window and `nearest/2` was only sampled at halving points, and
+//! with adapted contexts the rate is not even monotone in |level| — at
+//! large λ the pruned argmin diverged from the exhaustive one. The
+//! property tests compare against the exhaustive scan across the full λ
+//! range, including the `nearest ≫ old-window` regime.
 
 use super::grid::QuantGrid;
 use crate::codec::{CodecConfig, LevelEncoder, RateEstimator};
 
 #[derive(Debug, Clone, Copy)]
 pub struct RdParams {
-    /// Lagrangian λ (distortion units per bit).
+    /// Lagrangian λ (distortion units per bit). Negative values are
+    /// clamped to 0 (a negative λ would reward spending bits and break
+    /// the pruning invariants).
     pub lambda: f32,
-    /// Candidate half-window around the nearest level (4 is exhaustive in
-    /// practice; the property tests compare against a full scan).
-    pub window: i32,
 }
 
 impl Default for RdParams {
     fn default() -> Self {
-        Self { lambda: 0.0, window: 4 }
+        Self { lambda: 0.0 }
     }
 }
+
+/// How often (in weights) the budgeted scan polls the abandon condition.
+const BUDGET_CHECK_EVERY: usize = 512;
 
 #[derive(Debug)]
 pub struct QuantResult {
@@ -65,6 +80,29 @@ impl RdQuantizer {
         grid: &QuantGrid,
         params: RdParams,
     ) -> QuantResult {
+        self.quantize_encode_budgeted(weights, etas, grid, params, 0, usize::MAX)
+            .expect("an unbounded budget never abandons")
+    }
+
+    /// [`Self::quantize_encode`] with the sweep engine's early-abandon
+    /// budget threaded through: every [`BUDGET_CHECK_EVERY`] weights the
+    /// scan compares `base_bytes` (payload already accumulated by earlier
+    /// layers/chunks of the same probe) plus the bytes buffered so far
+    /// against `budget_bytes`, and returns `None` the moment the sum
+    /// exceeds the budget. The buffered byte count is a monotone lower
+    /// bound on the final payload size, so an abandoned probe could never
+    /// have produced a payload within budget — abandonment is
+    /// selection-neutral by construction. A non-abandoned result is
+    /// byte-identical to the unbudgeted encode.
+    pub fn quantize_encode_budgeted(
+        &self,
+        weights: &[f32],
+        etas: &[f32],
+        grid: &QuantGrid,
+        params: RdParams,
+        base_bytes: usize,
+        budget_bytes: usize,
+    ) -> Option<QuantResult> {
         assert_eq!(weights.len(), etas.len());
         let cfg = self.cfg;
         let mut enc = LevelEncoder::with_capacity(cfg, weights.len() / 4 + 16);
@@ -72,19 +110,33 @@ impl RdQuantizer {
         let mut distortion = 0.0f64;
         let mut est_bits = 0.0f64;
 
-        for (&w, &eta) in weights.iter().zip(etas) {
-            let (level, cost_d, cost_r) =
-                self.pick_level(&mut enc, w, eta, grid, params);
+        for (i, (&w, &eta)) in weights.iter().zip(etas).enumerate() {
+            if i % BUDGET_CHECK_EVERY == 0
+                && base_bytes.saturating_add(enc.bytes_buffered()) > budget_bytes
+            {
+                return None;
+            }
+            let (level, cost_d, cost_r) = self.pick_level(&mut enc, w, eta, grid, params);
             distortion += cost_d as f64;
             est_bits += cost_r as f64;
             enc.encode_level(level);
             levels.push(level);
         }
-        QuantResult { levels, payload: enc.finish(), distortion, est_bits }
+        Some(QuantResult { levels, payload: enc.finish(), distortion, est_bits })
     }
 
     /// Choose the RD-optimal level for one weight under the encoder's
     /// current context states. Returns (level, distortion, rate_bits).
+    ///
+    /// Exact pruned argmin (see the module docs): candidates are visited
+    /// in order of increasing distortion via two frontiers expanding
+    /// outward from the real-valued vertex w/Δ. A frontier closes once
+    /// its distortion term alone strictly exceeds the best cost so far
+    /// (λ·R ≥ 0, and along one frontier the computed f32 distortion is
+    /// monotone non-decreasing, so everything further out is strictly
+    /// worse). Ties in cost keep the smaller level — the same winner the
+    /// exhaustive ascending scan keeps.
+    ///
     /// Rate queries go through the encoder's memoized estimator
     /// (bit-identical to `RateEstimator::level_bits`, O(1) amortized).
     #[inline]
@@ -96,52 +148,59 @@ impl RdQuantizer {
         grid: &QuantGrid,
         params: RdParams,
     ) -> (i32, f32, f32) {
-        let nearest = grid.nearest_level(w);
-        // Fast path for pruned weights (the majority in sparse tensors):
-        // only level 0 and ±1 can win — any |level| ≥ 2 has both more
-        // distortion and more rate than ±1. Cuts the candidate scan ~3x.
-        if w == 0.0 {
-            let r0 = enc.estimate_level_bits(0);
-            let c0 = params.lambda * r0;
-            let mut best = (0i32, c0, 0.0f32, r0);
-            if grid.max_level >= 1 && params.lambda > 0.0 {
-                let d1 = eta * grid.delta * grid.delta;
-                for level in [-1i32, 1] {
-                    let r = enc.estimate_level_bits(level);
-                    let cost = d1 + params.lambda * r;
-                    if cost < best.1 {
-                        best = (level, cost, d1, r);
-                    }
-                }
-            }
-            return (best.0, best.2, best.3);
+        let lambda = params.lambda.max(0.0);
+        let max_l = grid.max_level;
+        // Real-valued vertex of the distortion parabola; the clamp keeps
+        // the frontier arithmetic in i32 range for wild inputs.
+        let x = (w as f64 / grid.delta as f64)
+            .clamp(-(max_l as f64) - 1.0, max_l as f64 + 1.0);
+        let mut down = x.floor() as i32; // first candidate at or below x
+        if down > max_l {
+            down = max_l; // whole grid sits below x: descend only
         }
-        let lo = (nearest - params.window).clamp(-grid.max_level, grid.max_level);
-        let hi = (nearest + params.window).clamp(-grid.max_level, grid.max_level);
+        let mut up = down + 1; // first candidate above x
+        if up < -max_l {
+            up = -max_l; // whole grid sits above x: ascend only
+        }
+        let mut down_open = down >= -max_l;
+        let mut up_open = up <= max_l;
 
         let mut best = (0i32, f32::INFINITY, 0.0f32, 0.0f32); // (level, cost, d, r)
-        let mut eval = |level: i32| {
+        while down_open || up_open {
+            // expand the frontier closer to the vertex (ties: down first,
+            // so equidistant pairs are seen smaller-level first)
+            let go_down = if down_open && up_open {
+                (x - down as f64) <= (up as f64 - x)
+            } else {
+                down_open
+            };
+            let level = if go_down { down } else { up };
             let dq = w - grid.value(level);
             let d = eta * dq * dq;
+            if d > best.1 {
+                // every remaining candidate on this frontier has a
+                // distortion ≥ d and a rate cost λ·R ≥ 0 ⇒ strictly
+                // worse than the incumbent: close the frontier.
+                if go_down {
+                    down_open = false;
+                } else {
+                    up_open = false;
+                }
+                continue;
+            }
             let r = enc.estimate_level_bits(level);
-            let cost = d + params.lambda * r;
-            if cost < best.1 {
+            let cost = d + lambda * r;
+            if cost < best.1 || (cost == best.1 && best.1 < f32::INFINITY && level < best.0)
+            {
                 best = (level, cost, d, r);
             }
-        };
-        // Always consider 0 (the sigflag shortcut dominates sparse tensors).
-        if lo > 0 || hi < 0 {
-            eval(0);
-        }
-        for level in lo..=hi {
-            eval(level);
-        }
-        // Halving ladder toward 0: at large λ the optimum can sit strictly
-        // between 0 and the nearest level.
-        let mut l = nearest / 2;
-        while l.abs() > params.window {
-            eval(l);
-            l /= 2;
+            if go_down {
+                down -= 1;
+                down_open = down >= -max_l;
+            } else {
+                up += 1;
+                up_open = up <= max_l;
+            }
         }
         (best.0, best.2, best.3)
     }
@@ -155,6 +214,7 @@ impl RdQuantizer {
         grid: &QuantGrid,
         lambda: f32,
     ) -> QuantResult {
+        let lambda = lambda.max(0.0);
         let cfg = self.cfg;
         let mut enc = LevelEncoder::with_capacity(cfg, weights.len() / 4 + 16);
         let mut levels = Vec::with_capacity(weights.len());
@@ -206,7 +266,7 @@ mod tests {
         let (w, eta) = gen_tensor(&mut rng, 4000, 0.8);
         let grid = QuantGrid::from_stats(1.0, 0.02, 40);
         let q = RdQuantizer::new(CodecConfig::default());
-        let res = q.quantize_encode(&w, &eta, &grid, RdParams { lambda: 0.0, window: 4 });
+        let res = q.quantize_encode(&w, &eta, &grid, RdParams { lambda: 0.0 });
         let near = super::super::nearest(&w, &grid);
         assert_eq!(res.levels, near);
     }
@@ -218,7 +278,7 @@ mod tests {
         let grid = QuantGrid::from_tensor(&w, &eta.iter().map(|e| 1.0 / e.sqrt()).collect::<Vec<_>>(), 30);
         let cfg = CodecConfig::default();
         let q = RdQuantizer::new(cfg);
-        let res = q.quantize_encode(&w, &eta, &grid, RdParams { lambda: 0.002, window: 4 });
+        let res = q.quantize_encode(&w, &eta, &grid, RdParams { lambda: 0.002 });
         let dec = decode_levels(&res.payload, w.len(), cfg);
         assert_eq!(dec, res.levels);
     }
@@ -232,7 +292,7 @@ mod tests {
         let mut prev_bytes = usize::MAX;
         let mut prev_dist = -1.0f64;
         for lambda in [0.0f32, 1e-4, 1e-3, 1e-2] {
-            let res = q.quantize_encode(&w, &eta, &grid, RdParams { lambda, window: 4 });
+            let res = q.quantize_encode(&w, &eta, &grid, RdParams { lambda });
             assert!(res.payload.len() <= prev_bytes, "λ={lambda}");
             assert!(res.distortion >= prev_dist, "λ={lambda}");
             prev_bytes = res.payload.len();
@@ -242,16 +302,134 @@ mod tests {
 
     #[test]
     fn pruned_matches_exhaustive() {
-        // The ±window + {0} candidate set must reproduce the full-grid scan.
+        // The outward-scan candidate set must reproduce the full-grid scan
+        // exactly — levels AND payload bytes.
         let mut rng = SplitMix64::new(8);
         let (w, eta) = gen_tensor(&mut rng, 1500, 0.7);
         let grid = QuantGrid::from_stats(0.4, 0.02, 25);
         let q = RdQuantizer::new(CodecConfig::default());
         for lambda in [0.0f32, 5e-4, 5e-3] {
-            let a = q.quantize_encode(&w, &eta, &grid, RdParams { lambda, window: 4 });
+            let a = q.quantize_encode(&w, &eta, &grid, RdParams { lambda });
             let b = q.quantize_encode_exhaustive(&w, &eta, &grid, lambda);
             assert_eq!(a.levels, b.levels, "λ={lambda}");
+            assert_eq!(a.payload, b.payload, "λ={lambda}");
         }
+    }
+
+    #[test]
+    fn pruned_matches_exhaustive_large_lambda() {
+        // Regression for the old ±window + halving-ladder scan: on a fine
+        // grid (nearest level ≫ the old window of 4) at large λ the
+        // optimum sits mid-range or near zero — exactly the levels the
+        // ladder skipped. The outward scan must stay exhaustive-exact
+        // across the whole λ sweep, through the regime where rate
+        // dominates distortion.
+        let mut rng = SplitMix64::new(13);
+        let (w, eta) = gen_tensor(&mut rng, 400, 0.5);
+        // σ_min far below the weight scale ⇒ Δ tiny ⇒ nearest ~ hundreds
+        let grid = QuantGrid::from_tensor(
+            &w,
+            &vec![0.002f32; w.len()],
+            64,
+        );
+        assert!(
+            grid.max_level > 40,
+            "fixture must put nearest levels far from 0 (max_level={})",
+            grid.max_level
+        );
+        let q = RdQuantizer::new(CodecConfig::default());
+        for lambda in [1e-3f32, 1e-2, 0.1, 1.0, 10.0, 100.0] {
+            let a = q.quantize_encode(&w, &eta, &grid, RdParams { lambda });
+            let b = q.quantize_encode_exhaustive(&w, &eta, &grid, lambda);
+            assert_eq!(a.levels, b.levels, "λ={lambda}");
+            assert_eq!(a.payload, b.payload, "λ={lambda}");
+        }
+        // sanity: the large-λ regime actually pulled levels off `nearest`
+        let a = q.quantize_encode(&w, &eta, &grid, RdParams { lambda: 10.0 });
+        let near = super::super::nearest(&w, &grid);
+        assert_ne!(a.levels, near, "λ=10 should shrink levels toward 0");
+    }
+
+    #[test]
+    fn property_pruned_matches_exhaustive_randomized() {
+        // Random tensors × random grids × log-uniform λ: the pruned scan
+        // is byte-identical to the exhaustive one everywhere, including
+        // tie-breaks, clamped weights, and degenerate grids.
+        ptest::check(
+            ptest::Config { cases: 16, max_size: 300, ..Default::default() },
+            "rd-pruned-exhaustive",
+            |g| {
+                let n = g.usize_in(1, g.size.max(1));
+                let mut rng = SplitMix64::new(g.rng.next_u64());
+                let sparsity = rng.next_f64();
+                let (w, eta) = gen_tensor(&mut rng, n, sparsity);
+                let s = rng.below(257) as u32;
+                let sigma_min = 0.001 + 0.05 * rng.next_f32();
+                let w_max = 0.2 + rng.next_f32();
+                let grid = QuantGrid::from_stats(w_max, sigma_min, s);
+                if grid.max_level > 600 {
+                    return Ok(()); // keep the O(K)-per-weight oracle fast
+                }
+                // λ log-uniform over ~8 decades, plus exact zero
+                let lambda = if rng.next_f64() < 0.1 {
+                    0.0
+                } else {
+                    (10.0f64.powf(rng.next_f64() * 8.0 - 6.0)) as f32
+                };
+                let q = RdQuantizer::new(CodecConfig::default());
+                let a = q.quantize_encode(&w, &eta, &grid, RdParams { lambda });
+                let b = q.quantize_encode_exhaustive(&w, &eta, &grid, lambda);
+                if a.levels != b.levels {
+                    let i = a
+                        .levels
+                        .iter()
+                        .zip(&b.levels)
+                        .position(|(x, y)| x != y)
+                        .unwrap();
+                    return Err(format!(
+                        "λ={lambda} S={s} Δ={} max_level={}: levels diverge at {i}: \
+                         pruned {} vs exhaustive {} (w={})",
+                        grid.delta, grid.max_level, a.levels[i], b.levels[i], w[i]
+                    ));
+                }
+                if a.payload != b.payload {
+                    return Err(format!("λ={lambda}: payload bytes diverge"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn budgeted_encode_is_identical_or_abandons() {
+        let mut rng = SplitMix64::new(21);
+        let (w, eta) = gen_tensor(&mut rng, 8_000, 0.85);
+        let grid = QuantGrid::from_stats(0.5, 0.01, 60);
+        let q = RdQuantizer::new(CodecConfig::default());
+        let params = RdParams { lambda: 1e-3 };
+        let full = q.quantize_encode(&w, &eta, &grid, params);
+
+        // generous budget: byte-identical to the unbudgeted encode
+        let same = q
+            .quantize_encode_budgeted(&w, &eta, &grid, params, 0, full.payload.len())
+            .expect("budget == final size must not abandon");
+        assert_eq!(same.payload, full.payload);
+        assert_eq!(same.levels, full.levels);
+
+        // budget strictly below the final size: must abandon...
+        let aborted =
+            q.quantize_encode_budgeted(&w, &eta, &grid, params, 0, full.payload.len() / 2);
+        assert!(aborted.is_none());
+        // ...and a nonzero base eats into the budget the same way
+        let aborted = q.quantize_encode_budgeted(
+            &w,
+            &eta,
+            &grid,
+            params,
+            full.payload.len(),
+            full.payload.len() + 8,
+        );
+        assert!(aborted.is_none());
     }
 
     #[test]
@@ -270,7 +448,7 @@ mod tests {
                 let cfg = CodecConfig::default();
                 let qz = RdQuantizer::new(cfg);
                 let lambda = (rng.next_f64() * 0.01) as f32;
-                let res = qz.quantize_encode(&w, &eta, &grid, RdParams { lambda, window: 4 });
+                let res = qz.quantize_encode(&w, &eta, &grid, RdParams { lambda });
                 let dec = decode_levels(&res.payload, n, cfg);
                 if dec != res.levels {
                     return Err("decode mismatch".into());

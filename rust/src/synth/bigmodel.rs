@@ -186,6 +186,54 @@ impl SynthModel {
             .sum();
         nz as f64 / self.weight_count().max(1) as f64
     }
+
+    /// Wrap the synthetic tensors into a [`crate::model::Model`]
+    /// (synthetic manifest, empty biases — the paper excludes biases
+    /// from DeepCABAC anyway) so the sweep engine and the whole-model
+    /// pipeline APIs can drive synthetic architectures directly.
+    pub fn to_model(&self) -> crate::model::Model {
+        use crate::model::manifest::{LayerInfo, LayerKind, ModelManifest};
+        use crate::tensor::Tensor;
+        let mut weights = Vec::with_capacity(self.layers.len());
+        let mut sigmas = Vec::with_capacity(self.layers.len());
+        let mut biases = Vec::with_capacity(self.layers.len());
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let n = l.weights.len();
+            layers.push(LayerInfo {
+                name: l.name.clone(),
+                kind: if l.dims.len() == 4 { LayerKind::Conv } else { LayerKind::Fc },
+                shape: l.dims.clone(),
+                activation: None,
+                stride: 1,
+                padding: 0,
+                nonzero: l.weights.iter().filter(|&&w| w != 0.0).count(),
+                size: n,
+            });
+            weights.push(Tensor::new(l.dims.clone(), l.weights.clone()));
+            sigmas.push(Tensor::new(l.dims.clone(), l.sigmas.clone()));
+            biases.push(Tensor::new(vec![0], vec![]));
+        }
+        crate::model::Model {
+            manifest: ModelManifest {
+                name: self.arch.name().to_string(),
+                task: "synthetic".to_string(),
+                input_shape: vec![3, 224, 224],
+                eval_batch: 1,
+                n_classes: 1000,
+                param_count: self.weight_count(),
+                density: self.density(),
+                dense_metric: 0.0,
+                sparse_metric: 0.0,
+                layers,
+                hlo: "none".to_string(),
+                arg_order: vec![],
+            },
+            weights,
+            biases,
+            sigmas,
+        }
+    }
 }
 
 /// Generate a synthetic model. `scale ≥ 1` divides every channel/feature
@@ -345,5 +393,20 @@ mod tests {
         for l in &m.layers {
             assert!(l.sigmas.iter().all(|&s| s > 0.0));
         }
+    }
+
+    #[test]
+    fn to_model_preserves_tensors() {
+        let synth = generate(Arch::MobileNetV1, 32, 7);
+        let model = synth.to_model();
+        assert_eq!(model.weights.len(), synth.layers.len());
+        assert_eq!(model.weight_count(), synth.weight_count());
+        assert!((model.density() - synth.density()).abs() < 1e-12);
+        for (t, l) in model.weights.iter().zip(&synth.layers) {
+            assert_eq!(t.data, l.weights);
+            assert_eq!(t.shape, l.dims);
+        }
+        // raw size excludes biases (they are empty), matching SynthModel
+        assert_eq!(model.raw_bytes(), synth.raw_bytes());
     }
 }

@@ -4,6 +4,45 @@ pub mod npy;
 
 pub use npy::{read_npy_f32, read_npy_i32, write_npy_f32};
 
+#[cfg(test)]
+mod finite_tests {
+    use super::validate_finite;
+
+    #[test]
+    fn accepts_finite_rejects_nan_and_inf() {
+        assert!(validate_finite("w", &[0.0, -1.5, 3.0e30]).is_ok());
+        assert!(validate_finite("w", &[]).is_ok());
+        let err = validate_finite("layer \"fc1\" weights", &[0.0, f32::NAN])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fc1"), "{err}");
+        assert!(err.contains("[1]"), "{err}");
+        assert!(err.contains("NaN"), "{err}");
+        let err = validate_finite("sigma", &[f32::INFINITY]).unwrap_err().to_string();
+        assert!(err.contains("[0]"), "{err}");
+        let err =
+            validate_finite("sigma", &[1.0, f32::NEG_INFINITY]).unwrap_err().to_string();
+        assert!(err.contains("inf"), "{err}");
+    }
+}
+
+/// Reject non-finite entries with an error naming the tensor and the
+/// offending index. A NaN weight silently corrupts the RD scan (every
+/// candidate cost becomes NaN, so the quantizer keeps its level-0
+/// sentinel and reports distortion 0.0) and a NaN/Inf σ or weight
+/// poisons the grid statistics of eq. 2 — so non-finite values are
+/// rejected at load time instead of being quietly swallowed.
+pub fn validate_finite(what: &str, data: &[f32]) -> anyhow::Result<()> {
+    for (i, &v) in data.iter().enumerate() {
+        if !v.is_finite() {
+            anyhow::bail!(
+                "{what}[{i}] is {v} — tensors must contain only finite values"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// A row-major f32 tensor (all weight tensors in this crate are f32).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {

@@ -48,6 +48,12 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// the serve accept loop (pending sockets stay in the kernel backlog
 /// instead of accumulating fds in an unbounded queue). Never call
 /// `execute` from inside a job: with the queue full it would deadlock.
+/// For dependent task graphs (a job whose completion should trigger the
+/// next), route completions through a channel back to a coordinator
+/// thread that does the follow-up `execute` — the sweep engine's chained
+/// (layer × S) dispatch in `coordinator/sweep.rs` is the reference
+/// pattern, and it keeps its in-flight count under
+/// [`WorkerPool::queue_capacity`] so submission never blocks at all.
 /// A panicking job is caught and logged; the worker survives it.
 /// Dropping the pool drains the queue: already-submitted jobs still run,
 /// then workers exit.
@@ -91,6 +97,14 @@ impl WorkerPool {
 
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// How many jobs can queue before [`Self::execute`] blocks (the
+    /// sync-channel bound; running jobs are not counted). Coordinators
+    /// that chain dependent tasks cap their outstanding submissions
+    /// below this so submission stays non-blocking.
+    pub fn queue_capacity(&self) -> usize {
+        self.workers.len() * 4
     }
 
     /// Queue a job; it runs as soon as a worker frees up. Blocks while
@@ -137,6 +151,7 @@ mod tests {
         {
             let pool = WorkerPool::new(4);
             assert_eq!(pool.size(), 4);
+            assert_eq!(pool.queue_capacity(), 16);
             for _ in 0..64 {
                 let counter = counter.clone();
                 pool.execute(move || {

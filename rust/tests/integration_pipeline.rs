@@ -119,7 +119,7 @@ fn sweep_improves_or_matches_default_s() {
     let model = app::load_model("lenet300").unwrap();
     let spec = CompressionSpec::default();
     let (_, fixed) = compress_model(&model, &spec, 1);
-    let sweep = sweep_s(&model, &[0, 32, 64, 128, 256], &spec, 1);
+    let sweep = sweep_s(&model, &[0, 32, 64, 128, 256], &spec, 1).unwrap();
     assert!(sweep.best.1.compressed_bytes <= fixed.compressed_bytes);
 }
 
