@@ -1,19 +1,26 @@
 #!/usr/bin/env bash
-# S-sweep engine smoke test, run by CI from the rust/ directory:
-#   1. coarse-to-fine sweep on a synthetic model — parallel with early
-#      abandonment — plus the serial no-abandon reference (the binary
-#      itself asserts both select a byte-identical container)
-#   2. assert BENCH_sweep.json is well-formed and that the refinement
-#      path actually abandoned probes (the fan-out + budget engaged)
-#   3. roundtrip the best-S container through `decompress`
+# (S × λ) sweep engine smoke test, run by CI from the rust/ directory:
+#   1. 2-D coarse-to-fine sweep (5 S points per round × 3 λ-columns) on a
+#      synthetic model — parallel with per-column early abandonment — with
+#      --compare-serial (the binary recompresses every completed grid
+#      point serially and asserts byte-identity against the engine's
+#      per-point fingerprints)
+#   2. assert BENCH_sweep.json carries a well-formed Pareto frontier
+#      (non-dominated, covers the min-bytes and min-distortion completed
+#      points), per-column argmins, probes_abandoned > 0, and
+#      near-monotone (0.5% slack) container size along λ at fixed S
+#   3. roundtrip the frontier-argmin container through `decompress`
+#   4. frontier output selection: --select-lambda writes a λ-column's
+#      argmin (and rejects λ values outside the grid / empty λ grids)
 set -euo pipefail
 
 BIN=${BIN:-target/release/deepcabac}
 WORK=$(mktemp -d)
 trap 'rm -rf "$WORK"' EXIT
 
-echo "== parallel sweep (+ serial reference) =="
-"$BIN" sweep --arch mobilenet --scale 8 --points 9 --workers 4 \
+echo "== 2-D (S x lambda) sweep (+ per-point serial byte-identity) =="
+"$BIN" sweep --arch mobilenet --scale 8 --points 5 --workers 4 \
+  --lambdas 0.01,0.05,0.2 \
   --compare-serial --out "$WORK/best.dcbc" --json BENCH_sweep.json
 cat BENCH_sweep.json
 
@@ -24,25 +31,96 @@ import json
 b = json.load(open("BENCH_sweep.json"))
 assert b["bench"] == "sweep", b
 for key in ("model", "workers", "points_per_round", "rounds", "probes_total",
-            "probes_abandoned", "best_s", "best_bytes", "wall_s",
-            "wall_s_serial", "points"):
+            "probes_abandoned", "lambdas", "lambda_columns", "best_s",
+            "best_lambda", "best_bytes", "wall_s", "wall_s_serial", "points",
+            "frontier", "columns"):
     assert key in b, f"missing {key}"
-assert b["workers"] == 4 and b["points_per_round"] == 9
-assert b["probes_total"] == len(b["points"]) > 9, "refinement never ran"
+assert b["workers"] == 4 and b["points_per_round"] == 5
+assert b["lambda_columns"] == 3 and len(b["lambdas"]) == 3
+assert b["probes_total"] == len(b["points"]) > 15, "refinement never ran"
 assert b["rounds"] > 1, "refinement never ran"
 assert b["probes_abandoned"] > 0, "refinement abandoned no probes"
 assert sum(p["abandoned"] for p in b["points"]) == b["probes_abandoned"]
-completed = [p["bytes"] for p in b["points"] if not p["abandoned"]]
-assert completed and min(completed) == b["best_bytes"], "best != min(points)"
+completed = [p for p in b["points"] if not p["abandoned"]]
+assert completed and min(p["bytes"] for p in completed) == b["best_bytes"]
 assert 0 <= b["best_s"] <= 256
-print(f"BENCH_sweep.json OK: {b['probes_total']} probes / {b['rounds']} rounds, "
-      f"{b['probes_abandoned']} abandoned, best S = {b['best_s']} "
-      f"({b['best_bytes']} bytes), wall {b['wall_s']:.2f}s "
-      f"vs serial {b['wall_s_serial']:.2f}s")
+
+# per-column argmins: each column's best is the min over its completed points
+assert len(b["columns"]) == 3
+for col in b["columns"]:
+    col_completed = [p["bytes"] for p in completed
+                     if p["lambda_scale"] == col["lambda_scale"]]
+    assert col_completed and min(col_completed) == col["best_bytes"], col
+    assert col["probes"] >= 5, col
+
+# near-monotone container size along λ at fixed S (the coarse grid is
+# probed in every column and never abandoned; adaptive contexts give no
+# strict pointwise guarantee, so allow 0.5% + 2 bytes of slack like the
+# bytes_near_monotone_along_lambda_at_fixed_s unit test)
+by_s = {}
+for p in completed:
+    by_s.setdefault(p["s"], []).append((p["lambda_scale"], p["bytes"]))
+checked = 0
+lo_total = hi_total = 0
+for s, pts in sorted(by_s.items()):
+    pts.sort()
+    for (_, a), (_, bb) in zip(pts, pts[1:]):
+        assert bb <= a + a // 200 + 2, f"S={s}: bytes grew with lambda: {pts}"
+    if len(pts) >= 3:
+        checked += 1
+        lo_total += pts[0][1]
+        hi_total += pts[-1][1]
+assert checked >= 5, f"only {checked} S values probed across all 3 columns"
+# across the whole lambda range the rate saving must be real in aggregate
+assert hi_total < lo_total, f"lambda=0.2 not smaller than 0.01 in aggregate: {hi_total} vs {lo_total}"
+
+# frontier: non-empty, non-dominated vs every completed point, sorted by
+# bytes, and covering both extreme points of the completed grid
+f = b["frontier"]
+assert len(f) >= 2, f
+fb = [q["bytes"] for q in f]
+assert fb == sorted(fb)
+fd = [q["distortion"] for q in f]
+assert fd == sorted(fd, reverse=True), "frontier distortion not monotone"
+for q in f:
+    for p in completed:
+        dominates = (p["bytes"] <= q["bytes"] and p["distortion"] <= q["distortion"]
+                     and (p["bytes"] < q["bytes"] or p["distortion"] < q["distortion"]))
+        assert not dominates, f"frontier point {q} dominated by {p}"
+min_bytes = min(p["bytes"] for p in completed)
+min_dist = min(p["distortion"] for p in completed)
+assert any(q["bytes"] == min_bytes for q in f), "min-bytes point not on frontier"
+assert any(q["distortion"] == min_dist for q in f), "min-distortion point not on frontier"
+assert b["best_bytes"] == min_bytes
+
+print(f"BENCH_sweep.json OK: {b['probes_total']} probes / {b['rounds']} rounds "
+      f"across {b['lambda_columns']} lambda-columns, "
+      f"{b['probes_abandoned']} abandoned, frontier {len(f)} points, "
+      f"best (S={b['best_s']}, lambda={b['best_lambda']}) = {b['best_bytes']} bytes, "
+      f"wall {b['wall_s']:.2f}s vs serial {b['wall_s_serial']:.2f}s")
 EOF
 
-echo "== best-S container roundtrips =="
+echo "== frontier-argmin container roundtrips =="
 "$BIN" decompress --in "$WORK/best.dcbc" --out-dir "$WORK/out"
 N=$(ls "$WORK/out"/*.npy | wc -l)
 [ "$N" -gt 0 ] || { echo "no tensors decoded"; exit 1; }
-echo "decoded $N tensors from the best-S container"
+echo "decoded $N tensors from the frontier-argmin container"
+
+echo "== frontier output selection (--select-lambda) =="
+"$BIN" sweep --arch mobilenet --scale 8 --points 3 --workers 2 \
+  --lambdas 0.05,0.2 --select-lambda 0.2 \
+  --out "$WORK/col.dcbc" --json "$WORK/col.json"
+"$BIN" decompress --in "$WORK/col.dcbc" --out-dir "$WORK/colout"
+M=$(ls "$WORK/colout"/*.npy | wc -l)
+[ "$M" -gt 0 ] || { echo "no tensors decoded from the lambda-column argmin"; exit 1; }
+
+echo "== lambda-grid error paths =="
+if "$BIN" sweep --arch mobilenet --scale 8 --points 3 --lambdas "," \
+     --json "$WORK/x.json" 2>/dev/null; then
+  echo "empty lambda grid must fail"; exit 1
+fi
+if "$BIN" sweep --arch mobilenet --scale 8 --points 3 --lambdas 0.05 \
+     --select-lambda 0.9 --out "$WORK/y.dcbc" --json "$WORK/y.json" 2>/dev/null; then
+  echo "select-lambda outside the grid must fail"; exit 1
+fi
+echo "lambda-grid misuse rejected as expected"

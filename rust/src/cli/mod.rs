@@ -7,8 +7,9 @@
 //! deepcabac eval       --model NAME [--compressed FILE]
 //! deepcabac anatomy    [--levels "1,0,-3,..."]
 //! deepcabac sweep      (--model NAME | --arch vgg16) [--points N] [--workers N]
+//!                      [--lambdas A,B,... | --lambda-sweep N]
 //!                      [--sweep-exhaustive] [--no-abandon] [--compare-serial]
-//!                      [--json FILE] [--csv FILE] [--out FILE]
+//!                      [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
 //! deepcabac synth      --arch vgg16 [--scale N] [--s N]
 //! ```
 
@@ -80,6 +81,35 @@ impl Args {
         }
     }
 
+    /// Comma-separated float-list flag (e.g. `--lambdas 0.01,0.05,0.2`).
+    /// `Ok(None)` when absent; the uniform validator for grid-like
+    /// flags: empty lists, unparsable tokens, and non-finite/negative
+    /// values are all usage errors (matching [`Self::get_count`]'s
+    /// reject-zero hardening), never downstream panics.
+    pub fn get_f32s(&self, name: &str) -> Result<Option<Vec<f32>>, String> {
+        let Some(raw) = self.get(name) else {
+            return Ok(None);
+        };
+        let mut out = Vec::new();
+        for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let v: f32 = tok
+                .parse()
+                .map_err(|_| format!("--{name}: {tok:?} is not a float"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!(
+                    "--{name} values must be finite and >= 0 (got {tok})"
+                ));
+            }
+            // "-0.0" passes the >= 0 check; normalize so its bit pattern
+            // can't split a λ-column downstream
+            out.push(if v == 0.0 { 0.0 } else { v });
+        }
+        if out.is_empty() {
+            return Err(format!("--{name} needs at least one value (empty list)"));
+        }
+        Ok(Some(out))
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -107,18 +137,31 @@ USAGE:
       Figure 1: per-bin trace of the binarization of a level sequence.
   deepcabac sweep (--model NAME | --arch vgg16|resnet50|mobilenet [--scale N]
                   [--seed N]) [--points N] [--workers N] [--lambda-scale X]
+                  [--lambdas A,B,... | --lambda-sweep N] [--eval]
                   [--sweep-exhaustive] [--no-abandon] [--compare-serial]
-                  [--json FILE] [--csv FILE] [--out FILE]
-      The paper's §4 grid-coarseness sweep on the parallel incremental
-      engine: coarse-to-fine refinement over S ∈ {0..256} ((layer × S)
-      probe tasks fanned over --workers threads, per-layer statistics
-      shared across probes, refinement probes abandoned the moment they
-      cannot beat the incumbent — byte-identical winner either way).
-      --sweep-exhaustive probes all 257 points; --no-abandon disables
-      early abandonment; --compare-serial also times the serial sweep
-      and verifies it selects the identical container. Writes the
-      rate-distortion frontier to --json (default BENCH_sweep.json),
-      per-point CSV to --csv, and the best container to --out.
+                  [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
+      The 2-D (S × λ) rate-distortion surface sweep on the parallel
+      incremental engine: coarse-to-fine refinement over S ∈ {0..256}
+      per λ-column ((layer × S × λ) probe tasks fanned over --workers
+      threads, per-layer statistics shared across the whole surface,
+      refinement probes abandoned the moment they cannot beat their
+      λ-column's incumbent — byte-identical winners either way).
+      --lambdas gives explicit λ (lambda_scale) columns; --lambda-sweep
+      N uses λ=0 plus N-1 log-spaced columns over [0.01, 1.0] (N=1 is
+      just the 0.05 default; the two flags are mutually exclusive);
+      neither = the single --lambda-scale column (the paper's pure S
+      sweep).
+      --eval re-evaluates every λ-column's
+      argmin container through PJRT (the accuracy-vs-λ trace the old
+      serial rd_sweep example printed; needs a trained --model).
+      --sweep-exhaustive probes all 257 S per column; --no-abandon
+      disables early abandonment (full frontier coverage);
+      --compare-serial recompresses every completed grid point serially
+      and verifies byte-identity against the engine's per-point
+      fingerprints. Writes the Pareto frontier + per-column argmins to
+      --json (default BENCH_sweep.json), per-point CSV to --csv, and the
+      best container to --out (--select-lambda X writes λ-column X's
+      argmin instead of the overall smallest).
   deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
                   [--out FILE]
       Generate + compress a synthetic ImageNet-scale model (--out writes
@@ -214,6 +257,44 @@ mod tests {
         assert!(a.get_count("points", 17).is_err());
         let a = Args::parse(&sv(&["table1", "--sweep", "0"])).unwrap();
         assert!(a.get_count("sweep", 17).is_err());
+    }
+
+    #[test]
+    fn parses_lambda_flags_and_rejects_bad_grids() {
+        let a = Args::parse(&sv(&["sweep", "--lambdas", "0.01,0.05,0.2"])).unwrap();
+        assert_eq!(a.get_f32s("lambdas").unwrap(), Some(vec![0.01, 0.05, 0.2]));
+        // absent flag is None, not an error
+        assert_eq!(a.get_f32s("absent").unwrap(), None);
+        // whitespace and trailing commas are tolerated
+        let a = Args::parse(&sv(&["sweep", "--lambdas", " 0.1 ,0.2, "])).unwrap();
+        assert_eq!(a.get_f32s("lambdas").unwrap(), Some(vec![0.1, 0.2]));
+        // an empty λ grid is a usage error (PR 3's empty-S-grid
+        // hardening, extended to the λ dimension), not a panic
+        let a = Args::parse(&sv(&["sweep", "--lambdas", ","])).unwrap();
+        assert!(a.get_f32s("lambdas").unwrap_err().contains("at least one"));
+        let a = Args::parse(&sv(&["sweep", "--lambdas", "0.1,abc"])).unwrap();
+        assert!(a.get_f32s("lambdas").unwrap_err().contains("not a float"));
+        let a = Args::parse(&sv(&["sweep", "--lambdas", "0.1,-0.2"])).unwrap();
+        assert!(a.get_f32s("lambdas").unwrap_err().contains(">= 0"));
+        let a = Args::parse(&sv(&["sweep", "--lambdas", "nan"])).unwrap();
+        assert!(a.get_f32s("lambdas").is_err());
+        // "-0.0" is accepted (>= 0) but normalized to +0.0 so it can't
+        // split a λ-column
+        let a = Args::parse(&sv(&["sweep", "--lambdas", "-0.0"])).unwrap();
+        assert_eq!(
+            a.get_f32s("lambdas").unwrap().unwrap()[0].to_bits(),
+            0.0f32.to_bits()
+        );
+        // --lambda-sweep 0 rejected through the uniform count validator
+        let a = Args::parse(&sv(&["sweep", "--lambda-sweep", "0"])).unwrap();
+        assert!(a.get_count("lambda-sweep", 5).is_err());
+        let a = Args::parse(&sv(&["sweep", "--lambda-sweep", "3"])).unwrap();
+        assert_eq!(a.get_count("lambda-sweep", 5).unwrap(), 3);
+        // frontier output selection parses as a plain flag value
+        let a =
+            Args::parse(&sv(&["sweep", "--select-lambda", "0.2", "--out", "b.dcbc"]))
+                .unwrap();
+        assert_eq!(a.get("select-lambda"), Some("0.2"));
     }
 
     #[test]

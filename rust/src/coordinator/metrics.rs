@@ -47,12 +47,23 @@ impl ModelReport {
         compressed: &CompressedModel,
         layers: Vec<LayerReport>,
     ) -> Self {
+        Self::from_layers_sized(model, compressed.serialize().len(), layers)
+    }
+
+    /// [`Self::from_layers`] when the caller already serialized the
+    /// container (the sweep engine hashes the bytes for its per-point
+    /// identity fingerprint anyway — this avoids serializing twice).
+    pub fn from_layers_sized(
+        model: &Model,
+        compressed_bytes: usize,
+        layers: Vec<LayerReport>,
+    ) -> Self {
         let nonzero: usize = layers.iter().map(|l| l.nonzero).sum();
         let total: usize = layers.iter().map(|l| l.n_weights).sum();
         Self {
             name: model.manifest.name.clone(),
             raw_bytes: model.raw_bytes(),
-            compressed_bytes: compressed.serialize().len(),
+            compressed_bytes,
             density: nonzero as f64 / total.max(1) as f64,
             total_time_s: layers.iter().map(|l| l.time_s).sum(),
             layers,
@@ -82,18 +93,20 @@ impl ModelReport {
     }
 }
 
-/// Aggregate statistics of one S-sweep run — the numbers
+/// Aggregate statistics of one (S × λ) sweep run — the numbers
 /// `BENCH_sweep.json` records next to the per-point frontier.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SweepStats {
-    /// Sweep points probed (each point = one S value over all layers).
+    /// Grid points probed (each point = one (S, λ) cell over all layers).
     pub probes_total: usize,
     /// Points abandoned early because their running payload could no
-    /// longer beat the best completed container.
+    /// longer beat their λ-column's best completed container.
     pub probes_abandoned: usize,
     /// Scheduling rounds executed (1 for a flat sweep; coarse round +
     /// refinement rounds for the coarse-to-fine driver).
     pub rounds: usize,
+    /// Distinct λ-columns of the swept surface.
+    pub columns: usize,
     /// Wall clock of the whole sweep.
     pub wall_s: f64,
 }

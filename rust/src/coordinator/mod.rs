@@ -1,8 +1,10 @@
 //! Layer-3 coordinator: the compression pipeline (per-layer workers,
-//! bounded queues), the parallel incremental S-sweep engine (paper §4
-//! probes S ∈ {0,…,256} and keeps the best; the engine fans (layer × S)
+//! bounded queues), the parallel incremental (S × λ) sweep engine
+//! (paper §4 probes S ∈ {0,…,256} and keeps the best; the journal
+//! version sweeps the λ trade-off too; the engine fans (layer × S × λ)
 //! probe tasks onto a worker pool, hoists per-tensor statistics across
-//! probes, and early-abandons probes that can no longer win), and
+//! the whole surface, early-abandons probes that can no longer win
+//! their λ-column, and emits the Pareto size/distortion frontier), and
 //! pipeline metrics.
 
 pub mod metrics;
@@ -14,6 +16,6 @@ pub use pipeline::{
     compress_model, compress_tensor, compress_tensor_chunked, CompressionSpec, LayerStats,
 };
 pub use sweep::{
-    sweep_s, sweep_s_auto, sweep_s_per_layer, SweepEngine, SweepOptions, SweepPoint,
-    SweepResult,
+    sweep_grid, sweep_per_layer, sweep_s, sweep_s_auto, sweep_s_per_layer, ColumnBest,
+    GridPoint, SweepEngine, SweepOptions, SweepPoint, SweepResult,
 };

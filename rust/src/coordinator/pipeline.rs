@@ -6,10 +6,12 @@
 //! fan out onto a worker pool; results are collected in manifest order.
 //!
 //! The per-tensor invariants of eq. 1/eq. 2 — w_max, σ_min, the η
-//! vector, mean(η) — do **not** depend on the grid coarseness S, so they
-//! are hoisted into [`LayerStats`]: the S-sweep engine computes them
-//! once per layer and shares them across every probe of that layer
-//! instead of recomputing them per (layer × S) probe.
+//! vector, mean(η) — depend on **neither** the grid coarseness S nor
+//! the Lagrangian scale λ (λ = lambda_scale · Δ² · mean(η) is *derived
+//! from* them per grid point), so they are hoisted into [`LayerStats`]:
+//! the (S × λ) sweep engine computes them once per layer and shares
+//! them across every probe of that layer over the whole surface instead
+//! of recomputing them per (layer × S × λ) probe.
 
 use crate::bayes;
 use crate::codec::CodecConfig;
@@ -51,10 +53,11 @@ impl Default for CompressionSpec {
     }
 }
 
-/// Per-tensor invariants shared by every probe of an S sweep. Building
-/// the grid from these via [`LayerStats::grid`] is exactly equivalent to
-/// [`QuantGrid::from_tensor`] on the raw tensors (same folds, same
-/// fallbacks), so hoisting changes no bytes.
+/// Per-tensor invariants shared by every probe of an (S × λ) sweep.
+/// Building the grid from these via [`LayerStats::grid`] is exactly
+/// equivalent to [`QuantGrid::from_tensor`] on the raw tensors (same
+/// folds, same fallbacks), and [`LayerStats::lambda`] reproduces the
+/// inline λ expression bit for bit, so hoisting changes no bytes.
 #[derive(Debug, Clone)]
 pub struct LayerStats {
     /// max |w| over the tensor (the w_max of eq. 2).

@@ -1,90 +1,173 @@
-//! The parallel, incremental S-sweep engine.
+//! The parallel, incremental (S × λ) rate–distortion sweep engine — the
+//! repo's single definition of "explore the RD surface".
 //!
 //! The paper probes the grid coarseness S ∈ {0, …, 256} per model and
 //! keeps the best-compressing setting ("Since the compression result can
 //! be sensitive to the parameter S in (2), we probed the compression
 //! performance for all S ∈ {0,...,256} and selected the best performing
-//! model" — §4). Done naively that is ~257× the cost of one full
-//! compression. This engine attacks the sweep on three axes:
+//! model" — §4). The journal version (arXiv 1907.11900) additionally
+//! sweeps the rate–distortion trade-off λ, tracing the full
+//! compression–accuracy frontier that beats Deep Compression. This
+//! engine schedules the whole 2-D surface at once:
 //!
-//! 1. **Parallel probes** — the sweep expands into (layer × S) probe
-//!    tasks fanned onto a shared [`WorkerPool`]. A point's layer tasks
-//!    are *chained* (layer ℓ+1 is dispatched when layer ℓ completes, by
-//!    the coordinator thread — jobs never submit jobs, which would
-//!    deadlock the pool's bounded queue), so parallelism comes from many
-//!    S points in flight at once and every point's running payload total
-//!    is deterministic.
-//! 2. **Hoisted invariants** — w_max, σ_min, η, mean(η) do not depend on
-//!    S, so they are computed once per layer ([`LayerStats`]) and shared
-//!    by all of that layer's probes.
-//! 3. **Early abandonment** — once some point has completed, any probe
-//!    whose accumulated payload can no longer fit inside the best
-//!    container is aborted mid-scan. The budget is
-//!    `best_serialized − min_overhead` where `min_overhead` is a lower
-//!    bound on a container's non-payload bytes, so an abandoned point
-//!    provably serializes strictly larger than the incumbent:
-//!    **abandonment never changes the winner**, and because budgets are
-//!    fixed per round the set of abandoned points is a pure function of
-//!    the schedule — identical across worker counts (the determinism
-//!    tests pin both properties).
+//! 1. **Parallel probes** — every grid point (S, λ) expands into
+//!    (layer × point) probe tasks fanned onto a shared [`WorkerPool`]. A
+//!    point's layer tasks are *chained* (layer ℓ+1 is dispatched when
+//!    layer ℓ completes, by the coordinator thread — jobs never submit
+//!    jobs, which would deadlock the pool's bounded queue), so
+//!    parallelism comes from many grid points in flight at once and
+//!    every point's running payload total is deterministic.
+//! 2. **Hoisted invariants** — w_max, σ_min, η, mean(η) depend on
+//!    neither S nor λ, so they are computed once per layer
+//!    ([`LayerStats`]) and shared by every probe of that layer across
+//!    the entire surface.
+//! 3. **Early abandonment per λ-column** — each λ-column keeps its own
+//!    incumbent (the smallest serialized container at that λ). Once a
+//!    column has one, any of its probes whose accumulated payload can no
+//!    longer fit inside the column's best container is aborted mid-scan.
+//!    The budget is `column_best_serialized − min_overhead` where
+//!    `min_overhead` is a lower bound on a container's non-payload
+//!    bytes, so an abandoned point provably serializes strictly larger
+//!    than its column's incumbent: **abandonment never changes any
+//!    column's argmin** (nor the overall winner, which is the min over
+//!    column argmins). Budgets are fixed per round, so the abandoned set
+//!    is a pure function of the schedule — identical across worker
+//!    counts (the determinism tests pin both properties).
+//! 4. **Pareto frontier** — alongside the per-column argmins the engine
+//!    emits the non-dominated set of completed points in the
+//!    (serialized bytes, weighted distortion) plane. Abandoned probes
+//!    never complete and are excluded from the frontier; run with
+//!    abandonment off when full-surface coverage matters more than
+//!    sweep speed (the coarse round of [`sweep_s_auto`] always completes
+//!    fully, so the frontier always covers the coarse grid at every λ).
 //!
-//! On top of the engine, [`sweep_s_auto`] runs a coarse-to-fine driver:
-//! probe a coarse grid, then repeatedly refine around the argmin until
-//! every integer between its probed neighbours has been tried
-//! (`exhaustive` forces all 257 points in one round instead).
+//! Every completed point records an FNV-1a fingerprint of its serialized
+//! container, so byte-identity against the serial single-point pipeline
+//! is checkable per grid point (`sweep --compare-serial`) without
+//! retaining one container per probe.
+//!
+//! On top of the engine, [`sweep_s_auto`] runs a coarse-to-fine driver
+//! *per λ-column*: probe a coarse S grid across every column, then
+//! repeatedly refine each column around its own argmin until every
+//! integer between its probed neighbours has been tried (`exhaustive`
+//! forces all 257 S values per column instead).
 
 use super::metrics::{LayerReport, ModelReport, SweepStats};
 use super::pipeline::{self, CompressionSpec, LayerStats};
 use crate::model::{CompressedLayer, CompressedModel, Model};
 use crate::util::par::WorkerPool;
-use crate::util::Timer;
+use crate::util::{fnv1a, Timer};
 use anyhow::{bail, Result};
 use std::collections::BTreeSet;
 use std::sync::{mpsc, Arc};
 
+/// One cell of the 2-D RD surface: grid coarseness S (eq. 2) × the
+/// scale-free Lagrangian multiplier `lambda_scale`
+/// (λ = lambda_scale · Δ² · mean(η), see [`CompressionSpec`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridPoint {
+    pub s: u32,
+    pub lambda_scale: f32,
+}
+
+impl GridPoint {
+    /// `-0.0` is normalized to `0.0` so the two bit patterns can never
+    /// split one λ-column into two identical ones.
+    pub fn new(s: u32, lambda_scale: f32) -> Self {
+        let lambda_scale = if lambda_scale == 0.0 { 0.0 } else { lambda_scale };
+        Self { s, lambda_scale }
+    }
+
+    /// Dedup/bracket key: λ-column first (exact bit pattern — columns
+    /// are identity classes, not numerically ordered), then S.
+    fn key(&self) -> (u32, u32) {
+        (self.lambda_scale.to_bits(), self.s)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub s: u32,
-    /// Serialized container size at this S. For abandoned probes this is
-    /// the payload accumulated before the abort — a lower bound, recorded
-    /// so the frontier report still shows *why* the point lost.
+    pub lambda_scale: f32,
+    /// Serialized container size at this point. For abandoned probes
+    /// this is the payload accumulated before the abort — a lower bound,
+    /// recorded so the frontier report still shows *why* the point lost.
     pub compressed_bytes: usize,
     pub density: f64,
     pub distortion: f64,
-    /// True if the probe was cut short by the early-abandon budget
-    /// (density/distortion are then 0 — the point never completed).
+    /// True if the probe was cut short by its λ-column's early-abandon
+    /// budget (density/distortion are then 0 — the point never
+    /// completed).
     pub abandoned: bool,
+    /// FNV-1a fingerprint of the serialized container (0 for abandoned
+    /// probes) — per-point byte-identity against the serial pipeline.
+    pub container_hash: u64,
     /// Summed wall clock of this point's probe tasks (reporting only —
     /// not deterministic, excluded from the determinism tests).
     pub wall_s: f64,
+}
+
+/// A λ-column's argmin: the smallest-container probe at that λ.
+#[derive(Debug)]
+pub struct ColumnBest {
+    pub lambda_scale: f32,
+    pub s: u32,
+    pub bytes: usize,
+    pub model: CompressedModel,
+    pub report: ModelReport,
+    /// Probes scheduled / abandoned in this column (abandon-rate
+    /// reporting per λ-column).
+    pub probes: usize,
+    pub abandoned: usize,
 }
 
 #[derive(Debug)]
 pub struct SweepResult {
     /// Every probed point, in schedule order (deterministic).
     pub points: Vec<SweepPoint>,
-    /// The best (smallest-container) probe; ties go to the earlier
-    /// schedule position, exactly like the original serial sweep.
+    /// The overall best (smallest-container) probe across all λ-columns;
+    /// ties go to the earlier schedule position, exactly like the
+    /// original serial sweep.
     pub best: (CompressedModel, ModelReport),
+    /// The (S, λ) cell the overall best came from (the container itself
+    /// records only S — λ shapes the levels but is not needed to decode).
+    pub best_point: GridPoint,
+    /// Per-λ-column argmin containers, in first-scheduled column order.
+    pub columns: Vec<ColumnBest>,
+    /// Indices into `points`: the Pareto frontier of completed probes in
+    /// the (compressed_bytes, distortion) plane, sorted by bytes
+    /// ascending (distortion is then non-increasing along it).
+    pub frontier: Vec<usize>,
     pub stats: SweepStats,
 }
 
 /// Options for [`sweep_s_auto`].
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SweepOptions {
-    /// Points per scheduling round (coarse grid size and refinement
-    /// fan-out).
+    /// S points per scheduling round (coarse grid size and refinement
+    /// fan-out, per λ-column).
     pub points: usize,
     pub workers: usize,
-    /// Probe all 257 values in one round instead of coarse-to-fine.
+    /// Probe all 257 S values per λ-column in one round instead of
+    /// coarse-to-fine.
     pub exhaustive: bool,
-    /// Early-abandon refinement probes that can no longer win.
+    /// Early-abandon refinement probes that can no longer win their
+    /// λ-column.
     pub abandon: bool,
+    /// λ-columns (lambda_scale values) of the surface. Empty means
+    /// "just the base spec's lambda_scale" — a pure S sweep.
+    pub lambdas: Vec<f32>,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        Self { points: 17, workers: 1, exhaustive: false, abandon: true }
+        Self {
+            points: 17,
+            workers: 1,
+            exhaustive: false,
+            abandon: true,
+            lambdas: Vec::new(),
+        }
     }
 }
 
@@ -100,6 +183,58 @@ pub fn default_s_grid(n: usize) -> Vec<u32> {
     out
 }
 
+/// λ (lambda_scale) grid for `sweep --lambda-sweep N`. N ≥ 3: λ = 0
+/// (weighted nearest-neighbour, the min-distortion anchor of the
+/// frontier) plus N−1 log-spaced columns over [0.01, 1.0] —
+/// engine-native coverage of the set the legacy serial
+/// `examples/rd_sweep.rs` swept ({0, 0.01, 0.05, 0.2, 1.0} ≈
+/// `default_lambda_grid(5)`). Degenerate sizes are special-cased:
+/// N = 2 pairs the λ=0 anchor with the 0.05 default, and N = 1 is just
+/// the 0.05 default (no anchor — a single column can't trace a
+/// frontier anyway).
+pub fn default_lambda_grid(n: usize) -> Vec<f32> {
+    match n {
+        0 => Vec::new(),
+        1 => vec![0.05],
+        2 => vec![0.0, 0.05],
+        _ => {
+            let mut out = vec![0.0f32];
+            for i in 0..(n - 1) {
+                let t = i as f64 / (n - 2) as f64;
+                out.push((0.01 * 100f64.powf(t)) as f32);
+            }
+            out
+        }
+    }
+}
+
+fn validate_lambda(l: f32) -> Result<()> {
+    if !l.is_finite() || l < 0.0 {
+        bail!("λ grid values must be finite and >= 0 (got {l})");
+    }
+    Ok(())
+}
+
+/// The λ-columns a driver run will cover: the caller's list (validated,
+/// deduped by bit pattern, order preserved) or the base spec's single λ.
+fn resolve_lambdas(lambdas: &[f32], base: &CompressionSpec) -> Result<Vec<f32>> {
+    let raw: &[f32] = if lambdas.is_empty() {
+        std::slice::from_ref(&base.lambda_scale)
+    } else {
+        lambdas
+    };
+    let mut seen = BTreeSet::new();
+    let mut out = Vec::with_capacity(raw.len());
+    for &l in raw {
+        validate_lambda(l)?;
+        let l = if l == 0.0 { 0.0 } else { l }; // -0.0 → 0.0: one column
+        if seen.insert(l.to_bits()) {
+            out.push(l);
+        }
+    }
+    Ok(out)
+}
+
 /// Shared, immutable probe context — cloned out of the caller's model
 /// once so probe tasks are `'static` for the worker pool.
 struct ProbeCtx {
@@ -111,11 +246,45 @@ struct ProbeCtx {
     min_overhead: usize,
 }
 
+/// Precompute [`LayerStats`] for every layer (in parallel) and clone the
+/// model once so probe tasks can outlive the caller's borrow. Shared by
+/// the surface engine and the per-layer sweep.
+fn probe_ctx(model: &Model, base: &CompressionSpec, workers: usize) -> Arc<ProbeCtx> {
+    let stats = crate::util::par::map_indexed(model.weights.len(), workers, |i| {
+        LayerStats::compute(&model.weights[i].data, &model.sigmas[i].data, base.weighted)
+    });
+    let min_overhead = min_overhead(model);
+    // Slim clone: σ tensors are already folded into LayerStats and
+    // nothing downstream reads them, so don't hold a second
+    // weights-sized copy for the engine's lifetime.
+    let slim = Model {
+        manifest: model.manifest.clone(),
+        weights: model.weights.clone(),
+        biases: model.biases.clone(),
+        sigmas: model
+            .weights
+            .iter()
+            .map(|_| crate::tensor::Tensor::new(vec![0], vec![]))
+            .collect(),
+    };
+    Arc::new(ProbeCtx { model: slim, stats, base: *base, min_overhead })
+}
+
 struct Best {
-    s: u32,
+    /// Global schedule index of the winning probe (tie-breaker: earlier
+    /// schedule position wins, independent of completion order).
+    sched: usize,
+    point: GridPoint,
     bytes: usize,
     model: CompressedModel,
     report: ModelReport,
+}
+
+/// One λ-column's scheduling state.
+struct Column {
+    lambda_bits: u32,
+    lambda_scale: f32,
+    best: Option<Best>,
 }
 
 /// LEB128 length of a varint (mirrors `bitstream::write_varint`).
@@ -129,10 +298,10 @@ fn varint_len(mut v: u64) -> usize {
 }
 
 /// Lower bound on the non-payload bytes of a serialized container for
-/// `model`: every S-independent field is counted exactly, and each
+/// `model`: every (S, λ)-independent field is counted exactly, and each
 /// S-dependent varint (max_level, s_param, payload_len) at its 1-byte
 /// minimum; v2 chunk tables are omitted (they only add bytes). Used to
-/// convert the best *serialized* size into a *payload* budget:
+/// convert a column's best *serialized* size into a *payload* budget:
 /// `payload(p) > best_bytes − min_overhead` implies
 /// `serialized(p) > best_bytes`.
 fn min_overhead(model: &Model) -> usize {
@@ -159,113 +328,190 @@ fn min_overhead(model: &Model) -> usize {
     c
 }
 
-/// The reusable sweep engine: create once, feed scheduling rounds, then
-/// [`SweepEngine::finish`]. Rounds are barriers — the abandon budget is
-/// fixed when a round starts, which is what makes the abandoned set
-/// deterministic.
+/// The reusable sweep engine: create once, feed scheduling rounds of
+/// (S, λ) grid points, then [`SweepEngine::finish`]. Rounds are barriers
+/// — every λ-column's abandon budget is fixed when a round starts, which
+/// is what makes the abandoned set deterministic.
 pub struct SweepEngine {
     ctx: Arc<ProbeCtx>,
     pool: WorkerPool,
-    probed: BTreeSet<u32>,
+    probed: BTreeSet<(u32, u32)>,
     points: Vec<SweepPoint>,
-    best: Option<Best>,
+    columns: Vec<Column>,
     rounds: usize,
     abandoned: usize,
     timer: Timer,
 }
 
 impl SweepEngine {
-    /// Precomputes [`LayerStats`] for every layer (in parallel) and
-    /// clones the model once so probe tasks can outlive the caller's
-    /// borrow.
     pub fn new(model: &Model, base: &CompressionSpec, workers: usize) -> Self {
-        let stats = crate::util::par::map_indexed(model.weights.len(), workers, |i| {
-            LayerStats::compute(&model.weights[i].data, &model.sigmas[i].data, base.weighted)
-        });
-        let min_overhead = min_overhead(model);
-        // Slim clone: σ tensors are already folded into LayerStats and
-        // nothing downstream reads them, so don't hold a second
-        // weights-sized copy for the engine's lifetime.
-        let slim = Model {
-            manifest: model.manifest.clone(),
-            weights: model.weights.clone(),
-            biases: model.biases.clone(),
-            sigmas: model
-                .weights
-                .iter()
-                .map(|_| crate::tensor::Tensor::new(vec![0], vec![]))
-                .collect(),
-        };
         Self {
-            ctx: Arc::new(ProbeCtx {
-                model: slim,
-                stats,
-                base: *base,
-                min_overhead,
-            }),
+            ctx: probe_ctx(model, base, workers),
             pool: WorkerPool::new(workers),
             probed: BTreeSet::new(),
             points: Vec::new(),
-            best: None,
+            columns: Vec::new(),
             rounds: 0,
             abandoned: 0,
             timer: Timer::new(),
         }
     }
 
-    /// S of the best completed probe so far.
-    pub fn best_s(&self) -> Option<u32> {
-        self.best.as_ref().map(|b| b.s)
+    fn col_index(&mut self, lambda_scale: f32) -> usize {
+        let bits = lambda_scale.to_bits();
+        if let Some(i) = self.columns.iter().position(|c| c.lambda_bits == bits) {
+            return i;
+        }
+        self.columns.push(Column { lambda_bits: bits, lambda_scale, best: None });
+        self.columns.len() - 1
     }
 
-    /// Payload-byte budget derived from the incumbent (see the module
-    /// docs); `usize::MAX` (never abandon) until a first point completes.
-    fn budget(&self) -> usize {
-        self.best
+    /// (bytes, sched, column index) of the overall winner so far.
+    fn overall(&self) -> Option<(usize, usize, usize)> {
+        self.columns
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.best.as_ref().map(|b| (b.bytes, b.sched, i)))
+            .min()
+    }
+
+    /// The (S, λ) cell of the best completed probe so far.
+    pub fn best_point(&self) -> Option<GridPoint> {
+        self.overall().map(|(_, _, i)| {
+            self.columns[i].best.as_ref().expect("overall() returned the column").point
+        })
+    }
+
+    /// S of the best completed probe in the λ-column `lambda_scale`.
+    pub fn best_s_in(&self, lambda_scale: f32) -> Option<u32> {
+        let bits = lambda_scale.to_bits();
+        self.columns
+            .iter()
+            .find(|c| c.lambda_bits == bits)?
+            .best
             .as_ref()
-            .map(|b| b.bytes.saturating_sub(self.ctx.min_overhead))
-            .unwrap_or(usize::MAX)
+            .map(|b| b.point.s)
     }
 
-    /// Probe every not-yet-probed S in `s_list` (duplicates and repeats
-    /// are skipped), with early abandonment iff `abandon`. The budget is
-    /// fixed on entry, so which probes get abandoned depends only on the
-    /// schedule — not on worker count or timing.
-    pub fn run_round(&mut self, s_list: &[u32], abandon: bool) {
-        let s_list: Vec<u32> =
-            s_list.iter().copied().filter(|s| self.probed.insert(*s)).collect();
-        if s_list.is_empty() {
+    /// The S values probed so far in the λ-column `lambda_scale`.
+    fn probed_s_in(&self, lambda_scale: f32) -> BTreeSet<u32> {
+        let bits = lambda_scale.to_bits();
+        self.probed.range((bits, 0)..=(bits, u32::MAX)).map(|&(_, s)| s).collect()
+    }
+
+    /// Probe every not-yet-probed grid point in `grid` (duplicates and
+    /// repeats are skipped), with early abandonment iff `abandon`. Each
+    /// λ-column's budget is fixed on entry (∞ while a column has no
+    /// completed probe — such a column can never abandon), so which
+    /// probes get abandoned depends only on the schedule — not on worker
+    /// count or timing.
+    pub fn run_round(&mut self, grid: &[GridPoint], abandon: bool) {
+        // re-normalize through GridPoint::new: the fields are pub, so a
+        // literal-constructed -0.0 must still land in the +0.0 column
+        let pts: Vec<GridPoint> = grid
+            .iter()
+            .map(|p| GridPoint::new(p.s, p.lambda_scale))
+            .filter(|p| self.probed.insert(p.key()))
+            .collect();
+        if pts.is_empty() {
             return;
         }
         self.rounds += 1;
-        let budget = if abandon { self.budget() } else { usize::MAX };
-        let (points, round_best) = run_probes(&self.ctx, &self.pool, &s_list, budget);
+        let cols: Vec<usize> = pts.iter().map(|p| self.col_index(p.lambda_scale)).collect();
+        let budgets: Vec<usize> = cols
+            .iter()
+            .map(|&c| {
+                if !abandon {
+                    return usize::MAX;
+                }
+                self.columns[c]
+                    .best
+                    .as_ref()
+                    .map(|b| b.bytes.saturating_sub(self.ctx.min_overhead))
+                    .unwrap_or(usize::MAX)
+            })
+            .collect();
+        let sched_base = self.points.len();
+        let (points, round_best) = run_probes(
+            &self.ctx,
+            &self.pool,
+            &pts,
+            &cols,
+            &budgets,
+            sched_base,
+            self.columns.len(),
+        );
         self.abandoned += points.iter().filter(|p| p.abandoned).count();
         self.points.extend(points);
-        if let Some(rb) = round_best {
-            // strict < : earlier rounds win ties, matching the serial
-            // sweep's first-smallest selection
-            let better = self.best.as_ref().map(|b| rb.bytes < b.bytes).unwrap_or(true);
-            if better {
-                self.best = Some(rb);
+        for (c, rb) in round_best.into_iter().enumerate() {
+            if let Some(rb) = rb {
+                // strict < : earlier rounds win ties, matching the serial
+                // sweep's first-smallest selection (the incumbent always
+                // has the smaller schedule index)
+                let better =
+                    self.columns[c].best.as_ref().map(|b| rb.bytes < b.bytes).unwrap_or(true);
+                if better {
+                    self.columns[c].best = Some(rb);
+                }
             }
         }
     }
 
     pub fn finish(self) -> Result<SweepResult> {
-        let Some(best) = self.best else {
+        let Some((_, _, wi)) = self.overall() else {
             bail!(
-                "S sweep completed no probe points ({} scheduled) — \
-                 the candidate grid must contain at least one S value",
+                "sweep completed no probe points ({} scheduled) — \
+                 the candidate grid must contain at least one (S, λ) value",
                 self.points.len()
             );
         };
+        // per-column probe/abandon counts for the column report
+        let mut col_counts = vec![(0usize, 0usize); self.columns.len()];
+        for p in &self.points {
+            let bits = p.lambda_scale.to_bits();
+            if let Some(i) = self.columns.iter().position(|c| c.lambda_bits == bits) {
+                col_counts[i].0 += 1;
+                if p.abandoned {
+                    col_counts[i].1 += 1;
+                }
+            }
+        }
+        let frontier = pareto_frontier(&self.points);
+        // the winner is cloned into `best` AND kept in its ColumnBest
+        // (for --select-lambda): an accepted duplication — containers
+        // are compressed artifacts, orders of magnitude below the model
+        // the engine already holds
+        let (best, best_point) = {
+            let b = self.columns[wi].best.as_ref().expect("overall() returned the column");
+            ((b.model.clone(), b.report.clone()), b.point)
+        };
+        let n_columns = self.columns.len();
+        let columns: Vec<ColumnBest> = self
+            .columns
+            .into_iter()
+            .zip(col_counts)
+            .filter_map(|(c, (probes, abandoned))| {
+                c.best.map(|b| ColumnBest {
+                    lambda_scale: c.lambda_scale,
+                    s: b.point.s,
+                    bytes: b.bytes,
+                    model: b.model,
+                    report: b.report,
+                    probes,
+                    abandoned,
+                })
+            })
+            .collect();
         Ok(SweepResult {
-            best: (best.model, best.report),
+            best,
+            best_point,
+            columns,
+            frontier,
             stats: SweepStats {
                 probes_total: self.points.len(),
                 probes_abandoned: self.abandoned,
                 rounds: self.rounds,
+                columns: n_columns,
                 wall_s: self.timer.elapsed_s(),
             },
             points: self.points,
@@ -273,38 +519,155 @@ impl SweepEngine {
     }
 }
 
-/// One scheduling round: chained (layer × S) tasks on the pool, returning
-/// the per-point records in `s_list` order plus the round's best
-/// completed container (smallest bytes, ties to the earlier schedule
-/// index — independent of completion order).
+/// Shared chained-dispatch scaffolding for the engine's task graphs
+/// (surface probes: chains = grid points, steps = layers; per-layer
+/// sweep: chains = layers, steps = candidates). Holds the no-deadlock
+/// discipline in ONE place: at most one in-flight task per chain, total
+/// in-flight capped below the pool's bounded queue capacity so the
+/// coordinator never blocks on submission, and jobs never submit jobs —
+/// `next` runs on the coordinator and decides each chain's
+/// continuation. Worker panics are caught, marked, and re-raised on the
+/// coordinator (the pool survives; the sweep fails loudly instead of
+/// hanging on a Done message that never comes).
+///
+/// `step(chain, idx, arg)` runs on a worker; `next(chain, idx, out)`
+/// runs on the coordinator and returns `Some(arg)` to dispatch step
+/// `idx + 1` of that chain, or `None` to finish the chain (the freed
+/// slot seeds the next unstarted chain).
+fn chain_dispatch<A, T, S, N>(
+    pool: &WorkerPool,
+    label: &str,
+    n_chains: usize,
+    first: A,
+    step: S,
+    mut next: N,
+) where
+    A: Copy + Send + 'static,
+    T: Send + 'static,
+    S: Fn(usize, usize, A) -> T + Clone + Send + 'static,
+    N: FnMut(usize, usize, T) -> Option<A>,
+{
+    if n_chains == 0 {
+        return;
+    }
+    // Err(()) marks a panicked task (see the doc comment).
+    let (tx, rx) = mpsc::channel::<(usize, usize, Result<T, ()>)>();
+    let submit = |c: usize, k: usize, arg: A| {
+        let tx = tx.clone();
+        let step = step.clone();
+        pool.execute(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                step(c, k, arg)
+            }))
+            .map_err(|_| ());
+            let _ = tx.send((c, k, out));
+        });
+    };
+    let inflight_cap = (pool.queue_capacity() / 2).max(1);
+    let mut seeded = 0usize;
+    let mut done = 0usize;
+    while seeded < n_chains && seeded < inflight_cap {
+        submit(seeded, 0, first);
+        seeded += 1;
+    }
+    while done < n_chains {
+        let (c, k, out) = rx.recv().expect("chain dispatch channel closed");
+        let out = out
+            .unwrap_or_else(|()| panic!("{label} task panicked (chain {c}, step {k})"));
+        match next(c, k, out) {
+            Some(arg) => submit(c, k + 1, arg),
+            None => {
+                done += 1;
+                if seeded < n_chains {
+                    submit(seeded, 0, first);
+                    seeded += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Indices of the completed points forming the Pareto frontier of
+/// (compressed_bytes, distortion): a point is kept iff no other
+/// completed point is at least as good on both axes and strictly better
+/// on one (exact duplicates are all kept). Sorted by
+/// (bytes, distortion, schedule index) — deterministic.
+fn pareto_frontier(points: &[SweepPoint]) -> Vec<usize> {
+    let completed: Vec<usize> = (0..points.len()).filter(|&i| !points[i].abandoned).collect();
+    let mut out: Vec<usize> = completed
+        .iter()
+        .copied()
+        .filter(|&i| {
+            let p = &points[i];
+            !completed.iter().any(|&j| {
+                if j == i {
+                    return false;
+                }
+                let q = &points[j];
+                q.compressed_bytes <= p.compressed_bytes
+                    && q.distortion <= p.distortion
+                    && (q.compressed_bytes < p.compressed_bytes || q.distortion < p.distortion)
+            })
+        })
+        .collect();
+    out.sort_by(|&a, &b| {
+        points[a]
+            .compressed_bytes
+            .cmp(&points[b].compressed_bytes)
+            .then(
+                points[a]
+                    .distortion
+                    .partial_cmp(&points[b].distortion)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.cmp(&b))
+    });
+    out
+}
+
+/// One scheduling round: chained (layer × point) tasks on the pool,
+/// returning the per-point records in `pts` order plus each λ-column's
+/// best completed container of the round (smallest bytes, ties to the
+/// earlier schedule index — independent of completion order).
 fn run_probes(
     ctx: &Arc<ProbeCtx>,
     pool: &WorkerPool,
-    s_list: &[u32],
-    budget: usize,
-) -> (Vec<SweepPoint>, Option<Best>) {
+    pts: &[GridPoint],
+    cols: &[usize],
+    budgets: &[usize],
+    sched_base: usize,
+    n_cols: usize,
+) -> (Vec<SweepPoint>, Vec<Option<Best>>) {
     let n_layers = ctx.model.weights.len();
-    let n_points = s_list.len();
+    let n_points = pts.len();
     let mut points: Vec<Option<SweepPoint>> = (0..n_points).map(|_| None).collect();
-    let mut best: Option<Best> = None;
-    let mut best_idx = usize::MAX;
+    let mut best: Vec<Option<Best>> = (0..n_cols).map(|_| None).collect();
 
     // Degenerate zero-layer model: every probe is an empty container.
     if n_layers == 0 {
-        for (p, &s) in s_list.iter().enumerate() {
+        for (p, pt) in pts.iter().enumerate() {
             let compressed =
                 CompressedModel { name: ctx.model.manifest.name.clone(), layers: vec![] };
-            let report = ModelReport::from_layers(&ctx.model, &compressed, vec![]);
+            let ser = compressed.serialize();
+            let report = ModelReport::from_layers_sized(&ctx.model, ser.len(), vec![]);
             points[p] = Some(SweepPoint {
-                s,
+                s: pt.s,
+                lambda_scale: pt.lambda_scale,
                 compressed_bytes: report.compressed_bytes,
                 density: report.density,
                 distortion: 0.0,
                 abandoned: false,
+                container_hash: fnv1a(&ser),
                 wall_s: 0.0,
             });
-            if best.is_none() {
-                best = Some(Best { s, bytes: report.compressed_bytes, model: compressed, report });
+            if best[cols[p]].is_none() {
+                best[cols[p]] = Some(Best {
+                    sched: sched_base + p,
+                    point: *pt,
+                    bytes: report.compressed_bytes,
+                    model: compressed,
+                    report,
+                });
             }
         }
         return (points.into_iter().map(|p| p.unwrap()).collect(), best);
@@ -325,127 +688,130 @@ fn run_probes(
         })
         .collect();
 
-    // Err(()) marks a panicked probe task: the pool catches worker
-    // panics (and survives), so without this marker the coordinator
-    // would wait on a Done message that never comes and hang forever.
-    type Done = (usize, usize, f64, Result<Option<(CompressedLayer, LayerReport)>, ()>);
-    let (tx, rx) = mpsc::channel::<Done>();
-    let submit = |p: usize, l: usize, base_bytes: usize| {
+    // worker side: one budgeted layer-compress per task (Arc'd captures
+    // keep the step closure's clone O(1) per dispatch)
+    let step = {
         let ctx = Arc::clone(ctx);
-        let tx = tx.clone();
-        let s = s_list[p];
-        pool.execute(move || {
+        let pts: Arc<Vec<GridPoint>> = Arc::new(pts.to_vec());
+        let budgets: Arc<Vec<usize>> = Arc::new(budgets.to_vec());
+        move |p: usize, l: usize, base_bytes: usize| {
             let t = Timer::new();
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                let spec = CompressionSpec { s, ..ctx.base };
-                pipeline::compress_tensor_budgeted(
-                    &ctx.model.manifest.layers[l].name,
-                    &ctx.model.weights[l].shape,
-                    &ctx.model.weights[l].data,
-                    &ctx.model.biases[l].data,
-                    &spec,
-                    &ctx.stats[l],
-                    base_bytes,
-                    budget,
-                )
-            }))
-            .map_err(|_| ());
-            let _ = tx.send((p, l, t.elapsed_s(), out));
-        });
+            let pt = pts[p];
+            let spec = CompressionSpec { s: pt.s, lambda_scale: pt.lambda_scale, ..ctx.base };
+            let out = pipeline::compress_tensor_budgeted(
+                &ctx.model.manifest.layers[l].name,
+                &ctx.model.weights[l].shape,
+                &ctx.model.weights[l].data,
+                &ctx.model.biases[l].data,
+                &spec,
+                &ctx.stats[l],
+                base_bytes,
+                budgets[p],
+            );
+            (t.elapsed_s(), out)
+        }
     };
-
-    // At most one in-flight task per point; in-flight points are capped
-    // at half the pool's queue capacity (= 2 × pool size), which keeps
-    // the bounded queue from ever blocking the coordinator and bounds
-    // the memory held by partially-built containers.
-    let inflight_cap = (pool.queue_capacity() / 2).max(1);
-    let mut seeded = 0usize;
-    let mut completed = 0usize;
-    while seeded < n_points && seeded < inflight_cap {
-        submit(seeded, 0, 0);
-        seeded += 1;
-    }
-    while completed < n_points {
-        let (p, l, wall, out) = rx.recv().expect("sweep probe channel closed");
-        // re-raise worker panics on the coordinator (like the scoped
-        // threads the engine replaced) instead of hanging the sweep
-        let out = out.unwrap_or_else(|()| {
-            panic!("sweep probe task panicked (S={}, layer {l})", s_list[p])
-        });
+    // coordinator side: chained per-point dispatch — layer ℓ+1 follows ℓ
+    // with the accumulated payload as its base, or the point finishes
+    // (complete or abandoned) and its record + column-best update happen
+    // here, in deterministic bookkeeping independent of completion order
+    chain_dispatch(pool, "sweep probe", n_points, 0usize, step, |p, l, (wall, out)| {
         st[p].wall += wall;
-        // None => finished (abandoned or complete); Some(next) continues
-        let finished: Option<bool> = match out {
+        let abandoned = match out {
             Some((cl, rep)) => {
                 st[p].bytes += cl.payload.len();
                 st[p].layers.push(cl);
                 st[p].reports.push(rep);
-                if l + 1 == n_layers {
-                    Some(false)
-                } else if st[p].bytes > budget {
-                    Some(true) // boundary abandon: already over budget
-                } else {
-                    submit(p, l + 1, st[p].bytes);
-                    None
-                }
-            }
-            None => Some(true), // in-layer abandon
-        };
-        if let Some(abandoned) = finished {
-            completed += 1;
-            let ps = &mut st[p];
-            let layers = std::mem::take(&mut ps.layers);
-            let reports = std::mem::take(&mut ps.reports);
-            if abandoned {
-                points[p] = Some(SweepPoint {
-                    s: s_list[p],
-                    compressed_bytes: ps.bytes,
-                    density: 0.0,
-                    distortion: 0.0,
-                    abandoned: true,
-                    wall_s: ps.wall,
-                });
-            } else {
-                let compressed =
-                    CompressedModel { name: ctx.model.manifest.name.clone(), layers };
-                let report = ModelReport::from_layers(&ctx.model, &compressed, reports);
-                points[p] = Some(SweepPoint {
-                    s: s_list[p],
-                    compressed_bytes: report.compressed_bytes,
-                    density: report.density,
-                    distortion: report.layers.iter().map(|r| r.distortion).sum(),
-                    abandoned: false,
-                    wall_s: ps.wall,
-                });
-                let better = match &best {
-                    None => true,
-                    Some(b) => {
-                        report.compressed_bytes < b.bytes
-                            || (report.compressed_bytes == b.bytes && p < best_idx)
+                if l + 1 < n_layers {
+                    if st[p].bytes <= budgets[p] {
+                        return Some(st[p].bytes); // chain continues
                     }
-                };
-                if better {
-                    best_idx = p;
-                    best = Some(Best {
-                        s: s_list[p],
-                        bytes: report.compressed_bytes,
-                        model: compressed,
-                        report,
-                    });
+                    true // boundary abandon: already over budget
+                } else {
+                    false // last layer done: completed (budget irrelevant)
                 }
             }
-            if seeded < n_points {
-                submit(seeded, 0, 0);
-                seeded += 1;
+            None => true, // in-layer abandon
+        };
+        let ps = &mut st[p];
+        let layers = std::mem::take(&mut ps.layers);
+        let reports = std::mem::take(&mut ps.reports);
+        if abandoned {
+            points[p] = Some(SweepPoint {
+                s: pts[p].s,
+                lambda_scale: pts[p].lambda_scale,
+                compressed_bytes: ps.bytes,
+                density: 0.0,
+                distortion: 0.0,
+                abandoned: true,
+                container_hash: 0,
+                wall_s: ps.wall,
+            });
+        } else {
+            let compressed =
+                CompressedModel { name: ctx.model.manifest.name.clone(), layers };
+            let ser = compressed.serialize();
+            let report = ModelReport::from_layers_sized(&ctx.model, ser.len(), reports);
+            points[p] = Some(SweepPoint {
+                s: pts[p].s,
+                lambda_scale: pts[p].lambda_scale,
+                compressed_bytes: report.compressed_bytes,
+                density: report.density,
+                distortion: report.layers.iter().map(|r| r.distortion).sum(),
+                abandoned: false,
+                container_hash: fnv1a(&ser),
+                wall_s: ps.wall,
+            });
+            let c = cols[p];
+            let sched = sched_base + p;
+            let better = match &best[c] {
+                None => true,
+                Some(b) => {
+                    report.compressed_bytes < b.bytes
+                        || (report.compressed_bytes == b.bytes && sched < b.sched)
+                }
+            };
+            if better {
+                best[c] = Some(Best {
+                    sched,
+                    point: pts[p],
+                    bytes: report.compressed_bytes,
+                    model: compressed,
+                    report,
+                });
             }
         }
-    }
+        None // chain finished
+    });
     (points.into_iter().map(|p| p.expect("probe point resolved")).collect(), best)
 }
 
-/// Run a flat sweep over an explicit S list (single round, no
-/// abandonment — every point completes with full stats). `workers`
-/// parallelizes probe points across the pool. Errors on an empty list
-/// instead of panicking.
+/// Run a flat sweep over an explicit (S, λ) grid (single round, no
+/// abandonment — every point completes with full stats, so the frontier
+/// covers the whole grid). `workers` parallelizes probe points across
+/// the pool. Errors on an empty list instead of panicking.
+pub fn sweep_grid(
+    model: &Model,
+    grid: &[GridPoint],
+    base: &CompressionSpec,
+    workers: usize,
+) -> Result<SweepResult> {
+    if grid.is_empty() {
+        bail!(
+            "sweep needs at least one candidate value \
+             (empty grid — was --sweep/--points or --lambdas empty?)"
+        );
+    }
+    for p in grid {
+        validate_lambda(p.lambda_scale)?;
+    }
+    let mut eng = SweepEngine::new(model, base, workers);
+    eng.run_round(grid, false);
+    eng.finish()
+}
+
+/// Run a flat S sweep at the base spec's λ (single round, no
+/// abandonment). Errors on an empty list instead of panicking.
 pub fn sweep_s(
     model: &Model,
     s_values: &[u32],
@@ -458,17 +824,19 @@ pub fn sweep_s(
              (empty grid — was --sweep/--points set to 0?)"
         );
     }
-    let mut eng = SweepEngine::new(model, base, workers);
-    eng.run_round(s_values, false);
-    eng.finish()
+    let grid: Vec<GridPoint> =
+        s_values.iter().map(|&s| GridPoint::new(s, base.lambda_scale)).collect();
+    sweep_grid(model, &grid, base, workers)
 }
 
-/// Coarse-to-fine sweep: probe `default_s_grid(opts.points)`, then
-/// refine around the argmin until every integer between its probed
-/// neighbours has been tried. Refinement rounds run with the
+/// Coarse-to-fine sweep over the (S × λ) surface: probe
+/// `default_s_grid(opts.points)` across every λ-column, then refine each
+/// column around its own argmin until every integer between its probed
+/// neighbours has been tried. Refinement rounds run with each column's
 /// early-abandon budget when `opts.abandon` is set; the first (coarse)
 /// round always completes fully so the frontier report covers the whole
-/// range. `opts.exhaustive` probes all 257 values in one round instead.
+/// range at every λ. `opts.exhaustive` probes all 257 S values per
+/// column instead.
 pub fn sweep_s_auto(
     model: &Model,
     opts: &SweepOptions,
@@ -477,25 +845,43 @@ pub fn sweep_s_auto(
     if opts.points == 0 {
         bail!("sweep --points must be >= 1");
     }
+    let lambdas = resolve_lambdas(&opts.lambdas, base)?;
+    let cross = |ss: &[u32]| -> Vec<GridPoint> {
+        lambdas
+            .iter()
+            .flat_map(|&l| ss.iter().map(move |&s| GridPoint::new(s, l)))
+            .collect()
+    };
     let mut eng = SweepEngine::new(model, base, opts.workers);
     if opts.exhaustive {
         let all: Vec<u32> = (0..=256).collect();
         if opts.abandon {
-            // seed a coarse incumbent first so the full 257-point round
-            // runs with a budget: most far-from-optimal probes then die
-            // within their first layers (still selection-neutral)
-            eng.run_round(&default_s_grid(opts.points), false);
-            eng.run_round(&all, true);
+            // seed a coarse incumbent per column first so the full
+            // 257-point rounds run with budgets: most far-from-optimal
+            // probes then die within their first layers (still
+            // selection-neutral per column)
+            eng.run_round(&cross(&default_s_grid(opts.points)), false);
+            eng.run_round(&cross(&all), true);
         } else {
-            eng.run_round(&all, false);
+            eng.run_round(&cross(&all), false);
         }
         return eng.finish();
     }
     // at least the two endpoints, or refinement has no bracket to close
     // in on (--points 1 would otherwise silently probe S=0 alone)
-    eng.run_round(&default_s_grid(opts.points.max(2)), false);
-    while let Some(best_s) = eng.best_s() {
-        let next = refine_grid(&eng.probed, best_s, opts.points);
+    eng.run_round(&cross(&default_s_grid(opts.points.max(2))), false);
+    loop {
+        let mut next: Vec<GridPoint> = Vec::new();
+        for &l in &lambdas {
+            if let Some(best_s) = eng.best_s_in(l) {
+                let probed_s = eng.probed_s_in(l);
+                next.extend(
+                    refine_grid(&probed_s, best_s, opts.points)
+                        .into_iter()
+                        .map(|s| GridPoint::new(s, l)),
+                );
+            }
+        }
         if next.is_empty() {
             break;
         }
@@ -519,63 +905,97 @@ fn refine_grid(probed: &BTreeSet<u32>, best_s: u32, per_round: usize) -> Vec<u32
         .collect()
 }
 
-/// Per-layer S selection (an extension over the paper, which picks one S
-/// per model): every layer independently keeps its smallest-payload S.
-/// Never worse than the global sweep on total payload bytes, since the
-/// global optimum is in each layer's candidate set. Per-layer stats are
-/// hoisted across the S candidates, and a probe is abandoned as soon as
+/// Per-layer grid-point selection (an extension over the paper, which
+/// picks one S per model): every layer independently keeps its
+/// smallest-payload (S, λ) candidate. Never worse than the global sweep
+/// on total payload bytes, since the global optimum is in each layer's
+/// candidate set.
+///
+/// Runs on the engine's (layer × point) task discipline: layers fan out
+/// across the worker pool, and each layer's candidates are *chained*
+/// (candidate k+1 is dispatched by the coordinator when k completes) so
+/// its abandon budget — the layer's own incumbent payload — evolves in
+/// exactly the serial candidate order. A probe is abandoned the moment
 /// its payload exceeds the layer's incumbent (selection-neutral: equal
-/// payloads never replace the incumbent either).
-pub fn sweep_s_per_layer(
+/// payloads never replace the incumbent either), and the result is
+/// byte-identical at every worker count. Per-layer stats are hoisted
+/// across all candidates of a layer.
+pub fn sweep_per_layer(
     model: &Model,
-    s_values: &[u32],
+    grid: &[GridPoint],
     base: &CompressionSpec,
-) -> Result<(CompressedModel, ModelReport, Vec<(String, u32)>)> {
-    if s_values.is_empty() {
+    workers: usize,
+) -> Result<(CompressedModel, ModelReport, Vec<(String, GridPoint)>)> {
+    if grid.is_empty() {
         bail!(
             "S sweep needs at least one candidate value \
              (empty grid — was --sweep/--points set to 0?)"
         );
     }
+    for p in grid {
+        validate_lambda(p.lambda_scale)?;
+    }
     let mut seen = BTreeSet::new();
-    let s_values: Vec<u32> = s_values.iter().copied().filter(|s| seen.insert(*s)).collect();
+    // re-normalize through GridPoint::new (pub fields — see run_round)
+    let pts: Vec<GridPoint> = grid
+        .iter()
+        .map(|p| GridPoint::new(p.s, p.lambda_scale))
+        .filter(|p| seen.insert(p.key()))
+        .collect();
     let n = model.weights.len();
+    let ctx = probe_ctx(model, base, workers);
+    let mut best: Vec<Option<(usize, CompressedLayer, LayerReport)>> =
+        (0..n).map(|_| None).collect();
+    if n > 0 {
+        let pool = WorkerPool::new(workers);
+        // worker side: one budgeted candidate-compress per task
+        let step = {
+            let ctx = Arc::clone(&ctx);
+            let pts: Arc<Vec<GridPoint>> = Arc::new(pts.clone());
+            move |l: usize, k: usize, budget: usize| {
+                let pt = pts[k];
+                let spec =
+                    CompressionSpec { s: pt.s, lambda_scale: pt.lambda_scale, ..ctx.base };
+                pipeline::compress_tensor_budgeted(
+                    &ctx.model.manifest.layers[l].name,
+                    &ctx.model.weights[l].shape,
+                    &ctx.model.weights[l].data,
+                    &ctx.model.biases[l].data,
+                    &spec,
+                    &ctx.stats[l],
+                    0,
+                    budget,
+                )
+            }
+        };
+        // coordinator side: candidate k+1 of a layer follows k with the
+        // layer's incumbent payload as its budget — exactly the serial
+        // candidate order, so selection is worker-count independent
+        chain_dispatch(&pool, "per-layer sweep", n, usize::MAX, step, |l, k, out| {
+            if let Some((cl, rep)) = out {
+                let better = best[l]
+                    .as_ref()
+                    .map(|(_, b, _)| cl.payload.len() < b.payload.len())
+                    .unwrap_or(true);
+                if better {
+                    best[l] = Some((k, cl, rep));
+                }
+            }
+            if k + 1 < pts.len() {
+                Some(best[l].as_ref().map(|(_, b, _)| b.payload.len()).unwrap_or(usize::MAX))
+            } else {
+                None
+            }
+        });
+    }
     let mut layers = Vec::with_capacity(n);
     let mut reports = Vec::with_capacity(n);
     let mut chosen = Vec::with_capacity(n);
-    for i in 0..n {
-        let li = &model.manifest.layers[i];
-        let stats =
-            LayerStats::compute(&model.weights[i].data, &model.sigmas[i].data, base.weighted);
-        let mut best: Option<(CompressedLayer, LayerReport)> = None;
-        for &s in &s_values {
-            let spec = CompressionSpec { s, ..*base };
-            let budget =
-                best.as_ref().map(|(b, _)| b.payload.len()).unwrap_or(usize::MAX);
-            let Some((cl, rep)) = pipeline::compress_tensor_budgeted(
-                &li.name,
-                &model.weights[i].shape,
-                &model.weights[i].data,
-                &model.biases[i].data,
-                &spec,
-                &stats,
-                0,
-                budget,
-            ) else {
-                continue; // abandoned: payload already exceeded this layer's best
-            };
-            let better = best
-                .as_ref()
-                .map(|(b, _)| cl.payload.len() < b.payload.len())
-                .unwrap_or(true);
-            if better {
-                best = Some((cl, rep));
-            }
-        }
-        // the first S candidate runs with an unbounded budget, so a best
-        // always exists by the time we get here
-        let (cl, rep) = best.expect("first S candidate is never abandoned");
-        chosen.push((cl.name.clone(), cl.s_param));
+    for slot in best {
+        // the first candidate of every layer runs with an unbounded
+        // budget, so a best always exists by the time we get here
+        let (k, cl, rep) = slot.expect("first grid point is never abandoned");
+        chosen.push((cl.name.clone(), pts[k]));
         layers.push(cl);
         reports.push(rep);
     }
@@ -584,12 +1004,44 @@ pub fn sweep_s_per_layer(
     Ok((compressed, report, chosen))
 }
 
+/// [`sweep_per_layer`] over an S-only grid at the base spec's λ — the
+/// `compress --per-layer` entry point.
+pub fn sweep_s_per_layer(
+    model: &Model,
+    s_values: &[u32],
+    base: &CompressionSpec,
+    workers: usize,
+) -> Result<(CompressedModel, ModelReport, Vec<(String, u32)>)> {
+    if s_values.is_empty() {
+        bail!(
+            "S sweep needs at least one candidate value \
+             (empty grid — was --sweep/--points set to 0?)"
+        );
+    }
+    let grid: Vec<GridPoint> =
+        s_values.iter().map(|&s| GridPoint::new(s, base.lambda_scale)).collect();
+    let (c, r, chosen) = sweep_per_layer(model, &grid, base, workers)?;
+    Ok((c, r, chosen.into_iter().map(|(name, p)| (name, p.s)).collect()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn point_fields(p: &SweepPoint) -> (u32, usize, bool, f64, f64) {
-        (p.s, p.compressed_bytes, p.abandoned, p.density, p.distortion)
+    fn point_fields(p: &SweepPoint) -> (u32, u32, usize, bool, f64, f64, u64) {
+        (
+            p.s,
+            p.lambda_scale.to_bits(),
+            p.compressed_bytes,
+            p.abandoned,
+            p.density,
+            p.distortion,
+            p.container_hash,
+        )
+    }
+
+    fn s_points(ss: &[u32], lambda: f32) -> Vec<GridPoint> {
+        ss.iter().map(|&s| GridPoint::new(s, lambda)).collect()
     }
 
     #[test]
@@ -598,13 +1050,64 @@ mod tests {
         let base = CompressionSpec::default();
         let s = [0u32, 64, 192, 256];
         let global = sweep_s(&model, &s, &base, 1).unwrap();
-        let (_, per_layer, chosen) = sweep_s_per_layer(&model, &s, &base).unwrap();
+        let (_, per_layer, chosen) = sweep_s_per_layer(&model, &s, &base, 1).unwrap();
         assert_eq!(chosen.len(), model.weights.len());
         let global_payload: usize =
             global.best.1.layers.iter().map(|l| l.payload_bytes).sum();
         let per_layer_payload: usize =
             per_layer.layers.iter().map(|l| l.payload_bytes).sum();
         assert!(per_layer_payload <= global_payload);
+    }
+
+    #[test]
+    fn per_layer_parallel_matches_serial_reference_byte_identical() {
+        // satellite: the per-layer sweep now runs on the engine's
+        // (layer × point) tasks; it must stay byte-identical to the
+        // serial unbudgeted per-layer payload argmin at every worker
+        // count (the `parallel_sweep_matches_serial_byte_identical`
+        // analogue for per-layer selection).
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let s = [0u32, 16, 64, 192, 256];
+        let mut ref_layers = Vec::new();
+        for i in 0..model.weights.len() {
+            let stats = LayerStats::compute(
+                &model.weights[i].data,
+                &model.sigmas[i].data,
+                base.weighted,
+            );
+            let mut layer_best: Option<CompressedLayer> = None;
+            for &sv in &s {
+                let spec = CompressionSpec { s: sv, ..base };
+                let (cl, _) = pipeline::compress_tensor_with_stats(
+                    &model.manifest.layers[i].name,
+                    &model.weights[i].shape,
+                    &model.weights[i].data,
+                    &model.biases[i].data,
+                    &spec,
+                    &stats,
+                    1,
+                );
+                let better = layer_best
+                    .as_ref()
+                    .map(|b| cl.payload.len() < b.payload.len())
+                    .unwrap_or(true);
+                if better {
+                    layer_best = Some(cl);
+                }
+            }
+            ref_layers.push(layer_best.unwrap());
+        }
+        let reference =
+            CompressedModel { name: model.manifest.name.clone(), layers: ref_layers };
+        for workers in [1usize, 2, 4, 8] {
+            let (c, _, chosen) = sweep_s_per_layer(&model, &s, &base, workers).unwrap();
+            assert_eq!(c.serialize(), reference.serialize(), "workers={workers}");
+            assert_eq!(chosen.len(), model.weights.len());
+            for ((_, cs), cl) in chosen.iter().zip(&c.layers) {
+                assert_eq!(*cs, cl.s_param);
+            }
+        }
     }
 
     #[test]
@@ -617,36 +1120,66 @@ mod tests {
     }
 
     #[test]
+    fn lambda_grid_shapes() {
+        assert!(default_lambda_grid(0).is_empty());
+        assert_eq!(default_lambda_grid(1), vec![0.05]);
+        assert_eq!(default_lambda_grid(2), vec![0.0, 0.05]);
+        // N ≥ 2 always includes the λ=0 anchor the legacy example swept,
+        // then log-spaces [0.01, 1.0]
+        let g = default_lambda_grid(5);
+        assert_eq!(g.len(), 5);
+        assert_eq!(g[0], 0.0);
+        assert!((g[1] - 0.01).abs() < 1e-6);
+        assert!((g[4] - 1.0).abs() < 1e-6);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
     fn empty_grid_is_an_error_not_a_panic() {
-        // regression: an empty S list used to hit assert!/unwrap panics
+        // regression: an empty candidate list used to hit assert!/unwrap
+        // panics; the λ grid is validated the same way
         let model = super::super::pipeline::tests::toy_model_pub();
         let base = CompressionSpec::default();
         let err = sweep_s(&model, &[], &base, 1).expect_err("empty grid must fail");
         assert!(err.to_string().contains("at least one candidate"), "{err}");
+        let err = sweep_grid(&model, &[], &base, 1).expect_err("empty grid must fail");
+        assert!(err.to_string().contains("at least one candidate"), "{err}");
         let err =
-            sweep_s_per_layer(&model, &[], &base).expect_err("empty grid must fail");
+            sweep_s_per_layer(&model, &[], &base, 1).expect_err("empty grid must fail");
         assert!(err.to_string().contains("at least one candidate"), "{err}");
         assert!(default_s_grid(0).is_empty()); // …and this is why sweep_s checks
         let opts = SweepOptions { points: 0, ..Default::default() };
         assert!(sweep_s_auto(&model, &opts, &base).is_err());
+        // non-finite / negative λ values are errors, not silent clamps
+        let opts = SweepOptions { lambdas: vec![f32::NAN], ..Default::default() };
+        assert!(sweep_s_auto(&model, &opts, &base).is_err());
+        let opts = SweepOptions { lambdas: vec![0.05, -0.1], ..Default::default() };
+        assert!(sweep_s_auto(&model, &opts, &base).is_err());
+        let bad = [GridPoint::new(64, -1.0)];
+        assert!(sweep_grid(&model, &bad, &base, 1).is_err());
+        assert!(sweep_per_layer(&model, &bad, &base, 1).is_err());
     }
 
     #[test]
     fn sweep_picks_smallest() {
         let model = super::super::pipeline::tests::toy_model_pub();
-        let res = sweep_s(
-            &model,
-            &[0, 32, 128, 256],
-            &CompressionSpec::default(),
-            1,
-        )
-        .unwrap();
+        let base = CompressionSpec::default();
+        let res = sweep_s(&model, &[0, 32, 128, 256], &base, 1).unwrap();
         let best_bytes = res.best.1.compressed_bytes;
         assert!(res.points.iter().all(|p| p.compressed_bytes >= best_bytes));
         assert!(res.points.iter().all(|p| !p.abandoned));
+        assert!(res.points.iter().all(|p| p.container_hash != 0));
+        assert!(res
+            .points
+            .iter()
+            .all(|p| p.lambda_scale.to_bits() == base.lambda_scale.to_bits()));
         assert_eq!(res.stats.probes_total, 4);
         assert_eq!(res.stats.probes_abandoned, 0);
         assert_eq!(res.stats.rounds, 1);
+        assert_eq!(res.stats.columns, 1);
+        assert_eq!(res.columns.len(), 1);
+        assert_eq!(res.columns[0].bytes, best_bytes);
+        assert_eq!(res.best_point.s, res.columns[0].s);
         // coarser grids (smaller S) must not produce *larger* payloads than
         // the finest probe — sanity of the monotone trend
         let s0 = res.points.iter().find(|p| p.s == 0).unwrap();
@@ -657,7 +1190,8 @@ mod tests {
     #[test]
     fn parallel_sweep_matches_serial_byte_identical() {
         // tentpole invariant: the parallel engine is bit-for-bit the
-        // serial sweep — same best container, same point list.
+        // serial sweep — same best container, same point list (including
+        // the per-point container fingerprints).
         let model = super::super::pipeline::tests::toy_model_pub();
         let base = CompressionSpec::default();
         let grid = [0u32, 16, 48, 96, 160, 224, 256];
@@ -673,7 +1207,225 @@ mod tests {
             for (a, b) in serial.points.iter().zip(&par.points) {
                 assert_eq!(point_fields(a), point_fields(b), "workers={workers}");
             }
+            assert_eq!(serial.frontier, par.frontier, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn lambda_column_matches_legacy_serial_rd_sweep() {
+        // satellite (pre-deletion gate for examples/rd_sweep.rs): the
+        // engine's λ-column at fixed S must be byte-identical to the
+        // serial `compress_model` loop the example ran — checked per
+        // grid point via size + FNV fingerprint, and on the winner via
+        // full byte equality.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let lambdas = [0.0f32, 0.05, 1.0];
+        let ss = [0u32, 64, 256];
+        let grid: Vec<GridPoint> = lambdas
+            .iter()
+            .flat_map(|&l| ss.iter().map(move |&s| GridPoint::new(s, l)))
+            .collect();
+        let res = sweep_grid(&model, &grid, &base, 4).unwrap();
+        assert_eq!(res.points.len(), grid.len());
+        assert_eq!(res.stats.columns, 3);
+        assert_eq!(res.columns.len(), 3);
+        for p in &res.points {
+            assert!(!p.abandoned);
+            let spec = CompressionSpec { s: p.s, lambda_scale: p.lambda_scale, ..base };
+            let (c, rep) = super::super::pipeline::compress_model(&model, &spec, 1);
+            let ser = c.serialize();
+            assert_eq!(p.compressed_bytes, ser.len(), "S={} λ={}", p.s, p.lambda_scale);
+            assert_eq!(
+                p.container_hash,
+                crate::util::fnv1a(&ser),
+                "S={} λ={}",
+                p.s,
+                p.lambda_scale
+            );
+            assert_eq!(
+                p.distortion,
+                rep.layers.iter().map(|l| l.distortion).sum::<f64>(),
+                "S={} λ={}",
+                p.s,
+                p.lambda_scale
+            );
+        }
+        // the overall winner is byte-identical to its serial recompress
+        let bp = res.best_point;
+        let spec = CompressionSpec { s: bp.s, lambda_scale: bp.lambda_scale, ..base };
+        let (c, _) = super::super::pipeline::compress_model(&model, &spec, 1);
+        assert_eq!(res.best.0.serialize(), c.serialize());
+        // each column's argmin is the min over that column's points
+        for col in &res.columns {
+            let col_min = res
+                .points
+                .iter()
+                .filter(|p| p.lambda_scale.to_bits() == col.lambda_scale.to_bits())
+                .map(|p| p.compressed_bytes)
+                .min()
+                .unwrap();
+            assert_eq!(col.bytes, col_min);
+            assert_eq!(col.probes, ss.len());
+            assert_eq!(col.abandoned, 0);
+        }
+    }
+
+    #[test]
+    fn bytes_near_monotone_along_lambda_at_fixed_s() {
+        // the smoke script's frontier sanity: at fixed S, a larger λ
+        // trades distortion for rate, so the container shrinks. The
+        // per-weight argmin minimizes *estimated* cost under adaptive
+        // contexts, which gives no strict pointwise guarantee on the
+        // final arithmetic-coded payload — so allow a small slack
+        // (0.5% + 2 bytes) instead of asserting exact monotonicity.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let lambdas = [0.0f32, 0.05, 0.5, 2.0];
+        for &s in &[32u32, 128] {
+            let grid: Vec<GridPoint> =
+                lambdas.iter().map(|&l| GridPoint::new(s, l)).collect();
+            let res = sweep_grid(&model, &grid, &base, 2).unwrap();
+            let bytes: Vec<usize> =
+                res.points.iter().map(|p| p.compressed_bytes).collect();
+            assert!(
+                bytes.windows(2).all(|w| w[1] <= w[0] + w[0] / 200 + 2),
+                "S={s}: {bytes:?}"
+            );
+            // ...and across the whole λ decade the shrink must be real
+            assert!(bytes.last().unwrap() < bytes.first().unwrap(), "S={s}: {bytes:?}");
+        }
+    }
+
+    #[test]
+    fn frontier_is_nondominated_and_covers_extremes() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let grid: Vec<GridPoint> = [0.0f32, 0.05, 0.5]
+            .iter()
+            .flat_map(|&l| {
+                [0u32, 32, 96, 160, 256].iter().map(move |&s| GridPoint::new(s, l))
+            })
+            .collect();
+        let res = sweep_grid(&model, &grid, &base, 2).unwrap();
+        let f = &res.frontier;
+        assert!(!f.is_empty());
+        // sorted by bytes; distortion non-increasing along the frontier
+        for w in f.windows(2) {
+            let (a, b) = (&res.points[w[0]], &res.points[w[1]]);
+            assert!(a.compressed_bytes <= b.compressed_bytes);
+            assert!(a.distortion >= b.distortion, "frontier not monotone");
+        }
+        // non-dominated against every completed point
+        for &i in f {
+            let p = &res.points[i];
+            assert!(!p.abandoned);
+            for q in res.points.iter().filter(|q| !q.abandoned) {
+                let dominates = q.compressed_bytes <= p.compressed_bytes
+                    && q.distortion <= p.distortion
+                    && (q.compressed_bytes < p.compressed_bytes
+                        || q.distortion < p.distortion);
+                assert!(
+                    !dominates,
+                    "frontier point (S={}, λ={}) is dominated",
+                    p.s, p.lambda_scale
+                );
+            }
+        }
+        // extreme points: the global min-bytes and min-distortion
+        // completed probes are always on the frontier
+        let min_bytes =
+            res.points.iter().map(|p| p.compressed_bytes).min().unwrap();
+        let min_dist = res
+            .points
+            .iter()
+            .map(|p| p.distortion)
+            .fold(f64::INFINITY, f64::min);
+        assert!(f.iter().any(|&i| res.points[i].compressed_bytes == min_bytes));
+        assert!(f.iter().any(|&i| res.points[i].distortion == min_dist));
+        // and the overall best container is the min-bytes frontier point
+        assert_eq!(res.best.1.compressed_bytes, min_bytes);
+    }
+
+    #[test]
+    fn two_d_sweep_deterministic_across_worker_counts() {
+        // the full 2-D driver (coarse round + per-column refinement with
+        // per-column budgets) is a pure function of the schedule
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let opts = |workers| SweepOptions {
+            points: 5,
+            workers,
+            exhaustive: false,
+            abandon: true,
+            lambdas: vec![0.01, 0.2],
+        };
+        let reference = sweep_s_auto(&model, &opts(1), &base).unwrap();
+        assert_eq!(reference.stats.columns, 2);
+        assert_eq!(reference.columns.len(), 2);
+        for workers in [2usize, 4, 8] {
+            let res = sweep_s_auto(&model, &opts(workers), &base).unwrap();
+            assert_eq!(
+                res.best.0.serialize(),
+                reference.best.0.serialize(),
+                "workers={workers}"
+            );
+            let a: Vec<_> = reference.points.iter().map(point_fields).collect();
+            let b: Vec<_> = res.points.iter().map(point_fields).collect();
+            assert_eq!(a, b, "workers={workers}");
+            assert_eq!(res.frontier, reference.frontier, "workers={workers}");
+            for (x, y) in reference.columns.iter().zip(&res.columns) {
+                assert_eq!(x.lambda_scale.to_bits(), y.lambda_scale.to_bits());
+                assert_eq!((x.s, x.bytes, x.probes, x.abandoned), (y.s, y.bytes, y.probes, y.abandoned));
+                assert_eq!(x.model.serialize(), y.model.serialize());
+            }
+        }
+        // each column refined to a probed local optimum *in its own
+        // column*: both integer neighbours of its argmin were visited
+        for c in &reference.columns {
+            let col_s: Vec<u32> = reference
+                .points
+                .iter()
+                .filter(|p| p.lambda_scale.to_bits() == c.lambda_scale.to_bits())
+                .map(|p| p.s)
+                .collect();
+            for nb in [c.s.saturating_sub(1), (c.s + 1).min(256)] {
+                if nb != c.s {
+                    assert!(
+                        col_s.contains(&nb),
+                        "λ={}: neighbour S={nb} of argmin S={} never probed",
+                        c.lambda_scale,
+                        c.s
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_lambdas_collapse_to_one_column() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let opts = SweepOptions {
+            points: 3,
+            workers: 2,
+            lambdas: vec![0.05, 0.05],
+            ..Default::default()
+        };
+        let res = sweep_s_auto(&model, &opts, &base).unwrap();
+        assert_eq!(res.stats.columns, 1);
+        assert_eq!(res.columns.len(), 1);
+        // -0.0 and 0.0 have different bit patterns but are ONE column
+        // (normalized in GridPoint::new / resolve_lambdas)
+        let opts = SweepOptions {
+            points: 3,
+            workers: 2,
+            lambdas: vec![0.0, -0.0],
+            ..Default::default()
+        };
+        let res = sweep_s_auto(&model, &opts, &base).unwrap();
+        assert_eq!(res.stats.columns, 1);
+        assert_eq!(GridPoint::new(64, -0.0).lambda_scale.to_bits(), 0.0f32.to_bits());
     }
 
     #[test]
@@ -685,7 +1437,12 @@ mod tests {
         let base = CompressionSpec::default();
         let reference = sweep_s_auto(
             &model,
-            &SweepOptions { points: 5, workers: 1, exhaustive: false, abandon: false },
+            &SweepOptions {
+                points: 5,
+                workers: 1,
+                abandon: false,
+                ..Default::default()
+            },
             &base,
         )
         .unwrap();
@@ -693,7 +1450,7 @@ mod tests {
         for workers in [1usize, 2, 4, 8] {
             let res = sweep_s_auto(
                 &model,
-                &SweepOptions { points: 5, workers, exhaustive: false, abandon: true },
+                &SweepOptions { points: 5, workers, abandon: true, ..Default::default() },
                 &base,
             )
             .unwrap();
@@ -730,14 +1487,14 @@ mod tests {
     fn early_abandon_kills_oversized_probes_and_is_selection_neutral() {
         let model = super::super::pipeline::tests::toy_model_pub();
         let base = CompressionSpec::default();
+        let lam = base.lambda_scale;
         // reference: the same schedule, fully completed
-        let full =
-            sweep_s(&model, &[0, 8, 16, 224, 240, 256], &base, 1).unwrap();
+        let full = sweep_s(&model, &[0, 8, 16, 224, 240, 256], &base, 1).unwrap();
         let mut eng = SweepEngine::new(&model, &base, 4);
-        eng.run_round(&[0, 8, 16], false);
+        eng.run_round(&s_points(&[0, 8, 16], lam), false);
         // far-from-optimal probes in a budgeted round: S≈256 payloads are
         // well above the S≈0 incumbent, so they must be cut short
-        eng.run_round(&[224, 240, 256], true);
+        eng.run_round(&s_points(&[224, 240, 256], lam), true);
         let res = eng.finish().unwrap();
         assert_eq!(res.best.0.serialize(), full.best.0.serialize());
         assert!(
@@ -746,11 +1503,16 @@ mod tests {
             res.points
         );
         assert_eq!(res.stats.rounds, 2);
+        assert_eq!(res.columns[0].abandoned, res.stats.probes_abandoned);
         // abandoned partials are lower bounds that already exceed the
         // payload budget story: they must never be the minimum
         let best_bytes = res.best.1.compressed_bytes;
         for p in res.points.iter().filter(|p| !p.abandoned) {
             assert!(p.compressed_bytes >= best_bytes);
+        }
+        // abandoned probes never enter the frontier
+        for &i in &res.frontier {
+            assert!(!res.points[i].abandoned);
         }
     }
 
@@ -761,7 +1523,7 @@ mod tests {
         let coarse = sweep_s(&model, &default_s_grid(5), &base, 1).unwrap();
         let refined = sweep_s_auto(
             &model,
-            &SweepOptions { points: 5, workers: 2, exhaustive: false, abandon: true },
+            &SweepOptions { points: 5, workers: 2, abandon: true, ..Default::default() },
             &base,
         )
         .unwrap();
@@ -781,7 +1543,13 @@ mod tests {
         let base = CompressionSpec::default();
         let res = sweep_s_auto(
             &model,
-            &SweepOptions { points: 9, workers: 8, exhaustive: true, abandon: false },
+            &SweepOptions {
+                points: 9,
+                workers: 8,
+                exhaustive: true,
+                abandon: false,
+                ..Default::default()
+            },
             &base,
         )
         .unwrap();
@@ -791,7 +1559,13 @@ mod tests {
         // via a seeded coarse round + one budgeted full round
         let ex_ab = sweep_s_auto(
             &model,
-            &SweepOptions { points: 9, workers: 4, exhaustive: true, abandon: true },
+            &SweepOptions {
+                points: 9,
+                workers: 4,
+                exhaustive: true,
+                abandon: true,
+                ..Default::default()
+            },
             &base,
         )
         .unwrap();
@@ -802,17 +1576,21 @@ mod tests {
         assert_eq!(ex_ab.stats.rounds, 2);
         let refined = sweep_s_auto(
             &model,
-            &SweepOptions { points: 9, workers: 8, exhaustive: false, abandon: true },
+            &SweepOptions {
+                points: 9,
+                workers: 8,
+                exhaustive: false,
+                abandon: true,
+                ..Default::default()
+            },
             &base,
         )
         .unwrap();
         // refinement can at best match the exhaustive protocol…
-        assert!(
-            refined.best.1.compressed_bytes >= res.best.1.compressed_bytes
-        );
+        assert!(refined.best.1.compressed_bytes >= res.best.1.compressed_bytes);
         // …and must converge to a probed local optimum: both integer
         // neighbours of its argmin were visited
-        let best_s = refined.best.0.layers[0].s_param;
+        let best_s = refined.best_point.s;
         for nb in [best_s.saturating_sub(1), (best_s + 1).min(256)] {
             if nb != best_s {
                 assert!(
@@ -855,7 +1633,7 @@ mod tests {
         let model = super::super::pipeline::tests::toy_model_pub();
         let res = sweep_s_auto(
             &model,
-            &SweepOptions { points: 1, workers: 2, exhaustive: false, abandon: true },
+            &SweepOptions { points: 1, workers: 2, abandon: true, ..Default::default() },
             &CompressionSpec::default(),
         )
         .unwrap();

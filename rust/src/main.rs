@@ -15,7 +15,7 @@ use deepcabac::runtime::Runtime;
 use deepcabac::synth::Arch;
 use deepcabac::tensor::npy;
 use deepcabac::util::json::{self, Json};
-use deepcabac::util::Timer;
+use deepcabac::util::{fnv1a, Timer};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -136,8 +136,9 @@ fn cmd_compress(args: &Args) -> Result<()> {
         let points = args.get_count("sweep", 17).map_err(|e| anyhow!(e))?;
         let grid = deepcabac::coordinator::sweep::default_s_grid(points);
         if args.has("per-layer") {
-            let (c, r, chosen) =
-                deepcabac::coordinator::sweep::sweep_s_per_layer(&model, &grid, &spec)?;
+            let (c, r, chosen) = deepcabac::coordinator::sweep::sweep_s_per_layer(
+                &model, &grid, &spec, workers,
+            )?;
             for (l, s) in &chosen {
                 eprintln!("  {l}: S = {s}");
             }
@@ -282,20 +283,70 @@ fn describe_bins(level: i32, cfg: &CodecConfig) -> String {
     s
 }
 
-/// The S-sweep subcommand: drive the parallel incremental engine
-/// (coarse-to-fine refinement with early abandonment, or `--sweep-exhaustive`
-/// for all 257 points) and emit the rate–distortion frontier as
-/// `BENCH_sweep.json` (+ optional CSV / best-container output).
+/// The (S × λ) sweep subcommand: drive the parallel incremental engine
+/// over the 2-D RD surface (coarse-to-fine refinement per λ-column with
+/// early abandonment, or `--sweep-exhaustive` for all 257 S per column)
+/// and emit the Pareto frontier + per-column argmins as
+/// `BENCH_sweep.json` (+ optional CSV / container output).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let points = args.get_count("points", 17).map_err(|e| anyhow!(e))?;
     let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+    let spec = base_spec(args)?;
+    let lambdas_given = args.get("lambdas").is_some() || args.has("lambdas");
+    let lambda_sweep_given = args.get("lambda-sweep").is_some() || args.has("lambda-sweep");
+    if lambdas_given && lambda_sweep_given {
+        bail!("--lambdas and --lambda-sweep are mutually exclusive");
+    }
+    let lambdas: Vec<f32> =
+        if let Some(l) = args.get_f32s("lambdas").map_err(|e| anyhow!(e))? {
+            l
+        } else if args.has("lambdas") {
+            bail!("--lambdas needs a comma-separated λ list (e.g. --lambdas 0.01,0.05,0.2)");
+        } else if args.get("lambda-sweep").is_some() {
+            let n = args.get_count("lambda-sweep", 5).map_err(|e| anyhow!(e))?;
+            deepcabac::coordinator::sweep::default_lambda_grid(n)
+        } else if args.has("lambda-sweep") {
+            bail!("--lambda-sweep needs a column count (e.g. --lambda-sweep 5)");
+        } else {
+            vec![spec.lambda_scale]
+        };
     let opts = SweepOptions {
         points,
         workers,
         exhaustive: args.has("sweep-exhaustive"),
         abandon: !args.has("no-abandon"),
+        lambdas,
     };
-    let spec = base_spec(args)?;
+    // validate frontier output selection BEFORE the (potentially long)
+    // sweep runs: a typo'd λ or a missing --out must not cost a full
+    // surface exploration
+    let select_lambda: Option<f32> = match args.get("select-lambda") {
+        Some(ls) => {
+            let lv: f32 =
+                ls.parse().map_err(|_| anyhow!("--select-lambda expects a float"))?;
+            let lv = if lv == 0.0 { 0.0 } else { lv }; // -0.0 → the +0.0 column
+            anyhow::ensure!(
+                args.get("out").is_some(),
+                "--select-lambda requires --out FILE (it selects which frontier argmin to write)"
+            );
+            anyhow::ensure!(
+                opts.lambdas.iter().any(|l| l.to_bits() == lv.to_bits()),
+                "--select-lambda {lv} is not one of the swept λ columns {:?}",
+                opts.lambdas
+            );
+            Some(lv)
+        }
+        None => None,
+    };
+    // --eval preconditions are checked BEFORE the sweep for the same
+    // reason as --select-lambda: a missing --model must not cost a full
+    // surface exploration
+    if args.has("eval") {
+        anyhow::ensure!(
+            args.get("model").is_some(),
+            "--eval needs --model NAME (synthetic --arch models have no eval set)"
+        );
+    }
     let (name, model) = if let Some(m) = args.get("model") {
         (m.to_string(), app::load_model(m)?)
     } else if let Some(a) = args.get("arch") {
@@ -311,44 +362,84 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
 
     let res = sweep_s_auto(&model, &opts, &spec)?;
-    let best_s = res.best.0.layers.first().map(|l| l.s_param).unwrap_or(0);
+    let best = res.best_point;
     println!(
-        "{name}: best S = {best_s} -> {} ({:.2}% of original, x{:.1}); \
-         {} probes in {} rounds, {} abandoned, {:.2}s ({} workers)",
+        "{name}: best (S={}, λ={}) -> {} ({:.2}% of original, x{:.1}); \
+         {} probes / {} λ-columns in {} rounds, {} abandoned, \
+         frontier {} points, {:.2}s ({} workers)",
+        best.s,
+        best.lambda_scale,
         human_bytes(res.best.1.compressed_bytes),
         res.best.1.ratio_percent(),
         res.best.1.factor(),
         res.stats.probes_total,
+        res.stats.columns,
         res.stats.rounds,
         res.stats.probes_abandoned,
+        res.frontier.len(),
         res.stats.wall_s,
         workers,
     );
+    for c in &res.columns {
+        println!(
+            "  λ={:<8} best S={:>3} -> {} ({} probes, {} abandoned)",
+            c.lambda_scale,
+            c.s,
+            human_bytes(c.bytes),
+            c.probes,
+            c.abandoned,
+        );
+    }
 
-    // serial reference (same schedule, one worker): wall-clock baseline
-    // for the fan-out, and a live check that the parallel engine selects
-    // a byte-identical container
+    // serial single-point reference: recompress every completed grid
+    // point through the plain serial pipeline and verify byte-identity
+    // against the engine's per-point fingerprints (the acceptance
+    // contract: every cell of the surface is exactly what a one-shot
+    // `compress` at that (S, λ) would have produced)
     let wall_serial = if args.has("compare-serial") {
         let t = Timer::new();
-        let serial = sweep_s_auto(&model, &SweepOptions { workers: 1, ..opts }, &spec)?;
-        let wall = t.elapsed_s();
+        let mut checked = 0usize;
+        for p in res.points.iter().filter(|p| !p.abandoned) {
+            let pspec =
+                CompressionSpec { s: p.s, lambda_scale: p.lambda_scale, ..spec };
+            let (c, _) = compress_model(&model, &pspec, 1);
+            let ser = c.serialize();
+            anyhow::ensure!(
+                ser.len() == p.compressed_bytes && fnv1a(&ser) == p.container_hash,
+                "grid point (S={}, λ={}) diverges from the serial \
+                 single-point pipeline (engine determinism violated)",
+                p.s,
+                p.lambda_scale
+            );
+            checked += 1;
+        }
+        let best_spec =
+            CompressionSpec { s: best.s, lambda_scale: best.lambda_scale, ..spec };
+        let (c, _) = compress_model(&model, &best_spec, 1);
         anyhow::ensure!(
-            serial.best.0.serialize() == res.best.0.serialize(),
-            "parallel sweep selected a different container than the \
-             serial sweep (worker-count determinism violated)"
+            c.serialize() == res.best.0.serialize(),
+            "best container diverges from its serial recompress"
         );
+        let wall = t.elapsed_s();
         println!(
-            "serial reference: {:.2}s (parallel speedup x{:.2})",
-            wall,
-            wall / res.stats.wall_s.max(1e-9),
+            "serial reference: {checked} completed grid points byte-identical \
+             ({wall:.2}s serial vs {:.2}s engine)",
+            res.stats.wall_s,
         );
         Some(wall)
     } else {
         None
     };
 
+    // write every artifact BEFORE --eval runs: a PJRT failure (the
+    // vendored xla stub errors at runtime by design) must not discard a
+    // completed surface exploration
     let json_path = args.get_or("json", "BENCH_sweep.json");
-    std::fs::write(json_path, sweep_to_json(&name, &opts, &res, wall_serial).to_string_pretty())?;
+    let no_metrics: Vec<Option<f64>> = vec![None; res.columns.len()];
+    std::fs::write(
+        json_path,
+        sweep_to_json(&name, &opts, &res, wall_serial, &no_metrics).to_string_pretty(),
+    )?;
     println!("wrote {json_path}");
 
     if let Some(csv_path) = args.get("csv") {
@@ -358,6 +449,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|p| {
                 vec![
                     p.s.to_string(),
+                    format!("{}", p.lambda_scale),
                     p.compressed_bytes.to_string(),
                     format!("{:.6}", p.density),
                     format!("{:.6e}", p.distortion),
@@ -367,7 +459,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             })
             .collect();
         let csv = deepcabac::report::to_csv(
-            &["S", "bytes", "density", "distortion", "abandoned", "wall_ms"],
+            &["S", "lambda_scale", "bytes", "density", "distortion", "abandoned", "wall_ms"],
             &rows,
         );
         std::fs::write(csv_path, &csv)?;
@@ -375,8 +467,50 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
 
     if let Some(out) = args.get("out") {
-        std::fs::write(out, res.best.0.serialize())?;
+        // frontier output selection: default = the overall smallest
+        // container; --select-lambda X = λ-column X's argmin instead
+        // (validated against the λ grid before the sweep ran)
+        let container = if let Some(lv) = select_lambda {
+            let col = res
+                .columns
+                .iter()
+                .find(|c| c.lambda_scale.to_bits() == lv.to_bits())
+                .ok_or_else(|| {
+                    anyhow!("λ column {lv} vanished from the sweep result (engine bug)")
+                })?;
+            println!(
+                "selected λ={} column argmin (S={}, {})",
+                col.lambda_scale,
+                col.s,
+                human_bytes(col.bytes),
+            );
+            &col.model
+        } else {
+            &res.best.0
+        };
+        std::fs::write(out, container.serialize())?;
         println!("wrote {out}");
+    }
+
+    // --eval restores the accuracy dimension the deleted serial
+    // examples/rd_sweep.rs used to print: decompress each λ-column's
+    // argmin and re-evaluate it through PJRT, then rewrite the JSON with
+    // the per-column metric. Runs LAST so an eval failure leaves every
+    // sweep artifact already on disk.
+    if args.has("eval") {
+        let rt = Runtime::cpu()?;
+        let mut col_metrics = Vec::with_capacity(res.columns.len());
+        for c in &res.columns {
+            let m = app::evaluate_compressed(&rt, &model, &c.model)?.metric;
+            println!("  λ={:<8} metric after decompress: {m:.4}", c.lambda_scale);
+            col_metrics.push(Some(m));
+        }
+        std::fs::write(
+            json_path,
+            sweep_to_json(&name, &opts, &res, wall_serial, &col_metrics)
+                .to_string_pretty(),
+        )?;
+        println!("rewrote {json_path} with per-column metrics");
     }
     Ok(())
 }
@@ -386,20 +520,53 @@ fn sweep_to_json(
     opts: &SweepOptions,
     res: &SweepResult,
     wall_serial: Option<f64>,
+    col_metrics: &[Option<f64>],
 ) -> Json {
-    let best_s = res.best.0.layers.first().map(|l| l.s_param).unwrap_or(0);
+    let best = res.best_point;
     let points: Vec<Json> = res
         .points
         .iter()
         .map(|p| {
             json::obj(vec![
                 ("s", json::num(p.s as f64)),
+                ("lambda_scale", json::num(p.lambda_scale as f64)),
                 ("bytes", json::num(p.compressed_bytes as f64)),
                 ("density", json::num(p.density)),
                 ("distortion", json::num(p.distortion)),
                 ("abandoned", Json::Bool(p.abandoned)),
                 ("wall_ms", json::num(p.wall_s * 1e3)),
             ])
+        })
+        .collect();
+    let frontier: Vec<Json> = res
+        .frontier
+        .iter()
+        .map(|&i| {
+            let p = &res.points[i];
+            json::obj(vec![
+                ("s", json::num(p.s as f64)),
+                ("lambda_scale", json::num(p.lambda_scale as f64)),
+                ("bytes", json::num(p.compressed_bytes as f64)),
+                ("distortion", json::num(p.distortion)),
+            ])
+        })
+        .collect();
+    let columns: Vec<Json> = res
+        .columns
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let mut fields = vec![
+                ("lambda_scale", json::num(c.lambda_scale as f64)),
+                ("best_s", json::num(c.s as f64)),
+                ("best_bytes", json::num(c.bytes as f64)),
+                ("probes", json::num(c.probes as f64)),
+                ("abandoned", json::num(c.abandoned as f64)),
+            ];
+            if let Some(m) = col_metrics.get(i).copied().flatten() {
+                fields.push(("metric", json::num(m)));
+            }
+            json::obj(fields)
         })
         .collect();
     let mut fields = vec![
@@ -409,14 +576,19 @@ fn sweep_to_json(
         ("points_per_round", json::num(opts.points as f64)),
         ("exhaustive", Json::Bool(opts.exhaustive)),
         ("abandon", Json::Bool(opts.abandon)),
+        ("lambdas", json::arr(res.columns.iter().map(|c| json::num(c.lambda_scale as f64)).collect())),
+        ("lambda_columns", json::num(res.stats.columns as f64)),
         ("rounds", json::num(res.stats.rounds as f64)),
         ("probes_total", json::num(res.stats.probes_total as f64)),
         ("probes_abandoned", json::num(res.stats.probes_abandoned as f64)),
-        ("best_s", json::num(best_s as f64)),
+        ("best_s", json::num(best.s as f64)),
+        ("best_lambda", json::num(best.lambda_scale as f64)),
         ("best_bytes", json::num(res.best.1.compressed_bytes as f64)),
         ("raw_bytes", json::num(res.best.1.raw_bytes as f64)),
         ("wall_s", json::num(res.stats.wall_s)),
         ("points", json::arr(points)),
+        ("frontier", json::arr(frontier)),
+        ("columns", json::arr(columns)),
     ];
     if let Some(w) = wall_serial {
         fields.push(("wall_s_serial", json::num(w)));

@@ -37,7 +37,10 @@ use crate::codec::{CodecConfig, LevelEncoder, RateEstimator};
 pub struct RdParams {
     /// Lagrangian λ (distortion units per bit). Negative values are
     /// clamped to 0 (a negative λ would reward spending bits and break
-    /// the pruning invariants).
+    /// the pruning invariants). The pipeline derives it per (S, λ) grid
+    /// point as `lambda_scale · Δ² · mean(η)` (`LayerStats::lambda`), so
+    /// the sweep engine's λ axis threads through here — including into
+    /// the budgeted encode used by early-abandoned probes.
     pub lambda: f32,
 }
 

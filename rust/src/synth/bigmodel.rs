@@ -190,7 +190,10 @@ impl SynthModel {
     /// Wrap the synthetic tensors into a [`crate::model::Model`]
     /// (synthetic manifest, empty biases — the paper excludes biases
     /// from DeepCABAC anyway) so the sweep engine and the whole-model
-    /// pipeline APIs can drive synthetic architectures directly.
+    /// pipeline APIs can drive synthetic architectures directly. This
+    /// is the *only* compression route for synthetic rows: the `sweep`
+    /// CLI's `--arch` mode and `app::table1_large_row` both go through
+    /// here onto the (S × λ) engine instead of ad-hoc per-layer loops.
     pub fn to_model(&self) -> crate::model::Model {
         use crate::model::manifest::{LayerInfo, LayerKind, ModelManifest};
         use crate::tensor::Tensor;

@@ -11,3 +11,27 @@ pub mod timer;
 
 pub use rng::SplitMix64;
 pub use timer::Timer;
+
+/// FNV-1a 64-bit content hash — a cheap fingerprint for byte-identity
+/// checks (e.g. every (S, λ) sweep grid point vs the serial single-point
+/// pipeline, without retaining one container per probe). Not
+/// cryptographic.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_known_vectors() {
+        // reference values from the FNV-1a 64-bit specification
+        assert_eq!(super::fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(super::fnv1a(b"ab"), super::fnv1a(b"ba"));
+    }
+}
