@@ -1,57 +1,118 @@
 #!/usr/bin/env bash
 # (S × λ) sweep engine smoke test, run by CI from the rust/ directory:
-#   1. 2-D coarse-to-fine sweep (5 S points per round × 3 λ-columns) on a
-#      synthetic model — parallel with per-column early abandonment — with
-#      --compare-serial (the binary recompresses every completed grid
-#      point serially and asserts byte-identity against the engine's
-#      per-point fingerprints)
-#   2. assert BENCH_sweep.json carries a well-formed Pareto frontier
+#   1. warm, frontier-preserving 2-D sweep (5 S points per round × 3
+#      λ-columns) on a synthetic model with --compare-serial (the binary
+#      recompresses every completed grid point serially and asserts
+#      byte-identity against the engine's per-point fingerprints)
+#   2. cold --no-abandon reference run: the Pareto frontier, every
+#      per-column argmin, and the winning container must be IDENTICAL —
+#      the warm-start + dominance-abandonment acceptance check
+#   3. --abandon-argmin run: the aggressive byte-budget mode still
+#      abandons probes (>0) and still lands on the same argmins
+#   4. assert BENCH_sweep.json carries a well-formed Pareto frontier
 #      (non-dominated, covers the min-bytes and min-distortion completed
-#      points), per-column argmins, probes_abandoned > 0, and
-#      near-monotone (0.5% slack) container size along λ at fixed S
-#   3. roundtrip the frontier-argmin container through `decompress`
-#   4. frontier output selection: --select-lambda writes a λ-column's
-#      argmin (and rejects λ values outside the grid / empty λ grids)
+#      points), per-column argmins, seed hit-rate + abandonment-reason
+#      stats, and near-monotone (0.5% slack) container size along λ at
+#      fixed S
+#   5. roundtrip the frontier-argmin container through `decompress`
+#   6. frontier output selection: --select-lambda writes a λ-column's
+#      argmin (and rejects λ values outside the grid / empty λ grids /
+#      contradictory switch pairs)
+#   7. emit BENCH_sweep.md (markdown fragment for EXPERIMENTS.md §Sweep)
 set -euo pipefail
 
 BIN=${BIN:-target/release/deepcabac}
 WORK=$(mktemp -d)
 trap 'rm -rf "$WORK"' EXIT
 
-echo "== 2-D (S x lambda) sweep (+ per-point serial byte-identity) =="
-"$BIN" sweep --arch mobilenet --scale 8 --points 5 --workers 4 \
-  --lambdas 0.01,0.05,0.2 \
+SWEEP_ARGS=(--arch mobilenet --scale 8 --points 5 --workers 4 --lambdas 0.01,0.05,0.2)
+
+echo "== warm frontier-preserving sweep (+ per-point serial byte-identity) =="
+"$BIN" sweep "${SWEEP_ARGS[@]}" \
   --compare-serial --out "$WORK/best.dcbc" --json BENCH_sweep.json
 cat BENCH_sweep.json
 
-echo "== BENCH_sweep.json well-formed =="
-python3 - <<'EOF'
-import json
+echo "== cold --no-abandon reference (same surface) =="
+"$BIN" sweep "${SWEEP_ARGS[@]}" \
+  --no-abandon --cold --out "$WORK/cold.dcbc" --json "$WORK/noab.json"
 
+echo "== argmin-mode (byte-budget-only) run =="
+"$BIN" sweep "${SWEEP_ARGS[@]}" \
+  --abandon-argmin --json "$WORK/argmin.json"
+
+echo "== warm/cold winning containers byte-identical =="
+cmp "$WORK/best.dcbc" "$WORK/cold.dcbc"
+echo "identical"
+
+echo "== BENCH_sweep.json well-formed + frontier equality across modes =="
+python3 - "$WORK" <<'EOF'
+import json, sys
+
+work = sys.argv[1]
 b = json.load(open("BENCH_sweep.json"))
+noab = json.load(open(f"{work}/noab.json"))
+argmin = json.load(open(f"{work}/argmin.json"))
+
 assert b["bench"] == "sweep", b
 for key in ("model", "workers", "points_per_round", "rounds", "probes_total",
-            "probes_abandoned", "lambdas", "lambda_columns", "best_s",
+            "probes_abandoned", "abandoned_mid_layer", "abandoned_boundary",
+            "abandon_mode", "warm_start", "seeded_weights", "seed_hits",
+            "seed_hit_rate", "lambdas", "lambda_columns", "best_s",
             "best_lambda", "best_bytes", "wall_s", "wall_s_serial", "points",
             "frontier", "columns"):
     assert key in b, f"missing {key}"
 assert b["workers"] == 4 and b["points_per_round"] == 5
+assert b["abandon_mode"] == "frontier" and b["warm_start"] is True
+assert noab["abandon_mode"] == "off" and noab["warm_start"] is False
+assert argmin["abandon_mode"] == "argmin"
 assert b["lambda_columns"] == 3 and len(b["lambdas"]) == 3
 assert b["probes_total"] == len(b["points"]) > 15, "refinement never ran"
 assert b["rounds"] > 1, "refinement never ran"
-assert b["probes_abandoned"] > 0, "refinement abandoned no probes"
+
+# warm start really seeded the refinement rounds, and the hit rate on
+# neighbouring-Δ seeds must be high; the cold reference never seeds
+assert b["seeded_weights"] > 0, "warm run never seeded a probe"
+assert 0.5 < b["seed_hit_rate"] <= 1.0, b["seed_hit_rate"]
+assert b["seed_hits"] <= b["seeded_weights"]
+assert noab["seeded_weights"] == 0 and noab["seed_hit_rate"] == 0.0
+
+# abandonment bookkeeping: reasons partition the abandoned set
 assert sum(p["abandoned"] for p in b["points"]) == b["probes_abandoned"]
+assert b["abandoned_mid_layer"] + b["abandoned_boundary"] == b["probes_abandoned"]
+for p in b["points"]:
+    assert p["abandoned"] == (p["abandon_reason"] is not None), p
+    if p["abandon_reason"] is not None:
+        assert p["abandon_reason"] in ("mid-layer", "layer-boundary"), p
+assert noab["probes_abandoned"] == 0
+
+# the aggressive argmin mode must still abandon probes on this surface
+assert argmin["probes_abandoned"] > 0, "argmin mode abandoned nothing"
+
 completed = [p for p in b["points"] if not p["abandoned"]]
 assert completed and min(p["bytes"] for p in completed) == b["best_bytes"]
 assert 0 <= b["best_s"] <= 256
 
-# per-column argmins: each column's best is the min over its completed points
+# per-column argmins: each column's best is the min over its completed
+# points, and all three modes agree on every argmin + the winner
 assert len(b["columns"]) == 3
 for col in b["columns"]:
     col_completed = [p["bytes"] for p in completed
                      if p["lambda_scale"] == col["lambda_scale"]]
     assert col_completed and min(col_completed) == col["best_bytes"], col
     assert col["probes"] >= 5, col
+for other in (noab, argmin):
+    assert other["best_bytes"] == b["best_bytes"]
+    assert other["best_s"] == b["best_s"] and other["best_lambda"] == b["best_lambda"]
+    for ca, cb in zip(b["columns"], other["columns"]):
+        assert (ca["lambda_scale"], ca["best_s"], ca["best_bytes"]) == \
+               (cb["lambda_scale"], cb["best_s"], cb["best_bytes"]), (ca, cb)
+
+# ACCEPTANCE: the frontier under dominance-based abandonment equals the
+# --no-abandon frontier exactly (same points, same order)
+fr = [(q["s"], q["lambda_scale"], q["bytes"], q["distortion"]) for q in b["frontier"]]
+fr_noab = [(q["s"], q["lambda_scale"], q["bytes"], q["distortion"])
+           for q in noab["frontier"]]
+assert fr == fr_noab, f"frontier changed under abandonment:\n{fr}\nvs\n{fr_noab}"
 
 # near-monotone container size along λ at fixed S (the coarse grid is
 # probed in every column and never abandoned; adaptive contexts give no
@@ -95,7 +156,9 @@ assert b["best_bytes"] == min_bytes
 
 print(f"BENCH_sweep.json OK: {b['probes_total']} probes / {b['rounds']} rounds "
       f"across {b['lambda_columns']} lambda-columns, "
-      f"{b['probes_abandoned']} abandoned, frontier {len(f)} points, "
+      f"{b['probes_abandoned']} abandoned (frontier mode; argmin mode "
+      f"{argmin['probes_abandoned']}), seed hit-rate {b['seed_hit_rate']:.3f}, "
+      f"frontier {len(f)} points == no-abandon frontier, "
       f"best (S={b['best_s']}, lambda={b['best_lambda']}) = {b['best_bytes']} bytes, "
       f"wall {b['wall_s']:.2f}s vs serial {b['wall_s_serial']:.2f}s")
 EOF
@@ -114,7 +177,7 @@ echo "== frontier output selection (--select-lambda) =="
 M=$(ls "$WORK/colout"/*.npy | wc -l)
 [ "$M" -gt 0 ] || { echo "no tensors decoded from the lambda-column argmin"; exit 1; }
 
-echo "== lambda-grid error paths =="
+echo "== lambda-grid / switch error paths =="
 if "$BIN" sweep --arch mobilenet --scale 8 --points 3 --lambdas "," \
      --json "$WORK/x.json" 2>/dev/null; then
   echo "empty lambda grid must fail"; exit 1
@@ -123,4 +186,16 @@ if "$BIN" sweep --arch mobilenet --scale 8 --points 3 --lambdas 0.05 \
      --select-lambda 0.9 --out "$WORK/y.dcbc" --json "$WORK/y.json" 2>/dev/null; then
   echo "select-lambda outside the grid must fail"; exit 1
 fi
-echo "lambda-grid misuse rejected as expected"
+if "$BIN" sweep --arch mobilenet --scale 8 --points 3 \
+     --no-abandon --abandon-argmin --json "$WORK/z.json" 2>/dev/null; then
+  echo "--no-abandon with --abandon-argmin must fail"; exit 1
+fi
+if "$BIN" sweep --arch mobilenet --scale 8 --points 3 \
+     --cold --warm-start --json "$WORK/z.json" 2>/dev/null; then
+  echo "--cold with --warm-start must fail"; exit 1
+fi
+echo "sweep misuse rejected as expected"
+
+echo "== markdown fragment for EXPERIMENTS.md =="
+python3 scripts/bench_report.py BENCH_sweep.json > BENCH_sweep.md
+cat BENCH_sweep.md

@@ -8,7 +8,8 @@
 //! deepcabac anatomy    [--levels "1,0,-3,..."]
 //! deepcabac sweep      (--model NAME | --arch vgg16) [--points N] [--workers N]
 //!                      [--lambdas A,B,... | --lambda-sweep N]
-//!                      [--sweep-exhaustive] [--no-abandon] [--compare-serial]
+//!                      [--sweep-exhaustive] [--no-abandon | --abandon-argmin]
+//!                      [--warm-start | --cold] [--compare-serial]
 //!                      [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
 //! deepcabac synth      --arch vgg16 [--scale N] [--s N]
 //! ```
@@ -138,30 +139,42 @@ USAGE:
   deepcabac sweep (--model NAME | --arch vgg16|resnet50|mobilenet [--scale N]
                   [--seed N]) [--points N] [--workers N] [--lambda-scale X]
                   [--lambdas A,B,... | --lambda-sweep N] [--eval]
-                  [--sweep-exhaustive] [--no-abandon] [--compare-serial]
+                  [--sweep-exhaustive] [--no-abandon | --abandon-argmin]
+                  [--warm-start | --cold] [--compare-serial]
                   [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
       The 2-D (S × λ) rate-distortion surface sweep on the parallel
       incremental engine: coarse-to-fine refinement over S ∈ {0..256}
       per λ-column ((layer × S × λ) probe tasks fanned over --workers
-      threads, per-layer statistics shared across the whole surface,
-      refinement probes abandoned the moment they cannot beat their
-      λ-column's incumbent — byte-identical winners either way).
+      threads, per-layer statistics shared across the whole surface).
       --lambdas gives explicit λ (lambda_scale) columns; --lambda-sweep
       N uses λ=0 plus N-1 log-spaced columns over [0.01, 1.0] (N=1 is
       just the 0.05 default; the two flags are mutually exclusive);
       neither = the single --lambda-scale column (the paper's pure S
       sweep).
+      Refinement probes warm-start from their λ-column incumbent's
+      quantized levels (byte-identical containers either way — the seed
+      only speeds up the per-weight argmin certificate; --cold disables
+      seeding for identity checks, --warm-start is the default).
+      Early abandonment is frontier-preserving by default: a probe is
+      cut only when it is over its λ-column's byte budget AND its
+      running (bytes, distortion) lower bound is strictly
+      Pareto-dominated by a completed point, so the reported frontier,
+      every per-column argmin, and the overall winner are identical to
+      a --no-abandon run. --abandon-argmin switches to the faster
+      byte-budget-only mode (argmins still exact; losing low-distortion
+      probes may vanish from the frontier); --no-abandon completes
+      every probe (full per-point stats).
       --eval re-evaluates every λ-column's
       argmin container through PJRT (the accuracy-vs-λ trace the old
       serial rd_sweep example printed; needs a trained --model).
-      --sweep-exhaustive probes all 257 S per column; --no-abandon
-      disables early abandonment (full frontier coverage);
+      --sweep-exhaustive probes all 257 S per column;
       --compare-serial recompresses every completed grid point serially
       and verifies byte-identity against the engine's per-point
-      fingerprints. Writes the Pareto frontier + per-column argmins to
-      --json (default BENCH_sweep.json), per-point CSV to --csv, and the
-      best container to --out (--select-lambda X writes λ-column X's
-      argmin instead of the overall smallest).
+      fingerprints. Writes the Pareto frontier + per-column argmins +
+      warm-start hit rates + abandonment reasons to --json (default
+      BENCH_sweep.json), per-point CSV to --csv, and the best container
+      to --out (--select-lambda X writes λ-column X's argmin instead of
+      the overall smallest).
   deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
                   [--out FILE]
       Generate + compress a synthetic ImageNet-scale model (--out writes
@@ -239,7 +252,7 @@ mod tests {
     fn parses_sweep_flags() {
         let a = Args::parse(&sv(&[
             "sweep", "--arch", "mobilenet", "--scale", "32", "--points", "9",
-            "--workers", "4", "--sweep-exhaustive", "--no-abandon",
+            "--workers", "4", "--sweep-exhaustive", "--no-abandon", "--cold",
             "--compare-serial", "--json", "B.json", "--out", "best.dcbc",
         ]))
         .unwrap();
@@ -249,7 +262,12 @@ mod tests {
         assert_eq!(a.get_count("workers", 1).unwrap(), 4);
         assert!(a.has("sweep-exhaustive"));
         assert!(a.has("no-abandon"));
+        assert!(a.has("cold"));
+        assert!(!a.has("warm-start") && !a.has("abandon-argmin"));
         assert!(a.has("compare-serial"));
+        // the warm-start / abandon-mode switches parse as plain switches
+        let a = Args::parse(&sv(&["sweep", "--abandon-argmin", "--warm-start"])).unwrap();
+        assert!(a.has("abandon-argmin") && a.has("warm-start"));
         assert_eq!(a.get_or("json", "BENCH_sweep.json"), "B.json");
         assert_eq!(a.get("out"), Some("best.dcbc"));
         // --points 0 / --sweep 0 are usage errors, not downstream panics

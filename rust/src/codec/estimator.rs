@@ -58,7 +58,7 @@ impl RateEstimator {
 /// Shared by the naive estimator and [`RateCache`] so both produce
 /// bit-identical f32 sums (f32 addition is order-sensitive; one
 /// accumulation order, one function).
-pub(crate) fn tail_bits(cfg: &CodecConfig, ctxs: &ContextSet, abs: u32) -> f32 {
+pub fn tail_bits(cfg: &CodecConfig, ctxs: &ContextSet, abs: u32) -> f32 {
     debug_assert!(abs >= 1);
     let mut bits = 0.0f32;
     let n = cfg.n_abs_flags;

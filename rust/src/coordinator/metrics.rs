@@ -15,6 +15,11 @@ pub struct LayerReport {
     pub distortion: f64,
     /// Estimated rate (bits) from the RD scan.
     pub est_bits: f64,
+    /// Weights whose warm-start seed candidate was the chosen level
+    /// (0 outside warm sweep probes — see `quant::ScanSeed`).
+    pub seed_hits: usize,
+    /// Weights scanned with a warm-start seed (0 for cold scans).
+    pub seeded: usize,
     pub time_s: f64,
 }
 
@@ -99,16 +104,33 @@ impl ModelReport {
 pub struct SweepStats {
     /// Grid points probed (each point = one (S, λ) cell over all layers).
     pub probes_total: usize,
-    /// Points abandoned early because their running payload could no
-    /// longer beat their λ-column's best completed container.
+    /// Points abandoned early under the active abandon mode (see
+    /// `sweep::AbandonMode`): over their λ-column's payload budget and —
+    /// in the frontier-preserving mode — provably Pareto-dominated.
     pub probes_abandoned: usize,
+    /// Abandoned probes cut mid-scan by the in-layer 512-weight poll.
+    pub abandoned_mid_layer: usize,
+    /// Abandoned probes cut at a layer boundary by the coordinator.
+    pub abandoned_boundary: usize,
     /// Scheduling rounds executed (1 for a flat sweep; coarse round +
     /// refinement rounds for the coarse-to-fine driver).
     pub rounds: usize,
     /// Distinct λ-columns of the swept surface.
     pub columns: usize,
+    /// Weights scanned with a warm-start seed across all probes.
+    pub seeded_weights: u64,
+    /// Seeded weights whose seed candidate was the chosen level.
+    pub seed_hits: u64,
     /// Wall clock of the whole sweep.
     pub wall_s: f64,
+}
+
+impl SweepStats {
+    /// Fraction of seeded weights whose seed was the argmin (0 when the
+    /// sweep ran cold).
+    pub fn seed_hit_rate(&self) -> f64 {
+        self.seed_hits as f64 / (self.seeded_weights.max(1)) as f64
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +147,8 @@ mod tests {
             n_chunks: 1,
             distortion: 0.0,
             est_bits: 1000.0,
+            seed_hits: 0,
+            seeded: 0,
             time_s: 0.0,
         };
         assert!((r.bits_per_weight() - 1.0).abs() < 1e-12);

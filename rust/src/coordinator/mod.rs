@@ -3,9 +3,10 @@
 //! (paper §4 probes S ∈ {0,…,256} and keeps the best; the journal
 //! version sweeps the λ trade-off too; the engine fans (layer × S × λ)
 //! probe tasks onto a worker pool, hoists per-tensor statistics across
-//! the whole surface, early-abandons probes that can no longer win
-//! their λ-column, and emits the Pareto size/distortion frontier), and
-//! pipeline metrics.
+//! the whole surface, warm-starts refinement probes from their
+//! λ-column incumbents, early-abandons probes that are provably out of
+//! the race under a selectable [`AbandonMode`], and emits the Pareto
+//! size/distortion frontier), and pipeline metrics.
 
 pub mod metrics;
 pub mod pipeline;
@@ -13,9 +14,10 @@ pub mod sweep;
 
 pub use metrics::{LayerReport, ModelReport, SweepStats};
 pub use pipeline::{
-    compress_model, compress_tensor, compress_tensor_chunked, CompressionSpec, LayerStats,
+    compress_model, compress_tensor, compress_tensor_chunked, CompressionSpec, LayerProbe,
+    LayerStats,
 };
 pub use sweep::{
-    sweep_grid, sweep_per_layer, sweep_s, sweep_s_auto, sweep_s_per_layer, ColumnBest,
-    GridPoint, SweepEngine, SweepOptions, SweepPoint, SweepResult,
+    sweep_grid, sweep_per_layer, sweep_s, sweep_s_auto, sweep_s_per_layer, AbandonKind,
+    AbandonMode, ColumnBest, GridPoint, SweepEngine, SweepOptions, SweepPoint, SweepResult,
 };

@@ -16,7 +16,10 @@
 use crate::bayes;
 use crate::codec::CodecConfig;
 use crate::model::{ChunkInfo, CompressedLayer, CompressedModel, Model};
-use crate::quant::{QuantGrid, QuantResult, RdParams, RdQuantizer};
+use crate::quant::{
+    AbandonedAt, DominanceFrontier, ProbeBudget, QuantGrid, QuantResult, RdParams,
+    RdQuantizer, ScanSeed,
+};
 use crate::util::Timer;
 
 use super::metrics::{LayerReport, ModelReport};
@@ -166,6 +169,45 @@ pub fn compress_tensor_with_stats(
     assemble_layer(name, dims, bias, spec, grid, n, results, &timer)
 }
 
+/// Everything a sweep-probe layer task carries besides the tensor
+/// itself: running totals from the probe's earlier layers, the 2-D
+/// abandon predicate's two legs, and the optional warm-start seed.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerProbe<'a> {
+    /// Payload bytes accumulated by this probe's earlier layers.
+    pub base_bytes: usize,
+    /// Distortion accumulated by this probe's earlier layers (summed in
+    /// the same order the completed probe's report would sum it, so it
+    /// is an exact monotone lower bound on the final distortion).
+    pub base_distortion: f64,
+    /// Payload budget (λ-column incumbent leg); `usize::MAX` = off.
+    pub budget_bytes: usize,
+    /// Completed-point staircase (dominance leg); `None` makes the
+    /// payload leg decide alone (legacy selection-neutral budget).
+    pub dominance: Option<&'a DominanceFrontier>,
+    /// Warm-start seed: this layer's levels from an already-probed grid
+    /// point, plus that point's S (the grid-step rescale factor is
+    /// derived per layer from [`LayerStats`]).
+    pub seed: Option<(&'a [i32], u32)>,
+}
+
+impl LayerProbe<'_> {
+    /// A probe that never abandons and scans cold.
+    pub const PLAIN: LayerProbe<'static> = LayerProbe {
+        base_bytes: 0,
+        base_distortion: 0.0,
+        budget_bytes: usize::MAX,
+        dominance: None,
+        seed: None,
+    };
+}
+
+impl Default for LayerProbe<'_> {
+    fn default() -> Self {
+        Self::PLAIN
+    }
+}
+
 /// Budgeted variant for sweep probes: chunks run sequentially on the
 /// calling worker, and the encode aborts — returning `None` — the moment
 /// `base_bytes` (payload accumulated by earlier layers of the same
@@ -173,6 +215,8 @@ pub fn compress_tensor_with_stats(
 /// the byte counts only ever grow, an abandoned probe could not have
 /// finished within budget, so abandonment never changes which probe
 /// wins. A `Some` result is byte-identical to the unbudgeted path.
+/// (The byte-leg-only special case of [`compress_tensor_probe`] — the
+/// per-layer sweep's budget, and the legacy call shape.)
 pub fn compress_tensor_budgeted(
     name: &str,
     dims: &[usize],
@@ -183,10 +227,36 @@ pub fn compress_tensor_budgeted(
     base_bytes: usize,
     budget_bytes: usize,
 ) -> Option<(CompressedLayer, LayerReport)> {
+    let probe = LayerProbe { base_bytes, budget_bytes, ..LayerProbe::PLAIN };
+    compress_tensor_probe(name, dims, weights, bias, spec, stats, &probe).ok()
+}
+
+/// The (S × λ) engine's full probe task: [`compress_tensor_budgeted`]
+/// extended with the dominance leg of the 2-D abandon predicate and the
+/// warm-start seed (see [`LayerProbe`]). Chunks run sequentially; the
+/// abandon predicate is polled inside each chunk scan with the exact
+/// running (payload, distortion) lower bounds, and an `Err` carries the
+/// probe-absolute totals the predicate fired at. An `Ok` result is
+/// byte-identical to the plain unseeded, unbudgeted path.
+pub fn compress_tensor_probe(
+    name: &str,
+    dims: &[usize],
+    weights: &[f32],
+    bias: &[f32],
+    spec: &CompressionSpec,
+    stats: &LayerStats,
+    probe: &LayerProbe,
+) -> Result<(CompressedLayer, LayerReport), AbandonedAt> {
     let timer = Timer::new();
     let grid = stats.grid(spec.s);
     let params = RdParams { lambda: stats.lambda(spec.lambda_scale, &grid) };
     let quantizer = RdQuantizer::new(spec.cfg);
+    // Seed levels live on the seed point's grid; Δ_seed/Δ_probe maps
+    // them onto this probe's grid (for neighbouring S the ratio is
+    // within 1% of 1, so nearly every rescaled seed is the argmin).
+    let seed = probe.seed.map(|(levels, seed_s)| {
+        (levels, stats.grid(seed_s).delta as f64 / grid.delta as f64)
+    });
 
     let n = weights.len();
     let n_chunks = (spec.chunks.max(1) as usize).min(n.max(1));
@@ -194,19 +264,29 @@ pub fn compress_tensor_budgeted(
 
     let mut results = Vec::with_capacity(spans.len());
     let mut acc = 0usize;
+    let mut acc_dist = 0.0f64;
     for &(lo, hi) in &spans {
-        let r = quantizer.quantize_encode_budgeted(
+        let budget = ProbeBudget {
+            base_bytes: probe.base_bytes.saturating_add(acc),
+            base_distortion: probe.base_distortion + acc_dist,
+            budget_bytes: probe.budget_bytes,
+            dominance: probe.dominance,
+        };
+        let chunk_seed =
+            seed.map(|(levels, scale)| ScanSeed { levels: &levels[lo..hi], scale });
+        let r = quantizer.quantize_encode_probe(
             &weights[lo..hi],
             &stats.etas[lo..hi],
             &grid,
             params,
-            base_bytes.saturating_add(acc),
-            budget_bytes,
-        )?;
+            &budget,
+            chunk_seed,
+        )?; // Err already carries probe-absolute totals (the budget's base)
         acc += r.payload.len();
+        acc_dist += r.distortion;
         results.push(r);
     }
-    Some(assemble_layer(name, dims, bias, spec, grid, n, results, &timer))
+    Ok(assemble_layer(name, dims, bias, spec, grid, n, results, &timer))
 }
 
 /// Stitch chunk results into a [`CompressedLayer`] + [`LayerReport`]
@@ -227,12 +307,15 @@ fn assemble_layer(
     let mut payload = Vec::new();
     let mut chunks = Vec::with_capacity(results.len());
     let (mut distortion, mut est_bits) = (0.0f64, 0.0f64);
+    let (mut seed_hits, mut seeded) = (0usize, 0usize);
     for r in results {
         chunks.push(ChunkInfo { n_weights: r.levels.len(), bytes: r.payload.len() });
         levels.extend_from_slice(&r.levels);
         payload.extend_from_slice(&r.payload);
         distortion += r.distortion;
         est_bits += r.est_bits;
+        seed_hits += r.seed_hits;
+        seeded += r.seeded;
     }
     if chunks.len() <= 1 {
         chunks.clear(); // canonical monolithic representation (v1 format)
@@ -247,6 +330,8 @@ fn assemble_layer(
         n_chunks: chunks.len().max(1),
         distortion,
         est_bits,
+        seed_hits,
+        seeded,
         time_s: timer.elapsed_s(),
     };
     let layer = CompressedLayer {
@@ -525,6 +610,95 @@ pub(crate) mod tests {
             full.payload.len(), full.payload.len() + full.payload.len() / 3,
         )
         .is_none());
+    }
+
+    #[test]
+    fn probe_with_seed_is_byte_identical_and_reports_hits() {
+        // the pipeline-level warm-start identity: a neighbour-S seed
+        // (the engine's real plumbing, rescaled per layer and sliced per
+        // chunk) and an adversarial all-wrong seed both reproduce the
+        // cold payload byte for byte; only the hit counters differ.
+        let (w, s) = sparse_fixture(20_000, 0.12, 41);
+        let spec = CompressionSpec { chunks: 3, ..Default::default() };
+        let stats = LayerStats::compute(&w, &s, spec.weighted);
+        let (cold, cold_rep) =
+            compress_tensor_budgeted("t", &[w.len()], &w, &[], &spec, &stats, 0, usize::MAX)
+                .expect("unbounded");
+        assert_eq!((cold_rep.seeded, cold_rep.seed_hits), (0, 0));
+
+        // seed from the S=65 neighbour, exactly as the sweep engine does
+        let nspec = CompressionSpec { s: 65, ..spec };
+        let (nl, _) =
+            compress_tensor_budgeted("t", &[w.len()], &w, &[], &nspec, &stats, 0, usize::MAX)
+                .expect("unbounded");
+        let seed_levels = nl.decode_levels();
+        let probe = LayerProbe { seed: Some((&seed_levels, 65)), ..LayerProbe::PLAIN };
+        let (warm, warm_rep) =
+            compress_tensor_probe("t", &[w.len()], &w, &[], &spec, &stats, &probe)
+                .expect("unbounded");
+        assert_eq!(warm.payload, cold.payload);
+        assert_eq!(warm.chunks, cold.chunks);
+        assert_eq!(warm_rep.seeded, w.len());
+        assert!(
+            warm_rep.seed_hits * 5 >= warm_rep.seeded * 4,
+            "neighbour-S seed hit rate {}/{}",
+            warm_rep.seed_hits,
+            warm_rep.seeded
+        );
+
+        // forced fallback: a seed that is wrong for every weight
+        let bogus = vec![cold.grid.max_level; w.len()];
+        let probe = LayerProbe { seed: Some((&bogus, spec.s + 1)), ..LayerProbe::PLAIN };
+        let (warm, _) = compress_tensor_probe("t", &[w.len()], &w, &[], &spec, &stats, &probe)
+            .expect("unbounded");
+        assert_eq!(warm.payload, cold.payload);
+    }
+
+    #[test]
+    fn dominance_leg_gates_the_byte_budget() {
+        // frontier-preserving semantics at the pipeline level: over
+        // budget alone no longer abandons — a completed point must also
+        // strictly dominate the probe's running lower bounds.
+        let (w, s) = sparse_fixture(20_000, 0.12, 43);
+        let spec = CompressionSpec::default();
+        let stats = LayerStats::compute(&w, &s, spec.weighted);
+        let (full, rep) =
+            compress_tensor_budgeted("t", &[w.len()], &w, &[], &spec, &stats, 0, usize::MAX)
+                .expect("unbounded");
+        let budget = full.payload.len() / 4;
+
+        // dominating completed point (fewer bytes AND less distortion):
+        // the probe must be cut, and the recorded totals satisfy the
+        // predicate they were cut by
+        let dom = DominanceFrontier::from_completed(
+            [(full.payload.len() / 2, rep.distortion / 2.0)],
+            0,
+        );
+        let probe = LayerProbe {
+            budget_bytes: budget,
+            dominance: Some(&dom),
+            ..LayerProbe::PLAIN
+        };
+        let cut = compress_tensor_probe("t", &[w.len()], &w, &[], &spec, &stats, &probe)
+            .expect_err("dominated probe must abandon");
+        assert!(cut.bytes > budget);
+        assert!(dom.dominates(cut.bytes, cut.distortion));
+
+        // non-dominating completed point (fewer bytes but MORE
+        // distortion): the probe is a frontier candidate and must
+        // complete byte-identically despite being far over budget
+        let nodom = DominanceFrontier::from_completed(
+            [(full.payload.len() / 2, rep.distortion * 2.0)],
+            0,
+        );
+        let probe = LayerProbe {
+            budget_bytes: budget,
+            dominance: Some(&nodom),
+            ..LayerProbe::PLAIN
+        };
+        let (kept, _) = compress_tensor_probe("t", &[w.len()], &w, &[], &spec, &stats, &probe)
+            .expect("frontier candidate must survive the byte budget");
+        assert_eq!(kept.payload, full.payload);
     }
 
     #[test]

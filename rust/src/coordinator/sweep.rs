@@ -21,25 +21,48 @@
 //!    neither S nor λ, so they are computed once per layer
 //!    ([`LayerStats`]) and shared by every probe of that layer across
 //!    the entire surface.
-//! 3. **Early abandonment per λ-column** — each λ-column keeps its own
-//!    incumbent (the smallest serialized container at that λ). Once a
-//!    column has one, any of its probes whose accumulated payload can no
-//!    longer fit inside the column's best container is aborted mid-scan.
-//!    The budget is `column_best_serialized − min_overhead` where
-//!    `min_overhead` is a lower bound on a container's non-payload
-//!    bytes, so an abandoned point provably serializes strictly larger
-//!    than its column's incumbent: **abandonment never changes any
-//!    column's argmin** (nor the overall winner, which is the min over
-//!    column argmins). Budgets are fixed per round, so the abandoned set
-//!    is a pure function of the schedule — identical across worker
-//!    counts (the determinism tests pin both properties).
-//! 4. **Pareto frontier** — alongside the per-column argmins the engine
+//! 3. **Early abandonment** ([`AbandonMode`]) — each λ-column keeps its
+//!    own incumbent (the smallest serialized container at that λ). Once
+//!    a column has one, a probe whose accumulated payload can no longer
+//!    fit inside the column's best container (`column_best_serialized −
+//!    min_overhead`, a provable lower bound on container overhead) is a
+//!    candidate for abortion mid-scan: it provably serializes strictly
+//!    larger than its column's incumbent, so **abandonment never changes
+//!    any column's argmin** (nor the overall winner, which is the min
+//!    over column argmins). In the default
+//!    [`AbandonMode::FrontierPreserving`] a second conjunct is required
+//!    before the abort: some *completed* point must strictly dominate
+//!    the probe's running (serialized bytes, distortion) lower bound on
+//!    **both** axes ([`crate::quant::DominanceFrontier`]). Both partial
+//!    sums are monotone, so the finished probe would provably have been
+//!    strictly Pareto-dominated — abandonment then preserves the exact
+//!    frontier too, and `--no-abandon` is no longer needed for frontier
+//!    runs. [`AbandonMode::SelectionNeutral`] keeps the payload leg
+//!    alone (faster, argmin-preserving only — a losing low-distortion
+//!    probe may vanish from the frontier). Budgets *and* the dominance
+//!    staircase are fixed per round, so the abandoned set is a pure
+//!    function of the schedule — identical across worker counts (the
+//!    determinism tests pin all of this).
+//! 4. **Warm-start refinement probes** — a refinement-round probe seeds
+//!    its candidate scan with the quantized levels of its λ-column's
+//!    incumbent — the nearest already-probed grid point, since
+//!    refinement grids bracket the incumbent's S and neighbouring Δ
+//!    differs by < 1%, so most per-weight argmins are unchanged. Each
+//!    seeded level is verified with one exact cost comparison and the
+//!    outward scan continues from it ([`crate::quant::ScanSeed`]), which
+//!    keeps every container **byte-identical** to the cold path; seeds
+//!    are refreshed from column incumbents at round boundaries
+//!    (deterministic), and per-probe hit rates are reported in
+//!    [`SweepStats`].
+//! 5. **Pareto frontier** — alongside the per-column argmins the engine
 //!    emits the non-dominated set of completed points in the
 //!    (serialized bytes, weighted distortion) plane. Abandoned probes
-//!    never complete and are excluded from the frontier; run with
-//!    abandonment off when full-surface coverage matters more than
-//!    sweep speed (the coarse round of [`sweep_s_auto`] always completes
-//!    fully, so the frontier always covers the coarse grid at every λ).
+//!    never complete and are excluded from the frontier — which loses
+//!    nothing in the frontier-preserving mode (each abandoned point is
+//!    provably dominated by a completed one; removing dominated points
+//!    never changes a Pareto set). The coarse round of [`sweep_s_auto`]
+//!    always completes fully, so the frontier also covers the coarse
+//!    grid at every λ in every mode.
 //!
 //! Every completed point records an FNV-1a fingerprint of its serialized
 //! container, so byte-identity against the serial single-point pipeline
@@ -53,8 +76,9 @@
 //! forces all 257 S values per column instead).
 
 use super::metrics::{LayerReport, ModelReport, SweepStats};
-use super::pipeline::{self, CompressionSpec, LayerStats};
+use super::pipeline::{self, CompressionSpec, LayerProbe, LayerStats};
 use crate::model::{CompressedLayer, CompressedModel, Model};
+use crate::quant::{DominanceFrontier, ProbeBudget};
 use crate::util::par::WorkerPool;
 use crate::util::{fnv1a, Timer};
 use anyhow::{bail, Result};
@@ -85,6 +109,56 @@ impl GridPoint {
     }
 }
 
+/// Early-abandonment policy of a sweep run / scheduling round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AbandonMode {
+    /// Every probe completes — full per-point stats for the whole grid.
+    Off,
+    /// Legacy payload-only budget: a probe is cut the moment its
+    /// accumulated payload can no longer beat its λ-column's incumbent.
+    /// Preserves every column argmin and the overall winner, but a
+    /// losing low-distortion probe never completes and so vanishes from
+    /// the *frontier*. The fastest mode — use for argmin-only runs.
+    SelectionNeutral,
+    /// Payload budget **and** strict Pareto dominance by an
+    /// already-completed point, on the probe's running (bytes,
+    /// distortion) lower bounds. Preserves the argmins *and* the exact
+    /// frontier (abandoned points are provably dominated), at the cost
+    /// of completing every frontier candidate. The default.
+    #[default]
+    FrontierPreserving,
+}
+
+impl AbandonMode {
+    /// Stable name used by `BENCH_sweep.json` and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            AbandonMode::Off => "off",
+            AbandonMode::SelectionNeutral => "argmin",
+            AbandonMode::FrontierPreserving => "frontier",
+        }
+    }
+}
+
+/// Where an abandoned probe was cut.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AbandonKind {
+    /// The in-scan 512-weight poll inside a layer fired.
+    MidLayer,
+    /// The coordinator's check between two layers fired.
+    LayerBoundary,
+}
+
+impl AbandonKind {
+    /// Stable name used by `BENCH_sweep.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            AbandonKind::MidLayer => "mid-layer",
+            AbandonKind::LayerBoundary => "layer-boundary",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub s: u32,
@@ -94,14 +168,23 @@ pub struct SweepPoint {
     /// recorded so the frontier report still shows *why* the point lost.
     pub compressed_bytes: usize,
     pub density: f64,
+    /// Weighted distortion. For abandoned probes this is the sum over
+    /// the layers completed before the abort — a monotone lower bound on
+    /// what the finished probe would have reported (density stays 0).
     pub distortion: f64,
-    /// True if the probe was cut short by its λ-column's early-abandon
-    /// budget (density/distortion are then 0 — the point never
-    /// completed).
+    /// True if the probe was cut short by the round's abandon predicate
+    /// (see [`AbandonMode`]; the point never completed).
     pub abandoned: bool,
+    /// Which check cut an abandoned probe (`None` for completed points).
+    pub abandon_kind: Option<AbandonKind>,
     /// FNV-1a fingerprint of the serialized container (0 for abandoned
     /// probes) — per-point byte-identity against the serial pipeline.
     pub container_hash: u64,
+    /// Weights this probe scanned with a warm-start seed (0 when the
+    /// round ran cold or its λ-column had no incumbent yet).
+    pub seeded: usize,
+    /// Seeded weights whose seed candidate was the chosen level.
+    pub seed_hits: usize,
     /// Summed wall clock of this point's probe tasks (reporting only —
     /// not deterministic, excluded from the determinism tests).
     pub wall_s: f64,
@@ -151,9 +234,13 @@ pub struct SweepOptions {
     /// Probe all 257 S values per λ-column in one round instead of
     /// coarse-to-fine.
     pub exhaustive: bool,
-    /// Early-abandon refinement probes that can no longer win their
-    /// λ-column.
-    pub abandon: bool,
+    /// Early-abandonment policy for refinement rounds (the coarse round
+    /// always completes fully).
+    pub abandon: AbandonMode,
+    /// Seed refinement probes with their λ-column incumbent's levels
+    /// (byte-identical to cold either way; `false` = the `--cold`
+    /// reference path for identity checks).
+    pub warm_start: bool,
     /// λ-columns (lambda_scale values) of the surface. Empty means
     /// "just the base spec's lambda_scale" — a pure S sweep.
     pub lambdas: Vec<f32>,
@@ -165,7 +252,8 @@ impl Default for SweepOptions {
             points: 17,
             workers: 1,
             exhaustive: false,
-            abandon: true,
+            abandon: AbandonMode::FrontierPreserving,
+            warm_start: true,
             lambdas: Vec::new(),
         }
     }
@@ -280,11 +368,26 @@ struct Best {
     report: ModelReport,
 }
 
+/// Per-layer quantized levels of a column incumbent, decoded once from
+/// its container and shared (`Arc`) by every warm probe it seeds — one
+/// level-set per λ-column resident at a time, replaced when the
+/// incumbent changes.
+struct SeedLevels {
+    /// The incumbent's S (each S is probed at most once per column, so
+    /// this identifies the incumbent; the probe derives the grid-step
+    /// rescale factor from it).
+    s: u32,
+    layers: Vec<Vec<i32>>,
+}
+
 /// One λ-column's scheduling state.
 struct Column {
     lambda_bits: u32,
     lambda_scale: f32,
     best: Option<Best>,
+    /// Warm-start seed: the incumbent's decoded levels (refreshed lazily
+    /// at round boundaries, so it is a pure function of the schedule).
+    seed: Option<Arc<SeedLevels>>,
 }
 
 /// LEB128 length of a varint (mirrors `bitstream::write_varint`).
@@ -362,8 +465,29 @@ impl SweepEngine {
         if let Some(i) = self.columns.iter().position(|c| c.lambda_bits == bits) {
             return i;
         }
-        self.columns.push(Column { lambda_bits: bits, lambda_scale, best: None });
+        self.columns.push(Column {
+            lambda_bits: bits,
+            lambda_scale,
+            best: None,
+            seed: None,
+        });
         self.columns.len() - 1
+    }
+
+    /// Refresh column `c`'s warm-start seed from its incumbent (decode
+    /// the incumbent's levels once; no-op while the seed is current).
+    /// Called at round boundaries only, so seeds — like budgets — are a
+    /// pure function of the schedule.
+    fn refresh_seed(&mut self, c: usize) {
+        let col = &mut self.columns[c];
+        let Some(b) = &col.best else { return };
+        if col.seed.as_ref().map(|s| s.s == b.point.s).unwrap_or(false) {
+            return;
+        }
+        col.seed = Some(Arc::new(SeedLevels {
+            s: b.point.s,
+            layers: b.model.layers.iter().map(|l| l.decode_levels()).collect(),
+        }));
     }
 
     /// (bytes, sched, column index) of the overall winner so far.
@@ -400,12 +524,14 @@ impl SweepEngine {
     }
 
     /// Probe every not-yet-probed grid point in `grid` (duplicates and
-    /// repeats are skipped), with early abandonment iff `abandon`. Each
-    /// λ-column's budget is fixed on entry (∞ while a column has no
-    /// completed probe — such a column can never abandon), so which
-    /// probes get abandoned depends only on the schedule — not on worker
-    /// count or timing.
-    pub fn run_round(&mut self, grid: &[GridPoint], abandon: bool) {
+    /// repeats are skipped) under the round's [`AbandonMode`], seeding
+    /// probes from their λ-column incumbents when `warm`. Each λ-column's
+    /// budget, the dominance staircase, and the seeds are all fixed on
+    /// entry (∞/empty/none while a column has no completed probe — such
+    /// a column can never abandon and has nothing to seed from), so
+    /// which probes get abandoned — and every seeded-scan statistic —
+    /// depends only on the schedule, not on worker count or timing.
+    pub fn run_round(&mut self, grid: &[GridPoint], abandon: AbandonMode, warm: bool) {
         // re-normalize through GridPoint::new: the fields are pub, so a
         // literal-constructed -0.0 must still land in the +0.0 column
         let pts: Vec<GridPoint> = grid
@@ -421,7 +547,7 @@ impl SweepEngine {
         let budgets: Vec<usize> = cols
             .iter()
             .map(|&c| {
-                if !abandon {
+                if abandon == AbandonMode::Off {
                     return usize::MAX;
                 }
                 self.columns[c]
@@ -431,6 +557,33 @@ impl SweepEngine {
                     .unwrap_or(usize::MAX)
             })
             .collect();
+        // the dominance staircase over everything completed in EARLIER
+        // rounds (round-fixed, like the budgets, for determinism)
+        let dominance: Option<Arc<DominanceFrontier>> =
+            if abandon == AbandonMode::FrontierPreserving {
+                let f = DominanceFrontier::from_completed(
+                    self.points
+                        .iter()
+                        .filter(|p| !p.abandoned)
+                        .map(|p| (p.compressed_bytes, p.distortion)),
+                    self.ctx.min_overhead,
+                );
+                if f.is_empty() {
+                    None
+                } else {
+                    Some(Arc::new(f))
+                }
+            } else {
+                None
+            };
+        let seeds: Vec<Option<Arc<SeedLevels>>> = if warm {
+            for &c in &cols {
+                self.refresh_seed(c);
+            }
+            cols.iter().map(|&c| self.columns[c].seed.clone()).collect()
+        } else {
+            cols.iter().map(|_| None).collect()
+        };
         let sched_base = self.points.len();
         let (points, round_best) = run_probes(
             &self.ctx,
@@ -438,6 +591,8 @@ impl SweepEngine {
             &pts,
             &cols,
             &budgets,
+            dominance,
+            seeds,
             sched_base,
             self.columns.len(),
         );
@@ -510,8 +665,20 @@ impl SweepEngine {
             stats: SweepStats {
                 probes_total: self.points.len(),
                 probes_abandoned: self.abandoned,
+                abandoned_mid_layer: self
+                    .points
+                    .iter()
+                    .filter(|p| p.abandon_kind == Some(AbandonKind::MidLayer))
+                    .count(),
+                abandoned_boundary: self
+                    .points
+                    .iter()
+                    .filter(|p| p.abandon_kind == Some(AbandonKind::LayerBoundary))
+                    .count(),
                 rounds: self.rounds,
                 columns: n_columns,
+                seeded_weights: self.points.iter().map(|p| p.seeded as u64).sum(),
+                seed_hits: self.points.iter().map(|p| p.seed_hits as u64).sum(),
                 wall_s: self.timer.elapsed_s(),
             },
             points: self.points,
@@ -629,12 +796,15 @@ fn pareto_frontier(points: &[SweepPoint]) -> Vec<usize> {
 /// returning the per-point records in `pts` order plus each λ-column's
 /// best completed container of the round (smallest bytes, ties to the
 /// earlier schedule index — independent of completion order).
+#[allow(clippy::too_many_arguments)]
 fn run_probes(
     ctx: &Arc<ProbeCtx>,
     pool: &WorkerPool,
     pts: &[GridPoint],
     cols: &[usize],
     budgets: &[usize],
+    dominance: Option<Arc<DominanceFrontier>>,
+    seeds: Vec<Option<Arc<SeedLevels>>>,
     sched_base: usize,
     n_cols: usize,
 ) -> (Vec<SweepPoint>, Vec<Option<Best>>) {
@@ -657,7 +827,10 @@ fn run_probes(
                 density: report.density,
                 distortion: 0.0,
                 abandoned: false,
+                abandon_kind: None,
                 container_hash: fnv1a(&ser),
+                seeded: 0,
+                seed_hits: 0,
                 wall_s: 0.0,
             });
             if best[cols[p]].is_none() {
@@ -677,6 +850,9 @@ fn run_probes(
         layers: Vec<CompressedLayer>,
         reports: Vec<LayerReport>,
         bytes: usize,
+        /// Running distortion in the exact per-layer summation order the
+        /// completed report would use (a monotone lower bound).
+        dist: f64,
         wall: f64,
     }
     let mut st: Vec<PState> = (0..n_points)
@@ -684,67 +860,100 @@ fn run_probes(
             layers: Vec::with_capacity(n_layers),
             reports: Vec::with_capacity(n_layers),
             bytes: 0,
+            dist: 0.0,
             wall: 0.0,
         })
         .collect();
 
-    // worker side: one budgeted layer-compress per task (Arc'd captures
+    // worker side: one probed layer-compress per task (Arc'd captures
     // keep the step closure's clone O(1) per dispatch)
     let step = {
         let ctx = Arc::clone(ctx);
         let pts: Arc<Vec<GridPoint>> = Arc::new(pts.to_vec());
         let budgets: Arc<Vec<usize>> = Arc::new(budgets.to_vec());
-        move |p: usize, l: usize, base_bytes: usize| {
+        let dominance = dominance.clone();
+        let seeds: Arc<Vec<Option<Arc<SeedLevels>>>> = Arc::new(seeds);
+        move |p: usize, l: usize, (base_bytes, base_dist): (usize, f64)| {
             let t = Timer::new();
             let pt = pts[p];
             let spec = CompressionSpec { s: pt.s, lambda_scale: pt.lambda_scale, ..ctx.base };
-            let out = pipeline::compress_tensor_budgeted(
+            let probe = LayerProbe {
+                base_bytes,
+                base_distortion: base_dist,
+                budget_bytes: budgets[p],
+                dominance: dominance.as_deref(),
+                seed: seeds[p].as_ref().map(|s| (&s.layers[l][..], s.s)),
+            };
+            let out = pipeline::compress_tensor_probe(
                 &ctx.model.manifest.layers[l].name,
                 &ctx.model.weights[l].shape,
                 &ctx.model.weights[l].data,
                 &ctx.model.biases[l].data,
                 &spec,
                 &ctx.stats[l],
-                base_bytes,
-                budgets[p],
+                &probe,
             );
             (t.elapsed_s(), out)
         }
     };
     // coordinator side: chained per-point dispatch — layer ℓ+1 follows ℓ
-    // with the accumulated payload as its base, or the point finishes
-    // (complete or abandoned) and its record + column-best update happen
-    // here, in deterministic bookkeeping independent of completion order
-    chain_dispatch(pool, "sweep probe", n_points, 0usize, step, |p, l, (wall, out)| {
+    // with the accumulated (payload, distortion) as its base, or the
+    // point finishes (complete or abandoned) and its record +
+    // column-best update happen here, in deterministic bookkeeping
+    // independent of completion order
+    let boundary_budget = |p: usize, st: &PState| {
+        // the same two-leg predicate the in-scan poll evaluates, applied
+        // to the totals at a layer boundary
+        ProbeBudget {
+            base_bytes: 0,
+            base_distortion: 0.0,
+            budget_bytes: budgets[p],
+            dominance: dominance.as_deref(),
+        }
+        .check(st.bytes, st.dist)
+    };
+    chain_dispatch(pool, "sweep probe", n_points, (0usize, 0.0f64), step, |p, l, (wall, out)| {
         st[p].wall += wall;
-        let abandoned = match out {
-            Some((cl, rep)) => {
+        let abandon_kind = match out {
+            Ok((cl, rep)) => {
                 st[p].bytes += cl.payload.len();
+                st[p].dist += rep.distortion;
                 st[p].layers.push(cl);
                 st[p].reports.push(rep);
                 if l + 1 < n_layers {
-                    if st[p].bytes <= budgets[p] {
-                        return Some(st[p].bytes); // chain continues
+                    if boundary_budget(p, &st[p]).is_none() {
+                        return Some((st[p].bytes, st[p].dist)); // chain continues
                     }
-                    true // boundary abandon: already over budget
+                    // boundary abandon: already provably out of the race
+                    Some(AbandonKind::LayerBoundary)
                 } else {
-                    false // last layer done: completed (budget irrelevant)
+                    None // last layer done: completed (budget irrelevant)
                 }
             }
-            None => true, // in-layer abandon
+            Err(cut) => {
+                // record the exact totals the predicate fired at, so the
+                // "provably dominated / over budget" claim is checkable
+                // from the report alone
+                st[p].bytes = cut.bytes;
+                st[p].dist = cut.distortion;
+                Some(AbandonKind::MidLayer) // in-layer abandon
+            }
         };
         let ps = &mut st[p];
         let layers = std::mem::take(&mut ps.layers);
         let reports = std::mem::take(&mut ps.reports);
-        if abandoned {
+        if let Some(kind) = abandon_kind {
             points[p] = Some(SweepPoint {
                 s: pts[p].s,
                 lambda_scale: pts[p].lambda_scale,
                 compressed_bytes: ps.bytes,
                 density: 0.0,
-                distortion: 0.0,
+                distortion: ps.dist,
                 abandoned: true,
+                abandon_kind: Some(kind),
                 container_hash: 0,
+                seeded: reports.iter().map(|r| r.seeded).sum(),
+                seed_hits: reports.iter().map(|r| r.seed_hits).sum(),
                 wall_s: ps.wall,
             });
         } else {
@@ -759,7 +968,10 @@ fn run_probes(
                 density: report.density,
                 distortion: report.layers.iter().map(|r| r.distortion).sum(),
                 abandoned: false,
+                abandon_kind: None,
                 container_hash: fnv1a(&ser),
+                seeded: report.layers.iter().map(|r| r.seeded).sum(),
+                seed_hits: report.layers.iter().map(|r| r.seed_hits).sum(),
                 wall_s: ps.wall,
             });
             let c = cols[p];
@@ -806,7 +1018,7 @@ pub fn sweep_grid(
         validate_lambda(p.lambda_scale)?;
     }
     let mut eng = SweepEngine::new(model, base, workers);
-    eng.run_round(grid, false);
+    eng.run_round(grid, AbandonMode::Off, false);
     eng.finish()
 }
 
@@ -832,11 +1044,12 @@ pub fn sweep_s(
 /// Coarse-to-fine sweep over the (S × λ) surface: probe
 /// `default_s_grid(opts.points)` across every λ-column, then refine each
 /// column around its own argmin until every integer between its probed
-/// neighbours has been tried. Refinement rounds run with each column's
-/// early-abandon budget when `opts.abandon` is set; the first (coarse)
-/// round always completes fully so the frontier report covers the whole
-/// range at every λ. `opts.exhaustive` probes all 257 S values per
-/// column instead.
+/// neighbours has been tried. Refinement rounds run under
+/// `opts.abandon` and — when `opts.warm_start` — seed their probes from
+/// their λ-column incumbents (the coarse round always completes fully,
+/// and runs cold since no incumbents exist yet, so the frontier report
+/// covers the whole range at every λ). `opts.exhaustive` probes all 257
+/// S values per column instead.
 pub fn sweep_s_auto(
     model: &Model,
     opts: &SweepOptions,
@@ -855,21 +1068,23 @@ pub fn sweep_s_auto(
     let mut eng = SweepEngine::new(model, base, opts.workers);
     if opts.exhaustive {
         let all: Vec<u32> = (0..=256).collect();
-        if opts.abandon {
+        if opts.abandon != AbandonMode::Off {
             // seed a coarse incumbent per column first so the full
-            // 257-point rounds run with budgets: most far-from-optimal
-            // probes then die within their first layers (still
-            // selection-neutral per column)
-            eng.run_round(&cross(&default_s_grid(opts.points)), false);
-            eng.run_round(&cross(&all), true);
+            // 257-point round runs with budgets (and, when warm, with
+            // coarse-incumbent seeds): in the argmin mode most
+            // far-from-optimal probes then die within their first
+            // layers; in the frontier mode only provably dominated ones
+            // do
+            eng.run_round(&cross(&default_s_grid(opts.points)), AbandonMode::Off, false);
+            eng.run_round(&cross(&all), opts.abandon, opts.warm_start);
         } else {
-            eng.run_round(&cross(&all), false);
+            eng.run_round(&cross(&all), AbandonMode::Off, false);
         }
         return eng.finish();
     }
     // at least the two endpoints, or refinement has no bracket to close
     // in on (--points 1 would otherwise silently probe S=0 alone)
-    eng.run_round(&cross(&default_s_grid(opts.points.max(2))), false);
+    eng.run_round(&cross(&default_s_grid(opts.points.max(2))), AbandonMode::Off, false);
     loop {
         let mut next: Vec<GridPoint> = Vec::new();
         for &l in &lambdas {
@@ -885,7 +1100,7 @@ pub fn sweep_s_auto(
         if next.is_empty() {
             break;
         }
-        eng.run_round(&next, opts.abandon);
+        eng.run_round(&next, opts.abandon, opts.warm_start);
     }
     eng.finish()
 }
@@ -1356,9 +1571,8 @@ mod tests {
         let opts = |workers| SweepOptions {
             points: 5,
             workers,
-            exhaustive: false,
-            abandon: true,
             lambdas: vec![0.01, 0.2],
+            ..Default::default()
         };
         let reference = sweep_s_auto(&model, &opts(1), &base).unwrap();
         assert_eq!(reference.stats.columns, 2);
@@ -1440,7 +1654,7 @@ mod tests {
             &SweepOptions {
                 points: 5,
                 workers: 1,
-                abandon: false,
+                abandon: AbandonMode::Off,
                 ..Default::default()
             },
             &base,
@@ -1450,7 +1664,7 @@ mod tests {
         for workers in [1usize, 2, 4, 8] {
             let res = sweep_s_auto(
                 &model,
-                &SweepOptions { points: 5, workers, abandon: true, ..Default::default() },
+                &SweepOptions { points: 5, workers, ..Default::default() },
                 &base,
             )
             .unwrap();
@@ -1491,10 +1705,13 @@ mod tests {
         // reference: the same schedule, fully completed
         let full = sweep_s(&model, &[0, 8, 16, 224, 240, 256], &base, 1).unwrap();
         let mut eng = SweepEngine::new(&model, &base, 4);
-        eng.run_round(&s_points(&[0, 8, 16], lam), false);
-        // far-from-optimal probes in a budgeted round: S≈256 payloads are
-        // well above the S≈0 incumbent, so they must be cut short
-        eng.run_round(&s_points(&[224, 240, 256], lam), true);
+        eng.run_round(&s_points(&[0, 8, 16], lam), AbandonMode::Off, false);
+        // far-from-optimal probes in a budgeted argmin-mode round: S≈256
+        // payloads are well above the S≈0 incumbent, so they must be cut
+        // short (this is the SelectionNeutral contract — the frontier
+        // mode would keep them alive as min-distortion candidates, see
+        // frontier_mode_keeps_low_distortion_probes_alive)
+        eng.run_round(&s_points(&[224, 240, 256], lam), AbandonMode::SelectionNeutral, false);
         let res = eng.finish().unwrap();
         assert_eq!(res.best.0.serialize(), full.best.0.serialize());
         assert!(
@@ -1504,6 +1721,14 @@ mod tests {
         );
         assert_eq!(res.stats.rounds, 2);
         assert_eq!(res.columns[0].abandoned, res.stats.probes_abandoned);
+        assert_eq!(
+            res.stats.abandoned_mid_layer + res.stats.abandoned_boundary,
+            res.stats.probes_abandoned,
+            "every abandoned probe records where it was cut"
+        );
+        for p in &res.points {
+            assert_eq!(p.abandoned, p.abandon_kind.is_some());
+        }
         // abandoned partials are lower bounds that already exceed the
         // payload budget story: they must never be the minimum
         let best_bytes = res.best.1.compressed_bytes;
@@ -1517,13 +1742,157 @@ mod tests {
     }
 
     #[test]
+    fn frontier_mode_keeps_low_distortion_probes_alive() {
+        // the frontier-preserving conjunction: the very probes the
+        // argmin mode kills (fine-grid, oversized, LOW distortion) are
+        // frontier candidates — nothing completed dominates them on the
+        // distortion axis, so they must run to completion and land on
+        // the frontier.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let lam = base.lambda_scale;
+        let mut eng = SweepEngine::new(&model, &base, 4);
+        eng.run_round(&s_points(&[0, 8, 16], lam), AbandonMode::Off, false);
+        eng.run_round(&s_points(&[224, 240, 256], lam), AbandonMode::FrontierPreserving, false);
+        let res = eng.finish().unwrap();
+        for p in res.points.iter().filter(|p| p.s >= 224) {
+            assert!(
+                !p.abandoned,
+                "S={}: a min-distortion frontier candidate was abandoned",
+                p.s
+            );
+        }
+        // ...and the min-distortion extreme sits on the frontier
+        let min_dist =
+            res.points.iter().map(|p| p.distortion).fold(f64::INFINITY, f64::min);
+        assert!(res.frontier.iter().any(|&i| res.points[i].distortion == min_dist));
+    }
+
+    #[test]
+    fn frontier_preserving_abandon_matches_no_abandon_frontier() {
+        // the tentpole acceptance property: with dominance-based
+        // abandonment the Pareto frontier — not just the argmins — is
+        // identical to the no-abandon sweep, at every worker count, and
+        // every abandoned probe's partial record really is strictly
+        // dominated by some completed point.
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let lambdas = vec![0.0f32, 0.05, 0.5];
+        let reference = sweep_s_auto(
+            &model,
+            &SweepOptions {
+                points: 5,
+                workers: 1,
+                abandon: AbandonMode::Off,
+                lambdas: lambdas.clone(),
+                ..Default::default()
+            },
+            &base,
+        )
+        .unwrap();
+        let ref_frontier: Vec<_> = reference
+            .frontier
+            .iter()
+            .map(|&i| {
+                let p = &reference.points[i];
+                (p.s, p.lambda_scale.to_bits(), p.compressed_bytes, p.distortion.to_bits())
+            })
+            .collect();
+        for workers in [1usize, 4] {
+            let res = sweep_s_auto(
+                &model,
+                &SweepOptions {
+                    points: 5,
+                    workers,
+                    abandon: AbandonMode::FrontierPreserving,
+                    lambdas: lambdas.clone(),
+                    ..Default::default()
+                },
+                &base,
+            )
+            .unwrap();
+            let frontier: Vec<_> = res
+                .frontier
+                .iter()
+                .map(|&i| {
+                    let p = &res.points[i];
+                    (p.s, p.lambda_scale.to_bits(), p.compressed_bytes, p.distortion.to_bits())
+                })
+                .collect();
+            assert_eq!(frontier, ref_frontier, "workers={workers}");
+            assert_eq!(res.best.0.serialize(), reference.best.0.serialize());
+            // per-column argmins survive abandonment too
+            assert_eq!(res.columns.len(), reference.columns.len());
+            for (a, b) in res.columns.iter().zip(&reference.columns) {
+                assert_eq!(a.lambda_scale.to_bits(), b.lambda_scale.to_bits());
+                assert_eq!((a.s, a.bytes), (b.s, b.bytes), "workers={workers}");
+            }
+            // abandoned ⇒ strictly dominated partials (both axes)
+            for p in res.points.iter().filter(|p| p.abandoned) {
+                assert!(
+                    res.points.iter().filter(|q| !q.abandoned).any(|q| {
+                        q.compressed_bytes < p.compressed_bytes + min_overhead(&model)
+                            && q.distortion < p.distortion
+                    }),
+                    "abandoned probe (S={}, λ={}) is not provably dominated",
+                    p.s,
+                    p.lambda_scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_sweep_is_byte_identical_to_cold() {
+        // satellite: warm-started refinement sweeps must produce
+        // byte-identical containers (FNV per-point fingerprints + the
+        // winner's full bytes) to the cold sweep at worker counts
+        // {1, 2, 8}, while actually seeding (the refinement rounds all
+        // run with column incumbents available).
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let mk = |workers, warm| SweepOptions {
+            points: 5,
+            workers,
+            warm_start: warm,
+            lambdas: vec![0.01, 0.2],
+            ..Default::default()
+        };
+        let cold = sweep_s_auto(&model, &mk(1, false), &base).unwrap();
+        assert_eq!(cold.stats.seeded_weights, 0, "cold sweep must not seed");
+        for workers in [1usize, 2, 8] {
+            let warm = sweep_s_auto(&model, &mk(workers, true), &base).unwrap();
+            assert!(
+                warm.stats.seeded_weights > 0,
+                "workers={workers}: warm sweep never seeded a probe"
+            );
+            assert!(warm.stats.seed_hits <= warm.stats.seeded_weights);
+            // neighbouring-Δ seeds: the hit rate should be high; assert
+            // a conservative floor so a silently broken rescale shows up
+            assert!(
+                warm.stats.seed_hit_rate() > 0.5,
+                "workers={workers}: seed hit rate {:.3}",
+                warm.stats.seed_hit_rate()
+            );
+            assert_eq!(warm.best.0.serialize(), cold.best.0.serialize());
+            assert_eq!(warm.points.len(), cold.points.len());
+            for (a, b) in cold.points.iter().zip(&warm.points) {
+                // identical bytes, hashes, distortions — seed stats are
+                // the only fields allowed to differ between warm/cold
+                assert_eq!(point_fields(a), point_fields(b), "workers={workers}");
+            }
+            assert_eq!(warm.frontier, cold.frontier, "workers={workers}");
+        }
+    }
+
+    #[test]
     fn refinement_beats_or_matches_coarse_grid() {
         let model = super::super::pipeline::tests::toy_model_pub();
         let base = CompressionSpec::default();
         let coarse = sweep_s(&model, &default_s_grid(5), &base, 1).unwrap();
         let refined = sweep_s_auto(
             &model,
-            &SweepOptions { points: 5, workers: 2, abandon: true, ..Default::default() },
+            &SweepOptions { points: 5, workers: 2, ..Default::default() },
             &base,
         )
         .unwrap();
@@ -1547,7 +1916,7 @@ mod tests {
                 points: 9,
                 workers: 8,
                 exhaustive: true,
-                abandon: false,
+                abandon: AbandonMode::Off,
                 ..Default::default()
             },
             &base,
@@ -1555,15 +1924,15 @@ mod tests {
         .unwrap();
         assert_eq!(res.stats.probes_total, 257);
         assert_eq!(res.stats.rounds, 1);
-        // exhaustive + abandon: same winner, same 257-point coverage,
-        // via a seeded coarse round + one budgeted full round
+        // exhaustive + argmin-mode abandon: same winner, same 257-point
+        // coverage, via a seeded coarse round + one budgeted full round
         let ex_ab = sweep_s_auto(
             &model,
             &SweepOptions {
                 points: 9,
                 workers: 4,
                 exhaustive: true,
-                abandon: true,
+                abandon: AbandonMode::SelectionNeutral,
                 ..Default::default()
             },
             &base,
@@ -1580,7 +1949,6 @@ mod tests {
                 points: 9,
                 workers: 8,
                 exhaustive: false,
-                abandon: true,
                 ..Default::default()
             },
             &base,
@@ -1633,7 +2001,7 @@ mod tests {
         let model = super::super::pipeline::tests::toy_model_pub();
         let res = sweep_s_auto(
             &model,
-            &SweepOptions { points: 1, workers: 2, abandon: true, ..Default::default() },
+            &SweepOptions { points: 1, workers: 2, ..Default::default() },
             &CompressionSpec::default(),
         )
         .unwrap();

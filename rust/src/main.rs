@@ -310,11 +310,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         } else {
             vec![spec.lambda_scale]
         };
+    if args.has("no-abandon") && args.has("abandon-argmin") {
+        bail!("--no-abandon and --abandon-argmin are mutually exclusive");
+    }
+    let abandon = if args.has("no-abandon") {
+        deepcabac::coordinator::AbandonMode::Off
+    } else if args.has("abandon-argmin") {
+        deepcabac::coordinator::AbandonMode::SelectionNeutral
+    } else {
+        deepcabac::coordinator::AbandonMode::FrontierPreserving
+    };
+    if args.has("cold") && args.has("warm-start") {
+        bail!("--cold and --warm-start are mutually exclusive");
+    }
     let opts = SweepOptions {
         points,
         workers,
         exhaustive: args.has("sweep-exhaustive"),
-        abandon: !args.has("no-abandon"),
+        abandon,
+        warm_start: !args.has("cold"), // --warm-start is the default
         lambdas,
     };
     // validate frontier output selection BEFORE the (potentially long)
@@ -365,7 +379,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let best = res.best_point;
     println!(
         "{name}: best (S={}, λ={}) -> {} ({:.2}% of original, x{:.1}); \
-         {} probes / {} λ-columns in {} rounds, {} abandoned, \
+         {} probes / {} λ-columns in {} rounds, {} abandoned ({} mode), \
          frontier {} points, {:.2}s ({} workers)",
         best.s,
         best.lambda_scale,
@@ -376,10 +390,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         res.stats.columns,
         res.stats.rounds,
         res.stats.probes_abandoned,
+        opts.abandon.name(),
         res.frontier.len(),
         res.stats.wall_s,
         workers,
     );
+    if opts.warm_start && res.stats.seeded_weights > 0 {
+        println!(
+            "warm start: {} of {} seeded weight scans hit ({:.1}%)",
+            res.stats.seed_hits,
+            res.stats.seeded_weights,
+            res.stats.seed_hit_rate() * 100.0,
+        );
+    }
     for c in &res.columns {
         println!(
             "  λ={:<8} best S={:>3} -> {} ({} probes, {} abandoned)",
@@ -454,12 +477,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     format!("{:.6}", p.density),
                     format!("{:.6e}", p.distortion),
                     (p.abandoned as u8).to_string(),
+                    p.seeded.to_string(),
+                    p.seed_hits.to_string(),
                     format!("{:.3}", p.wall_s * 1e3),
                 ]
             })
             .collect();
         let csv = deepcabac::report::to_csv(
-            &["S", "lambda_scale", "bytes", "density", "distortion", "abandoned", "wall_ms"],
+            &[
+                "S", "lambda_scale", "bytes", "density", "distortion", "abandoned",
+                "seeded", "seed_hits", "wall_ms",
+            ],
             &rows,
         );
         std::fs::write(csv_path, &csv)?;
@@ -534,6 +562,12 @@ fn sweep_to_json(
                 ("density", json::num(p.density)),
                 ("distortion", json::num(p.distortion)),
                 ("abandoned", Json::Bool(p.abandoned)),
+                (
+                    "abandon_reason",
+                    p.abandon_kind.map(|k| json::s(k.name())).unwrap_or(Json::Null),
+                ),
+                ("seeded", json::num(p.seeded as f64)),
+                ("seed_hits", json::num(p.seed_hits as f64)),
                 ("wall_ms", json::num(p.wall_s * 1e3)),
             ])
         })
@@ -575,12 +609,18 @@ fn sweep_to_json(
         ("workers", json::num(opts.workers as f64)),
         ("points_per_round", json::num(opts.points as f64)),
         ("exhaustive", Json::Bool(opts.exhaustive)),
-        ("abandon", Json::Bool(opts.abandon)),
+        ("abandon_mode", json::s(opts.abandon.name())),
+        ("warm_start", Json::Bool(opts.warm_start)),
         ("lambdas", json::arr(res.columns.iter().map(|c| json::num(c.lambda_scale as f64)).collect())),
         ("lambda_columns", json::num(res.stats.columns as f64)),
         ("rounds", json::num(res.stats.rounds as f64)),
         ("probes_total", json::num(res.stats.probes_total as f64)),
         ("probes_abandoned", json::num(res.stats.probes_abandoned as f64)),
+        ("abandoned_mid_layer", json::num(res.stats.abandoned_mid_layer as f64)),
+        ("abandoned_boundary", json::num(res.stats.abandoned_boundary as f64)),
+        ("seeded_weights", json::num(res.stats.seeded_weights as f64)),
+        ("seed_hits", json::num(res.stats.seed_hits as f64)),
+        ("seed_hit_rate", json::num(res.stats.seed_hit_rate())),
         ("best_s", json::num(best.s as f64)),
         ("best_lambda", json::num(best.lambda_scale as f64)),
         ("best_bytes", json::num(res.best.1.compressed_bytes as f64)),

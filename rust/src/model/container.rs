@@ -1,4 +1,9 @@
-//! The `DCBC` compressed-model container format (DESIGN.md §6).
+//! The `DCBC` compressed-model container format.
+//!
+//! The normative wire specification — field-by-field layout, hostile
+//! input guards, and the invariants the serving stack relies on — is
+//! `docs/FORMAT.md` at the repository root; this module is its single
+//! implementation. Layout summary:
 //!
 //! ```text
 //! file   := "DCBC" u8 version | str name | varint n_layers | layer*

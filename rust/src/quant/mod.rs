@@ -14,7 +14,9 @@ pub mod grid;
 pub mod rd;
 
 pub use grid::QuantGrid;
-pub use rd::{QuantResult, RdQuantizer, RdParams};
+pub use rd::{
+    AbandonedAt, DominanceFrontier, ProbeBudget, QuantResult, RdParams, RdQuantizer, ScanSeed,
+};
 
 /// Decoupled baseline: weighted nearest-neighbour quantization onto the
 /// grid (λ = 0 in eq. 1 — distortion only).

@@ -29,6 +29,40 @@
 //! large λ the pruned argmin diverged from the exhaustive one. The
 //! property tests compare against the exhaustive scan across the full λ
 //! range, including the `nearest ≫ old-window` regime.
+//!
+//! **Warm-start seeding.** A sweep-engine refinement probe differs from
+//! an already-probed neighbour only in the grid step Δ (< 1% between
+//! neighbouring S), so most per-weight argmins are unchanged. The
+//! seeded scan ([`ScanSeed`]) rescales the neighbour's chosen level to
+//! the probe's grid, evaluates it **first** (one exact cost query), and
+//! installs it as the scan's incumbent. The outward scan then runs
+//! unchanged; with a good seed both frontiers close almost immediately
+//! (the incumbent already carries the final best cost), and with a bad
+//! seed the scan simply proceeds as if unseeded. This is *exact*, not
+//! heuristic: the true argmin has distortion ≤ its own cost ≤ the seed's
+//! cost, so the frontier that contains it cannot close before reaching
+//! it, and the tie-break (smaller level wins among equal costs) is a
+//! total order independent of visit order — the chosen level, and
+//! therefore every downstream context update and payload byte, is
+//! **identical** to the unseeded scan. (A seed whose f32 cost overflows
+//! to ∞ is discarded rather than installed, so even that degenerate
+//! corner matches the cold path bit for bit.)
+//!
+//! **2-D dominance budget.** The budgeted scan's abandon predicate
+//! ([`ProbeBudget`]) has two conjuncts: the payload leg (accumulated
+//! payload exceeds the probe's byte budget — the λ-column-incumbent
+//! bound that keeps abandonment argmin-neutral) and, when a
+//! [`DominanceFrontier`] is supplied, the dominance leg: some completed
+//! grid point must have **strictly** fewer serialized bytes *and*
+//! strictly less distortion than the probe's running partial sums. Both
+//! running sums are monotone lower bounds on the probe's final values
+//! (payload bytes only grow; distortion terms are ≥ 0 and f64 addition
+//! of non-negatives is monotone), so an abandoned probe's finished
+//! point would provably have been strictly Pareto-dominated — the
+//! frontier of completed points equals the frontier of the full
+//! no-abandon surface. Without a staircase the payload leg alone
+//! decides (the legacy selection-neutral budget, still used by the
+//! per-layer sweep, which has no distortion frontier to preserve).
 
 use super::grid::QuantGrid;
 use crate::codec::{CodecConfig, LevelEncoder, RateEstimator};
@@ -51,7 +85,137 @@ impl Default for RdParams {
 }
 
 /// How often (in weights) the budgeted scan polls the abandon condition.
-const BUDGET_CHECK_EVERY: usize = 512;
+pub const BUDGET_CHECK_EVERY: usize = 512;
+
+/// Staircase of completed sweep points in the (serialized bytes,
+/// distortion) plane, queried by the budgeted scan's dominance leg.
+///
+/// Entries are keyed by `serialized − min_overhead` so a probe can
+/// compare its accumulated **payload** bytes directly: for any container
+/// the probe could still produce, `final_serialized ≥ payload_so_far +
+/// min_overhead`, hence `q.serialized − min_overhead < payload_so_far`
+/// implies `q.serialized < final_serialized`. `min_dist[i]` is the
+/// prefix-minimum distortion over all entries with key ≤ `bytes[i]`, so
+/// one binary search answers "does any completed point beat these
+/// partial sums on both axes, strictly?".
+#[derive(Debug, Clone, Default)]
+pub struct DominanceFrontier {
+    /// `q.serialized − min_overhead`, ascending.
+    bytes: Vec<usize>,
+    /// Prefix-minimum of the entries' distortions.
+    min_dist: Vec<f64>,
+}
+
+impl DominanceFrontier {
+    /// Build from completed points' `(serialized_bytes, distortion)`
+    /// pairs; `min_overhead` is the caller's provable lower bound on
+    /// container overhead (see the sweep engine's `min_overhead`).
+    pub fn from_completed(
+        points: impl IntoIterator<Item = (usize, f64)>,
+        min_overhead: usize,
+    ) -> Self {
+        let mut pts: Vec<(usize, f64)> = points
+            .into_iter()
+            .map(|(b, d)| (b.saturating_sub(min_overhead), d))
+            .collect();
+        pts.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        let mut bytes = Vec::with_capacity(pts.len());
+        let mut min_dist = Vec::with_capacity(pts.len());
+        let mut run = f64::INFINITY;
+        for (b, d) in pts {
+            run = run.min(d);
+            bytes.push(b);
+            min_dist.push(run);
+        }
+        Self { bytes, min_dist }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// True iff some completed point has strictly fewer serialized bytes
+    /// than any container extending `payload_lb` payload bytes could
+    /// have, **and** strictly less distortion than `dist_lb`. Both
+    /// arguments are monotone lower bounds on the probe's final values,
+    /// so `true` proves the finished probe would be strictly dominated.
+    #[inline]
+    pub fn dominates(&self, payload_lb: usize, dist_lb: f64) -> bool {
+        let k = self.bytes.partition_point(|&b| b < payload_lb);
+        k > 0 && self.min_dist[k - 1] < dist_lb
+    }
+}
+
+/// The exact running totals an abandoned probe was cut at — the values
+/// [`ProbeBudget::check`] evaluated, base sums included. Recorded on the
+/// abandoned sweep point so "this partial is provably dominated / over
+/// budget" stays checkable from the report alone.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AbandonedAt {
+    /// Payload-byte lower bound at the cut (base + buffered).
+    pub bytes: usize,
+    /// Distortion lower bound at the cut (base + in-scan).
+    pub distortion: f64,
+}
+
+/// The budgeted scan's abandon predicate (see the module docs): the
+/// payload leg alone when `dominance` is `None` (legacy
+/// selection-neutral budget), the conjunction of payload leg and strict
+/// Pareto dominance when a staircase is supplied (frontier-preserving).
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeBudget<'a> {
+    /// Payload bytes accumulated by earlier layers/chunks of this probe.
+    pub base_bytes: usize,
+    /// Distortion accumulated by earlier layers/chunks of this probe.
+    pub base_distortion: f64,
+    /// Payload budget (λ-column incumbent bound); `usize::MAX` disables
+    /// abandonment entirely.
+    pub budget_bytes: usize,
+    /// Completed-point staircase for the dominance leg.
+    pub dominance: Option<&'a DominanceFrontier>,
+}
+
+impl ProbeBudget<'_> {
+    /// Never abandons — the plain-encode configuration.
+    pub const UNBOUNDED: ProbeBudget<'static> = ProbeBudget {
+        base_bytes: 0,
+        base_distortion: 0.0,
+        budget_bytes: usize::MAX,
+        dominance: None,
+    };
+
+    /// Abandon decision for the running totals `base + in-layer`;
+    /// `Some` carries the exact evaluated totals. Shared by the in-scan
+    /// poll and the sweep engine's layer-boundary check so both evaluate
+    /// exactly the same predicate.
+    #[inline]
+    pub fn check(&self, bytes_in_layer: usize, dist_in_layer: f64) -> Option<AbandonedAt> {
+        let bytes = self.base_bytes.saturating_add(bytes_in_layer);
+        if bytes <= self.budget_bytes {
+            return None;
+        }
+        let distortion = self.base_distortion + dist_in_layer;
+        let cut = match self.dominance {
+            None => true,
+            Some(f) => f.dominates(bytes, distortion),
+        };
+        cut.then_some(AbandonedAt { bytes, distortion })
+    }
+}
+
+/// Warm-start seed for one tensor scan: the levels an already-probed
+/// neighbouring grid point chose, plus the grid-step ratio
+/// `Δ_seed / Δ_probe` that maps them onto the probe's grid.
+#[derive(Debug, Clone, Copy)]
+pub struct ScanSeed<'a> {
+    pub levels: &'a [i32],
+    /// `Δ_seed / Δ_probe` — a seed level k lands near `k · scale` on the
+    /// probe's grid.
+    pub scale: f64,
+}
 
 #[derive(Debug)]
 pub struct QuantResult {
@@ -61,6 +225,11 @@ pub struct QuantResult {
     pub distortion: f64,
     /// Estimated rate in bits (actual payload may differ by ≤ ~2%).
     pub est_bits: f64,
+    /// Weights whose warm-start seed candidate was the chosen level
+    /// (0 for unseeded scans).
+    pub seed_hits: usize,
+    /// Weights scanned with a warm-start seed (0 for unseeded scans).
+    pub seeded: usize,
 }
 
 pub struct RdQuantizer {
@@ -87,14 +256,14 @@ impl RdQuantizer {
             .expect("an unbounded budget never abandons")
     }
 
-    /// [`Self::quantize_encode`] with the sweep engine's early-abandon
-    /// budget threaded through: every [`BUDGET_CHECK_EVERY`] weights the
-    /// scan compares `base_bytes` (payload already accumulated by earlier
-    /// layers/chunks of the same probe) plus the bytes buffered so far
-    /// against `budget_bytes`, and returns `None` the moment the sum
-    /// exceeds the budget. The buffered byte count is a monotone lower
-    /// bound on the final payload size, so an abandoned probe could never
-    /// have produced a payload within budget — abandonment is
+    /// [`Self::quantize_encode`] with the legacy byte-only abandon
+    /// budget: every [`BUDGET_CHECK_EVERY`] weights the scan compares
+    /// `base_bytes` (payload already accumulated by earlier layers or
+    /// chunks of the same probe) plus the bytes buffered so far against
+    /// `budget_bytes`, and returns `None` the moment the sum exceeds the
+    /// budget. The buffered byte count is a monotone lower bound on the
+    /// final payload size, so an abandoned probe could never have
+    /// produced a payload within budget — abandonment is
     /// selection-neutral by construction. A non-abandoned result is
     /// byte-identical to the unbudgeted encode.
     pub fn quantize_encode_budgeted(
@@ -106,26 +275,72 @@ impl RdQuantizer {
         base_bytes: usize,
         budget_bytes: usize,
     ) -> Option<QuantResult> {
+        let budget = ProbeBudget {
+            base_bytes,
+            base_distortion: 0.0,
+            budget_bytes,
+            dominance: None,
+        };
+        self.quantize_encode_probe(weights, etas, grid, params, &budget, None).ok()
+    }
+
+    /// The full sweep-probe scan: [`Self::quantize_encode`] with the 2-D
+    /// abandon predicate of `budget` polled every [`BUDGET_CHECK_EVERY`]
+    /// weights (`Err` on abandonment, carrying the exact cut totals) and
+    /// an optional warm-start `seed` (see the module docs; the output is
+    /// byte-identical to the unseeded scan either way — a seed only
+    /// changes how fast the per-weight argmin certificate closes, plus
+    /// the `seed_hits`/`seeded` counters in the result).
+    pub fn quantize_encode_probe(
+        &self,
+        weights: &[f32],
+        etas: &[f32],
+        grid: &QuantGrid,
+        params: RdParams,
+        budget: &ProbeBudget,
+        seed: Option<ScanSeed>,
+    ) -> Result<QuantResult, AbandonedAt> {
         assert_eq!(weights.len(), etas.len());
+        if let Some(s) = &seed {
+            assert_eq!(s.levels.len(), weights.len(), "seed/weight length mismatch");
+        }
         let cfg = self.cfg;
         let mut enc = LevelEncoder::with_capacity(cfg, weights.len() / 4 + 16);
         let mut levels = Vec::with_capacity(weights.len());
         let mut distortion = 0.0f64;
         let mut est_bits = 0.0f64;
+        let (mut seed_hits, mut seeded) = (0usize, 0usize);
 
         for (i, (&w, &eta)) in weights.iter().zip(etas).enumerate() {
-            if i % BUDGET_CHECK_EVERY == 0
-                && base_bytes.saturating_add(enc.bytes_buffered()) > budget_bytes
-            {
-                return None;
+            if i % BUDGET_CHECK_EVERY == 0 {
+                if let Some(cut) = budget.check(enc.bytes_buffered(), distortion) {
+                    return Err(cut);
+                }
             }
-            let (level, cost_d, cost_r) = self.pick_level(&mut enc, w, eta, grid, params);
+            let seed_cand = seed.as_ref().map(|s| {
+                ((s.levels[i] as f64 * s.scale).round() as i64)
+                    .clamp(-(grid.max_level as i64), grid.max_level as i64)
+                    as i32
+            });
+            let (level, cost_d, cost_r) =
+                self.pick_level(&mut enc, w, eta, grid, params, seed_cand);
+            if let Some(c) = seed_cand {
+                seeded += 1;
+                seed_hits += usize::from(level == c);
+            }
             distortion += cost_d as f64;
             est_bits += cost_r as f64;
             enc.encode_level(level);
             levels.push(level);
         }
-        Some(QuantResult { levels, payload: enc.finish(), distortion, est_bits })
+        Ok(QuantResult {
+            levels,
+            payload: enc.finish(),
+            distortion,
+            est_bits,
+            seed_hits,
+            seeded,
+        })
     }
 
     /// Choose the RD-optimal level for one weight under the encoder's
@@ -142,6 +357,10 @@ impl RdQuantizer {
     ///
     /// Rate queries go through the encoder's memoized estimator
     /// (bit-identical to `RateEstimator::level_bits`, O(1) amortized).
+    ///
+    /// `seed`: optional warm-start candidate evaluated first and
+    /// installed as the incumbent (finite costs only) — provably
+    /// outcome-neutral, see the module docs.
     #[inline]
     fn pick_level(
         &self,
@@ -150,6 +369,7 @@ impl RdQuantizer {
         eta: f32,
         grid: &QuantGrid,
         params: RdParams,
+        seed: Option<i32>,
     ) -> (i32, f32, f32) {
         let lambda = params.lambda.max(0.0);
         let max_l = grid.max_level;
@@ -169,6 +389,18 @@ impl RdQuantizer {
         let mut up_open = up <= max_l;
 
         let mut best = (0i32, f32::INFINITY, 0.0f32, 0.0f32); // (level, cost, d, r)
+        if let Some(s) = seed {
+            let dq = w - grid.value(s);
+            let d = eta * dq * dq;
+            let r = enc.estimate_level_bits(s);
+            let cost = d + lambda * r;
+            // An ∞ seed cost would beat the cold path's ∞-cost tie-break
+            // guard below; skip it so warm stays bit-identical to cold
+            // even when every candidate's f32 cost overflows.
+            if cost < f32::INFINITY {
+                best = (s, cost, d, r);
+            }
+        }
         while down_open || up_open {
             // expand the frontier closer to the vertex (ties: down first,
             // so equidistant pairs are seen smaller-level first)
@@ -240,7 +472,14 @@ impl RdQuantizer {
             enc.encode_level(best.0);
             levels.push(best.0);
         }
-        QuantResult { levels, payload: enc.finish(), distortion, est_bits }
+        QuantResult {
+            levels,
+            payload: enc.finish(),
+            distortion,
+            est_bits,
+            seed_hits: 0,
+            seeded: 0,
+        }
     }
 }
 
@@ -401,6 +640,198 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn seeded_scan_identical_even_with_adversarial_seed() {
+        // satellite (warm-start forced fallback): a seed that is wrong
+        // for EVERY weight must not change a single byte — the seeded
+        // incumbent only tightens the scan's certificate, never its
+        // answer. Exercised with the true levels (all hits), shifted
+        // levels, saturated levels, and a rescaled-grid seed.
+        let mut rng = SplitMix64::new(17);
+        let (w, eta) = gen_tensor(&mut rng, 6_000, 0.8);
+        let grid = QuantGrid::from_stats(0.6, 0.015, 48);
+        let q = RdQuantizer::new(CodecConfig::default());
+        for lambda in [0.0f32, 1e-3, 0.5] {
+            let params = RdParams { lambda };
+            let cold = q.quantize_encode(&w, &eta, &grid, params);
+            assert_eq!((cold.seed_hits, cold.seeded), (0, 0));
+
+            // perfect seed: everything hits, bytes identical
+            let seed = ScanSeed { levels: &cold.levels, scale: 1.0 };
+            let warm = q
+                .quantize_encode_probe(&w, &eta, &grid, params, &ProbeBudget::UNBOUNDED, Some(seed))
+                .unwrap();
+            assert_eq!(warm.payload, cold.payload, "λ={lambda}");
+            assert_eq!(warm.levels, cold.levels, "λ={lambda}");
+            assert_eq!(warm.seeded, w.len());
+            assert_eq!(warm.seed_hits, w.len(), "λ={lambda}: perfect seed must all-hit");
+
+            // adversarial seeds: wrong for every weight, still identical
+            let shifted: Vec<i32> = cold
+                .levels
+                .iter()
+                .map(|&l| (l + 3).min(grid.max_level))
+                .collect();
+            let saturated = vec![grid.max_level; w.len()];
+            for bad in [&shifted, &saturated] {
+                let seed = ScanSeed { levels: bad, scale: 1.0 };
+                let warm = q
+                    .quantize_encode_probe(
+                        &w, &eta, &grid, params, &ProbeBudget::UNBOUNDED, Some(seed),
+                    )
+                    .unwrap();
+                assert_eq!(warm.payload, cold.payload, "λ={lambda}");
+                assert_eq!(warm.levels, cold.levels, "λ={lambda}");
+            }
+
+            // neighbouring-grid seed: levels from S=47 rescaled onto S=48
+            let near_grid = QuantGrid::from_stats(0.6, 0.015, 47);
+            let near = q.quantize_encode(&w, &eta, &near_grid, params);
+            let seed = ScanSeed {
+                levels: &near.levels,
+                scale: near_grid.delta as f64 / grid.delta as f64,
+            };
+            let warm = q
+                .quantize_encode_probe(&w, &eta, &grid, params, &ProbeBudget::UNBOUNDED, Some(seed))
+                .unwrap();
+            assert_eq!(warm.payload, cold.payload, "λ={lambda}");
+            // the whole point of warm starting: neighbouring Δ differs by
+            // < 1%, so the vast majority of seeded argmins are unchanged
+            // (conservative 80% floor — a broken rescale lands near 0%)
+            assert!(
+                warm.seed_hits * 5 >= warm.seeded * 4,
+                "λ={lambda}: neighbour seed hit rate {}/{}",
+                warm.seed_hits,
+                warm.seeded
+            );
+        }
+    }
+
+    #[test]
+    fn property_seeded_scan_matches_cold() {
+        // random tensors × random grids × random (even garbage) seeds:
+        // the seeded scan is byte-identical to the cold scan everywhere.
+        ptest::check(
+            ptest::Config { cases: 24, max_size: 400, ..Default::default() },
+            "rd-seeded-cold-parity",
+            |g| {
+                let n = g.usize_in(1, g.size.max(1));
+                let mut rng = SplitMix64::new(g.rng.next_u64());
+                let (w, eta) = gen_tensor(&mut rng, n, rng.next_f64());
+                let s = rng.below(257) as u32;
+                let grid = QuantGrid::from_stats(0.2 + rng.next_f32(), 0.001 + 0.05 * rng.next_f32(), s);
+                let lambda = if rng.next_f64() < 0.2 {
+                    0.0
+                } else {
+                    (10.0f64.powf(rng.next_f64() * 6.0 - 4.0)) as f32
+                };
+                let params = RdParams { lambda };
+                let q = RdQuantizer::new(CodecConfig::default());
+                let cold = q.quantize_encode(&w, &eta, &grid, params);
+                let seed_levels: Vec<i32> = match rng.below(3) {
+                    0 => cold.levels.clone(), // perfect
+                    1 => (0..n) // garbage
+                        .map(|_| rng.below(2 * grid.max_level.max(1) as u64 + 1) as i32
+                            - grid.max_level)
+                        .collect(),
+                    _ => {
+                        // a neighbouring grid point's real levels
+                        let ns = if s == 256 { 255 } else { s + 1 };
+                        let ngrid = QuantGrid::from_stats(
+                            0.2 + rng.next_f32(),
+                            0.001 + 0.05 * rng.next_f32(),
+                            ns,
+                        );
+                        q.quantize_encode(&w, &eta, &ngrid, params).levels
+                    }
+                };
+                let scale = 0.5 + rng.next_f64(); // exercise rescale+clamp too
+                let warm = q
+                    .quantize_encode_probe(
+                        &w,
+                        &eta,
+                        &grid,
+                        params,
+                        &ProbeBudget::UNBOUNDED,
+                        Some(ScanSeed { levels: &seed_levels, scale }),
+                    )
+                    .expect("unbounded budget never abandons");
+                if warm.levels != cold.levels {
+                    let i = warm
+                        .levels
+                        .iter()
+                        .zip(&cold.levels)
+                        .position(|(a, b)| a != b)
+                        .unwrap();
+                    return Err(format!(
+                        "λ={lambda} S={s}: seeded diverges at {i}: {} vs {} (seed {})",
+                        warm.levels[i], cold.levels[i], seed_levels[i]
+                    ));
+                }
+                if warm.payload != cold.payload {
+                    return Err(format!("λ={lambda} S={s}: payload bytes diverge"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dominance_frontier_staircase_queries() {
+        // staircase vs the brute-force definition, including the strict
+        // inequalities on both axes and the min_overhead shift
+        let pts = [(100usize, 5.0f64), (80, 9.0), (120, 3.0), (80, 7.5)];
+        let oh = 10;
+        let f = DominanceFrontier::from_completed(pts.iter().copied(), oh);
+        assert!(!f.is_empty());
+        let brute = |payload_lb: usize, dist_lb: f64| {
+            pts.iter().any(|&(b, d)| b - oh < payload_lb && d < dist_lb)
+        };
+        for payload in [0usize, 60, 69, 70, 71, 89, 90, 91, 109, 110, 111, 500] {
+            for dist in [0.0f64, 2.9, 3.0, 3.1, 5.0, 7.4, 7.6, 9.0, 9.1, 50.0] {
+                assert_eq!(
+                    f.dominates(payload, dist),
+                    brute(payload, dist),
+                    "payload={payload} dist={dist}"
+                );
+            }
+        }
+        // empty staircase never dominates
+        let empty = DominanceFrontier::from_completed(std::iter::empty(), 0);
+        assert!(empty.is_empty());
+        assert!(!empty.dominates(usize::MAX - 1, f64::INFINITY));
+    }
+
+    #[test]
+    fn probe_budget_conjunction_semantics() {
+        // byte leg alone (legacy) vs byte ∧ dominance (frontier-preserving)
+        let f = DominanceFrontier::from_completed([(100usize, 5.0f64)], 0);
+        let byte_only =
+            ProbeBudget { base_bytes: 0, base_distortion: 0.0, budget_bytes: 50, dominance: None };
+        assert_eq!(byte_only.check(51, 0.25), Some(AbandonedAt { bytes: 51, distortion: 0.25 }));
+        assert_eq!(byte_only.check(50, 1e9), None);
+        let guarded = ProbeBudget {
+            base_bytes: 40,
+            base_distortion: 2.0,
+            budget_bytes: 50,
+            dominance: Some(&f),
+        };
+        // over budget but NOT dominated (distortion lower bound below the
+        // completed point's): a frontier candidate, must survive
+        assert!(guarded.check(110, 2.0).is_none());
+        // over budget AND strictly dominated on both axes (base 2.0 +
+        // in-layer 4.0 = 6.0 > 5.0, bytes 150 > 100): abandoned, and the
+        // cut record carries the exact evaluated totals
+        assert_eq!(
+            guarded.check(110, 4.0),
+            Some(AbandonedAt { bytes: 150, distortion: 6.0 })
+        );
+        // under budget: never abandoned regardless of dominance
+        assert!(guarded.check(5, 1e9).is_none());
+        // equal distortion is NOT strict dominance (2.0 + 3.0 == 5.0)
+        assert!(guarded.check(110, 3.0).is_none());
     }
 
     #[test]

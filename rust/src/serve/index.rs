@@ -5,7 +5,9 @@
 //! payload, each chunk inside it, and the raw bias bytes. A client can
 //! then fetch and decode a single layer — or a single chunk — without
 //! touching the rest of the file; the server's `Range` support and the
-//! decoded-layer cache are both built on this.
+//! decoded-layer cache are both built on this. The index exists because
+//! the `.dcbc` format guarantees header-only locatability — invariant 1
+//! of `docs/FORMAT.md` §"Invariants the serving stack relies on".
 
 use crate::codec::{decode_levels, CodecConfig};
 use crate::model::container::{

@@ -4,7 +4,9 @@
 //! many resource-constrained clients (paper §1; arXiv:1907.11900 frames
 //! it explicitly as a transmission codec). This subsystem turns the
 //! batch codec into that delivery path, dependency-free (`std::net` +
-//! [`crate::util::par`]):
+//! [`crate::util::par`]). Everything here is built on the `.dcbc` wire
+//! invariants specified in `docs/FORMAT.md` (header-only locatability,
+//! prefix monotonicity, chunk independence):
 //!
 //! * [`stream`] — a push-based incremental decoder: `feed()` bytes as
 //!   they arrive off the wire, get fully decoded layers (and, within a

@@ -11,7 +11,10 @@
 //! The produced weights are byte-for-byte identical to the batch
 //! [`CompressedModel::decode_weights`][crate::model::CompressedLayer::decode_weights]
 //! path — both decode the same spans with the same engine and dequantize
-//! on the same grid (see `property_stream_matches_batch`).
+//! on the same grid (see `property_stream_matches_batch`). Correctness
+//! under arbitrary packetization rests on the `.dcbc` prefix-
+//! monotonicity and chunk-independence invariants — `docs/FORMAT.md`
+//! §"Invariants the serving stack relies on".
 
 use crate::codec::decode_levels;
 use crate::model::container::{
