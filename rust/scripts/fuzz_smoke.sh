@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Budgeted fuzzing smoke, run by CI from the rust/ directory:
+#   1. replay the checked-in crasher corpus (regression gate)
+#   2. fixed-seed structure-aware fuzzing over every parser target,
+#      enforcing the never-panic / alloc-budget / time-budget /
+#      roundtrip-idempotence invariants and the >= 50% prelude-survival
+#      coverage proxy
+#   3. a second, different seed for extra coverage at ~the same cost
+#
+# Fails on any new crasher; minimized reproducers land in
+# fuzz_artifacts/ (uploaded by CI even on failure) ready to be promoted
+# into fuzz_corpus/.
+set -euo pipefail
+
+BIN=${BIN:-target/release/deepcabac}
+CASES=${CASES:-2000}
+ARTIFACTS=${ARTIFACTS:-fuzz_artifacts}
+
+rm -rf "$ARTIFACTS"
+
+echo "== corpus replay + seed 42 =="
+"$BIN" fuzz --target all --cases "$CASES" --seed 42 \
+  --corpus fuzz_corpus --artifacts "$ARTIFACTS"
+
+echo "== seed 1337 =="
+"$BIN" fuzz --target all --cases "$CASES" --seed 1337 \
+  --corpus fuzz_corpus --artifacts "$ARTIFACTS"
+
+echo "fuzz smoke clean: $((2 * CASES)) cases/target across 2 seeds + corpus replay"

@@ -1,0 +1,250 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in fuzz corpus (rust/fuzz_corpus/).
+
+Each file is a reviewable, hand-specified parser edge case from the wire
+spec in docs/FORMAT.md. Filename conventions (see fuzz::driver):
+
+  accept_*  must parse Ok (container: deserialize; http: request head)
+  reject_*  must parse Err
+  other     only has to uphold the crash invariants
+
+Container files are replayed against both the batch and the streaming
+decoder; range files are raw `Range:` header values. The corpus is
+committed — this script exists so the bytes have a reproducible,
+documented provenance, not because regeneration is routine.
+"""
+
+import os
+import struct
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "fuzz_corpus")
+
+
+def varint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def s(name: str) -> bytes:
+    b = name.encode()
+    return varint(len(b)) + b
+
+
+def f32(x: float) -> bytes:
+    return struct.pack("<f", x)
+
+
+CFG = bytes([1, 1, 0, 0])  # n_abs_flags=1, ExpGolomb(0), no sig neighbors
+
+
+def layer_v1(name, n_weights, payload, dims=(4,), bias=(), max_level=3, s_param=7):
+    out = s(name) + varint(len(dims))
+    for d in dims:
+        out += varint(d)
+    out += f32(0.05) + varint(max_level) + varint(s_param) + CFG
+    out += varint(n_weights) + varint(len(payload)) + payload
+    out += varint(len(bias))
+    for b in bias:
+        out += f32(b)
+    return out
+
+
+def layer_v2(name, chunks, n_weights, payload, bias=()):
+    """chunks: list of (chunk_weights, chunk_bytes) varint pairs."""
+    out = s(name) + varint(1) + varint(4)
+    out += f32(0.05) + varint(3) + varint(7) + CFG
+    out += varint(len(chunks))
+    for w, b in chunks:
+        out += varint(w) + varint(b)
+    out += varint(n_weights) + varint(len(payload)) + payload
+    out += varint(len(bias))
+    for b in bias:
+        out += f32(b)
+    return out
+
+
+def container(version, name, layer_blobs):
+    return b"DCBC" + bytes([version]) + s(name) + varint(len(layer_blobs)) + b"".join(
+        layer_blobs
+    )
+
+
+# deterministic "garbage" CABAC payload: parse never validates payload
+# content, and the decoder treats any bits as a (possibly nonsense) stream
+def junk(n: int, seed: int = 0xA5) -> bytes:
+    return bytes((seed * (i + 3) * 2654435761) >> 7 & 0xFF for i in range(n))
+
+
+def write(sub, name, data):
+    d = os.path.join(ROOT, sub)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, name), "wb") as f:
+        f.write(data)
+    print(f"  {sub}/{name}: {len(data)} bytes")
+
+
+def containers():
+    # -- accepted ----------------------------------------------------------
+    write("container", "accept_minimal_v1", container(1, "m", []))
+    write(
+        "container",
+        "accept_zero_weight_layer",
+        container(1, "m", [layer_v1("z", 0, b"", dims=(0,))]),
+    )
+    # single-entry chunk table: legal on the wire, canonicalizes to the
+    # monolithic form on reserialize (the idempotence invariant's x != y case)
+    write(
+        "container",
+        "accept_v2_single_chunk",
+        container(2, "m", [layer_v2("a", [(4, 2)], 4, junk(2))]),
+    )
+    write(
+        "container",
+        "accept_v2_multichunk",
+        container(
+            2,
+            "m",
+            [layer_v2("a", [(3, 2), (5, 4)], 8, junk(6), bias=(0.5,))],
+        ),
+    )
+    write(
+        "container",
+        "accept_two_layers_v1",
+        container(
+            1,
+            "mm",
+            [
+                layer_v1("conv", 6, junk(5), dims=(3, 2), bias=(1.0, -1.0)),
+                layer_v1("fc", 2, junk(3), dims=(2,)),
+            ],
+        ),
+    )
+
+    # -- rejected ----------------------------------------------------------
+    write("container", "reject_bad_magic", b"DCBX\x01" + s("m") + varint(0))
+    write("container", "reject_bad_version", b"DCBC\x03" + s("m") + varint(0))
+    # 11 continuation bytes: >= 10 undecided bytes = malformed varint,
+    # not a short buffer
+    write("container", "reject_overlong_varint", b"DCBC\x01" + b"\x80" * 11)
+    write(
+        "container",
+        "reject_nonutf8_name",
+        b"DCBC\x01" + varint(2) + b"\xff\xfe" + varint(0),
+    )
+    write(
+        "container",
+        "reject_trailing_bytes",
+        container(1, "m", []) + b"\xff",
+    )
+    # density guard: 2^20 claimed weights against a 1-byte payload
+    write(
+        "container",
+        "reject_giant_nweights_small_payload",
+        container(1, "m", [layer_v1("z", 1 << 20, b"\x00")]),
+    )
+    # reverse cap: 4097 payload bytes claimed for 0 weights (cap is
+    # n_weights*512 + 4096); header-only file — the parser bails before
+    # ever needing the payload bytes
+    write(
+        "container",
+        "reject_huge_payload_claim",
+        container(1, "m", [s("z") + varint(1) + varint(4) + f32(0.05) + varint(3) + varint(7) + CFG + varint(0) + varint(4097)]),
+    )
+    write(
+        "container",
+        "reject_zero_chunks",
+        container(2, "m", [s("a") + varint(1) + varint(4) + f32(0.05) + varint(3) + varint(7) + CFG + varint(0)]),
+    )
+    # chunk table sums disagree with the layer header
+    write(
+        "container",
+        "reject_chunk_sum_mismatch",
+        container(2, "m", [layer_v2("a", [(1, 1), (1, 1)], 5, junk(2))]),
+    )
+    # chunk weight counts that overflow a u64 sum
+    write(
+        "container",
+        "reject_chunk_sum_overflow",
+        container(
+            2,
+            "m",
+            [
+                s("a") + varint(1) + varint(4) + f32(0.05) + varint(3) + varint(7) + CFG
+                + varint(2)
+                + varint((1 << 64) - 1) + varint(1)
+                + varint(1) + varint(1)
+                + varint(4) + varint(2) + junk(2) + varint(0)
+            ],
+        ),
+    )
+    write(
+        "container",
+        "reject_bad_remainder_tag",
+        container(1, "m", [s("z") + varint(1) + varint(4) + f32(0.05) + varint(3) + varint(7) + bytes([1, 7, 0, 0]) + varint(0) + varint(0) + varint(0)]),
+    )
+    # payload claimed but not present: batch says truncated, stream's
+    # finish() says incomplete — both reject
+    write(
+        "container",
+        "reject_truncated_payload",
+        container(1, "m", [s("z") + varint(1) + varint(4) + f32(0.05) + varint(3) + varint(7) + CFG + varint(64) + varint(100) + junk(5)]),
+    )
+
+
+def https():
+    # parse_request_head takes the head without the terminating blank line
+    write("http", "accept_basic_get", b"GET /models HTTP/1.1\r\nHost: x\r\n")
+    write(
+        "http",
+        "accept_range_request",
+        b"GET /models/m/layers/0 HTTP/1.1\r\nRange: bytes=0-99\r\nAccept: */*\r\n",
+    )
+    write("http", "reject_empty", b"")
+    write("http", "reject_non_utf8", b"GET /\xff\xfe HTTP/1.1\r\n")
+    write("http", "reject_method_only", b"GET\r\n")
+    # crash-invariant-only cases (no accept/reject prefix)
+    write("http", "slowloris_partial_head", b"GET /models HTTP/1.1\r\nHost: victim\r\nX-Slow: ")
+    write("http", "nul_in_path", b"GET /\x00models HTTP/1.1\r\nHost: a\x00b\r\n")
+    write(
+        "http",
+        "giant_header_line",
+        b"GET / HTTP/1.1\r\nX-Big: " + b"A" * 20000 + b"\r\n",
+    )
+    write("http", "lf_only_lines", b"GET /stats HTTP/1.0\nHost: x\nRange: bytes=0-1\n")
+
+
+def ranges():
+    # raw Range header values; exec_range only asserts the in-bounds
+    # invariant on Satisfiable outcomes, so no accept/reject prefixes
+    cases = {
+        "u64_max_end": b"bytes=0-18446744073709551615",
+        "u64_max_suffix": b"bytes=-18446744073709551615",
+        "overflow_26_digits": b"bytes=0-99999999999999999999999999",
+        "suffix_zero": b"bytes=-0",
+        "open_end": b"bytes=100-",
+        "reversed": b"bytes=5-2",
+        "multipart": b"bytes=0-5,10-20",
+        "double_dash": b"bytes=0--5",
+        "bad_unit": b"bytez=0-5",
+        "spaces": b"bytes = 0 - 5",
+        "empty_value": b"",
+        "just_unit": b"bytes=",
+        "boundary_127_128": b"bytes=127-128",
+        "boundary_16384": b"bytes=16383-16384",
+    }
+    for name, v in cases.items():
+        write("range", name, v)
+
+
+if __name__ == "__main__":
+    containers()
+    https()
+    ranges()
+    print("corpus regenerated at", os.path.normpath(ROOT))

@@ -180,12 +180,16 @@ USAGE:
       Generate + compress a synthetic ImageNet-scale model (--out writes
       the .dcbc container, e.g. to seed a serve directory).
   deepcabac serve --dir DIR [--addr HOST:PORT] [--cache-mb N] [--workers N]
+                  [--read-timeout MS] [--write-timeout MS]
       Serve every .dcbc container in DIR over HTTP: GET /models,
       /models/{m}/manifest, /models/{m}/layers/{l} (compressed bytes,
       Range supported), /models/{m}/layers/{l}/weights (server-side
       decode through an LRU cache of --cache-mb), /stats, /healthz.
       --addr defaults to 127.0.0.1:8080; port 0 picks an ephemeral port
-      (printed on startup).
+      (printed on startup). Per-connection socket deadlines default to
+      10000 ms reads / 30000 ms writes (must be >= 1): slow or stalled
+      peers get 408 / a close instead of a wedged worker slot, counted
+      in /stats.
   deepcabac fetch --url http://HOST:PORT/models/NAME [--layer L]
                   [--out-dir DIR] [--workers N]
       Fetch a model from a serve endpoint. Without --layer the whole
@@ -194,10 +198,24 @@ USAGE:
       one layer's decoded weights via random access. --out-dir writes
       {layer}.w.npy files.
   deepcabac loadgen --url http://HOST:PORT [--clients N] [--requests M]
-                    [--out FILE]
+                    [--hostile H] [--out FILE]
       Load-generate against a serve endpoint (mixed compressed-bytes and
       decoded-weights GETs) and report p50/p99 latency + throughput;
-      --out writes BENCH_serve.json-style machine-readable results.
+      failures are classified (connect-refused / timeout / reset /
+      malformed-response / http-error) in the report. --hostile H adds H
+      fault-injecting threads (byte-dribble, slowloris, mid-request
+      disconnect, stalled readers) whose outcomes are reported
+      separately and never count as load failures. --out writes
+      BENCH_serve.json-style machine-readable results.
+  deepcabac fuzz [--target container|stream|http|range|all] [--cases N]
+                 [--seed N] [--corpus DIR] [--artifacts DIR]
+      Structure-aware fuzzing of the container / stream / HTTP / Range
+      parsers: replay the checked-in crasher corpus (--corpus, default
+      fuzz_corpus/), then run --cases generate-and-mutate inputs per
+      target under the never-panic / alloc-budget / time-budget /
+      roundtrip-idempotence invariants. Minimized reproducers go to
+      --artifacts; exits nonzero on any violation. Fixed --seed makes
+      runs bit-reproducible (the CI fuzz-smoke job).
 ";
 
 #[cfg(test)]
@@ -319,7 +337,7 @@ mod tests {
     fn parses_serve_flags() {
         let a = Args::parse(&sv(&[
             "serve", "--dir", "models/", "--addr", "127.0.0.1:0", "--cache-mb", "128",
-            "--workers", "8",
+            "--workers", "8", "--read-timeout", "300", "--write-timeout", "500",
         ]))
         .unwrap();
         assert_eq!(a.cmd, "serve");
@@ -327,6 +345,40 @@ mod tests {
         assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
         assert_eq!(a.get_usize("cache-mb", 64).unwrap(), 128);
         assert_eq!(a.get_count("workers", 1).unwrap(), 8);
+        assert_eq!(a.get_count("read-timeout", 10_000).unwrap(), 300);
+        assert_eq!(a.get_count("write-timeout", 30_000).unwrap(), 500);
+        // a zero deadline would time out every request: usage error
+        let a = Args::parse(&sv(&["serve", "--read-timeout", "0"])).unwrap();
+        assert!(a.get_count("read-timeout", 10_000).is_err());
+        let a = Args::parse(&sv(&["serve"])).unwrap();
+        assert_eq!(a.get_count("read-timeout", 10_000).unwrap(), 10_000);
+    }
+
+    #[test]
+    fn parses_fuzz_flags() {
+        let a = Args::parse(&sv(&[
+            "fuzz", "--target", "container", "--cases", "512", "--seed", "7",
+            "--corpus", "fuzz_corpus", "--artifacts", "/tmp/crashers",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "fuzz");
+        assert_eq!(a.get_or("target", "all"), "container");
+        assert_eq!(a.get_count("cases", 256).unwrap(), 512);
+        assert_eq!(a.get_usize("seed", 42).unwrap(), 7);
+        assert_eq!(a.get_or("corpus", "fuzz_corpus"), "fuzz_corpus");
+        assert_eq!(a.get("artifacts"), Some("/tmp/crashers"));
+        // defaults when everything is omitted
+        let a = Args::parse(&sv(&["fuzz"])).unwrap();
+        assert_eq!(a.get_or("target", "all"), "all");
+        assert_eq!(a.get_count("cases", 256).unwrap(), 256);
+        // --cases 0 is a usage error like every other count flag
+        let a = Args::parse(&sv(&["fuzz", "--cases", "0"])).unwrap();
+        assert!(a.get_count("cases", 256).is_err());
+        // --hostile 0 stays valid for loadgen (an amount, not a count)
+        let a = Args::parse(&sv(&["loadgen", "--hostile", "0"])).unwrap();
+        assert_eq!(a.get_usize("hostile", 0).unwrap(), 0);
+        let a = Args::parse(&sv(&["loadgen", "--hostile", "3"])).unwrap();
+        assert_eq!(a.get_usize("hostile", 3).unwrap(), 3);
     }
 
     #[test]

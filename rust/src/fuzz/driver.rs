@@ -1,0 +1,569 @@
+//! The fuzz driver: runs inputs against parser targets under the
+//! crash invariants, minimizes reproducers, and replays the checked-in
+//! corpus.
+//!
+//! A "crash" is any violation of the invariants every parser promises on
+//! arbitrary bytes:
+//!
+//! * **never panic** — every case runs under `catch_unwind`;
+//! * **never allocate beyond budget** — per-thread peak from
+//!   [`super::alloc`], enforced only when the metering allocator is
+//!   installed (see [`super::alloc::probe`]);
+//! * **never loop** — a per-case wall-clock budget;
+//! * **decode–reencode idempotence** — an *accepted* container must
+//!   re-serialize to a fixpoint and its layers must decode to exactly
+//!   `n_weights` levels, and batch-accept implies stream-accept.
+//!
+//! Reproducers are shrunk by a deterministic ddmin-style chunk-removal
+//! pass before being written out, so corpus entries stay reviewable.
+
+use super::{alloc, gen, mutate};
+use crate::model::container::{parse_container_prefix, Parsed};
+use crate::model::CompressedModel;
+use crate::serve::http::parse_request_head;
+use crate::serve::stream::StreamDecoder;
+use crate::util::{fnv1a, SplitMix64};
+use anyhow::{Context, Result};
+use std::cell::Cell;
+use std::path::Path;
+use std::time::Instant;
+
+/// Which parser surface a fuzz case is thrown at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetKind {
+    /// Batch container parsing: [`CompressedModel::deserialize`] plus the
+    /// roundtrip/idempotence invariants.
+    Container,
+    /// The push-based [`StreamDecoder`], fed in input-derived splits.
+    Stream,
+    /// [`parse_request_head`] plus Range evaluation on the result.
+    Http,
+    /// `Range` header value evaluation across body sizes.
+    Range,
+}
+
+impl TargetKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TargetKind::Container => "container",
+            TargetKind::Stream => "stream",
+            TargetKind::Http => "http",
+            TargetKind::Range => "range",
+        }
+    }
+
+    pub fn all() -> [TargetKind; 4] {
+        [TargetKind::Container, TargetKind::Stream, TargetKind::Http, TargetKind::Range]
+    }
+}
+
+/// Per-case resource budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct Budgets {
+    /// Peak live bytes a single case may allocate (checked only when the
+    /// metering allocator is installed).
+    pub alloc_bytes: usize,
+    /// Wall-clock ceiling per case.
+    pub millis: u64,
+}
+
+impl Default for Budgets {
+    fn default() -> Self {
+        Self { alloc_bytes: 64 << 20, millis: 2000 }
+    }
+}
+
+/// How a case violated the invariants.
+#[derive(Debug, Clone)]
+pub enum CrashKind {
+    /// The target panicked (message attached).
+    Panic(String),
+    /// Peak allocation exceeded the budget (actual peak attached).
+    AllocBudget(usize),
+    /// The case overran its wall-clock budget (elapsed ms attached).
+    TimeBudget(u64),
+    /// A corpus `accept_`/`reject_` expectation failed (regression).
+    Expectation(String),
+}
+
+impl std::fmt::Display for CrashKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CrashKind::Panic(m) => write!(f, "panic: {m}"),
+            CrashKind::AllocBudget(p) => write!(f, "alloc budget exceeded: peak {p} bytes"),
+            CrashKind::TimeBudget(ms) => write!(f, "time budget exceeded: {ms} ms"),
+            CrashKind::Expectation(m) => write!(f, "corpus expectation failed: {m}"),
+        }
+    }
+}
+
+/// One minimized reproducer.
+#[derive(Debug, Clone)]
+pub struct Crash {
+    pub target: TargetKind,
+    pub kind: CrashKind,
+    /// The (minimized, for generated cases) input that triggers it.
+    pub input: Vec<u8>,
+}
+
+/// Aggregate counters for a fuzz run or corpus replay.
+#[derive(Debug, Clone, Default)]
+pub struct FuzzStats {
+    pub cases: usize,
+    pub crashes: usize,
+    /// Cases whose container prelude parsed completely — the coverage
+    /// proxy: these reached layer/chunk handling.
+    pub survived_prefix: usize,
+    /// Cases the target fully accepted (parsed Ok end to end).
+    pub accepted: usize,
+    /// Whether allocation budgets were actually enforced.
+    pub alloc_metered: bool,
+}
+
+impl FuzzStats {
+    /// Fraction of cases that survived into layer/chunk handling.
+    pub fn survival_ratio(&self) -> f64 {
+        if self.cases == 0 {
+            return 0.0;
+        }
+        self.survived_prefix as f64 / self.cases as f64
+    }
+
+    fn absorb_case(&mut self, outcome: &CaseOutcome) {
+        self.cases += 1;
+        if outcome.survived_prefix {
+            self.survived_prefix += 1;
+        }
+        if outcome.accepted {
+            self.accepted += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+const SELFTEST_PANIC_MARKER: &[u8] = b"__fuzz_selftest_panic__";
+
+#[derive(Debug, Clone, Copy, Default)]
+struct CaseOutcome {
+    survived_prefix: bool,
+    accepted: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Panic-hook quieting
+//
+// catch_unwind still runs the global panic hook, which would spray a
+// backtrace per crasher. A process-wide hook installed once defers to
+// the previous hook unless the current thread is inside a fuzz case.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static QUIET: Cell<bool> = const { Cell::new(false) };
+}
+
+fn install_quiet_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let quiet = QUIET.try_with(|q| q.get()).unwrap_or(false);
+            if !quiet {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// RAII guard: panics on this thread are expected (and silenced) while
+/// it lives. Other threads' panics keep their normal reporting.
+struct Quiet;
+
+impl Quiet {
+    fn new() -> Self {
+        install_quiet_hook();
+        QUIET.with(|q| q.set(true));
+        Quiet
+    }
+}
+
+impl Drop for Quiet {
+    fn drop(&mut self) {
+        let _ = QUIET.try_with(|q| q.set(false));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Targets
+// ---------------------------------------------------------------------------
+
+fn exec(target: TargetKind, input: &[u8]) -> CaseOutcome {
+    // unit-test tripwire: gives the catch/minimize machinery a
+    // deterministic crasher without planting a real bug in any parser
+    #[cfg(test)]
+    if input.ends_with(SELFTEST_PANIC_MARKER) {
+        panic!("selftest panic");
+    }
+    match target {
+        TargetKind::Container => exec_container(input),
+        TargetKind::Stream => exec_stream(input),
+        TargetKind::Http => exec_http(input),
+        TargetKind::Range => exec_range(input),
+    }
+}
+
+fn exec_container(input: &[u8]) -> CaseOutcome {
+    let survived_prefix = matches!(parse_container_prefix(input), Ok(Parsed::Complete(..)));
+    let Ok(m) = CompressedModel::deserialize(input) else {
+        return CaseOutcome { survived_prefix, accepted: false };
+    };
+    // accepted input ⇒ reencode must be accepted and be a serialization
+    // fixpoint (x itself may differ from y: v2 single-chunk forms
+    // canonicalize, so idempotence — not x == y — is the invariant)
+    let y = m.serialize();
+    let m2 = CompressedModel::deserialize(&y)
+        .unwrap_or_else(|e| panic!("reencode of accepted container rejected: {e}"));
+    assert_eq!(m2.serialize(), y, "serialize∘deserialize is not idempotent");
+    for l in &m.layers {
+        let levels = l.decode_levels_with(1);
+        assert_eq!(
+            levels.len(),
+            l.n_weights,
+            "layer {:?} decoded {} levels, header claims {}",
+            l.name,
+            levels.len(),
+            l.n_weights
+        );
+    }
+    // batch-accept ⇒ stream-accept: both sides share the prefix parsers
+    if let Err(e) = crate::serve::stream::decode_all(input) {
+        panic!("batch accepted but stream decoder rejected: {e}");
+    }
+    CaseOutcome { survived_prefix, accepted: true }
+}
+
+fn exec_stream(input: &[u8]) -> CaseOutcome {
+    let survived_prefix = matches!(parse_container_prefix(input), Ok(Parsed::Complete(..)));
+    // split sizes derived from the input so replays are deterministic
+    let mut rng = SplitMix64::new(fnv1a(input) | 1);
+    let mut dec = StreamDecoder::new();
+    let mut pos = 0usize;
+    let mut failed = false;
+    while pos < input.len() {
+        let n = 1 + rng.below(63) as usize;
+        let end = (pos + n).min(input.len());
+        if dec.feed(&input[pos..end]).is_err() {
+            failed = true;
+            break;
+        }
+        pos = end;
+    }
+    let accepted = !failed && dec.finish().is_ok();
+    CaseOutcome { survived_prefix, accepted }
+}
+
+fn exec_http(input: &[u8]) -> CaseOutcome {
+    let Ok(req) = parse_request_head(input) else {
+        return CaseOutcome { survived_prefix: false, accepted: false };
+    };
+    let _ = req.header("host");
+    let _ = req.header("range");
+    for len in [0usize, 1, 100, 1 << 20, usize::MAX >> 1] {
+        let _ = req.byte_range(len);
+    }
+    CaseOutcome { survived_prefix: true, accepted: true }
+}
+
+fn exec_range(input: &[u8]) -> CaseOutcome {
+    let value = String::from_utf8_lossy(input);
+    // evaluate through a real Request so header plumbing is included
+    let head = format!("GET / HTTP/1.1\r\nRange: {value}\r\n");
+    let Ok(req) = parse_request_head(head.as_bytes()) else {
+        return CaseOutcome { survived_prefix: true, accepted: false };
+    };
+    for len in [0usize, 1, 99, 100, 1 << 20, usize::MAX >> 1] {
+        if let crate::serve::http::RangeOutcome::Satisfiable(r) = req.byte_range(len) {
+            assert!(r.start < r.end && r.end <= len, "range {r:?} outside body of {len}");
+        }
+    }
+    CaseOutcome { survived_prefix: true, accepted: true }
+}
+
+// ---------------------------------------------------------------------------
+// Case runner + minimizer
+// ---------------------------------------------------------------------------
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one input against one target; `None` means every invariant held.
+fn run_case(
+    target: TargetKind,
+    input: &[u8],
+    budgets: &Budgets,
+    metered: bool,
+) -> (Option<CrashKind>, CaseOutcome) {
+    alloc::reset();
+    let t0 = Instant::now();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec(target, input)));
+    let elapsed = t0.elapsed().as_millis() as u64;
+    let peak = alloc::peak();
+    match res {
+        Err(p) => (Some(CrashKind::Panic(panic_message(p))), CaseOutcome::default()),
+        Ok(outcome) => {
+            if metered && peak > budgets.alloc_bytes {
+                (Some(CrashKind::AllocBudget(peak)), outcome)
+            } else if elapsed > budgets.millis {
+                (Some(CrashKind::TimeBudget(elapsed)), outcome)
+            } else {
+                (None, outcome)
+            }
+        }
+    }
+}
+
+/// Deterministic ddmin-style shrink: repeatedly delete byte chunks
+/// (halving the chunk size) while the input still crashes. Bounded at
+/// 4000 attempts so minimization can never become the hang.
+pub fn minimize(target: TargetKind, input: &[u8], budgets: &Budgets, metered: bool) -> Vec<u8> {
+    let crashes = |buf: &[u8]| run_case(target, buf, budgets, metered).0.is_some();
+    let mut cur = input.to_vec();
+    if !crashes(&cur) {
+        return cur; // flaky (e.g. borderline time budget): keep as-is
+    }
+    let mut attempts = 0usize;
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut progress = false;
+        let mut start = 0usize;
+        while start < cur.len() && attempts < 4000 {
+            let end = (start + chunk).min(cur.len());
+            let mut cand = Vec::with_capacity(cur.len() - (end - start));
+            cand.extend_from_slice(&cur[..start]);
+            cand.extend_from_slice(&cur[end..]);
+            attempts += 1;
+            if crashes(&cand) {
+                cur = cand;
+                progress = true;
+            } else {
+                start = end;
+            }
+        }
+        if attempts >= 4000 {
+            break;
+        }
+        if !progress {
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+    }
+    cur
+}
+
+// ---------------------------------------------------------------------------
+// Fuzz loops + corpus replay
+// ---------------------------------------------------------------------------
+
+fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
+    // 1-in-8 cases run unmutated: keeps the accept/roundtrip invariants
+    // exercised and anchors the survival baseline
+    let pristine = rng.below(8) == 0;
+    match target {
+        TargetKind::Container | TargetKind::Stream => {
+            let base = gen::container(rng);
+            if pristine {
+                return base;
+            }
+            match gen::map_fields(&base) {
+                Ok(fields) => mutate::container(&base, &fields, rng),
+                Err(_) => base,
+            }
+        }
+        TargetKind::Http => {
+            let base = gen::http_request(rng);
+            if pristine {
+                base
+            } else {
+                mutate::http(&base, rng)
+            }
+        }
+        TargetKind::Range => {
+            let base = gen::range_value(rng);
+            if pristine { base } else { mutate::range(&base, rng) }.into_bytes()
+        }
+    }
+}
+
+/// Generate-mutate-run `cases` inputs against `target`. Crashers are
+/// minimized before being returned.
+pub fn fuzz_target(
+    target: TargetKind,
+    cases: usize,
+    seed: u64,
+    budgets: &Budgets,
+) -> (FuzzStats, Vec<Crash>) {
+    let _quiet = Quiet::new();
+    let metered = alloc::probe();
+    let mut rng = SplitMix64::new(seed ^ fnv1a(target.as_str().as_bytes()));
+    let mut stats = FuzzStats { alloc_metered: metered, ..Default::default() };
+    let mut crashes = Vec::new();
+    for _ in 0..cases {
+        let input = make_input(target, &mut rng);
+        let (crash, outcome) = run_case(target, &input, budgets, metered);
+        stats.absorb_case(&outcome);
+        if let Some(kind) = crash {
+            stats.crashes += 1;
+            let input = minimize(target, &input, budgets, metered);
+            crashes.push(Crash { target, kind, input });
+        }
+    }
+    (stats, crashes)
+}
+
+/// Replay the checked-in corpus at `root` (`container/`, `http/`,
+/// `range/` subdirectories; missing ones are skipped). Filename
+/// conventions: `accept_*` must parse Ok, `reject_*` must parse Err,
+/// anything else only has to uphold the crash invariants. Container
+/// corpus files run against **both** the batch and the stream targets.
+pub fn replay_corpus(root: &Path, budgets: &Budgets) -> Result<(FuzzStats, Vec<Crash>)> {
+    let _quiet = Quiet::new();
+    let metered = alloc::probe();
+    let mut stats = FuzzStats { alloc_metered: metered, ..Default::default() };
+    let mut crashes = Vec::new();
+    let groups: [(&str, &[TargetKind]); 3] = [
+        ("container", &[TargetKind::Container, TargetKind::Stream]),
+        ("http", &[TargetKind::Http]),
+        ("range", &[TargetKind::Range]),
+    ];
+    for (sub, targets) in groups {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut paths: Vec<_> = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading corpus dir {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.is_file())
+            .collect();
+        paths.sort();
+        for path in paths {
+            let input =
+                std::fs::read(&path).with_context(|| format!("reading corpus file {path:?}"))?;
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+            let expect = if name.starts_with("accept_") {
+                Some(true)
+            } else if name.starts_with("reject_") {
+                Some(false)
+            } else {
+                None
+            };
+            for &t in targets {
+                let (crash, outcome) = run_case(t, &input, budgets, metered);
+                stats.absorb_case(&outcome);
+                if let Some(kind) = crash {
+                    stats.crashes += 1;
+                    crashes.push(Crash { target: t, kind, input: input.clone() });
+                    continue;
+                }
+                if let Some(want) = expect {
+                    if outcome.accepted != want {
+                        stats.crashes += 1;
+                        crashes.push(Crash {
+                            target: t,
+                            kind: CrashKind::Expectation(format!(
+                                "{name} [{}]: expected accepted={want}, got accepted={}",
+                                t.as_str(),
+                                outcome.accepted
+                            )),
+                            input: input.clone(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok((stats, crashes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_containers_are_accepted_with_no_crashes() {
+        let mut rng = SplitMix64::new(101);
+        let budgets = Budgets::default();
+        for _ in 0..8 {
+            let bytes = gen::container(&mut rng);
+            for t in [TargetKind::Container, TargetKind::Stream] {
+                let (crash, outcome) = run_case(t, &bytes, &budgets, false);
+                assert!(crash.is_none(), "{:?}: {:?}", t, crash);
+                assert!(outcome.accepted && outcome.survived_prefix);
+            }
+        }
+    }
+
+    #[test]
+    fn short_fuzz_runs_are_deterministic_and_clean() {
+        for t in TargetKind::all() {
+            let b = Budgets::default();
+            let (s1, c1) = fuzz_target(t, 40, 7, &b);
+            let (s2, c2) = fuzz_target(t, 40, 7, &b);
+            assert_eq!(s1.cases, 40);
+            assert_eq!(s1.crashes, c1.len());
+            // determinism: same seed, same outcome
+            assert_eq!(s1.crashes, s2.crashes);
+            assert_eq!(s1.survived_prefix, s2.survived_prefix);
+            assert_eq!(s1.accepted, s2.accepted);
+            assert_eq!(c1.len(), c2.len());
+            assert!(
+                c1.is_empty(),
+                "{}: unexpected crasher: {} ({} bytes)",
+                t.as_str(),
+                c1[0].kind,
+                c1[0].input.len()
+            );
+        }
+    }
+
+    #[test]
+    fn panics_are_caught_and_minimized() {
+        let b = Budgets::default();
+        let mut input = vec![0xAAu8; 48];
+        input.extend_from_slice(SELFTEST_PANIC_MARKER);
+        let (crash, _) = run_case(TargetKind::Range, &input, &b, false);
+        match crash {
+            Some(CrashKind::Panic(msg)) => assert!(msg.contains("selftest"), "{msg}"),
+            other => panic!("expected a caught panic, got {other:?}"),
+        }
+        // ddmin must strip every padding byte but keep the trigger
+        let min = minimize(TargetKind::Range, &input, &b, false);
+        assert_eq!(min, SELFTEST_PANIC_MARKER);
+    }
+
+    #[test]
+    fn crash_kind_display_is_stable() {
+        assert_eq!(CrashKind::Panic("x".into()).to_string(), "panic: x");
+        assert_eq!(
+            CrashKind::AllocBudget(10).to_string(),
+            "alloc budget exceeded: peak 10 bytes"
+        );
+        assert_eq!(CrashKind::TimeBudget(3).to_string(), "time budget exceeded: 3 ms");
+    }
+
+    #[test]
+    fn replay_missing_corpus_is_empty_ok() {
+        let (stats, crashes) =
+            replay_corpus(Path::new("/nonexistent/corpus"), &Budgets::default()).unwrap();
+        assert_eq!(stats.cases, 0);
+        assert!(crashes.is_empty());
+    }
+}

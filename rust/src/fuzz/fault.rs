@@ -1,0 +1,296 @@
+//! Serve-path fault injection: a misbehaving-connection wrapper plus
+//! canned hostile client sessions.
+//!
+//! [`FaultyConn`] wraps any `Read + Write` transport and injects the
+//! classic client pathologies — byte-dribble writes, mid-stream
+//! disconnects, stalled reads — at the `io` layer, so the code under
+//! test sees exactly the errors a real flaky peer produces. The session
+//! helpers ([`dribble_request`], [`slowloris`],
+//! [`disconnect_mid_request`], [`stalled_reader`]) drive a *real* server
+//! over TCP; `tests/fault_injection.rs` asserts the server keeps serving
+//! healthy clients through a storm of them, and `loadgen --hostile N`
+//! mixes them into load runs.
+
+use anyhow::{Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// What a [`FaultyConn`] does to the wrapped transport.
+#[derive(Debug, Clone, Copy)]
+pub enum FaultPlan {
+    /// Pass-through (control case).
+    None,
+    /// Every `write` call transfers at most one byte.
+    DribbleWrites,
+    /// Writes fail with `BrokenPipe` after `after` bytes total.
+    DisconnectAfterWrite { after: usize },
+    /// Reads fail with `WouldBlock` after `after` bytes total (peer that
+    /// stops sending but keeps the socket open).
+    StallReadsAfter { after: usize },
+}
+
+/// A `Read + Write` wrapper that injects faults per a [`FaultPlan`].
+pub struct FaultyConn<S> {
+    inner: S,
+    plan: FaultPlan,
+    written: usize,
+    read: usize,
+}
+
+impl<S> FaultyConn<S> {
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        Self { inner, plan, written: 0, read: 0 }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for FaultyConn<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let FaultPlan::StallReadsAfter { after } = self.plan {
+            if self.read >= after {
+                return Err(std::io::Error::new(ErrorKind::WouldBlock, "injected read stall"));
+            }
+            let cap = (after - self.read).min(buf.len()).max(1);
+            let n = self.inner.read(&mut buf[..cap])?;
+            self.read += n;
+            return Ok(n);
+        }
+        let n = self.inner.read(buf)?;
+        self.read += n;
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for FaultyConn<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self.plan {
+            FaultPlan::DribbleWrites if !buf.is_empty() => {
+                let n = self.inner.write(&buf[..1])?;
+                self.written += n;
+                Ok(n)
+            }
+            FaultPlan::DisconnectAfterWrite { after } => {
+                if self.written >= after {
+                    return Err(std::io::Error::new(
+                        ErrorKind::BrokenPipe,
+                        "injected disconnect",
+                    ));
+                }
+                let cap = (after - self.written).min(buf.len());
+                let n = self.inner.write(&buf[..cap])?;
+                self.written += n;
+                Ok(n)
+            }
+            _ => {
+                let n = self.inner.write(buf)?;
+                self.written += n;
+                Ok(n)
+            }
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hostile sessions against a live server
+// ---------------------------------------------------------------------------
+
+/// How a hostile session ended, from the attacker's point of view.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// The server answered with this HTTP status.
+    Status(u16),
+    /// The server closed the connection without a response.
+    Closed,
+    /// The socket errored (reset, timeout, refused…) — message attached.
+    IoError(String),
+}
+
+/// Read just enough of a response to classify it.
+fn read_status(stream: &mut TcpStream) -> FaultOutcome {
+    let mut buf = [0u8; 512];
+    let mut head = Vec::new();
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                return if head.is_empty() { FaultOutcome::Closed } else { parse_status(&head) }
+            }
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(2).any(|w| w == b"\r\n") || head.len() >= buf.len() {
+                    return parse_status(&head);
+                }
+            }
+            Err(e) => return FaultOutcome::IoError(format!("{e} [kind={:?}]", e.kind())),
+        }
+    }
+}
+
+fn parse_status(head: &[u8]) -> FaultOutcome {
+    let line = String::from_utf8_lossy(head);
+    let mut parts = line.split_whitespace();
+    match (parts.next(), parts.next().and_then(|s| s.parse::<u16>().ok())) {
+        (Some(proto), Some(status)) if proto.starts_with("HTTP/1.") => {
+            FaultOutcome::Status(status)
+        }
+        _ => FaultOutcome::IoError(format!("unparseable response head: {line:?}")),
+    }
+}
+
+fn connect(addr: &str, deadline: Duration) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)
+        .map_err(crate::serve::http::tag_io)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_read_timeout(Some(deadline));
+    let _ = stream.set_write_timeout(Some(deadline));
+    Ok(stream)
+}
+
+/// Send a fully valid request one byte at a time with `delay` between
+/// bytes. A robust server must still answer (the request is complete,
+/// just slow) — callers expect `Status(200)`.
+pub fn dribble_request(
+    addr: &str,
+    path: &str,
+    delay: Duration,
+    deadline: Duration,
+) -> Result<FaultOutcome> {
+    let mut stream = connect(addr, deadline)?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    for b in req.as_bytes() {
+        if let Err(e) = stream.write_all(std::slice::from_ref(b)) {
+            return Ok(FaultOutcome::IoError(format!("{e} [kind={:?}]", e.kind())));
+        }
+        std::thread::sleep(delay);
+    }
+    let _ = stream.flush();
+    Ok(read_status(&mut stream))
+}
+
+/// Classic slowloris: send a partial request head (no terminating blank
+/// line) and then go quiet while keeping the socket open. A server with
+/// read deadlines answers 408 or closes the connection — it must never
+/// hold the worker slot forever. The call returns as soon as the server
+/// reacts (or our own `deadline` fires).
+pub fn slowloris(addr: &str, deadline: Duration) -> Result<FaultOutcome> {
+    let mut stream = connect(addr, deadline)?;
+    // a plausible, incomplete head — ends mid-header, no blank line
+    let partial = b"GET /models HTTP/1.1\r\nHost: victim\r\nX-Slow: ";
+    if let Err(e) = stream.write_all(partial) {
+        return Ok(FaultOutcome::IoError(format!("{e} [kind={:?}]", e.kind())));
+    }
+    let _ = stream.flush();
+    Ok(read_status(&mut stream))
+}
+
+/// Open a connection, send half a request line, and hang up.
+pub fn disconnect_mid_request(addr: &str, deadline: Duration) -> Result<()> {
+    let mut stream = connect(addr, deadline)?;
+    let _ = stream.write_all(b"GET /mod");
+    let _ = stream.flush();
+    drop(stream); // RST/FIN mid-head
+    Ok(())
+}
+
+/// Request a resource, then refuse to read the response for `hold`
+/// before hanging up — pressure on the server's *write* path. With a
+/// write deadline the handler unblocks and frees its slot no matter how
+/// long the client sulks.
+pub fn stalled_reader(addr: &str, path: &str, hold: Duration, deadline: Duration) -> Result<()> {
+    let mut stream = connect(addr, deadline)?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    if stream.write_all(req.as_bytes()).is_ok() {
+        let _ = stream.flush();
+        std::thread::sleep(hold);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory transport: reads from a script, collects writes.
+    struct Mem {
+        input: std::io::Cursor<Vec<u8>>,
+        output: Vec<u8>,
+    }
+
+    impl Mem {
+        fn new(input: &[u8]) -> Self {
+            Self { input: std::io::Cursor::new(input.to_vec()), output: Vec::new() }
+        }
+    }
+
+    impl Read for Mem {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for Mem {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.output.write(buf)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn dribble_writes_one_byte_per_call() {
+        let mut c = FaultyConn::new(Mem::new(b""), FaultPlan::DribbleWrites);
+        assert_eq!(c.write(b"hello").unwrap(), 1);
+        assert_eq!(c.write(b"ello").unwrap(), 1);
+        // write_all still completes, one byte at a time
+        c.write_all(b"llo").unwrap();
+        assert_eq!(c.into_inner().output, b"hello");
+    }
+
+    #[test]
+    fn disconnect_after_write_budget() {
+        let mut c = FaultyConn::new(Mem::new(b""), FaultPlan::DisconnectAfterWrite { after: 4 });
+        assert_eq!(c.write(b"abcdef").unwrap(), 4);
+        let err = c.write(b"gh").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::BrokenPipe);
+        assert_eq!(c.into_inner().output, b"abcd");
+    }
+
+    #[test]
+    fn stalled_reads_after_budget() {
+        let mut c =
+            FaultyConn::new(Mem::new(b"0123456789"), FaultPlan::StallReadsAfter { after: 3 });
+        let mut buf = [0u8; 8];
+        let mut got = 0usize;
+        while got < 3 {
+            got += c.read(&mut buf[got..]).unwrap();
+        }
+        assert_eq!(&buf[..3], b"012");
+        let err = c.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn passthrough_counts_bytes() {
+        let mut c = FaultyConn::new(Mem::new(b"xyz"), FaultPlan::None);
+        let mut buf = [0u8; 8];
+        assert_eq!(c.read(&mut buf).unwrap(), 3);
+        c.write_all(b"ok").unwrap();
+        assert_eq!(c.written, 2);
+        assert_eq!(c.read, 3);
+    }
+
+    #[test]
+    fn status_classifier() {
+        assert_eq!(parse_status(b"HTTP/1.1 408 Request Timeout\r\n"), FaultOutcome::Status(408));
+        assert_eq!(parse_status(b"HTTP/1.0 200 OK\r\n"), FaultOutcome::Status(200));
+        assert!(matches!(parse_status(b"garbage"), FaultOutcome::IoError(_)));
+    }
+}

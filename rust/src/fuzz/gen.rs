@@ -1,0 +1,336 @@
+//! Grammar-driven input generators.
+//!
+//! Every generated input starts *syntactically valid* so the downstream
+//! mutations (see [`super::mutate`]) land deep inside the parsers
+//! instead of bouncing off the `DCBC` magic check or the request-line
+//! split. Containers are built through the production encoder
+//! ([`crate::codec::encode_levels`] + [`CompressedModel::serialize`]) —
+//! never a hand-rolled writer that could drift from the format — and the
+//! byte-offset field map the mutator needs is recovered by *re-walking*
+//! the emitted bytes with the recording parser [`map_fields`], so the
+//! offsets are correct by construction.
+
+use crate::bitstream::read_varint;
+use crate::codec::{encode_levels, CodecConfig, RemainderMode};
+use crate::model::{ChunkInfo, CompressedLayer, CompressedModel};
+use crate::quant::QuantGrid;
+use crate::util::SplitMix64;
+use anyhow::{bail, Result};
+
+/// What a byte range inside a serialized container encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldKind {
+    Magic,
+    Version,
+    ModelNameLen,
+    ModelName,
+    LayerCount,
+    LayerNameLen,
+    LayerName,
+    DimCount,
+    Dim,
+    Delta,
+    MaxLevel,
+    SParam,
+    CfgBytes,
+    ChunkCount,
+    ChunkWeights,
+    ChunkBytes,
+    NWeights,
+    PayloadLen,
+    Payload,
+    BiasLen,
+    BiasBytes,
+}
+
+impl FieldKind {
+    /// True for fields stored as a LEB128 varint (resizable on rewrite).
+    pub fn is_varint(self) -> bool {
+        matches!(
+            self,
+            FieldKind::ModelNameLen
+                | FieldKind::LayerCount
+                | FieldKind::LayerNameLen
+                | FieldKind::DimCount
+                | FieldKind::Dim
+                | FieldKind::MaxLevel
+                | FieldKind::SParam
+                | FieldKind::ChunkCount
+                | FieldKind::ChunkWeights
+                | FieldKind::ChunkBytes
+                | FieldKind::NWeights
+                | FieldKind::PayloadLen
+                | FieldKind::BiasLen
+        )
+    }
+}
+
+/// One contiguous byte range of a serialized container.
+#[derive(Debug, Clone, Copy)]
+pub struct Field {
+    pub offset: usize,
+    pub len: usize,
+    pub kind: FieldKind,
+}
+
+/// Recording walker: tiles `bytes` (a *valid* serialized container, e.g.
+/// straight out of [`CompressedModel::serialize`]) into its [`Field`]s.
+/// The fields are contiguous, in offset order, and cover every byte —
+/// asserted by `fields_tile_the_container` below.
+pub fn map_fields(bytes: &[u8]) -> Result<Vec<Field>> {
+    let mut w = Walker { buf: bytes, pos: 0, fields: Vec::new() };
+    w.raw(4, FieldKind::Magic)?;
+    let version = w.buf.get(4).copied().unwrap_or(0);
+    w.raw(1, FieldKind::Version)?;
+    let name_len = w.varint(FieldKind::ModelNameLen)? as usize;
+    w.raw(name_len, FieldKind::ModelName)?;
+    let n_layers = w.varint(FieldKind::LayerCount)? as usize;
+    for _ in 0..n_layers {
+        let lname = w.varint(FieldKind::LayerNameLen)? as usize;
+        w.raw(lname, FieldKind::LayerName)?;
+        let ndims = w.varint(FieldKind::DimCount)? as usize;
+        for _ in 0..ndims {
+            w.varint(FieldKind::Dim)?;
+        }
+        w.raw(4, FieldKind::Delta)?;
+        w.varint(FieldKind::MaxLevel)?;
+        w.varint(FieldKind::SParam)?;
+        w.raw(4, FieldKind::CfgBytes)?;
+        if version == crate::model::container::VERSION_CHUNKED {
+            let n_chunks = w.varint(FieldKind::ChunkCount)? as usize;
+            if n_chunks > crate::model::container::MAX_CHUNKS {
+                bail!("field map: chunk count {n_chunks} out of range");
+            }
+            for _ in 0..n_chunks {
+                w.varint(FieldKind::ChunkWeights)?;
+                w.varint(FieldKind::ChunkBytes)?;
+            }
+        }
+        w.varint(FieldKind::NWeights)?;
+        let payload_len = w.varint(FieldKind::PayloadLen)? as usize;
+        w.raw(payload_len, FieldKind::Payload)?;
+        let bias_len = w.varint(FieldKind::BiasLen)? as usize;
+        let Some(bias_bytes) = bias_len.checked_mul(4) else {
+            bail!("field map: bias length overflow");
+        };
+        w.raw(bias_bytes, FieldKind::BiasBytes)?;
+    }
+    if w.pos != bytes.len() {
+        bail!("field map: {} trailing bytes", bytes.len() - w.pos);
+    }
+    Ok(w.fields)
+}
+
+/// First byte offset past the container prelude (magic, version, model
+/// name, layer count) — mutations before this point mostly die at the
+/// magic/version check, so the mutator biases past it.
+pub fn prelude_end(fields: &[Field]) -> usize {
+    fields
+        .iter()
+        .find(|f| f.kind == FieldKind::LayerCount)
+        .map(|f| f.offset + f.len)
+        .unwrap_or(0)
+}
+
+struct Walker<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    fields: Vec<Field>,
+}
+
+impl Walker<'_> {
+    fn raw(&mut self, n: usize, kind: FieldKind) -> Result<()> {
+        if self.buf.len() - self.pos < n {
+            bail!("field map: truncated {kind:?}");
+        }
+        if n > 0 {
+            self.fields.push(Field { offset: self.pos, len: n, kind });
+        }
+        self.pos += n;
+        Ok(())
+    }
+
+    fn varint(&mut self, kind: FieldKind) -> Result<u64> {
+        let Some((v, n)) = read_varint(&self.buf[self.pos..]) else {
+            bail!("field map: bad varint for {kind:?}");
+        };
+        self.fields.push(Field { offset: self.pos, len: n, kind });
+        self.pos += n;
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+fn rand_levels(rng: &mut SplitMix64, n: usize) -> Vec<i32> {
+    let p_zero = 0.4 + rng.next_f64() * 0.55;
+    let spread = 1 + rng.below(60);
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < p_zero {
+                0
+            } else {
+                (1 + rng.below(spread) as i32) * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+            }
+        })
+        .collect()
+}
+
+fn rand_layer(rng: &mut SplitMix64, idx: usize) -> CompressedLayer {
+    let n = rng.below(220) as usize;
+    let levels = rand_levels(rng, n);
+    let cfg = CodecConfig {
+        n_abs_flags: 1 + rng.below(14) as u32,
+        remainder: RemainderMode::ExpGolomb(rng.below(3) as u32),
+        sig_ctx_neighbors: rng.next_u64() & 1 == 0,
+    };
+    // chunk some layers so version-2 tables appear in the corpus
+    let n_chunks = if rng.next_f64() < 0.4 && levels.len() >= 4 {
+        2 + rng.below(4) as usize
+    } else {
+        1
+    };
+    let per = ((levels.len() + n_chunks - 1) / n_chunks).max(1);
+    let mut payload = Vec::new();
+    let mut chunks = Vec::new();
+    for part in levels.chunks(per) {
+        let bytes = encode_levels(part, cfg);
+        chunks.push(ChunkInfo { n_weights: part.len(), bytes: bytes.len() });
+        payload.extend_from_slice(&bytes);
+    }
+    if chunks.len() <= 1 {
+        chunks.clear();
+    }
+    let max_abs = levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(0);
+    CompressedLayer {
+        name: format!("layer{idx}"),
+        dims: vec![levels.len().max(1)],
+        grid: QuantGrid { delta: 0.01 + rng.next_f32(), max_level: max_abs as i32 },
+        s_param: rng.below(300) as u32,
+        cfg,
+        n_weights: levels.len(),
+        payload,
+        chunks,
+        bias: (0..rng.below(12) as usize).map(|_| rng.next_f32() - 0.5).collect(),
+    }
+}
+
+/// A syntactically valid serialized container (v1 or v2, 0–4 layers,
+/// mixed monolithic/chunked, real CABAC payloads).
+pub fn container(rng: &mut SplitMix64) -> Vec<u8> {
+    let n_layers = rng.below(5) as usize;
+    let layers = (0..n_layers).map(|i| rand_layer(rng, i)).collect();
+    CompressedModel { name: format!("m{}", rng.below(1000)), layers }.serialize()
+}
+
+/// A syntactically valid HTTP/1.1 request head (no terminating blank
+/// line — the shape [`crate::serve::http::parse_request_head`] takes),
+/// covering every route the server exposes plus Range headers.
+pub fn http_request(rng: &mut SplitMix64) -> Vec<u8> {
+    let model = ["lenet5", "tiny", "m0"][rng.below(3) as usize];
+    let layer = rng.below(5);
+    let path = match rng.below(7) {
+        0 => "/healthz".to_string(),
+        1 => "/stats".to_string(),
+        2 => "/models".to_string(),
+        3 => format!("/models/{model}"),
+        4 => format!("/models/{model}/manifest"),
+        5 => format!("/models/{model}/layers/{layer}"),
+        _ => format!("/models/{model}/layers/{layer}/weights"),
+    };
+    let mut head = format!("GET {path} HTTP/1.1\r\nHost: 127.0.0.1:8080\r\n");
+    if rng.next_f64() < 0.5 {
+        head.push_str(&format!("Range: {}\r\n", range_value(rng)));
+    }
+    if rng.next_f64() < 0.3 {
+        head.push_str("Accept: */*\r\n");
+    }
+    head.push_str("Connection: close\r\n");
+    head.into_bytes()
+}
+
+/// A syntactically valid `Range` header value (`bytes=` forms from RFC
+/// 7233 — closed, open-ended, and suffix ranges).
+pub fn range_value(rng: &mut SplitMix64) -> String {
+    let a = rng.below(1 << 20);
+    let b = a + rng.below(1 << 20);
+    match rng.below(3) {
+        0 => format!("bytes={a}-{b}"),
+        1 => format!("bytes={a}-"),
+        _ => format!("bytes=-{}", 1 + rng.below(1 << 20)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fields_tile_the_container() {
+        // the recorded map must cover every byte, contiguously, for both
+        // container versions — this is what makes mutation offsets sound
+        let mut rng = SplitMix64::new(11);
+        let (mut saw_v1, mut saw_v2) = (false, false);
+        for _ in 0..32 {
+            let bytes = container(&mut rng);
+            match bytes[4] {
+                crate::model::container::VERSION => saw_v1 = true,
+                crate::model::container::VERSION_CHUNKED => saw_v2 = true,
+                v => panic!("unexpected version {v}"),
+            }
+            let fields = map_fields(&bytes).unwrap();
+            let mut pos = 0usize;
+            for f in &fields {
+                assert_eq!(f.offset, pos, "gap before {:?}", f.kind);
+                assert!(f.len > 0);
+                pos += f.len;
+            }
+            assert_eq!(pos, bytes.len());
+            let pe = prelude_end(&fields);
+            assert!(pe >= 6 && pe <= bytes.len());
+        }
+        assert!(saw_v1 && saw_v2, "generator must exercise both versions");
+    }
+
+    #[test]
+    fn generated_containers_parse_and_roundtrip() {
+        let mut rng = SplitMix64::new(23);
+        for _ in 0..16 {
+            let bytes = container(&mut rng);
+            let m = CompressedModel::deserialize(&bytes).unwrap();
+            assert_eq!(m.serialize(), bytes, "serializer output must be canonical");
+        }
+    }
+
+    #[test]
+    fn generated_requests_parse() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..32 {
+            let head = http_request(&mut rng);
+            let req = crate::serve::http::parse_request_head(&head).unwrap();
+            assert_eq!(req.method, "GET");
+            assert!(req.path.starts_with('/'));
+        }
+    }
+
+    #[test]
+    fn generated_ranges_are_syntactically_valid() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..32 {
+            let v = range_value(&mut rng);
+            assert!(v.starts_with("bytes="));
+            // against a body larger than any generated bound, every
+            // generated form must be satisfiable — i.e. truly valid
+            let req = crate::serve::http::parse_request_head(
+                format!("GET / HTTP/1.1\r\nRange: {v}\r\n").as_bytes(),
+            )
+            .unwrap();
+            assert!(matches!(
+                req.byte_range(1 << 21),
+                crate::serve::http::RangeOutcome::Satisfiable(_)
+            ), "{v}");
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Structure-aware fuzzing + fault injection for every hand-rolled
+//! parser and the serve path (dependency-free; `arbitrary`/`cargo-fuzz`
+//! are not in the offline registry).
+//!
+//! The dumb-random battery in `util::ptest::hostile_inputs` almost never
+//! survives the `DCBC` magic check, so the deep parsing code — chunk
+//! tables, density guards, the streaming state machine, Range
+//! arithmetic — was effectively unfuzzed. This subsystem fixes that in
+//! three parts:
+//!
+//! * [`gen`] — grammar-driven generators that emit *syntactically valid*
+//!   `.dcbc` containers (real CABAC payloads), HTTP/1.1 request heads,
+//!   and `Range` header values from the spec in `docs/FORMAT.md`, plus
+//!   a field map (`offset`, `len`, kind) recorded by re-walking the
+//!   emitted bytes.
+//! * [`mutate`] — format-aware operators over those field maps: varint
+//!   length skew, integer-boundary substitution, chunk-table lies,
+//!   layer-count lies, truncate-at-field-boundary, header splices,
+//!   trailing junk. Mutations are biased *past* the container prelude so
+//!   ≥ 50 % of cases reach layer/chunk handling (asserted by
+//!   `tests/fuzz_structured.rs`).
+//! * [`driver`] — runs each input against a parser target under the
+//!   asserted invariants: **never panic** (`catch_unwind`), **never
+//!   allocate beyond a budget** (the thread-local meter in [`alloc`],
+//!   when installed), **never loop** (per-case wall-clock budget), and
+//!   **decode–reencode idempotence** on accepted containers
+//!   (`serialize(deserialize(x))` is a fixpoint of
+//!   `deserialize∘serialize`). Crashers are ddmin-minimized and written
+//!   out for the checked-in corpus (`rust/fuzz_corpus/`), which
+//!   [`driver::replay_corpus`] replays deterministically.
+//!
+//! [`fault`] is the live half: hostile client sessions (byte dribble,
+//! slowloris partial heads, mid-request disconnect, stalled readers)
+//! thrown at a real server, used by `tests/fault_injection.rs` and the
+//! loadgen's `--hostile` mode.
+//!
+//! Entry points: `deepcabac fuzz` (CLI, used by the CI `fuzz-smoke`
+//! job) and the `fuzz_structured` / `fault_injection` test binaries.
+
+pub mod alloc;
+pub mod driver;
+pub mod fault;
+pub mod gen;
+pub mod mutate;
+
+pub use driver::{fuzz_target, replay_corpus, Budgets, Crash, CrashKind, FuzzStats, TargetKind};
+pub use fault::{FaultOutcome, FaultPlan, FaultyConn};

@@ -1,0 +1,266 @@
+//! Format-aware mutation operators.
+//!
+//! Dumb bit-flips on a container die at the magic/version check; these
+//! operators instead rewrite *fields* located by the map from
+//! [`super::gen::map_fields`]: varint length skew, integer-boundary
+//! substitution, chunk-table lies, truncation at field boundaries,
+//! trailing junk. Mutations are biased past the container prelude
+//! (probability [`POST_PRELUDE_BIAS`]) so most mutated inputs still
+//! clear [`parse_container_prefix`][crate::model::container::parse_container_prefix]
+//! and exercise layer/chunk handling — the coverage proxy
+//! `tests/fuzz_structured.rs` asserts on.
+//!
+//! HTTP heads and `Range` values mutate at the string level with the
+//! classic protocol attacks: CRLF injection, header duplication, NUL
+//! bytes, oversized values, LF-only line endings, numeric boundaries.
+
+use super::gen::{prelude_end, Field, FieldKind};
+use crate::bitstream::write_varint;
+use crate::util::SplitMix64;
+
+/// Probability (out of 8) that a mutation is restricted to fields past
+/// the container prelude.
+pub const POST_PRELUDE_BIAS: u64 = 7;
+
+/// Integer constants sitting on the format's decision boundaries: varint
+/// width changes (127/128, 16383/16384), the hostile-header guards
+/// (`MAX_CHUNKS`, `MAX_NAME_BYTES`, `MAX_DECODE_ELEMS`) and overflow
+/// territory.
+pub const BOUNDARY_U64: [u64; 12] = [
+    0,
+    1,
+    127,
+    128,
+    16383,
+    16384,
+    (1 << 16) + 1,  // MAX_CHUNKS + 1
+    (1 << 20) + 1,  // MAX_NAME_BYTES + 1
+    1 << 28,        // MAX_DECODE_ELEMS
+    (1 << 28) + 1,  // MAX_DECODE_ELEMS + 1
+    u64::MAX / 2 + 1, // Σ of two of these overflows u64 → checked_add paths
+    u64::MAX,
+];
+
+/// Mutate a serialized container using its field map. Applies 1–3
+/// field-level operators (in descending offset order, so earlier splices
+/// don't invalidate later offsets) and occasionally appends trailing
+/// junk.
+pub fn container(bytes: &[u8], fields: &[Field], rng: &mut SplitMix64) -> Vec<u8> {
+    let mut out = bytes.to_vec();
+    if fields.is_empty() {
+        return out;
+    }
+    let pe = prelude_end(fields);
+    let n_ops = 1 + rng.below(3) as usize;
+    let mut picks: Vec<usize> = (0..n_ops).map(|_| pick_field(fields, pe, rng)).collect();
+    picks.sort_unstable();
+    picks.dedup();
+    for &fi in picks.iter().rev() {
+        apply_field_op(&mut out, fields[fi], pe, rng);
+    }
+    if rng.next_f64() < 0.15 {
+        let n = 1 + rng.below(16);
+        out.extend((0..n).map(|_| rng.next_u64() as u8));
+    }
+    out
+}
+
+/// Pick a field index, biased [`POST_PRELUDE_BIAS`]/8 toward fields at
+/// or past the prelude end.
+fn pick_field(fields: &[Field], pe: usize, rng: &mut SplitMix64) -> usize {
+    let post: Vec<usize> = (0..fields.len()).filter(|&i| fields[i].offset >= pe).collect();
+    if !post.is_empty() && rng.below(8) < POST_PRELUDE_BIAS {
+        post[rng.below(post.len() as u64) as usize]
+    } else {
+        rng.below(fields.len() as u64) as usize
+    }
+}
+
+fn apply_field_op(out: &mut Vec<u8>, f: Field, pe: usize, rng: &mut SplitMix64) {
+    if f.offset >= out.len() {
+        return; // a previous truncation already removed this field
+    }
+    if f.kind.is_varint() {
+        let old = crate::bitstream::read_varint(&out[f.offset..]).map(|(v, _)| v).unwrap_or(0);
+        let new = match rng.below(8) {
+            0 => old.wrapping_add(1),
+            1 => old.wrapping_sub(1),
+            2 => old.wrapping_mul(2),
+            3 => old / 2,
+            4 => old ^ (1 << rng.below(40)),
+            _ => BOUNDARY_U64[rng.below(BOUNDARY_U64.len() as u64) as usize],
+        };
+        splice_varint(out, f, new);
+        return;
+    }
+    // raw field: truncate at the boundary (post-prelude only), blank it,
+    // or flip bytes inside it
+    match rng.below(4) {
+        0 if f.offset >= pe => out.truncate(f.offset + rng.below(f.len as u64 + 1) as usize),
+        1 => {
+            let end = (f.offset + f.len).min(out.len());
+            let fill = if rng.next_u64() & 1 == 0 { 0x00 } else { 0xFF };
+            out[f.offset..end].iter_mut().for_each(|b| *b = fill);
+        }
+        _ => {
+            let end = (f.offset + f.len).min(out.len());
+            for _ in 0..1 + rng.below(4) {
+                if end > f.offset {
+                    let p = f.offset + rng.below((end - f.offset) as u64) as usize;
+                    out[p] ^= 1 << rng.below(8);
+                }
+            }
+        }
+    }
+}
+
+/// Replace the varint at `f` with the LEB128 encoding of `new` — the
+/// replacement may be a different byte length, so everything after the
+/// field shifts.
+fn splice_varint(out: &mut Vec<u8>, f: Field, new: u64) {
+    let mut enc = Vec::with_capacity(10);
+    write_varint(&mut enc, new);
+    let end = (f.offset + f.len).min(out.len());
+    out.splice(f.offset..end, enc);
+}
+
+/// Mutate an HTTP request head at the string/byte level.
+pub fn http(head: &[u8], rng: &mut SplitMix64) -> Vec<u8> {
+    let mut out = head.to_vec();
+    for _ in 0..1 + rng.below(2) {
+        if out.is_empty() {
+            break;
+        }
+        match rng.below(8) {
+            0 => out.truncate(rng.below(out.len() as u64 + 1) as usize),
+            1 => {
+                // duplicate one header line
+                let lines: Vec<&[u8]> = out.split(|&b| b == b'\n').collect();
+                if lines.len() > 1 {
+                    let l = lines[rng.below(lines.len() as u64) as usize].to_vec();
+                    out.extend_from_slice(&l);
+                    out.extend_from_slice(b"\r\n");
+                }
+            }
+            2 => {
+                // CRLF injection mid-value
+                let p = rng.below(out.len() as u64) as usize;
+                out.splice(p..p, *b"\r\nX-Injected: 1");
+            }
+            3 => {
+                let p = rng.below(out.len() as u64) as usize;
+                out.insert(p, if rng.next_u64() & 1 == 0 { 0x00 } else { 0xFF });
+            }
+            4 => {
+                // oversized header value (~20 KB, past MAX_HEAD_BYTES)
+                out.extend_from_slice(b"X-Big: ");
+                out.extend(std::iter::repeat(b'a').take(20 * 1024));
+                out.extend_from_slice(b"\r\n");
+            }
+            5 => {
+                // junk method
+                let junk: Vec<u8> = (0..1 + rng.below(6)).map(|_| rng.next_u64() as u8).collect();
+                out.splice(0..0, junk);
+            }
+            6 => {
+                // LF-only line endings
+                out.retain(|&b| b != b'\r');
+            }
+            _ => {
+                let p = rng.below(out.len() as u64) as usize;
+                out[p] ^= 1 << rng.below(8);
+            }
+        }
+    }
+    out
+}
+
+/// Mutate a `Range` header value with numeric-boundary and syntax
+/// attacks.
+pub fn range(value: &str, rng: &mut SplitMix64) -> String {
+    match rng.below(9) {
+        0 => {
+            // substitute one number with a boundary constant
+            let n = BOUNDARY_U64[rng.below(BOUNDARY_U64.len() as u64) as usize];
+            match value.split_once('-') {
+                Some((a, _)) if rng.next_u64() & 1 == 0 => format!("{a}-{n}"),
+                Some((_, b)) => format!("bytes={n}-{b}"),
+                None => format!("bytes={n}-"),
+            }
+        }
+        1 => "bytes=-0".into(),
+        2 => {
+            // beyond u64: no longer parses as an integer
+            "bytes=0-99999999999999999999999999".into()
+        }
+        3 => value.replace('-', "--"),
+        4 => format!("{value},{value}"),
+        5 => value.replace("bytes", "bytez"),
+        6 => format!(" {} ", value.replace('=', " = ")),
+        7 => format!("bytes=-{}", u64::MAX),
+        _ => {
+            let mut b = value.as_bytes().to_vec();
+            if !b.is_empty() {
+                let p = rng.below(b.len() as u64) as usize;
+                b[p] = rng.next_u64() as u8;
+            }
+            String::from_utf8_lossy(&b).into_owned()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::container::{parse_container_prefix, Parsed};
+
+    #[test]
+    fn mutations_mostly_survive_the_prelude() {
+        // the structural bias claim behind the coverage proxy: most
+        // mutated containers still parse a complete prelude
+        let mut rng = SplitMix64::new(77);
+        let (mut survived, mut total) = (0usize, 0usize);
+        for _ in 0..50 {
+            let bytes = super::super::gen::container(&mut rng);
+            let fields = super::super::gen::map_fields(&bytes).unwrap();
+            for _ in 0..4 {
+                let m = container(&bytes, &fields, &mut rng);
+                total += 1;
+                if matches!(parse_container_prefix(&m), Ok(Parsed::Complete(..))) {
+                    survived += 1;
+                }
+            }
+        }
+        assert!(
+            survived * 2 > total,
+            "only {survived}/{total} mutants survived the prelude"
+        );
+    }
+
+    #[test]
+    fn mutation_is_deterministic_per_seed() {
+        let bytes = {
+            let mut rng = SplitMix64::new(3);
+            super::super::gen::container(&mut rng)
+        };
+        let fields = super::super::gen::map_fields(&bytes).unwrap();
+        let a = container(&bytes, &fields, &mut SplitMix64::new(42));
+        let b = container(&bytes, &fields, &mut SplitMix64::new(42));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn http_and_range_mutators_accept_any_input() {
+        let mut rng = SplitMix64::new(13);
+        let _ = http(b"", &mut rng);
+        let _ = http(b"G", &mut rng);
+        let _ = range("", &mut rng);
+        let _ = range("bytes=0-1", &mut rng);
+        for _ in 0..64 {
+            let head = super::super::gen::http_request(&mut rng);
+            let _ = http(&head, &mut rng);
+            let v = super::super::gen::range_value(&mut rng);
+            let _ = range(&v, &mut rng);
+        }
+    }
+}

@@ -17,6 +17,14 @@ use deepcabac::tensor::npy;
 use deepcabac::util::json::{self, Json};
 use deepcabac::util::{fnv1a, Timer};
 
+/// Metering allocator from the fuzz subsystem: installed by the CLI (not
+/// the library) so `deepcabac fuzz` *enforces* per-case allocation
+/// budgets instead of just reporting them as unmetered. Pass-through to
+/// the system allocator plus two thread-local counters — negligible
+/// overhead for every other subcommand.
+#[global_allocator]
+static ALLOC: deepcabac::fuzz::alloc::CountingAlloc = deepcabac::fuzz::alloc::CountingAlloc;
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
@@ -49,6 +57,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "fetch" => cmd_fetch(args),
         "loadgen" => cmd_loadgen(args),
+        "fuzz" => cmd_fuzz(args),
         other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -672,6 +681,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             )
             .map_err(|e| anyhow!(e))?,
+        // get_count rejects 0: a zero deadline would time out every read
+        read_timeout: std::time::Duration::from_millis(
+            args.get_count("read-timeout", 10_000).map_err(|e| anyhow!(e))? as u64,
+        ),
+        write_timeout: std::time::Duration::from_millis(
+            args.get_count("write-timeout", 30_000).map_err(|e| anyhow!(e))? as u64,
+        ),
     };
     let handle = deepcabac::serve::server::start(opts.clone())?;
     // the smoke script greps this exact line for the ephemeral port
@@ -804,6 +820,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         url: args.get("url").context("--url required (http://HOST:PORT)")?.to_string(),
         clients: args.get_count("clients", 8).map_err(|e| anyhow!(e))?,
         requests: args.get_count("requests", 32).map_err(|e| anyhow!(e))?,
+        hostile: args.get_usize("hostile", 0).map_err(|e| anyhow!(e))?,
         out: Some(std::path::PathBuf::from(args.get_or("out", "BENCH_serve.json"))),
     };
     let report = deepcabac::serve::loadgen::run(&opts)?;
@@ -818,9 +835,111 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.throughput_rps,
         human_bytes(report.bytes_transferred as usize),
     );
+    if report.failures > 0 {
+        let t = &report.failure_taxonomy;
+        println!(
+            "failure taxonomy: {} connect-refused, {} timeout, {} reset, \
+             {} malformed-response, {} http-error, {} other",
+            t.connect_refused, t.timeout, t.reset, t.malformed_response, t.http_error, t.other,
+        );
+    }
+    if opts.hostile > 0 {
+        let i = &report.injected;
+        println!(
+            "injected ({} hostile threads): {} dribble, {} slowloris, {} disconnect, \
+             {} stalled-reader; {} unexpected server reactions",
+            opts.hostile, i.dribble, i.slowloris, i.disconnect, i.stalled_reader, i.unexpected,
+        );
+    }
     if let Some(out) = &opts.out {
         println!("wrote {out:?}");
     }
-    anyhow::ensure!(report.failures == 0, "{} requests failed", report.failures);
+    anyhow::ensure!(
+        report.failures == 0,
+        "{} healthy-client requests failed",
+        report.failures
+    );
+    anyhow::ensure!(
+        report.injected.unexpected == 0,
+        "{} hostile sessions got reactions outside their contract",
+        report.injected.unexpected
+    );
+    Ok(())
+}
+
+/// Structure-aware fuzzing (the CI `fuzz-smoke` entry point): replay the
+/// checked-in crasher corpus, then run fixed-seed generate-and-mutate
+/// batches per target. Exits nonzero on any invariant violation, after
+/// writing minimized reproducers to `--artifacts` for triage / corpus
+/// promotion.
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use deepcabac::fuzz::{fuzz_target, replay_corpus, Budgets, Crash, TargetKind};
+
+    let targets: Vec<TargetKind> = match args.get_or("target", "all") {
+        "all" => TargetKind::all().to_vec(),
+        "container" => vec![TargetKind::Container],
+        "stream" => vec![TargetKind::Stream],
+        "http" => vec![TargetKind::Http],
+        "range" => vec![TargetKind::Range],
+        other => bail!("--target must be container|stream|http|range|all, got {other:?}"),
+    };
+    let cases = args.get_count("cases", 256).map_err(|e| anyhow!(e))?;
+    let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
+    let corpus = std::path::PathBuf::from(args.get_or("corpus", "fuzz_corpus"));
+    let artifacts = args.get("artifacts").map(std::path::PathBuf::from);
+    let budgets = Budgets::default();
+
+    let mut all_crashes: Vec<Crash> = Vec::new();
+
+    let (rstats, rcrashes) = replay_corpus(&corpus, &budgets)?;
+    println!(
+        "corpus replay ({corpus:?}): {} cases, {} crashes{}",
+        rstats.cases,
+        rstats.crashes,
+        if rstats.alloc_metered { "" } else { " (alloc unmetered)" },
+    );
+    all_crashes.extend(rcrashes);
+
+    for &t in &targets {
+        let (stats, crashes) = fuzz_target(t, cases, seed, &budgets);
+        println!(
+            "{:<9} {} cases: {} crashes, {} survived prefix ({:.0}%), {} accepted",
+            t.as_str(),
+            stats.cases,
+            stats.crashes,
+            stats.survived_prefix,
+            stats.survival_ratio() * 100.0,
+            stats.accepted,
+        );
+        // the coverage proxy from the structure-aware mutator's contract:
+        // most mutants must get past the container prelude into
+        // layer/chunk handling, or the fuzzer has regressed into a
+        // magic-check bouncer
+        if t == TargetKind::Container && stats.crashes == 0 {
+            anyhow::ensure!(
+                stats.survival_ratio() >= 0.5,
+                "container prelude survival {:.0}% < 50% — mutator lost its structure awareness",
+                stats.survival_ratio() * 100.0
+            );
+        }
+        all_crashes.extend(crashes);
+    }
+
+    if !all_crashes.is_empty() {
+        if let Some(dir) = &artifacts {
+            std::fs::create_dir_all(dir)?;
+            for (i, c) in all_crashes.iter().enumerate() {
+                let p = dir.join(format!("crash_{:03}_{}.bin", i, c.target.as_str()));
+                std::fs::write(&p, &c.input)?;
+                println!("wrote {p:?} ({}): {}", human_bytes(c.input.len()), c.kind);
+            }
+        } else {
+            for c in &all_crashes {
+                println!("crash [{}] ({} bytes): {}", c.target.as_str(), c.input.len(), c.kind);
+            }
+        }
+        bail!("{} invariant violations (minimized reproducers above)", all_crashes.len());
+    }
+    println!("fuzz: all invariants held");
     Ok(())
 }

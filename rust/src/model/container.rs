@@ -208,7 +208,9 @@ impl CompressedModel {
             Parsed::Complete(p, n) => (p, n),
             Parsed::NeedMore => bail!("truncated container prelude"),
         };
-        let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 16));
+        // cap the pre-allocation: n_layers is attacker-controlled, and a
+        // 20-byte hostile prelude must not reserve megabytes up front
+        let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 10));
         for _ in 0..prefix.n_layers {
             let hdr = match parse_layer_header(&buf[pos..], prefix.version)? {
                 Parsed::Complete(h, n) => {
@@ -441,6 +443,17 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
     // arbitrarily large claimed payload
     if payload_len > n_weights.saturating_mul(512).saturating_add(4096) {
         bail!("layer claims {payload_len} payload bytes for {n_weights} weights (hostile header?)");
+    }
+    // ...and the reverse direction: a level-density bound. The M-coder's
+    // cheapest possible bin costs log2(512/507) ≈ 0.014 bits (rLPS ≥ 5 at
+    // the most-confident state, range < 512), and every level spends at
+    // least one sigflag bin, so a real stream codes < 600 levels per
+    // payload byte. 2048/byte leaves > 3× headroom while stopping a
+    // hostile header from claiming 2^28 weights against a tiny payload,
+    // which would otherwise force a ~1 GiB allocation and 2^28 decode
+    // steps out of a few dozen input bytes.
+    if n_weights > payload_len.saturating_mul(2048).saturating_add(4096) {
+        bail!("layer claims {n_weights} weights for {payload_len} payload bytes (hostile header?)");
     }
     // a chunk table must tile the payload and the weight count
     if !chunks.is_empty() {
@@ -701,6 +714,117 @@ mod tests {
         layer.chunks[2].bytes -= 1;
         let m = CompressedModel { name: "bad".into(), layers: vec![layer] };
         assert!(CompressedModel::deserialize(&m.serialize()).is_err());
+    }
+
+    /// Hand-write a v2 layer header with arbitrary (unvalidated) chunk
+    /// table and count fields — the public API canonicalizes, so hostile
+    /// tables have to be authored at the byte level.
+    fn raw_v2_container(
+        chunks: &[(u64, u64)],
+        n_weights: u64,
+        payload_len: u64,
+        payload: &[u8],
+    ) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION_CHUNKED);
+        write_str(&mut out, "raw");
+        write_varint(&mut out, 1); // n_layers
+        write_str(&mut out, "l0");
+        write_varint(&mut out, 1); // ndims
+        write_varint(&mut out, payload.len().max(1) as u64);
+        out.extend_from_slice(&0.5f32.to_le_bytes());
+        write_varint(&mut out, 3); // max_level
+        write_varint(&mut out, 7); // s_param
+        out.extend_from_slice(&[1, 1, 0, 0]); // n_abs_flags, EG(0), flags
+        write_varint(&mut out, chunks.len() as u64);
+        for &(w, b) in chunks {
+            write_varint(&mut out, w);
+            write_varint(&mut out, b);
+        }
+        write_varint(&mut out, n_weights);
+        write_varint(&mut out, payload_len);
+        out.extend_from_slice(payload);
+        write_varint(&mut out, 0); // bias_len
+        out
+    }
+
+    #[test]
+    fn rejects_hostile_weight_density() {
+        // a header claiming 2^28 weights against an 8-byte payload used
+        // to force a ~1 GiB decode allocation; now it's a parse error
+        let bytes = raw_v2_container(&[(1 << 28, 8)], 1 << 28, 8, &[0u8; 8]);
+        let err = CompressedModel::deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains("hostile header"), "{err}");
+        // the streaming decoder shares the guard
+        let mut dec = crate::serve::stream::StreamDecoder::new();
+        assert!(dec.feed(&bytes).is_err());
+        // boundary: exactly payload_len * 2048 + 4096 weights is accepted
+        // structurally (the decode itself is then payload-bounded)
+        let n_ok = 8 * 2048 + 4096;
+        let ok = raw_v2_container(&[(n_ok, 8)], n_ok, 8, &[0u8; 8]);
+        let m = CompressedModel::deserialize(&ok).unwrap();
+        assert_eq!(m.layers[0].n_weights, n_ok as usize);
+        let over = raw_v2_container(&[(n_ok + 1, 8)], n_ok + 1, 8, &[0u8; 8]);
+        assert!(CompressedModel::deserialize(&over).is_err());
+    }
+
+    #[test]
+    fn rejects_overflowing_and_overlapping_chunk_tables() {
+        // Σ chunk_bytes overflowing usize must hit the checked_add path,
+        // not wrap around into a "consistent" table
+        let huge = u64::MAX / 2 + 1;
+        let bytes = raw_v2_container(&[(4, huge), (4, huge)], 8, 8, &[0u8; 8]);
+        let err = CompressedModel::deserialize(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("overflow") || err.contains("hostile") || err.contains("inconsistent"),
+            "{err}"
+        );
+        // Σ chunk_n_weights overflow likewise
+        let bytes = raw_v2_container(&[(huge, 4), (huge, 4)], 8, 8, &[0u8; 8]);
+        assert!(CompressedModel::deserialize(&bytes).is_err());
+        // out-of-order/overlapping spans can only be expressed as a table
+        // whose sums disagree with the layer totals — both directions
+        let bytes = raw_v2_container(&[(4, 6), (4, 6)], 8, 8, &[0u8; 8]);
+        assert!(CompressedModel::deserialize(&bytes).is_err(), "byte sum must match");
+        let bytes = raw_v2_container(&[(6, 4), (6, 4)], 8, 8, &[0u8; 8]);
+        assert!(CompressedModel::deserialize(&bytes).is_err(), "weight sum must match");
+        // zero chunks is malformed, as is a count past MAX_CHUNKS
+        let bytes = raw_v2_container(&[], 8, 8, &[0u8; 8]);
+        assert!(CompressedModel::deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn zero_weight_layer_mid_container_roundtrips() {
+        // an empty tensor between two real ones: n_weights = 0,
+        // payload_len = 0 — legal, decodes to nothing, byte-stable
+        let cfg = CodecConfig::default();
+        let levels: Vec<i32> = (0..64).map(|i| (i % 5 - 2) as i32).collect();
+        let mk = |name: &str, lv: &[i32]| CompressedLayer {
+            name: name.into(),
+            dims: vec![lv.len().max(1)],
+            grid: QuantGrid { delta: 0.25, max_level: 4 },
+            s_param: 3,
+            cfg,
+            n_weights: lv.len(),
+            payload: encode_levels(lv, cfg),
+            chunks: vec![],
+            bias: vec![],
+        };
+        let m = CompressedModel {
+            name: "holes".into(),
+            layers: vec![mk("a", &levels), mk("empty", &[]), mk("b", &levels)],
+        };
+        let bytes = m.serialize();
+        let m2 = CompressedModel::deserialize(&bytes).unwrap();
+        assert_eq!(m2.serialize(), bytes);
+        assert_eq!(m2.layers[1].n_weights, 0);
+        assert!(m2.layers[1].decode_levels().is_empty());
+        assert_eq!(m2.layers[2].decode_levels(), levels);
+        // and the streaming decoder delivers all three, empty included
+        let streamed = crate::serve::stream::decode_all(&bytes).unwrap();
+        assert_eq!(streamed.len(), 3);
+        assert!(streamed[1].weights.is_empty());
     }
 
     #[test]

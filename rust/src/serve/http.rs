@@ -90,7 +90,8 @@ pub fn sanitize_header_value(s: &str) -> String {
     s.chars().map(|c| if c.is_control() { '_' } else { c }).collect()
 }
 
-/// Read and parse one request head off the stream.
+/// Read one request head off the stream (up to the blank line), then
+/// parse it with [`parse_request_head`].
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     // hard-cap everything read while parsing the head, so a hostile
     // client cannot grow a single header line without bound
@@ -98,7 +99,9 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let mut head = Vec::new();
     loop {
         let mut line = Vec::new();
-        let n = reader.read_until(b'\n', &mut line)?;
+        // tag_io: the server's 408 path keys off the [kind=…] tag to tell
+        // a read-deadline expiry apart from genuinely malformed bytes
+        let n = reader.read_until(b'\n', &mut line).map_err(tag_io)?;
         if n == 0 {
             if head.len() + line.len() >= MAX_HEAD_BYTES {
                 bail!("request head too large");
@@ -113,7 +116,19 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
             bail!("request head too large");
         }
     }
-    let head = std::str::from_utf8(&head).context("non-utf8 request head")?;
+    parse_request_head(&head)
+}
+
+/// Parse a request head (request line + header lines, the terminating
+/// blank line already stripped) out of raw bytes. Factored out of
+/// [`read_request`] so the structure-aware fuzzer (`crate::fuzz`) can
+/// drive the parser directly, without a socket; every hostile byte
+/// sequence must come back as `Ok` or `Err`, never a panic.
+pub fn parse_request_head(head: &[u8]) -> Result<Request> {
+    if head.len() > MAX_HEAD_BYTES {
+        bail!("request head too large");
+    }
+    let head = std::str::from_utf8(head).context("non-utf8 request head")?;
     let mut lines = head.lines();
     let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
     let mut parts = request_line.split_whitespace();
@@ -162,6 +177,15 @@ pub fn write_error(stream: &mut TcpStream, status: u16, reason: &str, msg: &str)
 // ---------------------------------------------------------------------------
 // Client side
 // ---------------------------------------------------------------------------
+
+/// Convert a client-side I/O error into an `anyhow` error whose message
+/// carries the [`std::io::ErrorKind`] as a machine-readable `[kind=…]`
+/// tag. The vendored `anyhow` shim is string-backed (no `downcast_ref`),
+/// so the loadgen failure taxonomy classifies on this tag instead of on
+/// platform-dependent `strerror` text.
+pub fn tag_io(e: std::io::Error) -> anyhow::Error {
+    anyhow!("{e} [kind={:?}]", e.kind())
+}
 
 /// Split `http://host:port/path` into (`host:port`, `/path`).
 pub fn parse_url(url: &str) -> Result<(String, String)> {
@@ -223,11 +247,25 @@ pub fn get_streaming(
     range: Option<(u64, u64)>,
     sink: &mut dyn FnMut(&[u8]) -> Result<()>,
 ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    get_streaming_with(addr, path, range, std::time::Duration::from_secs(30), sink)
+}
+
+/// [`get_streaming`] with an explicit per-socket-operation deadline —
+/// fault-injection tests drive hostile/stalling servers with sub-second
+/// timeouts so a wedged peer surfaces as a fast `Err`, not a 30 s hang.
+pub fn get_streaming_with(
+    addr: &str,
+    path: &str,
+    range: Option<(u64, u64)>,
+    timeout: std::time::Duration,
+    sink: &mut dyn FnMut(&[u8]) -> Result<()>,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(tag_io)
+        .with_context(|| format!("connecting to {addr}"))?;
     // a stalled/saturated server must surface as an error, not a hang
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
-    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
     let range_hdr = match range {
         Some((a, b)) => format!("Range: bytes={a}-{b}\r\n"),
         None => String::new(),
@@ -235,13 +273,13 @@ pub fn get_streaming(
     let req = format!(
         "GET {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: */*\r\n{range_hdr}Connection: close\r\n\r\n"
     );
-    stream.write_all(req.as_bytes())?;
-    stream.flush()?;
+    stream.write_all(req.as_bytes()).map_err(tag_io)?;
+    stream.flush().map_err(tag_io)?;
 
     let mut reader = BufReader::new(stream);
     // status line
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    reader.read_line(&mut line).map_err(tag_io)?;
     let mut parts = line.split_whitespace();
     let proto = parts.next().unwrap_or("");
     if !proto.starts_with("HTTP/1.") {
@@ -252,7 +290,7 @@ pub fn get_streaming(
     let mut headers = Vec::new();
     loop {
         let mut line = String::new();
-        let n = reader.read_line(&mut line)?;
+        let n = reader.read_line(&mut line).map_err(tag_io)?;
         if n == 0 {
             bail!("connection closed in response head");
         }
@@ -281,7 +319,7 @@ pub fn get_streaming(
             Some(r) => r.min(chunk.len()),
             None => chunk.len(),
         };
-        let n = reader.read(&mut chunk[..want])?;
+        let n = reader.read(&mut chunk[..want]).map_err(tag_io)?;
         if n == 0 {
             if let Some(r) = remaining {
                 if r > 0 {
@@ -333,6 +371,48 @@ mod tests {
         assert_eq!(r(Some("bytes=x-y")), Ignored);
         assert_eq!(r(Some("items=0-4")), Ignored);
         assert_eq!(r(Some("bytes=0-4,10-12")), Ignored);
+    }
+
+    #[test]
+    fn range_integer_boundaries() {
+        use RangeOutcome::*;
+        let r = |spec, len| req_with_range(Some(spec)).byte_range(len);
+        // suffix range asking for exactly the file length: whole body, 206
+        assert_eq!(r("bytes=-100", 100), Satisfiable(0..100));
+        // suffix larger than the body clamps to the whole body
+        assert_eq!(r("bytes=-101", 100), Satisfiable(0..100));
+        // bytes=N-M with M = u64::MAX: end saturates then clamps to len
+        assert_eq!(r("bytes=0-18446744073709551615", 100), Satisfiable(0..100));
+        assert_eq!(r("bytes=99-18446744073709551615", 100), Satisfiable(99..100));
+        // start = u64::MAX is syntactically valid but outside any body
+        assert_eq!(r("bytes=18446744073709551615-", 100), Unsatisfiable);
+        // suffix of u64::MAX bytes clamps to the whole body
+        assert_eq!(r("bytes=-18446744073709551615", 100), Satisfiable(0..100));
+        // 2^64 and beyond no longer parse as u64 → ignored per RFC 7233
+        assert_eq!(r("bytes=0-18446744073709551616", 100), Ignored);
+        assert_eq!(r("bytes=99999999999999999999999999-", 100), Ignored);
+        // zero-length body: every concrete range is unsatisfiable
+        assert_eq!(r("bytes=0-0", 0), Unsatisfiable);
+        assert_eq!(r("bytes=-1", 0), Unsatisfiable);
+    }
+
+    #[test]
+    fn request_head_parser_handles_hostile_bytes() {
+        // the extracted parser must accept/reject, never panic
+        let ok = parse_request_head(b"GET /x HTTP/1.1\r\nHost: h\r\nRange: bytes=0-1\r\n").unwrap();
+        assert_eq!(ok.method, "GET");
+        assert_eq!(ok.path, "/x");
+        assert_eq!(ok.header("range"), Some("bytes=0-1"));
+        // bare LF line endings parse too (str::lines splits on \n)
+        assert!(parse_request_head(b"GET / HTTP/1.1\nHost: h\n").is_ok());
+        // missing path, empty head, non-utf8, oversized: structured errors
+        assert!(parse_request_head(b"").is_err());
+        assert!(parse_request_head(b"GET").is_err());
+        assert!(parse_request_head(b"\xff\xfe\r\n").is_err());
+        assert!(parse_request_head(&vec![b'a'; MAX_HEAD_BYTES + 1]).is_err());
+        // header lines without a colon are skipped, not fatal
+        let r = parse_request_head(b"GET / HTTP/1.1\r\ngarbage line\r\nHost: h\r\n").unwrap();
+        assert_eq!(r.header("host"), Some("h"));
     }
 
     #[test]

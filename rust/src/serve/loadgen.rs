@@ -4,13 +4,20 @@
 //! of the compressed-bytes and decoded-weights endpoints (layers picked
 //! round-robin across every model the server lists), and reports
 //! p50/p99/mean latency + throughput, machine-readable to
-//! `BENCH_serve.json`.
+//! `BENCH_serve.json`. Failures are classified into a
+//! [`FailureTaxonomy`] (connect-refused / timeout / reset /
+//! malformed-response / http-error) so a red run says *what* broke, not
+//! just how much. `hostile > 0` adds that many attacker threads running
+//! the fault-injection sessions from [`crate::fuzz::fault`] alongside
+//! the healthy clients; their outcomes are reported separately under
+//! `injected` and never count as load failures.
 
 use super::http;
+use crate::fuzz::fault;
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct LoadgenOptions {
@@ -20,14 +27,96 @@ pub struct LoadgenOptions {
     pub clients: usize,
     /// Requests per client.
     pub requests: usize,
+    /// Hostile (fault-injecting) threads to run alongside the clients.
+    pub hostile: usize,
     /// Where to write the JSON report (None = don't write).
     pub out: Option<PathBuf>,
+}
+
+/// Healthy-client failures, split by root cause. Classification keys off
+/// the `[kind=…]` tags [`http::tag_io`] attaches (the vendored anyhow
+/// shim is string-backed, so `ErrorKind` can't travel any other way),
+/// with message-keyword fallbacks for the client's own `bail!` errors.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FailureTaxonomy {
+    /// TCP connect refused (server down / not listening).
+    pub connect_refused: usize,
+    /// Socket deadline expired (read or write).
+    pub timeout: usize,
+    /// Peer reset/aborted the connection mid-exchange.
+    pub reset: usize,
+    /// Bytes arrived but didn't parse as the expected HTTP response.
+    pub malformed_response: usize,
+    /// A well-formed response with a non-200 status.
+    pub http_error: usize,
+    /// Anything else.
+    pub other: usize,
+}
+
+impl FailureTaxonomy {
+    /// Classify one client-side error message.
+    pub fn record_error(&mut self, msg: &str) {
+        if msg.contains("[kind=ConnectionRefused]") {
+            self.connect_refused += 1;
+        } else if msg.contains("[kind=WouldBlock]") || msg.contains("[kind=TimedOut]") {
+            self.timeout += 1;
+        } else if msg.contains("[kind=ConnectionReset]")
+            || msg.contains("[kind=BrokenPipe]")
+            || msg.contains("[kind=ConnectionAborted]")
+        {
+            self.reset += 1;
+        } else if msg.contains("not an HTTP response")
+            || msg.contains("bad status")
+            || msg.contains("connection closed")
+        {
+            self.malformed_response += 1;
+        } else {
+            self.other += 1;
+        }
+    }
+
+    pub fn record_status(&mut self, _status: u16) {
+        self.http_error += 1;
+    }
+
+    pub fn total(&self) -> usize {
+        self.connect_refused
+            + self.timeout
+            + self.reset
+            + self.malformed_response
+            + self.http_error
+            + self.other
+    }
+
+    fn merge(&mut self, o: &FailureTaxonomy) {
+        self.connect_refused += o.connect_refused;
+        self.timeout += o.timeout;
+        self.reset += o.reset;
+        self.malformed_response += o.malformed_response;
+        self.http_error += o.http_error;
+        self.other += o.other;
+    }
+}
+
+/// What the hostile threads did and how the server reacted. Sessions are
+/// *supposed* to fail — only `unexpected` (a reaction outside the
+/// session's contract, e.g. a dribbled-but-complete request not getting
+/// its 200) indicates a server bug.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InjectedReport {
+    pub dribble: usize,
+    pub slowloris: usize,
+    pub disconnect: usize,
+    pub stalled_reader: usize,
+    pub unexpected: usize,
 }
 
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
     pub total_requests: usize,
     pub failures: usize,
+    pub failure_taxonomy: FailureTaxonomy,
+    pub injected: InjectedReport,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
@@ -78,13 +167,24 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     struct ClientResult {
         latencies_ms: Vec<f64>,
         failures: usize,
+        taxonomy: FailureTaxonomy,
         bytes: u64,
         bytes_requests: usize,
         weights_requests: usize,
     }
 
     let t0 = Instant::now();
-    let results: Vec<ClientResult> = std::thread::scope(|scope| {
+    let (results, injected): (Vec<ClientResult>, InjectedReport) = std::thread::scope(|scope| {
+        let hostile_handles: Vec<_> = (0..opts.hostile)
+            .map(|h| {
+                let addr = &addr;
+                let base_path = &base_path;
+                let targets = &targets;
+                scope.spawn(move || {
+                    hostile_session_loop(addr, base_path, targets, h, opts.requests)
+                })
+            })
+            .collect();
         let handles: Vec<_> = (0..opts.clients)
             .map(|c| {
                 let addr = &addr;
@@ -94,6 +194,7 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                     let mut r = ClientResult {
                         latencies_ms: Vec::with_capacity(opts.requests),
                         failures: 0,
+                        taxonomy: FailureTaxonomy::default(),
                         bytes: 0,
                         bytes_requests: 0,
                         weights_requests: 0,
@@ -125,10 +226,12 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                                     path, resp.status
                                 );
                                 r.failures += 1;
+                                r.taxonomy.record_status(resp.status);
                             }
                             Err(e) => {
                                 eprintln!("[loadgen] {path} -> {e}");
                                 r.failures += 1;
+                                r.taxonomy.record_error(&format!("{e:#}"));
                             }
                         }
                     }
@@ -136,17 +239,30 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+        let results =
+            handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+        let mut injected = InjectedReport::default();
+        for h in hostile_handles {
+            let part = h.join().expect("hostile thread");
+            injected.dribble += part.dribble;
+            injected.slowloris += part.slowloris;
+            injected.disconnect += part.disconnect;
+            injected.stalled_reader += part.stalled_reader;
+            injected.unexpected += part.unexpected;
+        }
+        (results, injected)
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut latencies: Vec<f64> = Vec::new();
     let mut failures = 0usize;
+    let mut taxonomy = FailureTaxonomy::default();
     let mut bytes = 0u64;
     let (mut breq, mut wreq) = (0usize, 0usize);
     for r in results {
         latencies.extend_from_slice(&r.latencies_ms);
         failures += r.failures;
+        taxonomy.merge(&r.taxonomy);
         bytes += r.bytes;
         breq += r.bytes_requests;
         wreq += r.weights_requests;
@@ -158,6 +274,8 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     let report = LoadgenReport {
         total_requests: opts.clients * opts.requests,
         failures,
+        failure_taxonomy: taxonomy,
+        injected,
         p50_ms: percentile(&latencies, 50.0),
         p99_ms: percentile(&latencies, 99.0),
         mean_ms: latencies.iter().sum::<f64>() / latencies.len() as f64,
@@ -176,6 +294,67 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     Ok(report)
 }
 
+/// One hostile thread: `rounds` fault-injection sessions cycling over
+/// the four pathologies. `unexpected` counts server reactions outside
+/// each session's contract — a dribbled-but-complete request must get
+/// its 200, and a slowloris must get 408 or a close (any socket error
+/// also means the server shed the connection, which is fine).
+fn hostile_session_loop(
+    addr: &str,
+    base_path: &str,
+    targets: &[Target],
+    thread_idx: usize,
+    rounds: usize,
+) -> InjectedReport {
+    let mut r = InjectedReport::default();
+    let deadline = Duration::from_secs(30);
+    for i in 0..rounds {
+        let t = &targets[(thread_idx + i) % targets.len()];
+        let path = format!("{base_path}/models/{}/layers/{}", t.model, t.layer);
+        match (thread_idx + i) % 4 {
+            0 => {
+                r.dribble += 1;
+                match fault::dribble_request(addr, &path, Duration::from_millis(1), deadline) {
+                    Ok(fault::FaultOutcome::Status(200)) => {}
+                    other => {
+                        eprintln!("[loadgen] hostile dribble -> {other:?}");
+                        r.unexpected += 1;
+                    }
+                }
+            }
+            1 => {
+                r.slowloris += 1;
+                match fault::slowloris(addr, deadline) {
+                    Ok(fault::FaultOutcome::Status(408))
+                    | Ok(fault::FaultOutcome::Closed)
+                    | Ok(fault::FaultOutcome::IoError(_)) => {}
+                    other => {
+                        eprintln!("[loadgen] hostile slowloris -> {other:?}");
+                        r.unexpected += 1;
+                    }
+                }
+            }
+            2 => {
+                r.disconnect += 1;
+                if let Err(e) = fault::disconnect_mid_request(addr, deadline) {
+                    eprintln!("[loadgen] hostile disconnect -> {e:#}");
+                    r.unexpected += 1;
+                }
+            }
+            _ => {
+                r.stalled_reader += 1;
+                if let Err(e) =
+                    fault::stalled_reader(addr, &path, Duration::from_millis(100), deadline)
+                {
+                    eprintln!("[loadgen] hostile stalled-reader -> {e:#}");
+                    r.unexpected += 1;
+                }
+            }
+        }
+    }
+    r
+}
+
 /// Nearest-rank percentile over an ascending-sorted slice.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     debug_assert!(!sorted.is_empty());
@@ -191,6 +370,31 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
         ("requests_per_client", json::num(opts.requests as f64)),
         ("total_requests", json::num(r.total_requests as f64)),
         ("failures", json::num(r.failures as f64)),
+        (
+            "failure_taxonomy",
+            json::obj(vec![
+                ("connect_refused", json::num(r.failure_taxonomy.connect_refused as f64)),
+                ("timeout", json::num(r.failure_taxonomy.timeout as f64)),
+                ("reset", json::num(r.failure_taxonomy.reset as f64)),
+                (
+                    "malformed_response",
+                    json::num(r.failure_taxonomy.malformed_response as f64),
+                ),
+                ("http_error", json::num(r.failure_taxonomy.http_error as f64)),
+                ("other", json::num(r.failure_taxonomy.other as f64)),
+            ]),
+        ),
+        (
+            "injected",
+            json::obj(vec![
+                ("hostile_threads", json::num(opts.hostile as f64)),
+                ("dribble", json::num(r.injected.dribble as f64)),
+                ("slowloris", json::num(r.injected.slowloris as f64)),
+                ("disconnect", json::num(r.injected.disconnect as f64)),
+                ("stalled_reader", json::num(r.injected.stalled_reader as f64)),
+                ("unexpected", json::num(r.injected.unexpected as f64)),
+            ]),
+        ),
         ("p50_ms", json::num(r.p50_ms)),
         ("p99_ms", json::num(r.p99_ms)),
         ("mean_ms", json::num(r.mean_ms)),
@@ -224,16 +428,50 @@ mod tests {
     }
 
     #[test]
+    fn failure_classifier_buckets() {
+        let mut t = FailureTaxonomy::default();
+        t.record_error("connecting to 127.0.0.1:1: refused [kind=ConnectionRefused]");
+        t.record_error("read head: timed out [kind=TimedOut]");
+        t.record_error("read head: would block [kind=WouldBlock]");
+        t.record_error("peer went away [kind=ConnectionReset]");
+        t.record_error("write body: pipe [kind=BrokenPipe]");
+        t.record_error("not an HTTP response");
+        t.record_error("bad status line");
+        t.record_error("connection closed before full body");
+        t.record_status(503);
+        t.record_error("some novel explosion");
+        assert_eq!(
+            t,
+            FailureTaxonomy {
+                connect_refused: 1,
+                timeout: 2,
+                reset: 2,
+                malformed_response: 3,
+                http_error: 1,
+                other: 1,
+            }
+        );
+        assert_eq!(t.total(), 10);
+        let mut sum = FailureTaxonomy::default();
+        sum.merge(&t);
+        sum.merge(&t);
+        assert_eq!(sum.total(), 20);
+    }
+
+    #[test]
     fn report_json_shape() {
         let opts = LoadgenOptions {
             url: "http://x:1".into(),
             clients: 2,
             requests: 3,
+            hostile: 1,
             out: None,
         };
         let r = LoadgenReport {
             total_requests: 6,
             failures: 0,
+            failure_taxonomy: FailureTaxonomy { timeout: 2, ..Default::default() },
+            injected: InjectedReport { slowloris: 3, unexpected: 0, ..Default::default() },
             p50_ms: 1.0,
             p99_ms: 2.0,
             mean_ms: 1.2,
@@ -252,5 +490,12 @@ mod tests {
         assert!(parsed.get("p50_ms").is_some());
         assert!(parsed.get("p99_ms").is_some());
         assert_eq!(parsed.path("mix.layer_bytes").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            parsed.path("failure_taxonomy.timeout").unwrap().as_usize().unwrap(),
+            2
+        );
+        assert_eq!(parsed.path("injected.slowloris").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(parsed.path("injected.hostile_threads").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(parsed.path("injected.unexpected").unwrap().as_usize().unwrap(), 0);
     }
 }

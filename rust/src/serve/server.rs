@@ -43,6 +43,12 @@ pub struct ServeOptions {
     pub cache_bytes: usize,
     /// Concurrent connection handlers (and per-layer decode fan-out cap).
     pub workers: usize,
+    /// Per-socket read deadline: a client that goes quiet mid-request
+    /// (slowloris) gets a 408 and frees its worker slot after this long.
+    pub read_timeout: Duration,
+    /// Per-socket write deadline: a client that stops reading the
+    /// response can only wedge a handler for this long.
+    pub write_timeout: Duration,
 }
 
 impl Default for ServeOptions {
@@ -52,6 +58,8 @@ impl Default for ServeOptions {
             addr: "127.0.0.1:8080".into(),
             cache_bytes: 64 << 20,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -69,6 +77,10 @@ struct ServerState {
     decode_workers: usize,
     requests: AtomicU64,
     errors: AtomicU64,
+    /// Connections dropped for blowing a read deadline (408s issued).
+    timeouts: AtomicU64,
+    read_timeout: Duration,
+    write_timeout: Duration,
 }
 
 /// Handle to a running server; dropping it does NOT stop the server —
@@ -91,6 +103,11 @@ impl ServerHandle {
 
     pub fn request_count(&self) -> u64 {
         self.state.requests.load(Ordering::Relaxed)
+    }
+
+    /// Connections that blew the read deadline (and got a 408).
+    pub fn timeout_count(&self) -> u64 {
+        self.state.timeouts.load(Ordering::Relaxed)
     }
 
     /// Stop accepting, drain in-flight handlers, join the accept thread.
@@ -141,6 +158,9 @@ pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
         decode_workers: opts.workers,
         requests: AtomicU64::new(0),
         errors: AtomicU64::new(0),
+        timeouts: AtomicU64::new(0),
+        read_timeout: opts.read_timeout,
+        write_timeout: opts.write_timeout,
     });
     let stop = Arc::new(AtomicBool::new(false));
     let accept_state = state.clone();
@@ -171,14 +191,29 @@ pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
 }
 
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_read_timeout(Some(state.read_timeout));
+    let _ = stream.set_write_timeout(Some(state.write_timeout));
     state.requests.fetch_add(1, Ordering::Relaxed);
     let req = match http::read_request(&mut stream) {
         Ok(r) => r,
         Err(e) => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
-            let _ = http::write_error(&mut stream, 400, "Bad Request", &format!("{e}"));
+            // a read deadline expiring mid-head is a slow client, not a
+            // malformed request: answer 408 and free the worker slot.
+            // The vendored anyhow shim is string-backed, so the io
+            // ErrorKind travels as a `[kind=…]` tag (http::tag_io).
+            let msg = format!("{e}");
+            if msg.contains("[kind=WouldBlock]") || msg.contains("[kind=TimedOut]") {
+                state.timeouts.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_error(
+                    &mut stream,
+                    408,
+                    "Request Timeout",
+                    "client sent no complete request head in time",
+                );
+            } else {
+                state.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_error(&mut stream, 400, "Bad Request", &msg);
+            }
             return;
         }
     };
@@ -201,6 +236,15 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
             let body = json::obj(vec![
                 ("requests", json::num(state.requests.load(Ordering::Relaxed) as f64)),
                 ("errors", json::num(state.errors.load(Ordering::Relaxed) as f64)),
+                ("timeouts", json::num(state.timeouts.load(Ordering::Relaxed) as f64)),
+                (
+                    "read_timeout_ms",
+                    json::num(state.read_timeout.as_millis() as f64),
+                ),
+                (
+                    "write_timeout_ms",
+                    json::num(state.write_timeout.as_millis() as f64),
+                ),
                 (
                     "cache",
                     json::obj(vec![

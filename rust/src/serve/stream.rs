@@ -196,7 +196,7 @@ impl StreamDecoder {
                         let spans = hdr.chunk_spans();
                         // cap the pre-allocation: n_weights is attacker
                         // controlled until the payload actually decodes
-                        let levels = Vec::with_capacity(hdr.n_weights.min(1 << 20));
+                        let levels = Vec::with_capacity(hdr.n_weights.min(1 << 16));
                         self.state = State::Chunks { hdr, spans, next: 0, levels };
                     }
                     Parsed::NeedMore => {

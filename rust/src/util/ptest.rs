@@ -77,6 +77,35 @@ impl<'a> Gen<'a> {
     }
 }
 
+/// Drive `decode` over a battery of hostile inputs derived from one
+/// `valid` exemplar: random garbage of assorted sizes, truncations, and
+/// single-bit corruptions. The closure must *return* on every input (Ok
+/// or Err alike) — a panic propagates and fails the calling test. This
+/// is the shared dumb-random driver used by `tests/fuzz_robustness.rs`
+/// and complemented by the structure-aware engine in [`crate::fuzz`],
+/// which mutates field-by-field instead of bit-by-bit.
+pub fn hostile_inputs(valid: &[u8], rng: &mut SplitMix64, mut decode: impl FnMut(&[u8])) {
+    // random garbage of many sizes
+    for size in [0usize, 1, 2, 7, 64, 1024] {
+        let buf: Vec<u8> = (0..size).map(|_| rng.next_u64() as u8).collect();
+        decode(&buf);
+    }
+    // truncations
+    for cut in [0usize, 1, 2, valid.len() / 2, valid.len().saturating_sub(1)] {
+        decode(&valid[..cut.min(valid.len())]);
+    }
+    // bit flips
+    for _ in 0..64 {
+        if valid.is_empty() {
+            break;
+        }
+        let mut buf = valid.to_vec();
+        let pos = rng.below(buf.len() as u64) as usize;
+        buf[pos] ^= 1 << rng.below(8);
+        decode(&buf);
+    }
+}
+
 /// Run `prop` over `cfg.cases` generated cases; panic with the failing
 /// case index + seed on the first failure (after shrinking the size).
 pub fn check<F>(cfg: Config, name: &str, mut prop: F)

@@ -1,0 +1,219 @@
+//! Live fault injection against a real server: a storm of hostile
+//! client sessions (byte dribble, slowloris, mid-request disconnects,
+//! stalled readers) must not panic the server, wedge a worker slot, or
+//! break service for healthy clients — and the client side must survive
+//! a hostile *server* with a fast error instead of a hang.
+
+use deepcabac::codec::{encode_levels, CodecConfig};
+use deepcabac::fuzz::fault;
+use deepcabac::model::{CompressedLayer, CompressedModel};
+use deepcabac::quant::QuantGrid;
+use deepcabac::serve::http;
+use deepcabac::serve::loadgen::{self, LoadgenOptions};
+use deepcabac::serve::server::{start, ServeOptions, ServerHandle};
+use deepcabac::util::json::Json;
+use deepcabac::util::SplitMix64;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn make_model_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dcbc_fault_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CodecConfig::default();
+    let mut rng = SplitMix64::new(7);
+    let levels: Vec<i32> = (0..1200)
+        .map(|_| if rng.next_f64() < 0.7 { 0 } else { 1 + rng.below(20) as i32 })
+        .collect();
+    let payload = encode_levels(&levels, cfg);
+    let model = CompressedModel {
+        name: "victim".into(),
+        layers: vec![CompressedLayer {
+            name: "fc".into(),
+            dims: vec![300, 4],
+            grid: QuantGrid { delta: 0.05, max_level: 30 },
+            s_param: 12,
+            cfg,
+            n_weights: levels.len(),
+            payload,
+            chunks: Vec::new(),
+            bias: vec![0.1, -0.1],
+        }],
+    };
+    std::fs::write(dir.join("victim.dcbc"), model.serialize()).unwrap();
+    dir
+}
+
+/// Short-deadline server for fault tests: hostile sessions resolve in
+/// ~300 ms instead of the production 10 s default.
+fn start_short_deadline(dir: PathBuf, workers: usize) -> ServerHandle {
+    start(ServeOptions {
+        dir,
+        addr: "127.0.0.1:0".into(),
+        cache_bytes: 1 << 20,
+        workers,
+        read_timeout: Duration::from_millis(300),
+        write_timeout: Duration::from_millis(500),
+    })
+    .unwrap()
+}
+
+#[test]
+fn server_survives_fault_storm_and_keeps_serving() {
+    let dir = make_model_dir("storm");
+    let workers = 4;
+    let handle = start_short_deadline(dir.clone(), workers);
+    let addr = handle.addr().to_string();
+    let deadline = Duration::from_secs(5);
+    let path = "/models/victim/layers/0";
+
+    // the storm: every pathology, some sessions concurrent
+    std::thread::scope(|scope| {
+        for _ in 0..3 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let out = fault::slowloris(&addr, deadline).unwrap();
+                // a read-deadline server answers 408 or sheds the
+                // connection; it must never leave us waiting forever
+                assert!(
+                    matches!(
+                        out,
+                        fault::FaultOutcome::Status(408)
+                            | fault::FaultOutcome::Closed
+                            | fault::FaultOutcome::IoError(_)
+                    ),
+                    "slowloris got {out:?}"
+                );
+            });
+        }
+        for _ in 0..3 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                fault::disconnect_mid_request(&addr, deadline).unwrap();
+            });
+        }
+        for _ in 0..2 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                fault::stalled_reader(&addr, path, Duration::from_millis(700), deadline)
+                    .unwrap();
+            });
+        }
+        // a slow-but-complete request must still be answered: the read
+        // deadline applies per read, and bytes keep arriving
+        let addr2 = addr.clone();
+        scope.spawn(move || {
+            let out = fault::dribble_request(
+                &addr2,
+                "/healthz",
+                Duration::from_millis(2),
+                deadline,
+            )
+            .unwrap();
+            assert_eq!(out, fault::FaultOutcome::Status(200), "dribbled request");
+        });
+    });
+
+    // zero wedged slots: more sequential healthy requests than worker
+    // threads, all served after the storm
+    for i in 0..(workers * 2 + 2) {
+        let resp = http::get(&addr, path, None).unwrap();
+        assert_eq!(resp.status, 200, "healthy request {i} after the storm");
+        assert!(!resp.body.is_empty());
+    }
+
+    // the storm left its fingerprints in the stats, not in the error log
+    assert!(handle.timeout_count() > 0, "slowloris must trip the read deadline");
+    let stats = http::get(&addr, "/stats", None).unwrap();
+    assert_eq!(stats.status, 200);
+    let json = Json::parse(std::str::from_utf8(&stats.body).unwrap()).unwrap();
+    assert!(json.get("timeouts").unwrap().as_usize().unwrap() > 0);
+    assert_eq!(json.get("read_timeout_ms").unwrap().as_usize().unwrap(), 300);
+    assert_eq!(json.get("write_timeout_ms").unwrap().as_usize().unwrap(), 500);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn loadgen_hostile_mode_reports_clean_taxonomy() {
+    let dir = make_model_dir("loadgen");
+    let handle = start_short_deadline(dir.clone(), 6);
+    let out = dir.join("BENCH_serve.json");
+
+    let report = loadgen::run(&LoadgenOptions {
+        url: format!("http://{}", handle.addr()),
+        clients: 6,
+        requests: 8,
+        hostile: 2,
+        out: Some(out.clone()),
+    })
+    .unwrap();
+
+    // healthy clients ride through the injected faults untouched: zero
+    // failures, so the taxonomy shows only injected failure classes
+    // (reported under `injected`), none leaking into the client buckets
+    assert_eq!(report.failures, 0, "taxonomy: {:?}", report.failure_taxonomy);
+    assert_eq!(report.failure_taxonomy.total(), 0);
+    let i = &report.injected;
+    assert_eq!(i.dribble + i.slowloris + i.disconnect + i.stalled_reader, 2 * 8);
+    assert_eq!(i.unexpected, 0, "injected sessions outside contract: {i:?}");
+
+    // machine-readable report carries both new objects
+    let json = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(json.path("failure_taxonomy.timeout").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(json.path("injected.unexpected").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(json.path("injected.hostile_threads").unwrap().as_usize().unwrap(), 2);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The other direction: a hostile *server*. `get_streaming_with` must
+/// surface a stalled or trickling peer as a fast error, never a hang.
+#[test]
+fn client_survives_hostile_server() {
+    use std::net::TcpListener;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    // hostile server: reads the request, then sends half a status line
+    // and goes silent (socket stays open)
+    let srv = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut buf = [0u8; 1024];
+        let _ = conn.read(&mut buf);
+        conn.write_all(b"HTTP/1.1 20").unwrap();
+        conn.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1200));
+        drop(conn);
+    });
+
+    let t0 = std::time::Instant::now();
+    let err = http::get_streaming_with(
+        &addr,
+        "/models/x",
+        None,
+        Duration::from_millis(400),
+        &mut |_| Ok(()),
+    )
+    .unwrap_err();
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(3),
+        "client hung {waited:?} on a stalled server"
+    );
+    // the deadline shows up as a tagged IO error the taxonomy can bucket
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("[kind=WouldBlock]") || msg.contains("[kind=TimedOut]"),
+        "untagged error: {msg}"
+    );
+    let mut tax = loadgen::FailureTaxonomy::default();
+    tax.record_error(&msg);
+    assert_eq!(tax.timeout, 1, "classified as {tax:?}");
+
+    srv.join().unwrap();
+}

@@ -2,11 +2,17 @@
 //! with an `Err` — never panic, never loop, never allocate absurdly.
 //! Inputs are (a) random bytes, (b) random truncations of valid streams,
 //! (c) single-byte corruptions of valid streams.
+//!
+//! The hostile-input driver itself lives in `util::ptest` so unit
+//! tests, these integration tests, and the structure-aware fuzzer
+//! (`deepcabac::fuzz`, exercised by `tests/fuzz_structured.rs`) all
+//! share one battery; this file is a thin per-decoder caller.
 
 use deepcabac::baselines::{csr, fixed, huffman, static_arith};
 use deepcabac::codec::{encode_levels, CodecConfig};
 use deepcabac::model::{CompressedLayer, CompressedModel};
 use deepcabac::quant::QuantGrid;
+use deepcabac::util::ptest::hostile_inputs;
 use deepcabac::util::SplitMix64;
 
 fn random_levels(rng: &mut SplitMix64, n: usize) -> Vec<i32> {
@@ -19,31 +25,6 @@ fn random_levels(rng: &mut SplitMix64, n: usize) -> Vec<i32> {
             }
         })
         .collect()
-}
-
-/// Run a decoder over hostile inputs; the closure returns Ok(()) if the
-/// decoder returned (Ok or Err) without panicking — panics propagate and
-/// fail the test naturally.
-fn hostile_inputs(valid: &[u8], rng: &mut SplitMix64, mut decode: impl FnMut(&[u8])) {
-    // random garbage of many sizes
-    for size in [0usize, 1, 2, 7, 64, 1024] {
-        let buf: Vec<u8> = (0..size).map(|_| rng.next_u64() as u8).collect();
-        decode(&buf);
-    }
-    // truncations
-    for cut in [0usize, 1, 2, valid.len() / 2, valid.len().saturating_sub(1)] {
-        decode(&valid[..cut.min(valid.len())]);
-    }
-    // bit flips
-    for _ in 0..64 {
-        if valid.is_empty() {
-            break;
-        }
-        let mut buf = valid.to_vec();
-        let pos = rng.below(buf.len() as u64) as usize;
-        buf[pos] ^= 1 << rng.below(8);
-        decode(&buf);
-    }
 }
 
 #[test]

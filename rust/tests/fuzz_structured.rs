@@ -1,0 +1,113 @@
+//! Structure-aware fuzzing integration tests: the metered counterpart
+//! to the `fuzz` module's unit tests. This binary installs the
+//! [`CountingAlloc`] global allocator (the library deliberately never
+//! does), so allocation budgets are *enforced* here, and replays the
+//! checked-in crasher corpus exactly like the CI `fuzz-smoke` job.
+
+use deepcabac::fuzz::alloc::{self, CountingAlloc};
+use deepcabac::fuzz::{fuzz_target, replay_corpus, Budgets, TargetKind};
+use std::path::PathBuf;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn corpus_root() -> PathBuf {
+    // tests run with CWD = the crate root (rust/)
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fuzz_corpus")
+}
+
+#[test]
+fn metering_allocator_is_live() {
+    assert!(
+        alloc::probe(),
+        "CountingAlloc is installed in this binary; the probe must see it"
+    );
+}
+
+/// The acceptance gate: fixed-seed fuzzing over every target with
+/// metered allocation budgets — zero invariant violations, and the
+/// structure-aware mutator keeps ≥ 50 % of container cases alive past
+/// the prelude (the coverage proxy: they reach layer/chunk handling,
+/// which dumb-random inputs essentially never do).
+#[test]
+fn fixed_seed_fuzz_is_clean_and_penetrates_the_prelude() {
+    let budgets = Budgets::default();
+    for target in TargetKind::all() {
+        let (stats, crashes) = fuzz_target(target, 300, 0xD5EE9CABAC, &budgets);
+        assert_eq!(stats.cases, 300);
+        assert!(stats.alloc_metered, "{}: alloc budget must be enforced", target.as_str());
+        assert!(
+            crashes.is_empty(),
+            "{}: {} invariant violations, first: {} ({} bytes)",
+            target.as_str(),
+            crashes.len(),
+            crashes[0].kind,
+            crashes[0].input.len()
+        );
+        if matches!(target, TargetKind::Container | TargetKind::Stream) {
+            assert!(
+                stats.survival_ratio() >= 0.5,
+                "{}: only {:.0}% of mutants survived the prelude (want >= 50%)",
+                target.as_str(),
+                stats.survival_ratio() * 100.0
+            );
+            // and some cases must be fully accepted (pristine + benign
+            // mutants), or the roundtrip invariants went unexercised
+            assert!(stats.accepted > 0, "{}: nothing accepted", target.as_str());
+        }
+    }
+}
+
+/// The checked-in corpus replays with zero crashes and every
+/// `accept_`/`reject_` expectation holding — the regression gate that
+/// keeps yesterday's crashers fixed.
+#[test]
+fn corpus_replays_clean() {
+    let budgets = Budgets::default();
+    let (stats, crashes) = replay_corpus(&corpus_root(), &budgets).unwrap();
+    assert!(
+        stats.cases > 0,
+        "corpus at {:?} is missing — it is part of the repo",
+        corpus_root()
+    );
+    assert!(
+        crashes.is_empty(),
+        "{} corpus regressions, first: [{}] {}",
+        crashes.len(),
+        crashes[0].target.as_str(),
+        crashes[0].kind
+    );
+}
+
+/// Same corpus, twice: identical counters. Replay is deterministic
+/// (sorted paths, no randomness), so CI failures are reproducible.
+#[test]
+fn corpus_replay_is_deterministic() {
+    let budgets = Budgets::default();
+    let (s1, c1) = replay_corpus(&corpus_root(), &budgets).unwrap();
+    let (s2, c2) = replay_corpus(&corpus_root(), &budgets).unwrap();
+    assert_eq!(s1.cases, s2.cases);
+    assert_eq!(s1.crashes, s2.crashes);
+    assert_eq!(s1.survived_prefix, s2.survived_prefix);
+    assert_eq!(s1.accepted, s2.accepted);
+    assert_eq!(c1.len(), c2.len());
+}
+
+/// A pathological-but-parseable container (one layer claiming many
+/// weights from a tiny payload, within the density guard) must stay
+/// inside the per-case allocation budget — the guard caps decode-side
+/// allocation, and the meter proves it.
+#[test]
+fn decode_allocation_stays_budgeted() {
+    use deepcabac::model::CompressedModel;
+
+    let mut rng = deepcabac::util::SplitMix64::new(9);
+    let bytes = deepcabac::fuzz::gen::container(&mut rng);
+    alloc::reset();
+    let _ = CompressedModel::deserialize(&bytes);
+    let peak = alloc::peak();
+    assert!(
+        peak < Budgets::default().alloc_bytes,
+        "decoding a generated container peaked at {peak} bytes"
+    );
+}

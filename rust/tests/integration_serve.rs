@@ -93,6 +93,7 @@ fn server_end_to_end() {
         addr: "127.0.0.1:0".into(),
         cache_bytes: 1 << 20,
         workers: 8,
+        ..Default::default()
     })
     .unwrap();
     let addr = handle.addr().to_string();
@@ -183,6 +184,7 @@ fn loadgen_32_clients_zero_failures() {
         addr: "127.0.0.1:0".into(),
         cache_bytes: 8 << 20,
         workers: 8,
+        ..Default::default()
     })
     .unwrap();
     let out = dir.join("BENCH_serve.json");
@@ -190,6 +192,7 @@ fn loadgen_32_clients_zero_failures() {
         url: format!("http://{}", handle.addr()),
         clients: 32,
         requests: 6,
+        hostile: 0,
         out: Some(out.clone()),
     })
     .unwrap();
