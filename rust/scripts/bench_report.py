@@ -104,7 +104,43 @@ def serve_md(b):
     ])
 
 
-RENDERERS = {"throughput": throughput_md, "sweep": sweep_md, "serve": serve_md}
+def delta_md(b):
+    head = [
+        f"**§Delta** — model `{b['model']}`, parent `{b['parent_fingerprint']}`, "
+        f"{int(b['workers'])} workers:",
+        "",
+        table(
+            ["full bytes", "delta bytes", "ratio", "coded/total layers",
+             "residual density", "encode s", "apply p50 ms", "apply p99 ms"],
+            [[
+                int(b["full_bytes"]), int(b["delta_bytes"]),
+                f"{b['delta_ratio']:.1%}",
+                f"{int(b['coded_layers'])}/{int(b['total_layers'])}",
+                f"{b['residual_density']:.3%}", fmt(b["encode_wall_s"]),
+                fmt(b["apply_p50_ms"]), fmt(b["apply_p99_ms"]),
+            ]],
+        ),
+        "",
+        "Per-layer residuals:",
+        "",
+        table(
+            ["layer", "skipped", "weights", "nonzero residuals",
+             "delta payload", "target payload"],
+            [[l["name"], l["skipped"], int(l["n_weights"]),
+              int(l["residual_nonzero"]), int(l["delta_payload"]),
+              int(l["target_payload"])]
+             for l in b["layers"]],
+        ),
+    ]
+    return "\n".join(head)
+
+
+RENDERERS = {
+    "throughput": throughput_md,
+    "sweep": sweep_md,
+    "serve": serve_md,
+    "delta": delta_md,
+}
 
 
 def main():

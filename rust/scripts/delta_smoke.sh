@@ -1,0 +1,107 @@
+#!/usr/bin/env bash
+# Delta-delivery smoke test, run by CI from the rust/ directory:
+#   1. synthesize a base container and a 2%-perturbed target through the
+#      identical compression path (--perturb-density 0 vs 0.02)
+#   2. delta-encode and verify the offline apply reconstructs the target
+#      container byte-for-byte
+#   3. serve the target + its delta segment; `fetch --from base` must
+#      reconstruct the same tensors as batch decompress of the target
+#   4. hostile ?from=: a known full-container fingerprint with no delta
+#      is 409, garbage is 404, a missing param is 400 — never a hang
+#   5. `delta bench` leaves BENCH_delta.json for upload; the delta must
+#      be <= 25% of the full container at 2% update density
+set -euo pipefail
+
+BIN=${BIN:-target/release/deepcabac}
+WORK=$(mktemp -d)
+mkdir -p "$WORK/models"
+
+cleanup() {
+  [ -n "${SERVER_PID:-}" ] && kill "$SERVER_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== synth base + 2%-perturbed target =="
+# --lambda-scale 0: pure nearest-neighbour quantization, so the sparse
+# perturbation stays sparse in level space and the delta stays small
+"$BIN" synth --arch mobilenet --scale 32 --s 40 --chunks 4 --lambda-scale 0 \
+  --perturb-density 0 --out "$WORK/base.dcbc"
+"$BIN" synth --arch mobilenet --scale 32 --s 40 --chunks 4 --lambda-scale 0 \
+  --perturb-density 0.02 --perturb-scale 0.02 --out "$WORK/models/mobilenet.dcbc"
+
+echo "== delta encode + offline apply round trip =="
+"$BIN" delta encode --parent "$WORK/base.dcbc" \
+  --target "$WORK/models/mobilenet.dcbc" \
+  --out "$WORK/models/mobilenet_update.dcbc" --workers 4
+"$BIN" delta apply --parent "$WORK/base.dcbc" \
+  --delta "$WORK/models/mobilenet_update.dcbc" \
+  --out "$WORK/applied.dcbc" --workers 4
+cmp "$WORK/applied.dcbc" "$WORK/models/mobilenet.dcbc"
+echo "offline apply is byte-identical to the target container"
+
+echo "== start server on an ephemeral port =="
+"$BIN" serve --dir "$WORK/models" --addr 127.0.0.1:0 --cache-mb 32 --workers 4 \
+  > "$WORK/serve.log" 2>&1 &
+SERVER_PID=$!
+
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#^listening on http://##p' "$WORK/serve.log" | head -n1)
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$WORK/serve.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never announced its port"; cat "$WORK/serve.log"; exit 1; }
+echo "server at $ADDR"
+
+echo "== incremental fetch (--from) vs batch decompress =="
+"$BIN" fetch --url "http://$ADDR/models/mobilenet" --from "$WORK/base.dcbc" \
+  --out-dir "$WORK/fetched"
+"$BIN" decompress --in "$WORK/models/mobilenet.dcbc" --out-dir "$WORK/batch"
+for f in "$WORK/batch"/*.npy; do
+  cmp "$f" "$WORK/fetched/$(basename "$f")"
+done
+echo "all tensors byte-identical through the delta path"
+
+echo "== hostile ?from= =="
+# the target's own fingerprint is a known full container with no delta
+# from it: the server must answer 409 Conflict, and fetch must surface it
+if "$BIN" fetch --url "http://$ADDR/models/mobilenet" \
+    --from "$WORK/models/mobilenet.dcbc" --out-dir "$WORK/conflict" \
+    2> "$WORK/err409"; then
+  echo "expected fetch --from <no-delta base> to fail with 409"; exit 1
+fi
+grep -q "409" "$WORK/err409"
+echo "stale-but-known base correctly answered 409"
+python3 - "$ADDR" <<'EOF'
+import http.client, sys
+addr = sys.argv[1]
+host, port = addr.rsplit(":", 1)
+for path, want in [
+    ("/models/mobilenet/delta?from=0000000000000000", 404),  # unknown fp
+    ("/models/mobilenet/delta?from=zzzz", 404),              # not hex
+    ("/models/mobilenet/delta", 404),                        # missing param
+    ("/models/nosuch/delta?from=0000000000000000", 404),     # unknown model
+]:
+    c = http.client.HTTPConnection(host, int(port), timeout=10)
+    c.request("GET", path)
+    r = c.getresponse()
+    r.read()
+    assert r.status == want, f"{path}: got {r.status}, want {want}"
+    c.close()
+print("hostile ?from= requests answered with clean 4xx, no hangs")
+EOF
+
+echo "== delta bench =="
+"$BIN" delta bench --parent "$WORK/base.dcbc" \
+  --target "$WORK/models/mobilenet.dcbc" --iters 48 --workers 4 \
+  --json BENCH_delta.json
+python3 - <<'EOF'
+import json
+j = json.load(open("BENCH_delta.json"))
+ratio = j["delta_ratio"]
+assert ratio <= 0.25, f"delta is {ratio:.1%} of the full container (want <= 25%)"
+print(f"delta ratio {ratio:.1%} of full, apply p50 {j['apply_p50_ms']:.2f} ms, "
+      f"p99 {j['apply_p99_ms']:.2f} ms over {j['apply_iters']:.0f} iters")
+EOF

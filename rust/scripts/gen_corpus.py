@@ -8,8 +8,11 @@ spec in docs/FORMAT.md. Filename conventions (see fuzz::driver):
   reject_*  must parse Err
   other     only has to uphold the crash invariants
 
-Container files are replayed against both the batch and the streaming
-decoder; range files are raw `Range:` header values. The corpus is
+Container files (v1/v2 full containers and v3 delta segments alike) are
+replayed against both the batch and the streaming decoder; range files
+are raw `Range:` header values; encoder files are hostile-model recipes
+for fuzz::gen::hostile_model_pair (accept_* must delta-encode, reject_*
+must be rejected by the finite-value boundary). The corpus is
 committed — this script exists so the bytes have a reproducible,
 documented provenance, not because regeneration is routine.
 """
@@ -76,6 +79,38 @@ def container(version, name, layer_blobs):
     )
 
 
+def delta_container(parent_fp, name, layer_blobs):
+    """A v3 delta segment: the parent fingerprint rides raw LE after the
+    version byte, then the same name/count prelude as v1/v2."""
+    return (
+        b"DCBC\x03"
+        + struct.pack("<Q", parent_fp)
+        + s(name)
+        + varint(len(layer_blobs))
+        + b"".join(layer_blobs)
+    )
+
+
+def dlayer_skip(name):
+    """Skip record: flag 1 + layer name, nothing else."""
+    return b"\x01" + s(name)
+
+
+def dlayer_coded(name, chunks, n_weights, payload, bias=()):
+    """Coded record: flag 0 + a v2-shaped layer (the chunk table is
+    always present in v3, single-entry tables canonicalize away)."""
+    out = b"\x00" + s(name) + varint(1) + varint(4)
+    out += f32(0.05) + varint(3) + varint(7) + CFG
+    out += varint(len(chunks))
+    for w, b in chunks:
+        out += varint(w) + varint(b)
+    out += varint(n_weights) + varint(len(payload)) + payload
+    out += varint(len(bias))
+    for b in bias:
+        out += f32(b)
+    return out
+
+
 # deterministic "garbage" CABAC payload: parse never validates payload
 # content, and the decoder treats any bits as a (possibly nonsense) stream
 def junk(n: int, seed: int = 0xA5) -> bytes:
@@ -127,9 +162,74 @@ def containers():
         ),
     )
 
+    # -- v3 delta segments -------------------------------------------------
+    write("container", "accept_v3_minimal", delta_container(0xDEADBEEF, "m", []))
+    write(
+        "container",
+        "accept_v3_skip_only",
+        delta_container(7, "m", [dlayer_skip("a"), dlayer_skip("b")]),
+    )
+    # single-entry chunk table on the coded record: canonicalizes on
+    # reserialize, the v3 instance of the idempotence x != y case
+    write(
+        "container",
+        "accept_v3_coded_single_chunk",
+        delta_container(7, "m", [dlayer_coded("a", [(4, 2)], 4, junk(2))]),
+    )
+    write(
+        "container",
+        "accept_v3_mixed",
+        delta_container(
+            99,
+            "mm",
+            [
+                dlayer_skip("conv"),
+                dlayer_coded("fc", [(3, 2), (5, 4)], 8, junk(6), bias=(0.5,)),
+            ],
+        ),
+    )
+    # the only legal skip flags are 0 and 1
+    write(
+        "container",
+        "reject_v3_bad_skip_flag",
+        delta_container(7, "m", [b"\x02" + s("a")]),
+    )
+    # prelude cut mid-fingerprint: batch says truncated, stream NeedMore
+    # then finish() rejects
+    write("container", "reject_v3_truncated_parent_fp", b"DCBC\x03" + b"\xAB" * 4)
+    # residual chunk-table lies: weights sum disagrees with the header
+    write(
+        "container",
+        "reject_v3_chunk_sum_mismatch",
+        delta_container(7, "m", [dlayer_coded("a", [(1, 1), (1, 1)], 5, junk(2))]),
+    )
+    # residual chunk weight counts that overflow the u64 sum
+    write(
+        "container",
+        "reject_v3_chunk_sum_overflow",
+        delta_container(
+            7,
+            "m",
+            [
+                b"\x00" + s("a") + varint(1) + varint(4) + f32(0.05) + varint(3)
+                + varint(7) + CFG
+                + varint(2)
+                + varint((1 << 64) - 1) + varint(1)
+                + varint(1) + varint(1)
+                + varint(4) + varint(2) + junk(2) + varint(0)
+            ],
+        ),
+    )
+    write(
+        "container",
+        "reject_v3_trailing_bytes",
+        delta_container(0xDEADBEEF, "m", []) + b"\x00",
+    )
+
     # -- rejected ----------------------------------------------------------
     write("container", "reject_bad_magic", b"DCBX\x01" + s("m") + varint(0))
-    write("container", "reject_bad_version", b"DCBC\x03" + s("m") + varint(0))
+    # version 3 became the delta segment; 4 is the first unknown version
+    write("container", "reject_bad_version", b"DCBC\x04" + s("m") + varint(0))
     # 11 continuation bytes: >= 10 undecided bytes = malformed varint,
     # not a short buffer
     write("container", "reject_overlong_varint", b"DCBC\x01" + b"\x80" * 11)
@@ -243,8 +343,32 @@ def ranges():
         write("range", name, v)
 
 
+def encoders():
+    # hostile-model recipes for fuzz::gen::hostile_model_pair: byte 0 is
+    # the layer count (mod 4), then per layer a size selector and
+    # (parent, target, sigma) value-table triples; exhausted recipes
+    # read as zeros. accepted = the pair delta-encodes end to end.
+    # target selector ≡ 0 mod 4 re-draws from HOSTILE_ANY, where
+    # indices 12/13/14 (selectors 48/52/56) are NaN/+Inf/-Inf.
+    write(
+        "encoder",
+        "reject_nan_inf_target",
+        bytes([1, 2, 2]) + bytes([6, 48, 8, 6, 52, 8, 6, 56, 8]) + bytes([0]),
+    )
+    # finite-but-nasty: subnormals, signed zeros, f32::MAX magnitudes,
+    # a zero-dim second layer — must encode, apply back byte-for-byte
+    write(
+        "encoder",
+        "accept_finite_hostile",
+        bytes([2, 2, 4, 0, 1, 2, 1, 8, 10, 6, 8, 4, 2, 0, 0, 0]),
+    )
+    # the empty recipe: a zero-layer model pair, the degenerate accept
+    write("encoder", "accept_empty_recipe", b"")
+
+
 if __name__ == "__main__":
     containers()
     https()
     ranges()
+    encoders()
     print("corpus regenerated at", os.path.normpath(ROOT))

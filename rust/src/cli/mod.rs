@@ -12,7 +12,12 @@
 //!                      [--warm-start | --cold] [--compare-serial]
 //!                      [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
 //! deepcabac synth      --arch vgg16 [--scale N] [--s N]
+//! deepcabac delta      encode|apply|bench (see USAGE)
 //! ```
+//!
+//! `delta` is the one subcommand with an action word; `main` folds
+//! `delta encode` into the single command string `delta-encode` before
+//! parsing, so this parser still never sees positional arguments.
 
 use std::collections::HashMap;
 
@@ -142,6 +147,7 @@ USAGE:
                   [--sweep-exhaustive] [--no-abandon | --abandon-argmin]
                   [--warm-start | --cold] [--compare-serial]
                   [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
+                  [--delta-from BASE.dcbc] [--out-delta FILE]
       The 2-D (S × λ) rate-distortion surface sweep on the parallel
       incremental engine: coarse-to-fine refinement over S ∈ {0..256}
       per λ-column ((layer × S × λ) probe tasks fanned over --workers
@@ -175,10 +181,43 @@ USAGE:
       BENCH_sweep.json), per-point CSV to --csv, and the best container
       to --out (--select-lambda X writes λ-column X's argmin instead of
       the overall smallest).
+      --delta-from BASE.dcbc switches the selection objective to the
+      size of each grid point's v3 delta segment against that base
+      (the incremental-update question: which (S, λ) is cheapest to
+      *ship to clients that already hold BASE*). Every completed point
+      is delta-encoded against a parent context hoisted once; the
+      winner's delta segment is reported in the JSON and written to
+      --out-delta. Abandonment is forced off in this mode (full-byte
+      budgets don't order points by delta bytes); warm-start still
+      applies.
   deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
-                  [--out FILE]
+                  [--seed N] [--out FILE] [--perturb-density X]
+                  [--perturb-scale Y] [--perturb-seed N] [--workers N]
       Generate + compress a synthetic ImageNet-scale model (--out writes
       the .dcbc container, e.g. to seed a serve directory).
+      --perturb-density X nudges fraction X of the weights with
+      deterministic Gaussian noise (σ = --perturb-scale, default 0.05,
+      stream seeded by --perturb-seed) before compressing: two runs that
+      differ only in --perturb-density yield a (parent, target)
+      container pair for `deepcabac delta` (use X = 0 for the base so
+      both go through the identical compression path).
+  deepcabac delta encode --parent BASE.dcbc --target NEW.dcbc --out D.dcbc
+                         [--workers N]
+      Diff two full containers of the same architecture into a .dcbc v3
+      delta segment: per layer, the residual between the target's
+      quantization levels and the parent's reconstruction requantized on
+      the target grid, CABAC-coded with the target's codec config.
+      Byte-identical layers become skip records.
+  deepcabac delta apply --parent BASE.dcbc --delta D.dcbc --out OUT.dcbc
+                        [--workers N]
+      Reapply a delta segment onto its base container. The output is
+      byte-for-byte identical to the NEW.dcbc the delta was encoded
+      from; a wrong base is rejected by parent-fingerprint check.
+  deepcabac delta bench --parent BASE.dcbc --target NEW.dcbc [--iters N]
+                        [--workers N] [--json FILE]
+      Verify the apply round trip is byte-identical, then report delta
+      vs full container bytes and apply latency (p50/p99 over --iters
+      runs, default 32) to --json (default BENCH_delta.json).
   deepcabac serve --dir DIR [--addr HOST:PORT] [--cache-mb N] [--workers N]
                   [--read-timeout MS] [--write-timeout MS]
       Serve every .dcbc container in DIR over HTTP: GET /models,
@@ -191,11 +230,16 @@ USAGE:
       peers get 408 / a close instead of a wedged worker slot, counted
       in /stats.
   deepcabac fetch --url http://HOST:PORT/models/NAME [--layer L]
-                  [--out-dir DIR] [--workers N]
+                  [--from BASE.dcbc] [--out-dir DIR] [--workers N]
       Fetch a model from a serve endpoint. Without --layer the whole
       container is streamed through the incremental decoder (layers
       materialize while bytes arrive); --layer L (index or name) fetches
-      one layer's decoded weights via random access. --out-dir writes
+      one layer's decoded weights via random access. --from BASE.dcbc
+      fetches only a delta against the local base container
+      (GET .../delta?from=<fingerprint>) and applies it in place as the
+      bytes arrive — reconstructed weights are identical to a full
+      fetch; HTTP 409 means the server knows the base but has no delta
+      from it (fetch the full container). --out-dir writes
       {layer}.w.npy files.
   deepcabac loadgen --url http://HOST:PORT [--clients N] [--requests M]
                     [--hostile H] [--out FILE]
@@ -207,15 +251,19 @@ USAGE:
       disconnect, stalled readers) whose outcomes are reported
       separately and never count as load failures. --out writes
       BENCH_serve.json-style machine-readable results.
-  deepcabac fuzz [--target container|stream|http|range|all] [--cases N]
-                 [--seed N] [--corpus DIR] [--artifacts DIR]
+  deepcabac fuzz [--target container|stream|http|range|encoder|all]
+                 [--cases N] [--seed N] [--corpus DIR] [--artifacts DIR]
       Structure-aware fuzzing of the container / stream / HTTP / Range
-      parsers: replay the checked-in crasher corpus (--corpus, default
-      fuzz_corpus/), then run --cases generate-and-mutate inputs per
-      target under the never-panic / alloc-budget / time-budget /
-      roundtrip-idempotence invariants. Minimized reproducers go to
-      --artifacts; exits nonzero on any violation. Fixed --seed makes
-      runs bit-reproducible (the CI fuzz-smoke job).
+      parsers (v1/v2 containers and v3 delta segments) plus the encoder
+      target, which decodes each input into a hostile model pair
+      (denormals, signed zeros, NaN/Inf, zero-dim and huge tensors) and
+      pushes it through the pipeline and the delta encoder. Replays the
+      checked-in crasher corpus (--corpus, default fuzz_corpus/), then
+      runs --cases generate-and-mutate inputs per target under the
+      never-panic / alloc-budget / time-budget / roundtrip-idempotence
+      invariants. Minimized reproducers go to --artifacts; exits nonzero
+      on any violation. Fixed --seed makes runs bit-reproducible (the
+      CI fuzz-smoke job).
 ";
 
 #[cfg(test)]
@@ -379,6 +427,49 @@ mod tests {
         assert_eq!(a.get_usize("hostile", 0).unwrap(), 0);
         let a = Args::parse(&sv(&["loadgen", "--hostile", "3"])).unwrap();
         assert_eq!(a.get_usize("hostile", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn parses_delta_flags() {
+        // main() folds `delta encode` into the command "delta-encode"
+        let a = Args::parse(&sv(&[
+            "delta-encode", "--parent", "base.dcbc", "--target", "new.dcbc",
+            "--out", "d.dcbc", "--workers", "4",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "delta-encode");
+        assert_eq!(a.get("parent"), Some("base.dcbc"));
+        assert_eq!(a.get("target"), Some("new.dcbc"));
+        assert_eq!(a.get("out"), Some("d.dcbc"));
+        assert_eq!(a.get_count("workers", 1).unwrap(), 4);
+        let a = Args::parse(&sv(&[
+            "delta-bench", "--parent", "b", "--target", "t", "--iters", "16",
+        ]))
+        .unwrap();
+        assert_eq!(a.get_count("iters", 32).unwrap(), 16);
+        assert_eq!(a.get_or("json", "BENCH_delta.json"), "BENCH_delta.json");
+        // --iters 0 rejected through the uniform count validator
+        let a = Args::parse(&sv(&["delta-bench", "--iters", "0"])).unwrap();
+        assert!(a.get_count("iters", 32).is_err());
+        // fetch --from and sweep --delta-from parse as plain value flags
+        let a = Args::parse(&sv(&["fetch", "--url", "http://h/models/m", "--from", "b.dcbc"]))
+            .unwrap();
+        assert_eq!(a.get("from"), Some("b.dcbc"));
+        let a = Args::parse(&sv(&[
+            "sweep", "--arch", "vgg16", "--delta-from", "b.dcbc", "--out-delta", "d.dcbc",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("delta-from"), Some("b.dcbc"));
+        assert_eq!(a.get("out-delta"), Some("d.dcbc"));
+        // synth perturbation knobs
+        let a = Args::parse(&sv(&[
+            "synth", "--arch", "vgg16", "--perturb-density", "0.02",
+            "--perturb-scale", "0.05", "--perturb-seed", "7",
+        ]))
+        .unwrap();
+        assert!((a.get_f32("perturb-density", 0.0).unwrap() - 0.02).abs() < 1e-9);
+        assert!((a.get_f32("perturb-scale", 0.05).unwrap() - 0.05).abs() < 1e-9);
+        assert_eq!(a.get_usize("perturb-seed", 1).unwrap(), 7);
     }
 
     #[test]

@@ -77,7 +77,8 @@
 
 use super::metrics::{LayerReport, ModelReport, SweepStats};
 use super::pipeline::{self, CompressionSpec, LayerProbe, LayerStats};
-use crate::model::{CompressedLayer, CompressedModel, Model};
+use crate::delta::encode::{encode_with_ctx, ParentCtx};
+use crate::model::{CompressedLayer, CompressedModel, DeltaModel, Model};
 use crate::quant::{DominanceFrontier, ProbeBudget};
 use crate::util::par::WorkerPool;
 use crate::util::{fnv1a, Timer};
@@ -180,6 +181,12 @@ pub struct SweepPoint {
     /// FNV-1a fingerprint of the serialized container (0 for abandoned
     /// probes) — per-point byte-identity against the serial pipeline.
     pub container_hash: u64,
+    /// Delta-sweep only: serialized size of the v3 delta segment diffing
+    /// this point's container against the sweep's parent. `None` in a
+    /// plain sweep, for abandoned probes, and for the rare point whose
+    /// residuals cannot be delta-coded (level overflow) — such a point
+    /// is recorded but never selected.
+    pub delta_bytes: Option<usize>,
     /// Weights this probe scanned with a warm-start seed (0 when the
     /// round ran cold or its λ-column had no incumbent yet).
     pub seeded: usize,
@@ -202,6 +209,9 @@ pub struct ColumnBest {
     /// reporting per λ-column).
     pub probes: usize,
     pub abandoned: usize,
+    /// Delta-sweep only: the incumbent's delta segment size (the metric
+    /// this column's argmin was selected on).
+    pub delta_bytes: Option<usize>,
 }
 
 #[derive(Debug)]
@@ -218,9 +228,13 @@ pub struct SweepResult {
     /// Per-λ-column argmin containers, in first-scheduled column order.
     pub columns: Vec<ColumnBest>,
     /// Indices into `points`: the Pareto frontier of completed probes in
-    /// the (compressed_bytes, distortion) plane, sorted by bytes
-    /// ascending (distortion is then non-increasing along it).
+    /// the (compressed_bytes, distortion) plane — (delta_bytes,
+    /// distortion) in a delta sweep — sorted by bytes ascending
+    /// (distortion is then non-increasing along it).
     pub frontier: Vec<usize>,
+    /// Delta-sweep only: the winning point's delta segment + encoder
+    /// report. `apply(parent, delta)` reproduces `best.0` byte-for-byte.
+    pub best_delta: Option<(DeltaModel, crate::delta::DeltaReport)>,
     pub stats: SweepStats,
 }
 
@@ -332,12 +346,21 @@ struct ProbeCtx {
     /// Lower bound on the serialized non-payload bytes of any container
     /// this model/spec can produce (see [`min_overhead`]).
     min_overhead: usize,
+    /// Delta-sweep mode: the parent container every completed point is
+    /// diffed against, with its reconstruction hoisted once — the
+    /// delta-side analogue of [`LayerStats`].
+    delta: Option<Arc<ParentCtx>>,
 }
 
 /// Precompute [`LayerStats`] for every layer (in parallel) and clone the
 /// model once so probe tasks can outlive the caller's borrow. Shared by
 /// the surface engine and the per-layer sweep.
-fn probe_ctx(model: &Model, base: &CompressionSpec, workers: usize) -> Arc<ProbeCtx> {
+fn probe_ctx(
+    model: &Model,
+    base: &CompressionSpec,
+    workers: usize,
+    delta: Option<Arc<ParentCtx>>,
+) -> Arc<ProbeCtx> {
     let stats = crate::util::par::map_indexed(model.weights.len(), workers, |i| {
         LayerStats::compute(&model.weights[i].data, &model.sigmas[i].data, base.weighted)
     });
@@ -355,7 +378,7 @@ fn probe_ctx(model: &Model, base: &CompressionSpec, workers: usize) -> Arc<Probe
             .map(|_| crate::tensor::Tensor::new(vec![0], vec![]))
             .collect(),
     };
-    Arc::new(ProbeCtx { model: slim, stats, base: *base, min_overhead })
+    Arc::new(ProbeCtx { model: slim, stats, base: *base, min_overhead, delta })
 }
 
 struct Best {
@@ -364,6 +387,12 @@ struct Best {
     sched: usize,
     point: GridPoint,
     bytes: usize,
+    /// The selection metric incumbents compete on: `bytes` in a plain
+    /// sweep, the delta segment size in a delta sweep (a point whose
+    /// residuals overflow gets `usize::MAX` and can never win).
+    sel: usize,
+    /// Delta-sweep only: the incumbent's delta segment.
+    delta: Option<(DeltaModel, crate::delta::DeltaReport)>,
     model: CompressedModel,
     report: ModelReport,
 }
@@ -448,8 +477,64 @@ pub struct SweepEngine {
 
 impl SweepEngine {
     pub fn new(model: &Model, base: &CompressionSpec, workers: usize) -> Self {
+        Self::with_delta(model, base, workers, None)
+    }
+
+    /// Delta-sweep engine: every completed point is additionally diffed
+    /// against `parent` (reconstruction hoisted once, like
+    /// [`LayerStats`]) and incumbents are selected on **delta segment
+    /// bytes** instead of full-container bytes. Errors early if the
+    /// parent's layer structure (count, names, weight counts) does not
+    /// match `model` — a delta re-codes residuals, it does not
+    /// re-architect.
+    pub fn new_delta(
+        model: &Model,
+        base: &CompressionSpec,
+        workers: usize,
+        parent: CompressedModel,
+    ) -> Result<Self> {
+        if parent.layers.len() != model.weights.len() {
+            bail!(
+                "delta sweep: parent has {} layers, target model {}",
+                parent.layers.len(),
+                model.weights.len()
+            );
+        }
+        for (pl, ml) in parent.layers.iter().zip(&model.manifest.layers) {
+            if pl.name != ml.name {
+                bail!(
+                    "delta sweep: layer name mismatch ({:?} vs {:?})",
+                    pl.name,
+                    ml.name
+                );
+            }
+        }
+        for (i, pl) in parent.layers.iter().enumerate() {
+            if pl.n_weights != model.weights[i].len() {
+                bail!(
+                    "delta sweep: layer {:?} weight count mismatch ({} vs {})",
+                    pl.name,
+                    pl.n_weights,
+                    model.weights[i].len()
+                );
+            }
+        }
+        Ok(Self::with_delta(
+            model,
+            base,
+            workers,
+            Some(Arc::new(ParentCtx::new(parent, workers))),
+        ))
+    }
+
+    fn with_delta(
+        model: &Model,
+        base: &CompressionSpec,
+        workers: usize,
+        delta: Option<Arc<ParentCtx>>,
+    ) -> Self {
         Self {
-            ctx: probe_ctx(model, base, workers),
+            ctx: probe_ctx(model, base, workers, delta),
             pool: WorkerPool::new(workers),
             probed: BTreeSet::new(),
             points: Vec::new(),
@@ -490,12 +575,14 @@ impl SweepEngine {
         }));
     }
 
-    /// (bytes, sched, column index) of the overall winner so far.
+    /// (selection metric, sched, column index) of the overall winner so
+    /// far — serialized bytes in a plain sweep, delta bytes in a delta
+    /// sweep.
     fn overall(&self) -> Option<(usize, usize, usize)> {
         self.columns
             .iter()
             .enumerate()
-            .filter_map(|(i, c)| c.best.as_ref().map(|b| (b.bytes, b.sched, i)))
+            .filter_map(|(i, c)| c.best.as_ref().map(|b| (b.sel, b.sched, i)))
             .min()
     }
 
@@ -532,6 +619,14 @@ impl SweepEngine {
     /// which probes get abandoned — and every seeded-scan statistic —
     /// depends only on the schedule, not on worker count or timing.
     pub fn run_round(&mut self, grid: &[GridPoint], abandon: AbandonMode, warm: bool) {
+        // Delta mode forces AbandonMode::Off: the abandon budgets are
+        // derived from FULL-container incumbent sizes, and full bytes do
+        // not order points the way delta bytes do (a probe that loses on
+        // full bytes can still win on delta bytes, e.g. a grid close to
+        // the parent's). Cutting probes on the full-byte predicate would
+        // therefore not be selection-neutral for the delta objective.
+        let abandon =
+            if self.ctx.delta.is_some() { AbandonMode::Off } else { abandon };
         // re-normalize through GridPoint::new: the fields are pub, so a
         // literal-constructed -0.0 must still land in the +0.0 column
         let pts: Vec<GridPoint> = grid
@@ -604,7 +699,7 @@ impl SweepEngine {
                 // sweep's first-smallest selection (the incumbent always
                 // has the smaller schedule index)
                 let better =
-                    self.columns[c].best.as_ref().map(|b| rb.bytes < b.bytes).unwrap_or(true);
+                    self.columns[c].best.as_ref().map(|b| rb.sel < b.sel).unwrap_or(true);
                 if better {
                     self.columns[c].best = Some(rb);
                 }
@@ -631,14 +726,22 @@ impl SweepEngine {
                 }
             }
         }
-        let frontier = pareto_frontier(&self.points);
+        let delta_mode = self.ctx.delta.is_some();
+        let frontier = pareto_frontier(&self.points, delta_mode);
         // the winner is cloned into `best` AND kept in its ColumnBest
         // (for --select-lambda): an accepted duplication — containers
         // are compressed artifacts, orders of magnitude below the model
         // the engine already holds
-        let (best, best_point) = {
+        let (best, best_point, best_delta) = {
             let b = self.columns[wi].best.as_ref().expect("overall() returned the column");
-            ((b.model.clone(), b.report.clone()), b.point)
+            if delta_mode && b.delta.is_none() {
+                bail!(
+                    "delta sweep: no grid point could be delta-coded against \
+                     the parent (residual levels overflow) — the parent and \
+                     target models are too far apart; ship a full container"
+                );
+            }
+            ((b.model.clone(), b.report.clone()), b.point, b.delta.clone())
         };
         let n_columns = self.columns.len();
         let columns: Vec<ColumnBest> = self
@@ -654,12 +757,14 @@ impl SweepEngine {
                     report: b.report,
                     probes,
                     abandoned,
+                    delta_bytes: b.delta.as_ref().map(|(dm, _)| dm.total_bytes()),
                 })
             })
             .collect();
         Ok(SweepResult {
             best,
             best_point,
+            best_delta,
             columns,
             frontier,
             stats: SweepStats {
@@ -755,32 +860,40 @@ fn chain_dispatch<A, T, S, N>(
 }
 
 /// Indices of the completed points forming the Pareto frontier of
-/// (compressed_bytes, distortion): a point is kept iff no other
-/// completed point is at least as good on both axes and strictly better
-/// on one (exact duplicates are all kept). Sorted by
-/// (bytes, distortion, schedule index) — deterministic.
-fn pareto_frontier(points: &[SweepPoint]) -> Vec<usize> {
-    let completed: Vec<usize> = (0..points.len()).filter(|&i| !points[i].abandoned).collect();
+/// (bytes, distortion): a point is kept iff no other completed point is
+/// at least as good on both axes and strictly better on one (exact
+/// duplicates are all kept). Sorted by (bytes, distortion, schedule
+/// index) — deterministic. In a delta sweep the byte axis is the delta
+/// segment size and points that could not be delta-coded are excluded
+/// (they are undeliverable under the delta objective).
+fn pareto_frontier(points: &[SweepPoint], delta_mode: bool) -> Vec<usize> {
+    let bytes_of = |p: &SweepPoint| -> Option<usize> {
+        if delta_mode { p.delta_bytes } else { Some(p.compressed_bytes) }
+    };
+    let completed: Vec<usize> = (0..points.len())
+        .filter(|&i| !points[i].abandoned && bytes_of(&points[i]).is_some())
+        .collect();
     let mut out: Vec<usize> = completed
         .iter()
         .copied()
         .filter(|&i| {
             let p = &points[i];
+            let pb = bytes_of(p).expect("completed points carry bytes");
             !completed.iter().any(|&j| {
                 if j == i {
                     return false;
                 }
                 let q = &points[j];
-                q.compressed_bytes <= p.compressed_bytes
+                let qb = bytes_of(q).expect("completed points carry bytes");
+                qb <= pb
                     && q.distortion <= p.distortion
-                    && (q.compressed_bytes < p.compressed_bytes || q.distortion < p.distortion)
+                    && (qb < pb || q.distortion < p.distortion)
             })
         })
         .collect();
     out.sort_by(|&a, &b| {
-        points[a]
-            .compressed_bytes
-            .cmp(&points[b].compressed_bytes)
+        bytes_of(&points[a])
+            .cmp(&bytes_of(&points[b]))
             .then(
                 points[a]
                     .distortion
@@ -790,6 +903,38 @@ fn pareto_frontier(points: &[SweepPoint]) -> Vec<usize> {
             .then(a.cmp(&b))
     });
     out
+}
+
+/// Delta-encode a completed point's container against the sweep's
+/// parent, on the coordinator thread (deterministic bookkeeping, like
+/// the column-best updates). Outer `None`: plain sweep, no delta.
+/// Inner `None`: the point's residuals cannot be delta-coded (level
+/// overflow against this parent) — the point is recorded but can never
+/// be selected.
+#[allow(clippy::type_complexity)]
+fn delta_for(
+    ctx: &ProbeCtx,
+    compressed: &CompressedModel,
+) -> Option<Option<(usize, DeltaModel, crate::delta::DeltaReport)>> {
+    let pc = ctx.delta.as_ref()?;
+    Some(match encode_with_ctx(pc, compressed, 1) {
+        Ok((dm, dr)) => Some((dm.total_bytes(), dm, dr)),
+        Err(_) => None,
+    })
+}
+
+/// The incumbent-selection metric: serialized container bytes in a
+/// plain sweep, delta segment bytes in a delta sweep (`usize::MAX` for
+/// an un-deltable point, so it never wins).
+fn sel_metric(
+    full_bytes: usize,
+    delta: &Option<Option<(usize, DeltaModel, crate::delta::DeltaReport)>>,
+) -> usize {
+    match delta {
+        None => full_bytes,
+        Some(Some((b, ..))) => *b,
+        Some(None) => usize::MAX,
+    }
 }
 
 /// One scheduling round: chained (layer × point) tasks on the pool,
@@ -820,6 +965,7 @@ fn run_probes(
                 CompressedModel { name: ctx.model.manifest.name.clone(), layers: vec![] };
             let ser = compressed.serialize();
             let report = ModelReport::from_layers_sized(&ctx.model, ser.len(), vec![]);
+            let delta = delta_for(ctx, &compressed);
             points[p] = Some(SweepPoint {
                 s: pt.s,
                 lambda_scale: pt.lambda_scale,
@@ -829,6 +975,7 @@ fn run_probes(
                 abandoned: false,
                 abandon_kind: None,
                 container_hash: fnv1a(&ser),
+                delta_bytes: delta.as_ref().and_then(|d| d.as_ref().map(|(b, ..)| *b)),
                 seeded: 0,
                 seed_hits: 0,
                 wall_s: 0.0,
@@ -838,6 +985,8 @@ fn run_probes(
                     sched: sched_base + p,
                     point: *pt,
                     bytes: report.compressed_bytes,
+                    sel: sel_metric(report.compressed_bytes, &delta),
+                    delta: delta.flatten().map(|(_, dm, dr)| (dm, dr)),
                     model: compressed,
                     report,
                 });
@@ -952,6 +1101,7 @@ fn run_probes(
                 abandoned: true,
                 abandon_kind: Some(kind),
                 container_hash: 0,
+                delta_bytes: None,
                 seeded: reports.iter().map(|r| r.seeded).sum(),
                 seed_hits: reports.iter().map(|r| r.seed_hits).sum(),
                 wall_s: ps.wall,
@@ -961,6 +1111,8 @@ fn run_probes(
                 CompressedModel { name: ctx.model.manifest.name.clone(), layers };
             let ser = compressed.serialize();
             let report = ModelReport::from_layers_sized(&ctx.model, ser.len(), reports);
+            let delta = delta_for(ctx, &compressed);
+            let sel = sel_metric(report.compressed_bytes, &delta);
             points[p] = Some(SweepPoint {
                 s: pts[p].s,
                 lambda_scale: pts[p].lambda_scale,
@@ -970,6 +1122,7 @@ fn run_probes(
                 abandoned: false,
                 abandon_kind: None,
                 container_hash: fnv1a(&ser),
+                delta_bytes: delta.as_ref().and_then(|d| d.as_ref().map(|(b, ..)| *b)),
                 seeded: report.layers.iter().map(|r| r.seeded).sum(),
                 seed_hits: report.layers.iter().map(|r| r.seed_hits).sum(),
                 wall_s: ps.wall,
@@ -978,16 +1131,15 @@ fn run_probes(
             let sched = sched_base + p;
             let better = match &best[c] {
                 None => true,
-                Some(b) => {
-                    report.compressed_bytes < b.bytes
-                        || (report.compressed_bytes == b.bytes && sched < b.sched)
-                }
+                Some(b) => sel < b.sel || (sel == b.sel && sched < b.sched),
             };
             if better {
                 best[c] = Some(Best {
                     sched,
                     point: pts[p],
                     bytes: report.compressed_bytes,
+                    sel,
+                    delta: delta.flatten().map(|(_, dm, dr)| (dm, dr)),
                     model: compressed,
                     report,
                 });
@@ -1105,6 +1257,62 @@ pub fn sweep_s_auto(
     eng.finish()
 }
 
+/// Delta-aware (S × λ) sweep: the same coarse-to-fine surface search as
+/// [`sweep_s_auto`], but every completed grid point is additionally
+/// delta-encoded against `parent` (via a [`ParentCtx`] hoisted once —
+/// one parent CABAC decode for the whole sweep) and selection minimizes
+/// the **delta segment bytes** instead of the full container bytes. The
+/// winner's container AND its delta segment come back together
+/// (`SweepResult::best_delta`), so the caller ships whichever the
+/// client's cache state calls for.
+///
+/// Warm-start seeding is unchanged (seeds never change a probe's
+/// bytes); abandonment is forced off by the engine because full-byte
+/// budgets do not order points the way delta bytes do. Grid points whose
+/// residuals overflow against `parent` are recorded but never selected.
+pub fn sweep_delta(
+    parent: &CompressedModel,
+    model: &Model,
+    opts: &SweepOptions,
+    base: &CompressionSpec,
+) -> Result<SweepResult> {
+    if opts.points == 0 {
+        bail!("sweep --points must be >= 1");
+    }
+    let lambdas = resolve_lambdas(&opts.lambdas, base)?;
+    let cross = |ss: &[u32]| -> Vec<GridPoint> {
+        lambdas
+            .iter()
+            .flat_map(|&l| ss.iter().map(move |&s| GridPoint::new(s, l)))
+            .collect()
+    };
+    let mut eng = SweepEngine::new_delta(model, base, opts.workers, parent.clone())?;
+    if opts.exhaustive {
+        let all: Vec<u32> = (0..=256).collect();
+        eng.run_round(&cross(&all), AbandonMode::Off, false);
+        return eng.finish();
+    }
+    eng.run_round(&cross(&default_s_grid(opts.points.max(2))), AbandonMode::Off, false);
+    loop {
+        let mut next: Vec<GridPoint> = Vec::new();
+        for &l in &lambdas {
+            if let Some(best_s) = eng.best_s_in(l) {
+                let probed_s = eng.probed_s_in(l);
+                next.extend(
+                    refine_grid(&probed_s, best_s, opts.points)
+                        .into_iter()
+                        .map(|s| GridPoint::new(s, l)),
+                );
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        eng.run_round(&next, AbandonMode::Off, opts.warm_start);
+    }
+    eng.finish()
+}
+
 /// Up to `per_round` evenly spaced unprobed integers strictly between
 /// the nearest probed neighbours of `best_s`. Empty when the bracket is
 /// exhausted (refinement converged).
@@ -1158,7 +1366,7 @@ pub fn sweep_per_layer(
         .filter(|p| seen.insert(p.key()))
         .collect();
     let n = model.weights.len();
-    let ctx = probe_ctx(model, base, workers);
+    let ctx = probe_ctx(model, base, workers, None);
     let mut best: Vec<Option<(usize, CompressedLayer, LayerReport)>> =
         (0..n).map(|_| None).collect();
     if n > 0 {
@@ -2024,5 +2232,116 @@ mod tests {
         let probed: BTreeSet<u32> = [0u32, 64].into_iter().collect();
         let g = refine_grid(&probed, 0, 3);
         assert!(g.iter().all(|&s| s > 0 && s < 64));
+    }
+
+    /// Parent container plus a sparsely perturbed target model (the
+    /// incremental-update fixture: same architecture, ~2% of weights
+    /// nudged).
+    fn delta_fixture() -> (CompressedModel, Model) {
+        let base_model = super::super::pipeline::tests::toy_model_pub();
+        let (parent, _) =
+            super::super::pipeline::compress_model(&base_model, &CompressionSpec::default(), 1);
+        let mut target = base_model;
+        let mut rng = crate::util::SplitMix64::new(0xDE17A);
+        for t in &mut target.weights {
+            let touched = (t.data.len() / 50).max(1);
+            for _ in 0..touched {
+                let i = rng.below(t.data.len() as u64) as usize;
+                t.data[i] += 0.08 * (rng.next_f64() as f32 - 0.5);
+            }
+        }
+        (parent, target)
+    }
+
+    #[test]
+    fn delta_sweep_parallel_matches_serial_byte_identical() {
+        // satellite: the delta-aware sweep must keep the engine's
+        // determinism contract — same winner container, same winner
+        // delta segment, same per-point records at every worker count.
+        let (parent, target) = delta_fixture();
+        let base = CompressionSpec::default();
+        let mk = |workers: usize| {
+            sweep_delta(
+                &parent,
+                &target,
+                &SweepOptions { points: 5, workers, ..Default::default() },
+                &base,
+            )
+            .unwrap()
+        };
+        let serial = mk(1);
+        let (dm_s, _) = serial.best_delta.as_ref().expect("delta sweep returns a delta");
+        for workers in [2usize, 4] {
+            let par = mk(workers);
+            assert_eq!(
+                par.best.0.serialize(),
+                serial.best.0.serialize(),
+                "workers={workers}: winner container diverged"
+            );
+            let (dm_p, _) = par.best_delta.as_ref().unwrap();
+            assert_eq!(
+                dm_p.serialize(),
+                dm_s.serialize(),
+                "workers={workers}: winner delta diverged"
+            );
+            assert_eq!(par.best_point, serial.best_point);
+            let a: Vec<_> = par.points.iter().map(point_fields).collect();
+            let b: Vec<_> = serial.points.iter().map(point_fields).collect();
+            assert_eq!(a, b, "workers={workers}: point records diverged");
+            assert_eq!(
+                par.points.iter().map(|p| p.delta_bytes).collect::<Vec<_>>(),
+                serial.points.iter().map(|p| p.delta_bytes).collect::<Vec<_>>(),
+            );
+        }
+    }
+
+    #[test]
+    fn delta_sweep_selects_on_delta_bytes_and_round_trips() {
+        let (parent, target) = delta_fixture();
+        let res = sweep_delta(
+            &parent,
+            &target,
+            &SweepOptions { points: 5, workers: 2, ..Default::default() },
+            &CompressionSpec::default(),
+        )
+        .unwrap();
+        let (dm, report) = res.best_delta.as_ref().unwrap();
+        // the winner minimizes delta bytes over all delta-codable points
+        let min_delta =
+            res.points.iter().filter_map(|p| p.delta_bytes).min().expect("codable points");
+        assert_eq!(dm.total_bytes(), min_delta);
+        // every completed point carries its delta size; abandonment is
+        // forced off in delta mode so none are abandoned
+        assert!(res.points.iter().all(|p| !p.abandoned));
+        // frontier points are all delta-codable and sorted by delta bytes
+        let fb: Vec<usize> =
+            res.frontier.iter().map(|&i| res.points[i].delta_bytes.unwrap()).collect();
+        assert!(fb.windows(2).all(|w| w[0] <= w[1]));
+        // the delta applies back to the winner container byte-for-byte
+        let applied = crate::delta::apply(&parent, dm, 2).unwrap();
+        assert_eq!(applied.serialize(), res.best.0.serialize());
+        assert!(report.residual_density() > 0.0);
+    }
+
+    #[test]
+    fn delta_sweep_rejects_architecture_mismatch() {
+        let (parent, target) = delta_fixture();
+        let opts = SweepOptions { points: 3, workers: 1, ..Default::default() };
+        let base = CompressionSpec::default();
+        // layer count mismatch
+        let mut short = parent.clone();
+        short.layers.pop();
+        let err = sweep_delta(&short, &target, &opts, &base).unwrap_err();
+        assert!(err.to_string().contains("layers"), "{err}");
+        // renamed layer
+        let mut renamed = parent.clone();
+        renamed.layers[0].name.push('X');
+        let err = sweep_delta(&renamed, &target, &opts, &base).unwrap_err();
+        assert!(err.to_string().contains("name mismatch"), "{err}");
+        // weight count mismatch
+        let mut resized = parent;
+        resized.layers[0].n_weights += 1;
+        let err = sweep_delta(&resized, &target, &opts, &base).unwrap_err();
+        assert!(err.to_string().contains("weight count"), "{err}");
     }
 }

@@ -1,0 +1,427 @@
+//! Delta application: reconstruct a target container from a parent
+//! container plus a `.dcbc` v3 delta segment — in batch ([`apply`]) or
+//! incrementally as bytes arrive ([`StreamApplier`]).
+//!
+//! The apply rule (normative spec: `docs/FORMAT.md` §"Delta segments")
+//! is the exact inverse of the encoder: `L_target = P + R`, where `P`
+//! quantizes the parent's reconstruction onto the delta layer's grid
+//! and `R` is the delta's residual levels. The applied layer carries
+//! the delta layer's header fields verbatim and a payload re-encoded
+//! from `L_target` with the same codec config and chunk split, so the
+//! output container is **byte-for-byte** the target the delta was
+//! encoded from (`delta_roundtrip_is_byte_exact`).
+
+use crate::delta::encode::{encode_with_splits, grid_reconstruct, parent_levels_on};
+use crate::model::container::fingerprint;
+use crate::model::{CompressedLayer, CompressedModel, DeltaLayer, DeltaModel};
+use crate::serve::stream::{DecodedLayer, StreamDecoder, StreamEvent};
+use anyhow::{bail, Result};
+
+/// Reconstruct the target container from `parent` + `delta`.
+///
+/// Rejects (never panics) on: parent fingerprint mismatch (a stale or
+/// wrong base — serve maps this to HTTP 409), layer count mismatch,
+/// layer name mismatch, weight count mismatch, short residual decode,
+/// and `P + R` overflowing `i32`.
+pub fn apply(
+    parent: &CompressedModel,
+    delta: &DeltaModel,
+    workers: usize,
+) -> Result<CompressedModel> {
+    let fp = fingerprint(parent);
+    if fp != delta.parent_fp {
+        bail!(
+            "delta apply: parent fingerprint mismatch (delta expects {:016x}, \
+             base is {:016x})",
+            delta.parent_fp,
+            fp
+        );
+    }
+    if parent.layers.len() != delta.layers.len() {
+        bail!(
+            "delta apply: parent has {} layers, delta {}",
+            parent.layers.len(),
+            delta.layers.len()
+        );
+    }
+    let mut layers = Vec::with_capacity(delta.layers.len());
+    for (pl, dl) in parent.layers.iter().zip(&delta.layers) {
+        if pl.name != dl.name() {
+            bail!(
+                "delta apply: layer name mismatch ({:?} vs {:?})",
+                pl.name,
+                dl.name()
+            );
+        }
+        match dl {
+            DeltaLayer::Skipped(_) => layers.push(pl.clone()),
+            DeltaLayer::Coded(d) => layers.push(apply_layer(pl, d, workers)?),
+        }
+    }
+    Ok(CompressedModel { name: delta.name.clone(), layers })
+}
+
+/// Apply one coded delta layer against its parent layer.
+fn apply_layer(
+    pl: &CompressedLayer,
+    d: &CompressedLayer,
+    workers: usize,
+) -> Result<CompressedLayer> {
+    if pl.n_weights != d.n_weights {
+        bail!(
+            "delta apply: layer {:?} weight count mismatch ({} vs {})",
+            d.name,
+            pl.n_weights,
+            d.n_weights
+        );
+    }
+    let residual = d.decode_levels_with(workers);
+    if residual.len() != d.n_weights {
+        bail!("delta apply: layer {:?} residual decodes short", d.name);
+    }
+    let target = target_levels(pl, d, &residual, workers)?;
+    let splits: Vec<usize> = d.chunk_spans().iter().map(|s| s.n_weights).collect();
+    let (payload, chunks) = encode_with_splits(&target, d.cfg, &splits);
+    Ok(CompressedLayer {
+        name: d.name.clone(),
+        dims: d.dims.clone(),
+        grid: d.grid,
+        s_param: d.s_param,
+        cfg: d.cfg,
+        n_weights: d.n_weights,
+        payload,
+        chunks,
+        bias: d.bias.clone(),
+    })
+}
+
+/// `L_target = P + R` with overflow checked (a hostile delta can code
+/// arbitrary residual magnitudes).
+fn target_levels(
+    pl: &CompressedLayer,
+    d: &CompressedLayer,
+    residual: &[i32],
+    workers: usize,
+) -> Result<Vec<i32>> {
+    let p = parent_levels_on(pl, &d.grid, workers);
+    let mut target = Vec::with_capacity(residual.len());
+    for (&q, &r) in p.iter().zip(residual) {
+        let t = i32::try_from(q as i64 + r as i64)
+            .map_err(|_| anyhow::anyhow!("level overflow applying layer {:?}", d.name))?;
+        target.push(t);
+    }
+    Ok(target)
+}
+
+/// Incremental delta application on top of [`StreamDecoder`]: feed the
+/// delta segment's bytes as they arrive and receive fully applied
+/// layers (reconstructed target weights + bias) without waiting for
+/// the whole transfer — the engine behind `deepcabac fetch --from`.
+///
+/// Emitted [`DecodedLayer`]s have `levels` = the **target's** levels
+/// (`P + R`, not the residual) and `weights` = their dequantization;
+/// `skipped` is preserved from the wire so callers can tell which
+/// layers were carried over from the base unchanged.
+pub struct StreamApplier<'a> {
+    parent: &'a CompressedModel,
+    parent_fp: u64,
+    workers: usize,
+    dec: StreamDecoder,
+    started: bool,
+}
+
+impl<'a> StreamApplier<'a> {
+    /// The parent fingerprint is computed once here (it hashes the full
+    /// canonical serialization of `parent`).
+    pub fn new(parent: &'a CompressedModel, workers: usize) -> Self {
+        Self {
+            parent,
+            parent_fp: fingerprint(parent),
+            workers,
+            dec: StreamDecoder::new(),
+            started: false,
+        }
+    }
+
+    /// Feed a slice of delta-segment bytes; returns every layer fully
+    /// applied by those bytes (possibly none). Errors are terminal.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Vec<DecodedLayer>> {
+        let events = self.dec.feed(bytes)?;
+        let mut out = Vec::new();
+        for ev in events {
+            match ev {
+                StreamEvent::Start { version, n_layers, parent_fp, .. } => {
+                    if version != crate::model::container::VERSION_DELTA {
+                        bail!(
+                            "stream apply: container is version {version}, \
+                             not a delta segment — fetch it without --from"
+                        );
+                    }
+                    match parent_fp {
+                        Some(fp) if fp == self.parent_fp => {}
+                        Some(fp) => bail!(
+                            "stream apply: parent fingerprint mismatch \
+                             (delta expects {fp:016x}, base is {:016x})",
+                            self.parent_fp
+                        ),
+                        None => bail!("stream apply: v3 prelude missing parent fingerprint"),
+                    }
+                    if n_layers != self.parent.layers.len() {
+                        bail!(
+                            "stream apply: parent has {} layers, delta {}",
+                            self.parent.layers.len(),
+                            n_layers
+                        );
+                    }
+                    self.started = true;
+                }
+                StreamEvent::Layer(l) => out.push(self.apply_streamed(*l)?),
+                StreamEvent::Chunk { .. } | StreamEvent::End => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Verify the stream ended cleanly (all layers applied, no trailing
+    /// bytes). Call after the last `feed`.
+    pub fn finish(&self) -> Result<()> {
+        self.dec.finish()?;
+        if !self.started {
+            bail!("stream apply: empty stream");
+        }
+        Ok(())
+    }
+
+    fn apply_streamed(&self, l: DecodedLayer) -> Result<DecodedLayer> {
+        let pl = match self.parent.layers.get(l.index) {
+            Some(pl) => pl,
+            None => bail!("stream apply: delta has more layers than parent"),
+        };
+        if pl.name != l.name {
+            bail!(
+                "stream apply: layer name mismatch ({:?} vs {:?})",
+                pl.name,
+                l.name
+            );
+        }
+        if l.skipped {
+            // carried over from the base: reconstruct from the parent
+            return Ok(DecodedLayer {
+                index: l.index,
+                name: pl.name.clone(),
+                dims: pl.dims.clone(),
+                grid: pl.grid,
+                s_param: pl.s_param,
+                n_weights: pl.n_weights,
+                levels: pl.decode_levels_with(self.workers),
+                weights: grid_reconstruct(pl, self.workers),
+                bias: pl.bias.clone(),
+                skipped: true,
+            });
+        }
+        if pl.n_weights != l.n_weights {
+            bail!(
+                "stream apply: layer {:?} weight count mismatch ({} vs {})",
+                l.name,
+                pl.n_weights,
+                l.n_weights
+            );
+        }
+        let p = parent_levels_on(pl, &l.grid, self.workers);
+        let mut levels = Vec::with_capacity(l.levels.len());
+        for (&q, &r) in p.iter().zip(&l.levels) {
+            let t = i32::try_from(q as i64 + r as i64)
+                .map_err(|_| anyhow::anyhow!("level overflow applying layer {:?}", l.name))?;
+            levels.push(t);
+        }
+        let weights = l.grid.dequantize(&levels);
+        Ok(DecodedLayer { levels, weights, skipped: false, ..l })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecConfig;
+    use crate::delta::encode::encode;
+    use crate::model::DeltaLayer;
+    use crate::quant::QuantGrid;
+    use crate::util::SplitMix64;
+
+    /// Build a layer directly from levels (grid Δ=0.25) with an optional
+    /// chunk split, mirroring the container-test helpers.
+    fn layer_from_levels(name: &str, levels: &[i32], n_chunks: usize) -> CompressedLayer {
+        let cfg = CodecConfig::default();
+        let max_level = levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(0) as i32;
+        let splits: Vec<usize> = if n_chunks <= 1 {
+            vec![levels.len()]
+        } else {
+            let per = (levels.len() + n_chunks - 1) / n_chunks;
+            levels.chunks(per.max(1)).map(|c| c.len()).collect()
+        };
+        let (payload, chunks) = encode_with_splits(levels, cfg, &splits);
+        CompressedLayer {
+            name: name.into(),
+            dims: vec![levels.len().max(1)],
+            grid: QuantGrid { delta: 0.25, max_level: max_level.max(1) },
+            s_param: 40,
+            cfg,
+            n_weights: levels.len(),
+            payload,
+            chunks,
+            bias: vec![0.125, -0.5],
+        }
+    }
+
+    fn random_levels(rng: &mut SplitMix64, n: usize, max: i32) -> Vec<i32> {
+        (0..n)
+            .map(|_| {
+                if rng.next_f64() < 0.85 {
+                    0
+                } else {
+                    let m = 1 + rng.below(max.max(1) as u64) as i32;
+                    if rng.next_u64() & 1 == 0 { m } else { -m }
+                }
+            })
+            .collect()
+    }
+
+    /// Parent/target pair: same architecture, target = parent with a
+    /// sparse perturbation of the levels plus one untouched layer.
+    fn parent_target_pair(seed: u64, n_chunks: usize) -> (CompressedModel, CompressedModel) {
+        let mut rng = SplitMix64::new(seed);
+        let base_a = random_levels(&mut rng, 600, 9);
+        let base_b = random_levels(&mut rng, 257, 5);
+        let mut upd_a = base_a.clone();
+        for _ in 0..12 {
+            let i = rng.below(upd_a.len() as u64) as usize;
+            upd_a[i] += if rng.next_u64() & 1 == 0 { 1 } else { -1 };
+        }
+        let parent = CompressedModel {
+            name: "m".into(),
+            layers: vec![
+                layer_from_levels("conv1", &base_a, n_chunks),
+                layer_from_levels("fc", &base_b, 1),
+            ],
+        };
+        let target = CompressedModel {
+            name: "m".into(),
+            layers: vec![
+                layer_from_levels("conv1", &upd_a, n_chunks),
+                layer_from_levels("fc", &base_b, 1),
+            ],
+        };
+        (parent, target)
+    }
+
+    #[test]
+    fn delta_roundtrip_is_byte_exact() {
+        // apply(parent, encode(parent, target)) == target, byte for byte,
+        // independent of worker count on either side — monolithic and
+        // chunked layers alike.
+        for (seed, n_chunks) in [(11u64, 1usize), (12, 3), (13, 4)] {
+            let (parent, target) = parent_target_pair(seed, n_chunks);
+            let (delta, report) = encode(&parent, &target, 1).unwrap();
+            // the untouched layer became a skip record
+            assert!(matches!(delta.layers[1], DeltaLayer::Skipped(_)));
+            assert!(report.layers[1].skipped);
+            // delta survives its own serialization
+            let delta = DeltaModel::deserialize(&delta.serialize()).unwrap();
+            let target_bytes = target.serialize();
+            for workers in [1usize, 2, 4] {
+                let applied = apply(&parent, &delta, workers).unwrap();
+                assert_eq!(
+                    applied.serialize(),
+                    target_bytes,
+                    "seed={seed} chunks={n_chunks} workers={workers}"
+                );
+            }
+            // encoding with more workers produces the same delta bytes
+            let (delta_par, _) = encode(&parent, &target, 4).unwrap();
+            assert_eq!(delta_par.serialize(), delta.serialize());
+        }
+    }
+
+    #[test]
+    fn stream_apply_matches_batch_at_one_byte_dribble() {
+        let (parent, target) = parent_target_pair(21, 3);
+        let (delta, _) = encode(&parent, &target, 1).unwrap();
+        let bytes = delta.serialize();
+        let batch = apply(&parent, &delta, 1).unwrap();
+
+        for split in [1usize, 7, bytes.len()] {
+            let mut applier = StreamApplier::new(&parent, 2);
+            let mut layers = Vec::new();
+            for chunk in bytes.chunks(split) {
+                layers.extend(applier.feed(chunk).unwrap());
+            }
+            applier.finish().unwrap();
+            assert_eq!(layers.len(), batch.layers.len(), "split={split}");
+            for (sl, bl) in layers.iter().zip(&batch.layers) {
+                assert_eq!(sl.name, bl.name);
+                assert_eq!(sl.levels, bl.decode_levels_with(1), "split={split}");
+                assert_eq!(sl.weights, bl.decode_weights());
+                assert_eq!(sl.bias, bl.bias);
+            }
+            // the skip record reconstructs from the parent
+            assert!(layers[1].skipped);
+            assert!(!layers[0].skipped);
+        }
+    }
+
+    #[test]
+    fn apply_rejects_wrong_parent() {
+        let (parent, target) = parent_target_pair(31, 1);
+        let (delta, _) = encode(&parent, &target, 1).unwrap();
+        // a different base (the target itself) has a different fingerprint
+        let err = apply(&target, &delta, 1).unwrap_err().to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+
+        let mut applier = StreamApplier::new(&target, 1);
+        let res = applier.feed(&delta.serialize());
+        let err = res.unwrap_err().to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn apply_rejects_structural_mismatches() {
+        let (parent, target) = parent_target_pair(41, 1);
+        let (mut delta, _) = encode(&parent, &target, 1).unwrap();
+
+        // renamed skip record
+        delta.layers[1] = DeltaLayer::Skipped("not_fc".into());
+        let err = apply(&parent, &delta, 1).unwrap_err().to_string();
+        assert!(err.contains("name mismatch"), "{err}");
+
+        // layer-count lie
+        let (mut delta, _) = encode(&parent, &target, 1).unwrap();
+        delta.layers.pop();
+        let err = apply(&parent, &delta, 1).unwrap_err().to_string();
+        assert!(err.contains("layers"), "{err}");
+
+        // weight-count lie on a coded layer
+        let (mut delta, _) = encode(&parent, &target, 1).unwrap();
+        if let DeltaLayer::Coded(c) = &mut delta.layers[0] {
+            c.n_weights += 1;
+        }
+        assert!(apply(&parent, &delta, 1).is_err());
+
+        // stream apply refuses a full (v1/v2) container fed as a delta
+        let mut applier = StreamApplier::new(&parent, 1);
+        let err = applier.feed(&target.serialize()).unwrap_err().to_string();
+        assert!(err.contains("not a delta segment"), "{err}");
+    }
+
+    #[test]
+    fn identical_models_delta_is_all_skips() {
+        let (parent, _) = parent_target_pair(51, 2);
+        let (delta, report) = encode(&parent, &parent, 1).unwrap();
+        assert_eq!(delta.coded_layers(), 0);
+        assert_eq!(report.residual_density(), 0.0);
+        assert_eq!(delta.payload_bytes(), 0);
+        let applied = apply(&parent, &delta, 1).unwrap();
+        assert_eq!(applied.serialize(), parent.serialize());
+        // the delta is a fraction of the full container
+        assert!(delta.total_bytes() < parent.total_bytes() / 4);
+    }
+}

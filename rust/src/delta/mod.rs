@@ -1,0 +1,31 @@
+//! Delta-model compression: a model as a base `.dcbc` container plus
+//! CABAC-coded residual deltas (`.dcbc` v3 delta segments).
+//!
+//! The journal version of the paper ("A Universal Compression Algorithm
+//! for DNNs", arXiv:1907.11900) extends the coder from weights to
+//! weight-*update* residuals — the federated-learning and OTA-update
+//! target. This module is that extension, built on the container format
+//! in `docs/FORMAT.md` §"Delta segments (version 3)":
+//!
+//! * [`encode`] diffs a target container against a parent container in
+//!   **level space**: per layer, the residual `R = L_target − P` where
+//!   `P` quantizes the parent's reconstruction onto the target grid.
+//!   Residuals of a sparse update are overwhelmingly zero, which the
+//!   significance-flag contexts absorb.
+//! * [`apply`] reverses it exactly: `L_target = P + R`, re-encoded with
+//!   the same codec config and chunk split — so
+//!   `apply(parent, encode(parent, target))` reproduces the target
+//!   container **byte-for-byte** (see `delta_roundtrip_is_byte_exact`).
+//! * [`StreamApplier`] applies a delta **in place as bytes arrive**, on
+//!   top of [`crate::serve::stream::StreamDecoder`], for
+//!   `deepcabac fetch --from`.
+//! * [`encode_from_model`] compresses a raw target model first (through
+//!   the standard pipeline) and then diffs — the entry point the
+//!   delta-aware sweep (`coordinator::sweep::sweep_delta`) and the
+//!   federated example build on.
+
+pub mod apply;
+pub mod encode;
+
+pub use apply::{apply, StreamApplier};
+pub use encode::{encode, encode_from_model, encode_with_ctx, DeltaReport, ParentCtx};

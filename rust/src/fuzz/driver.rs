@@ -18,8 +18,9 @@
 //! pass before being written out, so corpus entries stay reviewable.
 
 use super::{alloc, gen, mutate};
-use crate::model::container::{parse_container_prefix, Parsed};
-use crate::model::CompressedModel;
+use crate::coordinator::pipeline::{compress_model, CompressionSpec};
+use crate::model::container::{parse_container_prefix, Parsed, VERSION_DELTA};
+use crate::model::{CompressedModel, DeltaModel};
 use crate::serve::http::parse_request_head;
 use crate::serve::stream::StreamDecoder;
 use crate::util::{fnv1a, SplitMix64};
@@ -31,7 +32,8 @@ use std::time::Instant;
 /// Which parser surface a fuzz case is thrown at.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TargetKind {
-    /// Batch container parsing: [`CompressedModel::deserialize`] plus the
+    /// Batch container parsing: [`CompressedModel::deserialize`] (or
+    /// [`DeltaModel::deserialize`] for v3 inputs) plus the
     /// roundtrip/idempotence invariants.
     Container,
     /// The push-based [`StreamDecoder`], fed in input-derived splits.
@@ -40,6 +42,13 @@ pub enum TargetKind {
     Http,
     /// `Range` header value evaluation across body sizes.
     Range,
+    /// The *encoder* side: hostile models (denormals, ±0, NaN/Inf,
+    /// zero-dim/huge-dim tensors, decoded from the input bytes by
+    /// [`gen::hostile_model_pair`]) pushed through the compression
+    /// pipeline and [`crate::delta::encode_from_model`]. Non-finite
+    /// input must be rejected with a structured error, and every
+    /// accepted delta must apply back to the target byte-for-byte.
+    Encoder,
 }
 
 impl TargetKind {
@@ -49,11 +58,18 @@ impl TargetKind {
             TargetKind::Stream => "stream",
             TargetKind::Http => "http",
             TargetKind::Range => "range",
+            TargetKind::Encoder => "encoder",
         }
     }
 
-    pub fn all() -> [TargetKind; 4] {
-        [TargetKind::Container, TargetKind::Stream, TargetKind::Http, TargetKind::Range]
+    pub fn all() -> [TargetKind; 5] {
+        [
+            TargetKind::Container,
+            TargetKind::Stream,
+            TargetKind::Http,
+            TargetKind::Range,
+            TargetKind::Encoder,
+        ]
     }
 }
 
@@ -208,11 +224,15 @@ fn exec(target: TargetKind, input: &[u8]) -> CaseOutcome {
         TargetKind::Stream => exec_stream(input),
         TargetKind::Http => exec_http(input),
         TargetKind::Range => exec_range(input),
+        TargetKind::Encoder => exec_encoder(input),
     }
 }
 
 fn exec_container(input: &[u8]) -> CaseOutcome {
     let survived_prefix = matches!(parse_container_prefix(input), Ok(Parsed::Complete(..)));
+    if input.len() > 4 && input[4] == VERSION_DELTA {
+        return exec_delta_container(input, survived_prefix);
+    }
     let Ok(m) = CompressedModel::deserialize(input) else {
         return CaseOutcome { survived_prefix, accepted: false };
     };
@@ -239,6 +259,68 @@ fn exec_container(input: &[u8]) -> CaseOutcome {
         panic!("batch accepted but stream decoder rejected: {e}");
     }
     CaseOutcome { survived_prefix, accepted: true }
+}
+
+/// The v3 arm of [`exec_container`]: same idempotence/decode-count/
+/// stream-differential invariants, on [`DeltaModel`].
+fn exec_delta_container(input: &[u8], survived_prefix: bool) -> CaseOutcome {
+    let Ok(dm) = DeltaModel::deserialize(input) else {
+        return CaseOutcome { survived_prefix, accepted: false };
+    };
+    let y = dm.serialize();
+    let dm2 = DeltaModel::deserialize(&y)
+        .unwrap_or_else(|e| panic!("reencode of accepted delta segment rejected: {e}"));
+    assert_eq!(dm2.serialize(), y, "v3 serialize∘deserialize is not idempotent");
+    for l in &dm.layers {
+        if let crate::model::DeltaLayer::Coded(cl) = l {
+            let levels = cl.decode_levels_with(1);
+            assert_eq!(
+                levels.len(),
+                cl.n_weights,
+                "delta layer {:?} decoded {} residuals, header claims {}",
+                cl.name,
+                levels.len(),
+                cl.n_weights
+            );
+        }
+    }
+    // batch-accept ⇒ stream-accept holds for delta segments too
+    if let Err(e) = crate::serve::stream::decode_all(input) {
+        panic!("batch accepted v3 but stream decoder rejected: {e}");
+    }
+    CaseOutcome { survived_prefix, accepted: true }
+}
+
+/// The encoder-side target: the input bytes are a recipe for a hostile
+/// (parent, target) model pair. The parent must survive the standard
+/// pipeline (its values are finite, if nasty); the delta encoder must
+/// either reject the target with a structured error (NaN/Inf) or
+/// produce a delta that applies back to the full target container
+/// byte-for-byte and round-trips on the wire.
+fn exec_encoder(input: &[u8]) -> CaseOutcome {
+    let (parent_model, target_model) = gen::hostile_model_pair(input);
+    let spec = CompressionSpec {
+        chunks: 1 + (input.first().copied().unwrap_or(0) % 3) as u32,
+        ..CompressionSpec::default()
+    };
+    let (parent, _rep) = compress_model(&parent_model, &spec, 1);
+    match crate::delta::encode_from_model(&parent, &target_model, &spec, 1) {
+        Err(_) => CaseOutcome { survived_prefix: true, accepted: false },
+        Ok((full, dm, _report)) => {
+            let applied = crate::delta::apply(&parent, &dm, 1)
+                .unwrap_or_else(|e| panic!("encoder produced an unappliable delta: {e}"));
+            assert_eq!(
+                applied.serialize(),
+                full.serialize(),
+                "delta apply diverged from the target container"
+            );
+            let bytes = dm.serialize();
+            let dm2 = DeltaModel::deserialize(&bytes)
+                .unwrap_or_else(|e| panic!("encoder emitted an unparseable delta segment: {e}"));
+            assert_eq!(dm2.serialize(), bytes, "emitted delta segment is not canonical");
+            CaseOutcome { survived_prefix: true, accepted: true }
+        }
+    }
 }
 
 fn exec_stream(input: &[u8]) -> CaseOutcome {
@@ -378,7 +460,10 @@ fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
     let pristine = rng.below(8) == 0;
     match target {
         TargetKind::Container | TargetKind::Stream => {
-            let base = gen::container(rng);
+            // 1-in-4 cases work a v3 delta segment instead of a full
+            // container — same field-mapped mutation machinery
+            let base =
+                if rng.below(4) == 0 { gen::delta_container(rng) } else { gen::container(rng) };
             if pristine {
                 return base;
             }
@@ -386,6 +471,11 @@ fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
                 Ok(fields) => mutate::container(&base, &fields, rng),
                 Err(_) => base,
             }
+        }
+        TargetKind::Encoder => {
+            // the input *is* the hostile-model recipe; every byte string
+            // is a valid recipe, so mutation is plain byte noise
+            (0..rng.below(700)).map(|_| rng.next_u64() as u8).collect()
         }
         TargetKind::Http => {
             let base = gen::http_request(rng);
@@ -429,19 +519,22 @@ pub fn fuzz_target(
 }
 
 /// Replay the checked-in corpus at `root` (`container/`, `http/`,
-/// `range/` subdirectories; missing ones are skipped). Filename
-/// conventions: `accept_*` must parse Ok, `reject_*` must parse Err,
-/// anything else only has to uphold the crash invariants. Container
-/// corpus files run against **both** the batch and the stream targets.
+/// `range/`, `encoder/` subdirectories; missing ones are skipped).
+/// Filename conventions: `accept_*` must parse Ok, `reject_*` must parse
+/// Err, anything else only has to uphold the crash invariants. Container
+/// corpus files (v1/v2 *and* v3 delta segments) run against **both** the
+/// batch and the stream targets; `encoder/` files are hostile-model
+/// recipes.
 pub fn replay_corpus(root: &Path, budgets: &Budgets) -> Result<(FuzzStats, Vec<Crash>)> {
     let _quiet = Quiet::new();
     let metered = alloc::probe();
     let mut stats = FuzzStats { alloc_metered: metered, ..Default::default() };
     let mut crashes = Vec::new();
-    let groups: [(&str, &[TargetKind]); 3] = [
+    let groups: [(&str, &[TargetKind]); 4] = [
         ("container", &[TargetKind::Container, TargetKind::Stream]),
         ("http", &[TargetKind::Http]),
         ("range", &[TargetKind::Range]),
+        ("encoder", &[TargetKind::Encoder]),
     ];
     for (sub, targets) in groups {
         let dir = root.join(sub);
@@ -509,6 +602,43 @@ mod tests {
                 assert!(outcome.accepted && outcome.survived_prefix);
             }
         }
+    }
+
+    #[test]
+    fn valid_delta_segments_are_accepted_with_no_crashes() {
+        let mut rng = SplitMix64::new(103);
+        let budgets = Budgets::default();
+        for _ in 0..8 {
+            let bytes = gen::delta_container(&mut rng);
+            for t in [TargetKind::Container, TargetKind::Stream] {
+                let (crash, outcome) = run_case(t, &bytes, &budgets, false);
+                assert!(crash.is_none(), "{:?}: {:?}", t, crash);
+                assert!(outcome.accepted && outcome.survived_prefix);
+            }
+        }
+    }
+
+    #[test]
+    fn encoder_target_rejects_nonfinite_without_crashing() {
+        let budgets = Budgets::default();
+        // craft a recipe whose target re-draws land on NaN/±Inf: layer
+        // count, size arm 2, size byte 2 (→ 3 weights), then (parent,
+        // target, sigma) selector triples whose target byte ≡ 0 mod 4
+        // forces a re-draw from HOSTILE_ANY at indices 12/13/14
+        let mut input = vec![1u8, 2, 2];
+        for sel in [48u8, 52, 56] {
+            input.extend_from_slice(&[6, sel, 8]);
+        }
+        input.push(0); // no bias
+        let (crash, outcome) = run_case(TargetKind::Encoder, &input, &budgets, false);
+        assert!(crash.is_none(), "non-finite target must not crash: {crash:?}");
+        assert!(!outcome.accepted, "non-finite target must be rejected");
+        // and an all-finite recipe must be accepted (encode + apply +
+        // wire round-trip all verified inside exec_encoder)
+        let finite = [2u8, 3, 9, 1, 8, 10, 2, 8, 4, 3, 8, 1, 5, 1, 8, 2, 0, 1];
+        let (crash, outcome) = run_case(TargetKind::Encoder, &finite, &budgets, false);
+        assert!(crash.is_none(), "finite hostile recipe crashed: {crash:?}");
+        assert!(outcome.accepted, "finite hostile recipe must delta-encode");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use crate::bitstream::read_varint;
 use crate::codec::{encode_levels, CodecConfig, RemainderMode};
-use crate::model::{ChunkInfo, CompressedLayer, CompressedModel};
+use crate::model::{ChunkInfo, CompressedLayer, CompressedModel, DeltaLayer, DeltaModel};
 use crate::quant::QuantGrid;
 use crate::util::SplitMix64;
 use anyhow::{bail, Result};
@@ -22,6 +22,10 @@ use anyhow::{bail, Result};
 pub enum FieldKind {
     Magic,
     Version,
+    /// v3 only: the 8 raw LE bytes of the parent fingerprint.
+    ParentFp,
+    /// v3 only: the per-layer 1-byte skip flag.
+    SkipFlag,
     ModelNameLen,
     ModelName,
     LayerCount,
@@ -82,10 +86,27 @@ pub fn map_fields(bytes: &[u8]) -> Result<Vec<Field>> {
     w.raw(4, FieldKind::Magic)?;
     let version = w.buf.get(4).copied().unwrap_or(0);
     w.raw(1, FieldKind::Version)?;
+    let delta_seg = version == crate::model::container::VERSION_DELTA;
+    if delta_seg {
+        w.raw(8, FieldKind::ParentFp)?;
+    }
     let name_len = w.varint(FieldKind::ModelNameLen)? as usize;
     w.raw(name_len, FieldKind::ModelName)?;
     let n_layers = w.varint(FieldKind::LayerCount)? as usize;
     for _ in 0..n_layers {
+        if delta_seg {
+            let skip = w.buf.get(w.pos).copied().unwrap_or(u8::MAX);
+            w.raw(1, FieldKind::SkipFlag)?;
+            match skip {
+                0 => {} // coded record: falls through to the full header
+                1 => {
+                    let lname = w.varint(FieldKind::LayerNameLen)? as usize;
+                    w.raw(lname, FieldKind::LayerName)?;
+                    continue;
+                }
+                v => bail!("field map: bad delta skip flag {v}"),
+            }
+        }
         let lname = w.varint(FieldKind::LayerNameLen)? as usize;
         w.raw(lname, FieldKind::LayerName)?;
         let ndims = w.varint(FieldKind::DimCount)? as usize;
@@ -96,7 +117,8 @@ pub fn map_fields(bytes: &[u8]) -> Result<Vec<Field>> {
         w.varint(FieldKind::MaxLevel)?;
         w.varint(FieldKind::SParam)?;
         w.raw(4, FieldKind::CfgBytes)?;
-        if version == crate::model::container::VERSION_CHUNKED {
+        // v3 coded records always carry a chunk table, like v2
+        if version == crate::model::container::VERSION_CHUNKED || delta_seg {
             let n_chunks = w.varint(FieldKind::ChunkCount)? as usize;
             if n_chunks > crate::model::container::MAX_CHUNKS {
                 bail!("field map: chunk count {n_chunks} out of range");
@@ -225,6 +247,178 @@ pub fn container(rng: &mut SplitMix64) -> Vec<u8> {
     CompressedModel { name: format!("m{}", rng.below(1000)), layers }.serialize()
 }
 
+/// A syntactically valid serialized v3 delta segment (0–4 layers, mixed
+/// skip/coded records, real CABAC residual payloads), built through the
+/// production [`DeltaModel::serialize`] like [`container`] is.
+pub fn delta_container(rng: &mut SplitMix64) -> Vec<u8> {
+    let n_layers = rng.below(5) as usize;
+    let layers = (0..n_layers)
+        .map(|i| {
+            if rng.next_f64() < 0.35 {
+                DeltaLayer::Skipped(format!("layer{i}"))
+            } else {
+                DeltaLayer::Coded(rand_layer(rng, i))
+            }
+        })
+        .collect();
+    DeltaModel {
+        parent_fp: rng.next_u64(),
+        name: format!("m{}", rng.below(1000)),
+        layers,
+    }
+    .serialize()
+}
+
+// ---------------------------------------------------------------------------
+// Encoder-side hostile models
+// ---------------------------------------------------------------------------
+
+/// Finite-but-nasty weight values: signed zeros, subnormals, the normal/
+/// subnormal boundary, and full-range magnitudes. Safe to push through
+/// [`crate::coordinator::pipeline::compress_model`], which assumes
+/// finite input.
+const HOSTILE_FINITE: [f32; 12] = [
+    0.0,
+    -0.0,
+    1e-40,  // subnormal
+    -1e-40, // subnormal
+    f32::MIN_POSITIVE,
+    -f32::MIN_POSITIVE,
+    f32::MAX,
+    f32::MIN,
+    1.0,
+    -1.0,
+    0.05,
+    -3.4e-20,
+];
+
+/// The full menu, including the values [`crate::tensor::validate_finite`]
+/// must reject with a structured error (never a panic).
+const HOSTILE_ANY: [f32; 15] = [
+    0.0,
+    -0.0,
+    1e-40,
+    -1e-40,
+    f32::MIN_POSITIVE,
+    -f32::MIN_POSITIVE,
+    f32::MAX,
+    f32::MIN,
+    1.0,
+    -1.0,
+    0.05,
+    -3.4e-20,
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+];
+
+/// Byte-driven selector stream: reads input bytes in order, yielding 0
+/// once exhausted — total on any input, and ddmin-friendly (deleting a
+/// suffix degrades the recipe gracefully instead of invalidating it).
+struct Recipe<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Recipe<'_> {
+    fn byte(&mut self) -> u8 {
+        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+}
+
+/// Decode arbitrary fuzz bytes into a deterministic (parent, target)
+/// model pair with a matching architecture — the hostile feedstock for
+/// the `encoder` fuzz target.
+///
+/// The parent draws only from [`HOSTILE_FINITE`] (it must survive the
+/// standard pipeline to become a base container); the target mixes in
+/// NaN/±Inf from [`HOSTILE_ANY`], which the delta encoder's
+/// `validate_finite` boundary must reject without panicking. Layer
+/// shapes include zero-dim tensors and sizes up to 4096, capped so a
+/// case stays inside the fuzz time budget.
+pub fn hostile_model_pair(input: &[u8]) -> (crate::model::Model, crate::model::Model) {
+    use crate::model::manifest::{LayerInfo, LayerKind, ModelManifest};
+    use crate::tensor::Tensor;
+    let mut r = Recipe { buf: input, pos: 0 };
+    let n_layers = (r.byte() % 4) as usize;
+    let mut elem_budget = 1usize << 13;
+    let mut manifest_layers = Vec::new();
+    let (mut pw, mut pb, mut ps) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut tw, mut tb, mut ts) = (Vec::new(), Vec::new(), Vec::new());
+    for li in 0..n_layers {
+        let n = match r.byte() % 8 {
+            0 => 0, // zero-dim tensor
+            1 => 1,
+            2 => 1 + r.byte() as usize,
+            3 | 4 => 1 + r.byte() as usize * 7,
+            5 => 1024,
+            _ => 4096,
+        }
+        .min(elem_budget);
+        elem_budget -= n;
+        let mut parent_w = Vec::with_capacity(n);
+        let mut target_w = Vec::with_capacity(n);
+        let mut sigma = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sel = r.byte();
+            parent_w.push(HOSTILE_FINITE[sel as usize % HOSTILE_FINITE.len()]);
+            // ~3/4 of target entries keep the parent's value (a sparse
+            // update), the rest re-draw — possibly non-finite
+            let t = r.byte();
+            target_w.push(if t % 4 != 0 {
+                *parent_w.last().unwrap()
+            } else {
+                HOSTILE_ANY[(t / 4) as usize % HOSTILE_ANY.len()]
+            });
+            sigma.push(HOSTILE_FINITE[r.byte() as usize % HOSTILE_FINITE.len()].abs());
+        }
+        let n_bias = (r.byte() % 4) as usize;
+        let bias: Vec<f32> =
+            (0..n_bias).map(|_| HOSTILE_FINITE[r.byte() as usize % HOSTILE_FINITE.len()]).collect();
+        manifest_layers.push(LayerInfo {
+            name: format!("h{li}"),
+            kind: LayerKind::Fc,
+            shape: vec![n],
+            activation: None,
+            stride: 1,
+            padding: 0,
+            nonzero: 0,
+            size: n,
+        });
+        pw.push(Tensor::new(vec![n], parent_w));
+        ps.push(Tensor::new(vec![n], sigma.clone()));
+        pb.push(Tensor::new(vec![n_bias], bias.clone()));
+        tw.push(Tensor::new(vec![n], target_w));
+        ts.push(Tensor::new(vec![n], sigma));
+        tb.push(Tensor::new(vec![n_bias], bias));
+    }
+    let manifest = ModelManifest {
+        name: "hostile".into(),
+        task: "classify".into(),
+        input_shape: vec![1],
+        eval_batch: 1,
+        n_classes: 2,
+        param_count: 0,
+        density: 1.0,
+        dense_metric: 1.0,
+        sparse_metric: 1.0,
+        layers: manifest_layers,
+        hlo: String::new(),
+        arg_order: Vec::new(),
+    };
+    let parent = crate::model::Model {
+        manifest: manifest.clone(),
+        weights: pw,
+        biases: pb,
+        sigmas: ps,
+    };
+    let target =
+        crate::model::Model { manifest, weights: tw, biases: tb, sigmas: ts };
+    (parent, target)
+}
+
 /// A syntactically valid HTTP/1.1 request head (no terminating blank
 /// line — the shape [`crate::serve::http::parse_request_head`] takes),
 /// covering every route the server exposes plus Range headers.
@@ -302,6 +496,69 @@ mod tests {
             let m = CompressedModel::deserialize(&bytes).unwrap();
             assert_eq!(m.serialize(), bytes, "serializer output must be canonical");
         }
+    }
+
+    #[test]
+    fn delta_fields_tile_and_roundtrip() {
+        // the v3 field map must cover every byte of a delta segment —
+        // skip records and coded records alike — and the generator's
+        // output must be canonical through DeltaModel
+        let mut rng = SplitMix64::new(31);
+        let (mut saw_skip, mut saw_coded) = (false, false);
+        for _ in 0..32 {
+            let bytes = delta_container(&mut rng);
+            assert_eq!(bytes[4], crate::model::container::VERSION_DELTA);
+            let fields = map_fields(&bytes).unwrap();
+            let mut pos = 0usize;
+            for f in &fields {
+                assert_eq!(f.offset, pos, "gap before {:?}", f.kind);
+                pos += f.len;
+            }
+            assert_eq!(pos, bytes.len());
+            assert!(fields.iter().any(|f| f.kind == FieldKind::ParentFp));
+            for f in &fields {
+                if f.kind == FieldKind::SkipFlag {
+                    match bytes[f.offset] {
+                        0 => saw_coded = true,
+                        1 => saw_skip = true,
+                        v => panic!("generator emitted bad skip flag {v}"),
+                    }
+                }
+            }
+            let dm = DeltaModel::deserialize(&bytes).unwrap();
+            assert_eq!(dm.serialize(), bytes, "v3 serializer output must be canonical");
+        }
+        assert!(saw_skip && saw_coded, "generator must mix skip and coded records");
+    }
+
+    #[test]
+    fn hostile_model_pairs_are_total_and_matched() {
+        // any byte string decodes to a structurally matched (parent,
+        // target) pair, deterministically — including the empty input
+        let mut rng = SplitMix64::new(17);
+        for case in 0..24 {
+            let input: Vec<u8> =
+                (0..rng.below(600)).map(|_| rng.next_u64() as u8).collect();
+            let (p, t) = hostile_model_pair(&input);
+            let (p2, t2) = hostile_model_pair(&input);
+            assert_eq!(p.weights.len(), t.weights.len());
+            assert_eq!(p.manifest.layers.len(), p.weights.len());
+            for (a, b) in p.weights.iter().zip(&t.weights) {
+                assert_eq!(a.len(), b.len(), "case {case}: architecture drifted");
+                // parent weights must be pipeline-safe
+                assert!(a.data.iter().all(|v| v.is_finite()));
+            }
+            for (a, b) in p.weights.iter().zip(&p2.weights) {
+                assert_eq!(
+                    a.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "recipe decode must be deterministic"
+                );
+            }
+            assert_eq!(t.weights.len(), t2.weights.len());
+        }
+        let (p, _) = hostile_model_pair(&[]);
+        assert!(p.weights.is_empty(), "empty recipe → zero-layer model");
     }
 
     #[test]

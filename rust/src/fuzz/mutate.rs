@@ -80,6 +80,12 @@ fn apply_field_op(out: &mut Vec<u8>, f: Field, pe: usize, rng: &mut SplitMix64) 
     if f.offset >= out.len() {
         return; // a previous truncation already removed this field
     }
+    if f.kind == FieldKind::SkipFlag && rng.below(4) < 3 {
+        // targeted: toggle skip/coded (reinterpreting the bytes that
+        // follow) or land on the bad-skip-flag reject path
+        out[f.offset] = [0u8, 1, 2, 0xFF][rng.below(4) as usize];
+        return;
+    }
     if f.kind.is_varint() {
         let old = crate::bitstream::read_varint(&out[f.offset..]).map(|(v, _)| v).unwrap_or(0);
         let new = match rng.below(8) {
@@ -234,6 +240,30 @@ mod tests {
         assert!(
             survived * 2 > total,
             "only {survived}/{total} mutants survived the prelude"
+        );
+    }
+
+    #[test]
+    fn delta_mutations_mostly_survive_the_prelude() {
+        // same structural-bias claim for v3 delta segments: the parent
+        // fingerprint and skip flags are mapped fields, so mutations
+        // stay inside the format instead of dying at the magic check
+        let mut rng = SplitMix64::new(79);
+        let (mut survived, mut total) = (0usize, 0usize);
+        for _ in 0..50 {
+            let bytes = super::super::gen::delta_container(&mut rng);
+            let fields = super::super::gen::map_fields(&bytes).unwrap();
+            for _ in 0..4 {
+                let m = container(&bytes, &fields, &mut rng);
+                total += 1;
+                if matches!(parse_container_prefix(&m), Ok(Parsed::Complete(..))) {
+                    survived += 1;
+                }
+            }
+        }
+        assert!(
+            survived * 2 > total,
+            "only {survived}/{total} delta mutants survived the prelude"
         );
     }
 

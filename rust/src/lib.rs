@@ -23,6 +23,7 @@ pub mod cabac;
 pub mod cli;
 pub mod codec;
 pub mod coordinator;
+pub mod delta;
 pub mod fuzz;
 pub mod model;
 pub mod quant;

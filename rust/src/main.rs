@@ -6,10 +6,10 @@ use deepcabac::app;
 use deepcabac::cli::{Args, USAGE};
 use deepcabac::codec::{decode_levels, CodecConfig, LevelEncoder};
 use deepcabac::coordinator::{
-    compress_model, pipeline::decompress, sweep_s, sweep_s_auto, CompressionSpec,
-    SweepOptions, SweepResult,
+    compress_model, pipeline::decompress, sweep_delta, sweep_s, sweep_s_auto,
+    CompressionSpec, SweepOptions, SweepResult,
 };
-use deepcabac::model::CompressedModel;
+use deepcabac::model::{fingerprint, CompressedModel, DeltaModel};
 use deepcabac::report::{human_bytes, Table};
 use deepcabac::runtime::Runtime;
 use deepcabac::synth::Arch;
@@ -26,10 +26,20 @@ use deepcabac::util::{fnv1a, Timer};
 static ALLOC: deepcabac::fuzz::alloc::CountingAlloc = deepcabac::fuzz::alloc::CountingAlloc;
 
 fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
         print!("{USAGE}");
         return;
+    }
+    // `delta` takes an action word (encode|apply|bench); fold it into
+    // the command so the flag parser sees no positional argument
+    if argv[0] == "delta" {
+        if argv.len() < 2 || argv[1].starts_with("--") {
+            eprintln!("error: delta needs an action: encode | apply | bench\n\n{USAGE}");
+            std::process::exit(2);
+        }
+        let action = argv.remove(1);
+        argv[0] = format!("delta-{action}");
     }
     let args = match Args::parse(&argv) {
         Ok(a) => a,
@@ -58,6 +68,12 @@ fn run(args: &Args) -> Result<()> {
         "fetch" => cmd_fetch(args),
         "loadgen" => cmd_loadgen(args),
         "fuzz" => cmd_fuzz(args),
+        "delta-encode" => cmd_delta_encode(args),
+        "delta-apply" => cmd_delta_apply(args),
+        "delta-bench" => cmd_delta_bench(args),
+        other if other.starts_with("delta-") => {
+            bail!("unknown delta action {:?} (encode | apply | bench)", &other[6..])
+        }
         other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -361,6 +377,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // cheap flag-consistency checks BEFORE the sweep, like
+    // --select-lambda: a usage error must not cost a surface exploration
+    anyhow::ensure!(
+        args.get("out-delta").is_none() || args.get("delta-from").is_some(),
+        "--out-delta needs --delta-from BASE.dcbc (a plain sweep has no delta)"
+    );
     // --eval preconditions are checked BEFORE the sweep for the same
     // reason as --select-lambda: a missing --model must not cost a full
     // surface exploration
@@ -384,7 +406,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         bail!("sweep needs --model NAME or --arch vgg16|resnet50|mobilenet");
     };
 
-    let res = sweep_s_auto(&model, &opts, &spec)?;
+    // --delta-from flips the objective: selection minimizes the v3 delta
+    // segment against this base container instead of full container
+    // bytes (abandonment is forced off by the engine in this mode)
+    let res = if let Some(p) = args.get("delta-from") {
+        let parent = read_container(p)?;
+        sweep_delta(&parent, &model, &opts, &spec)?
+    } else {
+        sweep_s_auto(&model, &opts, &spec)?
+    };
     let best = res.best_point;
     println!(
         "{name}: best (S={}, λ={}) -> {} ({:.2}% of original, x{:.1}); \
@@ -404,6 +434,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         res.stats.wall_s,
         workers,
     );
+    if let Some((dm, dr)) = &res.best_delta {
+        println!(
+            "delta objective: winner's delta segment {} against parent {:016x} \
+             ({}/{} layers coded, residual density {:.3}%)",
+            human_bytes(dm.total_bytes()),
+            dm.parent_fp,
+            dm.coded_layers(),
+            dm.layers.len(),
+            dr.residual_density() * 100.0,
+        );
+        if let Some(out) = args.get("out-delta") {
+            std::fs::write(out, dm.serialize())?;
+            println!("wrote {out}");
+        }
+    }
     if opts.warm_start && res.stats.seeded_weights > 0 {
         println!(
             "warm start: {} of {} seeded weight scans hit ({:.1}%)",
@@ -575,6 +620,10 @@ fn sweep_to_json(
                     "abandon_reason",
                     p.abandon_kind.map(|k| json::s(k.name())).unwrap_or(Json::Null),
                 ),
+                (
+                    "delta_bytes",
+                    p.delta_bytes.map(|b| json::num(b as f64)).unwrap_or(Json::Null),
+                ),
                 ("seeded", json::num(p.seeded as f64)),
                 ("seed_hits", json::num(p.seed_hits as f64)),
                 ("wall_ms", json::num(p.wall_s * 1e3)),
@@ -642,7 +691,173 @@ fn sweep_to_json(
     if let Some(w) = wall_serial {
         fields.push(("wall_s_serial", json::num(w)));
     }
+    if let Some((dm, dr)) = &res.best_delta {
+        fields.push((
+            "delta",
+            json::obj(vec![
+                ("parent_fingerprint", json::s(&format!("{:016x}", dm.parent_fp))),
+                ("delta_bytes", json::num(dm.total_bytes() as f64)),
+                ("delta_payload_bytes", json::num(dm.payload_bytes() as f64)),
+                ("coded_layers", json::num(dm.coded_layers() as f64)),
+                ("total_layers", json::num(dm.layers.len() as f64)),
+                ("residual_density", json::num(dr.residual_density())),
+            ]),
+        ));
+    }
     json::obj(fields)
+}
+
+fn read_container(path: &str) -> Result<CompressedModel> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    CompressedModel::deserialize(&bytes)
+        .with_context(|| format!("{path} is not a full .dcbc container (v1/v2)"))
+}
+
+/// `deepcabac delta encode`: diff two full containers into a v3 delta
+/// segment (`apply` turns it back into the target byte-for-byte).
+fn cmd_delta_encode(args: &Args) -> Result<()> {
+    let parent = read_container(args.get("parent").context("--parent required")?)?;
+    let target = read_container(args.get("target").context("--target required")?)?;
+    let out = args.get("out").context("--out required")?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+    let (delta, report) = deepcabac::delta::encode(&parent, &target, workers)?;
+    let ser = delta.serialize();
+    std::fs::write(out, &ser)?;
+    let full = target.serialize().len();
+    println!(
+        "{}: delta {} vs full {} ({:.2}% of full), {}/{} layers coded, \
+         residual density {:.3}%, parent {:016x}",
+        delta.name,
+        human_bytes(ser.len()),
+        human_bytes(full),
+        ser.len() as f64 / full.max(1) as f64 * 100.0,
+        delta.coded_layers(),
+        delta.layers.len(),
+        report.residual_density() * 100.0,
+        delta.parent_fp,
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `deepcabac delta apply`: reconstruct the target container from a base
+/// container plus a delta segment.
+fn cmd_delta_apply(args: &Args) -> Result<()> {
+    let parent = read_container(args.get("parent").context("--parent required")?)?;
+    let delta_path = args.get("delta").context("--delta required")?;
+    let out = args.get("out").context("--out required")?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+    let delta = DeltaModel::deserialize(&std::fs::read(delta_path)?)
+        .with_context(|| format!("{delta_path} is not a .dcbc v3 delta segment"))?;
+    let applied = deepcabac::delta::apply(&parent, &delta, workers)?;
+    let ser = applied.serialize();
+    std::fs::write(out, &ser)?;
+    println!(
+        "{}: applied {} delta onto base {:016x} -> {} ({} layers, {} skipped)",
+        applied.name,
+        human_bytes(delta.total_bytes()),
+        delta.parent_fp,
+        human_bytes(ser.len()),
+        applied.layers.len(),
+        applied.layers.len() - delta.coded_layers(),
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `deepcabac delta bench`: size + latency accounting for the
+/// incremental-delivery story. Encodes the delta, verifies the apply
+/// round trip is byte-identical to the target, then times `--iters`
+/// apply runs and writes `BENCH_delta.json`.
+fn cmd_delta_bench(args: &Args) -> Result<()> {
+    let parent_path = args.get("parent").context("--parent required")?;
+    let target_path = args.get("target").context("--target required")?;
+    let parent = read_container(parent_path)?;
+    let target = read_container(target_path)?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+    let iters = args.get_count("iters", 32).map_err(|e| anyhow!(e))?;
+
+    let t = Timer::new();
+    let (delta, report) = deepcabac::delta::encode(&parent, &target, workers)?;
+    let encode_s = t.elapsed_s();
+    let full_bytes = target.serialize();
+    let delta_bytes = delta.total_bytes();
+
+    // the acceptance contract before any timing: decode–apply must
+    // reproduce the target container exactly
+    let applied = deepcabac::delta::apply(&parent, &delta, workers)?;
+    anyhow::ensure!(
+        applied.serialize() == full_bytes,
+        "delta apply diverged from the target container (round-trip broken)"
+    );
+
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::new();
+        let a = deepcabac::delta::apply(&parent, &delta, workers)?;
+        lat_ms.push(t.elapsed_s() * 1e3);
+        // keep the optimizer honest without re-serializing every iter
+        anyhow::ensure!(a.layers.len() == target.layers.len());
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat_ms[((lat_ms.len() as f64 * p) as usize).min(lat_ms.len() - 1)];
+    let (p50, p99) = (pct(0.50), pct(0.99));
+
+    let ratio = delta_bytes as f64 / full_bytes.len().max(1) as f64;
+    println!(
+        "{}: delta {} vs full {} ({:.2}% of full, {}/{} layers coded, \
+         residual density {:.3}%)",
+        delta.name,
+        human_bytes(delta_bytes),
+        human_bytes(full_bytes.len()),
+        ratio * 100.0,
+        delta.coded_layers(),
+        delta.layers.len(),
+        report.residual_density() * 100.0,
+    );
+    println!(
+        "apply: p50 {p50:.2} ms, p99 {p99:.2} ms over {iters} iters ({workers} workers); \
+         encode {encode_s:.2}s"
+    );
+
+    let json_path = args.get_or("json", "BENCH_delta.json");
+    let layers: Vec<Json> = report
+        .layers
+        .iter()
+        .map(|l| {
+            json::obj(vec![
+                ("name", json::s(&l.name)),
+                ("skipped", Json::Bool(l.skipped)),
+                ("n_weights", json::num(l.n_weights as f64)),
+                ("residual_nonzero", json::num(l.residual_nonzero as f64)),
+                ("delta_payload", json::num(l.delta_payload as f64)),
+                ("target_payload", json::num(l.target_payload as f64)),
+            ])
+        })
+        .collect();
+    let j = json::obj(vec![
+        ("bench", json::s("delta")),
+        ("model", json::s(&delta.name)),
+        ("parent", json::s(parent_path)),
+        ("target", json::s(target_path)),
+        ("parent_fingerprint", json::s(&format!("{:016x}", delta.parent_fp))),
+        ("full_bytes", json::num(full_bytes.len() as f64)),
+        ("delta_bytes", json::num(delta_bytes as f64)),
+        ("delta_payload_bytes", json::num(delta.payload_bytes() as f64)),
+        ("delta_ratio", json::num(ratio)),
+        ("coded_layers", json::num(delta.coded_layers() as f64)),
+        ("total_layers", json::num(delta.layers.len() as f64)),
+        ("residual_density", json::num(report.residual_density())),
+        ("encode_wall_s", json::num(encode_s)),
+        ("apply_iters", json::num(iters as f64)),
+        ("apply_p50_ms", json::num(p50)),
+        ("apply_p99_ms", json::num(p99)),
+        ("workers", json::num(workers as f64)),
+        ("layers", json::arr(layers)),
+    ]);
+    std::fs::write(json_path, j.to_string_pretty())?;
+    println!("wrote {json_path}");
+    Ok(())
 }
 
 fn cmd_synth(args: &Args) -> Result<()> {
@@ -653,6 +868,56 @@ fn cmd_synth(args: &Args) -> Result<()> {
         s: args.get_usize("s", 64).map_err(|e| anyhow!(e))? as u32,
         ..base_spec(args)?
     };
+    // --perturb-density: the delta-fixture path. Regenerate the same
+    // base model (same --seed), nudge a deterministic sparse subset of
+    // weights, and compress that — two runs differing only in
+    // --perturb-density produce a (parent, target) container pair for
+    // `deepcabac delta` (density 0 = the unperturbed base through the
+    // identical compression path).
+    if args.get("perturb-density").is_some() {
+        let density = args.get_f32("perturb-density", 0.0).map_err(|e| anyhow!(e))?;
+        anyhow::ensure!(
+            density.is_finite() && (0.0..=1.0).contains(&density),
+            "--perturb-density must be in [0, 1]"
+        );
+        let pscale = args.get_f32("perturb-scale", 0.05).map_err(|e| anyhow!(e))?;
+        anyhow::ensure!(
+            pscale.is_finite() && pscale > 0.0,
+            "--perturb-scale must be a positive float"
+        );
+        let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
+        let pseed = args.get_usize("perturb-seed", 1).map_err(|e| anyhow!(e))? as u64;
+        let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+        let mut model = deepcabac::synth::generate(arch, scale, seed).to_model();
+        let mut rng = deepcabac::util::SplitMix64::new(pseed);
+        let mut touched = 0usize;
+        for t in &mut model.weights {
+            if t.data.is_empty() {
+                continue;
+            }
+            let n = (t.data.len() as f64 * density as f64).round() as usize;
+            for _ in 0..n {
+                let i = rng.below(t.data.len() as u64) as usize;
+                t.data[i] += pscale * rng.normal() as f32;
+                touched += 1;
+            }
+        }
+        let (compressed, report) = compress_model(&model, &spec, workers);
+        println!(
+            "{} (1/{scale} scale, {touched} weights perturbed at density {density}): \
+             {} raw, compressed {} ({:.2}%, x{:.1})",
+            arch.name(),
+            human_bytes(report.raw_bytes),
+            human_bytes(report.compressed_bytes),
+            report.ratio_percent(),
+            report.factor(),
+        );
+        if let Some(out) = args.get("out") {
+            std::fs::write(out, compressed.serialize())?;
+            println!("wrote {out}");
+        }
+        return Ok(());
+    }
     let row = app::table1_large_row(arch, scale, &[spec.s], &spec, 1, 42)?;
     println!(
         "{} (1/{scale} scale): {} raw, density {:.2}%, compressed {} ({:.2}%, x{:.1})",
@@ -765,14 +1030,77 @@ fn cmd_fetch(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    if let Some(base_path) = args.get("from") {
+        // incremental update: ask the server for a delta against the
+        // local base container and apply it in place as bytes arrive
+        let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+        let parent = read_container(base_path)?;
+        let fp = fingerprint(&parent);
+        let mut applier = deepcabac::delta::StreamApplier::new(&parent, workers);
+        let mut layers = Vec::new();
+        let delta_path = format!("{path}/delta?from={fp:016x}");
+        let (status, _headers, err_body) =
+            http::get_streaming(&addr, &delta_path, None, &mut |chunk| {
+                for l in applier.feed(chunk)? {
+                    if l.skipped {
+                        eprintln!(
+                            "[fetch] layer {} ({}): unchanged — reconstructed from {base_path}",
+                            l.index, l.name
+                        );
+                    } else {
+                        eprintln!(
+                            "[fetch] layer {} ({}): {} weights patched mid-stream",
+                            l.index, l.name, l.n_weights
+                        );
+                    }
+                    layers.push(l);
+                }
+                Ok(())
+            })?;
+        if status == 409 {
+            bail!(
+                "server knows base {fp:016x} but has no delta from it (HTTP 409) — \
+                 fetch the full container instead: {}",
+                String::from_utf8_lossy(&err_body).trim()
+            );
+        }
+        anyhow::ensure!(
+            status == 200,
+            "HTTP {status} fetching {delta_path}: {}",
+            String::from_utf8_lossy(&err_body).trim()
+        );
+        applier.finish()?;
+        println!(
+            "{}: {} layers reconstructed from base {base_path} + streamed delta",
+            url,
+            layers.len(),
+        );
+        if let Some(d) = &out_dir {
+            for l in &layers {
+                let p = d.join(format!("{}.w.npy", safe_file_stem(&l.name)));
+                npy::write_npy_f32(&p, &l.dims, &l.weights)?;
+                println!("wrote {p:?}");
+            }
+        }
+        return Ok(());
+    }
+
     // whole container: drive the streaming decoder straight off the socket
     let mut dec = StreamDecoder::new();
     let mut layers = Vec::new();
     let (status, _headers, err_body) = http::get_streaming(&addr, &path, None, &mut |chunk| {
         for ev in dec.feed(chunk)? {
             match ev {
-                StreamEvent::Start { model, version, n_layers } => {
-                    eprintln!("[fetch] {model} v{version}: {n_layers} layers incoming");
+                StreamEvent::Start { model, version, n_layers, parent_fp } => {
+                    match parent_fp {
+                        Some(fp) => eprintln!(
+                            "[fetch] {model} v{version}: {n_layers} layers incoming \
+                             (delta segment, parent {fp:016x} — use --from to apply it)"
+                        ),
+                        None => eprintln!(
+                            "[fetch] {model} v{version}: {n_layers} layers incoming"
+                        ),
+                    }
                 }
                 StreamEvent::Chunk { layer, chunk, n_chunks, .. } => {
                     if n_chunks > 1 {
@@ -881,7 +1209,8 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         "stream" => vec![TargetKind::Stream],
         "http" => vec![TargetKind::Http],
         "range" => vec![TargetKind::Range],
-        other => bail!("--target must be container|stream|http|range|all, got {other:?}"),
+        "encoder" => vec![TargetKind::Encoder],
+        other => bail!("--target must be container|stream|http|range|encoder|all, got {other:?}"),
     };
     let cases = args.get_count("cases", 256).map_err(|e| anyhow!(e))?;
     let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;

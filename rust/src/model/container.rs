@@ -23,6 +23,13 @@
 //! layer is chunked, so unchunked containers are byte-identical to the
 //! old format; the reader accepts both versions.
 //!
+//! Version 3 is a **delta segment** ([`DeltaModel`]): a residual against
+//! a fingerprinted parent container, with a per-layer skip byte for
+//! layers the update left untouched and version-2 layer records (chunk
+//! table always present) for residual-coded layers. Full containers
+//! still serialize as v1/v2, byte-for-byte unchanged; [`deserialize_any`]
+//! dispatches on the version byte.
+//!
 //! Biases (and any normalization parameters) are stored raw, as the
 //! paper compresses weight tensors only.
 
@@ -37,6 +44,8 @@ pub const MAGIC: &[u8; 4] = b"DCBC";
 pub const VERSION: u8 = 1;
 /// Chunked layout (only emitted when some layer has > 1 chunk).
 pub const VERSION_CHUNKED: u8 = 2;
+/// Delta-segment layout: parent fingerprint + skip/residual layer records.
+pub const VERSION_DELTA: u8 = 3;
 
 const FLAG_SIG_NEIGHBORS: u8 = 1;
 
@@ -166,39 +175,7 @@ impl CompressedModel {
         write_str(&mut out, &self.name);
         write_varint(&mut out, self.layers.len() as u64);
         for l in &self.layers {
-            write_str(&mut out, &l.name);
-            write_varint(&mut out, l.dims.len() as u64);
-            for &d in &l.dims {
-                write_varint(&mut out, d as u64);
-            }
-            out.extend_from_slice(&l.grid.delta.to_le_bytes());
-            write_varint(&mut out, l.grid.max_level as u64);
-            write_varint(&mut out, l.s_param as u64);
-            out.push(l.cfg.n_abs_flags as u8);
-            out.push(l.cfg.remainder.tag());
-            out.push(l.cfg.remainder.param() as u8);
-            out.push(if l.cfg.sig_ctx_neighbors { FLAG_SIG_NEIGHBORS } else { 0 });
-            if version == VERSION_CHUNKED {
-                if l.chunks.len() > 1 {
-                    write_varint(&mut out, l.chunks.len() as u64);
-                    for c in &l.chunks {
-                        write_varint(&mut out, c.n_weights as u64);
-                        write_varint(&mut out, c.bytes as u64);
-                    }
-                } else {
-                    // monolithic layer inside a chunked container
-                    write_varint(&mut out, 1);
-                    write_varint(&mut out, l.n_weights as u64);
-                    write_varint(&mut out, l.payload.len() as u64);
-                }
-            }
-            write_varint(&mut out, l.n_weights as u64);
-            write_varint(&mut out, l.payload.len() as u64);
-            out.extend_from_slice(&l.payload);
-            write_varint(&mut out, l.bias.len() as u64);
-            let mut bias_bytes = vec![0u8; l.bias.len() * 4];
-            LittleEndian::write_f32_into(&l.bias, &mut bias_bytes);
-            out.extend_from_slice(&bias_bytes);
+            write_layer_body(&mut out, l, version == VERSION_CHUNKED);
         }
         out
     }
@@ -208,6 +185,12 @@ impl CompressedModel {
             Parsed::Complete(p, n) => (p, n),
             Parsed::NeedMore => bail!("truncated container prelude"),
         };
+        if prefix.version == VERSION_DELTA {
+            bail!(
+                "container is a version-3 delta segment; use deserialize_any \
+                 or DeltaModel::deserialize"
+            );
+        }
         // cap the pre-allocation: n_layers is attacker-controlled, and a
         // 20-byte hostile prelude must not reserve megabytes up front
         let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 10));
@@ -219,40 +202,226 @@ impl CompressedModel {
                 }
                 Parsed::NeedMore => bail!("truncated layer header"),
             };
-            if hdr.payload_len > buf.len() - pos {
-                bail!("truncated payload");
-            }
-            let payload = buf[pos..pos + hdr.payload_len].to_vec();
-            pos += hdr.payload_len;
-            let blen = match parse_varint_prefix(&buf[pos..])? {
-                Parsed::Complete(v, n) => {
-                    pos += n;
-                    v as usize
-                }
-                Parsed::NeedMore => bail!("truncated bias"),
-            };
-            if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
-                bail!("truncated bias");
-            }
-            let mut bias = vec![0f32; blen];
-            LittleEndian::read_f32_into(&buf[pos..pos + blen * 4], &mut bias);
-            pos += blen * 4;
-            layers.push(CompressedLayer {
-                name: hdr.name,
-                dims: hdr.dims,
-                grid: hdr.grid,
-                s_param: hdr.s_param,
-                cfg: hdr.cfg,
-                n_weights: hdr.n_weights,
-                payload,
-                chunks: hdr.chunks,
-                bias,
-            });
+            let (layer, used) = read_layer_tail(&buf[pos..], hdr)?;
+            pos += used;
+            layers.push(layer);
         }
         if pos != buf.len() {
             bail!("trailing bytes in container");
         }
         Ok(Self { name: prefix.name, layers })
+    }
+}
+
+/// Canonical container fingerprint: FNV-1a-64 over the canonical
+/// serialization. This is the `parent_fp` a delta segment records and
+/// the identity the serve layer's version-chain manifest is keyed on.
+pub fn fingerprint(model: &CompressedModel) -> u64 {
+    crate::util::fnv1a(&model.serialize())
+}
+
+/// Serialize one layer record body (everything from the layer name to the
+/// bias bytes). `chunk_table` controls whether the v2/v3 chunk table is
+/// emitted; v1 layers omit it.
+fn write_layer_body(out: &mut Vec<u8>, l: &CompressedLayer, chunk_table: bool) {
+    write_str(out, &l.name);
+    write_varint(out, l.dims.len() as u64);
+    for &d in &l.dims {
+        write_varint(out, d as u64);
+    }
+    out.extend_from_slice(&l.grid.delta.to_le_bytes());
+    write_varint(out, l.grid.max_level as u64);
+    write_varint(out, l.s_param as u64);
+    out.push(l.cfg.n_abs_flags as u8);
+    out.push(l.cfg.remainder.tag());
+    out.push(l.cfg.remainder.param() as u8);
+    out.push(if l.cfg.sig_ctx_neighbors { FLAG_SIG_NEIGHBORS } else { 0 });
+    if chunk_table {
+        if l.chunks.len() > 1 {
+            write_varint(out, l.chunks.len() as u64);
+            for c in &l.chunks {
+                write_varint(out, c.n_weights as u64);
+                write_varint(out, c.bytes as u64);
+            }
+        } else {
+            // monolithic layer inside a chunk-table-bearing container
+            write_varint(out, 1);
+            write_varint(out, l.n_weights as u64);
+            write_varint(out, l.payload.len() as u64);
+        }
+    }
+    write_varint(out, l.n_weights as u64);
+    write_varint(out, l.payload.len() as u64);
+    out.extend_from_slice(&l.payload);
+    write_varint(out, l.bias.len() as u64);
+    let mut bias_bytes = vec![0u8; l.bias.len() * 4];
+    LittleEndian::write_f32_into(&l.bias, &mut bias_bytes);
+    out.extend_from_slice(&bias_bytes);
+}
+
+/// Batch-read a layer's payload + bias given its parsed header. Returns
+/// the assembled layer and the bytes consumed after the header.
+fn read_layer_tail(buf: &[u8], hdr: LayerHeader) -> Result<(CompressedLayer, usize)> {
+    let mut pos = 0usize;
+    if hdr.payload_len > buf.len() {
+        bail!("truncated payload");
+    }
+    let payload = buf[..hdr.payload_len].to_vec();
+    pos += hdr.payload_len;
+    let blen = match parse_varint_prefix(&buf[pos..])? {
+        Parsed::Complete(v, n) => {
+            pos += n;
+            v as usize
+        }
+        Parsed::NeedMore => bail!("truncated bias"),
+    };
+    if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
+        bail!("truncated bias");
+    }
+    let mut bias = vec![0f32; blen];
+    LittleEndian::read_f32_into(&buf[pos..pos + blen * 4], &mut bias);
+    pos += blen * 4;
+    Ok((
+        CompressedLayer {
+            name: hdr.name,
+            dims: hdr.dims,
+            grid: hdr.grid,
+            s_param: hdr.s_param,
+            cfg: hdr.cfg,
+            n_weights: hdr.n_weights,
+            payload,
+            chunks: hdr.chunks,
+            bias,
+        },
+        pos,
+    ))
+}
+
+/// One layer of a [`DeltaModel`].
+#[derive(Debug, Clone)]
+pub enum DeltaLayer {
+    /// The target layer is byte-identical to the parent layer at this
+    /// position; only the (matching) name is recorded on the wire.
+    Skipped(String),
+    /// Residual-coded layer. The header fields (dims, grid, codec config,
+    /// bias) are the *target* layer's; the payload codes the residual
+    /// levels `R = L_target − P` against the parent quantized onto the
+    /// target grid (see `docs/FORMAT.md` §"Delta segments").
+    Coded(CompressedLayer),
+}
+
+impl DeltaLayer {
+    /// Layer name (skipped or coded).
+    pub fn name(&self) -> &str {
+        match self {
+            DeltaLayer::Skipped(n) => n,
+            DeltaLayer::Coded(l) => &l.name,
+        }
+    }
+}
+
+/// A version-3 `.dcbc` delta segment: the difference between a
+/// fingerprinted parent container and a target container, applied with
+/// [`crate::delta::apply`].
+#[derive(Debug, Clone)]
+pub struct DeltaModel {
+    /// [`fingerprint`] of the parent container this delta applies to.
+    pub parent_fp: u64,
+    /// Target model name.
+    pub name: String,
+    pub layers: Vec<DeltaLayer>,
+}
+
+impl DeltaModel {
+    /// Serialized size of the delta segment.
+    pub fn total_bytes(&self) -> usize {
+        self.serialize().len()
+    }
+
+    /// Residual payload bytes across coded layers.
+    pub fn payload_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                DeltaLayer::Skipped(_) => 0,
+                DeltaLayer::Coded(c) => c.payload.len(),
+            })
+            .sum()
+    }
+
+    /// Number of layers the delta re-codes (non-skipped).
+    pub fn coded_layers(&self) -> usize {
+        self.layers.iter().filter(|l| matches!(l, DeltaLayer::Coded(_))).count()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION_DELTA);
+        out.extend_from_slice(&self.parent_fp.to_le_bytes());
+        write_str(&mut out, &self.name);
+        write_varint(&mut out, self.layers.len() as u64);
+        for l in &self.layers {
+            match l {
+                DeltaLayer::Skipped(name) => {
+                    out.push(1);
+                    write_str(&mut out, name);
+                }
+                DeltaLayer::Coded(layer) => {
+                    out.push(0);
+                    write_layer_body(&mut out, layer, true);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        let (prefix, mut pos) = match parse_container_prefix(buf)? {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => bail!("truncated container prelude"),
+        };
+        if prefix.version != VERSION_DELTA {
+            bail!("not a delta segment (version {})", prefix.version);
+        }
+        let parent_fp = prefix.parent_fp.expect("v3 prelude carries a fingerprint");
+        let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 10));
+        for _ in 0..prefix.n_layers {
+            let hdr = match parse_layer_header(&buf[pos..], VERSION_DELTA)? {
+                Parsed::Complete(h, n) => {
+                    pos += n;
+                    h
+                }
+                Parsed::NeedMore => bail!("truncated layer header"),
+            };
+            if hdr.skipped {
+                layers.push(DeltaLayer::Skipped(hdr.name));
+                continue;
+            }
+            let (layer, used) = read_layer_tail(&buf[pos..], hdr)?;
+            pos += used;
+            layers.push(DeltaLayer::Coded(layer));
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in container");
+        }
+        Ok(Self { parent_fp, name: prefix.name, layers })
+    }
+}
+
+/// Any `.dcbc` file: a full container (v1/v2) or a delta segment (v3).
+#[derive(Debug, Clone)]
+pub enum Container {
+    Full(CompressedModel),
+    Delta(DeltaModel),
+}
+
+/// Deserialize any `.dcbc` version, dispatching on the version byte.
+pub fn deserialize_any(buf: &[u8]) -> Result<Container> {
+    if buf.len() >= 5 && &buf[..4] == MAGIC && buf[4] == VERSION_DELTA {
+        DeltaModel::deserialize(buf).map(Container::Delta)
+    } else {
+        CompressedModel::deserialize(buf).map(Container::Full)
     }
 }
 
@@ -276,12 +445,15 @@ pub enum Parsed<T> {
     NeedMore,
 }
 
-/// Container prelude: magic, version, model name and layer count.
+/// Container prelude: magic, version, model name and layer count —
+/// plus the parent fingerprint for version-3 delta segments.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ContainerPrefix {
     pub version: u8,
     pub name: String,
     pub n_layers: usize,
+    /// `Some` iff `version == VERSION_DELTA`.
+    pub parent_fp: Option<u64>,
 }
 
 /// Everything in a layer record before the payload bytes, plus the payload
@@ -298,6 +470,9 @@ pub struct LayerHeader {
     pub chunks: Vec<ChunkInfo>,
     pub n_weights: usize,
     pub payload_len: usize,
+    /// Version-3 skip record: the layer is untouched by the delta. Only
+    /// `name` is meaningful; there is no payload and no bias on the wire.
+    pub skipped: bool,
 }
 
 impl LayerHeader {
@@ -384,19 +559,48 @@ pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
         return Ok(Parsed::NeedMore);
     }
     let version = buf[4];
-    if version != VERSION && version != VERSION_CHUNKED {
+    if version != VERSION && version != VERSION_CHUNKED && version != VERSION_DELTA {
         bail!("unsupported DCBC version {version}");
     }
     let mut cur = Cur { buf, pos: 5 };
+    let parent_fp = if version == VERSION_DELTA {
+        Some(u64::from_le_bytes(need!(cur.take(8)).try_into().unwrap()))
+    } else {
+        None
+    };
     let name = need!(cur.string("model name")?);
     let n_layers = need!(cur.varint()?) as usize;
-    Ok(Parsed::Complete(ContainerPrefix { version, name, n_layers }, cur.pos))
+    Ok(Parsed::Complete(ContainerPrefix { version, name, n_layers, parent_fp }, cur.pos))
 }
 
 /// Parse one layer header (everything before the payload bytes) from a
 /// byte prefix starting at the layer record.
 pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>> {
     let mut cur = Cur { buf, pos: 0 };
+    if version == VERSION_DELTA {
+        let skip = need!(cur.take(1))[0];
+        match skip {
+            0 => {}
+            1 => {
+                let name = need!(cur.string("layer name")?);
+                return Ok(Parsed::Complete(
+                    LayerHeader {
+                        name,
+                        dims: Vec::new(),
+                        grid: QuantGrid { delta: 0.0, max_level: 0 },
+                        s_param: 0,
+                        cfg: CodecConfig::default(),
+                        chunks: Vec::new(),
+                        n_weights: 0,
+                        payload_len: 0,
+                        skipped: true,
+                    },
+                    cur.pos,
+                ));
+            }
+            v => bail!("bad delta skip flag {v}"),
+        }
+    }
     let name = need!(cur.string("layer name")?);
     let ndims = need!(cur.varint()?) as usize;
     if ndims > MAX_DIMS {
@@ -415,7 +619,7 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
     let remainder = RemainderMode::from_tag(rem_tag, rem_param)
         .ok_or_else(|| anyhow!("bad remainder tag {rem_tag}"))?;
     let mut chunks = Vec::new();
-    if version == VERSION_CHUNKED {
+    if version == VERSION_CHUNKED || version == VERSION_DELTA {
         let n_chunks = need!(cur.varint()?) as usize;
         if n_chunks == 0 || n_chunks > MAX_CHUNKS {
             bail!("layer claims {n_chunks} chunks (hostile header?)");
@@ -482,6 +686,7 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
             chunks,
             n_weights,
             payload_len,
+            skipped: false,
         },
         cur.pos,
     ))
@@ -835,6 +1040,119 @@ mod tests {
         let mut bad = bytes.clone();
         bad[4] = 99; // version
         assert!(CompressedModel::deserialize(&bad).is_err());
+    }
+
+    fn sample_delta() -> DeltaModel {
+        let cfg = CodecConfig::default();
+        let residual = vec![0, 0, 1, 0, 0, 0, -2, 0];
+        DeltaModel {
+            parent_fp: 0xDEAD_BEEF_CAFE_F00D,
+            name: "tiny".into(),
+            layers: vec![
+                DeltaLayer::Skipped("fc0".into()),
+                DeltaLayer::Coded(CompressedLayer {
+                    name: "fc1".into(),
+                    dims: vec![2, 4],
+                    grid: QuantGrid { delta: 0.125, max_level: 7 },
+                    s_param: 33,
+                    cfg,
+                    n_weights: residual.len(),
+                    payload: encode_levels(&residual, cfg),
+                    chunks: vec![],
+                    bias: vec![0.5],
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_v3_byte_stable() {
+        let d = sample_delta();
+        let bytes = d.serialize();
+        assert_eq!(bytes[4], VERSION_DELTA);
+        let d2 = DeltaModel::deserialize(&bytes).unwrap();
+        assert_eq!(d2.parent_fp, d.parent_fp);
+        assert_eq!(d2.name, "tiny");
+        assert_eq!(d2.layers.len(), 2);
+        assert!(matches!(&d2.layers[0], DeltaLayer::Skipped(n) if n == "fc0"));
+        match &d2.layers[1] {
+            DeltaLayer::Coded(l) => {
+                assert_eq!(l.decode_levels(), vec![0, 0, 1, 0, 0, 0, -2, 0]);
+                assert_eq!(l.bias, vec![0.5]);
+            }
+            other => panic!("expected coded layer, got {other:?}"),
+        }
+        // byte-stable re-serialization
+        assert_eq!(d2.serialize(), bytes);
+        // deserialize_any dispatches on the version byte
+        assert!(matches!(deserialize_any(&bytes).unwrap(), Container::Delta(_)));
+        assert!(matches!(
+            deserialize_any(&sample_model().serialize()).unwrap(),
+            Container::Full(_)
+        ));
+    }
+
+    #[test]
+    fn batch_reader_rejects_delta_with_structured_error() {
+        let bytes = sample_delta().serialize();
+        let err = CompressedModel::deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains("delta segment"), "{err}");
+    }
+
+    #[test]
+    fn delta_prefixes_are_need_more_never_err() {
+        // prefix monotonicity holds for v3 exactly as for v1/v2
+        let bytes = sample_delta().serialize();
+        for cut in 0..bytes.len() {
+            assert!(
+                DeltaModel::deserialize(&bytes[..cut]).is_err(),
+                "strict prefix must not parse as complete (cut={cut})"
+            );
+            // the prelude parser itself must keep saying NeedMore
+            if cut < 16 {
+                assert!(
+                    matches!(
+                        parse_container_prefix(&bytes[..cut]).unwrap(),
+                        Parsed::NeedMore
+                    ),
+                    "cut={cut}"
+                );
+            }
+        }
+        let (prefix, _) = match parse_container_prefix(&bytes).unwrap() {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => panic!("full buffer must parse"),
+        };
+        assert_eq!(prefix.version, VERSION_DELTA);
+        assert_eq!(prefix.parent_fp, Some(0xDEAD_BEEF_CAFE_F00D));
+    }
+
+    #[test]
+    fn delta_rejects_bad_skip_flag_and_trailing_bytes() {
+        let d = sample_delta();
+        let mut bytes = d.serialize();
+        // locate the first dlayer's skip byte: prelude is
+        // 4 magic + 1 version + 8 fp + str("tiny") + varint(2)
+        let skip_at = 4 + 1 + 8 + (1 + 4) + 1;
+        assert_eq!(bytes[skip_at], 1, "fixture layout changed");
+        bytes[skip_at] = 2;
+        let err = DeltaModel::deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains("skip flag"), "{err}");
+        let mut bytes = d.serialize();
+        bytes.push(0xFF);
+        assert!(DeltaModel::deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn full_serialization_unchanged_by_delta_support() {
+        // v1/v2 emission must be byte-for-byte what it was before v3
+        // existed: version byte, no fingerprint, no skip bytes
+        let m = sample_model();
+        let bytes = m.serialize();
+        assert_eq!(&bytes[..5], b"DCBC\x01");
+        // name immediately follows the version byte
+        assert_eq!(bytes[5] as usize, m.name.len());
+        assert_eq!(&bytes[6..6 + m.name.len()], m.name.as_bytes());
     }
 
     #[test]

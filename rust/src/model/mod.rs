@@ -5,7 +5,10 @@
 pub mod container;
 pub mod manifest;
 
-pub use container::{ChunkInfo, CompressedLayer, CompressedModel};
+pub use container::{
+    deserialize_any, fingerprint, ChunkInfo, CompressedLayer, CompressedModel, Container,
+    DeltaLayer, DeltaModel,
+};
 pub use manifest::{LayerInfo, LayerKind, ModelManifest};
 
 use crate::tensor::{npy, Tensor};

@@ -83,6 +83,19 @@ pub enum RangeOutcome {
     Unsatisfiable,
 }
 
+/// First value of `key` in the request path's query string (`?a=1&b=2`),
+/// or `None` if absent. No percent-decoding — the delta endpoint's
+/// fingerprints are plain hex and anything else should fail the
+/// downstream parse, not get creatively decoded.
+pub fn query_param(path: &str, key: &str) -> Option<String> {
+    let (_, query) = path.split_once('?')?;
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v.to_string())
+}
+
 /// Make a container/user-supplied string safe to embed in a response
 /// header: control characters (notably CR/LF — response splitting) are
 /// replaced with `_`.

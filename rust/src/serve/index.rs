@@ -1,6 +1,6 @@
 //! Random-access reader over a serialized `.dcbc` container.
 //!
-//! [`ContainerIndex::build`] walks the v1/v2 headers once (skipping every
+//! [`ContainerIndex::build`] walks the v1/v2/v3 headers once (skipping every
 //! payload byte) and records absolute byte ranges for each layer's
 //! payload, each chunk inside it, and the raw bias bytes. A client can
 //! then fetch and decode a single layer — or a single chunk — without
@@ -43,6 +43,10 @@ pub struct IndexedLayer {
     pub chunks: Vec<IndexedChunk>,
     /// Absolute byte range of the raw little-endian f32 bias bytes.
     pub bias: Range<usize>,
+    /// True for a v3 skip record: the layer is carried over from the
+    /// parent unchanged and owns no payload or bias bytes (all ranges
+    /// are empty).
+    pub skipped: bool,
 }
 
 impl IndexedLayer {
@@ -56,6 +60,8 @@ impl IndexedLayer {
 pub struct ContainerIndex {
     pub model: String,
     pub version: u8,
+    /// `Some` for v3 delta segments: the parent container fingerprint.
+    pub parent_fp: Option<u64>,
     pub container_len: usize,
     pub layers: Vec<IndexedLayer>,
 }
@@ -77,6 +83,22 @@ impl ContainerIndex {
                 }
                 Parsed::NeedMore => bail!("truncated layer header"),
             };
+            if hdr.skipped {
+                // v3 skip record: name only, no payload or bias bytes
+                layers.push(IndexedLayer {
+                    name: hdr.name,
+                    dims: hdr.dims,
+                    grid: hdr.grid,
+                    s_param: hdr.s_param,
+                    cfg: hdr.cfg,
+                    n_weights: 0,
+                    payload: pos..pos,
+                    chunks: vec![IndexedChunk { n_weights: 0, bytes: pos..pos }],
+                    bias: pos..pos,
+                    skipped: true,
+                });
+                continue;
+            }
             if hdr.payload_len > buf.len() - pos {
                 bail!("truncated payload");
             }
@@ -112,6 +134,7 @@ impl ContainerIndex {
                 payload,
                 chunks,
                 bias,
+                skipped: false,
             });
         }
         if pos != buf.len() {
@@ -120,6 +143,7 @@ impl ContainerIndex {
         Ok(Self {
             model: prefix.name,
             version: prefix.version,
+            parent_fp: prefix.parent_fp,
             container_len: buf.len(),
             layers,
         })
@@ -297,6 +321,40 @@ mod tests {
         assert_eq!(idx.resolve("7"), None);
         assert_eq!(idx.resolve("nope"), None);
         assert!(idx.decode_layer_levels(&bytes, 99, 1).is_err());
+    }
+
+    #[test]
+    fn indexes_v3_delta_segments() {
+        use crate::model::{DeltaLayer, DeltaModel};
+        let full = build_model(true);
+        let delta = DeltaModel {
+            parent_fp: 0xFEED_FACE_0123_4567,
+            name: "indexed".into(),
+            layers: vec![
+                DeltaLayer::Skipped("l0".into()),
+                DeltaLayer::Coded(full.layers[1].clone()),
+                DeltaLayer::Skipped("l2".into()),
+            ],
+        };
+        let bytes = delta.serialize();
+        let idx = ContainerIndex::build(&bytes).unwrap();
+        assert_eq!(idx.version, 3);
+        assert_eq!(idx.parent_fp, Some(0xFEED_FACE_0123_4567));
+        assert_eq!(idx.layers.len(), 3);
+        assert!(idx.layers[0].skipped && idx.layers[2].skipped);
+        assert!(idx.layers[0].payload.is_empty() && idx.layers[0].bias.is_empty());
+        // skip records decode to nothing without error
+        assert_eq!(idx.decode_layer_levels(&bytes, 0, 2).unwrap(), Vec::<i32>::new());
+        // the coded record random-accesses exactly like a full layer
+        let l = &full.layers[1];
+        assert!(!idx.layers[1].skipped);
+        assert_eq!(idx.layer_payload(&bytes, 1).unwrap(), &l.payload[..]);
+        assert_eq!(idx.decode_layer_levels(&bytes, 1, 4).unwrap(), l.decode_levels());
+        assert_eq!(idx.layer_bias(&bytes, 1).unwrap(), l.bias);
+        // full containers index with no parent fingerprint
+        let fidx = ContainerIndex::build(&full.serialize()).unwrap();
+        assert_eq!(fidx.parent_fp, None);
+        assert!(fidx.layers.iter().all(|l| !l.skipped));
     }
 
     #[test]

@@ -49,6 +49,12 @@ pub struct FailureTaxonomy {
     pub malformed_response: usize,
     /// A well-formed response with a non-200 status.
     pub http_error: usize,
+    /// HTTP 409 from the delta endpoint: the server recognises the
+    /// client's base fingerprint but has no delta from it. A stale-base
+    /// signal, not a server fault — bucketed apart from `http_error` so
+    /// a run against a drifting model fleet reads as "clients need full
+    /// fetches", not "server is erroring".
+    pub delta_mismatch: usize,
     /// Anything else.
     pub other: usize,
 }
@@ -75,8 +81,12 @@ impl FailureTaxonomy {
         }
     }
 
-    pub fn record_status(&mut self, _status: u16) {
-        self.http_error += 1;
+    pub fn record_status(&mut self, status: u16) {
+        if status == 409 {
+            self.delta_mismatch += 1;
+        } else {
+            self.http_error += 1;
+        }
     }
 
     pub fn total(&self) -> usize {
@@ -85,6 +95,7 @@ impl FailureTaxonomy {
             + self.reset
             + self.malformed_response
             + self.http_error
+            + self.delta_mismatch
             + self.other
     }
 
@@ -94,6 +105,7 @@ impl FailureTaxonomy {
         self.reset += o.reset;
         self.malformed_response += o.malformed_response;
         self.http_error += o.http_error;
+        self.delta_mismatch += o.delta_mismatch;
         self.other += o.other;
     }
 }
@@ -381,6 +393,7 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
                     json::num(r.failure_taxonomy.malformed_response as f64),
                 ),
                 ("http_error", json::num(r.failure_taxonomy.http_error as f64)),
+                ("delta_mismatch", json::num(r.failure_taxonomy.delta_mismatch as f64)),
                 ("other", json::num(r.failure_taxonomy.other as f64)),
             ]),
         ),
@@ -439,6 +452,8 @@ mod tests {
         t.record_error("bad status line");
         t.record_error("connection closed before full body");
         t.record_status(503);
+        // 409 is the delta endpoint's stale-base signal, its own bucket
+        t.record_status(409);
         t.record_error("some novel explosion");
         assert_eq!(
             t,
@@ -448,14 +463,15 @@ mod tests {
                 reset: 2,
                 malformed_response: 3,
                 http_error: 1,
+                delta_mismatch: 1,
                 other: 1,
             }
         );
-        assert_eq!(t.total(), 10);
+        assert_eq!(t.total(), 11);
         let mut sum = FailureTaxonomy::default();
         sum.merge(&t);
         sum.merge(&t);
-        assert_eq!(sum.total(), 20);
+        assert_eq!(sum.total(), 22);
     }
 
     #[test]
@@ -470,7 +486,11 @@ mod tests {
         let r = LoadgenReport {
             total_requests: 6,
             failures: 0,
-            failure_taxonomy: FailureTaxonomy { timeout: 2, ..Default::default() },
+            failure_taxonomy: FailureTaxonomy {
+                timeout: 2,
+                delta_mismatch: 1,
+                ..Default::default()
+            },
             injected: InjectedReport { slowloris: 3, unexpected: 0, ..Default::default() },
             p50_ms: 1.0,
             p99_ms: 2.0,
@@ -493,6 +513,10 @@ mod tests {
         assert_eq!(
             parsed.path("failure_taxonomy.timeout").unwrap().as_usize().unwrap(),
             2
+        );
+        assert_eq!(
+            parsed.path("failure_taxonomy.delta_mismatch").unwrap().as_usize().unwrap(),
+            1
         );
         assert_eq!(parsed.path("injected.slowloris").unwrap().as_usize().unwrap(), 3);
         assert_eq!(parsed.path("injected.hostile_threads").unwrap().as_usize().unwrap(), 1);

@@ -11,6 +11,8 @@
 //! /models/{m}/manifest               layer/chunk byte map (JSON)
 //! /models/{m}/layers/{l}             compressed layer payload [Range OK]
 //! /models/{m}/layers/{l}/weights     decoded f32 LE weights (cached)
+//! /models/{m}/delta?from={fp}        v3 delta segment upgrading the
+//!                                    base with fingerprint {fp} [Range OK]
 //! ```
 //!
 //! `{l}` is a layer index or a layer name. Weights decodes go through a
@@ -72,6 +74,14 @@ pub struct ModelEntry {
 
 struct ServerState {
     models: BTreeMap<String, ModelEntry>,
+    /// (model name, parent fingerprint) → key in `models` of the v3
+    /// delta segment upgrading that base. Model name is the delta
+    /// container's own `name` field, not its file stem.
+    deltas: BTreeMap<(String, u64), String>,
+    /// Fingerprint → key for every loaded **full** container: how the
+    /// delta endpoint tells a stale-but-legitimate base (409) from a
+    /// fingerprint it has never heard of (404).
+    known_fps: BTreeMap<u64, String>,
     cache: DecodedCache,
     /// Worker cap for intra-layer (chunk) decode fan-out.
     decode_workers: usize,
@@ -146,14 +156,42 @@ pub fn load_model_dir(dir: &PathBuf) -> Result<BTreeMap<String, ModelEntry>> {
     Ok(models)
 }
 
+/// Split the loaded entries into the delta registry: v3 segments keyed
+/// by (target model name, parent fingerprint), and the fingerprint of
+/// every full container. Full-container fingerprints are FNV-1a of the
+/// file bytes — valid because serialization is canonical (byte-stable
+/// round trip, invariant 2 of `docs/FORMAT.md`), so a file written by
+/// this toolchain hashes identically to `model::fingerprint` of its
+/// deserialization.
+pub fn build_delta_registry(
+    models: &BTreeMap<String, ModelEntry>,
+) -> (BTreeMap<(String, u64), String>, BTreeMap<u64, String>) {
+    let mut deltas = BTreeMap::new();
+    let mut known_fps = BTreeMap::new();
+    for (key, m) in models {
+        match m.index.parent_fp {
+            Some(fp) => {
+                deltas.insert((m.index.model.clone(), fp), key.clone());
+            }
+            None => {
+                known_fps.insert(crate::util::fnv1a(&m.bytes), key.clone());
+            }
+        }
+    }
+    (deltas, known_fps)
+}
+
 /// Bind, spawn the accept loop, and return immediately.
 pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
     let models = load_model_dir(&opts.dir)?;
     let listener =
         TcpListener::bind(&opts.addr).with_context(|| format!("binding {}", opts.addr))?;
     let addr = listener.local_addr()?;
+    let (deltas, known_fps) = build_delta_registry(&models);
     let state = Arc::new(ServerState {
         models,
+        deltas,
+        known_fps,
         cache: DecodedCache::new(opts.cache_bytes),
         decode_workers: opts.workers,
         requests: AtomicU64::new(0),
@@ -264,12 +302,16 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                 .models
                 .iter()
                 .map(|(name, m)| {
-                    json::obj(vec![
+                    let mut fields = vec![
                         ("name", json::s(name)),
                         ("layers", json::num(m.index.layers.len() as f64)),
                         ("bytes", json::num(m.bytes.len() as f64)),
                         ("version", json::num(m.index.version as f64)),
-                    ])
+                    ];
+                    if let Some(fp) = m.index.parent_fp {
+                        fields.push(("parent_fingerprint", json::s(&format!("{fp:016x}"))));
+                    }
+                    json::obj(fields)
                 })
                 .collect();
             write_json(stream, 200, "OK", &json::obj(vec![("models", json::arr(list))]))
@@ -279,6 +321,51 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                 return not_found(stream, name);
             };
             write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream")
+        }
+        ["models", name, "delta"] => {
+            // Hostile ?from= values are shed, never served and never a
+            // panic: unknown or unparseable fingerprints are a plain 404;
+            // a fingerprint we recognise (the client holds a container
+            // this server also has) with no delta from it is a 409, the
+            // signal to fall back to a full fetch. Loadgen buckets the
+            // 409s separately (`delta_mismatch`).
+            let Some(from) = http::query_param(&req.path, "from") else {
+                return http::write_error(
+                    stream,
+                    404,
+                    "Not Found",
+                    "delta endpoint needs ?from=<16-hex-digit parent fingerprint>",
+                );
+            };
+            let Ok(fp) = u64::from_str_radix(from.trim_start_matches("0x"), 16) else {
+                return http::write_error(
+                    stream,
+                    404,
+                    "Not Found",
+                    "unparseable ?from= fingerprint (want 16 hex digits)",
+                );
+            };
+            if let Some(key) = state.deltas.get(&(name.to_string(), fp)) {
+                let m = &state.models[key];
+                return write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream");
+            }
+            if state.known_fps.contains_key(&fp) {
+                return http::write_error(
+                    stream,
+                    409,
+                    "Conflict",
+                    &format!(
+                        "no delta from base {fp:016x} for model {name} — \
+                         fetch the full container instead"
+                    ),
+                );
+            }
+            http::write_error(
+                stream,
+                404,
+                "Not Found",
+                &format!("unknown base fingerprint {fp:016x}"),
+            )
         }
         ["models", name, "manifest"] => {
             let Some(m) = state.models.get(*name) else {
@@ -434,11 +521,15 @@ fn manifest_json(name: &str, index: &ContainerIndex) -> Json {
             ])
         })
         .collect();
-    json::obj(vec![
+    let mut fields = vec![
         ("model", json::s(name)),
         ("container_name", json::s(&index.model)),
         ("version", json::num(index.version as f64)),
         ("container_bytes", json::num(index.container_len as f64)),
-        ("layers", json::arr(layers)),
-    ])
+    ];
+    if let Some(fp) = index.parent_fp {
+        fields.push(("parent_fingerprint", json::s(&format!("{fp:016x}"))));
+    }
+    fields.push(("layers", json::arr(layers)));
+    json::obj(fields)
 }

@@ -35,16 +35,24 @@ pub struct DecodedLayer {
     pub grid: QuantGrid,
     pub s_param: u32,
     pub n_weights: usize,
+    /// Decoded integer levels — for a v3 delta segment these are the
+    /// residual levels `R` that [`crate::delta::StreamApplier`] combines
+    /// with the parent.
+    pub levels: Vec<i32>,
     /// Dequantized weights (levels × Δ), identical to the batch decoder's.
     pub weights: Vec<f32>,
     pub bias: Vec<f32>,
+    /// Version-3 skip record: the layer is untouched by the delta.
+    /// `levels`/`weights`/`bias` are empty; only `name`/`index` matter.
+    pub skipped: bool,
 }
 
 /// Everything a [`StreamDecoder`] can announce while bytes arrive.
 #[derive(Debug)]
 pub enum StreamEvent {
-    /// Container prelude parsed.
-    Start { model: String, version: u8, n_layers: usize },
+    /// Container prelude parsed. `parent_fp` is `Some` for version-3
+    /// delta segments (the parent container fingerprint).
+    Start { model: String, version: u8, n_layers: usize, parent_fp: Option<u64> },
     /// One independently coded CABAC stream finished decoding. Monolithic
     /// layers emit exactly one of these (chunk 0 of 1).
     Chunk { layer: usize, chunk: usize, n_chunks: usize, n_weights: usize },
@@ -177,6 +185,7 @@ impl StreamDecoder {
                             model: p.name,
                             version: p.version,
                             n_layers: p.n_layers,
+                            parent_fp: p.parent_fp,
                         });
                         if self.n_layers == 0 {
                             events.push(StreamEvent::End);
@@ -193,6 +202,30 @@ impl StreamDecoder {
                 State::LayerHeader => match parse_layer_header(self.rest(), self.version)? {
                     Parsed::Complete(hdr, used) => {
                         self.pos += used;
+                        if hdr.skipped {
+                            // v3 skip record: no payload, no bias — the
+                            // layer completes the moment its header does
+                            events.push(StreamEvent::Layer(Box::new(DecodedLayer {
+                                index: self.layer_idx,
+                                name: hdr.name,
+                                dims: Vec::new(),
+                                grid: hdr.grid,
+                                s_param: 0,
+                                n_weights: 0,
+                                levels: Vec::new(),
+                                weights: Vec::new(),
+                                bias: Vec::new(),
+                                skipped: true,
+                            })));
+                            self.layer_idx += 1;
+                            if self.layer_idx == self.n_layers {
+                                events.push(StreamEvent::End);
+                                self.state = State::Done;
+                            } else {
+                                self.state = State::LayerHeader;
+                            }
+                            continue;
+                        }
                         let spans = hdr.chunk_spans();
                         // cap the pre-allocation: n_weights is attacker
                         // controlled until the payload actually decodes
@@ -254,6 +287,7 @@ impl StreamDecoder {
                     let mut bias = vec![0f32; blen];
                     LittleEndian::read_f32_into(&self.rest()[..blen * 4], &mut bias);
                     self.pos += blen * 4;
+                    let weights = hdr.grid.dequantize(&levels);
                     events.push(StreamEvent::Layer(Box::new(DecodedLayer {
                         index: self.layer_idx,
                         name: hdr.name,
@@ -261,8 +295,10 @@ impl StreamDecoder {
                         grid: hdr.grid,
                         s_param: hdr.s_param,
                         n_weights: hdr.n_weights,
-                        weights: hdr.grid.dequantize(&levels),
+                        levels,
+                        weights,
                         bias,
+                        skipped: false,
                     })));
                     self.layer_idx += 1;
                     if self.layer_idx == self.n_layers {
@@ -586,6 +622,41 @@ mod tests {
                 }
                 Err(_) => {}
             }
+        }
+    }
+
+    #[test]
+    fn v3_delta_segment_streams_at_every_granularity() {
+        use crate::model::{DeltaLayer, DeltaModel};
+        let cfg = CodecConfig::default();
+        let residual = vec![0, 0, 3, 0, -1, 0, 0, 0];
+        let delta = DeltaModel {
+            parent_fp: 0x1234_5678_9ABC_DEF0,
+            name: "d".into(),
+            layers: vec![
+                DeltaLayer::Skipped("conv1".into()),
+                DeltaLayer::Coded(layer_from_levels("conv2", &residual, 2, cfg, vec![0.5])),
+                DeltaLayer::Skipped("fc".into()),
+            ],
+        };
+        let bytes = delta.serialize();
+        for split in [1usize, 3, 7, bytes.len()] {
+            let events = feed_in_splits(&bytes, std::iter::repeat(split)).unwrap();
+            let mut fp = None;
+            for e in &events {
+                if let StreamEvent::Start { parent_fp, version, .. } = e {
+                    fp = *parent_fp;
+                    assert_eq!(*version, 3);
+                }
+            }
+            assert_eq!(fp, Some(0x1234_5678_9ABC_DEF0), "split={split}");
+            let layers = layers_of(events);
+            assert_eq!(layers.len(), 3);
+            assert!(layers[0].skipped && layers[2].skipped && !layers[1].skipped);
+            assert_eq!(layers[0].name, "conv1");
+            assert_eq!(layers[2].name, "fc");
+            assert_eq!(layers[1].levels, residual);
+            assert_eq!(layers[1].bias, vec![0.5]);
         }
     }
 

@@ -3,14 +3,15 @@
 //! streaming decoder, and a ≥32-client loadgen run.
 
 use deepcabac::codec::{encode_levels, CodecConfig, RemainderMode};
-use deepcabac::model::{ChunkInfo, CompressedLayer, CompressedModel};
+use deepcabac::delta;
+use deepcabac::model::{fingerprint, ChunkInfo, CompressedLayer, CompressedModel, DeltaModel};
 use deepcabac::quant::QuantGrid;
 use deepcabac::serve::http;
 use deepcabac::serve::loadgen::{self, LoadgenOptions};
 use deepcabac::serve::server::{start, ServeOptions};
 use deepcabac::serve::stream::{StreamDecoder, StreamEvent};
 use deepcabac::util::json::Json;
-use deepcabac::util::SplitMix64;
+use deepcabac::util::{fnv1a, SplitMix64};
 use std::path::PathBuf;
 
 fn make_layer(name: &str, n: usize, n_chunks: usize, seed: u64, cfg: CodecConfig) -> CompressedLayer {
@@ -171,6 +172,86 @@ fn server_end_to_end() {
     assert_eq!(http::get(&addr, "/models/nope", None).unwrap().status, 404);
     assert_eq!(http::get(&addr, "/models/alpha/layers/99", None).unwrap().status, 404);
     assert_eq!(http::get(&addr, "/nope", None).unwrap().status, 404);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The delta endpoint under legitimate and hostile `?from=` values: a
+/// registered (model, parent-fingerprint) pair serves the v3 segment
+/// byte-for-byte and the segment applies back to the target container;
+/// a fingerprint the server recognises with no delta from it is a 409;
+/// everything else — garbage hex, unknown fingerprints, a missing
+/// param, an unknown model — is a plain 404, never a panic or a hang.
+#[test]
+fn delta_endpoint_serves_and_sheds_hostile_from() {
+    let dir =
+        std::env::temp_dir().join(format!("dcbc_serve_{}_delta", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CodecConfig::default();
+
+    // parent and target share architecture (names + weight counts) but
+    // differ in payload — a real update, so the delta codes residuals
+    let parent = CompressedModel {
+        name: "gamma".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 7, cfg), make_layer("fc", 300, 1, 8, cfg)],
+    };
+    let target = CompressedModel {
+        name: "gamma".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 9, cfg), make_layer("fc", 300, 1, 10, cfg)],
+    };
+    let (delta, _report) = delta::encode(&parent, &target, 2).unwrap();
+    let target_bytes = target.serialize();
+    std::fs::write(dir.join("gamma.dcbc"), &target_bytes).unwrap();
+    std::fs::write(dir.join("gamma_update.dcbc"), delta.serialize()).unwrap();
+
+    let handle = start(ServeOptions {
+        dir: dir.clone(),
+        addr: "127.0.0.1:0".into(),
+        cache_bytes: 1 << 20,
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // -- the happy path: known parent fingerprint → 200, applies back --
+    let parent_fp = fingerprint(&parent);
+    let resp = http::get(&addr, &format!("/models/gamma/delta?from={parent_fp:016x}"), None)
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, delta.serialize(), "served segment must be byte-identical");
+    let wire = DeltaModel::deserialize(&resp.body).unwrap();
+    let rebuilt = delta::apply(&parent, &wire, 2).unwrap();
+    assert_eq!(
+        rebuilt.serialize(),
+        target_bytes,
+        "served delta must rebuild the target container byte-for-byte"
+    );
+
+    // -- known full container with no delta from it → 409 Conflict ----
+    // (the fall-back-to-full-fetch signal; full-container fingerprints
+    // are FNV-1a of the file bytes, valid because serialization is
+    // canonical)
+    let target_fp = fnv1a(&target_bytes);
+    let resp = http::get(&addr, &format!("/models/gamma/delta?from={target_fp:016x}"), None)
+        .unwrap();
+    assert_eq!(resp.status, 409, "known base with no delta must be a 409");
+
+    // -- hostile ?from= values are all shed with a 404 -----------------
+    for path in [
+        "/models/gamma/delta?from=0000000000000000", // unknown fingerprint
+        "/models/gamma/delta?from=zzzz",             // not hex
+        "/models/gamma/delta?from=",                 // empty value
+        "/models/gamma/delta",                       // missing param
+        "/models/nosuch/delta?from=0000000000000000", // unknown model
+    ] {
+        let resp = http::get(&addr, path, None).unwrap();
+        assert_eq!(resp.status, 404, "{path}: hostile ?from= must be a plain 404");
+    }
+
+    // the server is still healthy after the hostile batch
+    assert_eq!(http::get(&addr, "/healthz", None).unwrap().status, 200);
 
     handle.shutdown();
     std::fs::remove_dir_all(&dir).ok();
