@@ -88,7 +88,7 @@ def sweep_md(b):
 
 
 def serve_md(b):
-    return "\n".join([
+    out = [
         f"**§Serving** — {int(b['clients'])} clients × "
         f"{int(b['requests_per_client'])} requests against `{b['url']}`:",
         "",
@@ -101,7 +101,25 @@ def serve_md(b):
                 int(b["bytes_transferred"]),
             ]],
         ),
-    ])
+    ]
+    p = b.get("progressive")
+    if p:
+        out += [
+            "",
+            f"Time to first usable tier ({int(p['models'])} progressive "
+            f"models × {int(p['probes'])} probes, idle server):",
+            "",
+            table(
+                ["base p50 ms", "base p99 ms", "full p50 ms", "full p99 ms",
+                 "base bytes", "full bytes"],
+                [[
+                    fmt(p["base_tier_p50_ms"]), fmt(p["base_tier_p99_ms"]),
+                    fmt(p["full_p50_ms"]), fmt(p["full_p99_ms"]),
+                    int(p["base_tier_bytes"]), int(p["full_bytes"]),
+                ]],
+            ),
+        ]
+    return "\n".join(out)
 
 
 def delta_md(b):
@@ -135,11 +153,37 @@ def delta_md(b):
     return "\n".join(head)
 
 
+def progressive_md(b):
+    rows = []
+    for t in b["tiers"]:
+        dist = t.get("distortion")
+        dens = t.get("residual_density")
+        rows.append([
+            int(t["tier"]), t["s"], t["lambda_scale"],
+            int(t["standalone_bytes"]), int(t["tier_body_bytes"]),
+            f"{dist:.4e}" if dist is not None else "—",
+            f"{dens:.3%}" if dens is not None else "—",
+        ])
+    return "\n".join([
+        f"**§Progressive** — model `{b['model']}`, {int(b['n_tiers'])} tiers "
+        f"({int(b['requested_tiers'])} requested), {int(b['workers'])} workers: "
+        f"{int(b['progressive_bytes'])} bytes vs {int(b['finest_standalone_bytes'])} "
+        f"standalone ({b['overhead_ratio']:.1%}):",
+        "",
+        table(
+            ["tier", "S", "λ", "standalone bytes", "tier body bytes",
+             "distortion", "residual density"],
+            rows,
+        ),
+    ])
+
+
 RENDERERS = {
     "throughput": throughput_md,
     "sweep": sweep_md,
     "serve": serve_md,
     "delta": delta_md,
+    "progressive": progressive_md,
 }
 
 

@@ -8,8 +8,9 @@ spec in docs/FORMAT.md. Filename conventions (see fuzz::driver):
   reject_*  must parse Err
   other     only has to uphold the crash invariants
 
-Container files (v1/v2 full containers and v3 delta segments alike) are
-replayed against both the batch and the streaming decoder; range files
+Container files (v1/v2 full containers, v3 delta segments and v4
+progressive containers alike) are replayed against both the batch and
+the streaming decoder; range files
 are raw `Range:` header values; encoder files are hostile-model recipes
 for fuzz::gen::hostile_model_pair (accept_* must delta-encode, reject_*
 must be rejected by the finite-value boundary). The corpus is
@@ -109,6 +110,18 @@ def dlayer_coded(name, chunks, n_weights, payload, bias=()):
     for b in bias:
         out += f32(b)
     return out
+
+
+def progressive_container(name, n_layers, tier_bodies, declared_lens=None):
+    """A v4 progressive container: name/layer-count prelude, tier count,
+    the tier byte-length table, then the concatenated tier bodies. Tier 0
+    holds v2-shaped layer records, tiers >= 1 hold v3 dlayer records.
+    `declared_lens` overrides the table so cases can lie about spans."""
+    lens = declared_lens if declared_lens is not None else [len(b) for b in tier_bodies]
+    out = b"DCBC\x04" + s(name) + varint(n_layers) + varint(len(lens))
+    for ln in lens:
+        out += varint(ln)
+    return out + b"".join(tier_bodies)
 
 
 # deterministic "garbage" CABAC payload: parse never validates payload
@@ -226,10 +239,74 @@ def containers():
         delta_container(0xDEADBEEF, "m", []) + b"\x00",
     )
 
+    # -- v4 progressive containers -----------------------------------------
+    base_a = layer_v2("a", [(3, 2), (5, 4)], 8, junk(6), bias=(0.5,))
+    base_b = layer_v2("b", [(4, 2)], 4, junk(2))
+    write(
+        "container",
+        "accept_v4_single_tier",
+        progressive_container("m", 1, [base_a]),
+    )
+    # refinement records are positional: skip "a", re-code "b" with a
+    # matching weight count so the tier applies cleanly
+    refinement = dlayer_skip("a") + dlayer_coded("b", [(4, 2)], 4, junk(2, seed=0x3C))
+    two_tier = progressive_container("mm", 2, [base_a + base_b, refinement])
+    write("container", "accept_v4_two_tiers", two_tier)
+    write(
+        "container",
+        "accept_v4_zero_layers",
+        progressive_container("m", 0, [b""]),
+    )
+    # the truncation rule: EOF exactly at a tier-body boundary is a
+    # complete container at the preceding tier (reserialize shrinks the
+    # tier table — canonicalization, same idempotence story as v2
+    # single-chunk forms)
+    write(
+        "container",
+        "accept_v4_truncated_at_tier_boundary",
+        two_tier[: len(two_tier) - len(refinement)],
+    )
+    # a mid-tier EOF is NOT a boundary: one byte into the refinement
+    write(
+        "container",
+        "reject_v4_truncated_tier_header",
+        two_tier[: len(two_tier) - len(refinement) + 1],
+    )
+    # tier counts outside 1..=MAX_TIERS (64)
+    write(
+        "container",
+        "reject_v4_zero_tiers",
+        b"DCBC\x04" + s("m") + varint(0) + varint(0),
+    )
+    write(
+        "container",
+        "reject_v4_too_many_tiers",
+        b"DCBC\x04" + s("m") + varint(0) + varint(65),
+    )
+    # tier table lies about the span: declared length disagrees with the
+    # bytes the tier's records actually occupy
+    write(
+        "container",
+        "reject_v4_tier_span_mismatch",
+        progressive_container("m", 1, [base_a], declared_lens=[len(base_a) + 1]),
+    )
+    # tier byte-lengths whose sum overflows u64
+    write(
+        "container",
+        "reject_v4_tier_table_overflow",
+        b"DCBC\x04" + s("m") + varint(0) + varint(2)
+        + varint((1 << 64) - 1) + varint(1),
+    )
+    write(
+        "container",
+        "reject_v4_trailing_bytes",
+        progressive_container("m", 0, [b""]) + b"\x00",
+    )
+
     # -- rejected ----------------------------------------------------------
     write("container", "reject_bad_magic", b"DCBX\x01" + s("m") + varint(0))
-    # version 3 became the delta segment; 4 is the first unknown version
-    write("container", "reject_bad_version", b"DCBC\x04" + s("m") + varint(0))
+    # version 4 became the progressive container; 5 is the first unknown
+    write("container", "reject_bad_version", b"DCBC\x05" + s("m") + varint(0))
     # 11 continuation bytes: >= 10 undecided bytes = malformed varint,
     # not a short buffer
     write("container", "reject_overlong_varint", b"DCBC\x01" + b"\x80" * 11)

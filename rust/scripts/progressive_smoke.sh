@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Progressive-container smoke test, run by CI from the rust/ directory:
+#   1. sweep --progressive chains frontier points into one .dcbc v4
+#      container, writing the standalone per-tier containers next to it
+#   2. `materialize` at every tier must be byte-identical to the
+#      standalone container the encoder was given for that tier
+#   3. serve the progressive container; `fetch --tier 0` must yield a
+#      decodable model from a strict byte prefix, and `fetch --upgrade`
+#      must extend that prefix to the full container byte-for-byte
+#   4. size gate: the progressive container (sum of tiers) must be
+#      <= 115% of the finest standalone container
+#   5. BENCH_progressive.json is left for upload
+set -euo pipefail
+
+BIN=${BIN:-target/release/deepcabac}
+WORK=$(mktemp -d)
+mkdir -p "$WORK/models" "$WORK/tiers"
+
+cleanup() {
+  [ -n "${SERVER_PID:-}" ] && kill "$SERVER_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== progressive sweep: chain frontier points into a v4 container =="
+"$BIN" sweep --arch mobilenet --scale 16 --points 9 --workers 4 --chunks 4 \
+  --progressive --tiers 3 \
+  --out "$WORK/models/mobilenet.dcbc" --out-tiers "$WORK/tiers"
+N_TIERS=$(ls "$WORK/tiers" | wc -l)
+echo "sweep produced $N_TIERS tiers"
+[ "$N_TIERS" -ge 2 ] || { echo "expected >= 2 tiers from the frontier"; exit 1; }
+
+echo "== materialize each tier vs its standalone container =="
+for t in $(seq 0 $((N_TIERS - 1))); do
+  "$BIN" materialize --in "$WORK/models/mobilenet.dcbc" --tier "$t" \
+    --out "$WORK/mat_$t.dcbc" --workers 4
+  cmp "$WORK/mat_$t.dcbc" "$WORK/tiers/tier_$t.dcbc"
+done
+echo "all $N_TIERS tiers materialize byte-identical to the standalone containers"
+
+echo "== size gate: sum of tiers <= 115% of the finest standalone =="
+python3 - <<'EOF'
+import json
+j = json.load(open("BENCH_progressive.json"))
+ratio = j["overhead_ratio"]
+assert ratio <= 1.15, (
+    f"progressive container is {ratio:.1%} of the finest standalone (want <= 115%)"
+)
+print(f"progressive overhead {ratio:.1%} of the finest standalone "
+      f"({int(j['progressive_bytes'])} vs {int(j['finest_standalone_bytes'])} bytes)")
+EOF
+
+echo "== start server on an ephemeral port =="
+"$BIN" serve --dir "$WORK/models" --addr 127.0.0.1:0 --cache-mb 32 --workers 4 \
+  > "$WORK/serve.log" 2>&1 &
+SERVER_PID=$!
+
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#^listening on http://##p' "$WORK/serve.log" | head -n1)
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$WORK/serve.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never announced its port"; cat "$WORK/serve.log"; exit 1; }
+echo "server at $ADDR"
+
+echo "== fetch --tier 0: usable model from a strict byte prefix =="
+"$BIN" fetch --url "http://$ADDR/models/mobilenet" --tier 0 \
+  --out "$WORK/prefix.dcbc" --out-dir "$WORK/tier0_npy"
+PREFIX_LEN=$(wc -c < "$WORK/prefix.dcbc")
+FULL_LEN=$(wc -c < "$WORK/models/mobilenet.dcbc")
+[ "$PREFIX_LEN" -lt "$FULL_LEN" ] || { echo "tier-0 prefix is not a strict prefix"; exit 1; }
+head -c "$PREFIX_LEN" "$WORK/models/mobilenet.dcbc" | cmp - "$WORK/prefix.dcbc"
+echo "tier 0 served as an exact $PREFIX_LEN-byte prefix of the $FULL_LEN-byte container"
+# the prefix is itself a decodable v4 container at tier 0: materializing
+# it must reproduce the standalone base-tier container byte-for-byte
+"$BIN" materialize --in "$WORK/prefix.dcbc" --out "$WORK/prefix_mat.dcbc" --workers 4
+cmp "$WORK/prefix_mat.dcbc" "$WORK/tiers/tier_0.dcbc"
+echo "tier-0 prefix decodes to the standalone base container"
+
+echo "== fetch --upgrade: extend the prefix to the full container =="
+"$BIN" fetch --url "http://$ADDR/models/mobilenet" --upgrade "$WORK/prefix.dcbc" \
+  --out "$WORK/upgraded.dcbc"
+cmp "$WORK/upgraded.dcbc" "$WORK/models/mobilenet.dcbc"
+echo "upgrade reassembled the full container byte-for-byte"
+# upgrading an already-complete container is a clean no-op (416 tail)
+"$BIN" fetch --url "http://$ADDR/models/mobilenet" --upgrade "$WORK/upgraded.dcbc" \
+  --out "$WORK/upgraded2.dcbc" | grep -q "already complete"
+echo "re-upgrade of a complete container is a clean no-op"

@@ -11,6 +11,8 @@
 //!                      [--sweep-exhaustive] [--no-abandon | --abandon-argmin]
 //!                      [--warm-start | --cold] [--compare-serial]
 //!                      [--json FILE] [--csv FILE] [--out FILE] [--select-lambda X]
+//!                      [--progressive [--tiers K] [--out-tiers DIR]]
+//! deepcabac materialize --in PROG.dcbc [--tier T] --out FILE
 //! deepcabac synth      --arch vgg16 [--scale N] [--s N]
 //! deepcabac delta      encode|apply|bench (see USAGE)
 //! ```
@@ -190,6 +192,21 @@ USAGE:
       --out-delta. Abandonment is forced off in this mode (full-byte
       budgets don't order points by delta bytes); warm-start still
       applies.
+      --progressive picks up to --tiers K (default 3) evenly spaced
+      points along the swept Pareto frontier (coarsest first, finest
+      last), recompresses each, and chain-encodes them into ONE .dcbc
+      v4 progressive container: a v2-shaped base tier plus CABAC-coded
+      level residuals per refinement tier, cut so that every tier
+      boundary is a decodable container prefix. --out writes the v4
+      container, --out-tiers DIR writes each tier's standalone
+      container (tier_0.dcbc …; `materialize` reproduces them
+      byte-for-byte from the v4 file), and a per-tier size/overhead
+      report goes to BENCH_progressive.json. Incompatible with
+      --delta-from and --select-lambda.
+  deepcabac materialize --in PROG.dcbc [--tier T] --out FILE [--workers N]
+      Extract tier T (default: the finest) of a progressive v4 container
+      as a standalone v1/v2 container, byte-identical to the container
+      that tier was chained from.
   deepcabac synth --arch vgg16|resnet50|mobilenet [--scale N] [--s N]
                   [--seed N] [--out FILE] [--perturb-density X]
                   [--perturb-scale Y] [--perturb-seed N] [--workers N]
@@ -230,7 +247,8 @@ USAGE:
       peers get 408 / a close instead of a wedged worker slot, counted
       in /stats.
   deepcabac fetch --url http://HOST:PORT/models/NAME [--layer L]
-                  [--from BASE.dcbc] [--out-dir DIR] [--workers N]
+                  [--from BASE.dcbc] [--tier T [--out FILE] | --upgrade FILE]
+                  [--out-dir DIR] [--workers N]
       Fetch a model from a serve endpoint. Without --layer the whole
       container is streamed through the incremental decoder (layers
       materialize while bytes arrive); --layer L (index or name) fetches
@@ -239,8 +257,14 @@ USAGE:
       (GET .../delta?from=<fingerprint>) and applies it in place as the
       bytes arrive — reconstructed weights are identical to a full
       fetch; HTTP 409 means the server knows the base but has no delta
-      from it (fetch the full container). --out-dir writes
-      {layer}.w.npy files.
+      from it (fetch the full container). --tier T fetches only the
+      byte prefix of a progressive (v4) container up to tier T
+      (GET ...?tier=T) and reconstructs the weights at that quality;
+      --out saves the prefix, which is itself a valid container.
+      --upgrade FILE extends a saved prefix to the server's full
+      container with one Range request for the missing tail (nothing
+      already held is re-downloaded). --out-dir writes {layer}.w.npy
+      files.
   deepcabac loadgen --url http://HOST:PORT [--clients N] [--requests M]
                     [--hostile H] [--out FILE]
       Load-generate against a serve endpoint (mixed compressed-bytes and
@@ -379,6 +403,39 @@ mod tests {
             Args::parse(&sv(&["sweep", "--select-lambda", "0.2", "--out", "b.dcbc"]))
                 .unwrap();
         assert_eq!(a.get("select-lambda"), Some("0.2"));
+    }
+
+    #[test]
+    fn parses_progressive_flags() {
+        // sweep --progressive with its tier knobs
+        let a = Args::parse(&sv(&[
+            "sweep", "--arch", "vgg16", "--progressive", "--tiers", "4",
+            "--out", "prog.dcbc", "--out-tiers", "tiers/",
+        ]))
+        .unwrap();
+        assert!(a.has("progressive"));
+        assert_eq!(a.get_count("tiers", 3).unwrap(), 4);
+        assert_eq!(a.get("out-tiers"), Some("tiers/"));
+        // --tiers 0 rejected through the uniform count validator
+        let a = Args::parse(&sv(&["sweep", "--progressive", "--tiers", "0"])).unwrap();
+        assert!(a.get_count("tiers", 3).is_err());
+        // materialize + fetch tier flags parse as plain value flags
+        let a = Args::parse(&sv(&[
+            "materialize", "--in", "p.dcbc", "--tier", "1", "--out", "t1.dcbc",
+        ]))
+        .unwrap();
+        assert_eq!(a.cmd, "materialize");
+        assert_eq!(a.get("tier"), Some("1"));
+        let a = Args::parse(&sv(&[
+            "fetch", "--url", "http://h/models/m", "--tier", "0", "--out", "base.dcbc",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("tier"), Some("0"));
+        let a = Args::parse(&sv(&[
+            "fetch", "--url", "http://h/models/m", "--upgrade", "base.dcbc",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("upgrade"), Some("base.dcbc"));
     }
 
     #[test]

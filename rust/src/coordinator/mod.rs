@@ -18,7 +18,7 @@ pub use pipeline::{
     LayerStats,
 };
 pub use sweep::{
-    sweep_delta, sweep_grid, sweep_per_layer, sweep_s, sweep_s_auto, sweep_s_per_layer,
-    AbandonKind, AbandonMode, ColumnBest, GridPoint, SweepEngine, SweepOptions, SweepPoint,
-    SweepResult,
+    sweep_delta, sweep_grid, sweep_per_layer, sweep_progressive, sweep_s, sweep_s_auto,
+    sweep_s_per_layer, AbandonKind, AbandonMode, ColumnBest, GridPoint, ProgressiveSweep,
+    SweepEngine, SweepOptions, SweepPoint, SweepResult,
 };

@@ -78,7 +78,8 @@
 use super::metrics::{LayerReport, ModelReport, SweepStats};
 use super::pipeline::{self, CompressionSpec, LayerProbe, LayerStats};
 use crate::delta::encode::{encode_with_ctx, ParentCtx};
-use crate::model::{CompressedLayer, CompressedModel, DeltaModel, Model};
+use crate::delta::encode_progressive;
+use crate::model::{CompressedLayer, CompressedModel, DeltaModel, Model, ProgressiveModel};
 use crate::quant::{DominanceFrontier, ProbeBudget};
 use crate::util::par::WorkerPool;
 use crate::util::{fnv1a, Timer};
@@ -1313,6 +1314,105 @@ pub fn sweep_delta(
     eng.finish()
 }
 
+/// Everything `sweep --progressive` produces in one pass: the full
+/// sweep record plus the chained v4 container and the per-tier
+/// standalone containers it was chained from.
+#[derive(Debug)]
+pub struct ProgressiveSweep {
+    /// The underlying (S × λ) sweep — points, frontier, stats.
+    pub result: SweepResult,
+    /// The chained `.dcbc` v4 container. `materialize(&progressive, t)`
+    /// is byte-identical to `standalone[t]` for every tier t.
+    pub progressive: ProgressiveModel,
+    /// The standalone container at each tier, coarsest → finest
+    /// (`standalone[0]` is the base tier re-encoded as v2).
+    pub standalone: Vec<CompressedModel>,
+    /// The frontier grid point each tier was recompressed at, in tier
+    /// order.
+    pub tier_points: Vec<GridPoint>,
+    /// Per-refinement residual reports (`reports[t-1]` covers tier t).
+    pub reports: Vec<crate::delta::DeltaReport>,
+}
+
+/// Progressive sweep driver: run the coarse-to-fine (S × λ) surface
+/// search of [`sweep_s_auto`], pick up to `tiers` evenly spaced points
+/// along the resulting Pareto frontier (coarsest → finest: the
+/// smallest-container point anchors the base tier, the lowest-distortion
+/// point the finest), recompress each deterministically through the
+/// serial pipeline (verified against the sweep's per-point container
+/// fingerprint), and chain-encode them into one `.dcbc` v4 progressive
+/// container via the hoisted [`ParentCtx`] rescale path.
+///
+/// Duplicate frontier entries (identical container bytes) collapse to
+/// one tier, so the chain can come back shorter than `tiers` — every
+/// refinement tier is guaranteed to change the container. A frontier
+/// with a single unique point yields a 1-tier container (base only).
+pub fn sweep_progressive(
+    model: &Model,
+    opts: &SweepOptions,
+    base: &CompressionSpec,
+    tiers: usize,
+) -> Result<ProgressiveSweep> {
+    if tiers == 0 {
+        bail!("--tiers must be >= 1");
+    }
+    if tiers > crate::model::MAX_TIERS {
+        bail!(
+            "--tiers {tiers} exceeds the format limit of {} tiers per container",
+            crate::model::MAX_TIERS
+        );
+    }
+    let result = sweep_s_auto(model, opts, base)?;
+    // The frontier is sorted by bytes ascending (distortion then
+    // non-increasing), i.e. already coarsest → finest. Exact duplicates
+    // are all kept there; keep only the first of each container so no
+    // refinement tier is a no-op.
+    let mut picks: Vec<usize> = Vec::new();
+    let mut seen_hashes = BTreeSet::new();
+    for &i in &result.frontier {
+        if seen_hashes.insert(result.points[i].container_hash) {
+            picks.push(i);
+        }
+    }
+    if picks.is_empty() {
+        bail!("sweep produced no completed points to build tiers from");
+    }
+    // Up to `tiers` evenly spaced frontier points, always including the
+    // coarsest and finest ends. `tiers == 1` keeps the finest point:
+    // a single-tier container's only job is quality.
+    let chosen: Vec<usize> = if picks.len() <= tiers {
+        picks
+    } else if tiers == 1 {
+        vec![*picks.last().expect("picks is non-empty")]
+    } else {
+        let mut idxs: Vec<usize> = (0..tiers)
+            .map(|k| (k as f64 / (tiers - 1) as f64 * (picks.len() - 1) as f64).round() as usize)
+            .collect();
+        idxs.dedup();
+        idxs.into_iter().map(|k| picks[k]).collect()
+    };
+    let mut chain: Vec<CompressedModel> = Vec::with_capacity(chosen.len());
+    let mut tier_points: Vec<GridPoint> = Vec::with_capacity(chosen.len());
+    for &i in &chosen {
+        let p = &result.points[i];
+        let spec = CompressionSpec { s: p.s, lambda_scale: p.lambda_scale, ..*base };
+        let (c, _) = pipeline::compress_model(model, &spec, opts.workers.max(1));
+        let ser = c.serialize();
+        if fnv1a(&ser) != p.container_hash {
+            bail!(
+                "internal error: tier recompress at S={} λ={} does not match the sweep's \
+                 container fingerprint",
+                p.s,
+                p.lambda_scale
+            );
+        }
+        chain.push(c);
+        tier_points.push(GridPoint::new(p.s, p.lambda_scale));
+    }
+    let (progressive, reports) = encode_progressive(&chain, opts.workers.max(1))?;
+    Ok(ProgressiveSweep { result, progressive, standalone: chain, tier_points, reports })
+}
+
 /// Up to `per_round` evenly spaced unprobed integers strictly between
 /// the nearest probed neighbours of `best_s`. Empty when the bracket is
 /// exhausted (refinement converged).
@@ -1692,6 +1792,55 @@ mod tests {
             assert_eq!(col.probes, ss.len());
             assert_eq!(col.abandoned, 0);
         }
+    }
+
+    #[test]
+    fn progressive_sweep_chains_frontier_points() {
+        let model = super::super::pipeline::tests::toy_model_pub();
+        let base = CompressionSpec::default();
+        let opts = SweepOptions {
+            points: 5,
+            workers: 2,
+            lambdas: vec![0.0, 0.05, 1.0],
+            ..SweepOptions::default()
+        };
+        let ps = sweep_progressive(&model, &opts, &base, 3).unwrap();
+        assert!(!ps.standalone.is_empty() && ps.standalone.len() <= 3);
+        assert_eq!(ps.progressive.n_tiers(), ps.standalone.len());
+        assert_eq!(ps.tier_points.len(), ps.standalone.len());
+        assert_eq!(ps.reports.len(), ps.standalone.len() - 1);
+        // tiers run coarsest → finest along the frontier's byte axis
+        for w in ps.standalone.windows(2) {
+            assert!(w[0].serialize().len() <= w[1].serialize().len());
+        }
+        // the chained container materializes byte-identically to every
+        // standalone tier — the format's core invariant
+        for (t, c) in ps.standalone.iter().enumerate() {
+            let m = crate::delta::materialize(&ps.progressive, t, 1).unwrap();
+            assert_eq!(m.serialize(), c.serialize(), "tier {t}");
+        }
+        // wire round-trip
+        let bytes = ps.progressive.serialize();
+        match crate::model::deserialize_any(&bytes).unwrap() {
+            crate::model::Container::Progressive(p) => {
+                assert_eq!(p.n_tiers(), ps.progressive.n_tiers());
+            }
+            other => panic!("expected a progressive container, got {other:?}"),
+        }
+        // byte-identical at every worker count
+        let ps1 =
+            sweep_progressive(&model, &SweepOptions { workers: 1, ..opts.clone() }, &base, 3)
+                .unwrap();
+        assert_eq!(ps1.progressive.serialize(), bytes);
+        // --tiers 1 keeps the finest frontier point (quality anchor)
+        let one = sweep_progressive(&model, &opts, &base, 1).unwrap();
+        assert_eq!(one.progressive.n_tiers(), 1);
+        assert_eq!(
+            one.standalone[0].serialize(),
+            ps.standalone.last().unwrap().serialize()
+        );
+        assert!(sweep_progressive(&model, &opts, &base, 0).is_err());
+        assert!(sweep_progressive(&model, &opts, &base, 65).is_err());
     }
 
     #[test]

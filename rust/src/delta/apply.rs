@@ -10,10 +10,14 @@
 //! from `L_target` with the same codec config and chunk split, so the
 //! output container is **byte-for-byte** the target the delta was
 //! encoded from (`delta_roundtrip_is_byte_exact`).
+//!
+//! The per-layer apply rule lives in [`crate::delta::residual`], shared
+//! with v4 progressive materialization; this module owns the v3 segment
+//! checks (parent fingerprint) and the streaming applier.
 
-use crate::delta::encode::{encode_with_splits, grid_reconstruct, parent_levels_on};
+use crate::delta::residual::{apply_layers, grid_reconstruct, parent_levels_on};
 use crate::model::container::fingerprint;
-use crate::model::{CompressedLayer, CompressedModel, DeltaLayer, DeltaModel};
+use crate::model::{CompressedModel, DeltaModel};
 use crate::serve::stream::{DecodedLayer, StreamDecoder, StreamEvent};
 use anyhow::{bail, Result};
 
@@ -37,80 +41,7 @@ pub fn apply(
             fp
         );
     }
-    if parent.layers.len() != delta.layers.len() {
-        bail!(
-            "delta apply: parent has {} layers, delta {}",
-            parent.layers.len(),
-            delta.layers.len()
-        );
-    }
-    let mut layers = Vec::with_capacity(delta.layers.len());
-    for (pl, dl) in parent.layers.iter().zip(&delta.layers) {
-        if pl.name != dl.name() {
-            bail!(
-                "delta apply: layer name mismatch ({:?} vs {:?})",
-                pl.name,
-                dl.name()
-            );
-        }
-        match dl {
-            DeltaLayer::Skipped(_) => layers.push(pl.clone()),
-            DeltaLayer::Coded(d) => layers.push(apply_layer(pl, d, workers)?),
-        }
-    }
-    Ok(CompressedModel { name: delta.name.clone(), layers })
-}
-
-/// Apply one coded delta layer against its parent layer.
-fn apply_layer(
-    pl: &CompressedLayer,
-    d: &CompressedLayer,
-    workers: usize,
-) -> Result<CompressedLayer> {
-    if pl.n_weights != d.n_weights {
-        bail!(
-            "delta apply: layer {:?} weight count mismatch ({} vs {})",
-            d.name,
-            pl.n_weights,
-            d.n_weights
-        );
-    }
-    let residual = d.decode_levels_with(workers);
-    if residual.len() != d.n_weights {
-        bail!("delta apply: layer {:?} residual decodes short", d.name);
-    }
-    let target = target_levels(pl, d, &residual, workers)?;
-    let splits: Vec<usize> = d.chunk_spans().iter().map(|s| s.n_weights).collect();
-    let (payload, chunks) = encode_with_splits(&target, d.cfg, &splits);
-    Ok(CompressedLayer {
-        name: d.name.clone(),
-        dims: d.dims.clone(),
-        grid: d.grid,
-        s_param: d.s_param,
-        cfg: d.cfg,
-        n_weights: d.n_weights,
-        payload,
-        chunks,
-        bias: d.bias.clone(),
-    })
-}
-
-/// `L_target = P + R` with overflow checked (a hostile delta can code
-/// arbitrary residual magnitudes).
-fn target_levels(
-    pl: &CompressedLayer,
-    d: &CompressedLayer,
-    residual: &[i32],
-    workers: usize,
-) -> Result<Vec<i32>> {
-    let p = parent_levels_on(pl, &d.grid, workers);
-    let mut target = Vec::with_capacity(residual.len());
-    for (&q, &r) in p.iter().zip(residual) {
-        let t = i32::try_from(q as i64 + r as i64)
-            .map_err(|_| anyhow::anyhow!("level overflow applying layer {:?}", d.name))?;
-        target.push(t);
-    }
-    Ok(target)
+    apply_layers(parent, &delta.layers, &delta.name, workers)
 }
 
 /// Incremental delta application on top of [`StreamDecoder`]: feed the
@@ -176,7 +107,9 @@ impl<'a> StreamApplier<'a> {
                     self.started = true;
                 }
                 StreamEvent::Layer(l) => out.push(self.apply_streamed(*l)?),
-                StreamEvent::Chunk { .. } | StreamEvent::End => {}
+                // Tier events only occur in v4 streams, which the Start
+                // version check above already rejected
+                StreamEvent::Chunk { .. } | StreamEvent::Tier { .. } | StreamEvent::End => {}
             }
         }
         Ok(out)
@@ -244,7 +177,8 @@ mod tests {
     use super::*;
     use crate::codec::CodecConfig;
     use crate::delta::encode::encode;
-    use crate::model::DeltaLayer;
+    use crate::delta::residual::encode_with_splits;
+    use crate::model::{CompressedLayer, DeltaLayer};
     use crate::quant::QuantGrid;
     use crate::util::SplitMix64;
 

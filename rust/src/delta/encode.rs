@@ -9,108 +9,32 @@
 //! config and chunk split. Where a sparse update left weights untouched,
 //! `L_target = P` and `R = 0` — the significance-flag contexts then code
 //! the residual at a small fraction of the full container's rate.
+//!
+//! The per-layer residual machinery lives in [`crate::delta::residual`],
+//! shared with v4 progressive tier refinement
+//! ([`crate::delta::progressive`]); this module owns only the v3
+//! segment framing (parent fingerprint, [`DeltaModel`]).
+//!
+//! [`QuantGrid::nearest_level`]: crate::quant::QuantGrid::nearest_level
 
 use crate::coordinator::pipeline::{compress_model, CompressionSpec};
+use crate::delta::residual::{diff_model_layers, grid_reconstruct};
 use crate::model::container::fingerprint;
-use crate::model::{
-    ChunkInfo, CompressedLayer, CompressedModel, DeltaLayer, DeltaModel, Model,
-};
-use crate::quant::QuantGrid;
-use anyhow::{bail, Result};
+use crate::model::{CompressedModel, DeltaModel, Model};
+use anyhow::Result;
 
-/// Per-layer accounting for reports and `BENCH_delta.json`.
-#[derive(Debug, Clone)]
-pub struct DeltaLayerReport {
-    pub name: String,
-    pub skipped: bool,
-    /// Non-zero residual levels (0 for skipped layers).
-    pub residual_nonzero: usize,
-    pub n_weights: usize,
-    /// Residual CABAC payload bytes (0 for skipped layers).
-    pub delta_payload: usize,
-    /// The target layer's payload bytes, for the ratio.
-    pub target_payload: usize,
-}
-
-/// Encoder-side accounting returned alongside the [`DeltaModel`].
-#[derive(Debug, Clone, Default)]
-pub struct DeltaReport {
-    pub layers: Vec<DeltaLayerReport>,
-}
-
-impl DeltaReport {
-    /// Residual density across coded layers: non-zero residual levels
-    /// over total weights.
-    pub fn residual_density(&self) -> f64 {
-        let nz: usize = self.layers.iter().map(|l| l.residual_nonzero).sum();
-        let n: usize = self.layers.iter().map(|l| l.n_weights).sum();
-        nz as f64 / n.max(1) as f64
-    }
-}
-
-/// Two compressed layers are identical in every serialized field.
-fn layers_equal(a: &CompressedLayer, b: &CompressedLayer) -> bool {
-    a.name == b.name
-        && a.dims == b.dims
-        && a.grid.delta.to_bits() == b.grid.delta.to_bits()
-        && a.grid.max_level == b.grid.max_level
-        && a.s_param == b.s_param
-        && a.cfg == b.cfg
-        && a.n_weights == b.n_weights
-        && a.payload == b.payload
-        && a.chunks == b.chunks
-        && a.bias.len() == b.bias.len()
-        && a.bias.iter().zip(&b.bias).all(|(x, y)| x.to_bits() == y.to_bits())
-}
-
-/// Quantize a parent layer's reconstruction onto `grid` — the `P` of the
-/// apply rule. Total and deterministic on any input (saturating casts;
-/// non-finite quotients quantize to 0 via `round`/`clamp`).
-pub(crate) fn parent_levels_on(
-    parent: &CompressedLayer,
-    grid: &QuantGrid,
-    workers: usize,
-) -> Vec<i32> {
-    let wp = grid_reconstruct(parent, workers);
-    wp.iter().map(|&w| grid.nearest_level(w)).collect()
-}
-
-/// The parent layer's reconstructed weights (levels × Δ), decoded with an
-/// explicit worker cap so callers stay deterministic across parallelism.
-pub(crate) fn grid_reconstruct(parent: &CompressedLayer, workers: usize) -> Vec<f32> {
-    parent.grid.dequantize(&parent.decode_levels_with(workers))
-}
-
-/// Encode `levels` into chunk streams matching `splits` (per-chunk level
-/// counts). A single split yields the canonical monolithic form.
-pub(crate) fn encode_with_splits(
-    levels: &[i32],
-    cfg: crate::codec::CodecConfig,
-    splits: &[usize],
-) -> (Vec<u8>, Vec<ChunkInfo>) {
-    if splits.len() <= 1 {
-        return (crate::codec::encode_levels(levels, cfg), Vec::new());
-    }
-    let mut payload = Vec::new();
-    let mut chunks = Vec::with_capacity(splits.len());
-    let mut off = 0usize;
-    for &n in splits {
-        let bytes = crate::codec::encode_levels(&levels[off..off + n], cfg);
-        chunks.push(ChunkInfo { n_weights: n, bytes: bytes.len() });
-        payload.extend_from_slice(&bytes);
-        off += n;
-    }
-    (payload, chunks)
-}
+pub use crate::delta::residual::{DeltaLayerReport, DeltaReport};
 
 /// Parent-side state hoisted out of repeated [`encode`] calls against
 /// one base — the delta-aware sweep encodes a delta per completed grid
 /// point, and the parent's CABAC decode + fingerprint never change.
+/// The progressive encoder reuses it per tier, chaining each tier's
+/// output as the next tier's parent.
 pub struct ParentCtx {
     pub parent: CompressedModel,
     pub fp: u64,
     /// Per-layer reconstruction (levels × Δ), decoded once.
-    recon: Vec<Vec<f32>>,
+    pub(crate) recon: Vec<Vec<f32>>,
 }
 
 impl ParentCtx {
@@ -142,79 +66,7 @@ pub fn encode_with_ctx(
     target: &CompressedModel,
     workers: usize,
 ) -> Result<(DeltaModel, DeltaReport)> {
-    let parent = &ctx.parent;
-    if parent.layers.len() != target.layers.len() {
-        bail!(
-            "delta encode: parent has {} layers, target {}",
-            parent.layers.len(),
-            target.layers.len()
-        );
-    }
-    let mut layers = Vec::with_capacity(target.layers.len());
-    let mut report = DeltaReport::default();
-    for ((pl, tl), wp) in parent.layers.iter().zip(&target.layers).zip(&ctx.recon) {
-        if pl.name != tl.name {
-            bail!("delta encode: layer name mismatch ({:?} vs {:?})", pl.name, tl.name);
-        }
-        if layers_equal(pl, tl) {
-            report.layers.push(DeltaLayerReport {
-                name: tl.name.clone(),
-                skipped: true,
-                residual_nonzero: 0,
-                n_weights: tl.n_weights,
-                delta_payload: 0,
-                target_payload: tl.payload.len(),
-            });
-            layers.push(DeltaLayer::Skipped(tl.name.clone()));
-            continue;
-        }
-        if pl.n_weights != tl.n_weights {
-            bail!(
-                "delta encode: layer {:?} weight count changed ({} vs {}) — \
-                 deltas require a matching architecture",
-                tl.name,
-                pl.n_weights,
-                tl.n_weights
-            );
-        }
-        let p: Vec<i32> = wp.iter().map(|&w| tl.grid.nearest_level(w)).collect();
-        let lt = tl.decode_levels_with(workers);
-        if lt.len() != tl.n_weights {
-            bail!("delta encode: target layer {:?} payload decodes short", tl.name);
-        }
-        let mut residual = Vec::with_capacity(lt.len());
-        let mut nonzero = 0usize;
-        for (&t, &q) in lt.iter().zip(&p) {
-            let r = t as i64 - q as i64;
-            let r = i32::try_from(r)
-                .map_err(|_| anyhow::anyhow!("residual overflow in layer {:?}", tl.name))?;
-            if r != 0 {
-                nonzero += 1;
-            }
-            residual.push(r);
-        }
-        let splits: Vec<usize> = tl.chunk_spans().iter().map(|s| s.n_weights).collect();
-        let (payload, chunks) = encode_with_splits(&residual, tl.cfg, &splits);
-        report.layers.push(DeltaLayerReport {
-            name: tl.name.clone(),
-            skipped: false,
-            residual_nonzero: nonzero,
-            n_weights: tl.n_weights,
-            delta_payload: payload.len(),
-            target_payload: tl.payload.len(),
-        });
-        layers.push(DeltaLayer::Coded(CompressedLayer {
-            name: tl.name.clone(),
-            dims: tl.dims.clone(),
-            grid: tl.grid,
-            s_param: tl.s_param,
-            cfg: tl.cfg,
-            n_weights: tl.n_weights,
-            payload,
-            chunks,
-            bias: tl.bias.clone(),
-        }));
-    }
+    let (layers, report) = diff_model_layers(&ctx.parent, &ctx.recon, target, workers)?;
     Ok((
         DeltaModel { parent_fp: ctx.fp, name: target.name.clone(), layers },
         report,

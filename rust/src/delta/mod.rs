@@ -23,9 +23,17 @@
 //!   the standard pipeline) and then diffs — the entry point the
 //!   delta-aware sweep (`coordinator::sweep::sweep_delta`) and the
 //!   federated example build on.
+//! * [`progressive`] applies the same residual algebra *within* one
+//!   file: a `.dcbc` v4 progressive container chains quality tiers so
+//!   that [`materialize`]`(p, t)` is byte-identical to the standalone
+//!   container at tier t. The per-layer codec core both schemes share
+//!   lives in [`residual`].
 
 pub mod apply;
 pub mod encode;
+pub mod progressive;
+pub(crate) mod residual;
 
 pub use apply::{apply, StreamApplier};
 pub use encode::{encode, encode_from_model, encode_with_ctx, DeltaReport, ParentCtx};
+pub use progressive::{encode_progressive, materialize, ProgressiveApplier, TierSnapshot};

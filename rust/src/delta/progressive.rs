@@ -1,0 +1,403 @@
+//! Progressive (v4) encoding and materialization, built on the shared
+//! residual core ([`crate::delta::residual`]).
+//!
+//! A progressive container is a chain of standalone containers for one
+//! model, coarsest first: tier 0 is stored whole (v2 layer layout) and
+//! every tier t ≥ 1 stores only the residual of its levels against the
+//! previous tier's reconstruction, using the v3 delta algebra with
+//! *positional* parenthood (the parent is the previous tier of the same
+//! file, so no fingerprint is carried). The normative invariant
+//! (`docs/FORMAT.md` §"Progressive tiers"):
+//! [`materialize`]`(p, t)` is **byte-identical** to the standalone
+//! container the encoder was given for tier t.
+
+use crate::delta::encode::ParentCtx;
+use crate::delta::residual::{apply_layers, diff_model_layers, DeltaReport};
+use crate::model::container::{MAX_TIERS, VERSION_PROGRESSIVE};
+use crate::model::{CompressedModel, ProgressiveModel};
+use crate::serve::stream::{DecodedLayer, StreamDecoder, StreamEvent};
+use anyhow::{bail, Context, Result};
+
+/// Chain-encode a sequence of standalone containers (coarsest first)
+/// into one progressive container. `chain[0]` becomes the base tier;
+/// every later container must share the model name and architecture
+/// (same layer count, names, weight counts). Returns the container and
+/// one encoder report per refinement tier.
+pub fn encode_progressive(
+    chain: &[CompressedModel],
+    workers: usize,
+) -> Result<(ProgressiveModel, Vec<DeltaReport>)> {
+    let Some(first) = chain.first() else {
+        bail!("progressive encode: empty tier chain");
+    };
+    if chain.len() > MAX_TIERS {
+        bail!(
+            "progressive encode: {} tiers exceeds MAX_TIERS ({MAX_TIERS})",
+            chain.len()
+        );
+    }
+    let mut refinements = Vec::with_capacity(chain.len() - 1);
+    let mut reports = Vec::with_capacity(chain.len() - 1);
+    let mut ctx = ParentCtx::new(first.clone(), workers);
+    for (t, target) in chain.iter().enumerate().skip(1) {
+        if target.name != first.name {
+            bail!(
+                "progressive encode: tier {t} is model {:?}, base is {:?}",
+                target.name,
+                first.name
+            );
+        }
+        let (layers, report) = diff_model_layers(&ctx.parent, &ctx.recon, target, workers)
+            .with_context(|| format!("progressive encode: refinement tier {t}"))?;
+        refinements.push(layers);
+        reports.push(report);
+        if t + 1 < chain.len() {
+            ctx = ParentCtx::new(target.clone(), workers);
+        }
+    }
+    Ok((
+        ProgressiveModel {
+            name: first.name.clone(),
+            base: first.layers.clone(),
+            refinements,
+        },
+        reports,
+    ))
+}
+
+/// Materialize the standalone container at `tier`: tier 0 is the base
+/// verbatim; each refinement 1..=t applies on top of the previous
+/// tier's result with the v3 apply rule. Byte-identical to the
+/// container the refinement was encoded from, at every worker count.
+pub fn materialize(
+    p: &ProgressiveModel,
+    tier: usize,
+    workers: usize,
+) -> Result<CompressedModel> {
+    if tier >= p.n_tiers() {
+        bail!(
+            "tier {tier} out of range: progressive container has {} tiers",
+            p.n_tiers()
+        );
+    }
+    let mut cur = CompressedModel { name: p.name.clone(), layers: p.base.clone() };
+    for (t, refinement) in p.refinements[..tier].iter().enumerate() {
+        cur = apply_layers(&cur, refinement, &p.name, workers)
+            .with_context(|| format!("materializing refinement tier {}", t + 1))?;
+    }
+    Ok(cur)
+}
+
+/// A usable model at a tier boundary: the fully refined state of every
+/// layer after tiers `0..=tier` have been applied.
+#[derive(Debug, Clone)]
+pub struct TierSnapshot {
+    pub tier: usize,
+    pub n_tiers: usize,
+    pub layers: Vec<DecodedLayer>,
+}
+
+/// Incremental progressive application on top of [`StreamDecoder`]:
+/// feed v4 container bytes as they arrive and receive a usable model
+/// ([`TierSnapshot`]) at **every tier boundary** — the base tier the
+/// moment its last layer lands, then each refinement applied in place.
+/// The engine behind `deepcabac fetch --tier`.
+///
+/// Emitted snapshots carry target levels and weights (residuals already
+/// applied), mirroring [`crate::delta::StreamApplier`]; byte-exact
+/// container materialization is the batch path ([`materialize`]).
+pub struct ProgressiveApplier {
+    workers: usize,
+    dec: StreamDecoder,
+    started: bool,
+    /// Tier currently being filled (0 = base).
+    tier: usize,
+    /// Materialized per-layer state, updated in place by refinements.
+    layers: Vec<DecodedLayer>,
+}
+
+impl ProgressiveApplier {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers,
+            dec: StreamDecoder::new(),
+            started: false,
+            tier: 0,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Feed a slice of container bytes; returns a snapshot for every
+    /// tier those bytes completed (possibly none). Errors are terminal.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Vec<TierSnapshot>> {
+        let events = self.dec.feed(bytes)?;
+        let mut out = Vec::new();
+        for ev in events {
+            match ev {
+                StreamEvent::Start { version, .. } => {
+                    if version != VERSION_PROGRESSIVE {
+                        bail!(
+                            "progressive apply: container is version {version}, \
+                             not progressive — fetch it without --tier"
+                        );
+                    }
+                    self.started = true;
+                }
+                StreamEvent::Layer(l) => self.absorb(*l)?,
+                StreamEvent::Tier { tier, n_tiers } => {
+                    out.push(TierSnapshot {
+                        tier,
+                        n_tiers,
+                        layers: self.layers.clone(),
+                    });
+                    self.tier = tier + 1;
+                }
+                StreamEvent::Chunk { .. } | StreamEvent::End => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Verify the stream ended at a tier boundary (or the declared end)
+    /// with no trailing bytes. Returns the number of complete tiers.
+    /// Call after the last `feed`.
+    pub fn finish(&self) -> Result<usize> {
+        self.dec.finish()?;
+        if !self.started {
+            bail!("progressive apply: empty stream");
+        }
+        Ok(self.tier)
+    }
+
+    fn absorb(&mut self, l: DecodedLayer) -> Result<()> {
+        if self.tier == 0 {
+            // base tier: layers arrive fully coded
+            self.layers.push(l);
+            return Ok(());
+        }
+        let cur = match self.layers.get_mut(l.index) {
+            Some(cur) => cur,
+            None => bail!("progressive apply: refinement has more layers than base"),
+        };
+        if cur.name != l.name {
+            bail!(
+                "progressive apply: layer name mismatch ({:?} vs {:?})",
+                cur.name,
+                l.name
+            );
+        }
+        if l.skipped {
+            // carried over: previous tier's layer stays current
+            return Ok(());
+        }
+        if cur.n_weights != l.n_weights {
+            bail!(
+                "progressive apply: layer {:?} weight count mismatch ({} vs {})",
+                l.name,
+                cur.n_weights,
+                l.n_weights
+            );
+        }
+        // rescale rule: quantize the previous tier's reconstruction onto
+        // the finer grid, then L = P + R
+        let mut levels = Vec::with_capacity(l.levels.len());
+        for (&w, &r) in cur.weights.iter().zip(&l.levels) {
+            let q = l.grid.nearest_level(w);
+            let t = i32::try_from(q as i64 + r as i64).map_err(|_| {
+                anyhow::anyhow!("level overflow applying layer {:?}", l.name)
+            })?;
+            levels.push(t);
+        }
+        let weights = l.grid.dequantize(&levels);
+        *cur = DecodedLayer { levels, weights, skipped: false, ..l };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecConfig;
+    use crate::model::{CompressedLayer, Container};
+    use crate::quant::QuantGrid;
+    use crate::util::SplitMix64;
+
+    /// Quantize one weight vector onto `grid`, producing the standalone
+    /// layer a sweep point would emit (optionally chunked).
+    fn layer_at(name: &str, w: &[f32], grid: QuantGrid, n_chunks: usize) -> CompressedLayer {
+        let cfg = CodecConfig::default();
+        let levels: Vec<i32> = w.iter().map(|&x| grid.nearest_level(x)).collect();
+        let splits: Vec<usize> = if n_chunks <= 1 {
+            vec![levels.len()]
+        } else {
+            let per = (levels.len() + n_chunks - 1) / n_chunks;
+            levels.chunks(per.max(1)).map(|c| c.len()).collect()
+        };
+        let (payload, chunks) =
+            crate::delta::residual::encode_with_splits(&levels, cfg, &splits);
+        CompressedLayer {
+            name: name.into(),
+            dims: vec![w.len().max(1)],
+            grid,
+            s_param: 40,
+            cfg,
+            n_weights: w.len(),
+            payload,
+            chunks,
+            bias: vec![0.25, -0.75],
+        }
+    }
+
+    /// A chain of standalone containers at coarse → fine grids over the
+    /// same weights, as `sweep --progressive` would pick off the
+    /// frontier. The second layer's grid never changes, so refinement
+    /// tiers should skip it.
+    fn tier_chain(seed: u64, n_chunks: usize) -> Vec<CompressedModel> {
+        let mut rng = SplitMix64::new(seed);
+        let w_a: Vec<f32> =
+            (0..500).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let w_b: Vec<f32> =
+            (0..203).map(|_| (rng.next_f64() * 0.5 - 0.25) as f32).collect();
+        let grids = [
+            QuantGrid { delta: 0.25, max_level: 4 },
+            QuantGrid { delta: 0.125, max_level: 8 },
+            QuantGrid { delta: 0.0625, max_level: 16 },
+        ];
+        let fixed = QuantGrid { delta: 0.125, max_level: 2 };
+        grids
+            .iter()
+            .map(|&g| CompressedModel {
+                name: "prog".into(),
+                layers: vec![
+                    layer_at("conv1", &w_a, g, n_chunks),
+                    layer_at("fc", &w_b, fixed, 1),
+                ],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn materialize_is_byte_identical_to_standalone_tiers() {
+        // the core v4 acceptance criterion: for every tier t,
+        // materialize(base, R_1..R_t) == the standalone container at
+        // tier t, byte for byte, across worker counts on both sides
+        for (seed, n_chunks) in [(7u64, 1usize), (8, 3)] {
+            let chain = tier_chain(seed, n_chunks);
+            let (prog, reports) = encode_progressive(&chain, 1).unwrap();
+            assert_eq!(prog.n_tiers(), 3);
+            assert_eq!(reports.len(), 2);
+            // the unchanged fc layer became a skip record in every tier
+            for r in &prog.refinements {
+                assert!(matches!(r[1], crate::model::DeltaLayer::Skipped(_)));
+            }
+            // survive the v4 wire round trip first
+            let bytes = prog.serialize();
+            let prog = match crate::model::deserialize_any(&bytes).unwrap() {
+                Container::Progressive(p) => p,
+                other => panic!("expected progressive, got {other:?}"),
+            };
+            for (t, standalone) in chain.iter().enumerate() {
+                let want = standalone.serialize();
+                for workers in [1usize, 2, 4] {
+                    let got = materialize(&prog, t, workers).unwrap();
+                    assert_eq!(
+                        got.serialize(),
+                        want,
+                        "seed={seed} chunks={n_chunks} tier={t} workers={workers}"
+                    );
+                }
+            }
+            // encoding with more workers produces the same container bytes
+            let (prog_par, _) = encode_progressive(&chain, 4).unwrap();
+            assert_eq!(prog_par.serialize(), bytes);
+        }
+    }
+
+    #[test]
+    fn materialize_rejects_out_of_range_tier() {
+        let chain = tier_chain(9, 1);
+        let (prog, _) = encode_progressive(&chain, 1).unwrap();
+        let err = materialize(&prog, 3, 1).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("3 tiers"), "{err}");
+    }
+
+    #[test]
+    fn encode_rejects_mismatched_chains() {
+        let err = encode_progressive(&[], 1).unwrap_err().to_string();
+        assert!(err.contains("empty tier chain"), "{err}");
+
+        let mut chain = tier_chain(10, 1);
+        chain[1].name = "other".into();
+        let err = encode_progressive(&chain, 1).unwrap_err().to_string();
+        assert!(err.contains("model"), "{err}");
+
+        let mut chain = tier_chain(11, 1);
+        chain[2].layers.pop();
+        let err = encode_progressive(&chain, 1).unwrap_err().to_string();
+        assert!(err.contains("layers"), "{err}");
+    }
+
+    #[test]
+    fn streaming_applier_matches_batch_materialize_at_any_granularity() {
+        let chain = tier_chain(12, 3);
+        let (prog, _) = encode_progressive(&chain, 1).unwrap();
+        let bytes = prog.serialize();
+        // batch reference: materialized weights at each tier
+        let batch: Vec<CompressedModel> =
+            (0..3).map(|t| materialize(&prog, t, 1).unwrap()).collect();
+
+        for split in [1usize, 7, 64, bytes.len()] {
+            let mut applier = ProgressiveApplier::new(2);
+            let mut snaps = Vec::new();
+            for chunk in bytes.chunks(split) {
+                snaps.extend(applier.feed(chunk).unwrap());
+            }
+            assert_eq!(applier.finish().unwrap(), 3, "split={split}");
+            assert_eq!(snaps.len(), 3, "split={split}");
+            for (snap, want) in snaps.iter().zip(&batch) {
+                assert_eq!(snap.n_tiers, 3);
+                assert_eq!(snap.layers.len(), want.layers.len());
+                for (sl, wl) in snap.layers.iter().zip(&want.layers) {
+                    assert_eq!(sl.name, wl.name);
+                    assert_eq!(
+                        sl.levels,
+                        wl.decode_levels_with(1),
+                        "split={split} tier={} layer={}",
+                        snap.tier,
+                        wl.name
+                    );
+                    assert_eq!(sl.weights, wl.decode_weights());
+                    assert_eq!(sl.bias, wl.bias);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_applier_accepts_truncation_at_tier_boundary() {
+        let chain = tier_chain(13, 1);
+        let (prog, _) = encode_progressive(&chain, 1).unwrap();
+        let bytes = prog.serialize();
+        let lens = prog.tier_body_lens();
+        let prelude = bytes.len() - lens.iter().sum::<usize>();
+        // cut after tier 1's body: two usable tiers, clean finish
+        let cut = prelude + lens[0] + lens[1];
+        let mut applier = ProgressiveApplier::new(1);
+        let snaps = applier.feed(&bytes[..cut]).unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(applier.finish().unwrap(), 2);
+        // mid-tier cut: feed succeeds (waiting for more) but finish fails
+        let mut applier = ProgressiveApplier::new(1);
+        applier.feed(&bytes[..cut + 1]).unwrap();
+        assert!(applier.finish().is_err());
+    }
+
+    #[test]
+    fn applier_rejects_non_progressive_containers() {
+        let chain = tier_chain(14, 1);
+        let mut applier = ProgressiveApplier::new(1);
+        let err = applier.feed(&chain[0].serialize()).unwrap_err().to_string();
+        assert!(err.contains("not progressive"), "{err}");
+    }
+}

@@ -1,0 +1,297 @@
+//! The residual codec core: one implementation of level-space residual
+//! coding shared by cross-file v3 delta segments (`delta/encode.rs`,
+//! `delta/apply.rs`) and intra-file v4 progressive tier refinement
+//! (`delta/progressive.rs`).
+//!
+//! Both schemes are the same algebra (`docs/FORMAT.md` §"Delta
+//! segments" / §"Progressive tiers"): quantize the parent
+//! reconstruction onto the target grid
+//! (`P_i = clamp(round(wp_i/Δ), ±max_level)`), code `R = L_target − P`
+//! with the target's codec config and chunk split, apply with
+//! `L_target = P + R` re-encoded the same way — which makes the round
+//! trip byte-exact because CABAC encoding is deterministic. What
+//! differs is only the framing: a v3 segment names its parent by
+//! fingerprint across files, a v4 refinement tier's parent is the
+//! previous tier of the same file.
+
+use crate::model::{ChunkInfo, CompressedLayer, CompressedModel, DeltaLayer};
+use crate::quant::QuantGrid;
+use anyhow::{bail, Result};
+
+/// Per-layer accounting for reports and `BENCH_delta.json` /
+/// `BENCH_progressive.json`.
+#[derive(Debug, Clone)]
+pub struct DeltaLayerReport {
+    pub name: String,
+    pub skipped: bool,
+    /// Non-zero residual levels (0 for skipped layers).
+    pub residual_nonzero: usize,
+    pub n_weights: usize,
+    /// Residual CABAC payload bytes (0 for skipped layers).
+    pub delta_payload: usize,
+    /// The target layer's payload bytes, for the ratio.
+    pub target_payload: usize,
+}
+
+/// Encoder-side accounting returned alongside a coded residual model.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaReport {
+    pub layers: Vec<DeltaLayerReport>,
+}
+
+impl DeltaReport {
+    /// Residual density across coded layers: non-zero residual levels
+    /// over total weights.
+    pub fn residual_density(&self) -> f64 {
+        let nz: usize = self.layers.iter().map(|l| l.residual_nonzero).sum();
+        let n: usize = self.layers.iter().map(|l| l.n_weights).sum();
+        nz as f64 / n.max(1) as f64
+    }
+}
+
+/// Two compressed layers are identical in every serialized field.
+pub(crate) fn layers_equal(a: &CompressedLayer, b: &CompressedLayer) -> bool {
+    a.name == b.name
+        && a.dims == b.dims
+        && a.grid.delta.to_bits() == b.grid.delta.to_bits()
+        && a.grid.max_level == b.grid.max_level
+        && a.s_param == b.s_param
+        && a.cfg == b.cfg
+        && a.n_weights == b.n_weights
+        && a.payload == b.payload
+        && a.chunks == b.chunks
+        && a.bias.len() == b.bias.len()
+        && a.bias.iter().zip(&b.bias).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Quantize a parent layer's reconstruction onto `grid` — the `P` of the
+/// apply rule. Total and deterministic on any input (saturating casts;
+/// non-finite quotients quantize to 0 via `round`/`clamp`).
+pub(crate) fn parent_levels_on(
+    parent: &CompressedLayer,
+    grid: &QuantGrid,
+    workers: usize,
+) -> Vec<i32> {
+    let wp = grid_reconstruct(parent, workers);
+    wp.iter().map(|&w| grid.nearest_level(w)).collect()
+}
+
+/// The parent layer's reconstructed weights (levels × Δ), decoded with an
+/// explicit worker cap so callers stay deterministic across parallelism.
+pub(crate) fn grid_reconstruct(parent: &CompressedLayer, workers: usize) -> Vec<f32> {
+    parent.grid.dequantize(&parent.decode_levels_with(workers))
+}
+
+/// Encode `levels` into chunk streams matching `splits` (per-chunk level
+/// counts). A single split yields the canonical monolithic form.
+pub(crate) fn encode_with_splits(
+    levels: &[i32],
+    cfg: crate::codec::CodecConfig,
+    splits: &[usize],
+) -> (Vec<u8>, Vec<ChunkInfo>) {
+    if splits.len() <= 1 {
+        return (crate::codec::encode_levels(levels, cfg), Vec::new());
+    }
+    let mut payload = Vec::new();
+    let mut chunks = Vec::with_capacity(splits.len());
+    let mut off = 0usize;
+    for &n in splits {
+        let bytes = crate::codec::encode_levels(&levels[off..off + n], cfg);
+        chunks.push(ChunkInfo { n_weights: n, bytes: bytes.len() });
+        payload.extend_from_slice(&bytes);
+        off += n;
+    }
+    (payload, chunks)
+}
+
+/// Residual-code one target layer against the parent reconstruction
+/// `wp` (the parent layer's dequantized weights). Returns the coded
+/// residual layer (target header fields, residual payload) and the
+/// number of non-zero residual levels.
+pub(crate) fn diff_layer(
+    wp: &[f32],
+    tl: &CompressedLayer,
+    workers: usize,
+) -> Result<(CompressedLayer, usize)> {
+    let p: Vec<i32> = wp.iter().map(|&w| tl.grid.nearest_level(w)).collect();
+    let lt = tl.decode_levels_with(workers);
+    if lt.len() != tl.n_weights {
+        bail!("residual encode: target layer {:?} payload decodes short", tl.name);
+    }
+    let mut residual = Vec::with_capacity(lt.len());
+    let mut nonzero = 0usize;
+    for (&t, &q) in lt.iter().zip(&p) {
+        let r = t as i64 - q as i64;
+        let r = i32::try_from(r)
+            .map_err(|_| anyhow::anyhow!("residual overflow in layer {:?}", tl.name))?;
+        if r != 0 {
+            nonzero += 1;
+        }
+        residual.push(r);
+    }
+    let splits: Vec<usize> = tl.chunk_spans().iter().map(|s| s.n_weights).collect();
+    let (payload, chunks) = encode_with_splits(&residual, tl.cfg, &splits);
+    Ok((
+        CompressedLayer {
+            name: tl.name.clone(),
+            dims: tl.dims.clone(),
+            grid: tl.grid,
+            s_param: tl.s_param,
+            cfg: tl.cfg,
+            n_weights: tl.n_weights,
+            payload,
+            chunks,
+            bias: tl.bias.clone(),
+        },
+        nonzero,
+    ))
+}
+
+/// Residual-code every layer of `target` against `parent` (with the
+/// parent reconstruction `recon` supplied, decoded once by the caller).
+/// Byte-identical layers become skip records. This is the per-model
+/// core both `delta::encode_with_ctx` (v3 segments) and
+/// `delta::progressive::encode_progressive` (v4 tiers) wrap.
+pub(crate) fn diff_model_layers(
+    parent: &CompressedModel,
+    recon: &[Vec<f32>],
+    target: &CompressedModel,
+    workers: usize,
+) -> Result<(Vec<DeltaLayer>, DeltaReport)> {
+    if parent.layers.len() != target.layers.len() {
+        bail!(
+            "delta encode: parent has {} layers, target {}",
+            parent.layers.len(),
+            target.layers.len()
+        );
+    }
+    let mut layers = Vec::with_capacity(target.layers.len());
+    let mut report = DeltaReport::default();
+    for ((pl, tl), wp) in parent.layers.iter().zip(&target.layers).zip(recon) {
+        if pl.name != tl.name {
+            bail!("delta encode: layer name mismatch ({:?} vs {:?})", pl.name, tl.name);
+        }
+        if layers_equal(pl, tl) {
+            report.layers.push(DeltaLayerReport {
+                name: tl.name.clone(),
+                skipped: true,
+                residual_nonzero: 0,
+                n_weights: tl.n_weights,
+                delta_payload: 0,
+                target_payload: tl.payload.len(),
+            });
+            layers.push(DeltaLayer::Skipped(tl.name.clone()));
+            continue;
+        }
+        if pl.n_weights != tl.n_weights {
+            bail!(
+                "delta encode: layer {:?} weight count changed ({} vs {}) — \
+                 deltas require a matching architecture",
+                tl.name,
+                pl.n_weights,
+                tl.n_weights
+            );
+        }
+        let (coded, nonzero) = diff_layer(wp, tl, workers)?;
+        report.layers.push(DeltaLayerReport {
+            name: tl.name.clone(),
+            skipped: false,
+            residual_nonzero: nonzero,
+            n_weights: tl.n_weights,
+            delta_payload: coded.payload.len(),
+            target_payload: tl.payload.len(),
+        });
+        layers.push(DeltaLayer::Coded(coded));
+    }
+    Ok((layers, report))
+}
+
+/// Apply one coded residual layer against its parent layer: decode `R`,
+/// rebuild `L = P + R`, re-encode with the residual layer's codec
+/// config and chunk split so the result is byte-identical to the layer
+/// the residual was coded from.
+pub(crate) fn apply_layer(
+    pl: &CompressedLayer,
+    d: &CompressedLayer,
+    workers: usize,
+) -> Result<CompressedLayer> {
+    if pl.n_weights != d.n_weights {
+        bail!(
+            "delta apply: layer {:?} weight count mismatch ({} vs {})",
+            d.name,
+            pl.n_weights,
+            d.n_weights
+        );
+    }
+    let residual = d.decode_levels_with(workers);
+    if residual.len() != d.n_weights {
+        bail!("delta apply: layer {:?} residual decodes short", d.name);
+    }
+    let target = target_levels(pl, d, &residual, workers)?;
+    let splits: Vec<usize> = d.chunk_spans().iter().map(|s| s.n_weights).collect();
+    let (payload, chunks) = encode_with_splits(&target, d.cfg, &splits);
+    Ok(CompressedLayer {
+        name: d.name.clone(),
+        dims: d.dims.clone(),
+        grid: d.grid,
+        s_param: d.s_param,
+        cfg: d.cfg,
+        n_weights: d.n_weights,
+        payload,
+        chunks,
+        bias: d.bias.clone(),
+    })
+}
+
+/// `L_target = P + R` with overflow checked (a hostile delta can code
+/// arbitrary residual magnitudes).
+pub(crate) fn target_levels(
+    pl: &CompressedLayer,
+    d: &CompressedLayer,
+    residual: &[i32],
+    workers: usize,
+) -> Result<Vec<i32>> {
+    let p = parent_levels_on(pl, &d.grid, workers);
+    let mut target = Vec::with_capacity(residual.len());
+    for (&q, &r) in p.iter().zip(residual) {
+        let t = i32::try_from(q as i64 + r as i64)
+            .map_err(|_| anyhow::anyhow!("level overflow applying layer {:?}", d.name))?;
+        target.push(t);
+    }
+    Ok(target)
+}
+
+/// Apply one residual refinement (a tier of dlayers) to a parent model,
+/// with positional parenthood (no fingerprint — the caller vouches for
+/// the parent, as v4 tiers do by construction). Shared by
+/// [`crate::delta::apply`] (after its fingerprint check) and
+/// [`crate::delta::progressive::materialize`].
+pub(crate) fn apply_layers(
+    parent: &CompressedModel,
+    layers: &[DeltaLayer],
+    name: &str,
+    workers: usize,
+) -> Result<CompressedModel> {
+    if parent.layers.len() != layers.len() {
+        bail!(
+            "delta apply: parent has {} layers, delta {}",
+            parent.layers.len(),
+            layers.len()
+        );
+    }
+    let mut out = Vec::with_capacity(layers.len());
+    for (pl, dl) in parent.layers.iter().zip(layers) {
+        if pl.name != dl.name() {
+            bail!(
+                "delta apply: layer name mismatch ({:?} vs {:?})",
+                pl.name,
+                dl.name()
+            );
+        }
+        match dl {
+            DeltaLayer::Skipped(_) => out.push(pl.clone()),
+            DeltaLayer::Coded(d) => out.push(apply_layer(pl, d, workers)?),
+        }
+    }
+    Ok(CompressedModel { name: name.to_string(), layers: out })
+}

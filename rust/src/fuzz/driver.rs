@@ -19,8 +19,8 @@
 
 use super::{alloc, gen, mutate};
 use crate::coordinator::pipeline::{compress_model, CompressionSpec};
-use crate::model::container::{parse_container_prefix, Parsed, VERSION_DELTA};
-use crate::model::{CompressedModel, DeltaModel};
+use crate::model::container::{parse_container_prefix, Parsed, VERSION_DELTA, VERSION_PROGRESSIVE};
+use crate::model::{CompressedModel, DeltaModel, ProgressiveModel};
 use crate::serve::http::parse_request_head;
 use crate::serve::stream::StreamDecoder;
 use crate::util::{fnv1a, SplitMix64};
@@ -33,7 +33,8 @@ use std::time::Instant;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TargetKind {
     /// Batch container parsing: [`CompressedModel::deserialize`] (or
-    /// [`DeltaModel::deserialize`] for v3 inputs) plus the
+    /// [`DeltaModel::deserialize`] for v3 inputs,
+    /// [`ProgressiveModel::deserialize`] for v4) plus the
     /// roundtrip/idempotence invariants.
     Container,
     /// The push-based [`StreamDecoder`], fed in input-derived splits.
@@ -233,6 +234,9 @@ fn exec_container(input: &[u8]) -> CaseOutcome {
     if input.len() > 4 && input[4] == VERSION_DELTA {
         return exec_delta_container(input, survived_prefix);
     }
+    if input.len() > 4 && input[4] == VERSION_PROGRESSIVE {
+        return exec_progressive_container(input, survived_prefix);
+    }
     let Ok(m) = CompressedModel::deserialize(input) else {
         return CaseOutcome { survived_prefix, accepted: false };
     };
@@ -287,6 +291,84 @@ fn exec_delta_container(input: &[u8], survived_prefix: bool) -> CaseOutcome {
     // batch-accept ⇒ stream-accept holds for delta segments too
     if let Err(e) = crate::serve::stream::decode_all(input) {
         panic!("batch accepted v3 but stream decoder rejected: {e}");
+    }
+    CaseOutcome { survived_prefix, accepted: true }
+}
+
+/// The v4 arm of [`exec_container`]: idempotence and decode-count on
+/// every tier's records, plus two differentials — the streaming
+/// decoder must accept whatever batch accepts, and the tier-by-tier
+/// [`crate::delta::ProgressiveApplier`] must reconstruct exactly what
+/// batch [`crate::delta::materialize`] produces at the final tier.
+///
+/// Note the truncation rule: an accepted v4 input may be a strict tier
+/// prefix of the file that was mutated, so `serialize()` may legally
+/// shrink the tier table (canonicalization). Idempotence on the
+/// *reencoded* bytes — not `x == y` — is the invariant, same as the v2
+/// single-chunk canonical form.
+fn exec_progressive_container(input: &[u8], survived_prefix: bool) -> CaseOutcome {
+    let Ok(pm) = ProgressiveModel::deserialize(input) else {
+        return CaseOutcome { survived_prefix, accepted: false };
+    };
+    let y = pm.serialize();
+    let pm2 = ProgressiveModel::deserialize(&y)
+        .unwrap_or_else(|e| panic!("reencode of accepted progressive container rejected: {e}"));
+    assert_eq!(pm2.serialize(), y, "v4 serialize∘deserialize is not idempotent");
+    for l in &pm.base {
+        let levels = l.decode_levels_with(1);
+        assert_eq!(
+            levels.len(),
+            l.n_weights,
+            "base layer {:?} decoded {} levels, header claims {}",
+            l.name,
+            levels.len(),
+            l.n_weights
+        );
+    }
+    for tier in &pm.refinements {
+        for l in tier {
+            if let crate::model::DeltaLayer::Coded(cl) = l {
+                let levels = cl.decode_levels_with(1);
+                assert_eq!(
+                    levels.len(),
+                    cl.n_weights,
+                    "refinement layer {:?} decoded {} residuals, header claims {}",
+                    cl.name,
+                    levels.len(),
+                    cl.n_weights
+                );
+            }
+        }
+    }
+    // batch-accept ⇒ stream-accept holds for progressive containers too
+    if let Err(e) = crate::serve::stream::decode_all(input) {
+        panic!("batch accepted v4 but stream decoder rejected: {e}");
+    }
+    // batch materialize vs streaming tier applier: both total on
+    // accepted *syntax*, and when the residual algebra is applicable
+    // they must agree; a semantic mismatch (e.g. a refinement layer
+    // renamed by mutation) must error on both sides, never panic.
+    let batch_final = crate::delta::materialize(&pm, pm.n_tiers() - 1, 1);
+    let mut applier = crate::delta::ProgressiveApplier::new(1);
+    let streamed = applier.feed(&y).and_then(|snaps| {
+        applier.finish()?;
+        Ok(snaps)
+    });
+    match (batch_final, streamed) {
+        (Ok(full), Ok(snaps)) => {
+            let last = snaps.last().expect("accepted container has ≥1 tier");
+            assert_eq!(last.tier + 1, pm.n_tiers());
+            assert_eq!(last.layers.len(), full.layers.len());
+            for (sl, wl) in last.layers.iter().zip(&full.layers) {
+                assert_eq!(
+                    sl.levels,
+                    wl.decode_levels_with(1),
+                    "streamed tier diverged from batch materialize on {:?}",
+                    wl.name
+                );
+            }
+        }
+        (Err(_), _) | (_, Err(_)) => {} // structured rejection is fine
     }
     CaseOutcome { survived_prefix, accepted: true }
 }
@@ -460,10 +542,14 @@ fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
     let pristine = rng.below(8) == 0;
     match target {
         TargetKind::Container | TargetKind::Stream => {
-            // 1-in-4 cases work a v3 delta segment instead of a full
-            // container — same field-mapped mutation machinery
-            let base =
-                if rng.below(4) == 0 { gen::delta_container(rng) } else { gen::container(rng) };
+            // 1-in-4 cases work a v3 delta segment, 1-in-4 a v4
+            // progressive container — same field-mapped mutation
+            // machinery either way
+            let base = match rng.below(8) {
+                0 | 1 => gen::delta_container(rng),
+                2 | 3 => gen::progressive_container(rng),
+                _ => gen::container(rng),
+            };
             if pristine {
                 return base;
             }
@@ -522,9 +608,9 @@ pub fn fuzz_target(
 /// `range/`, `encoder/` subdirectories; missing ones are skipped).
 /// Filename conventions: `accept_*` must parse Ok, `reject_*` must parse
 /// Err, anything else only has to uphold the crash invariants. Container
-/// corpus files (v1/v2 *and* v3 delta segments) run against **both** the
-/// batch and the stream targets; `encoder/` files are hostile-model
-/// recipes.
+/// corpus files (v1/v2, v3 delta segments *and* v4 progressive
+/// containers) run against **both** the batch and the stream targets;
+/// `encoder/` files are hostile-model recipes.
 pub fn replay_corpus(root: &Path, budgets: &Budgets) -> Result<(FuzzStats, Vec<Crash>)> {
     let _quiet = Quiet::new();
     let metered = alloc::probe();
@@ -610,6 +696,20 @@ mod tests {
         let budgets = Budgets::default();
         for _ in 0..8 {
             let bytes = gen::delta_container(&mut rng);
+            for t in [TargetKind::Container, TargetKind::Stream] {
+                let (crash, outcome) = run_case(t, &bytes, &budgets, false);
+                assert!(crash.is_none(), "{:?}: {:?}", t, crash);
+                assert!(outcome.accepted && outcome.survived_prefix);
+            }
+        }
+    }
+
+    #[test]
+    fn valid_progressive_containers_are_accepted_with_no_crashes() {
+        let mut rng = SplitMix64::new(107);
+        let budgets = Budgets::default();
+        for _ in 0..8 {
+            let bytes = gen::progressive_container(&mut rng);
             for t in [TargetKind::Container, TargetKind::Stream] {
                 let (crash, outcome) = run_case(t, &bytes, &budgets, false);
                 assert!(crash.is_none(), "{:?}: {:?}", t, crash);

@@ -12,7 +12,9 @@
 
 use crate::bitstream::read_varint;
 use crate::codec::{encode_levels, CodecConfig, RemainderMode};
-use crate::model::{ChunkInfo, CompressedLayer, CompressedModel, DeltaLayer, DeltaModel};
+use crate::model::{
+    ChunkInfo, CompressedLayer, CompressedModel, DeltaLayer, DeltaModel, ProgressiveModel,
+};
 use crate::quant::QuantGrid;
 use crate::util::SplitMix64;
 use anyhow::{bail, Result};
@@ -29,6 +31,10 @@ pub enum FieldKind {
     ModelNameLen,
     ModelName,
     LayerCount,
+    /// v4 only: the declared tier count.
+    TierCount,
+    /// v4 only: one tier-table entry (the byte length of a tier body).
+    TierByteLen,
     LayerNameLen,
     LayerName,
     DimCount,
@@ -54,6 +60,8 @@ impl FieldKind {
             self,
             FieldKind::ModelNameLen
                 | FieldKind::LayerCount
+                | FieldKind::TierCount
+                | FieldKind::TierByteLen
                 | FieldKind::LayerNameLen
                 | FieldKind::DimCount
                 | FieldKind::Dim
@@ -87,55 +95,39 @@ pub fn map_fields(bytes: &[u8]) -> Result<Vec<Field>> {
     let version = w.buf.get(4).copied().unwrap_or(0);
     w.raw(1, FieldKind::Version)?;
     let delta_seg = version == crate::model::container::VERSION_DELTA;
+    let progressive = version == crate::model::container::VERSION_PROGRESSIVE;
     if delta_seg {
         w.raw(8, FieldKind::ParentFp)?;
     }
     let name_len = w.varint(FieldKind::ModelNameLen)? as usize;
     w.raw(name_len, FieldKind::ModelName)?;
     let n_layers = w.varint(FieldKind::LayerCount)? as usize;
-    for _ in 0..n_layers {
-        if delta_seg {
-            let skip = w.buf.get(w.pos).copied().unwrap_or(u8::MAX);
-            w.raw(1, FieldKind::SkipFlag)?;
-            match skip {
-                0 => {} // coded record: falls through to the full header
-                1 => {
-                    let lname = w.varint(FieldKind::LayerNameLen)? as usize;
-                    w.raw(lname, FieldKind::LayerName)?;
-                    continue;
-                }
-                v => bail!("field map: bad delta skip flag {v}"),
+    if progressive {
+        let n_tiers = w.varint(FieldKind::TierCount)? as usize;
+        if n_tiers == 0 || n_tiers > crate::model::container::MAX_TIERS {
+            bail!("field map: tier count {n_tiers} out of range");
+        }
+        for _ in 0..n_tiers {
+            w.varint(FieldKind::TierByteLen)?;
+        }
+        // tier 0 is v2-shaped (always chunk-tabled), refinements are
+        // v3 dlayer records — same tiling the batch parser walks
+        for _ in 0..n_layers {
+            w.layer_record(true)?;
+        }
+        for _ in 1..n_tiers {
+            for _ in 0..n_layers {
+                w.dlayer_record()?;
             }
         }
-        let lname = w.varint(FieldKind::LayerNameLen)? as usize;
-        w.raw(lname, FieldKind::LayerName)?;
-        let ndims = w.varint(FieldKind::DimCount)? as usize;
-        for _ in 0..ndims {
-            w.varint(FieldKind::Dim)?;
-        }
-        w.raw(4, FieldKind::Delta)?;
-        w.varint(FieldKind::MaxLevel)?;
-        w.varint(FieldKind::SParam)?;
-        w.raw(4, FieldKind::CfgBytes)?;
-        // v3 coded records always carry a chunk table, like v2
-        if version == crate::model::container::VERSION_CHUNKED || delta_seg {
-            let n_chunks = w.varint(FieldKind::ChunkCount)? as usize;
-            if n_chunks > crate::model::container::MAX_CHUNKS {
-                bail!("field map: chunk count {n_chunks} out of range");
+    } else {
+        for _ in 0..n_layers {
+            if delta_seg {
+                w.dlayer_record()?;
+                continue;
             }
-            for _ in 0..n_chunks {
-                w.varint(FieldKind::ChunkWeights)?;
-                w.varint(FieldKind::ChunkBytes)?;
-            }
+            w.layer_record(version == crate::model::container::VERSION_CHUNKED)?;
         }
-        w.varint(FieldKind::NWeights)?;
-        let payload_len = w.varint(FieldKind::PayloadLen)? as usize;
-        w.raw(payload_len, FieldKind::Payload)?;
-        let bias_len = w.varint(FieldKind::BiasLen)? as usize;
-        let Some(bias_bytes) = bias_len.checked_mul(4) else {
-            bail!("field map: bias length overflow");
-        };
-        w.raw(bias_bytes, FieldKind::BiasBytes)?;
     }
     if w.pos != bytes.len() {
         bail!("field map: {} trailing bytes", bytes.len() - w.pos);
@@ -179,6 +171,53 @@ impl Walker<'_> {
         self.fields.push(Field { offset: self.pos, len: n, kind });
         self.pos += n;
         Ok(v)
+    }
+
+    /// One full layer record (v1 shape, or v2/v3/v4 with a chunk table).
+    fn layer_record(&mut self, chunked: bool) -> Result<()> {
+        let lname = self.varint(FieldKind::LayerNameLen)? as usize;
+        self.raw(lname, FieldKind::LayerName)?;
+        let ndims = self.varint(FieldKind::DimCount)? as usize;
+        for _ in 0..ndims {
+            self.varint(FieldKind::Dim)?;
+        }
+        self.raw(4, FieldKind::Delta)?;
+        self.varint(FieldKind::MaxLevel)?;
+        self.varint(FieldKind::SParam)?;
+        self.raw(4, FieldKind::CfgBytes)?;
+        if chunked {
+            let n_chunks = self.varint(FieldKind::ChunkCount)? as usize;
+            if n_chunks > crate::model::container::MAX_CHUNKS {
+                bail!("field map: chunk count {n_chunks} out of range");
+            }
+            for _ in 0..n_chunks {
+                self.varint(FieldKind::ChunkWeights)?;
+                self.varint(FieldKind::ChunkBytes)?;
+            }
+        }
+        self.varint(FieldKind::NWeights)?;
+        let payload_len = self.varint(FieldKind::PayloadLen)? as usize;
+        self.raw(payload_len, FieldKind::Payload)?;
+        let bias_len = self.varint(FieldKind::BiasLen)? as usize;
+        let Some(bias_bytes) = bias_len.checked_mul(4) else {
+            bail!("field map: bias length overflow");
+        };
+        self.raw(bias_bytes, FieldKind::BiasBytes)
+    }
+
+    /// One v3/v4 dlayer record: skip flag, then either a bare name or a
+    /// full chunk-tabled layer record.
+    fn dlayer_record(&mut self) -> Result<()> {
+        let skip = self.buf.get(self.pos).copied().unwrap_or(u8::MAX);
+        self.raw(1, FieldKind::SkipFlag)?;
+        match skip {
+            0 => self.layer_record(true),
+            1 => {
+                let lname = self.varint(FieldKind::LayerNameLen)? as usize;
+                self.raw(lname, FieldKind::LayerName)
+            }
+            v => bail!("field map: bad delta skip flag {v}"),
+        }
     }
 }
 
@@ -267,6 +306,33 @@ pub fn delta_container(rng: &mut SplitMix64) -> Vec<u8> {
         layers,
     }
     .serialize()
+}
+
+/// A syntactically valid serialized v4 progressive container (1–3
+/// layers, 1–4 tiers, refinement records mixing skip/coded), built
+/// through the production [`ProgressiveModel::serialize`]. Always at
+/// least one layer: a zero-layer model's refinement tier bodies are
+/// empty, so the parser's truncation rule collapses them and the
+/// serialized form would not be canonical (the zero-layer accept path
+/// is covered by the `accept_v4_zero_layers` corpus case instead).
+pub fn progressive_container(rng: &mut SplitMix64) -> Vec<u8> {
+    let n_layers = 1 + rng.below(3) as usize;
+    let n_tiers = 1 + rng.below(4) as usize;
+    let base: Vec<CompressedLayer> = (0..n_layers).map(|i| rand_layer(rng, i)).collect();
+    let refinements = (1..n_tiers)
+        .map(|_| {
+            (0..n_layers)
+                .map(|i| {
+                    if rng.next_f64() < 0.35 {
+                        DeltaLayer::Skipped(format!("layer{i}"))
+                    } else {
+                        DeltaLayer::Coded(rand_layer(rng, i))
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    ProgressiveModel { name: format!("m{}", rng.below(1000)), base, refinements }.serialize()
 }
 
 // ---------------------------------------------------------------------------
@@ -529,6 +595,37 @@ mod tests {
             assert_eq!(dm.serialize(), bytes, "v3 serializer output must be canonical");
         }
         assert!(saw_skip && saw_coded, "generator must mix skip and coded records");
+    }
+
+    #[test]
+    fn progressive_fields_tile_and_roundtrip() {
+        // the v4 field map must cover every byte — tier table, base
+        // records, and refinement dlayers — so mutations reach tier
+        // handling; generator output must be canonical
+        let mut rng = SplitMix64::new(37);
+        let mut saw_multi_tier = false;
+        for _ in 0..32 {
+            let bytes = progressive_container(&mut rng);
+            assert_eq!(bytes[4], crate::model::container::VERSION_PROGRESSIVE);
+            let fields = map_fields(&bytes).unwrap();
+            let mut pos = 0usize;
+            for f in &fields {
+                assert_eq!(f.offset, pos, "gap before {:?}", f.kind);
+                pos += f.len;
+            }
+            assert_eq!(pos, bytes.len());
+            let n_tiers =
+                fields.iter().filter(|f| f.kind == FieldKind::TierByteLen).count();
+            assert!(fields.iter().any(|f| f.kind == FieldKind::TierCount));
+            assert!((1..=crate::model::container::MAX_TIERS).contains(&n_tiers));
+            if n_tiers > 1 {
+                saw_multi_tier = true;
+            }
+            let pm = ProgressiveModel::deserialize(&bytes).unwrap();
+            assert_eq!(pm.n_tiers(), n_tiers);
+            assert_eq!(pm.serialize(), bytes, "v4 serializer output must be canonical");
+        }
+        assert!(saw_multi_tier, "generator must emit refinement tiers");
     }
 
     #[test]

@@ -6,10 +6,10 @@ use deepcabac::app;
 use deepcabac::cli::{Args, USAGE};
 use deepcabac::codec::{decode_levels, CodecConfig, LevelEncoder};
 use deepcabac::coordinator::{
-    compress_model, pipeline::decompress, sweep_delta, sweep_s, sweep_s_auto,
-    CompressionSpec, SweepOptions, SweepResult,
+    compress_model, pipeline::decompress, sweep_delta, sweep_progressive, sweep_s,
+    sweep_s_auto, CompressionSpec, ProgressiveSweep, SweepOptions, SweepResult,
 };
-use deepcabac::model::{fingerprint, CompressedModel, DeltaModel};
+use deepcabac::model::{deserialize_any, fingerprint, CompressedModel, Container, DeltaModel};
 use deepcabac::report::{human_bytes, Table};
 use deepcabac::runtime::Runtime;
 use deepcabac::synth::Arch;
@@ -63,6 +63,7 @@ fn run(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "anatomy" => cmd_anatomy(args),
         "sweep" => cmd_sweep(args),
+        "materialize" => cmd_materialize(args),
         "synth" => cmd_synth(args),
         "serve" => cmd_serve(args),
         "fetch" => cmd_fetch(args),
@@ -383,6 +384,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         args.get("out-delta").is_none() || args.get("delta-from").is_some(),
         "--out-delta needs --delta-from BASE.dcbc (a plain sweep has no delta)"
     );
+    // --progressive chains frontier points into one .dcbc v4 container;
+    // its knobs are validated up front for the same reason
+    let progressive = args.has("progressive") || args.get("progressive").is_some();
+    if progressive {
+        anyhow::ensure!(
+            args.get("delta-from").is_none(),
+            "--progressive and --delta-from are mutually exclusive \
+             (tiers refine within one container; deltas diff across containers)"
+        );
+        anyhow::ensure!(
+            select_lambda.is_none(),
+            "--progressive and --select-lambda are mutually exclusive \
+             (--out writes the progressive container; use materialize to extract a tier)"
+        );
+    } else {
+        anyhow::ensure!(
+            args.get("tiers").is_none() && args.get("out-tiers").is_none(),
+            "--tiers / --out-tiers need --progressive"
+        );
+    }
+    let tiers = args.get_count("tiers", 3).map_err(|e| anyhow!(e))?;
     // --eval preconditions are checked BEFORE the sweep for the same
     // reason as --select-lambda: a missing --model must not cost a full
     // surface exploration
@@ -409,7 +431,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // --delta-from flips the objective: selection minimizes the v3 delta
     // segment against this base container instead of full container
     // bytes (abandonment is forced off by the engine in this mode)
-    let res = if let Some(p) = args.get("delta-from") {
+    type ProgArtifacts = (
+        deepcabac::model::ProgressiveModel,
+        Vec<CompressedModel>,
+        Vec<deepcabac::coordinator::GridPoint>,
+        Vec<deepcabac::delta::DeltaReport>,
+    );
+    let mut prog: Option<ProgArtifacts> = None;
+    let res = if progressive {
+        let ProgressiveSweep { result, progressive: chained, standalone, tier_points, reports } =
+            sweep_progressive(&model, &opts, &spec, tiers)?;
+        prog = Some((chained, standalone, tier_points, reports));
+        result
+    } else if let Some(p) = args.get("delta-from") {
         let parent = read_container(p)?;
         sweep_delta(&parent, &model, &opts, &spec)?
     } else {
@@ -466,6 +500,88 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             c.probes,
             c.abandoned,
         );
+    }
+
+    if let Some((chained, standalone, tier_points, reports)) = &prog {
+        let body_lens = chained.tier_body_lens();
+        let total = chained.total_bytes();
+        let finest = standalone.last().map(|c| c.serialize().len()).unwrap_or(0);
+        println!(
+            "progressive: {} tiers chained into {} ({:.1}% of the finest \
+             standalone container's {})",
+            chained.n_tiers(),
+            human_bytes(total),
+            total as f64 / finest.max(1) as f64 * 100.0,
+            human_bytes(finest),
+        );
+        for (t, c) in standalone.iter().enumerate() {
+            let pt = tier_points[t];
+            let refinement = if t == 0 {
+                String::new()
+            } else {
+                format!(
+                    ", residual density {:.3}%",
+                    reports[t - 1].residual_density() * 100.0
+                )
+            };
+            println!(
+                "  tier {t}: S={:>3} λ={:<8} body {} (standalone {}{refinement})",
+                pt.s,
+                pt.lambda_scale,
+                human_bytes(body_lens[t]),
+                human_bytes(c.serialize().len()),
+            );
+        }
+        if let Some(dir) = args.get("out-tiers") {
+            let dir = std::path::PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)?;
+            for (t, c) in standalone.iter().enumerate() {
+                let p = dir.join(format!("tier_{t}.dcbc"));
+                std::fs::write(&p, c.serialize())?;
+                println!("wrote {p:?}");
+            }
+        }
+        let tiers_json: Vec<Json> = standalone
+            .iter()
+            .enumerate()
+            .map(|(t, c)| {
+                let pt = tier_points[t];
+                let mut fields = vec![
+                    ("tier", json::num(t as f64)),
+                    ("s", json::num(pt.s as f64)),
+                    ("lambda_scale", json::num(pt.lambda_scale as f64)),
+                    ("standalone_bytes", json::num(c.serialize().len() as f64)),
+                    ("tier_body_bytes", json::num(body_lens[t] as f64)),
+                ];
+                if let Some(p) = res.points.iter().find(|p| {
+                    !p.abandoned
+                        && p.s == pt.s
+                        && p.lambda_scale.to_bits() == pt.lambda_scale.to_bits()
+                }) {
+                    fields.push(("distortion", json::num(p.distortion)));
+                }
+                if t > 0 {
+                    fields.push((
+                        "residual_density",
+                        json::num(reports[t - 1].residual_density()),
+                    ));
+                }
+                json::obj(fields)
+            })
+            .collect();
+        let j = json::obj(vec![
+            ("bench", json::s("progressive")),
+            ("model", json::s(&name)),
+            ("n_tiers", json::num(chained.n_tiers() as f64)),
+            ("requested_tiers", json::num(tiers as f64)),
+            ("progressive_bytes", json::num(total as f64)),
+            ("finest_standalone_bytes", json::num(finest as f64)),
+            ("overhead_ratio", json::num(total as f64 / finest.max(1) as f64)),
+            ("workers", json::num(workers as f64)),
+            ("tiers", json::arr(tiers_json)),
+        ]);
+        std::fs::write("BENCH_progressive.json", j.to_string_pretty())?;
+        println!("wrote BENCH_progressive.json");
     }
 
     // serial single-point reference: recompress every completed grid
@@ -549,29 +665,35 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
 
     if let Some(out) = args.get("out") {
-        // frontier output selection: default = the overall smallest
-        // container; --select-lambda X = λ-column X's argmin instead
-        // (validated against the λ grid before the sweep ran)
-        let container = if let Some(lv) = select_lambda {
-            let col = res
-                .columns
-                .iter()
-                .find(|c| c.lambda_scale.to_bits() == lv.to_bits())
-                .ok_or_else(|| {
-                    anyhow!("λ column {lv} vanished from the sweep result (engine bug)")
-                })?;
-            println!(
-                "selected λ={} column argmin (S={}, {})",
-                col.lambda_scale,
-                col.s,
-                human_bytes(col.bytes),
-            );
-            &col.model
+        if let Some((chained, ..)) = &prog {
+            // --progressive: --out writes the chained v4 container
+            std::fs::write(out, chained.serialize())?;
+            println!("wrote {out} (progressive v4, {} tiers)", chained.n_tiers());
         } else {
-            &res.best.0
-        };
-        std::fs::write(out, container.serialize())?;
-        println!("wrote {out}");
+            // frontier output selection: default = the overall smallest
+            // container; --select-lambda X = λ-column X's argmin instead
+            // (validated against the λ grid before the sweep ran)
+            let container = if let Some(lv) = select_lambda {
+                let col = res
+                    .columns
+                    .iter()
+                    .find(|c| c.lambda_scale.to_bits() == lv.to_bits())
+                    .ok_or_else(|| {
+                        anyhow!("λ column {lv} vanished from the sweep result (engine bug)")
+                    })?;
+                println!(
+                    "selected λ={} column argmin (S={}, {})",
+                    col.lambda_scale,
+                    col.s,
+                    human_bytes(col.bytes),
+                );
+                &col.model
+            } else {
+                &res.best.0
+            };
+            std::fs::write(out, container.serialize())?;
+            println!("wrote {out}");
+        }
     }
 
     // --eval restores the accuracy dimension the deleted serial
@@ -711,6 +833,40 @@ fn read_container(path: &str) -> Result<CompressedModel> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
     CompressedModel::deserialize(&bytes)
         .with_context(|| format!("{path} is not a full .dcbc container (v1/v2)"))
+}
+
+/// `deepcabac materialize`: extract one tier of a progressive (v4)
+/// container as a standalone v1/v2 container — byte-identical to the
+/// container that tier was chained from (the CI smoke job `cmp`s this
+/// against the sweep's `--out-tiers` output).
+fn cmd_materialize(args: &Args) -> Result<()> {
+    let input = args.get("in").context("--in required")?;
+    let out = args.get("out").context("--out required")?;
+    let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+    let bytes = std::fs::read(input).with_context(|| format!("reading {input}"))?;
+    let prog = match deserialize_any(&bytes)? {
+        Container::Progressive(p) => p,
+        Container::Full(_) => bail!(
+            "{input} is already a standalone container (v1/v2) — nothing to materialize"
+        ),
+        Container::Delta(_) => {
+            bail!("{input} is a v3 delta segment — use `delta apply`, not materialize")
+        }
+    };
+    let tier = match args.get("tier") {
+        None => prog.n_tiers() - 1,
+        Some(v) => v.parse().map_err(|_| anyhow!("--tier expects a tier index"))?,
+    };
+    let c = deepcabac::delta::materialize(&prog, tier, workers)?;
+    let ser = c.serialize();
+    std::fs::write(out, &ser)?;
+    println!(
+        "{}: tier {tier} of {} materialized -> {out} ({})",
+        c.name,
+        prog.n_tiers(),
+        human_bytes(ser.len()),
+    );
+    Ok(())
 }
 
 /// `deepcabac delta encode`: diff two full containers into a v3 delta
@@ -1000,6 +1156,135 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     if let Some(d) = &out_dir {
         std::fs::create_dir_all(d)?;
     }
+    let exclusive = [
+        args.get("layer").is_some(),
+        args.get("from").is_some(),
+        args.get("tier").is_some(),
+        args.get("upgrade").is_some(),
+    ];
+    anyhow::ensure!(
+        exclusive.iter().filter(|&&b| b).count() <= 1,
+        "--layer, --from, --tier and --upgrade are mutually exclusive"
+    );
+
+    if let Some(ts) = args.get("tier") {
+        // progressive prefix fetch: ask the server for the container cut
+        // at a tier boundary and decode it tier by tier as bytes arrive
+        let t: usize = ts.parse().map_err(|_| anyhow!("--tier expects a tier index"))?;
+        let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+        let mut applier = deepcabac::delta::ProgressiveApplier::new(workers);
+        let mut raw: Vec<u8> = Vec::new();
+        let mut last: Option<deepcabac::delta::TierSnapshot> = None;
+        let tier_path = format!("{path}?tier={t}");
+        let (status, _headers, err_body) =
+            http::get_streaming(&addr, &tier_path, None, &mut |chunk| {
+                raw.extend_from_slice(chunk);
+                for snap in applier.feed(chunk)? {
+                    eprintln!(
+                        "[fetch] tier {}/{} usable after {} bytes ({} layers)",
+                        snap.tier,
+                        snap.n_tiers,
+                        raw.len(),
+                        snap.layers.len(),
+                    );
+                    last = Some(snap);
+                }
+                Ok(())
+            })?;
+        anyhow::ensure!(
+            status == 200,
+            "HTTP {status} fetching {tier_path}: {}",
+            String::from_utf8_lossy(&err_body).trim()
+        );
+        let complete = applier.finish()?;
+        anyhow::ensure!(
+            complete == t + 1,
+            "server sent {complete} complete tiers, expected {}",
+            t + 1
+        );
+        let snap = last.context("stream ended before any tier completed")?;
+        println!(
+            "{url} tier {t}: {} layers usable from a {}-byte prefix ({}/{} tiers held)",
+            snap.layers.len(),
+            raw.len(),
+            complete,
+            snap.n_tiers,
+        );
+        if let Some(o) = args.get("out") {
+            std::fs::write(o, &raw)?;
+            println!("wrote {o} (progressive prefix — extend it later with --upgrade {o})");
+        }
+        if let Some(d) = &out_dir {
+            for l in &snap.layers {
+                let p = d.join(format!("{}.w.npy", safe_file_stem(&l.name)));
+                npy::write_npy_f32(&p, &l.dims, &l.weights)?;
+                println!("wrote {p:?}");
+            }
+        }
+        return Ok(());
+    }
+
+    if let Some(local_path) = args.get("upgrade") {
+        // tier upgrade: extend a locally held progressive prefix to the
+        // server's full container with one Range request for the tail
+        let workers = args.get_count("workers", 1).map_err(|e| anyhow!(e))?;
+        let mut bytes =
+            std::fs::read(local_path).with_context(|| format!("reading {local_path}"))?;
+        let local = match deserialize_any(&bytes)? {
+            Container::Progressive(p) => p,
+            _ => bail!(
+                "{local_path} is not a progressive (v4) container — \
+                 only --tier prefixes can be upgraded"
+            ),
+        };
+        let have = local.n_tiers();
+        // open-ended tail request; the server clamps the end to its
+        // container length (RFC 7233), 416 = nothing past our prefix
+        let resp = http::get(&addr, &path, Some((bytes.len() as u64, u64::MAX >> 1)))?;
+        if resp.status == 416 {
+            println!(
+                "{local_path}: already complete at {} tiers ({} bytes) — nothing to fetch",
+                have,
+                bytes.len(),
+            );
+            return Ok(());
+        }
+        anyhow::ensure!(
+            resp.status == 206,
+            "HTTP {} fetching the container tail from {url}: {}",
+            resp.status,
+            String::from_utf8_lossy(&resp.body).trim()
+        );
+        let tail = resp.body.len();
+        bytes.extend_from_slice(&resp.body);
+        // deep-validate the spliced container: the tail must decode as
+        // refinement tiers of the exact prefix we hold
+        let mut applier = deepcabac::delta::ProgressiveApplier::new(workers);
+        let mut snaps = applier.feed(&bytes).with_context(|| {
+            format!(
+                "{local_path} + fetched tail do not form a valid progressive container \
+                 (was the model replaced on the server? re-fetch it in full)"
+            )
+        })?;
+        let complete = applier.finish()?;
+        let snap = snaps.pop().context("upgraded container has no tiers")?;
+        println!(
+            "{local_path}: upgraded {have} -> {complete} tiers (+{tail} bytes tail, \
+             {} layers at the finest tier)",
+            snap.layers.len(),
+        );
+        let out = args.get_or("out", local_path);
+        std::fs::write(out, &bytes)?;
+        println!("wrote {out}");
+        if let Some(d) = &out_dir {
+            for l in &snap.layers {
+                let p = d.join(format!("{}.w.npy", safe_file_stem(&l.name)));
+                npy::write_npy_f32(&p, &l.dims, &l.weights)?;
+                println!("wrote {p:?}");
+            }
+        }
+        return Ok(());
+    }
 
     if let Some(layer) = args.get("layer") {
         // random access: one layer's server-side-decoded weights
@@ -1116,6 +1401,13 @@ fn cmd_fetch(args: &Args) -> Result<()> {
                     );
                     layers.push(*l);
                 }
+                StreamEvent::Tier { tier, n_tiers } => {
+                    eprintln!(
+                        "[fetch] tier {}/{n_tiers} complete — the bytes so far are a \
+                         usable container (use --tier to reconstruct per-tier weights)",
+                        tier + 1,
+                    );
+                }
                 StreamEvent::End => {}
             }
         }
@@ -1177,6 +1469,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "injected ({} hostile threads): {} dribble, {} slowloris, {} disconnect, \
              {} stalled-reader; {} unexpected server reactions",
             opts.hostile, i.dribble, i.slowloris, i.disconnect, i.stalled_reader, i.unexpected,
+        );
+    }
+    if let Some(p) = &report.progressive {
+        println!(
+            "time-to-first-usable-tier ({} progressive models, {} probes each): \
+             base tier p50 {:.2} ms / p99 {:.2} ms ({}) vs full p50 {:.2} ms / \
+             p99 {:.2} ms ({})",
+            p.models,
+            p.probes,
+            p.base_p50_ms,
+            p.base_p99_ms,
+            human_bytes(p.base_bytes as usize),
+            p.full_p50_ms,
+            p.full_p99_ms,
+            human_bytes(p.full_bytes as usize),
         );
     }
     if let Some(out) = &opts.out {

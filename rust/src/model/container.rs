@@ -30,6 +30,15 @@
 //! still serialize as v1/v2, byte-for-byte unchanged; [`deserialize_any`]
 //! dispatches on the version byte.
 //!
+//! Version 4 is a **progressive container** ([`ProgressiveModel`]): a
+//! coarse base tier (version-2 layer records) followed by refinement
+//! tiers of version-3 dlayer records, each tier's residuals coded
+//! against the previous tier of the *same file*. A tier table in the
+//! prelude gives every tier body's byte length, so a strict byte prefix
+//! ending at a tier boundary is itself a complete container at that
+//! tier (the "progressive truncation rule", `docs/FORMAT.md`
+//! §"Progressive tiers").
+//!
 //! Biases (and any normalization parameters) are stored raw, as the
 //! paper compresses weight tensors only.
 
@@ -46,8 +55,18 @@ pub const VERSION: u8 = 1;
 pub const VERSION_CHUNKED: u8 = 2;
 /// Delta-segment layout: parent fingerprint + skip/residual layer records.
 pub const VERSION_DELTA: u8 = 3;
+/// Progressive layout: base tier + residual refinement tiers in one file.
+pub const VERSION_PROGRESSIVE: u8 = 4;
+/// Highest version byte this reader understands (named in the
+/// unknown-version error so clients of newer archives get an actionable
+/// message).
+pub const MAX_SUPPORTED_VERSION: u8 = VERSION_PROGRESSIVE;
 
 const FLAG_SIG_NEIGHBORS: u8 = 1;
+
+/// Sanity cap on a progressive container's tier count (hostile-header
+/// guard; normative in `docs/FORMAT.md` §"Progressive tiers").
+pub const MAX_TIERS: usize = 64;
 
 /// Sanity cap on the per-layer chunk count (hostile-header guard).
 pub const MAX_CHUNKS: usize = 1 << 16;
@@ -189,6 +208,12 @@ impl CompressedModel {
             bail!(
                 "container is a version-3 delta segment; use deserialize_any \
                  or DeltaModel::deserialize"
+            );
+        }
+        if prefix.version == VERSION_PROGRESSIVE {
+            bail!(
+                "container is a version-4 progressive container; use \
+                 deserialize_any or ProgressiveModel::deserialize"
             );
         }
         // cap the pre-allocation: n_layers is attacker-controlled, and a
@@ -409,17 +434,170 @@ impl DeltaModel {
     }
 }
 
-/// Any `.dcbc` file: a full container (v1/v2) or a delta segment (v3).
+/// A version-4 `.dcbc` progressive container: a coarse base tier plus
+/// refinement tiers, each refining the previous tier of the same file
+/// with the v3 residual algebra. `refinements.len() + 1` is the tier
+/// count; every refinement holds exactly `base.len()` dlayers.
+///
+/// Deliberately does NOT record the tier count the file *declared*:
+/// a prefix accepted under the progressive truncation rule
+/// canonicalizes to a smaller complete container (the documented
+/// exception to the byte round-trip invariant — serialization stays
+/// idempotent).
+#[derive(Debug, Clone)]
+pub struct ProgressiveModel {
+    pub name: String,
+    /// Tier 0: a complete coarse model (version-2 layer records).
+    pub base: Vec<CompressedLayer>,
+    /// Tiers 1..: per-layer residuals against the previous tier.
+    pub refinements: Vec<Vec<DeltaLayer>>,
+}
+
+impl ProgressiveModel {
+    /// Number of tiers in the file (base included).
+    pub fn n_tiers(&self) -> usize {
+        1 + self.refinements.len()
+    }
+
+    /// Serialized size of the whole progressive container.
+    pub fn total_bytes(&self) -> usize {
+        self.serialize().len()
+    }
+
+    /// Serialized byte length of every tier body, in tier order. The
+    /// absolute end of tier `t`'s byte prefix is
+    /// `prelude_len + Σ tier_body_lens[0..=t]`.
+    pub fn tier_body_lens(&self) -> Vec<usize> {
+        self.tier_bodies().iter().map(|b| b.len()).collect()
+    }
+
+    fn tier_bodies(&self) -> Vec<Vec<u8>> {
+        let mut bodies = Vec::with_capacity(self.n_tiers());
+        let mut body = Vec::new();
+        for l in &self.base {
+            write_layer_body(&mut body, l, true);
+        }
+        bodies.push(std::mem::take(&mut body));
+        for tier in &self.refinements {
+            for l in tier {
+                match l {
+                    DeltaLayer::Skipped(name) => {
+                        body.push(1);
+                        write_str(&mut body, name);
+                    }
+                    DeltaLayer::Coded(layer) => {
+                        body.push(0);
+                        write_layer_body(&mut body, layer, true);
+                    }
+                }
+            }
+            bodies.push(std::mem::take(&mut body));
+        }
+        bodies
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let bodies = self.tier_bodies();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION_PROGRESSIVE);
+        write_str(&mut out, &self.name);
+        write_varint(&mut out, self.base.len() as u64);
+        write_varint(&mut out, bodies.len() as u64);
+        for b in &bodies {
+            write_varint(&mut out, b.len() as u64);
+        }
+        for b in &bodies {
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        let (prefix, mut pos) = match parse_container_prefix(buf)? {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => bail!("truncated container prelude"),
+        };
+        if prefix.version != VERSION_PROGRESSIVE {
+            bail!("not a progressive container (version {})", prefix.version);
+        }
+        let tier_lens = &prefix.tier_lens;
+        let mut base = Vec::with_capacity(prefix.n_layers.min(1 << 10));
+        let tier_start = pos;
+        for _ in 0..prefix.n_layers {
+            let hdr = match parse_layer_header(&buf[pos..], VERSION_CHUNKED)? {
+                Parsed::Complete(h, n) => {
+                    pos += n;
+                    h
+                }
+                Parsed::NeedMore => bail!("truncated layer header"),
+            };
+            let (layer, used) = read_layer_tail(&buf[pos..], hdr)?;
+            pos += used;
+            base.push(layer);
+        }
+        if (pos - tier_start) as u64 != tier_lens[0] {
+            bail!(
+                "tier 0 body is {} bytes but the tier table declares {}",
+                pos - tier_start,
+                tier_lens[0]
+            );
+        }
+        let mut refinements = Vec::new();
+        for (t, &tlen) in tier_lens.iter().enumerate().skip(1) {
+            if pos == buf.len() {
+                // progressive truncation rule: EOF exactly at a tier-body
+                // boundary is a complete container at the preceding tier
+                break;
+            }
+            let tier_start = pos;
+            let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 10));
+            for _ in 0..prefix.n_layers {
+                let hdr = match parse_layer_header(&buf[pos..], VERSION_DELTA)? {
+                    Parsed::Complete(h, n) => {
+                        pos += n;
+                        h
+                    }
+                    Parsed::NeedMore => bail!("truncated layer header"),
+                };
+                if hdr.skipped {
+                    layers.push(DeltaLayer::Skipped(hdr.name));
+                    continue;
+                }
+                let (layer, used) = read_layer_tail(&buf[pos..], hdr)?;
+                pos += used;
+                layers.push(DeltaLayer::Coded(layer));
+            }
+            if (pos - tier_start) as u64 != tlen {
+                bail!(
+                    "tier {t} body is {} bytes but the tier table declares {tlen}",
+                    pos - tier_start
+                );
+            }
+            refinements.push(layers);
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in container");
+        }
+        Ok(Self { name: prefix.name, base, refinements })
+    }
+}
+
+/// Any `.dcbc` file: a full container (v1/v2), a delta segment (v3) or
+/// a progressive container (v4).
 #[derive(Debug, Clone)]
 pub enum Container {
     Full(CompressedModel),
     Delta(DeltaModel),
+    Progressive(ProgressiveModel),
 }
 
 /// Deserialize any `.dcbc` version, dispatching on the version byte.
 pub fn deserialize_any(buf: &[u8]) -> Result<Container> {
     if buf.len() >= 5 && &buf[..4] == MAGIC && buf[4] == VERSION_DELTA {
         DeltaModel::deserialize(buf).map(Container::Delta)
+    } else if buf.len() >= 5 && &buf[..4] == MAGIC && buf[4] == VERSION_PROGRESSIVE {
+        ProgressiveModel::deserialize(buf).map(Container::Progressive)
     } else {
         CompressedModel::deserialize(buf).map(Container::Full)
     }
@@ -446,7 +624,8 @@ pub enum Parsed<T> {
 }
 
 /// Container prelude: magic, version, model name and layer count —
-/// plus the parent fingerprint for version-3 delta segments.
+/// plus the parent fingerprint for version-3 delta segments and the
+/// tier table for version-4 progressive containers.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ContainerPrefix {
     pub version: u8,
@@ -454,6 +633,9 @@ pub struct ContainerPrefix {
     pub n_layers: usize,
     /// `Some` iff `version == VERSION_DELTA`.
     pub parent_fp: Option<u64>,
+    /// Declared tier-body byte lengths; non-empty iff
+    /// `version == VERSION_PROGRESSIVE` (then `1 ≤ len ≤ MAX_TIERS`).
+    pub tier_lens: Vec<u64>,
 }
 
 /// Everything in a layer record before the payload bytes, plus the payload
@@ -559,8 +741,11 @@ pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
         return Ok(Parsed::NeedMore);
     }
     let version = buf[4];
-    if version != VERSION && version != VERSION_CHUNKED && version != VERSION_DELTA {
-        bail!("unsupported DCBC version {version}");
+    if version < VERSION || version > MAX_SUPPORTED_VERSION {
+        bail!(
+            "unsupported DCBC version {version} (this reader supports \
+             versions {VERSION}..={MAX_SUPPORTED_VERSION})"
+        );
     }
     let mut cur = Cur { buf, pos: 5 };
     let parent_fp = if version == VERSION_DELTA {
@@ -570,7 +755,30 @@ pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
     };
     let name = need!(cur.string("model name")?);
     let n_layers = need!(cur.varint()?) as usize;
-    Ok(Parsed::Complete(ContainerPrefix { version, name, n_layers, parent_fp }, cur.pos))
+    let mut tier_lens = Vec::new();
+    if version == VERSION_PROGRESSIVE {
+        let n_tiers = need!(cur.varint()?) as usize;
+        if n_tiers == 0 || n_tiers > MAX_TIERS {
+            bail!("progressive container claims {n_tiers} tiers (hostile header?)");
+        }
+        tier_lens.reserve(n_tiers);
+        let mut total = 0u64;
+        for _ in 0..n_tiers {
+            let len = need!(cur.varint()?);
+            total = total
+                .checked_add(len)
+                .ok_or_else(|| anyhow!("tier table byte-length overflow"))?;
+            tier_lens.push(len);
+        }
+        // the whole file must stay addressable on this platform
+        if total > usize::MAX as u64 {
+            bail!("tier table byte-length overflow");
+        }
+    }
+    Ok(Parsed::Complete(
+        ContainerPrefix { version, name, n_layers, parent_fp, tier_lens },
+        cur.pos,
+    ))
 }
 
 /// Parse one layer header (everything before the payload bytes) from a
@@ -1153,6 +1361,183 @@ mod tests {
         // name immediately follows the version byte
         assert_eq!(bytes[5] as usize, m.name.len());
         assert_eq!(&bytes[6..6 + m.name.len()], m.name.as_bytes());
+    }
+
+    fn sample_progressive() -> ProgressiveModel {
+        let cfg = CodecConfig::default();
+        let mk = |name: &str, levels: &[i32], delta: f32| CompressedLayer {
+            name: name.into(),
+            dims: vec![levels.len().max(1)],
+            grid: QuantGrid {
+                delta,
+                max_level: levels.iter().map(|l| l.unsigned_abs()).max().unwrap_or(0) as i32,
+            },
+            s_param: 9,
+            cfg,
+            n_weights: levels.len(),
+            payload: encode_levels(levels, cfg),
+            chunks: vec![],
+            bias: vec![0.25],
+        };
+        ProgressiveModel {
+            name: "prog".into(),
+            base: vec![mk("conv", &[0, 2, -1, 0], 0.25), mk("fc", &[1, 0], 0.25)],
+            refinements: vec![
+                vec![
+                    DeltaLayer::Coded(mk("conv", &[0, 1, 0, -1], 0.125)),
+                    DeltaLayer::Skipped("fc".into()),
+                ],
+                vec![
+                    DeltaLayer::Skipped("conv".into()),
+                    DeltaLayer::Coded(mk("fc", &[-1, 1], 0.0625)),
+                ],
+            ],
+        }
+    }
+
+    /// Absolute byte offset where each tier body of `p` ends.
+    fn tier_ends(p: &ProgressiveModel) -> Vec<usize> {
+        let bytes = p.serialize();
+        let lens = p.tier_body_lens();
+        let prelude = bytes.len() - lens.iter().sum::<usize>();
+        let mut ends = Vec::new();
+        let mut pos = prelude;
+        for l in lens {
+            pos += l;
+            ends.push(pos);
+        }
+        assert_eq!(pos, bytes.len());
+        ends
+    }
+
+    #[test]
+    fn progressive_roundtrip_v4_byte_stable() {
+        let p = sample_progressive();
+        let bytes = p.serialize();
+        assert_eq!(bytes[4], VERSION_PROGRESSIVE);
+        let p2 = ProgressiveModel::deserialize(&bytes).unwrap();
+        assert_eq!(p2.name, "prog");
+        assert_eq!(p2.n_tiers(), 3);
+        assert_eq!(p2.base.len(), 2);
+        assert_eq!(p2.serialize(), bytes);
+        assert!(matches!(deserialize_any(&bytes).unwrap(), Container::Progressive(_)));
+        match &p2.refinements[0][0] {
+            DeltaLayer::Coded(l) => assert_eq!(l.decode_levels(), vec![0, 1, 0, -1]),
+            other => panic!("expected coded layer, got {other:?}"),
+        }
+        assert!(matches!(&p2.refinements[0][1], DeltaLayer::Skipped(n) if n == "fc"));
+    }
+
+    #[test]
+    fn progressive_truncation_rule() {
+        let p = sample_progressive();
+        let bytes = p.serialize();
+        let ends = tier_ends(&p);
+        assert_eq!(ends.len(), 3);
+        // EOF exactly at each tier boundary: complete at that tier
+        for (t, &end) in ends.iter().enumerate() {
+            let trunc = ProgressiveModel::deserialize(&bytes[..end]).unwrap();
+            assert_eq!(trunc.n_tiers(), t + 1, "boundary {t}");
+            // canonicalization exception: the prefix re-serializes as a
+            // *smaller complete container*, and that is a fixpoint
+            let reser = trunc.serialize();
+            let again = ProgressiveModel::deserialize(&reser).unwrap();
+            assert_eq!(again.serialize(), reser, "boundary {t} not idempotent");
+        }
+        // EOF inside a tier body: truncated, never accepted
+        for cut in [ends[0] - 1, ends[0] + 1, ends[1] - 2, ends[2] - 1] {
+            assert!(
+                ProgressiveModel::deserialize(&bytes[..cut]).is_err(),
+                "mid-tier cut {cut} must not parse"
+            );
+        }
+        // trailing bytes past the last declared tier: error
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(ProgressiveModel::deserialize(&extra).is_err());
+    }
+
+    /// Hand-author a v4 prelude with arbitrary tier table; bodies appended raw.
+    fn raw_v4_container(n_layers: u64, tier_lens: &[u64], bodies: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION_PROGRESSIVE);
+        write_str(&mut out, "raw");
+        write_varint(&mut out, n_layers);
+        write_varint(&mut out, tier_lens.len() as u64);
+        for &l in tier_lens {
+            write_varint(&mut out, l);
+        }
+        out.extend_from_slice(bodies);
+        out
+    }
+
+    #[test]
+    fn progressive_rejects_hostile_tier_tables() {
+        // zero tiers is malformed
+        let err = ProgressiveModel::deserialize(&raw_v4_container(0, &[], &[]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tiers"), "{err}");
+        // tier count past MAX_TIERS
+        let lens = vec![0u64; MAX_TIERS + 1];
+        assert!(ProgressiveModel::deserialize(&raw_v4_container(0, &lens, &[])).is_err());
+        // tier lengths whose sum overflows u64: checked, not wrapped
+        let huge = u64::MAX / 2 + 1;
+        let err = ProgressiveModel::deserialize(&raw_v4_container(0, &[huge, huge], &[]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overflow"), "{err}");
+        // a tier table lying about its body length
+        let p = sample_progressive();
+        let good = p.serialize();
+        let lens = p.tier_body_lens();
+        let bodies = &good[good.len() - lens.iter().sum::<usize>()..];
+        let lie = [lens[0] as u64 + 1, lens[1] as u64, lens[2] as u64];
+        let err = ProgressiveModel::deserialize(&raw_v4_container(2, &lie, bodies))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tier"), "{err}");
+        // zero-layer container with declared-but-absent refinement tiers
+        // collapses to one tier under the truncation rule
+        let empty = raw_v4_container(0, &[0, 0, 0], &[]);
+        let m = ProgressiveModel::deserialize(&empty).unwrap();
+        assert_eq!(m.n_tiers(), 1);
+        assert!(m.base.is_empty());
+    }
+
+    #[test]
+    fn progressive_prefix_monotonicity_of_prelude() {
+        let bytes = sample_progressive().serialize();
+        let (prefix, used) = match parse_container_prefix(&bytes).unwrap() {
+            Parsed::Complete(p, n) => (p, n),
+            Parsed::NeedMore => panic!("full buffer must parse"),
+        };
+        assert_eq!(prefix.version, VERSION_PROGRESSIVE);
+        assert_eq!(prefix.n_layers, 2);
+        assert_eq!(prefix.tier_lens.len(), 3);
+        for cut in 0..used {
+            assert!(
+                matches!(parse_container_prefix(&bytes[..cut]).unwrap(), Parsed::NeedMore),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_version_error_names_max_supported() {
+        let mut bytes = sample_model().serialize();
+        bytes[4] = MAX_SUPPORTED_VERSION + 1;
+        let err = CompressedModel::deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains(&format!("{MAX_SUPPORTED_VERSION}")), "{err}");
+        assert!(err.contains("unsupported"), "{err}");
+    }
+
+    #[test]
+    fn batch_reader_rejects_progressive_with_structured_error() {
+        let bytes = sample_progressive().serialize();
+        let err = CompressedModel::deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains("progressive"), "{err}");
     }
 
     #[test]

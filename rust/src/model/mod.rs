@@ -7,7 +7,7 @@ pub mod manifest;
 
 pub use container::{
     deserialize_any, fingerprint, ChunkInfo, CompressedLayer, CompressedModel, Container,
-    DeltaLayer, DeltaModel,
+    DeltaLayer, DeltaModel, ProgressiveModel, MAX_TIERS,
 };
 pub use manifest::{LayerInfo, LayerKind, ModelManifest};
 

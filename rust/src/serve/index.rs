@@ -1,6 +1,6 @@
 //! Random-access reader over a serialized `.dcbc` container.
 //!
-//! [`ContainerIndex::build`] walks the v1/v2/v3 headers once (skipping every
+//! [`ContainerIndex::build`] walks the v1–v4 headers once (skipping every
 //! payload byte) and records absolute byte ranges for each layer's
 //! payload, each chunk inside it, and the raw bias bytes. A client can
 //! then fetch and decode a single layer — or a single chunk — without
@@ -8,10 +8,14 @@
 //! decoded-layer cache are both built on this. The index exists because
 //! the `.dcbc` format guarantees header-only locatability — invariant 1
 //! of `docs/FORMAT.md` §"Invariants the serving stack relies on".
+//! For version-4 progressive containers the index additionally records
+//! where each tier's body ends ([`ContainerIndex::tier_ends`]), so
+//! `GET /models/{m}?tier=t` can serve an exact byte prefix.
 
 use crate::codec::{decode_levels, CodecConfig};
 use crate::model::container::{
-    parse_container_prefix, parse_layer_header, parse_varint_prefix, Parsed,
+    parse_container_prefix, parse_layer_header, parse_varint_prefix, Parsed, VERSION_CHUNKED,
+    VERSION_DELTA, VERSION_PROGRESSIVE,
 };
 use crate::quant::QuantGrid;
 use crate::util::par;
@@ -47,6 +51,9 @@ pub struct IndexedLayer {
     /// parent unchanged and owns no payload or bias bytes (all ranges
     /// are empty).
     pub skipped: bool,
+    /// Tier this record belongs to: always 0 for v1–v3; for v4, layers
+    /// of all tiers appear in `layers` in file order (base first).
+    pub tier: usize,
 }
 
 impl IndexedLayer {
@@ -64,6 +71,11 @@ pub struct ContainerIndex {
     pub parent_fp: Option<u64>,
     pub container_len: usize,
     pub layers: Vec<IndexedLayer>,
+    /// Version-4 only (empty otherwise): absolute offset at which each
+    /// tier's body ends. `buf[..tier_ends[t]]` is a complete, decodable
+    /// container at tier t (the progressive truncation rule);
+    /// `tier_ends.last() == container_len`.
+    pub tier_ends: Vec<usize>,
 }
 
 impl ContainerIndex {
@@ -75,67 +87,31 @@ impl ContainerIndex {
             Parsed::NeedMore => bail!("truncated container prelude"),
         };
         let mut layers = Vec::with_capacity(prefix.n_layers.min(1 << 16));
-        for _ in 0..prefix.n_layers {
-            let hdr = match parse_layer_header(&buf[pos..], prefix.version)? {
-                Parsed::Complete(h, n) => {
-                    pos += n;
-                    h
+        let mut tier_ends = Vec::new();
+        if prefix.version == VERSION_PROGRESSIVE {
+            for (t, &tlen) in prefix.tier_lens.iter().enumerate() {
+                if t > 0 && pos == buf.len() {
+                    // progressive truncation rule: EOF at a tier-body
+                    // boundary is a complete container at tier t−1
+                    break;
                 }
-                Parsed::NeedMore => bail!("truncated layer header"),
-            };
-            if hdr.skipped {
-                // v3 skip record: name only, no payload or bias bytes
-                layers.push(IndexedLayer {
-                    name: hdr.name,
-                    dims: hdr.dims,
-                    grid: hdr.grid,
-                    s_param: hdr.s_param,
-                    cfg: hdr.cfg,
-                    n_weights: 0,
-                    payload: pos..pos,
-                    chunks: vec![IndexedChunk { n_weights: 0, bytes: pos..pos }],
-                    bias: pos..pos,
-                    skipped: true,
-                });
-                continue;
-            }
-            if hdr.payload_len > buf.len() - pos {
-                bail!("truncated payload");
-            }
-            let payload = pos..pos + hdr.payload_len;
-            let chunks = hdr
-                .chunk_spans()
-                .into_iter()
-                .map(|s| IndexedChunk {
-                    n_weights: s.n_weights,
-                    bytes: pos + s.offset..pos + s.offset + s.bytes,
-                })
-                .collect();
-            pos += hdr.payload_len;
-            let blen = match parse_varint_prefix(&buf[pos..])? {
-                Parsed::Complete(v, n) => {
-                    pos += n;
-                    v as usize
+                let tier_start = pos;
+                let hv = if t == 0 { VERSION_CHUNKED } else { VERSION_DELTA };
+                for _ in 0..prefix.n_layers {
+                    pos = index_layer(buf, pos, hv, t, &mut layers)?;
                 }
-                Parsed::NeedMore => bail!("truncated bias"),
-            };
-            if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
-                bail!("truncated bias");
+                if (pos - tier_start) as u64 != tlen {
+                    bail!(
+                        "tier {t} body is {} bytes but the tier table declares {tlen}",
+                        pos - tier_start
+                    );
+                }
+                tier_ends.push(pos);
             }
-            let bias = pos..pos + blen * 4;
-            pos += blen * 4;
-            layers.push(IndexedLayer {
-                name: hdr.name,
-                dims: hdr.dims,
-                grid: hdr.grid,
-                s_param: hdr.s_param,
-                cfg: hdr.cfg,
-                n_weights: hdr.n_weights,
-                payload,
-                chunks,
-                bias,
-                skipped: false,
-            });
+        } else {
+            for _ in 0..prefix.n_layers {
+                pos = index_layer(buf, pos, prefix.version, 0, &mut layers)?;
+            }
         }
         if pos != buf.len() {
             bail!("trailing bytes in container");
@@ -146,7 +122,13 @@ impl ContainerIndex {
             parent_fp: prefix.parent_fp,
             container_len: buf.len(),
             layers,
+            tier_ends,
         })
+    }
+
+    /// Number of tiers the indexed container holds: 1 for v1–v3.
+    pub fn n_tiers(&self) -> usize {
+        self.tier_ends.len().max(1)
     }
 
     /// Resolve a layer by name (`"conv1"`) or by index (`"3"`). An exact
@@ -222,6 +204,81 @@ impl ContainerIndex {
             anyhow!("layer {i} out of range (container has {})", self.layers.len())
         })
     }
+}
+
+/// Index one layer record at `pos`, parsed with `hdr_version` semantics
+/// (v2-shaped for a v4 base tier, v3-shaped for refinement tiers), and
+/// return the position after it.
+fn index_layer(
+    buf: &[u8],
+    mut pos: usize,
+    hdr_version: u8,
+    tier: usize,
+    layers: &mut Vec<IndexedLayer>,
+) -> Result<usize> {
+    let hdr = match parse_layer_header(&buf[pos..], hdr_version)? {
+        Parsed::Complete(h, n) => {
+            pos += n;
+            h
+        }
+        Parsed::NeedMore => bail!("truncated layer header"),
+    };
+    if hdr.skipped {
+        // skip record: name only, no payload or bias bytes
+        layers.push(IndexedLayer {
+            name: hdr.name,
+            dims: hdr.dims,
+            grid: hdr.grid,
+            s_param: hdr.s_param,
+            cfg: hdr.cfg,
+            n_weights: 0,
+            payload: pos..pos,
+            chunks: vec![IndexedChunk { n_weights: 0, bytes: pos..pos }],
+            bias: pos..pos,
+            skipped: true,
+            tier,
+        });
+        return Ok(pos);
+    }
+    if hdr.payload_len > buf.len() - pos {
+        bail!("truncated payload");
+    }
+    let payload = pos..pos + hdr.payload_len;
+    let chunks = hdr
+        .chunk_spans()
+        .into_iter()
+        .map(|s| IndexedChunk {
+            n_weights: s.n_weights,
+            bytes: pos + s.offset..pos + s.offset + s.bytes,
+        })
+        .collect();
+    pos += hdr.payload_len;
+    let blen = match parse_varint_prefix(&buf[pos..])? {
+        Parsed::Complete(v, n) => {
+            pos += n;
+            v as usize
+        }
+        Parsed::NeedMore => bail!("truncated bias"),
+    };
+    if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
+        bail!("truncated bias");
+    }
+    let bias = pos..pos + blen * 4;
+    pos += blen * 4;
+    layers.push(IndexedLayer {
+        name: hdr.name,
+        dims: hdr.dims,
+        grid: hdr.grid,
+        s_param: hdr.s_param,
+        cfg: hdr.cfg,
+        n_weights: hdr.n_weights,
+        payload,
+        chunks,
+        bias,
+        skipped: false,
+        tier,
+    });
+    Ok(pos)
 }
 
 #[cfg(test)]
@@ -365,5 +422,48 @@ mod tests {
         let mut bad = bytes.clone();
         bad[4] = 42;
         assert!(ContainerIndex::build(&bad).is_err());
+    }
+
+    #[test]
+    fn indexes_v4_progressive_tiers() {
+        use crate::model::{DeltaLayer, ProgressiveModel};
+        let full = build_model(true);
+        let prog = ProgressiveModel {
+            name: "indexed".into(),
+            base: full.layers.clone(),
+            refinements: vec![vec![
+                DeltaLayer::Coded(full.layers[0].clone()),
+                DeltaLayer::Skipped("l1".into()),
+                DeltaLayer::Skipped("l2".into()),
+            ]],
+        };
+        let bytes = prog.serialize();
+        let idx = ContainerIndex::build(&bytes).unwrap();
+        assert_eq!(idx.version, 4);
+        assert_eq!(idx.n_tiers(), 2);
+        assert_eq!(idx.layers.len(), 6);
+        assert!(idx.layers[..3].iter().all(|l| l.tier == 0 && !l.skipped));
+        assert!(idx.layers[3..].iter().all(|l| l.tier == 1));
+        assert!(idx.layers[4].skipped && idx.layers[5].skipped);
+        // tier end offsets match the serializer's tier table, and the
+        // last one covers the whole file
+        let lens = prog.tier_body_lens();
+        let prelude = bytes.len() - lens.iter().sum::<usize>();
+        assert_eq!(idx.tier_ends, vec![prelude + lens[0], bytes.len()]);
+        // the tier-0 prefix is itself a complete, indexable container
+        let prefix_idx = ContainerIndex::build(&bytes[..idx.tier_ends[0]]).unwrap();
+        assert_eq!(prefix_idx.n_tiers(), 1);
+        assert_eq!(prefix_idx.layers.len(), 3);
+        // random access into a refinement record decodes its residuals
+        let l = &full.layers[0];
+        assert_eq!(idx.decode_layer_levels(&bytes, 3, 2).unwrap(), l.decode_levels());
+        assert_eq!(idx.layer_bias(&bytes, 3).unwrap(), l.bias);
+        // a v1/v2 container reports a single tier and no tier table
+        let fidx = ContainerIndex::build(&full.serialize()).unwrap();
+        assert!(fidx.tier_ends.is_empty());
+        assert_eq!(fidx.n_tiers(), 1);
+        // mid-tier truncation still rejects
+        assert!(ContainerIndex::build(&bytes[..idx.tier_ends[0] + 1]).is_err());
+        assert!(ContainerIndex::build(&bytes[..idx.tier_ends[0] - 1]).is_err());
     }
 }

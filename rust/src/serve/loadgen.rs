@@ -139,6 +139,29 @@ pub struct LoadgenReport {
     pub bytes_transferred: u64,
     pub bytes_requests: usize,
     pub weights_requests: usize,
+    /// Time-to-first-usable-tier probes — `None` when the server hosts
+    /// no progressive (v4) containers.
+    pub progressive: Option<ProgressiveLatency>,
+}
+
+/// The progressive-delivery headline numbers: how fast a client gets a
+/// *usable* model (the base-tier prefix, `GET /models/{m}?tier=0`)
+/// versus the full container. Measured sequentially after the
+/// concurrent load phase so the two distributions see the same idle
+/// server.
+#[derive(Debug, Clone, Default)]
+pub struct ProgressiveLatency {
+    /// Progressive models probed.
+    pub models: usize,
+    /// Probes per endpoint (base and full each).
+    pub probes: usize,
+    pub base_p50_ms: f64,
+    pub base_p99_ms: f64,
+    pub full_p50_ms: f64,
+    pub full_p99_ms: f64,
+    /// Summed across the probed models (one count per model).
+    pub base_bytes: u64,
+    pub full_bytes: u64,
 }
 
 /// One target the mix rotates over.
@@ -148,8 +171,10 @@ struct Target {
     layer: usize,
 }
 
-/// Discover every (model, layer) pair the server offers.
-fn discover(addr: &str, base_path: &str) -> Result<Vec<Target>> {
+/// Discover every (model, layer) pair the server offers, plus the
+/// models served as progressive (v4) containers (the listing carries a
+/// `tiers` count for those).
+fn discover(addr: &str, base_path: &str) -> Result<(Vec<Target>, Vec<String>)> {
     let resp = http::get(addr, &format!("{base_path}/models"), None)?;
     if resp.status != 200 {
         bail!("GET {base_path}/models returned {}", resp.status);
@@ -157,24 +182,77 @@ fn discover(addr: &str, base_path: &str) -> Result<Vec<Target>> {
     let listing = Json::parse(std::str::from_utf8(&resp.body)?)
         .map_err(|e| anyhow::anyhow!("bad /models JSON: {e}"))?;
     let mut targets = Vec::new();
+    let mut progressives = Vec::new();
     for m in listing.get("models").and_then(|m| m.as_arr()).unwrap_or(&[]) {
         let Some(name) = m.get("name").and_then(|n| n.as_str()) else { continue };
         let layers = m.get("layers").and_then(|l| l.as_usize()).unwrap_or(0);
         for layer in 0..layers {
             targets.push(Target { model: name.to_string(), layer });
         }
+        if m.get("tiers").and_then(|t| t.as_usize()).unwrap_or(0) > 0 {
+            progressives.push(name.to_string());
+        }
     }
     if targets.is_empty() {
         bail!("server lists no layers to fetch");
     }
-    Ok(targets)
+    Ok((targets, progressives))
+}
+
+/// The time-to-first-usable-tier measurement: sequential GETs of the
+/// base-tier prefix (`?tier=0`) and the full container for every
+/// progressive model, `probes` rounds each.
+fn probe_progressive(
+    addr: &str,
+    base_path: &str,
+    progressives: &[String],
+    probes: usize,
+) -> Result<Option<ProgressiveLatency>> {
+    if progressives.is_empty() {
+        return Ok(None);
+    }
+    let mut base_lat: Vec<f64> = Vec::new();
+    let mut full_lat: Vec<f64> = Vec::new();
+    let (mut base_bytes, mut full_bytes) = (0u64, 0u64);
+    for m in progressives {
+        for i in 0..probes.max(1) {
+            let t = Instant::now();
+            let r = http::get(addr, &format!("{base_path}/models/{m}?tier=0"), None)?;
+            if r.status != 200 {
+                bail!("GET /models/{m}?tier=0 returned {}", r.status);
+            }
+            base_lat.push(t.elapsed().as_secs_f64() * 1e3);
+            let t = Instant::now();
+            let full = http::get(addr, &format!("{base_path}/models/{m}"), None)?;
+            if full.status != 200 {
+                bail!("GET /models/{m} returned {}", full.status);
+            }
+            full_lat.push(t.elapsed().as_secs_f64() * 1e3);
+            if i == 0 {
+                base_bytes += r.body.len() as u64;
+                full_bytes += full.body.len() as u64;
+            }
+        }
+    }
+    base_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    full_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(Some(ProgressiveLatency {
+        models: progressives.len(),
+        probes: probes.max(1),
+        base_p50_ms: percentile(&base_lat, 50.0),
+        base_p99_ms: percentile(&base_lat, 99.0),
+        full_p50_ms: percentile(&full_lat, 50.0),
+        full_p99_ms: percentile(&full_lat, 99.0),
+        base_bytes,
+        full_bytes,
+    }))
 }
 
 /// Run the load; returns the aggregate report (and writes `out` if set).
 pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     let (addr, base_path) = http::parse_url(&opts.url)?;
     let base_path = base_path.trim_end_matches('/').to_string();
-    let targets = discover(&addr, &base_path)?;
+    let (targets, progressives) = discover(&addr, &base_path)?;
 
     struct ClientResult {
         latencies_ms: Vec<f64>,
@@ -283,6 +361,10 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         bail!("all {} requests failed", opts.clients * opts.requests);
     }
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // sequential and outside wall_s on purpose: time-to-first-usable-tier
+    // compares base-prefix vs full-container latency on an idle server,
+    // not under the concurrent mix above
+    let progressive = probe_progressive(&addr, &base_path, &progressives, opts.requests)?;
     let report = LoadgenReport {
         total_requests: opts.clients * opts.requests,
         failures,
@@ -298,6 +380,7 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         bytes_transferred: bytes,
         bytes_requests: breq,
         weights_requests: wreq,
+        progressive,
     };
     if let Some(path) = &opts.out {
         std::fs::write(path, to_json(opts, &report).to_string_pretty())
@@ -375,7 +458,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 }
 
 fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
-    json::obj(vec![
+    let mut fields = vec![
         ("bench", json::s("serve")),
         ("url", json::s(&opts.url)),
         ("clients", json::num(opts.clients as f64)),
@@ -423,7 +506,23 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
                 ("layer_weights", json::num(r.weights_requests as f64)),
             ]),
         ),
-    ])
+    ];
+    if let Some(p) = &r.progressive {
+        fields.push((
+            "progressive",
+            json::obj(vec![
+                ("models", json::num(p.models as f64)),
+                ("probes", json::num(p.probes as f64)),
+                ("base_tier_p50_ms", json::num(p.base_p50_ms)),
+                ("base_tier_p99_ms", json::num(p.base_p99_ms)),
+                ("full_p50_ms", json::num(p.full_p50_ms)),
+                ("full_p99_ms", json::num(p.full_p99_ms)),
+                ("base_tier_bytes", json::num(p.base_bytes as f64)),
+                ("full_bytes", json::num(p.full_bytes as f64)),
+            ]),
+        ));
+    }
+    json::obj(fields)
 }
 
 #[cfg(test)]
@@ -502,6 +601,16 @@ mod tests {
             bytes_transferred: 1234,
             bytes_requests: 3,
             weights_requests: 3,
+            progressive: Some(ProgressiveLatency {
+                models: 1,
+                probes: 3,
+                base_p50_ms: 0.4,
+                base_p99_ms: 0.9,
+                full_p50_ms: 1.1,
+                full_p99_ms: 2.2,
+                base_bytes: 100,
+                full_bytes: 300,
+            }),
         };
         let j = to_json(&opts, &r);
         let parsed = Json::parse(&j.to_string_pretty()).unwrap();
@@ -521,5 +630,17 @@ mod tests {
         assert_eq!(parsed.path("injected.slowloris").unwrap().as_usize().unwrap(), 3);
         assert_eq!(parsed.path("injected.hostile_threads").unwrap().as_usize().unwrap(), 1);
         assert_eq!(parsed.path("injected.unexpected").unwrap().as_usize().unwrap(), 0);
+        // time-to-first-usable-tier section, present only when the
+        // server hosts progressive containers
+        assert_eq!(parsed.path("progressive.models").unwrap().as_usize().unwrap(), 1);
+        assert!(parsed.path("progressive.base_tier_p50_ms").is_some());
+        assert!(parsed.path("progressive.full_p99_ms").is_some());
+        assert_eq!(
+            parsed.path("progressive.base_tier_bytes").unwrap().as_usize().unwrap(),
+            100
+        );
+        let r2 = LoadgenReport { progressive: None, ..r };
+        let parsed2 = Json::parse(&to_json(&opts, &r2).to_string_pretty()).unwrap();
+        assert!(parsed2.get("progressive").is_none());
     }
 }

@@ -8,6 +8,9 @@
 //! /stats                             cache + traffic counters (JSON)
 //! /models                            model listing (JSON)
 //! /models/{m}                        whole .dcbc container  [Range OK]
+//! /models/{m}?tier={t}               exact byte prefix of a v4
+//!                                    progressive container through
+//!                                    tier t [Range OK]
 //! /models/{m}/manifest               layer/chunk byte map (JSON)
 //! /models/{m}/layers/{l}             compressed layer payload [Range OK]
 //! /models/{m}/layers/{l}/weights     decoded f32 LE weights (cached)
@@ -82,6 +85,9 @@ struct ServerState {
     /// delta endpoint tells a stale-but-legitimate base (409) from a
     /// fingerprint it has never heard of (404).
     known_fps: BTreeMap<u64, String>,
+    /// Container model name → key in `models` of a v4 progressive
+    /// container for it, so the delta 409 can advertise the fallback.
+    progressives: BTreeMap<String, String>,
     cache: DecodedCache,
     /// Worker cap for intra-layer (chunk) decode fan-out.
     decode_workers: usize,
@@ -165,9 +171,14 @@ pub fn load_model_dir(dir: &PathBuf) -> Result<BTreeMap<String, ModelEntry>> {
 /// deserialization.
 pub fn build_delta_registry(
     models: &BTreeMap<String, ModelEntry>,
-) -> (BTreeMap<(String, u64), String>, BTreeMap<u64, String>) {
+) -> (
+    BTreeMap<(String, u64), String>,
+    BTreeMap<u64, String>,
+    BTreeMap<String, String>,
+) {
     let mut deltas = BTreeMap::new();
     let mut known_fps = BTreeMap::new();
+    let mut progressives = BTreeMap::new();
     for (key, m) in models {
         match m.index.parent_fp {
             Some(fp) => {
@@ -175,10 +186,13 @@ pub fn build_delta_registry(
             }
             None => {
                 known_fps.insert(crate::util::fnv1a(&m.bytes), key.clone());
+                if !m.index.tier_ends.is_empty() {
+                    progressives.insert(m.index.model.clone(), key.clone());
+                }
             }
         }
     }
-    (deltas, known_fps)
+    (deltas, known_fps, progressives)
 }
 
 /// Bind, spawn the accept loop, and return immediately.
@@ -187,11 +201,12 @@ pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
     let listener =
         TcpListener::bind(&opts.addr).with_context(|| format!("binding {}", opts.addr))?;
     let addr = listener.local_addr()?;
-    let (deltas, known_fps) = build_delta_registry(&models);
+    let (deltas, known_fps, progressives) = build_delta_registry(&models);
     let state = Arc::new(ServerState {
         models,
         deltas,
         known_fps,
+        progressives,
         cache: DecodedCache::new(opts.cache_bytes),
         decode_workers: opts.workers,
         requests: AtomicU64::new(0),
@@ -311,6 +326,9 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                     if let Some(fp) = m.index.parent_fp {
                         fields.push(("parent_fingerprint", json::s(&format!("{fp:016x}"))));
                     }
+                    if !m.index.tier_ends.is_empty() {
+                        fields.push(("tiers", json::num(m.index.tier_ends.len() as f64)));
+                    }
                     json::obj(fields)
                 })
                 .collect();
@@ -320,6 +338,54 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
             let Some(m) = state.models.get(*name) else {
                 return not_found(stream, name);
             };
+            // ?tier=t on a v4 progressive container serves the exact
+            // byte prefix through tier t — a complete container in its
+            // own right (progressive truncation rule). Hostile values
+            // are shed with structured errors, never a panic.
+            if let Some(t) = http::query_param(&req.path, "tier") {
+                let Ok(t) = t.parse::<usize>() else {
+                    return http::write_error(
+                        stream,
+                        404,
+                        "Not Found",
+                        "unparseable ?tier= (want a decimal tier index)",
+                    );
+                };
+                if m.index.tier_ends.is_empty() {
+                    return http::write_error(
+                        stream,
+                        409,
+                        "Conflict",
+                        &format!(
+                            "model {name} is not a progressive container \
+                             (version {}) — fetch it without ?tier=",
+                            m.index.version
+                        ),
+                    );
+                }
+                let Some(&end) = m.index.tier_ends.get(t) else {
+                    return http::write_error(
+                        stream,
+                        404,
+                        "Not Found",
+                        &format!(
+                            "tier {t} out of range (container has {} tiers)",
+                            m.index.tier_ends.len()
+                        ),
+                    );
+                };
+                let headers = [
+                    ("X-Tier", t.to_string()),
+                    ("X-Tiers-Total", m.index.tier_ends.len().to_string()),
+                ];
+                return write_bytes_ranged_with(
+                    stream,
+                    req,
+                    &m.bytes[..end],
+                    "application/octet-stream",
+                    &headers,
+                );
+            }
             write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream")
         }
         ["models", name, "delta"] => {
@@ -350,13 +416,22 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                 return write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream");
             }
             if state.known_fps.contains_key(&fp) {
+                // advertise a progressive fallback when one is loaded:
+                // upgrading tier-by-tier beats refetching whole files
+                let fallback = match state.progressives.get(*name) {
+                    Some(key) => format!(
+                        "a progressive container is available: \
+                         GET /models/{key}?tier=0 and upgrade from there"
+                    ),
+                    None => "no progressive container is available for this model".into(),
+                };
                 return http::write_error(
                     stream,
                     409,
                     "Conflict",
                     &format!(
                         "no delta from base {fp:016x} for model {name} — \
-                         fetch the full container instead"
+                         fetch the full container instead ({fallback})"
                     ),
                 );
             }
@@ -445,23 +520,32 @@ fn write_bytes_ranged(
     bytes: &[u8],
     content_type: &str,
 ) -> Result<()> {
+    write_bytes_ranged_with(stream, req, bytes, content_type, &[])
+}
+
+/// [`write_bytes_ranged`] with extra response headers (e.g. `X-Tier`).
+fn write_bytes_ranged_with(
+    stream: &mut TcpStream,
+    req: &Request,
+    bytes: &[u8],
+    content_type: &str,
+    extra: &[(&str, String)],
+) -> Result<()> {
     match req.byte_range(bytes.len()) {
-        http::RangeOutcome::Ignored => http::write_response(
-            stream,
-            200,
-            "OK",
-            content_type,
-            &[("Accept-Ranges", "bytes".to_string())],
-            bytes,
-        ),
+        http::RangeOutcome::Ignored => {
+            let mut headers = vec![("Accept-Ranges", "bytes".to_string())];
+            headers.extend(extra.iter().cloned());
+            http::write_response(stream, 200, "OK", content_type, &headers, bytes)
+        }
         http::RangeOutcome::Satisfiable(r) => {
-            let headers = [
+            let mut headers = vec![
                 ("Accept-Ranges", "bytes".to_string()),
                 (
                     "Content-Range",
                     format!("bytes {}-{}/{}", r.start, r.end - 1, bytes.len()),
                 ),
             ];
+            headers.extend(extra.iter().cloned());
             http::write_response(
                 stream,
                 206,
@@ -507,6 +591,7 @@ fn manifest_json(name: &str, index: &ContainerIndex) -> Json {
             json::obj(vec![
                 ("index", json::num(i as f64)),
                 ("name", json::s(&l.name)),
+                ("tier", json::num(l.tier as f64)),
                 (
                     "dims",
                     json::arr(l.dims.iter().map(|&d| json::num(d as f64)).collect()),
@@ -529,6 +614,12 @@ fn manifest_json(name: &str, index: &ContainerIndex) -> Json {
     ];
     if let Some(fp) = index.parent_fp {
         fields.push(("parent_fingerprint", json::s(&format!("{fp:016x}"))));
+    }
+    if !index.tier_ends.is_empty() {
+        fields.push((
+            "tier_ends",
+            json::arr(index.tier_ends.iter().map(|&e| json::num(e as f64)).collect()),
+        ));
     }
     fields.push(("layers", json::arr(layers)));
     json::obj(fields)

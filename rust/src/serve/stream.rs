@@ -19,7 +19,7 @@
 use crate::codec::decode_levels;
 use crate::model::container::{
     parse_container_prefix, parse_layer_header, parse_varint_prefix, ChunkSpan, LayerHeader,
-    Parsed,
+    Parsed, VERSION_CHUNKED, VERSION_DELTA, VERSION_PROGRESSIVE,
 };
 use crate::quant::QuantGrid;
 use anyhow::{bail, Result};
@@ -57,7 +57,13 @@ pub enum StreamEvent {
     /// layers emit exactly one of these (chunk 0 of 1).
     Chunk { layer: usize, chunk: usize, n_chunks: usize, n_weights: usize },
     /// A layer's payload and bias are complete: reconstructed weights.
+    /// In a version-4 container, layers of refinement tiers carry the
+    /// **residual** levels `R` (like a v3 delta) that
+    /// [`crate::delta::ProgressiveApplier`] folds into the running model.
     Layer(Box<DecodedLayer>),
+    /// A version-4 tier body completed: the container is usable at this
+    /// quality right now, even if the transfer stops here.
+    Tier { tier: usize, n_tiers: usize },
     /// The container ended cleanly (all layers delivered).
     End,
 }
@@ -71,6 +77,11 @@ enum State {
     Chunks { hdr: LayerHeader, spans: Vec<ChunkSpan>, next: usize, levels: Vec<i32> },
     /// Payload done; waiting for the bias length + bytes.
     Bias { hdr: LayerHeader, levels: Vec<i32>, bias_len: Option<usize> },
+    /// Version-4 only: at a tier-body boundary, waiting for the next
+    /// refinement tier's first byte. End-of-input here is a *clean*
+    /// finish — the progressive truncation rule accepts EOF exactly at
+    /// a tier boundary as a complete container at that tier.
+    TierBoundary,
     /// Clean end of container.
     Done,
     /// A structural error was reported; all further input is rejected.
@@ -88,6 +99,16 @@ pub struct StreamDecoder {
     version: u8,
     n_layers: usize,
     layer_idx: usize,
+    /// Version passed to [`parse_layer_header`]: equal to `version` for
+    /// v1–v3; for v4 it is [`VERSION_CHUNKED`] during the base tier and
+    /// [`VERSION_DELTA`] in refinement tiers.
+    hdr_version: u8,
+    /// Version-4 declared tier byte lengths (empty otherwise).
+    tier_lens: Vec<u64>,
+    /// Tier currently being decoded.
+    tier_idx: usize,
+    /// Absolute offset at which the current tier's body must end.
+    tier_end_abs: u64,
 }
 
 impl Default for StreamDecoder {
@@ -106,6 +127,10 @@ impl StreamDecoder {
             version: 0,
             n_layers: 0,
             layer_idx: 0,
+            hdr_version: 0,
+            tier_lens: Vec::new(),
+            tier_idx: 0,
+            tier_end_abs: 0,
         }
     }
 
@@ -146,6 +171,9 @@ impl StreamDecoder {
         match &self.state {
             State::Done if self.pos == self.buf.len() => Ok(()),
             State::Done => bail!("trailing bytes after container end"),
+            // progressive truncation rule: EOF at a tier-body boundary
+            // is a complete container at that tier
+            State::TierBoundary => Ok(()),
             State::Failed => bail!("stream decoder already failed"),
             State::Prelude => bail!("truncated container: prelude incomplete"),
             State::LayerHeader => bail!(
@@ -172,6 +200,53 @@ impl StreamDecoder {
         &self.buf[self.pos..]
     }
 
+    /// A layer finished: advance within the container, and for version 4
+    /// handle the tier boundary (tiling check, `Tier` event, switch to
+    /// v3-shaped refinement records).
+    fn layer_done(&mut self, events: &mut Vec<StreamEvent>) -> Result<()> {
+        self.layer_idx += 1;
+        if self.layer_idx < self.n_layers {
+            self.state = State::LayerHeader;
+            return Ok(());
+        }
+        if self.version != VERSION_PROGRESSIVE {
+            events.push(StreamEvent::End);
+            self.state = State::Done;
+            return Ok(());
+        }
+        self.check_tier_tiling()?;
+        events.push(StreamEvent::Tier {
+            tier: self.tier_idx,
+            n_tiers: self.tier_lens.len(),
+        });
+        if self.tier_idx + 1 == self.tier_lens.len() {
+            events.push(StreamEvent::End);
+            self.state = State::Done;
+        } else {
+            self.tier_idx += 1;
+            self.tier_end_abs += self.tier_lens[self.tier_idx];
+            self.layer_idx = 0;
+            self.hdr_version = VERSION_DELTA;
+            self.state = State::TierBoundary;
+        }
+        Ok(())
+    }
+
+    /// The just-finished tier body must end exactly where the tier table
+    /// declared (`docs/FORMAT.md` §"Progressive tiers").
+    fn check_tier_tiling(&self) -> Result<()> {
+        let abs = self.consumed + self.pos as u64;
+        if abs != self.tier_end_abs {
+            bail!(
+                "tier {} body does not tile its declared byte length \
+                 (body ends at offset {abs}, tier table says {})",
+                self.tier_idx,
+                self.tier_end_abs
+            );
+        }
+        Ok(())
+    }
+
     /// Run the state machine until it stalls on missing input.
     fn advance(&mut self, events: &mut Vec<StreamEvent>) -> Result<()> {
         loop {
@@ -181,13 +256,35 @@ impl StreamDecoder {
                         self.pos += used;
                         self.version = p.version;
                         self.n_layers = p.n_layers;
+                        self.hdr_version = if p.version == VERSION_PROGRESSIVE {
+                            VERSION_CHUNKED
+                        } else {
+                            p.version
+                        };
+                        self.tier_lens = p.tier_lens;
                         events.push(StreamEvent::Start {
                             model: p.name,
                             version: p.version,
                             n_layers: p.n_layers,
                             parent_fp: p.parent_fp,
                         });
-                        if self.n_layers == 0 {
+                        if self.version == VERSION_PROGRESSIVE {
+                            self.tier_end_abs =
+                                self.consumed + self.pos as u64 + self.tier_lens[0];
+                            if self.n_layers == 0 {
+                                // a zero-layer container collapses to its
+                                // (empty) base tier, like the batch reader
+                                self.check_tier_tiling()?;
+                                events.push(StreamEvent::Tier {
+                                    tier: 0,
+                                    n_tiers: self.tier_lens.len(),
+                                });
+                                events.push(StreamEvent::End);
+                                self.state = State::Done;
+                            } else {
+                                self.state = State::LayerHeader;
+                            }
+                        } else if self.n_layers == 0 {
                             events.push(StreamEvent::End);
                             self.state = State::Done;
                         } else {
@@ -199,7 +296,7 @@ impl StreamDecoder {
                         return Ok(());
                     }
                 },
-                State::LayerHeader => match parse_layer_header(self.rest(), self.version)? {
+                State::LayerHeader => match parse_layer_header(self.rest(), self.hdr_version)? {
                     Parsed::Complete(hdr, used) => {
                         self.pos += used;
                         if hdr.skipped {
@@ -217,13 +314,7 @@ impl StreamDecoder {
                                 bias: Vec::new(),
                                 skipped: true,
                             })));
-                            self.layer_idx += 1;
-                            if self.layer_idx == self.n_layers {
-                                events.push(StreamEvent::End);
-                                self.state = State::Done;
-                            } else {
-                                self.state = State::LayerHeader;
-                            }
+                            self.layer_done(events)?;
                             continue;
                         }
                         let spans = hdr.chunk_spans();
@@ -300,13 +391,14 @@ impl StreamDecoder {
                         bias,
                         skipped: false,
                     })));
-                    self.layer_idx += 1;
-                    if self.layer_idx == self.n_layers {
-                        events.push(StreamEvent::End);
-                        self.state = State::Done;
-                    } else {
-                        self.state = State::LayerHeader;
+                    self.layer_done(events)?;
+                }
+                State::TierBoundary => {
+                    if self.rest().is_empty() {
+                        self.state = State::TierBoundary;
+                        return Ok(());
                     }
+                    self.state = State::LayerHeader;
                 }
                 State::Done => {
                     self.state = State::Done;
@@ -485,7 +577,7 @@ mod tests {
                     }
                     StreamEvent::Chunk { .. } => chunk_events += 1,
                     StreamEvent::End => saw_end = true,
-                    StreamEvent::Layer(_) => {}
+                    StreamEvent::Layer(_) | StreamEvent::Tier { .. } => {}
                 }
             }
             assert!(saw_start && saw_end);
@@ -665,5 +757,135 @@ mod tests {
         let model = sample_container(5, true);
         let layers = decode_all(&model.serialize()).unwrap();
         assert_matches_batch(&model, &layers);
+    }
+
+    use crate::model::{DeltaLayer, ProgressiveModel};
+
+    /// A 2-layer, 3-tier progressive container with chunked payloads and
+    /// a skip record in tier 1 — built record-by-record so the stream
+    /// shape is exercised independently of the residual algebra.
+    fn sample_progressive(seed: u64) -> ProgressiveModel {
+        let mut rng = SplitMix64::new(seed);
+        let cfg = CodecConfig::default();
+        let base = vec![
+            layer_from_levels("conv1", &rand_levels(&mut rng, 400, 0.8, 9), 3, cfg, vec![1.0]),
+            layer_from_levels("fc", &rand_levels(&mut rng, 120, 0.5, 4), 1, cfg, vec![]),
+        ];
+        let r1 = vec![
+            DeltaLayer::Coded(layer_from_levels(
+                "conv1",
+                &rand_levels(&mut rng, 400, 0.95, 2),
+                2,
+                cfg,
+                vec![1.0],
+            )),
+            DeltaLayer::Skipped("fc".into()),
+        ];
+        let r2 = vec![
+            DeltaLayer::Coded(layer_from_levels(
+                "conv1",
+                &rand_levels(&mut rng, 400, 0.9, 3),
+                1,
+                cfg,
+                vec![1.0],
+            )),
+            DeltaLayer::Coded(layer_from_levels(
+                "fc",
+                &rand_levels(&mut rng, 120, 0.9, 2),
+                1,
+                cfg,
+                vec![],
+            )),
+        ];
+        ProgressiveModel { name: "prog".into(), base, refinements: vec![r1, r2] }
+    }
+
+    #[test]
+    fn v4_progressive_streams_match_batch_at_every_granularity() {
+        let prog = sample_progressive(61);
+        let bytes = prog.serialize();
+        // batch reference: levels of every record in file order
+        let want: Vec<(String, bool, Vec<i32>)> = prog
+            .base
+            .iter()
+            .map(|l| (l.name.clone(), false, l.decode_levels_with(1)))
+            .chain(prog.refinements.iter().flatten().map(|d| match d {
+                DeltaLayer::Skipped(n) => (n.clone(), true, Vec::new()),
+                DeltaLayer::Coded(c) => (c.name.clone(), false, c.decode_levels_with(1)),
+            }))
+            .collect();
+
+        for split in [1usize, 5, 13, bytes.len()] {
+            let events = feed_in_splits(&bytes, std::iter::repeat(split)).unwrap();
+            let mut tiers = Vec::new();
+            let mut layers_seen_at_tier = Vec::new();
+            let mut n_layer_events = 0usize;
+            for e in &events {
+                match e {
+                    StreamEvent::Start { version, n_layers, parent_fp, .. } => {
+                        assert_eq!(*version, 4);
+                        assert_eq!(*n_layers, 2);
+                        assert_eq!(*parent_fp, None);
+                    }
+                    StreamEvent::Layer(_) => n_layer_events += 1,
+                    StreamEvent::Tier { tier, n_tiers } => {
+                        assert_eq!(*n_tiers, 3);
+                        tiers.push(*tier);
+                        layers_seen_at_tier.push(n_layer_events);
+                    }
+                    _ => {}
+                }
+            }
+            // one Tier event per tier, in order, each after its 2 layers
+            assert_eq!(tiers, vec![0, 1, 2], "split={split}");
+            assert_eq!(layers_seen_at_tier, vec![2, 4, 6], "split={split}");
+            let got = layers_of(events);
+            assert_eq!(got.len(), want.len(), "split={split}");
+            for (g, (name, skipped, levels)) in got.iter().zip(&want) {
+                assert_eq!(&g.name, name, "split={split}");
+                assert_eq!(g.skipped, *skipped, "split={split}");
+                assert_eq!(&g.levels, levels, "split={split} layer={name}");
+            }
+        }
+    }
+
+    #[test]
+    fn v4_truncation_at_tier_boundary_is_a_clean_finish() {
+        let prog = sample_progressive(62);
+        let bytes = prog.serialize();
+        let lens = prog.tier_body_lens();
+        let prelude = bytes.len() - lens.iter().sum::<usize>();
+        let ends: Vec<usize> = lens
+            .iter()
+            .scan(prelude, |acc, &l| {
+                *acc += l;
+                Some(*acc)
+            })
+            .collect();
+        for (t, &end) in ends.iter().enumerate() {
+            // exactly at the boundary: complete container at tier t
+            let mut dec = StreamDecoder::new();
+            let events = dec.feed(&bytes[..end]).unwrap();
+            dec.finish().unwrap();
+            let tiers = events
+                .iter()
+                .filter(|e| matches!(e, StreamEvent::Tier { .. }))
+                .count();
+            assert_eq!(tiers, t + 1, "boundary {t}");
+            // one byte short / one byte past: incomplete
+            for cut in [end - 1, (end + 1).min(bytes.len())] {
+                if cut == end || cut == bytes.len() {
+                    continue;
+                }
+                let mut dec = StreamDecoder::new();
+                dec.feed(&bytes[..cut]).unwrap();
+                assert!(dec.finish().is_err(), "cut={cut}");
+            }
+        }
+        // trailing garbage after the last declared tier
+        let mut dec = StreamDecoder::new();
+        let mut all = bytes.clone();
+        all.push(0);
+        assert!(dec.feed(&all).is_err());
     }
 }

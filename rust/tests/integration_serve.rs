@@ -168,6 +168,11 @@ fn server_end_to_end() {
     assert_eq!(second.body, first.body);
     assert!(handle.cache_stats().hits > hits_before, "repeat fetch must hit the LRU");
 
+    // -- ?tier= on a non-progressive container is a 409 -------------------
+    let resp = http::get(&addr, "/models/alpha?tier=0", None).unwrap();
+    assert_eq!(resp.status, 409);
+    assert!(String::from_utf8_lossy(&resp.body).contains("not a progressive"));
+
     // -- unknown resources ------------------------------------------------
     assert_eq!(http::get(&addr, "/models/nope", None).unwrap().status, 404);
     assert_eq!(http::get(&addr, "/models/alpha/layers/99", None).unwrap().status, 404);
@@ -252,6 +257,111 @@ fn delta_endpoint_serves_and_sheds_hostile_from() {
 
     // the server is still healthy after the hostile batch
     assert_eq!(http::get(&addr, "/healthz", None).unwrap().status, 200);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A served v4 progressive container: `?tier=t` returns the exact byte
+/// prefix through tier t, which is itself a complete container that
+/// materializes to the standalone tier-t model byte-for-byte; hostile
+/// tier values are shed; the delta 409 advertises the progressive
+/// fallback.
+#[test]
+fn progressive_tier_endpoint_serves_exact_prefixes() {
+    use deepcabac::delta::{encode_progressive, materialize};
+    use deepcabac::model::{deserialize_any, Container};
+
+    let dir =
+        std::env::temp_dir().join(format!("dcbc_serve_{}_prog", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CodecConfig::default();
+
+    // two quality tiers over the same architecture (the second layer is
+    // unchanged, so the refinement skips it)
+    let coarse = CompressedModel {
+        name: "prog".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 17, cfg), make_layer("fc", 300, 1, 18, cfg)],
+    };
+    let fine = CompressedModel {
+        name: "prog".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 19, cfg), make_layer("fc", 300, 1, 18, cfg)],
+    };
+    let (prog, _) = encode_progressive(&[coarse.clone(), fine.clone()], 2).unwrap();
+    let prog_bytes = prog.serialize();
+    std::fs::write(dir.join("prog.dcbc"), &prog_bytes).unwrap();
+
+    let handle = start(ServeOptions {
+        dir: dir.clone(),
+        addr: "127.0.0.1:0".into(),
+        cache_bytes: 1 << 20,
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // listing reports the tier count
+    let resp = http::get(&addr, "/models", None).unwrap();
+    let listing = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let listed = listing.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(listed[0].get("tiers").unwrap().as_usize().unwrap(), 2);
+
+    // manifest carries tier_ends and per-layer tiers
+    let resp = http::get(&addr, "/models/prog/manifest", None).unwrap();
+    let manifest = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let tier_ends = manifest.get("tier_ends").unwrap().as_arr().unwrap();
+    assert_eq!(tier_ends.len(), 2);
+    assert_eq!(tier_ends[1].as_usize().unwrap(), prog_bytes.len());
+    let mlayers = manifest.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(mlayers.len(), 4);
+    assert_eq!(mlayers[3].get("tier").unwrap().as_usize().unwrap(), 1);
+
+    // tier 0 is a strict byte prefix of the full container...
+    let t0 = http::get(&addr, "/models/prog?tier=0", None).unwrap();
+    assert_eq!(t0.status, 200);
+    assert_eq!(t0.header("x-tier"), Some("0"));
+    assert_eq!(t0.header("x-tiers-total"), Some("2"));
+    let full = http::get(&addr, "/models/prog", None).unwrap();
+    assert_eq!(full.body, prog_bytes);
+    assert!(t0.body.len() < full.body.len());
+    assert_eq!(&full.body[..t0.body.len()], &t0.body[..]);
+    // ...that is itself a complete container materializing to the
+    // standalone coarse model byte-for-byte
+    let p0 = match deserialize_any(&t0.body).unwrap() {
+        Container::Progressive(p) => p,
+        other => panic!("expected progressive, got {other:?}"),
+    };
+    assert_eq!(p0.n_tiers(), 1);
+    assert_eq!(materialize(&p0, 0, 2).unwrap().serialize(), coarse.serialize());
+
+    // the final tier equals the whole file, and materializes to `fine`
+    let t1 = http::get(&addr, "/models/prog?tier=1", None).unwrap();
+    assert_eq!(t1.body, prog_bytes);
+    let p1 = match deserialize_any(&t1.body).unwrap() {
+        Container::Progressive(p) => p,
+        other => panic!("expected progressive, got {other:?}"),
+    };
+    assert_eq!(materialize(&p1, 1, 2).unwrap().serialize(), fine.serialize());
+
+    // tier prefixes stay Range-compatible (the --upgrade path fetches
+    // only the bytes between two tier ends)
+    let ranged = http::get(&addr, "/models/prog?tier=0", Some((4, 11))).unwrap();
+    assert_eq!(ranged.status, 206);
+    assert_eq!(&ranged.body, &prog_bytes[4..12]);
+
+    // hostile tier values are shed with structured errors
+    assert_eq!(http::get(&addr, "/models/prog?tier=2", None).unwrap().status, 404);
+    assert_eq!(http::get(&addr, "/models/prog?tier=x", None).unwrap().status, 404);
+
+    // the delta 409 advertises the progressive fallback
+    let fp = fnv1a(&prog_bytes);
+    let resp =
+        http::get(&addr, &format!("/models/prog/delta?from={fp:016x}"), None).unwrap();
+    assert_eq!(resp.status, 409);
+    let body = String::from_utf8_lossy(&resp.body);
+    assert!(body.contains("progressive container is available"), "{body}");
+    assert!(body.contains("?tier=0"), "{body}");
 
     handle.shutdown();
     std::fs::remove_dir_all(&dir).ok();
