@@ -88,20 +88,44 @@ def sweep_md(b):
 
 
 def serve_md(b):
+    mode = b.get("mode", "closed")
+    mode_note = f", open loop @ {b['rate_rps']:g} req/s" if mode == "open" else ""
     out = [
         f"**§Serving** — {int(b['clients'])} clients × "
-        f"{int(b['requests_per_client'])} requests against `{b['url']}`:",
+        f"{int(b['requests_per_client'])} requests against `{b['url']}`"
+        f"{mode_note}:",
         "",
         table(
-            ["requests", "failures", "p50 ms", "p99 ms", "mean ms", "req/s",
-             "bytes moved"],
+            ["requests", "failures", "p50 ms", "p99 ms", "p999 ms", "mean ms",
+             "req/s", "bytes moved"],
             [[
                 int(b["total_requests"]), int(b["failures"]), fmt(b["p50_ms"]),
-                fmt(b["p99_ms"]), fmt(b["mean_ms"]), fmt(b["throughput_rps"], 0),
+                fmt(b["p99_ms"]), fmt(b.get("p999_ms", b["p99_ms"])),
+                fmt(b["mean_ms"]), fmt(b["throughput_rps"], 0),
                 int(b["bytes_transferred"]),
             ]],
         ),
     ]
+    scaling = b.get("connection_scaling")
+    if scaling:
+        out += [
+            "",
+            f"Connection scaling ({len(scaling)} points, keep-alive sockets, "
+            "reuse = responses served on an already-used socket):",
+            "",
+            table(
+                ["conns", "established", "ok", "failures", "shed", "reused",
+                 "reconnects", "p50 ms", "p99 ms", "p999 ms", "req/s",
+                 "ttfut ms"],
+                [[
+                    int(p["connections"]), int(p["established"]), int(p["ok"]),
+                    int(p["failures"]), int(p["shed"]), int(p["reused"]),
+                    int(p["reconnects"]), fmt(p["p50_ms"]), fmt(p["p99_ms"]),
+                    fmt(p["p999_ms"]), fmt(p["throughput_rps"], 0),
+                    fmt(p["ttfut_ms"]) if "ttfut_ms" in p else "—",
+                ] for p in scaling],
+            ),
+        ]
     p = b.get("progressive")
     if p:
         out += [

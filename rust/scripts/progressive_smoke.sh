@@ -88,3 +88,22 @@ echo "upgrade reassembled the full container byte-for-byte"
 "$BIN" fetch --url "http://$ADDR/models/mobilenet" --upgrade "$WORK/upgraded.dcbc" \
   --out "$WORK/upgraded2.dcbc" | grep -q "already complete"
 echo "re-upgrade of a complete container is a clean no-op"
+
+echo "== decoded-layer cache: per-tier LRU hit rate under repeat load =="
+# loadgen alternates compressed-bytes and decoded-weights requests; the
+# weights repeats must land in the (model, layer, tier)-keyed LRU
+"$BIN" loadgen --url "http://$ADDR" --clients 8 --requests 16 \
+  --out "$WORK/BENCH_progressive_serve.json"
+python3 - "http://$ADDR/stats" <<'PYEOF'
+import json, sys, urllib.request
+
+stats = json.load(urllib.request.urlopen(sys.argv[1], timeout=10))
+cache = stats["cache"]
+hits, misses = cache["hits"], cache["misses"]
+assert hits + misses > 0, f"no decode traffic reached the cache: {cache}"
+rate = hits / (hits + misses)
+# every distinct (layer, tier) misses once, every repeat must hit
+assert rate >= 0.5, f"cache hit rate {rate:.1%} (hits {hits}, misses {misses})"
+print(f"decoded-layer cache hit rate {rate:.1%} ({hits} hits / {misses} misses, "
+      f"{cache['entries']} entries resident)")
+PYEOF

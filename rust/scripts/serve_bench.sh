@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# Connection-scaling serve benchmark, run by CI from the rust/ directory:
+#   1. sweep --progressive builds a tiered .dcbc v4 container so the
+#      sweep's time-to-first-usable-tier probe has a ?tier=0 prefix to hit
+#   2. start the event-loop server and run the fixed 32-client loadgen
+#      plus a 1..1024 connection-scaling sweep into BENCH_serve.json
+#   3. regression gate: p99 at the smoke point (64 connections) must not
+#      worsen by more than 25% against the committed baseline
+#      (BENCH_serve_baseline.json); re-baseline by copying a trusted
+#      BENCH_serve.json over it
+set -euo pipefail
+
+BIN=${BIN:-target/release/deepcabac}
+WORK=$(mktemp -d)
+mkdir -p "$WORK/models"
+
+# 1024 concurrent sockets on each side needs headroom over the default
+# 1024 fd soft limit
+ulimit -n 4096 || true
+
+cleanup() {
+  [ -n "${SERVER_PID:-}" ] && kill "$SERVER_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== build a progressive container for the ttfut probe =="
+"$BIN" sweep --arch mobilenet --scale 16 --points 5 --workers 4 --chunks 4 \
+  --progressive --tiers 2 \
+  --out "$WORK/models/mobilenet.dcbc"
+
+echo "== start event-loop server on an ephemeral port =="
+"$BIN" serve --dir "$WORK/models" --addr 127.0.0.1:0 --cache-mb 32 --workers 4 \
+  --event-loop \
+  > "$WORK/serve.log" 2>&1 &
+SERVER_PID=$!
+
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's#^listening on http://##p' "$WORK/serve.log" | head -n1)
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$WORK/serve.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never announced its port"; cat "$WORK/serve.log"; exit 1; }
+echo "server at $ADDR"
+
+echo "== fixed loadgen + connection-scaling sweep =="
+"$BIN" loadgen --url "http://$ADDR" --clients 32 --requests 8 \
+  --connections-sweep 1,64,256,1024 --sweep-requests 3 --out BENCH_serve.json
+cat BENCH_serve.json
+
+echo "== regression gate: p99 at 64 connections vs committed baseline =="
+python3 - <<'PYEOF'
+import json
+import os
+import sys
+
+SMOKE_CONNS = 64
+ALLOWED_WORSENING = 1.25
+BASELINE = "BENCH_serve_baseline.json"
+
+cur = json.load(open("BENCH_serve.json"))
+points = {p["connections"]: p for p in cur["connection_scaling"]}
+assert sorted(points) == [1, 64, 256, 1024], f"sweep points: {sorted(points)}"
+for p in points.values():
+    # the container is progressive, so every point must carry the
+    # time-to-first-usable-tier probe
+    assert "ttfut_ms" in p, f"sweep point lacks ttfut_ms: {p}"
+    assert p["ttfut_ms"] >= 0.0, p
+
+if not os.path.exists(BASELINE):
+    print(f"no {BASELINE} committed — bootstrap by copying BENCH_serve.json "
+          "over it; gate skipped")
+    sys.exit(0)
+
+base = json.load(open(BASELINE))
+base_points = {p["connections"]: p for p in base.get("connection_scaling", [])}
+if SMOKE_CONNS not in base_points:
+    print(f"{BASELINE} has no {SMOKE_CONNS}-connection point — re-baseline; "
+          "gate skipped")
+    sys.exit(0)
+
+base_p99 = base_points[SMOKE_CONNS]["p99_ms"]
+cur_p99 = points[SMOKE_CONNS]["p99_ms"]
+ceiling = base_p99 * ALLOWED_WORSENING
+if cur_p99 > ceiling:
+    sys.exit(
+        f"p99 regression at {SMOKE_CONNS} connections: {cur_p99:.2f} ms vs "
+        f"baseline {base_p99:.2f} ms (ceiling {ceiling:.2f} ms, "
+        f"+{ALLOWED_WORSENING - 1:.0%} allowed)"
+    )
+print(f"p99 at {SMOKE_CONNS} connections: {cur_p99:.2f} ms vs baseline "
+      f"{base_p99:.2f} ms (ceiling {ceiling:.2f} ms) — ok")
+PYEOF

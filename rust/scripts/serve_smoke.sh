@@ -1,18 +1,27 @@
 #!/usr/bin/env bash
 # Serve-path smoke test, run by CI from the rust/ directory:
 #   1. synthesize a chunked .dcbc container
-#   2. start `deepcabac serve` on an ephemeral port
+#   2. start `deepcabac serve --event-loop` on an ephemeral port
 #   3. `deepcabac fetch` the container through the streaming decoder and
 #      diff every reconstructed tensor against the batch `decompress` path
-#   4. run a 32-client loadgen and leave BENCH_serve.json for upload
+#   4. run a 32-client loadgen with a 1..1024 connection-scaling sweep
+#      and leave BENCH_serve.json for upload
+#   5. prove the scaling claim: the event loop holds all 1024 keep-alive
+#      sockets (reuse > 0); a --threaded server on the same directory
+#      cannot (its sweep shows zero reuse and fewer established sockets)
 set -euo pipefail
 
 BIN=${BIN:-target/release/deepcabac}
 WORK=$(mktemp -d)
 mkdir -p "$WORK/models"
 
+# 1024 concurrent sockets on each side needs headroom over the default
+# 1024 fd soft limit
+ulimit -n 4096 || true
+
 cleanup() {
   [ -n "${SERVER_PID:-}" ] && kill "$SERVER_PID" 2>/dev/null || true
+  [ -n "${THREADED_PID:-}" ] && kill "$THREADED_PID" 2>/dev/null || true
   rm -rf "$WORK"
 }
 trap cleanup EXIT
@@ -21,8 +30,9 @@ echo "== synth a chunked container =="
 "$BIN" synth --arch mobilenet --scale 32 --s 40 --chunks 4 \
   --out "$WORK/models/mobilenet.dcbc"
 
-echo "== start server on an ephemeral port =="
+echo "== start event-loop server on an ephemeral port =="
 "$BIN" serve --dir "$WORK/models" --addr 127.0.0.1:0 --cache-mb 32 --workers 4 \
+  --event-loop \
   > "$WORK/serve.log" 2>&1 &
 SERVER_PID=$!
 
@@ -47,6 +57,59 @@ echo "all tensors byte-identical"
 echo "== single-layer random-access fetch =="
 "$BIN" fetch --url "http://$ADDR/models/mobilenet" --layer 0 --out-dir "$WORK/single"
 
-echo "== 32-client loadgen =="
-"$BIN" loadgen --url "http://$ADDR" --clients 32 --requests 8 --out BENCH_serve.json
+echo "== 32-client loadgen + connection-scaling sweep (event loop) =="
+"$BIN" loadgen --url "http://$ADDR" --clients 32 --requests 8 \
+  --connections-sweep 1,64,256,1024 --sweep-requests 3 --out BENCH_serve.json
 cat BENCH_serve.json
+
+echo "== threaded comparison server (same directory, same sweep point) =="
+"$BIN" serve --dir "$WORK/models" --addr 127.0.0.1:0 --cache-mb 32 --workers 4 \
+  --threaded --read-timeout 500 --write-timeout 1000 \
+  > "$WORK/serve_threaded.log" 2>&1 &
+THREADED_PID=$!
+TADDR=""
+for _ in $(seq 1 100); do
+  TADDR=$(sed -n 's#^listening on http://##p' "$WORK/serve_threaded.log" | head -n1)
+  [ -n "$TADDR" ] && break
+  kill -0 "$THREADED_PID" 2>/dev/null || { cat "$WORK/serve_threaded.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$TADDR" ] || { echo "threaded server never announced its port"; cat "$WORK/serve_threaded.log"; exit 1; }
+echo "threaded server at $TADDR"
+"$BIN" loadgen --url "http://$TADDR" --clients 4 --requests 4 \
+  --connections-sweep 1024 --sweep-requests 1 --out "$WORK/threaded_sweep.json"
+
+echo "== scaling assertions: keep-alive is real, and only the event loop scales =="
+python3 - "$WORK/threaded_sweep.json" <<'PYEOF'
+import json, sys
+
+event = json.load(open("BENCH_serve.json"))
+threaded = json.load(open(sys.argv[1]))
+
+points = {p["connections"]: p for p in event["connection_scaling"]}
+assert sorted(points) == [1, 64, 256, 1024], f"sweep points: {sorted(points)}"
+top = points[1024]
+assert top["established"] == 1024, (
+    f"event loop must hold all 1024 sockets, established {top['established']}"
+)
+assert top["reused"] > 0 and top["reconnects"] == 0, (
+    f"event keep-alive must be real: reused {top['reused']}, "
+    f"reconnects {top['reconnects']}"
+)
+for p in points.values():
+    assert p["p999_ms"] >= p["p99_ms"] >= p["p50_ms"] >= 0.0, p
+
+t = threaded["connection_scaling"][0]
+assert t["reused"] == 0, (
+    f"threaded closes every connection, yet reused {t['reused']}"
+)
+assert t["established"] < 1024, (
+    f"threaded should not hold 1024 concurrent sockets "
+    f"(established {t['established']}) — if it does, the backlog "
+    f"assumption changed and this gate needs a rethink"
+)
+print(
+    f"event: 1024/1024 established, {top['reused']} reused; "
+    f"threaded: {t['established']}/1024 established, 0 reused"
+)
+PYEOF

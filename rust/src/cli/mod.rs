@@ -237,15 +237,25 @@ USAGE:
       runs, default 32) to --json (default BENCH_delta.json).
   deepcabac serve --dir DIR [--addr HOST:PORT] [--cache-mb N] [--workers N]
                   [--read-timeout MS] [--write-timeout MS]
+                  [--event-loop | --threaded] [--max-connections N]
       Serve every .dcbc container in DIR over HTTP: GET /models,
       /models/{m}/manifest, /models/{m}/layers/{l} (compressed bytes,
-      Range supported), /models/{m}/layers/{l}/weights (server-side
-      decode through an LRU cache of --cache-mb), /stats, /healthz.
-      --addr defaults to 127.0.0.1:8080; port 0 picks an ephemeral port
-      (printed on startup). Per-connection socket deadlines default to
+      Range supported; zero-copy from the mmap'd container),
+      /models/{m}/layers/{l}/weights (server-side decode through an LRU
+      cache of --cache-mb, keyed per (model, layer, tier)), /stats,
+      /healthz. --addr defaults to 127.0.0.1:8080; port 0 picks an
+      ephemeral port (printed on startup). Two transports serve
+      byte-identical responses: --event-loop (default where supported)
+      is an epoll/kqueue readiness loop with HTTP/1.1 keep-alive and
+      bounded pipelining that holds thousands of mostly-idle
+      connections on one thread, decode work offloaded to --workers;
+      --threaded is the thread-per-connection accept loop (one worker
+      per in-flight connection). Per-connection deadlines default to
       10000 ms reads / 30000 ms writes (must be >= 1): slow or stalled
-      peers get 408 / a close instead of a wedged worker slot, counted
-      in /stats.
+      peers get 408 / a close instead of a wedged slot, counted in
+      /stats (the event loop enforces the same deadlines from its poll
+      timer wheel). --max-connections N sheds connections beyond N with
+      503 + a `shed` counter in /stats.
   deepcabac fetch --url http://HOST:PORT/models/NAME [--layer L]
                   [--from BASE.dcbc] [--tier T [--out FILE] | --upgrade FILE]
                   [--out-dir DIR] [--workers N]
@@ -266,15 +276,25 @@ USAGE:
       already held is re-downloaded). --out-dir writes {layer}.w.npy
       files.
   deepcabac loadgen --url http://HOST:PORT [--clients N] [--requests M]
-                    [--hostile H] [--out FILE]
+                    [--hostile H] [--rate RPS] [--connections-sweep LIST]
+                    [--sweep-requests K] [--out FILE]
       Load-generate against a serve endpoint (mixed compressed-bytes and
-      decoded-weights GETs) and report p50/p99 latency + throughput;
-      failures are classified (connect-refused / timeout / reset /
-      malformed-response / http-error) in the report. --hostile H adds H
-      fault-injecting threads (byte-dribble, slowloris, mid-request
-      disconnect, stalled readers) whose outcomes are reported
-      separately and never count as load failures. --out writes
-      BENCH_serve.json-style machine-readable results.
+      decoded-weights GETs) and report p50/p99/p999 latency +
+      throughput; failures are classified (connect-refused / timeout /
+      reset / malformed-response / http-error / shed) in the report.
+      Default is a closed loop (next request fires when the previous
+      completes); --rate RPS switches to an open loop with Poisson
+      arrivals at RPS aggregate, latency measured from each scheduled
+      arrival so server slowdowns surface as queueing delay. --hostile H
+      adds H fault-injecting threads (byte-dribble, slowloris,
+      mid-request disconnect, stalled readers) whose outcomes are
+      reported separately and never count as load failures.
+      --connections-sweep 1,64,1k,10k appends a connection-scaling
+      block: per count N, establish N concurrent keep-alive sockets and
+      drive --sweep-requests (default 3) requests each, reporting
+      established / reused / reconnects / shed and per-point
+      percentiles. --out writes BENCH_serve.json-style machine-readable
+      results.
   deepcabac fuzz [--target container|stream|http|range|encoder|all]
                  [--cases N] [--seed N] [--corpus DIR] [--artifacts DIR]
       Structure-aware fuzzing of the container / stream / HTTP / Range
@@ -457,6 +477,21 @@ mod tests {
         assert!(a.get_count("read-timeout", 10_000).is_err());
         let a = Args::parse(&sv(&["serve"])).unwrap();
         assert_eq!(a.get_count("read-timeout", 10_000).unwrap(), 10_000);
+        // backend selection switches and the connection cap
+        let a = Args::parse(&sv(&[
+            "serve", "--dir", "models/", "--event-loop", "--max-connections", "1024",
+        ]))
+        .unwrap();
+        assert!(a.has("event-loop"));
+        assert!(!a.has("threaded"));
+        assert_eq!(a.get("max-connections"), Some("1024"));
+        assert_eq!(a.get_count("max-connections", 1).unwrap(), 1024);
+        let a = Args::parse(&sv(&["serve", "--dir", "models/", "--threaded"])).unwrap();
+        assert!(a.has("threaded"));
+        assert_eq!(a.get("max-connections"), None);
+        // a zero cap would shed every connection: usage error
+        let a = Args::parse(&sv(&["serve", "--max-connections", "0"])).unwrap();
+        assert!(a.get_count("max-connections", 1).is_err());
     }
 
     #[test]
@@ -550,5 +585,19 @@ mod tests {
         assert_eq!(a.get_count("clients", 8).unwrap(), 32);
         assert_eq!(a.get_count("requests", 32).unwrap(), 16);
         assert_eq!(a.get("out"), Some("BENCH_serve.json"));
+
+        // open-loop rate and the connection-scaling sweep flags
+        let a = Args::parse(&sv(&[
+            "loadgen", "--url", "http://127.0.0.1:8080", "--rate", "250.5",
+            "--connections-sweep", "1,64,1k,10k", "--sweep-requests", "5",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("rate"), Some("250.5"));
+        assert_eq!(a.get("connections-sweep"), Some("1,64,1k,10k"));
+        assert_eq!(a.get_count("sweep-requests", 3).unwrap(), 5);
+        // both absent by default: closed loop, no sweep
+        let a = Args::parse(&sv(&["loadgen", "--url", "http://h"])).unwrap();
+        assert_eq!(a.get("rate"), None);
+        assert_eq!(a.get("connections-sweep"), None);
     }
 }

@@ -1092,6 +1092,7 @@ fn cmd_synth(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use deepcabac::serve::Backend;
     let opts = deepcabac::serve::ServeOptions {
         dir: std::path::PathBuf::from(args.get("dir").context("--dir required")?),
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
@@ -1109,15 +1110,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         write_timeout: std::time::Duration::from_millis(
             args.get_count("write-timeout", 30_000).map_err(|e| anyhow!(e))? as u64,
         ),
+        max_connections: match args.get("max-connections") {
+            Some(_) => args.get_count("max-connections", 0).map_err(|e| anyhow!(e))?,
+            None => usize::MAX,
+        },
     };
-    let handle = deepcabac::serve::server::start(opts.clone())?;
+    let backend = match (args.has("event-loop"), args.has("threaded")) {
+        (true, true) => bail!("--event-loop and --threaded are mutually exclusive"),
+        (true, false) => Backend::Event,
+        (false, true) => Backend::Threaded,
+        // default: the scalable readiness loop wherever the platform
+        // supports it, thread-per-connection elsewhere
+        (false, false) => {
+            if deepcabac::util::poll::supported() {
+                Backend::Event
+            } else {
+                Backend::Threaded
+            }
+        }
+    };
+    let handle = deepcabac::serve::server::start_with(backend, opts.clone())?;
     // the smoke script greps this exact line for the ephemeral port
     println!("listening on http://{}", handle.addr());
     println!(
-        "serving {:?} ({} workers, {} cache)",
+        "serving {:?} ({} backend, {} workers, {} cache{})",
         opts.dir,
+        match backend {
+            Backend::Event => "event-loop",
+            Backend::Threaded => "threaded",
+        },
         opts.workers,
         human_bytes(opts.cache_bytes),
+        if opts.max_connections == usize::MAX {
+            String::new()
+        } else {
+            format!(", max {} connections", opts.max_connections)
+        },
     );
     use std::io::Write as _;
     std::io::stdout().flush().ok();
@@ -1436,22 +1464,44 @@ fn cmd_fetch(args: &Args) -> Result<()> {
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    let rate = match args.get("rate") {
+        Some(v) => {
+            let r: f64 =
+                v.parse().map_err(|_| anyhow!("--rate must be a number, got {v:?}"))?;
+            anyhow::ensure!(r > 0.0, "--rate must be positive, got {r}");
+            Some(r)
+        }
+        None => None,
+    };
+    let sweep = match args.get("connections-sweep") {
+        Some(list) => Some(parse_connection_counts(list)?),
+        None => None,
+    };
     let opts = deepcabac::serve::loadgen::LoadgenOptions {
         url: args.get("url").context("--url required (http://HOST:PORT)")?.to_string(),
         clients: args.get_count("clients", 8).map_err(|e| anyhow!(e))?,
         requests: args.get_count("requests", 32).map_err(|e| anyhow!(e))?,
         hostile: args.get_usize("hostile", 0).map_err(|e| anyhow!(e))?,
+        rate,
+        sweep,
+        sweep_requests: args.get_count("sweep-requests", 3).map_err(|e| anyhow!(e))?,
         out: Some(std::path::PathBuf::from(args.get_or("out", "BENCH_serve.json"))),
     };
     let report = deepcabac::serve::loadgen::run(&opts)?;
     println!(
-        "{} clients x {} requests: {} ok / {} failed, p50 {:.2} ms, p99 {:.2} ms, {:.0} req/s, {}",
+        "{} clients x {} requests ({}): {} ok / {} failed, p50 {:.2} ms, p99 {:.2} ms, \
+         p999 {:.2} ms, {:.0} req/s, {}",
         opts.clients,
         opts.requests,
+        match opts.rate {
+            Some(r) => format!("open loop, {r} req/s offered"),
+            None => "closed loop".to_string(),
+        },
         report.total_requests - report.failures,
         report.failures,
         report.p50_ms,
         report.p99_ms,
+        report.p999_ms,
         report.throughput_rps,
         human_bytes(report.bytes_transferred as usize),
     );
@@ -1459,8 +1509,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         let t = &report.failure_taxonomy;
         println!(
             "failure taxonomy: {} connect-refused, {} timeout, {} reset, \
-             {} malformed-response, {} http-error, {} other",
-            t.connect_refused, t.timeout, t.reset, t.malformed_response, t.http_error, t.other,
+             {} malformed-response, {} http-error, {} shed, {} other",
+            t.connect_refused,
+            t.timeout,
+            t.reset,
+            t.malformed_response,
+            t.http_error,
+            t.shed,
+            t.other,
         );
     }
     if opts.hostile > 0 {
@@ -1486,6 +1542,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             human_bytes(p.full_bytes as usize),
         );
     }
+    for p in &report.connection_scaling {
+        println!(
+            "scaling {} conns: {} established, {} ok / {} failed / {} shed, \
+             reused {} / reconnects {}, p50 {:.2} ms, p99 {:.2} ms, p999 {:.2} ms{}",
+            p.connections,
+            p.established,
+            p.ok,
+            p.failures,
+            p.shed,
+            p.reused,
+            p.reconnects,
+            p.p50_ms,
+            p.p99_ms,
+            p.p999_ms,
+            match p.ttfut_ms {
+                Some(t) => format!(", ttfut {t:.2} ms"),
+                None => String::new(),
+            },
+        );
+    }
     if let Some(out) = &opts.out {
         println!("wrote {out:?}");
     }
@@ -1500,6 +1576,29 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.injected.unexpected
     );
     Ok(())
+}
+
+/// Parse `--connections-sweep` lists like "1,64,1k,10k" (a `k` suffix
+/// multiplies by 1000).
+fn parse_connection_counts(list: &str) -> Result<Vec<usize>> {
+    let mut counts = Vec::new();
+    for part in list.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (digits, mult) = match part.strip_suffix(['k', 'K']) {
+            Some(d) => (d, 1000usize),
+            None => (part, 1usize),
+        };
+        let n: usize = digits
+            .parse()
+            .map_err(|_| anyhow!("bad --connections-sweep entry {part:?}"))?;
+        anyhow::ensure!(n > 0, "--connections-sweep entries must be positive, got {part:?}");
+        counts.push(n * mult);
+    }
+    anyhow::ensure!(!counts.is_empty(), "--connections-sweep needs at least one count");
+    Ok(counts)
 }
 
 /// Structure-aware fuzzing (the CI `fuzz-smoke` entry point): replay the

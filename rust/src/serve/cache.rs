@@ -1,18 +1,22 @@
 //! Byte-budgeted LRU cache for server-side-decoded layers.
 //!
-//! Keyed by `(model, layer index)`, value is the dequantized weight
-//! vector behind an `Arc` so eviction never invalidates an in-flight
-//! response. The decode itself runs *outside* the lock — concurrent
-//! misses on the same layer may decode twice, but a slow decode never
-//! blocks hits on other layers (first writer wins; the loser adopts the
-//! resident entry).
+//! Keyed by `(model, layer index, tier)`, value is the dequantized
+//! weight vector behind an `Arc` so eviction never invalidates an
+//! in-flight response. The tier component keeps decodes of the same
+//! layer at different progressive qualities (a v4 container flattens
+//! every tier's records into one layer list) from aliasing: a `?tier=t`
+//! client that re-requests a layer it already forced a decode of hits
+//! the cache instead of re-materializing the tier. The decode itself
+//! runs *outside* the lock — concurrent misses on the same layer may
+//! decode twice, but a slow decode never blocks hits on other layers
+//! (first writer wins; the loser adopts the resident entry).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-type Key = (String, usize);
+type Key = (String, usize, usize);
 
 struct Entry {
     weights: Arc<Vec<f32>>,
@@ -65,18 +69,21 @@ impl DecodedCache {
     /// plus whether this call was served from cache (the authoritative
     /// `X-Cache` signal — computed under the same lock as the lookup, so
     /// it cannot race with concurrent evictions). An entry larger than
-    /// the whole budget is returned but not retained.
+    /// the whole budget is returned but not retained. `tier` is 0 for
+    /// non-progressive containers and the layer's tier index in a v4
+    /// container (`IndexedLayer::tier`).
     pub fn get_or_decode(
         &self,
         model: &str,
         layer: usize,
+        tier: usize,
         decode: impl FnOnce() -> Result<Vec<f32>>,
     ) -> Result<(Arc<Vec<f32>>, bool)> {
         {
             let mut g = self.inner.lock().expect("cache lock");
             g.tick += 1;
             let tick = g.tick;
-            if let Some(e) = g.map.get_mut(&(model.to_string(), layer)) {
+            if let Some(e) = g.map.get_mut(&(model.to_string(), layer, tier)) {
                 e.last_used = tick;
                 let weights = e.weights.clone();
                 g.hits += 1;
@@ -90,7 +97,7 @@ impl DecodedCache {
         let mut g = self.inner.lock().expect("cache lock");
         g.tick += 1;
         let tick = g.tick;
-        if let Some(e) = g.map.get_mut(&(model.to_string(), layer)) {
+        if let Some(e) = g.map.get_mut(&(model.to_string(), layer, tier)) {
             // another thread decoded the same layer meanwhile — adopt its
             // entry so all handlers share one allocation (still a miss
             // from this caller's perspective: we did decode)
@@ -102,7 +109,7 @@ impl DecodedCache {
         }
         g.resident_bytes += bytes;
         g.map.insert(
-            (model.to_string(), layer),
+            (model.to_string(), layer, tier),
             Entry { weights: weights.clone(), bytes, last_used: tick },
         );
         // evict least-recently-used entries (never the one just inserted)
@@ -110,7 +117,7 @@ impl DecodedCache {
             let victim = g
                 .map
                 .iter()
-                .filter(|(k, _)| !(k.0 == model && k.1 == layer))
+                .filter(|(k, _)| !(k.0 == model && k.1 == layer && k.2 == tier))
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             match victim {
@@ -128,9 +135,9 @@ impl DecodedCache {
 
     /// True if the key is currently resident (test/diagnostic helper —
     /// does not touch recency or counters).
-    pub fn contains(&self, model: &str, layer: usize) -> bool {
+    pub fn contains(&self, model: &str, layer: usize, tier: usize) -> bool {
         let g = self.inner.lock().expect("cache lock");
-        g.map.contains_key(&(model.to_string(), layer))
+        g.map.contains_key(&(model.to_string(), layer, tier))
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -151,15 +158,15 @@ mod tests {
     use super::*;
 
     fn fill(cache: &DecodedCache, model: &str, layer: usize, n: usize) -> Arc<Vec<f32>> {
-        cache.get_or_decode(model, layer, || Ok(vec![layer as f32; n])).unwrap().0
+        cache.get_or_decode(model, layer, 0, || Ok(vec![layer as f32; n])).unwrap().0
     }
 
     #[test]
     fn hit_after_miss() {
         let c = DecodedCache::new(1 << 20);
-        let (a, was_hit) = c.get_or_decode("m", 0, || Ok(vec![0.0; 100])).unwrap();
+        let (a, was_hit) = c.get_or_decode("m", 0, 0, || Ok(vec![0.0; 100])).unwrap();
         assert!(!was_hit);
-        let (b, was_hit) = c.get_or_decode("m", 0, || Ok(vec![0.0; 100])).unwrap();
+        let (b, was_hit) = c.get_or_decode("m", 0, 0, || Ok(vec![0.0; 100])).unwrap();
         assert!(was_hit);
         assert!(Arc::ptr_eq(&a, &b));
         let s = c.stats();
@@ -175,9 +182,9 @@ mod tests {
         fill(&c, "m", 1, 100);
         fill(&c, "m", 0, 100); // touch 0 → 1 becomes LRU
         fill(&c, "m", 2, 100); // evicts 1
-        assert!(c.contains("m", 0));
-        assert!(!c.contains("m", 1));
-        assert!(c.contains("m", 2));
+        assert!(c.contains("m", 0, 0));
+        assert!(!c.contains("m", 1, 0));
+        assert!(c.contains("m", 2, 0));
         let s = c.stats();
         assert_eq!(s.evictions, 1);
         assert!(s.resident_bytes <= 800);
@@ -188,8 +195,25 @@ mod tests {
         let c = DecodedCache::new(100);
         let w = fill(&c, "m", 0, 1000); // 4000 B > 100 B budget
         assert_eq!(w.len(), 1000);
-        assert!(!c.contains("m", 0));
+        assert!(!c.contains("m", 0, 0));
         assert_eq!(c.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn distinct_tiers_do_not_collide() {
+        // same model + layer index at two tiers = two entries (a v4
+        // container's flattened layer list reuses names across tiers)
+        let c = DecodedCache::new(1 << 20);
+        let (_, hit) = c.get_or_decode("m", 0, 0, || Ok(vec![1.0; 8])).unwrap();
+        assert!(!hit);
+        let (coarse, hit) = c.get_or_decode("m", 0, 1, || Ok(vec![2.0; 8])).unwrap();
+        assert!(!hit);
+        assert_eq!(coarse[0], 2.0);
+        let (base, hit) = c.get_or_decode("m", 0, 0, || unreachable!()).unwrap();
+        assert!(hit);
+        assert_eq!(base[0], 1.0);
+        assert_eq!(c.stats().entries, 2);
+        assert!(c.contains("m", 0, 0) && c.contains("m", 0, 1));
     }
 
     #[test]
@@ -205,9 +229,9 @@ mod tests {
     #[test]
     fn decode_error_propagates_and_is_not_cached() {
         let c = DecodedCache::new(1 << 20);
-        let r = c.get_or_decode("m", 3, || anyhow::bail!("corrupt layer"));
+        let r = c.get_or_decode("m", 3, 0, || anyhow::bail!("corrupt layer"));
         assert!(r.is_err());
-        assert!(!c.contains("m", 3));
+        assert!(!c.contains("m", 3, 0));
         // a later good decode succeeds
         assert_eq!(fill(&c, "m", 3, 5).len(), 5);
     }

@@ -1,0 +1,773 @@
+//! The readiness-polling serve transport: one thread, an
+//! epoll/kqueue [`crate::util::poll::Poller`], and a per-connection
+//! state machine (reading-head → dispatching → writing-response) over
+//! non-blocking sockets.
+//!
+//! What it adds over the threaded backend:
+//!
+//! * **Scale** — a connection costs a [`Conn`] struct, not a thread.
+//!   Tens of thousands of mostly-idle keep-alive connections (the
+//!   federated-fleet shape from arXiv:1907.11900) sit in the poller for
+//!   free.
+//! * **Keep-alive + pipelining** — HTTP/1.1 connections persist by
+//!   default (`Connection: close` honored, and always answered after
+//!   parse failures / 405 / 408 so framing can never desync). Up to
+//!   [`MAX_PIPELINE`] pipelined requests are queued per connection and
+//!   answered strictly in order; past the bound the loop simply stops
+//!   reading that socket, which is TCP backpressure, not an error.
+//! * **Poll-driven deadlines** — the threaded backend's per-socket
+//!   read/write timeouts are re-expressed as a coarse timer wheel
+//!   ([`WHEEL_SLOTS`] slots × 25 ms). A slowloris still gets its
+//!   graceful 408, a stalled reader still gets dropped at the write
+//!   deadline, and a dribbling-but-live client still completes, because
+//!   read deadlines reset on every byte of progress — the same
+//!   semantics as a per-`read(2)` socket timeout.
+//! * **Zero-copy bodies** — responses carry
+//!   [`super::server::Body::Slice`] ranges into the mmap'd container
+//!   and are written straight from the page cache.
+//!
+//! Routing is the same pure [`super::server::respond`] the threaded
+//! backend uses; only decoded-weights requests (CPU-bound CABAC
+//! decodes) leave the loop, offloaded to the [`WorkerPool`] which posts
+//! the finished response back through an `mpsc` channel plus a
+//! [`crate::util::poll::Waker`] nudge. While a connection's decode is
+//! in flight, its later pipelined requests stay buffered so responses
+//! never reorder.
+
+use super::http::MAX_HEAD_BYTES;
+
+/// Maximum queued (accepted-but-unwritten) responses per connection;
+/// beyond this the loop stops reading the socket until writes drain.
+pub(crate) const MAX_PIPELINE: usize = 32;
+
+/// Timer-wheel size; with 25 ms ticks this is a ~12.8 s horizon.
+/// Deadlines beyond the horizon wrap and simply fire early — every
+/// expiry re-checks the connection's true deadline before acting.
+pub(crate) const WHEEL_SLOTS: usize = 512;
+
+/// Outcome of scanning a receive buffer for one complete request head.
+#[derive(Debug, PartialEq, Eq)]
+enum HeadScan {
+    /// No terminating blank line yet — keep reading.
+    Partial,
+    /// A complete head: `head_end` is the byte length of the head
+    /// (request line + header lines, blank line excluded), `consumed`
+    /// the total bytes to drain including the blank line.
+    Complete { head_end: usize, consumed: usize },
+    /// The head exceeded [`MAX_HEAD_BYTES`] — answer 400 and close,
+    /// mirroring the threaded backend's capped reader.
+    TooLarge,
+}
+
+/// Incremental equivalent of `http::read_request`'s line loop: walk
+/// `\n`-terminated lines until the blank line (`\r\n` or bare `\n`),
+/// enforcing the same head-size cap.
+fn head_scan(buf: &[u8]) -> HeadScan {
+    let mut i = 0usize;
+    loop {
+        match buf[i..].iter().position(|&b| b == b'\n') {
+            None => {
+                return if buf.len() >= MAX_HEAD_BYTES {
+                    HeadScan::TooLarge
+                } else {
+                    HeadScan::Partial
+                };
+            }
+            Some(j) => {
+                let line_start = i;
+                let nl = i + j;
+                let line = &buf[line_start..=nl];
+                if line == b"\r\n" || line == b"\n" {
+                    return HeadScan::Complete { head_end: line_start, consumed: nl + 1 };
+                }
+                i = nl + 1;
+                if i >= MAX_HEAD_BYTES {
+                    return HeadScan::TooLarge;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+pub(crate) use imp::run;
+
+/// Stub for platforms without a readiness backend (the CLI falls back
+/// to the threaded transport there).
+#[cfg(not(unix))]
+pub(crate) fn run(
+    _listener: std::net::TcpListener,
+    _state: std::sync::Arc<super::server::ServerState>,
+    _stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    _waker: std::sync::Arc<crate::util::poll::Waker>,
+    _workers: usize,
+) -> anyhow::Result<()> {
+    anyhow::bail!("event backend is unix-only — use the threaded backend")
+}
+
+#[cfg(unix)]
+mod imp {
+    use super::super::http::parse_request_head;
+    use super::super::server::{
+        respond, shed_response, timeout_response, Body, Response, ServerState,
+    };
+    use super::{head_scan, HeadScan, MAX_PIPELINE, WHEEL_SLOTS};
+    use crate::util::par::WorkerPool;
+    use crate::util::poll::{Interest, Poller, Waker};
+    use anyhow::{Context, Result};
+    use std::collections::{HashMap, VecDeque};
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{mpsc, Arc};
+    use std::time::{Duration, Instant};
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKER: u64 = 1;
+    const FIRST_CONN_TOKEN: u64 = 2;
+    const TICK: Duration = Duration::from_millis(25);
+    /// Per-event read budget: once this much unparsed data is buffered,
+    /// parsing catches up before the socket is read again.
+    const READ_BUDGET: usize = 64 * 1024;
+
+    /// One response queued for writing: pre-rendered head + body, with
+    /// a single write cursor across both.
+    struct OutResp {
+        head: Vec<u8>,
+        body: Body,
+        written: usize,
+        close_after: bool,
+    }
+
+    impl OutResp {
+        fn total(&self) -> usize {
+            self.head.len() + self.body.len()
+        }
+    }
+
+    /// Which deadline class a connection is currently governed by; used
+    /// to avoid flooding the wheel with one entry per byte of progress
+    /// (entries are only added on class transitions, and every expiry
+    /// re-derives the true deadline before acting).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum DeadlineKind {
+        /// Unwritten response bytes: client must keep reading.
+        Write,
+        /// Partial request head buffered: client must keep sending.
+        Read,
+        /// Nothing in flight: generous keep-alive idle window.
+        Idle,
+    }
+
+    /// Per-connection state machine.
+    struct Conn {
+        stream: TcpStream,
+        /// Received-but-unparsed bytes.
+        buf: Vec<u8>,
+        /// Responses awaiting (partial) write, strictly in request order.
+        out: VecDeque<OutResp>,
+        /// A weights decode is in flight on the pool; no further
+        /// requests are parsed until it completes (ordering).
+        pending_decode: bool,
+        /// The offloaded request asked `Connection: close`.
+        pending_close: bool,
+        /// No further requests will be parsed; close once `out` drains.
+        closing: bool,
+        /// Peer sent EOF (half-close): drain what's buffered, then go.
+        peer_closed: bool,
+        /// Last read or write progress (deadline base).
+        last_activity: Instant,
+        interest: Interest,
+        scheduled_kind: Option<DeadlineKind>,
+    }
+
+    impl Conn {
+        fn wants_read(&self) -> bool {
+            !self.closing
+                && !self.peer_closed
+                && !self.pending_decode
+                && self.out.len() < MAX_PIPELINE
+        }
+
+        fn desired_interest(&self) -> Interest {
+            Interest { readable: self.wants_read(), writable: !self.out.is_empty() }
+        }
+    }
+
+    /// Coarse hashed timer wheel: `WHEEL_SLOTS` slots × `TICK`. Entries
+    /// are lazy — an expiry is a hint to re-check the connection, not a
+    /// verdict — so duplicates and early (wrapped) firings are harmless.
+    struct TimerWheel {
+        slots: Vec<Vec<u64>>,
+        start: Instant,
+        cursor: u64,
+    }
+
+    impl TimerWheel {
+        fn new(start: Instant) -> Self {
+            Self { slots: vec![Vec::new(); WHEEL_SLOTS], start, cursor: 0 }
+        }
+
+        fn tick_of(&self, t: Instant) -> u64 {
+            (t.saturating_duration_since(self.start).as_millis() / TICK.as_millis()) as u64
+        }
+
+        fn schedule(&mut self, token: u64, deadline: Instant) {
+            let tick = self.tick_of(deadline).max(self.cursor + 1);
+            self.slots[(tick % WHEEL_SLOTS as u64) as usize].push(token);
+        }
+
+        /// Advance the cursor to `now`, draining every slot that came
+        /// due. Returned tokens must be re-checked against real state.
+        fn advance(&mut self, now: Instant) -> Vec<u64> {
+            let mut due = Vec::new();
+            let now_tick = self.tick_of(now);
+            while self.cursor < now_tick {
+                self.cursor += 1;
+                let slot = (self.cursor % WHEEL_SLOTS as u64) as usize;
+                due.append(&mut self.slots[slot]);
+            }
+            due
+        }
+    }
+
+    fn deadline_of(
+        conn: &Conn,
+        read_t: Duration,
+        write_t: Duration,
+    ) -> Option<(Instant, DeadlineKind)> {
+        if !conn.out.is_empty() {
+            Some((conn.last_activity + write_t, DeadlineKind::Write))
+        } else if conn.pending_decode {
+            // the pool always completes; no wall-clock verdict here
+            None
+        } else if !conn.buf.is_empty() {
+            Some((conn.last_activity + read_t, DeadlineKind::Read))
+        } else {
+            Some((conn.last_activity + read_t * 4, DeadlineKind::Idle))
+        }
+    }
+
+    fn is_decode_heavy(req: &super::super::http::Request) -> bool {
+        if req.method != "GET" {
+            return false;
+        }
+        let path = req.path.split('?').next().unwrap_or("");
+        let parts: Vec<&str> = path.split('/').filter(|p| !p.is_empty()).collect();
+        matches!(parts.as_slice(), ["models", _, "layers", _, "weights"])
+    }
+
+    fn enqueue(conn: &mut Conn, resp: Response, close: bool) {
+        let head = resp.render(if close { "close" } else { "keep-alive" }).into_bytes();
+        conn.out.push_back(OutResp { head, body: resp.body, written: 0, close_after: close });
+    }
+
+    fn enqueue_error(conn: &mut Conn, status: u16, reason: &'static str, msg: String) {
+        enqueue(conn, Response::error(status, reason, msg), true);
+        conn.closing = true;
+    }
+
+    /// Drain the socket into `buf` (bounded per event). Returns `true`
+    /// when the connection is unusable and must be dropped.
+    fn read_into_buf(conn: &mut Conn, now: Instant) -> bool {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if !conn.wants_read() || conn.buf.len() >= READ_BUDGET {
+                return false;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    return false;
+                }
+                Ok(n) => {
+                    conn.buf.extend_from_slice(&chunk[..n]);
+                    // read deadline resets on any progress — a slow but
+                    // live client (dribble) is not a slowloris
+                    conn.last_activity = now;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Parse every complete pipelined head the gates allow, dispatching
+    /// each through [`respond`] (inline) or the decode pool (offload).
+    fn process_conn(
+        conn: &mut Conn,
+        token: u64,
+        state: &Arc<ServerState>,
+        pool: &WorkerPool,
+        tx: &mpsc::Sender<(u64, Result<Response>)>,
+        waker: &Arc<Waker>,
+    ) {
+        while !conn.closing && !conn.pending_decode && conn.out.len() < MAX_PIPELINE {
+            match head_scan(&conn.buf) {
+                HeadScan::Partial => break,
+                HeadScan::TooLarge => {
+                    state.requests.fetch_add(1, Ordering::Relaxed);
+                    state.errors.fetch_add(1, Ordering::Relaxed);
+                    conn.buf.clear();
+                    enqueue_error(conn, 400, "Bad Request", "request head too large".into());
+                    break;
+                }
+                HeadScan::Complete { head_end, consumed } => {
+                    let head: Vec<u8> = conn.buf[..head_end].to_vec();
+                    conn.buf.drain(..consumed);
+                    state.requests.fetch_add(1, Ordering::Relaxed);
+                    let req = match parse_request_head(&head) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            // same body text as the threaded backend's
+                            // 400 (Display prints the top message only)
+                            state.errors.fetch_add(1, Ordering::Relaxed);
+                            enqueue_error(conn, 400, "Bad Request", format!("{e}"));
+                            break;
+                        }
+                    };
+                    let wants_close = req
+                        .header("connection")
+                        .map_or(false, |v| v.eq_ignore_ascii_case("close"));
+                    if is_decode_heavy(&req) {
+                        conn.pending_decode = true;
+                        conn.pending_close = wants_close;
+                        let (state2, tx2, waker2) = (state.clone(), tx.clone(), waker.clone());
+                        pool.execute(move || {
+                            let res = respond(&req, &state2);
+                            let _ = tx2.send((token, res));
+                            waker2.wake();
+                        });
+                        break;
+                    }
+                    match respond(&req, state) {
+                        Ok(resp) => {
+                            // 405 closes: we never read request bodies,
+                            // so an unframed non-GET would desync the
+                            // next pipelined parse
+                            let close = wants_close || resp.status == 405;
+                            enqueue(conn, resp, close);
+                            if close {
+                                conn.closing = true;
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            state.errors.fetch_add(1, Ordering::Relaxed);
+                            enqueue_error(
+                                conn,
+                                500,
+                                "Internal Server Error",
+                                format!("{e:#}"),
+                            );
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // EOF epilogue: the peer is done sending. Whatever complete
+        // heads were buffered got parsed above; a leftover partial head
+        // mirrors the threaded "connection closed mid-request" 400.
+        if conn.peer_closed && !conn.pending_decode && !conn.closing {
+            if conn.buf.is_empty() {
+                conn.closing = true;
+            } else if conn.out.len() < MAX_PIPELINE
+                && matches!(head_scan(&conn.buf), HeadScan::Partial)
+            {
+                state.requests.fetch_add(1, Ordering::Relaxed);
+                state.errors.fetch_add(1, Ordering::Relaxed);
+                conn.buf.clear();
+                enqueue_error(conn, 400, "Bad Request", "connection closed mid-request".into());
+            }
+        }
+    }
+
+    /// Write as much of the queued responses as the socket accepts.
+    /// Returns `true` when the connection died mid-write.
+    fn write_ready(conn: &mut Conn, now: Instant) -> bool {
+        while let Some(front) = conn.out.front_mut() {
+            while front.written < front.total() {
+                let head_len = front.head.len();
+                let res = if front.written < head_len {
+                    conn.stream.write(&front.head[front.written..])
+                } else {
+                    let off = front.written - head_len;
+                    conn.stream.write(&front.body.as_slice()[off..])
+                };
+                match res {
+                    Ok(0) => return true,
+                    Ok(n) => {
+                        front.written += n;
+                        conn.last_activity = now;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return false,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return true,
+                }
+            }
+            let close = front.close_after;
+            conn.out.pop_front();
+            if close {
+                conn.closing = true;
+            }
+        }
+        false
+    }
+
+    fn teardown(
+        poller: &Poller,
+        conns: &mut HashMap<u64, Conn>,
+        state: &ServerState,
+        token: u64,
+    ) {
+        if let Some(conn) = conns.remove(&token) {
+            let _ = poller.deregister(conn.stream.as_raw_fd());
+            state.open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Post-event reconciliation for one connection: close it if it is
+    /// finished (or broke), otherwise refresh poller interest and make
+    /// sure a timer-wheel entry covers its current deadline class.
+    #[allow(clippy::too_many_arguments)]
+    fn sync_conn(
+        poller: &Poller,
+        conns: &mut HashMap<u64, Conn>,
+        wheel: &mut TimerWheel,
+        state: &ServerState,
+        token: u64,
+        dead: bool,
+        read_t: Duration,
+        write_t: Duration,
+    ) {
+        let done = {
+            let Some(conn) = conns.get_mut(&token) else { return };
+            let done = conn.out.is_empty()
+                && !conn.pending_decode
+                && (conn.closing || (conn.peer_closed && conn.buf.is_empty()));
+            if !dead && !done {
+                let want = conn.desired_interest();
+                if want != conn.interest {
+                    let _ = poller.modify(conn.stream.as_raw_fd(), token, want);
+                    conn.interest = want;
+                }
+                match deadline_of(conn, read_t, write_t) {
+                    None => conn.scheduled_kind = None,
+                    Some((deadline, kind)) => {
+                        if conn.scheduled_kind != Some(kind) {
+                            wheel.schedule(token, deadline);
+                            conn.scheduled_kind = Some(kind);
+                        }
+                    }
+                }
+            }
+            done
+        };
+        if dead || done {
+            teardown(poller, conns, state, token);
+        }
+    }
+
+    fn accept_ready(
+        listener: &TcpListener,
+        poller: &Poller,
+        state: &Arc<ServerState>,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        wheel: &mut TimerWheel,
+        now: Instant,
+        read_t: Duration,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if conns.len() >= state.max_connections {
+                        // shed at the door: bounded best-effort 503 on
+                        // the still-blocking socket, then drop
+                        state.shed.fetch_add(1, Ordering::Relaxed);
+                        let mut stream = stream;
+                        let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+                        let _ = shed_response().write_close(&mut stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = *next_token;
+                    *next_token += 1;
+                    if poller.register(stream.as_raw_fd(), token, Interest::READ).is_err() {
+                        continue;
+                    }
+                    state.open.fetch_add(1, Ordering::Relaxed);
+                    wheel.schedule(token, now + read_t * 4);
+                    conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            buf: Vec::new(),
+                            out: VecDeque::new(),
+                            pending_decode: false,
+                            pending_close: false,
+                            closing: false,
+                            peer_closed: false,
+                            last_activity: now,
+                            interest: Interest::READ,
+                            scheduled_kind: Some(DeadlineKind::Idle),
+                        },
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    eprintln!("[serve] accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// The event loop proper. Runs until `stop` is set (the
+    /// [`Waker`] interrupts a parked wait).
+    pub(crate) fn run(
+        listener: TcpListener,
+        state: Arc<ServerState>,
+        stop: Arc<AtomicBool>,
+        waker: Arc<Waker>,
+        workers: usize,
+    ) -> Result<()> {
+        let read_t = state.read_timeout;
+        let write_t = state.write_timeout;
+        let poller = Poller::new()?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .context("registering listener")?;
+        poller
+            .register(waker.fd(), TOKEN_WAKER, Interest::READ)
+            .context("registering waker")?;
+        let pool = WorkerPool::new(workers);
+        let (tx, rx) = mpsc::channel::<(u64, Result<Response>)>();
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token = FIRST_CONN_TOKEN;
+        let mut wheel = TimerWheel::new(Instant::now());
+        let mut events = Vec::with_capacity(256);
+
+        while !stop.load(Ordering::SeqCst) {
+            events.clear();
+            let timeout = if conns.is_empty() { Duration::from_millis(500) } else { TICK };
+            poller.wait(&mut events, Some(timeout))?;
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let now = Instant::now();
+
+            for ev in events.iter().copied().collect::<Vec<_>>() {
+                match ev.token {
+                    TOKEN_LISTENER => accept_ready(
+                        &listener,
+                        &poller,
+                        &state,
+                        &mut conns,
+                        &mut next_token,
+                        &mut wheel,
+                        now,
+                        read_t,
+                    ),
+                    TOKEN_WAKER => waker.drain(),
+                    token => {
+                        let dead = {
+                            let Some(conn) = conns.get_mut(&token) else { continue };
+                            let mut dead = false;
+                            if ev.readable || ev.hangup {
+                                dead = read_into_buf(conn, now);
+                                if !dead {
+                                    process_conn(conn, token, &state, &pool, &tx, &waker);
+                                }
+                            }
+                            if !dead && (ev.writable || !conn.out.is_empty()) {
+                                dead = write_ready(conn, now);
+                                if !dead {
+                                    // write progress frees pipeline slots
+                                    process_conn(conn, token, &state, &pool, &tx, &waker);
+                                }
+                            }
+                            if !dead && ev.hangup && conn.out.is_empty() && !conn.pending_decode
+                            {
+                                // peer gone and nothing left to flush
+                                conn.peer_closed = true;
+                            }
+                            dead
+                        };
+                        sync_conn(
+                            &poller, &mut conns, &mut wheel, &state, token, dead, read_t,
+                            write_t,
+                        );
+                    }
+                }
+            }
+
+            // decode completions posted by the pool
+            while let Ok((token, res)) = rx.try_recv() {
+                let dead = {
+                    let Some(conn) = conns.get_mut(&token) else { continue };
+                    conn.pending_decode = false;
+                    match res {
+                        Ok(resp) => {
+                            let close = conn.pending_close;
+                            enqueue(conn, resp, close);
+                            if close {
+                                conn.closing = true;
+                            }
+                        }
+                        Err(e) => {
+                            state.errors.fetch_add(1, Ordering::Relaxed);
+                            enqueue_error(
+                                conn,
+                                500,
+                                "Internal Server Error",
+                                format!("{e:#}"),
+                            );
+                        }
+                    }
+                    let dead = write_ready(conn, now);
+                    if !dead {
+                        process_conn(conn, token, &state, &pool, &tx, &waker);
+                    }
+                    dead
+                };
+                sync_conn(&poller, &mut conns, &mut wheel, &state, token, dead, read_t, write_t);
+            }
+
+            // timer expiries (lazy: re-derive the true deadline first)
+            for token in wheel.advance(now) {
+                enum Act {
+                    Keep,
+                    Drop { count_error: bool },
+                    Timeout,
+                }
+                let act = {
+                    let Some(conn) = conns.get_mut(&token) else { continue };
+                    match deadline_of(conn, read_t, write_t) {
+                        None => {
+                            conn.scheduled_kind = None;
+                            Act::Keep
+                        }
+                        Some((deadline, kind)) => {
+                            if now < deadline {
+                                wheel.schedule(token, deadline);
+                                conn.scheduled_kind = Some(kind);
+                                Act::Keep
+                            } else {
+                                match kind {
+                                    DeadlineKind::Write => Act::Drop { count_error: true },
+                                    DeadlineKind::Idle => Act::Drop { count_error: false },
+                                    DeadlineKind::Read => Act::Timeout,
+                                }
+                            }
+                        }
+                    }
+                };
+                match act {
+                    Act::Keep => {}
+                    Act::Drop { count_error } => {
+                        if count_error {
+                            // stalled reader blew the write deadline —
+                            // the threaded backend counts this as an
+                            // error too (its write_close fails)
+                            state.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        teardown(&poller, &mut conns, &state, token);
+                    }
+                    Act::Timeout => {
+                        let dead = {
+                            let conn = conns.get_mut(&token).expect("checked above");
+                            state.timeouts.fetch_add(1, Ordering::Relaxed);
+                            state.requests.fetch_add(1, Ordering::Relaxed);
+                            conn.buf.clear();
+                            enqueue(conn, timeout_response(), true);
+                            conn.closing = true;
+                            write_ready(conn, now)
+                        };
+                        sync_conn(
+                            &poller, &mut conns, &mut wheel, &state, token, dead, read_t,
+                            write_t,
+                        );
+                    }
+                }
+            }
+        }
+        // dropping the pool drains in-flight decodes; their completions
+        // land in a closed channel and are discarded
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_scan_finds_crlf_terminated_head() {
+        let buf = b"GET / HTTP/1.1\r\nHost: h\r\n\r\ntrailing";
+        match head_scan(buf) {
+            HeadScan::Complete { head_end, consumed } => {
+                assert_eq!(&buf[..head_end], b"GET / HTTP/1.1\r\nHost: h\r\n");
+                assert_eq!(&buf[consumed..], b"trailing");
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn head_scan_accepts_bare_lf() {
+        let buf = b"GET / HTTP/1.1\nHost: h\n\nX";
+        match head_scan(buf) {
+            HeadScan::Complete { head_end, consumed } => {
+                assert_eq!(&buf[..head_end], b"GET / HTTP/1.1\nHost: h\n");
+                assert_eq!(consumed, buf.len() - 1);
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn head_scan_partial_until_blank_line() {
+        assert_eq!(head_scan(b""), HeadScan::Partial);
+        assert_eq!(head_scan(b"GET / HTTP/1.1\r\n"), HeadScan::Partial);
+        assert_eq!(head_scan(b"GET / HTTP/1.1\r\nHost: h\r\n"), HeadScan::Partial);
+    }
+
+    #[test]
+    fn head_scan_caps_hostile_heads() {
+        // one endless header line
+        let long = vec![b'a'; MAX_HEAD_BYTES + 1];
+        assert_eq!(head_scan(&long), HeadScan::TooLarge);
+        // many small lines adding up past the cap, no blank line
+        let mut many = Vec::new();
+        while many.len() <= MAX_HEAD_BYTES {
+            many.extend_from_slice(b"X-Pad: yyyyyyyyyyyyyyyy\r\n");
+        }
+        assert_eq!(head_scan(&many), HeadScan::TooLarge);
+        // a complete head just under the cap still parses
+        let mut ok = b"GET / HTTP/1.1\r\n".to_vec();
+        ok.extend_from_slice(b"\r\n");
+        assert!(matches!(head_scan(&ok), HeadScan::Complete { .. }));
+    }
+
+    #[test]
+    fn head_scan_pipelined_requests_split_cleanly() {
+        let two = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let HeadScan::Complete { consumed, .. } = head_scan(two) else {
+            panic!("first head");
+        };
+        let rest = &two[consumed..];
+        let HeadScan::Complete { head_end, .. } = head_scan(rest) else {
+            panic!("second head");
+        };
+        assert_eq!(&rest[..head_end], b"GET /b HTTP/1.1\r\n");
+    }
+}

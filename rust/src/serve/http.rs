@@ -7,8 +7,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
-/// Cap on request head size (hostile-client guard).
-const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on request head size (hostile-client guard). Shared with the
+/// event loop's incremental head scanner so both backends reject at the
+/// same bound.
+pub(crate) const MAX_HEAD_BYTES: usize = 16 * 1024;
 
 /// A parsed request head (the server never needs bodies).
 #[derive(Debug)]
@@ -156,18 +158,22 @@ pub fn parse_request_head(head: &[u8]) -> Result<Request> {
     Ok(Request { method, path, headers })
 }
 
-/// Write a full response (status line, standard headers, body).
-pub fn write_response(
-    stream: &mut TcpStream,
+/// Render a response head. Every response from both server backends
+/// goes through this one function so header names, order and formatting
+/// are byte-identical regardless of transport: status line, then
+/// `Content-Type`, `Content-Length`, `Connection` (the only
+/// backend-dependent value — the threaded server always closes, the
+/// event loop honors keep-alive), then any extra headers.
+pub fn render_head(
     status: u16,
     reason: &str,
     content_type: &str,
+    body_len: usize,
+    connection: &str,
     extra_headers: &[(&str, String)],
-    body: &[u8],
-) -> Result<()> {
+) -> String {
     let mut head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
-        body.len()
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {body_len}\r\nConnection: {connection}\r\n"
     );
     for (k, v) in extra_headers {
         head.push_str(k);
@@ -176,6 +182,20 @@ pub fn write_response(
         head.push_str("\r\n");
     }
     head.push_str("\r\n");
+    head
+}
+
+/// Write a full response (status line, standard headers, body) with
+/// `Connection: close` semantics.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
+    let head = render_head(status, reason, content_type, body.len(), "close", extra_headers);
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
@@ -351,6 +371,146 @@ pub fn get_streaming_with(
         }
     }
     Ok((status, headers, err_body))
+}
+
+/// A persistent HTTP/1.1 connection for the connection-scaling
+/// harness: requests are sent *without* `Connection: close`, so a
+/// keep-alive-capable server answers many requests on one socket. The
+/// client transparently reconnects when the server closes (the
+/// thread-per-connection backend always does) and counts both events —
+/// `reused` vs `reconnects` is how the loadgen sweep proves which
+/// backend actually holds connections open.
+pub struct KeepAliveClient {
+    addr: std::net::SocketAddr,
+    timeout: std::time::Duration,
+    reader: Option<BufReader<TcpStream>>,
+    /// Responses served on an already-used socket.
+    pub reused: u64,
+    /// Fresh sockets dialed after the first (server closed or errored).
+    pub reconnects: u64,
+    /// Responses completed on the current socket.
+    served_on_socket: u64,
+}
+
+impl KeepAliveClient {
+    /// Resolve and dial `addr` ("host:port") within `timeout`. The
+    /// initial connect is part of construction so the sweep can count
+    /// how many concurrent sockets were actually established.
+    pub fn connect(addr: &str, timeout: std::time::Duration) -> Result<Self> {
+        use std::net::ToSocketAddrs;
+        let sockaddr = addr
+            .to_socket_addrs()
+            .map_err(tag_io)?
+            .next()
+            .ok_or_else(|| anyhow!("no address for {addr}"))?;
+        let mut c = Self {
+            addr: sockaddr,
+            timeout,
+            reader: None,
+            reused: 0,
+            reconnects: 0,
+            served_on_socket: 0,
+        };
+        c.dial()?;
+        Ok(c)
+    }
+
+    fn dial(&mut self) -> Result<()> {
+        let stream =
+            TcpStream::connect_timeout(&self.addr, self.timeout).map_err(tag_io)?;
+        let _ = stream.set_read_timeout(Some(self.timeout));
+        let _ = stream.set_write_timeout(Some(self.timeout));
+        let _ = stream.set_nodelay(true);
+        self.reader = Some(BufReader::new(stream));
+        self.served_on_socket = 0;
+        Ok(())
+    }
+
+    /// True while the underlying socket is open.
+    pub fn connected(&self) -> bool {
+        self.reader.is_some()
+    }
+
+    /// GET `path`, reusing the open socket when possible (one reconnect
+    /// attempt when it has gone away). Returns (status, body length) —
+    /// the sweep only needs sizes, not bodies.
+    pub fn get(&mut self, path: &str) -> Result<(u16, usize)> {
+        if self.reader.is_none() {
+            self.reconnects += 1;
+            self.dial()?;
+        }
+        match self.request(path) {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                // socket died (stale keep-alive, peer restart): one retry
+                // on a fresh connection, then give up
+                self.reader = None;
+                self.reconnects += 1;
+                self.dial().map_err(|_| e)?;
+                self.request(path)
+            }
+        }
+    }
+
+    fn request(&mut self, path: &str) -> Result<(u16, usize)> {
+        let reader = self.reader.as_mut().ok_or_else(|| anyhow!("not connected"))?;
+        let req = format!("GET {path} HTTP/1.1\r\nHost: sweep\r\nAccept: */*\r\n\r\n");
+        reader.get_mut().write_all(req.as_bytes()).map_err(tag_io)?;
+        reader.get_mut().flush().map_err(tag_io)?;
+
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).map_err(tag_io)?;
+        if n == 0 {
+            bail!("connection closed before status line");
+        }
+        let mut parts = line.split_whitespace();
+        if !parts.next().unwrap_or("").starts_with("HTTP/1.") {
+            bail!("not an HTTP response: {line:?}");
+        }
+        let status: u16 = parts.next().unwrap_or("").parse().context("bad status")?;
+        let mut content_length = 0usize;
+        let mut server_closes = false;
+        loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).map_err(tag_io)?;
+            if n == 0 {
+                bail!("connection closed in response head");
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                let (k, v) = (k.trim(), v.trim());
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.parse().context("bad content-length")?;
+                } else if k.eq_ignore_ascii_case("connection")
+                    && v.eq_ignore_ascii_case("close")
+                {
+                    server_closes = true;
+                }
+            }
+        }
+        // drain the body so the socket is request-aligned for reuse
+        let mut remaining = content_length;
+        let mut chunk = [0u8; 16 * 1024];
+        while remaining > 0 {
+            let want = remaining.min(chunk.len());
+            let n = reader.read(&mut chunk[..want]).map_err(tag_io)?;
+            if n == 0 {
+                bail!("connection closed {remaining} bytes early");
+            }
+            remaining -= n;
+        }
+        if self.served_on_socket > 0 {
+            self.reused += 1;
+        }
+        self.served_on_socket += 1;
+        if server_closes {
+            self.reader = None;
+        }
+        Ok((status, content_length))
+    }
 }
 
 #[cfg(test)]

@@ -1,20 +1,38 @@
-//! Concurrent-client load generator for the model-delivery server.
+//! Closed- and open-loop load generator for the model-delivery server.
 //!
 //! Spawns `clients` threads, each issuing `requests` GETs against a mix
 //! of the compressed-bytes and decoded-weights endpoints (layers picked
 //! round-robin across every model the server lists), and reports
-//! p50/p99/mean latency + throughput, machine-readable to
-//! `BENCH_serve.json`. Failures are classified into a
-//! [`FailureTaxonomy`] (connect-refused / timeout / reset /
-//! malformed-response / http-error) so a red run says *what* broke, not
-//! just how much. `hostile > 0` adds that many attacker threads running
-//! the fault-injection sessions from [`crate::fuzz::fault`] alongside
-//! the healthy clients; their outcomes are reported separately under
-//! `injected` and never count as load failures.
+//! p50/p99/p999/mean latency + throughput, machine-readable to
+//! `BENCH_serve.json`. Two arrival disciplines:
+//!
+//! * **closed loop** (default): each client fires its next request the
+//!   moment the previous one completes — measures capacity.
+//! * **open loop** (`rate` set): arrivals are a Poisson process at the
+//!   target aggregate rate, split across clients, and latency is
+//!   measured from the *scheduled* arrival time — so a server that
+//!   falls behind accrues queueing delay in its percentiles instead of
+//!   silently slowing the offered load (coordinated omission).
+//!
+//! Failures are classified into a [`FailureTaxonomy`] (connect-refused
+//! / timeout / reset / malformed-response / http-error / shed) so a red
+//! run says *what* broke, not just how much. `hostile > 0` adds that
+//! many attacker threads running the fault-injection sessions from
+//! [`crate::fuzz::fault`] alongside the healthy clients; their outcomes
+//! are reported separately under `injected` and never count as load
+//! failures.
+//!
+//! `sweep` turns on the connection-scaling harness: for each requested
+//! connection count N it establishes N concurrent keep-alive sockets
+//! ([`http::KeepAliveClient`]), drives a fixed number of requests per
+//! connection, and reports per-point latency percentiles plus the
+//! `reused` vs `reconnects` split — the direct evidence of which server
+//! backend actually holds N connections open.
 
 use super::http;
 use crate::fuzz::fault;
 use crate::util::json::{self, Json};
+use crate::util::SplitMix64;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -29,6 +47,16 @@ pub struct LoadgenOptions {
     pub requests: usize,
     /// Hostile (fault-injecting) threads to run alongside the clients.
     pub hostile: usize,
+    /// Open-loop mode: target aggregate arrival rate in requests/sec
+    /// (Poisson arrivals split evenly across clients). `None` = closed
+    /// loop.
+    pub rate: Option<f64>,
+    /// Connection-scaling sweep: counts of concurrent keep-alive
+    /// connections to establish and drive (e.g. `[1, 64, 1000]`).
+    /// Empty/None = no sweep.
+    pub sweep: Option<Vec<usize>>,
+    /// Requests per connection at each sweep point.
+    pub sweep_requests: usize,
     /// Where to write the JSON report (None = don't write).
     pub out: Option<PathBuf>,
 }
@@ -55,6 +83,10 @@ pub struct FailureTaxonomy {
     /// a run against a drifting model fleet reads as "clients need full
     /// fetches", not "server is erroring".
     pub delta_mismatch: usize,
+    /// HTTP 503 from the `max_connections` accept guard: the server is
+    /// load-shedding by design, not failing — its own bucket so
+    /// saturation reads as "offered load exceeded the cap".
+    pub shed: usize,
     /// Anything else.
     pub other: usize,
 }
@@ -84,6 +116,8 @@ impl FailureTaxonomy {
     pub fn record_status(&mut self, status: u16) {
         if status == 409 {
             self.delta_mismatch += 1;
+        } else if status == 503 {
+            self.shed += 1;
         } else {
             self.http_error += 1;
         }
@@ -96,6 +130,7 @@ impl FailureTaxonomy {
             + self.malformed_response
             + self.http_error
             + self.delta_mismatch
+            + self.shed
             + self.other
     }
 
@@ -106,6 +141,7 @@ impl FailureTaxonomy {
         self.malformed_response += o.malformed_response;
         self.http_error += o.http_error;
         self.delta_mismatch += o.delta_mismatch;
+        self.shed += o.shed;
         self.other += o.other;
     }
 }
@@ -131,6 +167,7 @@ pub struct LoadgenReport {
     pub injected: InjectedReport,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    pub p999_ms: f64,
     pub mean_ms: f64,
     pub min_ms: f64,
     pub max_ms: f64,
@@ -142,6 +179,39 @@ pub struct LoadgenReport {
     /// Time-to-first-usable-tier probes — `None` when the server hosts
     /// no progressive (v4) containers.
     pub progressive: Option<ProgressiveLatency>,
+    /// One entry per requested sweep connection count; empty when the
+    /// sweep was not requested.
+    pub connection_scaling: Vec<SweepPoint>,
+}
+
+/// One point on the connection-scaling curve: N concurrent keep-alive
+/// connections, a fixed number of requests each.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Requested concurrent connections.
+    pub connections: usize,
+    /// Connections actually established within the dial timeout — the
+    /// headline scaling number (a backend that cannot hold N
+    /// connections shows `established < connections` here).
+    pub established: usize,
+    /// Requests attempted across all established connections.
+    pub requests: usize,
+    pub ok: usize,
+    pub failures: usize,
+    /// 503s from the accept guard.
+    pub shed: usize,
+    /// Re-dials forced by the server closing (threaded backend: every
+    /// request; event backend: ~0).
+    pub reconnects: u64,
+    /// Responses served on an already-used socket (keep-alive working).
+    pub reused: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub throughput_rps: f64,
+    /// Time-to-first-usable-tier (`GET /models/{m}?tier=0`, best of 3)
+    /// probed right after the point — `None` without progressive models.
+    pub ttfut_ms: Option<f64>,
 }
 
 /// The progressive-delivery headline numbers: how fast a client gets a
@@ -289,6 +359,15 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                         bytes_requests: 0,
                         weights_requests: 0,
                     };
+                    // Open loop: this client's share of the aggregate
+                    // Poisson rate. Deterministic per-client RNG so two
+                    // runs offer the same arrival sequence.
+                    let lambda =
+                        opts.rate.map(|rt| (rt / opts.clients.max(1) as f64).max(1e-6));
+                    let mut rng = SplitMix64::new(
+                        0x9e37_79b9_7f4a_7c15 ^ (c as u64).wrapping_mul(0x100_0000_01b3),
+                    );
+                    let mut next_at = Instant::now();
                     for i in 0..opts.requests {
                         let t = &targets[(c + i * 7) % targets.len()];
                         // alternate compressed-bytes and decoded-weights
@@ -303,7 +382,23 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                             r.bytes_requests += 1;
                             format!("{base_path}/models/{}/layers/{}", t.model, t.layer)
                         };
-                        let rt0 = Instant::now();
+                        // In open-loop mode latency is measured from
+                        // the *scheduled* arrival, so server slowdowns
+                        // show up as queueing delay instead of being
+                        // absorbed by the client (coordinated omission).
+                        let rt0 = match lambda {
+                            Some(l) => {
+                                let dt = -(1.0 - rng.next_f64()).ln() / l;
+                                next_at += Duration::from_secs_f64(dt);
+                                if let Some(wait) =
+                                    next_at.checked_duration_since(Instant::now())
+                                {
+                                    std::thread::sleep(wait);
+                                }
+                                next_at
+                            }
+                            None => Instant::now(),
+                        };
                         match http::get(addr, &path, None) {
                             Ok(resp) if resp.status == 200 => {
                                 r.latencies_ms
@@ -365,6 +460,17 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     // compares base-prefix vs full-container latency on an idle server,
     // not under the concurrent mix above
     let progressive = probe_progressive(&addr, &base_path, &progressives, opts.requests)?;
+    let connection_scaling = match &opts.sweep {
+        Some(counts) if !counts.is_empty() => connection_sweep(
+            &addr,
+            &base_path,
+            &targets,
+            &progressives,
+            counts,
+            opts.sweep_requests.max(1),
+        ),
+        _ => Vec::new(),
+    };
     let report = LoadgenReport {
         total_requests: opts.clients * opts.requests,
         failures,
@@ -372,6 +478,7 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         injected,
         p50_ms: percentile(&latencies, 50.0),
         p99_ms: percentile(&latencies, 99.0),
+        p999_ms: percentile(&latencies, 99.9),
         mean_ms: latencies.iter().sum::<f64>() / latencies.len() as f64,
         min_ms: latencies[0],
         max_ms: latencies[latencies.len() - 1],
@@ -381,12 +488,176 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         bytes_requests: breq,
         weights_requests: wreq,
         progressive,
+        connection_scaling,
     };
     if let Some(path) = &opts.out {
         std::fs::write(path, to_json(opts, &report).to_string_pretty())
             .with_context(|| format!("writing {path:?}"))?;
     }
     Ok(report)
+}
+
+/// Connection-scaling sweep: for each count N, establish N concurrent
+/// keep-alive sockets (spread over at most 64 threads), then drive
+/// `rounds` cheap zero-copy requests per connection and report latency
+/// percentiles, throughput, and the keep-alive reuse split. Failures
+/// here are recorded per point, never folded into the main run's
+/// ensure-zero failure count — a backend that cannot hold N connections
+/// is exactly what this sweep exists to show, not an error.
+fn connection_sweep(
+    addr: &str,
+    base_path: &str,
+    targets: &[Target],
+    progressives: &[String],
+    counts: &[usize],
+    rounds: usize,
+) -> Vec<SweepPoint> {
+    struct ThreadResult {
+        established: usize,
+        latencies: Vec<f64>,
+        ok: usize,
+        failures: usize,
+        shed: usize,
+        reconnects: u64,
+        reused: u64,
+        wall_s: f64,
+    }
+
+    let mut points = Vec::with_capacity(counts.len());
+    for &requested in counts {
+        let n = requested.max(1);
+        let threads = n.min(64);
+        // Short dial timeout on purpose: a backend whose backlog is full
+        // should show up as `established < connections` within seconds,
+        // not stall the sweep.
+        let dial_timeout = Duration::from_millis(1000);
+        let barrier = std::sync::Barrier::new(threads);
+        let results: Vec<ThreadResult> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|ti| {
+                    let barrier = &barrier;
+                    scope.spawn(move || {
+                        // split N across threads; the first (N % threads)
+                        // threads own one extra connection
+                        let owned = n / threads + usize::from(ti < n % threads);
+                        let mut clients = Vec::with_capacity(owned);
+                        for _ in 0..owned {
+                            if let Ok(c) = http::KeepAliveClient::connect(addr, dial_timeout)
+                            {
+                                clients.push(c);
+                            }
+                        }
+                        let established = clients.len();
+                        // all threads finish dialing before anyone sends,
+                        // so the point measures N *concurrent* sockets
+                        barrier.wait();
+                        let mut r = ThreadResult {
+                            established,
+                            latencies: Vec::with_capacity(established * rounds),
+                            ok: 0,
+                            failures: 0,
+                            shed: 0,
+                            reconnects: 0,
+                            reused: 0,
+                            wall_s: 0.0,
+                        };
+                        let start = Instant::now();
+                        for round in 0..rounds {
+                            for ci in 0..clients.len() {
+                                let t = &targets
+                                    [(ti * 31 + ci * 7 + round) % targets.len()];
+                                let path = format!(
+                                    "{base_path}/models/{}/layers/{}",
+                                    t.model, t.layer
+                                );
+                                let q0 = Instant::now();
+                                match clients[ci].get(&path) {
+                                    Ok((200, _)) => {
+                                        r.ok += 1;
+                                        r.latencies
+                                            .push(q0.elapsed().as_secs_f64() * 1e3);
+                                    }
+                                    Ok((503, _)) => r.shed += 1,
+                                    Ok(_) | Err(_) => r.failures += 1,
+                                }
+                            }
+                        }
+                        r.wall_s = start.elapsed().as_secs_f64();
+                        for c in &clients {
+                            r.reconnects += c.reconnects;
+                            r.reused += c.reused;
+                        }
+                        r
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep thread"))
+                .collect()
+        });
+
+        let mut latencies: Vec<f64> = Vec::new();
+        let (mut established, mut ok, mut failures, mut shed) = (0, 0, 0, 0);
+        let (mut reconnects, mut reused) = (0u64, 0u64);
+        let mut wall_s = 0.0f64;
+        for r in results {
+            established += r.established;
+            ok += r.ok;
+            failures += r.failures;
+            shed += r.shed;
+            reconnects += r.reconnects;
+            reused += r.reused;
+            wall_s = wall_s.max(r.wall_s);
+            latencies.extend_from_slice(&r.latencies);
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // time-to-first-usable-tier right after the point, while the
+        // server has just carried N connections
+        let ttfut_ms = progressives.first().and_then(|m| {
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let q0 = Instant::now();
+                if let Ok(resp) =
+                    http::get(addr, &format!("{base_path}/models/{m}?tier=0"), None)
+                {
+                    if resp.status == 200 {
+                        best = best.min(q0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+            }
+            best.is_finite().then_some(best)
+        });
+        let (p50, p99, p999) = if latencies.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                percentile(&latencies, 50.0),
+                percentile(&latencies, 99.0),
+                percentile(&latencies, 99.9),
+            )
+        };
+        eprintln!(
+            "[loadgen] sweep {requested}: established {established}, ok {ok}, \
+reused {reused}, reconnects {reconnects}, shed {shed}, p99 {p99:.2}ms"
+        );
+        points.push(SweepPoint {
+            connections: requested,
+            established,
+            requests: ok + failures + shed,
+            ok,
+            failures,
+            shed,
+            reconnects,
+            reused,
+            p50_ms: p50,
+            p99_ms: p99,
+            p999_ms: p999,
+            throughput_rps: ok as f64 / wall_s.max(1e-9),
+            ttfut_ms,
+        });
+    }
+    points
 }
 
 /// One hostile thread: `rounds` fault-injection sessions cycling over
@@ -464,6 +735,10 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
         ("clients", json::num(opts.clients as f64)),
         ("requests_per_client", json::num(opts.requests as f64)),
         ("total_requests", json::num(r.total_requests as f64)),
+        (
+            "mode",
+            json::s(if opts.rate.is_some() { "open" } else { "closed" }),
+        ),
         ("failures", json::num(r.failures as f64)),
         (
             "failure_taxonomy",
@@ -477,6 +752,7 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
                 ),
                 ("http_error", json::num(r.failure_taxonomy.http_error as f64)),
                 ("delta_mismatch", json::num(r.failure_taxonomy.delta_mismatch as f64)),
+                ("shed", json::num(r.failure_taxonomy.shed as f64)),
                 ("other", json::num(r.failure_taxonomy.other as f64)),
             ]),
         ),
@@ -493,6 +769,7 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
         ),
         ("p50_ms", json::num(r.p50_ms)),
         ("p99_ms", json::num(r.p99_ms)),
+        ("p999_ms", json::num(r.p999_ms)),
         ("mean_ms", json::num(r.mean_ms)),
         ("min_ms", json::num(r.min_ms)),
         ("max_ms", json::num(r.max_ms)),
@@ -507,6 +784,9 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
             ]),
         ),
     ];
+    if let Some(rate) = opts.rate {
+        fields.push(("rate_rps", json::num(rate)));
+    }
     if let Some(p) = &r.progressive {
         fields.push((
             "progressive",
@@ -520,6 +800,44 @@ fn to_json(opts: &LoadgenOptions, r: &LoadgenReport) -> Json {
                 ("base_tier_bytes", json::num(p.base_bytes as f64)),
                 ("full_bytes", json::num(p.full_bytes as f64)),
             ]),
+        ));
+    }
+    if !r.connection_scaling.is_empty() {
+        fields.push((
+            "connection_scaling",
+            json::arr(
+                r.connection_scaling
+                    .iter()
+                    .map(|p| {
+                        let mut f = vec![
+                            ("connections", json::num(p.connections as f64)),
+                            ("established", json::num(p.established as f64)),
+                            ("requests", json::num(p.requests as f64)),
+                            ("ok", json::num(p.ok as f64)),
+                            ("failures", json::num(p.failures as f64)),
+                            ("shed", json::num(p.shed as f64)),
+                            ("reconnects", json::num(p.reconnects as f64)),
+                            ("reused", json::num(p.reused as f64)),
+                            (
+                                "reuse_ratio",
+                                json::num(if p.ok > 0 {
+                                    p.reused as f64 / p.ok as f64
+                                } else {
+                                    0.0
+                                }),
+                            ),
+                            ("p50_ms", json::num(p.p50_ms)),
+                            ("p99_ms", json::num(p.p99_ms)),
+                            ("p999_ms", json::num(p.p999_ms)),
+                            ("throughput_rps", json::num(p.throughput_rps)),
+                        ];
+                        if let Some(t) = p.ttfut_ms {
+                            f.push(("ttfut_ms", json::num(t)));
+                        }
+                        json::obj(f)
+                    })
+                    .collect(),
+            ),
         ));
     }
     json::obj(fields)
@@ -550,9 +868,11 @@ mod tests {
         t.record_error("not an HTTP response");
         t.record_error("bad status line");
         t.record_error("connection closed before full body");
-        t.record_status(503);
+        t.record_status(500);
         // 409 is the delta endpoint's stale-base signal, its own bucket
         t.record_status(409);
+        // 503 is the accept guard shedding by design, its own bucket
+        t.record_status(503);
         t.record_error("some novel explosion");
         assert_eq!(
             t,
@@ -563,14 +883,15 @@ mod tests {
                 malformed_response: 3,
                 http_error: 1,
                 delta_mismatch: 1,
+                shed: 1,
                 other: 1,
             }
         );
-        assert_eq!(t.total(), 11);
+        assert_eq!(t.total(), 12);
         let mut sum = FailureTaxonomy::default();
         sum.merge(&t);
         sum.merge(&t);
-        assert_eq!(sum.total(), 22);
+        assert_eq!(sum.total(), 24);
     }
 
     #[test]
@@ -580,6 +901,9 @@ mod tests {
             clients: 2,
             requests: 3,
             hostile: 1,
+            rate: None,
+            sweep: None,
+            sweep_requests: 3,
             out: None,
         };
         let r = LoadgenReport {
@@ -593,6 +917,7 @@ mod tests {
             injected: InjectedReport { slowloris: 3, unexpected: 0, ..Default::default() },
             p50_ms: 1.0,
             p99_ms: 2.0,
+            p999_ms: 2.5,
             mean_ms: 1.2,
             min_ms: 0.8,
             max_ms: 2.0,
@@ -611,6 +936,21 @@ mod tests {
                 base_bytes: 100,
                 full_bytes: 300,
             }),
+            connection_scaling: vec![SweepPoint {
+                connections: 64,
+                established: 64,
+                requests: 192,
+                ok: 192,
+                failures: 0,
+                shed: 0,
+                reconnects: 0,
+                reused: 128,
+                p50_ms: 0.5,
+                p99_ms: 1.5,
+                p999_ms: 1.9,
+                throughput_rps: 5000.0,
+                ttfut_ms: Some(0.7),
+            }],
         };
         let j = to_json(&opts, &r);
         let parsed = Json::parse(&j.to_string_pretty()).unwrap();
@@ -639,8 +979,36 @@ mod tests {
             parsed.path("progressive.base_tier_bytes").unwrap().as_usize().unwrap(),
             100
         );
-        let r2 = LoadgenReport { progressive: None, ..r };
+        assert_eq!(parsed.get("mode").unwrap().as_str().unwrap(), "closed");
+        assert!(parsed.get("rate_rps").is_none());
+        assert!(parsed.get("p999_ms").is_some());
+        assert!(parsed.path("failure_taxonomy.shed").is_some());
+        // connection-scaling block: one object per sweep point
+        let scaling = parsed.get("connection_scaling").unwrap();
+        let point = match scaling {
+            Json::Arr(a) => &a[0],
+            _ => panic!("connection_scaling must be an array"),
+        };
+        assert_eq!(point.get("connections").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(point.get("established").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(point.get("reused").unwrap().as_usize().unwrap(), 128);
+        assert!(point.get("reuse_ratio").is_some());
+        assert!(point.get("p999_ms").is_some());
+        assert!(point.get("ttfut_ms").is_some());
+
+        let open_opts = LoadgenOptions { rate: Some(250.0), ..opts.clone() };
+        let parsed_open =
+            Json::parse(&to_json(&open_opts, &r).to_string_pretty()).unwrap();
+        assert_eq!(parsed_open.get("mode").unwrap().as_str().unwrap(), "open");
+        assert_eq!(parsed_open.get("rate_rps").unwrap().as_usize().unwrap(), 250);
+
+        let r2 = LoadgenReport {
+            progressive: None,
+            connection_scaling: Vec::new(),
+            ..r
+        };
         let parsed2 = Json::parse(&to_json(&opts, &r2).to_string_pretty()).unwrap();
         assert!(parsed2.get("progressive").is_none());
+        assert!(parsed2.get("connection_scaling").is_none());
     }
 }

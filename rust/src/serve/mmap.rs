@@ -1,0 +1,192 @@
+//! Zero-copy container bytes: a read-only `mmap` of the `.dcbc` file
+//! with a buffered-read fallback.
+//!
+//! The server indexes containers once and then serves byte ranges out of
+//! them for the life of the process. Mapping the file means Range / tier
+//! / delta responses are written straight from the page cache — no heap
+//! copy per request, and cold pages fault in lazily instead of the whole
+//! multi-GB container being resident up front. Like
+//! [`crate::util::poll`], the binding is a pair of `extern "C"`
+//! declarations against symbols `std` already links; on non-Unix
+//! platforms (or when `mmap` fails, e.g. on an empty file or an exotic
+//! filesystem) [`ModelBytes::load`] silently falls back to an ordinary
+//! heap read — behavior is identical either way, only the copy count
+//! differs.
+
+use anyhow::{Context, Result};
+use std::ops::Deref;
+use std::path::Path;
+
+/// Immutable container bytes, either mapped or heap-resident. Derefs to
+/// `&[u8]`; shared across connections behind an `Arc`.
+pub enum ModelBytes {
+    #[cfg(unix)]
+    Mapped {
+        ptr: *const u8,
+        len: usize,
+    },
+    Heap(Vec<u8>),
+}
+
+// A PROT_READ private mapping is immutable shared memory; the raw
+// pointer is only ever read through &self.
+unsafe impl Send for ModelBytes {}
+unsafe impl Sync for ModelBytes {}
+
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+impl ModelBytes {
+    /// Map `path` read-only, falling back to a heap read when mapping is
+    /// unavailable. The fallback is also taken for empty files (a
+    /// zero-length `mmap` is an error by spec).
+    pub fn load(path: &Path) -> Result<ModelBytes> {
+        #[cfg(unix)]
+        {
+            if let Some(mapped) = Self::try_map(path) {
+                return Ok(mapped);
+            }
+        }
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Ok(ModelBytes::Heap(bytes))
+    }
+
+    /// Force the heap representation (tests, synthetic containers).
+    pub fn from_vec(bytes: Vec<u8>) -> ModelBytes {
+        ModelBytes::Heap(bytes)
+    }
+
+    /// True when the bytes are served from a mapping (diagnostics).
+    pub fn is_mapped(&self) -> bool {
+        #[cfg(unix)]
+        {
+            matches!(self, ModelBytes::Mapped { .. })
+        }
+        #[cfg(not(unix))]
+        {
+            false
+        }
+    }
+
+    #[cfg(unix)]
+    fn try_map(path: &Path) -> Option<ModelBytes> {
+        use std::os::fd::AsRawFd;
+        let file = std::fs::File::open(path).ok()?;
+        let len = file.metadata().ok()?.len();
+        if len == 0 || len > usize::MAX as u64 {
+            return None;
+        }
+        let len = len as usize;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1
+        if ptr.is_null() || ptr as isize == -1 {
+            return None;
+        }
+        Some(ModelBytes::Mapped { ptr, len })
+    }
+}
+
+impl Deref for ModelBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            ModelBytes::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            ModelBytes::Heap(v) => v,
+        }
+    }
+}
+
+impl Drop for ModelBytes {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let ModelBytes::Mapped { ptr, len } = self {
+            unsafe {
+                sys::munmap(*ptr as *mut u8, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ModelBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ModelBytes({} bytes, {})",
+            self.len(),
+            if self.is_mapped() { "mapped" } else { "heap" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapped_bytes_match_fs_read() {
+        let dir = std::env::temp_dir().join(format!("dcbc_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sample.bin");
+        let payload: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &payload).unwrap();
+
+        let loaded = ModelBytes::load(&path).unwrap();
+        assert_eq!(&loaded[..], &payload[..]);
+        #[cfg(unix)]
+        assert!(loaded.is_mapped());
+
+        // slicing works through Deref like any &[u8]
+        assert_eq!(&loaded[4..8], &payload[4..8]);
+        drop(loaded); // munmap must not invalidate other state
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_heap() {
+        let dir = std::env::temp_dir().join(format!("dcbc_mmap_e_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let loaded = ModelBytes::load(&path).unwrap();
+        assert!(!loaded.is_mapped());
+        assert!(loaded.is_empty());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
+    }
+
+    #[test]
+    fn from_vec_is_heap() {
+        let b = ModelBytes::from_vec(vec![1, 2, 3]);
+        assert!(!b.is_mapped());
+        assert_eq!(&b[..], &[1, 2, 3]);
+    }
+}

@@ -19,20 +19,31 @@
 //!   connection handler.
 //! * [`http`] — minimal HTTP/1.1 framing (server + client side) with
 //!   `Range` support.
-//! * [`server`] — `TcpListener` accept loop bounded by a
-//!   [`crate::util::par::WorkerPool`], serving manifests, compressed
-//!   layer bytes and server-side-decoded weights.
-//! * [`loadgen`] — concurrent-client load generator reporting p50/p99
-//!   latency + throughput to `BENCH_serve.json`.
+//! * [`mmap`] — [`mmap::ModelBytes`]: read-only `mmap` of a container
+//!   (heap fallback), so Range/tier/delta responses are zero-copy.
+//! * [`server`] — shared routing/state ([`server::ServeOptions`],
+//!   `respond`) behind two transports: the thread-per-connection accept
+//!   loop bounded by a [`crate::util::par::WorkerPool`], and —
+//! * [`event`] — the epoll/kqueue readiness loop
+//!   ([`crate::util::poll`]) with HTTP/1.1 keep-alive, bounded
+//!   pipelining, and poll-driven read/write deadlines, holding
+//!   thousands of mostly-idle connections on one thread. Both serve
+//!   byte-identical responses (differentially tested).
+//! * [`loadgen`] — closed- and open-loop (Poisson) load generator
+//!   reporting p50/p99/p999 latency, throughput, and a
+//!   connection-scaling sweep to `BENCH_serve.json`.
 
 pub mod cache;
+pub mod event;
 pub mod http;
 pub mod index;
 pub mod loadgen;
+pub mod mmap;
 pub mod server;
 pub mod stream;
 
 pub use cache::{CacheStats, DecodedCache};
 pub use index::ContainerIndex;
-pub use server::{ServeOptions, ServerHandle};
+pub use mmap::ModelBytes;
+pub use server::{Backend, ServeOptions, ServerHandle};
 pub use stream::{DecodedLayer, StreamDecoder, StreamEvent};

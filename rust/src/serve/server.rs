@@ -1,7 +1,10 @@
-//! The model-delivery server: a `TcpListener` accept loop whose
-//! connection handlers run on a bounded [`WorkerPool`].
+//! The model-delivery server: shared routing + state behind two
+//! transports — the thread-per-connection [`Backend::Threaded`] accept
+//! loop (a bounded [`WorkerPool`]) and the readiness-polling
+//! [`Backend::Event`] loop ([`super::event`]) that holds thousands of
+//! keep-alive connections on a handful of threads.
 //!
-//! Endpoints (all GET, `Connection: close`):
+//! Endpoints (all GET):
 //!
 //! ```text
 //! /healthz                           liveness probe
@@ -19,22 +22,33 @@
 //! ```
 //!
 //! `{l}` is a layer index or a layer name. Weights decodes go through a
-//! byte-budgeted LRU ([`super::cache::DecodedCache`]); `X-Cache:
-//! hit|miss` reports what happened. Containers are mmap-free
-//! whole-file loads — the index keeps per-layer byte ranges so `Range`
-//! requests and layer fetches never copy more than they serve.
+//! byte-budgeted LRU ([`super::cache::DecodedCache`]) keyed by (model,
+//! layer, tier); `X-Cache: hit|miss` reports what happened. Containers
+//! are served from a read-only `mmap` ([`super::mmap::ModelBytes`])
+//! where available, so container/tier/layer/delta byte ranges are
+//! written zero-copy out of the page cache.
+//!
+//! Routing is the pure function [`respond`]: request in, [`Response`]
+//! out, no socket in sight — both transports render its output through
+//! [`http::render_head`], which is what makes the byte-level contract
+//! transport-independent (and differentially testable; see
+//! `tests/server_end_to_end.rs`).
 
 use super::cache::{CacheStats, DecodedCache};
 use super::http::{self, Request};
 use super::index::ContainerIndex;
+use super::mmap::ModelBytes;
 use crate::util::json::{self, Json};
 use crate::util::par::WorkerPool;
+use crate::util::poll;
 use anyhow::{bail, Context, Result};
 use byteorder::{ByteOrder, LittleEndian};
 use std::collections::BTreeMap;
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -46,14 +60,19 @@ pub struct ServeOptions {
     pub addr: String,
     /// Decoded-layer cache budget in bytes.
     pub cache_bytes: usize,
-    /// Concurrent connection handlers (and per-layer decode fan-out cap).
+    /// Concurrent connection handlers (threaded backend) / decode
+    /// offload pool size (event backend), and per-layer chunk fan-out.
     pub workers: usize,
-    /// Per-socket read deadline: a client that goes quiet mid-request
-    /// (slowloris) gets a 408 and frees its worker slot after this long.
+    /// Read deadline: a client that goes quiet mid-request (slowloris)
+    /// gets a 408 and frees its slot after this long.
     pub read_timeout: Duration,
-    /// Per-socket write deadline: a client that stops reading the
-    /// response can only wedge a handler for this long.
+    /// Write deadline: a client that stops reading the response can
+    /// only wedge a handler/connection for this long.
     pub write_timeout: Duration,
+    /// Accept guard: connections beyond this many concurrently open are
+    /// shed with a 503 (counted in `/stats` as `shed`) instead of
+    /// queueing unboundedly. `usize::MAX` = no limit.
+    pub max_connections: usize,
 }
 
 impl Default for ServeOptions {
@@ -65,38 +84,84 @@ impl Default for ServeOptions {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             read_timeout: Duration::from_secs(10),
             write_timeout: Duration::from_secs(30),
+            max_connections: usize::MAX,
         }
     }
 }
 
+/// Which transport serves the shared routing logic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// One blocking handler per connection on a bounded [`WorkerPool`];
+    /// always answers `Connection: close`. The original transport, kept
+    /// as the differential-testing oracle.
+    Threaded,
+    /// epoll/kqueue readiness loop with keep-alive + pipelining
+    /// ([`super::event`]); requires [`poll::supported`].
+    Event,
+}
+
 /// One loaded container.
 pub struct ModelEntry {
-    pub bytes: Arc<Vec<u8>>,
+    pub bytes: Arc<ModelBytes>,
     pub index: Arc<ContainerIndex>,
 }
 
-struct ServerState {
-    models: BTreeMap<String, ModelEntry>,
+pub(crate) struct ServerState {
+    pub(crate) models: BTreeMap<String, ModelEntry>,
     /// (model name, parent fingerprint) → key in `models` of the v3
     /// delta segment upgrading that base. Model name is the delta
     /// container's own `name` field, not its file stem.
-    deltas: BTreeMap<(String, u64), String>,
+    pub(crate) deltas: BTreeMap<(String, u64), String>,
     /// Fingerprint → key for every loaded **full** container: how the
     /// delta endpoint tells a stale-but-legitimate base (409) from a
     /// fingerprint it has never heard of (404).
-    known_fps: BTreeMap<u64, String>,
+    pub(crate) known_fps: BTreeMap<u64, String>,
     /// Container model name → key in `models` of a v4 progressive
     /// container for it, so the delta 409 can advertise the fallback.
-    progressives: BTreeMap<String, String>,
-    cache: DecodedCache,
+    pub(crate) progressives: BTreeMap<String, String>,
+    pub(crate) cache: DecodedCache,
     /// Worker cap for intra-layer (chunk) decode fan-out.
-    decode_workers: usize,
-    requests: AtomicU64,
-    errors: AtomicU64,
+    pub(crate) decode_workers: usize,
+    pub(crate) requests: AtomicU64,
+    pub(crate) errors: AtomicU64,
     /// Connections dropped for blowing a read deadline (408s issued).
-    timeouts: AtomicU64,
-    read_timeout: Duration,
-    write_timeout: Duration,
+    pub(crate) timeouts: AtomicU64,
+    /// Connections shed with a 503 at the `max_connections` guard.
+    pub(crate) shed: AtomicU64,
+    /// Currently open (accepted, not yet closed) connections.
+    pub(crate) open: AtomicUsize,
+    pub(crate) read_timeout: Duration,
+    pub(crate) write_timeout: Duration,
+    pub(crate) max_connections: usize,
+    /// `"threaded"` or `"event"`, surfaced in `/stats`.
+    pub(crate) backend: &'static str,
+}
+
+impl ServerState {
+    /// Load the model directory and assemble the shared state both
+    /// backends serve from.
+    pub(crate) fn build(opts: &ServeOptions, backend: &'static str) -> Result<Arc<ServerState>> {
+        let models = load_model_dir(&opts.dir)?;
+        let (deltas, known_fps, progressives) = build_delta_registry(&models);
+        Ok(Arc::new(ServerState {
+            models,
+            deltas,
+            known_fps,
+            progressives,
+            cache: DecodedCache::new(opts.cache_bytes),
+            decode_workers: opts.workers,
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            open: AtomicUsize::new(0),
+            read_timeout: opts.read_timeout,
+            write_timeout: opts.write_timeout,
+            max_connections: opts.max_connections,
+            backend,
+        }))
+    }
 }
 
 /// Handle to a running server; dropping it does NOT stop the server —
@@ -106,6 +171,9 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     state: Arc<ServerState>,
+    /// Present on the event backend: how `shutdown` interrupts a parked
+    /// poll loop without a TCP self-connect.
+    waker: Option<Arc<poll::Waker>>,
 }
 
 impl ServerHandle {
@@ -126,11 +194,22 @@ impl ServerHandle {
         self.state.timeouts.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting, drain in-flight handlers, join the accept thread.
+    /// Connections shed with a 503 at the `max_connections` guard.
+    pub fn shed_count(&self) -> u64 {
+        self.state.shed.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, drain in-flight handlers, join the serve thread.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // unblock the accept() call
-        let _ = TcpStream::connect(self.addr);
+        match &self.waker {
+            // event loop: parked in poll — nudge it
+            Some(w) => w.wake(),
+            // threaded loop: parked in accept() — unblock it
+            None => {
+                let _ = TcpStream::connect(self.addr);
+            }
+        }
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -138,7 +217,8 @@ impl ServerHandle {
 }
 
 /// Scan `dir` for `*.dcbc` files, index each one. The model name is the
-/// file stem (`lenet5.dcbc` → `lenet5`).
+/// file stem (`lenet5.dcbc` → `lenet5`). Container bytes are mmap'd
+/// where the platform allows so big models cost address space, not RSS.
 pub fn load_model_dir(dir: &PathBuf) -> Result<BTreeMap<String, ModelEntry>> {
     let mut models = BTreeMap::new();
     let entries = std::fs::read_dir(dir).with_context(|| format!("reading {dir:?}"))?;
@@ -148,7 +228,7 @@ pub fn load_model_dir(dir: &PathBuf) -> Result<BTreeMap<String, ModelEntry>> {
             continue;
         }
         let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
-        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let bytes = ModelBytes::load(&path)?;
         let index =
             ContainerIndex::build(&bytes).with_context(|| format!("indexing {path:?}"))?;
         models.insert(
@@ -185,7 +265,7 @@ pub fn build_delta_registry(
                 deltas.insert((m.index.model.clone(), fp), key.clone());
             }
             None => {
-                known_fps.insert(crate::util::fnv1a(&m.bytes), key.clone());
+                known_fps.insert(crate::util::fnv1a(&m.bytes[..]), key.clone());
                 if !m.index.tier_ends.is_empty() {
                     progressives.insert(m.index.model.clone(), key.clone());
                 }
@@ -195,26 +275,25 @@ pub fn build_delta_registry(
     (deltas, known_fps, progressives)
 }
 
-/// Bind, spawn the accept loop, and return immediately.
+/// Bind and spawn the **threaded** backend (the historical default for
+/// embedders/tests); see [`start_with`] to choose.
 pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
-    let models = load_model_dir(&opts.dir)?;
+    start_with(Backend::Threaded, opts)
+}
+
+/// Bind, spawn the chosen backend's serve loop, and return immediately.
+pub fn start_with(backend: Backend, opts: ServeOptions) -> Result<ServerHandle> {
+    match backend {
+        Backend::Threaded => start_threaded(opts),
+        Backend::Event => start_event(opts),
+    }
+}
+
+fn start_threaded(opts: ServeOptions) -> Result<ServerHandle> {
+    let state = ServerState::build(&opts, "threaded")?;
     let listener =
         TcpListener::bind(&opts.addr).with_context(|| format!("binding {}", opts.addr))?;
     let addr = listener.local_addr()?;
-    let (deltas, known_fps, progressives) = build_delta_registry(&models);
-    let state = Arc::new(ServerState {
-        models,
-        deltas,
-        known_fps,
-        progressives,
-        cache: DecodedCache::new(opts.cache_bytes),
-        decode_workers: opts.workers,
-        requests: AtomicU64::new(0),
-        errors: AtomicU64::new(0),
-        timeouts: AtomicU64::new(0),
-        read_timeout: opts.read_timeout,
-        write_timeout: opts.write_timeout,
-    });
     let stop = Arc::new(AtomicBool::new(false));
     let accept_state = state.clone();
     let accept_stop = stop.clone();
@@ -228,9 +307,23 @@ pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
                     break;
                 }
                 match conn {
-                    Ok(stream) => {
+                    Ok(mut stream) => {
+                        // accept guard: beyond the cap, shed cheaply in
+                        // the accept thread (a bounded write, then drop)
+                        if accept_state.open.load(Ordering::Relaxed)
+                            >= accept_state.max_connections
+                        {
+                            accept_state.shed.fetch_add(1, Ordering::Relaxed);
+                            let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+                            let _ = shed_response().write_close(&mut stream);
+                            continue;
+                        }
+                        accept_state.open.fetch_add(1, Ordering::Relaxed);
                         let state = accept_state.clone();
-                        pool.execute(move || handle_connection(stream, &state));
+                        pool.execute(move || {
+                            handle_connection(stream, &state);
+                            state.open.fetch_sub(1, Ordering::Relaxed);
+                        });
                     }
                     Err(e) => {
                         eprintln!("[serve] accept error: {e}");
@@ -240,15 +333,158 @@ pub fn start(opts: ServeOptions) -> Result<ServerHandle> {
             // pool drop drains in-flight handlers
         })
         .context("spawning accept thread")?;
-    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), state })
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), state, waker: None })
+}
+
+fn start_event(opts: ServeOptions) -> Result<ServerHandle> {
+    if !poll::supported() {
+        bail!("event backend needs epoll/kqueue — rerun with the threaded backend");
+    }
+    let state = ServerState::build(&opts, "event")?;
+    let listener =
+        TcpListener::bind(&opts.addr).with_context(|| format!("binding {}", opts.addr))?;
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let waker = Arc::new(poll::Waker::new()?);
+    let (loop_state, loop_stop, loop_waker) = (state.clone(), stop.clone(), waker.clone());
+    let workers = opts.workers;
+    let accept_thread = std::thread::Builder::new()
+        .name("serve-event".into())
+        .spawn(move || {
+            if let Err(e) = super::event::run(listener, loop_state, loop_stop, loop_waker, workers)
+            {
+                eprintln!("[serve] event loop failed: {e:#}");
+            }
+        })
+        .context("spawning event loop thread")?;
+    Ok(ServerHandle { addr, stop, accept_thread: Some(accept_thread), state, waker: Some(waker) })
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// A fully-routed response, not yet framed onto a socket. The body may
+/// borrow the mmap'd container ([`Body::Slice`]) — zero copies between
+/// the page cache and the socket for Range/tier/delta traffic.
+pub(crate) struct Response {
+    pub(crate) status: u16,
+    pub(crate) reason: &'static str,
+    pub(crate) content_type: &'static str,
+    pub(crate) headers: Vec<(&'static str, String)>,
+    pub(crate) body: Body,
+}
+
+/// Response body: owned bytes (JSON, decoded weights, error text) or a
+/// shared slice of a loaded container.
+pub(crate) enum Body {
+    Owned(Vec<u8>),
+    Slice { bytes: Arc<ModelBytes>, range: Range<usize> },
+}
+
+impl Body {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Body::Owned(v) => v.len(),
+            Body::Slice { range, .. } => range.len(),
+        }
+    }
+
+    pub(crate) fn as_slice(&self) -> &[u8] {
+        match self {
+            Body::Owned(v) => v,
+            Body::Slice { bytes, range } => &bytes[range.clone()],
+        }
+    }
+}
+
+impl Response {
+    pub(crate) fn new(
+        status: u16,
+        reason: &'static str,
+        content_type: &'static str,
+        headers: Vec<(&'static str, String)>,
+        body: Body,
+    ) -> Response {
+        Response { status, reason, content_type, headers, body }
+    }
+
+    /// Plain-text error response (the shape `http::write_error` framed).
+    pub(crate) fn error(status: u16, reason: &'static str, msg: String) -> Response {
+        Response::new(status, reason, "text/plain", Vec::new(), Body::Owned(msg.into_bytes()))
+    }
+
+    fn json(status: u16, reason: &'static str, body: &Json) -> Response {
+        Response::new(
+            status,
+            reason,
+            "application/json",
+            Vec::new(),
+            Body::Owned(body.to_string_compact().into_bytes()),
+        )
+    }
+
+    /// Render head + body with `Connection: <connection>` — the single
+    /// framing path shared by both backends.
+    pub(crate) fn render(&self, connection: &str) -> String {
+        http::render_head(
+            self.status,
+            self.reason,
+            self.content_type,
+            self.body.len(),
+            connection,
+            &self.headers,
+        )
+    }
+
+    /// Blocking write with `Connection: close` (threaded backend).
+    pub(crate) fn write_close(&self, stream: &mut TcpStream) -> Result<()> {
+        stream.write_all(self.render("close").as_bytes())?;
+        stream.write_all(self.body.as_slice())?;
+        stream.flush()?;
+        Ok(())
+    }
+}
+
+/// The 503 issued at the `max_connections` accept guard (both backends).
+pub(crate) fn shed_response() -> Response {
+    Response::error(
+        503,
+        "Service Unavailable",
+        "connection limit reached, retry shortly".into(),
+    )
+}
+
+/// The 408 issued when a read deadline expires mid-request-head.
+pub(crate) fn timeout_response() -> Response {
+    Response::error(
+        408,
+        "Request Timeout",
+        "client sent no complete request head in time".into(),
+    )
 }
 
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
     let _ = stream.set_read_timeout(Some(state.read_timeout));
     let _ = stream.set_write_timeout(Some(state.write_timeout));
     state.requests.fetch_add(1, Ordering::Relaxed);
-    let req = match http::read_request(&mut stream) {
-        Ok(r) => r,
+    match http::read_request(&mut stream) {
+        Ok(req) => match respond(&req, state) {
+            Ok(resp) => {
+                if resp.write_close(&mut stream).is_err() {
+                    // client stopped reading (stalled reader) or died —
+                    // the write deadline freed the handler
+                    state.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                state.errors.fetch_add(1, Ordering::Relaxed);
+                let resp =
+                    Response::error(500, "Internal Server Error", format!("{e:#}"));
+                let _ = resp.write_close(&mut stream);
+            }
+        },
         Err(e) => {
             // a read deadline expiring mid-head is a slow client, not a
             // malformed request: answer 408 and free the worker slot.
@@ -257,39 +493,45 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
             let msg = format!("{e}");
             if msg.contains("[kind=WouldBlock]") || msg.contains("[kind=TimedOut]") {
                 state.timeouts.fetch_add(1, Ordering::Relaxed);
-                let _ = http::write_error(
-                    &mut stream,
-                    408,
-                    "Request Timeout",
-                    "client sent no complete request head in time",
-                );
+                let _ = timeout_response().write_close(&mut stream);
             } else {
                 state.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = http::write_error(&mut stream, 400, "Bad Request", &msg);
+                let _ = Response::error(400, "Bad Request", msg).write_close(&mut stream);
             }
-            return;
         }
-    };
-    if let Err(e) = route(&mut stream, &req, state) {
-        state.errors.fetch_add(1, Ordering::Relaxed);
-        let _ = http::write_error(&mut stream, 500, "Internal Server Error", &format!("{e:#}"));
     }
 }
 
-fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<()> {
+/// Route one parsed request to its response. Pure with respect to the
+/// transport: no socket, no deadline, no `Connection` header — both
+/// backends call this and frame the result themselves, which is what the
+/// differential replay in `tests/server_end_to_end.rs` relies on.
+pub(crate) fn respond(req: &Request, state: &ServerState) -> Result<Response> {
     if req.method != "GET" {
-        return http::write_error(stream, 405, "Method Not Allowed", "GET only");
+        return Ok(Response::error(405, "Method Not Allowed", "GET only".into()));
     }
     let path = req.path.split('?').next().unwrap_or("");
     let parts: Vec<&str> = path.split('/').filter(|p| !p.is_empty()).collect();
     match parts.as_slice() {
-        ["healthz"] => http::write_response(stream, 200, "OK", "text/plain", &[], b"ok"),
+        ["healthz"] => Ok(Response::new(
+            200,
+            "OK",
+            "text/plain",
+            Vec::new(),
+            Body::Owned(b"ok".to_vec()),
+        )),
         ["stats"] => {
             let s = state.cache.stats();
-            let body = json::obj(vec![
+            let mut fields = vec![
                 ("requests", json::num(state.requests.load(Ordering::Relaxed) as f64)),
                 ("errors", json::num(state.errors.load(Ordering::Relaxed) as f64)),
                 ("timeouts", json::num(state.timeouts.load(Ordering::Relaxed) as f64)),
+                ("shed", json::num(state.shed.load(Ordering::Relaxed) as f64)),
+                (
+                    "open_connections",
+                    json::num(state.open.load(Ordering::Relaxed) as f64),
+                ),
+                ("backend", json::s(state.backend)),
                 (
                     "read_timeout_ms",
                     json::num(state.read_timeout.as_millis() as f64),
@@ -298,19 +540,25 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                     "write_timeout_ms",
                     json::num(state.write_timeout.as_millis() as f64),
                 ),
-                (
-                    "cache",
-                    json::obj(vec![
-                        ("hits", json::num(s.hits as f64)),
-                        ("misses", json::num(s.misses as f64)),
-                        ("evictions", json::num(s.evictions as f64)),
-                        ("entries", json::num(s.entries as f64)),
-                        ("resident_bytes", json::num(s.resident_bytes as f64)),
-                        ("budget_bytes", json::num(s.budget_bytes as f64)),
-                    ]),
-                ),
-            ]);
-            write_json(stream, 200, "OK", &body)
+            ];
+            if state.max_connections != usize::MAX {
+                fields.push((
+                    "max_connections",
+                    json::num(state.max_connections as f64),
+                ));
+            }
+            fields.push((
+                "cache",
+                json::obj(vec![
+                    ("hits", json::num(s.hits as f64)),
+                    ("misses", json::num(s.misses as f64)),
+                    ("evictions", json::num(s.evictions as f64)),
+                    ("entries", json::num(s.entries as f64)),
+                    ("resident_bytes", json::num(s.resident_bytes as f64)),
+                    ("budget_bytes", json::num(s.budget_bytes as f64)),
+                ]),
+            ));
+            Ok(Response::json(200, "OK", &json::obj(fields)))
         }
         ["models"] => {
             let list = state
@@ -332,11 +580,11 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                     json::obj(fields)
                 })
                 .collect();
-            write_json(stream, 200, "OK", &json::obj(vec![("models", json::arr(list))]))
+            Ok(Response::json(200, "OK", &json::obj(vec![("models", json::arr(list))])))
         }
         ["models", name] => {
             let Some(m) = state.models.get(*name) else {
-                return not_found(stream, name);
+                return Ok(not_found(name));
             };
             // ?tier=t on a v4 progressive container serves the exact
             // byte prefix through tier t — a complete container in its
@@ -344,49 +592,41 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
             // are shed with structured errors, never a panic.
             if let Some(t) = http::query_param(&req.path, "tier") {
                 let Ok(t) = t.parse::<usize>() else {
-                    return http::write_error(
-                        stream,
+                    return Ok(Response::error(
                         404,
                         "Not Found",
-                        "unparseable ?tier= (want a decimal tier index)",
-                    );
+                        "unparseable ?tier= (want a decimal tier index)".into(),
+                    ));
                 };
                 if m.index.tier_ends.is_empty() {
-                    return http::write_error(
-                        stream,
+                    return Ok(Response::error(
                         409,
                         "Conflict",
-                        &format!(
+                        format!(
                             "model {name} is not a progressive container \
                              (version {}) — fetch it without ?tier=",
                             m.index.version
                         ),
-                    );
+                    ));
                 }
                 let Some(&end) = m.index.tier_ends.get(t) else {
-                    return http::write_error(
-                        stream,
+                    return Ok(Response::error(
                         404,
                         "Not Found",
-                        &format!(
+                        format!(
                             "tier {t} out of range (container has {} tiers)",
                             m.index.tier_ends.len()
                         ),
-                    );
+                    ));
                 };
-                let headers = [
+                let headers = vec![
                     ("X-Tier", t.to_string()),
                     ("X-Tiers-Total", m.index.tier_ends.len().to_string()),
                 ];
-                return write_bytes_ranged_with(
-                    stream,
-                    req,
-                    &m.bytes[..end],
-                    "application/octet-stream",
-                    &headers,
-                );
+                return Ok(ranged_response(req, &m.bytes, 0..end, headers));
             }
-            write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream")
+            let len = m.bytes.len();
+            Ok(ranged_response(req, &m.bytes, 0..len, Vec::new()))
         }
         ["models", name, "delta"] => {
             // Hostile ?from= values are shed, never served and never a
@@ -396,24 +636,23 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
             // signal to fall back to a full fetch. Loadgen buckets the
             // 409s separately (`delta_mismatch`).
             let Some(from) = http::query_param(&req.path, "from") else {
-                return http::write_error(
-                    stream,
+                return Ok(Response::error(
                     404,
                     "Not Found",
-                    "delta endpoint needs ?from=<16-hex-digit parent fingerprint>",
-                );
+                    "delta endpoint needs ?from=<16-hex-digit parent fingerprint>".into(),
+                ));
             };
             let Ok(fp) = u64::from_str_radix(from.trim_start_matches("0x"), 16) else {
-                return http::write_error(
-                    stream,
+                return Ok(Response::error(
                     404,
                     "Not Found",
-                    "unparseable ?from= fingerprint (want 16 hex digits)",
-                );
+                    "unparseable ?from= fingerprint (want 16 hex digits)".into(),
+                ));
             };
             if let Some(key) = state.deltas.get(&(name.to_string(), fp)) {
                 let m = &state.models[key];
-                return write_bytes_ranged(stream, req, &m.bytes, "application/octet-stream");
+                let len = m.bytes.len();
+                return Ok(ranged_response(req, &m.bytes, 0..len, Vec::new()));
             }
             if state.known_fps.contains_key(&fp) {
                 // advertise a progressive fallback when one is loaded:
@@ -425,47 +664,48 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                     ),
                     None => "no progressive container is available for this model".into(),
                 };
-                return http::write_error(
-                    stream,
+                return Ok(Response::error(
                     409,
                     "Conflict",
-                    &format!(
+                    format!(
                         "no delta from base {fp:016x} for model {name} — \
                          fetch the full container instead ({fallback})"
                     ),
-                );
+                ));
             }
-            http::write_error(
-                stream,
+            Ok(Response::error(
                 404,
                 "Not Found",
-                &format!("unknown base fingerprint {fp:016x}"),
-            )
+                format!("unknown base fingerprint {fp:016x}"),
+            ))
         }
         ["models", name, "manifest"] => {
             let Some(m) = state.models.get(*name) else {
-                return not_found(stream, name);
+                return Ok(not_found(name));
             };
-            write_json(stream, 200, "OK", &manifest_json(name, &m.index))
+            Ok(Response::json(200, "OK", &manifest_json(name, &m.index)))
         }
         ["models", name, "layers", layer] => {
             let Some(m) = state.models.get(*name) else {
-                return not_found(stream, name);
+                return Ok(not_found(name));
             };
             let Some(li) = m.index.resolve(layer) else {
-                return not_found(stream, layer);
+                return Ok(not_found(layer));
             };
-            let payload = m.index.layer_payload(&m.bytes, li)?;
-            write_bytes_ranged(stream, req, payload, "application/octet-stream")
+            // validates the payload range against the container bytes
+            m.index.layer_payload(&m.bytes, li)?;
+            let range = m.index.layers[li].payload.clone();
+            Ok(ranged_response(req, &m.bytes, range, Vec::new()))
         }
         ["models", name, "layers", layer, "weights"] => {
             let Some(m) = state.models.get(*name) else {
-                return not_found(stream, name);
+                return Ok(not_found(name));
             };
             let Some(li) = m.index.resolve(layer) else {
-                return not_found(stream, layer);
+                return Ok(not_found(layer));
             };
-            let (weights, was_hit) = state.cache.get_or_decode(name, li, || {
+            let tier = m.index.layers[li].tier;
+            let (weights, was_hit) = state.cache.get_or_decode(name, li, tier, || {
                 m.index.decode_layer_weights(&m.bytes, li, state.decode_workers)
             })?;
             let mut body = vec![0u8; weights.len() * 4];
@@ -476,94 +716,78 @@ fn route(stream: &mut TcpStream, req: &Request, state: &ServerState) -> Result<(
                 .map(|d| d.to_string())
                 .collect::<Vec<_>>()
                 .join(",");
-            let headers = [
+            let headers = vec![
                 ("X-Cache", if was_hit { "hit" } else { "miss" }.to_string()),
                 ("X-Dims", dims),
                 // container-supplied name: strip CR/LF/controls so a
                 // hostile layer name cannot inject response headers
                 ("X-Layer-Name", http::sanitize_header_value(&m.index.layers[li].name)),
             ];
-            http::write_response(
-                stream,
+            Ok(Response::new(
                 200,
                 "OK",
                 "application/octet-stream",
-                &headers,
-                &body,
-            )
+                headers,
+                Body::Owned(body),
+            ))
         }
-        _ => not_found(stream, path),
+        _ => Ok(not_found(path)),
     }
 }
 
-fn not_found(stream: &mut TcpStream, what: &str) -> Result<()> {
-    http::write_error(stream, 404, "Not Found", &format!("no such resource: {what}"))
+fn not_found(what: &str) -> Response {
+    Response::error(404, "Not Found", format!("no such resource: {what}"))
 }
 
-fn write_json(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) -> Result<()> {
-    http::write_response(
-        stream,
-        status,
-        reason,
-        "application/json",
-        &[],
-        body.to_string_compact().as_bytes(),
-    )
-}
-
-/// Serve `bytes` honoring an optional single `Range` header (RFC 7233:
-/// ignored/malformed ranges get the full 200, satisfiable ones 206,
-/// out-of-bounds ones 416).
-fn write_bytes_ranged(
-    stream: &mut TcpStream,
+/// Serve `bytes[window]` honoring an optional single `Range` header (RFC
+/// 7233: ignored/malformed ranges get the full 200, satisfiable ones
+/// 206, out-of-bounds ones 416). The 200/206 body is a [`Body::Slice`]
+/// into the shared container bytes — zero-copy straight to the socket.
+fn ranged_response(
     req: &Request,
-    bytes: &[u8],
-    content_type: &str,
-) -> Result<()> {
-    write_bytes_ranged_with(stream, req, bytes, content_type, &[])
-}
-
-/// [`write_bytes_ranged`] with extra response headers (e.g. `X-Tier`).
-fn write_bytes_ranged_with(
-    stream: &mut TcpStream,
-    req: &Request,
-    bytes: &[u8],
-    content_type: &str,
-    extra: &[(&str, String)],
-) -> Result<()> {
-    match req.byte_range(bytes.len()) {
+    bytes: &Arc<ModelBytes>,
+    window: Range<usize>,
+    extra: Vec<(&'static str, String)>,
+) -> Response {
+    let len = window.len();
+    match req.byte_range(len) {
         http::RangeOutcome::Ignored => {
             let mut headers = vec![("Accept-Ranges", "bytes".to_string())];
-            headers.extend(extra.iter().cloned());
-            http::write_response(stream, 200, "OK", content_type, &headers, bytes)
+            headers.extend(extra);
+            Response::new(
+                200,
+                "OK",
+                "application/octet-stream",
+                headers,
+                Body::Slice { bytes: bytes.clone(), range: window },
+            )
         }
         http::RangeOutcome::Satisfiable(r) => {
             let mut headers = vec![
                 ("Accept-Ranges", "bytes".to_string()),
                 (
                     "Content-Range",
-                    format!("bytes {}-{}/{}", r.start, r.end - 1, bytes.len()),
+                    format!("bytes {}-{}/{}", r.start, r.end - 1, len),
                 ),
             ];
-            headers.extend(extra.iter().cloned());
-            http::write_response(
-                stream,
+            headers.extend(extra);
+            let abs = (window.start + r.start)..(window.start + r.end);
+            Response::new(
                 206,
                 "Partial Content",
-                content_type,
-                &headers,
-                &bytes[r],
+                "application/octet-stream",
+                headers,
+                Body::Slice { bytes: bytes.clone(), range: abs },
             )
         }
         http::RangeOutcome::Unsatisfiable => {
-            let headers = [("Content-Range", format!("bytes */{}", bytes.len()))];
-            http::write_response(
-                stream,
+            let headers = vec![("Content-Range", format!("bytes */{len}"))];
+            Response::new(
                 416,
                 "Range Not Satisfiable",
                 "text/plain",
-                &headers,
-                b"unsatisfiable range",
+                headers,
+                Body::Owned(b"unsatisfiable range".to_vec()),
             )
         }
     }

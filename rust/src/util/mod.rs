@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod json;
 pub mod par;
+pub mod poll;
 pub mod ptest;
 pub mod rng;
 pub mod timer;

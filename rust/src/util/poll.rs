@@ -1,0 +1,543 @@
+//! Readiness polling over the OS event queue — epoll on Linux, kqueue on
+//! macOS — plus the cross-thread [`Waker`] the event-loop server uses to
+//! hear about completed offloaded work.
+//!
+//! The bindings are `extern "C"` declarations against symbols `std`
+//! already links on these platforms (libc/libSystem), so no external
+//! crate is needed and the build stays offline. Only fixed-arity
+//! syscalls are declared — variadic functions like `fcntl` have a
+//! different calling convention on some targets (notably Apple arm64),
+//! so nonblocking mode is set through `std`'s own
+//! `set_nonblocking` instead. On platforms without a supported event
+//! queue [`Poller::new`] returns an error and [`supported`] is `false`;
+//! callers fall back to the thread-per-connection server.
+
+use anyhow::{Context, Result};
+use std::net::UdpSocket;
+use std::time::Duration;
+
+#[cfg(unix)]
+pub use std::os::fd::RawFd;
+#[cfg(not(unix))]
+pub type RawFd = i32;
+
+/// Which readiness transitions to watch a descriptor for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+}
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The token the descriptor was registered with.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up / descriptor errored — the owner should tear the
+    /// connection down after flushing what it can.
+    pub hangup: bool,
+}
+
+/// True when this build has a real readiness backend (epoll/kqueue).
+pub fn supported() -> bool {
+    cfg!(any(target_os = "linux", target_os = "android", target_os = "macos"))
+}
+
+// ---------------------------------------------------------------------------
+// Linux: epoll
+// ---------------------------------------------------------------------------
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod sys {
+    use super::{Event, Interest, RawFd};
+    use anyhow::{bail, Result};
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Kernel ABI struct. Packed on x86-64 (the kernel declares it
+    /// `__attribute__((packed))` there and only there).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    // The epoll fd is just a kernel handle; all methods are &self-safe
+    // (epoll_ctl/epoll_wait are thread-safe per POSIX).
+    unsafe impl Send for Poller {}
+    unsafe impl Sync for Poller {}
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Self> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                bail!("epoll_create1: {}", std::io::Error::last_os_error());
+            }
+            Ok(Self { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+            let mut ev = EpollEvent { events: mask(interest), data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                bail!("epoll_ctl(op={op}, fd={fd}): {}", std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+            if rc < 0 {
+                bail!("epoll_ctl(DEL, fd={fd}): {}", std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Blocking wait (level-triggered); `timeout` of `None` blocks
+        /// indefinitely. Appends to `out`.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> Result<()> {
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            let ms: i32 = match timeout {
+                None => -1,
+                Some(t) => t.as_millis().min(i32::MAX as u128) as i32,
+            };
+            let n = loop {
+                let rc = unsafe {
+                    epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, ms)
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = std::io::Error::last_os_error();
+                if err.kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                bail!("epoll_wait: {err}");
+            };
+            for e in &buf[..n] {
+                // copy out of the (possibly packed) struct before use
+                let events = e.events;
+                let data = e.data;
+                out.push(Event {
+                    token: data,
+                    readable: events & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: events & EPOLLOUT != 0,
+                    hangup: events & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// macOS: kqueue
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "macos")]
+mod sys {
+    use super::{Event, Interest, RawFd};
+    use anyhow::{bail, Result};
+    use std::time::Duration;
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EV_ADD: u16 = 0x0001;
+    const EV_DELETE: u16 = 0x0002;
+    const EV_ENABLE: u16 = 0x0004;
+    const EV_DISABLE: u16 = 0x0008;
+    const EV_EOF: u16 = 0x8000;
+    const EV_ERROR: u16 = 0x4000;
+
+    #[repr(C)]
+    struct KEvent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: usize,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+
+    extern "C" {
+        fn kqueue() -> i32;
+        fn kevent(
+            kq: i32,
+            changelist: *const KEvent,
+            nchanges: i32,
+            eventlist: *mut KEvent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Poller {
+        kq: RawFd,
+    }
+
+    unsafe impl Send for Poller {}
+    unsafe impl Sync for Poller {}
+
+    impl Poller {
+        pub fn new() -> Result<Self> {
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                bail!("kqueue: {}", std::io::Error::last_os_error());
+            }
+            Ok(Self { kq })
+        }
+
+        fn submit(&self, changes: &[KEvent]) -> Result<()> {
+            let rc = unsafe {
+                kevent(
+                    self.kq,
+                    changes.as_ptr(),
+                    changes.len() as i32,
+                    std::ptr::null_mut(),
+                    0,
+                    std::ptr::null(),
+                )
+            };
+            if rc < 0 {
+                bail!("kevent(changes): {}", std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        fn interest_changes(fd: RawFd, token: u64, interest: Interest) -> [KEvent; 2] {
+            let flag = |on: bool| EV_ADD | if on { EV_ENABLE } else { EV_DISABLE };
+            [
+                KEvent {
+                    ident: fd as usize,
+                    filter: EVFILT_READ,
+                    flags: flag(interest.readable),
+                    fflags: 0,
+                    data: 0,
+                    udata: token as usize,
+                },
+                KEvent {
+                    ident: fd as usize,
+                    filter: EVFILT_WRITE,
+                    flags: flag(interest.writable),
+                    fflags: 0,
+                    data: 0,
+                    udata: token as usize,
+                },
+            ]
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+            self.submit(&Self::interest_changes(fd, token, interest))
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+            self.submit(&Self::interest_changes(fd, token, interest))
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> Result<()> {
+            // best effort: one or both filters may not be registered
+            for filter in [EVFILT_READ, EVFILT_WRITE] {
+                let ch = KEvent {
+                    ident: fd as usize,
+                    filter,
+                    flags: EV_DELETE,
+                    fflags: 0,
+                    data: 0,
+                    udata: 0,
+                };
+                let _ = self.submit(std::slice::from_ref(&ch));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> Result<()> {
+            let mut buf: Vec<KEvent> = Vec::with_capacity(256);
+            let ts;
+            let ts_ptr = match timeout {
+                None => std::ptr::null(),
+                Some(t) => {
+                    ts = Timespec {
+                        tv_sec: t.as_secs() as i64,
+                        tv_nsec: t.subsec_nanos() as i64,
+                    };
+                    &ts as *const Timespec
+                }
+            };
+            let n = loop {
+                let rc = unsafe {
+                    kevent(self.kq, std::ptr::null(), 0, buf.as_mut_ptr(), 256, ts_ptr)
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = std::io::Error::last_os_error();
+                if err.kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                bail!("kevent(wait): {err}");
+            };
+            unsafe { buf.set_len(n) };
+            for e in &buf {
+                out.push(Event {
+                    token: e.udata as u64,
+                    readable: e.filter == EVFILT_READ,
+                    writable: e.filter == EVFILT_WRITE,
+                    hangup: e.flags & (EV_EOF | EV_ERROR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.kq);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Everything else: stub that reports itself unsupported
+// ---------------------------------------------------------------------------
+
+#[cfg(not(any(target_os = "linux", target_os = "android", target_os = "macos")))]
+mod sys {
+    use super::{Event, Interest, RawFd};
+    use anyhow::{bail, Result};
+    use std::time::Duration;
+
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> Result<Self> {
+            bail!("readiness polling is not supported on this platform — use --threaded")
+        }
+        pub fn register(&self, _fd: RawFd, _token: u64, _i: Interest) -> Result<()> {
+            unreachable!("Poller::new never succeeds here")
+        }
+        pub fn modify(&self, _fd: RawFd, _token: u64, _i: Interest) -> Result<()> {
+            unreachable!("Poller::new never succeeds here")
+        }
+        pub fn deregister(&self, _fd: RawFd) -> Result<()> {
+            unreachable!("Poller::new never succeeds here")
+        }
+        pub fn wait(&self, _out: &mut Vec<Event>, _t: Option<Duration>) -> Result<()> {
+            unreachable!("Poller::new never succeeds here")
+        }
+    }
+}
+
+pub use sys::Poller;
+
+// ---------------------------------------------------------------------------
+// Waker
+// ---------------------------------------------------------------------------
+
+/// Cross-thread wakeup for a [`Poller`] loop: worker threads call
+/// [`Waker::wake`] after posting a completion, and the loop — registered
+/// on [`Waker::fd`] — gets a readable event even if it was parked in
+/// `wait`. Implemented as a self-connected nonblocking UDP socket so it
+/// works identically on every Unix without extra syscall bindings; the
+/// datagrams never leave the loopback interface.
+pub struct Waker {
+    sock: UdpSocket,
+}
+
+impl Waker {
+    pub fn new() -> Result<Self> {
+        let sock = UdpSocket::bind("127.0.0.1:0").context("binding waker socket")?;
+        let addr = sock.local_addr().context("waker local addr")?;
+        sock.connect(addr).context("self-connecting waker")?;
+        sock.set_nonblocking(true).context("waker nonblocking")?;
+        Ok(Self { sock })
+    }
+
+    #[cfg(unix)]
+    pub fn fd(&self) -> RawFd {
+        use std::os::fd::AsRawFd;
+        self.sock.as_raw_fd()
+    }
+
+    #[cfg(not(unix))]
+    pub fn fd(&self) -> RawFd {
+        -1
+    }
+
+    /// Nudge the loop. Nonblocking and infallible by design: if the
+    /// socket buffer is already full, a wakeup is already pending and
+    /// dropping this one loses nothing.
+    pub fn wake(&self) {
+        let _ = self.sock.send(&[1u8]);
+    }
+
+    /// Swallow all pending wakeups (the loop calls this once per
+    /// readable event on the waker fd).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while let Ok(n) = self.sock.recv(&mut buf) {
+            if n == 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::time::Duration;
+
+    #[test]
+    fn waker_roundtrip() {
+        let w = Waker::new().unwrap();
+        w.wake();
+        w.wake();
+        w.drain(); // must not block or panic
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "android", target_os = "macos"))]
+    #[test]
+    fn poller_sees_waker_readability() {
+        let poller = Poller::new().unwrap();
+        let w = Waker::new().unwrap();
+        poller.register(w.fd(), 7, Interest::READ).unwrap();
+
+        // nothing pending: a short wait returns no events
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+
+        w.wake();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        w.drain();
+
+        // level-triggered: after draining, readability clears
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+        poller.deregister(w.fd()).unwrap();
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "android", target_os = "macos"))]
+    #[test]
+    fn poller_tracks_tcp_read_write_interest() {
+        use std::net::{TcpListener, TcpStream};
+        use std::os::fd::AsRawFd;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.register(server.as_raw_fd(), 42, Interest::BOTH).unwrap();
+
+        // a fresh socket is writable but not readable
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        let ev = events.iter().find(|e| e.token == 42).expect("event for socket");
+        assert!(ev.writable && !ev.readable);
+
+        // after the peer writes, readable shows up
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let mut events = Vec::new();
+        for _ in 0..100 {
+            events.clear();
+            poller.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 42 && e.readable) {
+                break;
+            }
+        }
+        assert!(events.iter().any(|e| e.token == 42 && e.readable));
+        let mut buf = [0u8; 8];
+        let mut srv = &server;
+        let n = srv.read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+
+        // peer hangs up → hangup (or at least readable EOF) is reported
+        drop(client);
+        let mut saw_close = false;
+        for _ in 0..100 {
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 42 && (e.hangup || e.readable)) {
+                saw_close = true;
+                break;
+            }
+        }
+        assert!(saw_close);
+        poller.deregister(server.as_raw_fd()).unwrap();
+    }
+}

@@ -10,7 +10,7 @@ use deepcabac::model::{CompressedLayer, CompressedModel};
 use deepcabac::quant::QuantGrid;
 use deepcabac::serve::http;
 use deepcabac::serve::loadgen::{self, LoadgenOptions};
-use deepcabac::serve::server::{start, ServeOptions, ServerHandle};
+use deepcabac::serve::server::{start, start_with, Backend, ServeOptions, ServerHandle};
 use deepcabac::util::json::Json;
 use deepcabac::util::SplitMix64;
 use std::io::{Read, Write};
@@ -47,23 +47,26 @@ fn make_model_dir(tag: &str) -> PathBuf {
 
 /// Short-deadline server for fault tests: hostile sessions resolve in
 /// ~300 ms instead of the production 10 s default.
-fn start_short_deadline(dir: PathBuf, workers: usize) -> ServerHandle {
-    start(ServeOptions {
+fn short_deadline_opts(dir: PathBuf, workers: usize) -> ServeOptions {
+    ServeOptions {
         dir,
         addr: "127.0.0.1:0".into(),
         cache_bytes: 1 << 20,
         workers,
         read_timeout: Duration::from_millis(300),
         write_timeout: Duration::from_millis(500),
-    })
-    .unwrap()
+        max_connections: usize::MAX,
+    }
 }
 
-#[test]
-fn server_survives_fault_storm_and_keeps_serving() {
-    let dir = make_model_dir("storm");
+fn start_short_deadline(dir: PathBuf, workers: usize) -> ServerHandle {
+    start(short_deadline_opts(dir, workers)).unwrap()
+}
+
+fn run_fault_storm(tag: &str, backend: Backend) {
+    let dir = make_model_dir(tag);
     let workers = 4;
-    let handle = start_short_deadline(dir.clone(), workers);
+    let handle = start_with(backend, short_deadline_opts(dir.clone(), workers)).unwrap();
     let addr = handle.addr().to_string();
     let deadline = Duration::from_secs(5);
     let path = "/models/victim/layers/0";
@@ -137,6 +140,24 @@ fn server_survives_fault_storm_and_keeps_serving() {
 }
 
 #[test]
+fn server_survives_fault_storm_and_keeps_serving() {
+    run_fault_storm("storm", Backend::Threaded);
+}
+
+/// The same storm against the epoll/kqueue readiness loop: the
+/// timer-wheel deadlines must give hostile sessions the same contract
+/// the per-socket deadlines give them on the threaded path (slowloris
+/// -> 408/close, dribble -> 200, storms never wedge healthy service).
+#[test]
+fn event_server_survives_fault_storm_and_keeps_serving() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    run_fault_storm("storm_event", Backend::Event);
+}
+
+#[test]
 fn loadgen_hostile_mode_reports_clean_taxonomy() {
     let dir = make_model_dir("loadgen");
     let handle = start_short_deadline(dir.clone(), 6);
@@ -147,6 +168,9 @@ fn loadgen_hostile_mode_reports_clean_taxonomy() {
         clients: 6,
         requests: 8,
         hostile: 2,
+        rate: None,
+        sweep: None,
+        sweep_requests: 3,
         out: Some(out.clone()),
     })
     .unwrap();

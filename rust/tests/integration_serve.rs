@@ -384,6 +384,9 @@ fn loadgen_32_clients_zero_failures() {
         clients: 32,
         requests: 6,
         hostile: 0,
+        rate: None,
+        sweep: None,
+        sweep_requests: 3,
         out: Some(out.clone()),
     })
     .unwrap();

@@ -1,0 +1,559 @@
+//! Transport-level conformance for the two serve backends.
+//!
+//! The byte-level contract of the server (status lines, headers, bodies,
+//! Range/tier/delta semantics, hostile-session handling) is defined by
+//! the pure router + shared framing, not by the transport. This file
+//! enforces that:
+//!
+//! * **differential corpus replay** — every endpoint class (plus Range
+//!   variants and hostile fingerprints) is replayed against a threaded
+//!   and an event-loop server over the same model directory; responses
+//!   must be byte-identical (`/stats` compares the status line only —
+//!   its body is live counters).
+//! * **hostile sessions** — slowloris gets the same 408 bytes from both
+//!   backends; a dribbled-but-complete request gets the same 200.
+//! * **keep-alive + pipelining** — N pipelined requests on one socket
+//!   are answered in order; a malformed request mid-pipeline gets a 400
+//!   and a clean close with nothing after it.
+//! * **max-connections shedding** — connections beyond the cap get a
+//!   503 and show up in the `shed` counter.
+
+use deepcabac::codec::{encode_levels, CodecConfig};
+use deepcabac::delta;
+use deepcabac::model::{fingerprint, ChunkInfo, CompressedLayer, CompressedModel};
+use deepcabac::quant::QuantGrid;
+use deepcabac::serve::http;
+use deepcabac::serve::server::{start_with, Backend, ServeOptions, ServerHandle};
+use deepcabac::util::json::Json;
+use deepcabac::util::{fnv1a, SplitMix64};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn make_layer(name: &str, n: usize, n_chunks: usize, seed: u64) -> CompressedLayer {
+    let cfg = CodecConfig::default();
+    let mut rng = SplitMix64::new(seed);
+    let levels: Vec<i32> = (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.75 {
+                0
+            } else {
+                (1 + rng.below(25) as i32) * if rng.next_u64() & 1 == 0 { 1 } else { -1 }
+            }
+        })
+        .collect();
+    let n_chunks = n_chunks.max(1);
+    let per = ((levels.len() + n_chunks - 1) / n_chunks).max(1);
+    let mut payload = Vec::new();
+    let mut chunks = Vec::new();
+    for part in levels.chunks(per) {
+        let bytes = encode_levels(part, cfg);
+        chunks.push(ChunkInfo { n_weights: part.len(), bytes: bytes.len() });
+        payload.extend_from_slice(&bytes);
+    }
+    if chunks.len() <= 1 {
+        chunks.clear();
+    }
+    CompressedLayer {
+        name: name.into(),
+        dims: vec![n.max(4) / 4, 4],
+        grid: QuantGrid { delta: 0.05, max_level: 30 },
+        s_param: 12,
+        cfg,
+        n_weights: levels.len(),
+        payload,
+        chunks,
+        bias: vec![0.5, -0.5],
+    }
+}
+
+/// A model directory covering every endpoint class: a plain container
+/// (`alpha`), a v4 progressive (`prog`), and a v3 delta segment for
+/// `gamma` (whose full container is also present, so the 409 stale-base
+/// path is reachable). Returns (dir, delta parent fp, gamma full fp).
+fn write_corpus_dir(tag: &str) -> (PathBuf, u64, u64) {
+    let dir = std::env::temp_dir().join(format!("dcbc_e2e_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let alpha = CompressedModel {
+        name: "alpha".into(),
+        layers: vec![make_layer("conv1", 2000, 1, 1), make_layer("fc1", 400, 3, 2)],
+    };
+    std::fs::write(dir.join("alpha.dcbc"), alpha.serialize()).unwrap();
+
+    let coarse = CompressedModel {
+        name: "prog".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 17), make_layer("fc", 300, 1, 18)],
+    };
+    let fine = CompressedModel {
+        name: "prog".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 19), make_layer("fc", 300, 1, 18)],
+    };
+    let (prog, _) = delta::encode_progressive(&[coarse, fine], 2).unwrap();
+    std::fs::write(dir.join("prog.dcbc"), prog.serialize()).unwrap();
+
+    let parent = CompressedModel {
+        name: "gamma".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 7), make_layer("fc", 300, 1, 8)],
+    };
+    let target = CompressedModel {
+        name: "gamma".into(),
+        layers: vec![make_layer("conv1", 1200, 2, 9), make_layer("fc", 300, 1, 10)],
+    };
+    let (seg, _) = delta::encode(&parent, &target, 2).unwrap();
+    let target_bytes = target.serialize();
+    std::fs::write(dir.join("gamma.dcbc"), &target_bytes).unwrap();
+    std::fs::write(dir.join("gamma_update.dcbc"), seg.serialize()).unwrap();
+
+    (dir, fingerprint(&parent), fnv1a(&target_bytes))
+}
+
+fn start_backend(dir: PathBuf, backend: Backend) -> ServerHandle {
+    start_with(
+        backend,
+        ServeOptions {
+            dir,
+            addr: "127.0.0.1:0".into(),
+            cache_bytes: 1 << 20,
+            workers: 4,
+            read_timeout: Duration::from_millis(400),
+            write_timeout: Duration::from_millis(800),
+            max_connections: usize::MAX,
+        },
+    )
+    .unwrap()
+}
+
+/// Write `raw` on a fresh connection, read until the server closes.
+fn exchange(addr: &str, raw: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(raw).unwrap();
+    s.flush().unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    buf
+}
+
+fn get_request(path: &str) -> Vec<u8> {
+    format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").into_bytes()
+}
+
+fn first_line(resp: &[u8]) -> &[u8] {
+    match resp.windows(2).position(|w| w == b"\r\n") {
+        Some(i) => &resp[..i],
+        None => resp,
+    }
+}
+
+/// Read exactly `n` HTTP/1.1 responses off one socket (Content-Length
+/// framing), returning (status, body) per response plus whether the
+/// last-seen head asked for `Connection: close`.
+fn read_n_responses(s: &mut TcpStream, n: usize) -> (Vec<(u16, Vec<u8>)>, bool) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out = Vec::new();
+    let mut last_close = false;
+    let mut chunk = [0u8; 4096];
+    while out.len() < n {
+        let head_end = loop {
+            if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i + 4;
+            }
+            let got = s.read(&mut chunk).expect("reading pipelined response");
+            assert!(got > 0, "server closed mid-response ({} of {n} read)", out.len());
+            buf.extend_from_slice(&chunk[..got]);
+        };
+        let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|t| t.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+        let mut content_length = 0usize;
+        for line in head.lines() {
+            let lower = line.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap();
+            }
+            if let Some(v) = lower.strip_prefix("connection:") {
+                last_close = v.trim() == "close";
+            }
+        }
+        while buf.len() < head_end + content_length {
+            let got = s.read(&mut chunk).expect("reading pipelined body");
+            assert!(got > 0, "server closed mid-body");
+            buf.extend_from_slice(&chunk[..got]);
+        }
+        let body = buf[head_end..head_end + content_length].to_vec();
+        buf.drain(..head_end + content_length);
+        out.push((status, body));
+    }
+    (out, last_close)
+}
+
+/// Every endpoint class replayed against both transports: responses
+/// must be byte-identical (status line, headers, body). `/stats` is the
+/// one body exemption — it reports live per-server counters.
+#[test]
+fn differential_corpus_replay_threaded_vs_event() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    let (dir, parent_fp, stale_fp) = write_corpus_dir("diff");
+    let threaded = start_backend(dir.clone(), Backend::Threaded);
+    let event = start_backend(dir.clone(), Backend::Event);
+    let (ta, ea) = (threaded.addr().to_string(), event.addr().to_string());
+
+    let paths = [
+        "/healthz",
+        "/models",
+        "/models/alpha",
+        "/models/alpha/manifest",
+        "/models/alpha/layers/0",
+        "/models/alpha/layers/conv1",
+        "/models/alpha/layers/fc1",
+        // twice on purpose: the second decode must be a cache hit on
+        // both servers, so X-Cache headers stay identical
+        "/models/alpha/layers/0/weights",
+        "/models/alpha/layers/0/weights",
+        "/models/alpha/layers/9",
+        "/models/nosuch",
+        "/models/prog",
+        "/models/prog?tier=0",
+        "/models/prog?tier=1",
+        "/models/prog?tier=2",
+        "/models/prog?tier=x",
+        "/models/prog/manifest",
+        "/models/nosuch/delta?from=0000000000000000",
+        "/models/gamma/delta?from=zzzz",
+        "/models/gamma/delta",
+        "/also/not/a/route",
+    ];
+    let mut corpus: Vec<Vec<u8>> = paths.iter().map(|p| get_request(p)).collect();
+    // the delta 200 (served segment) and 409 (stale base) paths
+    corpus.push(get_request(&format!("/models/gamma/delta?from={parent_fp:016x}")));
+    corpus.push(get_request(&format!("/models/gamma/delta?from={stale_fp:016x}")));
+    // Range variants over zero-copy windows: satisfiable, unsatisfiable,
+    // malformed (served whole), and a ranged tier prefix
+    for (path, range) in [
+        ("/models/alpha/layers/0", "bytes=4-11"),
+        ("/models/alpha", "bytes=0-0"),
+        ("/models/alpha", "bytes=999999999-"),
+        ("/models/alpha", "bytes=frobnicate"),
+        ("/models/prog?tier=0", "bytes=4-11"),
+    ] {
+        corpus.push(
+            format!(
+                "GET {path} HTTP/1.1\r\nHost: x\r\nRange: {range}\r\nConnection: close\r\n\r\n"
+            )
+            .into_bytes(),
+        );
+    }
+    // non-GET is a 405 on both
+    corpus.push(b"POST /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n".to_vec());
+
+    for (i, raw) in corpus.iter().enumerate() {
+        let a = exchange(&ta, raw);
+        let b = exchange(&ea, raw);
+        let req = String::from_utf8_lossy(raw);
+        let req = req.lines().next().unwrap_or("");
+        assert!(!a.is_empty(), "[{i}] {req}: threaded sent nothing");
+        assert_eq!(
+            a,
+            b,
+            "[{i}] {req}: transports disagree\n threaded: {:?}\n event:    {:?}",
+            String::from_utf8_lossy(&a),
+            String::from_utf8_lossy(&b),
+        );
+    }
+
+    // /stats bodies are live counters; the status line must still match
+    let stats_req = get_request("/stats");
+    let a = exchange(&ta, &stats_req);
+    let b = exchange(&ea, &stats_req);
+    assert_eq!(first_line(&a), b"HTTP/1.1 200 OK");
+    assert_eq!(first_line(&a), first_line(&b));
+
+    threaded.shutdown();
+    event.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hostile sessions get byte-identical verdicts from both transports:
+/// slowloris (partial head, then silence) is a 408 from the threaded
+/// per-socket deadline and from the event loop's timer wheel; a
+/// dribbled-but-complete request is a 200 from both.
+#[test]
+fn differential_hostile_sessions() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    let (dir, _, _) = write_corpus_dir("hostile");
+    let threaded = start_backend(dir.clone(), Backend::Threaded);
+    let event = start_backend(dir.clone(), Backend::Event);
+    let (ta, ea) = (threaded.addr().to_string(), event.addr().to_string());
+
+    let slowloris = |addr: &str| -> Vec<u8> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(b"GET /models HTTP/1.1\r\nHost: victim\r\nX-Slow: ").unwrap();
+        s.flush().unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        buf
+    };
+    let a = slowloris(&ta);
+    let b = slowloris(&ea);
+    assert!(a.starts_with(b"HTTP/1.1 408 "), "threaded: {:?}", String::from_utf8_lossy(&a));
+    assert_eq!(a, b, "slowloris 408s must be byte-identical");
+    assert!(threaded.timeout_count() > 0);
+    assert!(event.timeout_count() > 0);
+
+    let dribble = |addr: &str| -> Vec<u8> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // one byte at a time, each well inside the 400 ms read deadline:
+        // the deadline applies to *stalls*, not to total request time
+        for b in get_request("/healthz") {
+            s.write_all(&[b]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        buf
+    };
+    let a = dribble(&ta);
+    let b = dribble(&ea);
+    assert!(a.starts_with(b"HTTP/1.1 200 OK"), "threaded: {:?}", String::from_utf8_lossy(&a));
+    assert_eq!(a, b, "dribbled 200s must be byte-identical");
+
+    threaded.shutdown();
+    event.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// N pipelined requests on one keep-alive socket are answered in order,
+/// the socket survives for another batch, and `Connection: close` is
+/// honored when the client finally asks for it.
+#[test]
+fn event_keepalive_pipelining_answers_in_order() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    let (dir, _, _) = write_corpus_dir("pipeline");
+    let handle = start_backend(dir.clone(), Backend::Event);
+    let addr = handle.addr().to_string();
+
+    // expected bodies via independent one-shot fetches
+    let layer0 = http::get(&addr, "/models/alpha/layers/0", None).unwrap();
+    assert_eq!(layer0.status, 200);
+
+    let keep = |path: &str| format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n");
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    // batch 1: three requests written back-to-back before reading
+    // anything — distinct bodies prove ordering
+    let batch = format!(
+        "{}{}{}",
+        keep("/healthz"),
+        keep("/models/alpha/layers/0"),
+        keep("/models/alpha/manifest"),
+    );
+    s.write_all(batch.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let (resps, closed) = read_n_responses(&mut s, 3);
+    assert_eq!(resps[0].0, 200);
+    assert_eq!(resps[0].1, b"ok");
+    assert_eq!(resps[1].0, 200);
+    assert_eq!(resps[1].1, layer0.body, "pipelined responses out of order");
+    assert_eq!(resps[2].0, 200);
+    assert!(resps[2].1.starts_with(b"{"), "manifest must be JSON");
+    assert!(!closed, "keep-alive batch must not advertise Connection: close");
+
+    // batch 2 on the SAME socket: the connection survived
+    s.write_all(keep("/healthz").as_bytes()).unwrap();
+    let (resps, _) = read_n_responses(&mut s, 1);
+    assert_eq!((resps[0].0, resps[0].1.as_slice()), (200, b"ok".as_slice()));
+
+    // explicit close honored: response, then EOF
+    s.write_all(get_request("/healthz").as_slice()).unwrap();
+    let (resps, closed) = read_n_responses(&mut s, 1);
+    assert_eq!(resps[0].0, 200);
+    assert!(closed, "Connection: close must be echoed");
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "bytes after Connection: close: {rest:?}");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A malformed request mid-pipeline: everything before it is answered
+/// normally, the bad request gets a 400, the connection closes cleanly,
+/// and the request after it is never parsed (no framing desync).
+#[test]
+fn event_malformed_mid_pipeline_closes_cleanly() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    let (dir, _, _) = write_corpus_dir("malformed");
+    let handle = start_backend(dir.clone(), Backend::Event);
+    let addr = handle.addr().to_string();
+    let before = handle.request_count();
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let batch = "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n\
+                 THIS IS NOT HTTP\r\n\r\n\
+                 GET /models/alpha/layers/0 HTTP/1.1\r\nHost: x\r\n\r\n";
+    s.write_all(batch.as_bytes()).unwrap();
+    s.flush().unwrap();
+
+    let (resps, closed) = read_n_responses(&mut s, 2);
+    assert_eq!(resps[0].0, 200, "request before the malformed one must succeed");
+    assert_eq!(resps[0].1, b"ok");
+    assert_eq!(resps[1].0, 400, "malformed request must get a 400");
+    assert!(closed, "a 400 must close the connection (framing is not trustworthy)");
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no third response after the close: {rest:?}");
+
+    // the third request was never parsed: 2 requests counted, not 3
+    assert_eq!(handle.request_count() - before, 2);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `max_connections`: the event loop holds N keep-alive connections and
+/// sheds connection N+1 with a 503 + the `shed` counter in /stats.
+#[test]
+fn event_max_connections_sheds_with_503() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    let (dir, _, _) = write_corpus_dir("shed");
+    let handle = start_with(
+        Backend::Event,
+        ServeOptions {
+            dir: dir.clone(),
+            addr: "127.0.0.1:0".into(),
+            cache_bytes: 1 << 20,
+            workers: 2,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            max_connections: 2,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // two keep-alive connections, each proven live by a served request
+    let mut held = Vec::new();
+    for _ in 0..2 {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let (resps, _) = read_n_responses(&mut s, 1);
+        assert_eq!(resps[0].0, 200);
+        held.push(s);
+    }
+
+    // the third connection is shed with a 503 and a close
+    let resp = exchange(&addr, &get_request("/models/alpha"));
+    assert!(
+        resp.starts_with(b"HTTP/1.1 503 "),
+        "expected shed 503, got {:?}",
+        String::from_utf8_lossy(&resp)
+    );
+    assert!(handle.shed_count() >= 1);
+
+    // a held (under-cap) connection still works and reports the shed
+    let mut s = held.pop().unwrap();
+    s.write_all(b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let (resps, _) = read_n_responses(&mut s, 1);
+    assert_eq!(resps[0].0, 200);
+    let stats = Json::parse(std::str::from_utf8(&resps[0].1).unwrap()).unwrap();
+    assert!(stats.get("shed").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(stats.get("max_connections").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(stats.get("backend").unwrap().as_str().unwrap(), "event");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The threaded accept guard sheds the same way (same 503 bytes, same
+/// counter), differentially pinning the shed contract across transports.
+#[test]
+fn threaded_max_connections_sheds_with_503() {
+    let (dir, _, _) = write_corpus_dir("shed_threaded");
+    let handle = start_with(
+        Backend::Threaded,
+        ServeOptions {
+            dir: dir.clone(),
+            addr: "127.0.0.1:0".into(),
+            cache_bytes: 1 << 20,
+            workers: 2,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            // a zero cap sheds every connection — deterministic without
+            // needing to wedge handlers to hold `open` up
+            max_connections: 0,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    let resp = exchange(&addr, &get_request("/healthz"));
+    assert!(
+        resp.starts_with(b"HTTP/1.1 503 "),
+        "expected shed 503, got {:?}",
+        String::from_utf8_lossy(&resp)
+    );
+    assert!(handle.shed_count() >= 1);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// 64 concurrent keep-alive clients against the event loop: every one
+/// of them holds its socket across requests (`reused` > 0, zero
+/// reconnects) — the in-test slice of the connection-scaling story the
+/// smoke benchmark measures at 1k+.
+#[test]
+fn event_holds_concurrent_keepalive_connections() {
+    if !deepcabac::util::poll::supported() {
+        eprintln!("skipping: readiness polling unsupported on this platform");
+        return;
+    }
+    let (dir, _, _) = write_corpus_dir("ka64");
+    let handle = start_backend(dir.clone(), Backend::Event);
+    let addr = handle.addr().to_string();
+
+    let mut clients: Vec<http::KeepAliveClient> = (0..64)
+        .map(|_| http::KeepAliveClient::connect(&addr, Duration::from_secs(5)).unwrap())
+        .collect();
+    // all 64 sockets are open concurrently; three requests each
+    for round in 0..3 {
+        for c in clients.iter_mut() {
+            let (status, len) = c.get("/models/alpha/layers/0").unwrap();
+            assert_eq!(status, 200, "round {round}");
+            assert!(len > 0);
+        }
+    }
+    for (i, c) in clients.iter().enumerate() {
+        assert_eq!(c.reconnects, 0, "client {i} lost its socket");
+        assert!(c.reused >= 2, "client {i} never reused its socket");
+    }
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
