@@ -202,12 +202,39 @@ def progressive_md(b):
     ])
 
 
+def fuzz_md(b):
+    cov = "on" if b.get("cov_enabled") else "off (build with --features fuzz-cov)"
+    rows = []
+    for t in b["targets"]:
+        disc = t.get("discovery") or []
+        curve = " ".join(f"{i}:{e}" for i, e in disc)
+        rows.append([
+            t["target"], int(t["cases"]), fmt(float(t["execs_per_s"]), 0),
+            int(t["unique_edges"]), int(t["batch_unique_edges"]),
+            int(t["corpus_size"]), int(t["promoted"]), int(t["crashes"]),
+            curve or "—",
+        ])
+    return "\n".join([
+        f"**§Fuzzing** — seed {int(b['seed'])}, edge instrumentation {cov}, "
+        f"alloc metering {'on' if b.get('alloc_metered') else 'off'} "
+        "(edges = unique coverage-map slots; batch = same-budget "
+        "generate-and-mutate run for comparison):",
+        "",
+        table(
+            ["target", "execs", "execs/s", "unique edges", "batch edges",
+             "corpus", "promoted", "crashes", "discovery (exec:edges)"],
+            rows,
+        ),
+    ])
+
+
 RENDERERS = {
     "throughput": throughput_md,
     "sweep": sweep_md,
     "serve": serve_md,
     "delta": delta_md,
     "progressive": progressive_md,
+    "fuzz": fuzz_md,
 }
 
 

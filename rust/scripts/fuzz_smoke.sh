@@ -6,15 +6,25 @@
 #      roundtrip-idempotence invariants and the >= 50% prelude-survival
 #      coverage proxy
 #   3. a second, different seed for extra coverage at ~the same cost
+#   4. (EVOLVE=1, default) the coverage-guided evolve loop per target,
+#      wall-capped by EVOLVE_TIME seconds each, writing BENCH_fuzz.json
+#      and promoted finds — then gate per-target unique edges against
+#      the committed floors in BENCH_fuzz_baseline.json, and require
+#      evolve to beat the same-budget batch on the container and
+#      delta-apply targets. The edge gates only bite when the binary was
+#      built with --features fuzz-cov (CI's fuzz-smoke job does); an
+#      uninstrumented build still runs evolve as a crash hunt.
 #
-# Fails on any new crasher; minimized reproducers land in
-# fuzz_artifacts/ (uploaded by CI even on failure) ready to be promoted
-# into fuzz_corpus/.
+# Fails on any new crasher; minimized reproducers and promoted finds
+# land in fuzz_artifacts/ (uploaded by CI even on failure) ready to be
+# promoted into fuzz_corpus/.
 set -euo pipefail
 
 BIN=${BIN:-target/release/deepcabac}
 CASES=${CASES:-2000}
 ARTIFACTS=${ARTIFACTS:-fuzz_artifacts}
+EVOLVE=${EVOLVE:-1}
+EVOLVE_TIME=${EVOLVE_TIME:-60}
 
 rm -rf "$ARTIFACTS"
 
@@ -25,5 +35,41 @@ echo "== corpus replay + seed 42 =="
 echo "== seed 1337 =="
 "$BIN" fuzz --target all --cases "$CASES" --seed 1337 \
   --corpus fuzz_corpus --artifacts "$ARTIFACTS"
+
+if [ "$EVOLVE" = "1" ]; then
+  echo "== coverage-guided evolve (--max-time ${EVOLVE_TIME}s per target) =="
+  "$BIN" fuzz --target all --cases "$CASES" --seed 42 \
+    --corpus fuzz_corpus --artifacts "$ARTIFACTS" \
+    --evolve --max-time "$EVOLVE_TIME" --json BENCH_fuzz.json
+
+  echo "== coverage gate vs BENCH_fuzz_baseline.json =="
+  python3 - <<'PYGATE'
+import json, sys
+
+bench = json.load(open("BENCH_fuzz.json"))
+floors = json.load(open("BENCH_fuzz_baseline.json"))["floors"]
+if not bench.get("cov_enabled"):
+    print("coverage gate skipped: binary built without --features fuzz-cov")
+    sys.exit(0)
+failed = []
+for t in bench["targets"]:
+    name, edges = t["target"], t["unique_edges"]
+    floor = floors.get(name)
+    if floor is None:
+        failed.append(f"{name}: no committed floor in BENCH_fuzz_baseline.json")
+    elif edges < floor:
+        failed.append(f"{name}: {edges} unique edges < committed floor {floor}")
+    else:
+        print(f"{name}: {edges} unique edges >= floor {floor}")
+    if name in ("container", "delta_apply") and edges <= t["batch_unique_edges"]:
+        failed.append(
+            f"{name}: evolve ({edges}) must beat same-budget batch "
+            f"({t['batch_unique_edges']})"
+        )
+for msg in failed:
+    print("GATE FAIL:", msg)
+sys.exit(1 if failed else 0)
+PYGATE
+fi
 
 echo "fuzz smoke clean: $((2 * CASES)) cases/target across 2 seeds + corpus replay"

@@ -13,9 +13,14 @@ progressive containers alike) are replayed against both the batch and
 the streaming decoder; range files
 are raw `Range:` header values; encoder files are hostile-model recipes
 for fuzz::gen::hostile_model_pair (accept_* must delta-encode, reject_*
-must be rejected by the finite-value boundary). The corpus is
-committed — this script exists so the bytes have a reproducible,
-documented provenance, not because regeneration is routine.
+must be rejected by the finite-value boundary); delta_apply files are
+framed (parent, delta) pairs — 4-byte LE parent length, parent bytes,
+delta bytes, mirroring fuzz::gen::frame_delta_pair — whose parent was
+mutated AFTER the delta captured its fingerprint (accept_* must apply
+byte-exactly, reject_* must come back as a structured error). The
+corpus is committed — this script exists so the bytes have a
+reproducible, documented provenance, not because regeneration is
+routine.
 """
 
 import os
@@ -443,9 +448,96 @@ def encoders():
     write("encoder", "accept_empty_recipe", b"")
 
 
+def fnv1a(data: bytes) -> int:
+    """Mirror of util::fnv1a — fingerprint(model) = fnv1a(serialize)."""
+    h = 0xCBF29CE484222325
+    for x in data:
+        h ^= x
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def frame_pair(parent: bytes, delta: bytes) -> bytes:
+    """Mirror of fuzz::gen::frame_delta_pair: 4-byte LE parent length,
+    parent bytes, delta bytes."""
+    return struct.pack("<I", len(parent)) + parent + delta
+
+
+def delta_applies():
+    # framed (parent, delta) pairs for the delta_apply target. The trust
+    # boundary under test: the delta names its parent by fingerprint, and
+    # every mutation below happens to the parent AFTER that fingerprint
+    # was taken — apply must reject with a structured error (or, for the
+    # pristine accept_* pairs, reproduce the parent byte-exactly through
+    # both the batch and the streaming applier), never panic or blow the
+    # allocation budget.
+    parent = container(
+        1,
+        "mm",
+        [
+            layer_v1("conv", 6, junk(5), dims=(3, 2), bias=(1.0, -1.0)),
+            layer_v1("fc", 2, junk(3), dims=(2,)),
+        ],
+    )
+    skip_all = delta_container(
+        fnv1a(parent), "mm", [dlayer_skip("conv"), dlayer_skip("fc")]
+    )
+    # pristine pair: all-skip delta against its true parent — applies to
+    # a byte-identical copy of the parent
+    write("delta_apply", "accept_pristine_all_skip", frame_pair(parent, skip_all))
+    # the degenerate pristine pair: zero layers on both sides
+    empty_parent = container(1, "m", [])
+    write(
+        "delta_apply",
+        "accept_empty_model_pair",
+        frame_pair(empty_parent, delta_container(fnv1a(empty_parent), "m", [])),
+    )
+    # byte noise in a CABAC payload: the parent still parses, but its
+    # fingerprint no longer matches — apply must say so, not reconstruct
+    noisy = bytearray(parent)
+    noisy[parent.index(junk(5))] ^= 0xFF
+    write("delta_apply", "reject_fp_byte_noise", frame_pair(bytes(noisy), skip_all))
+    # chunk-table lie that still parses: same weight/byte sums split
+    # differently, so the parent is accepted by the parser yet
+    # fingerprint-rejected by apply
+    parent_v2 = container(2, "m", [layer_v2("a", [(3, 2), (5, 4)], 8, junk(6))])
+    skip_v2 = delta_container(fnv1a(parent_v2), "m", [dlayer_skip("a")])
+    lying_v2 = container(2, "m", [layer_v2("a", [(4, 3), (4, 3)], 8, junk(6))])
+    write("delta_apply", "reject_chunk_table_lie", frame_pair(lying_v2, skip_v2))
+    # truncation: the parent ends mid-layer-record
+    write(
+        "delta_apply",
+        "reject_truncated_parent",
+        frame_pair(parent[: len(parent) // 2], skip_all),
+    )
+    # the parent replaced with garbage entirely (no DCBC magic)
+    write("delta_apply", "reject_garbage_parent", frame_pair(junk(40), skip_all))
+    # version-byte lie: 9 is no container version
+    wrong_version = parent[:4] + bytes([9]) + parent[5:]
+    write(
+        "delta_apply",
+        "reject_wrong_version_parent",
+        frame_pair(wrong_version, skip_all),
+    )
+    # pristine parent, zeroed fingerprint in the delta: the mismatch is
+    # on the delta side this time
+    write(
+        "delta_apply",
+        "reject_zeroed_delta_fp",
+        frame_pair(parent, delta_container(0, "mm", [dlayer_skip("conv"), dlayer_skip("fc")])),
+    )
+    # crash-invariant-only: the length prefix claims more parent bytes
+    # than the frame holds; split_delta_pair clamps, the delta side is
+    # empty, and nothing may panic
+    lying_frame = bytearray(frame_pair(parent, skip_all))
+    struct.pack_into("<I", lying_frame, 0, len(lying_frame) * 2)
+    write("delta_apply", "lying_length_prefix", bytes(lying_frame))
+
+
 if __name__ == "__main__":
     containers()
     https()
     ranges()
     encoders()
+    delta_applies()
     print("corpus regenerated at", os.path.normpath(ROOT))

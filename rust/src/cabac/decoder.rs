@@ -52,9 +52,11 @@ impl<'a> CabacDecoder<'a> {
         self.range -= r_lps;
         let bin;
         if self.value < self.range {
+            crate::fuzz::cov::edge!("cabac_mps");
             bin = ctx.mps;
             ctx.state = tables::next_state_mps(ctx.state);
         } else {
+            crate::fuzz::cov::edge!("cabac_lps");
             self.value -= self.range;
             self.range = r_lps;
             bin = ctx.mps ^ 1;
@@ -64,6 +66,7 @@ impl<'a> CabacDecoder<'a> {
             ctx.state = tables::next_state_lps(ctx.state);
         }
         if self.range < 256 {
+            crate::fuzz::cov::edge!("cabac_renorm");
             let shift = self.range.leading_zeros() - 23;
             self.range <<= shift;
             self.value = (self.value << shift) | self.take(shift);
@@ -76,6 +79,7 @@ impl<'a> CabacDecoder<'a> {
     pub fn decode_bypass(&mut self) -> u8 {
         self.value = (self.value << 1) | self.take(1);
         if self.value >= self.range {
+            crate::fuzz::cov::edge!("cabac_bypass_one");
             self.value -= self.range;
             1
         } else {
@@ -108,6 +112,7 @@ impl<'a> CabacDecoder<'a> {
             k += 1;
             if k > 96 {
                 // corrupt/hostile stream: a valid u32 cannot need this
+                crate::fuzz::cov::edge!("cabac_eg_break");
                 break;
             }
         }

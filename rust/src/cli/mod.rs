@@ -295,19 +295,33 @@ USAGE:
       established / reused / reconnects / shed and per-point
       percentiles. --out writes BENCH_serve.json-style machine-readable
       results.
-  deepcabac fuzz [--target container|stream|http|range|encoder|all]
+  deepcabac fuzz [--target container|stream|http|range|encoder|delta_apply|all]
                  [--cases N] [--seed N] [--corpus DIR] [--artifacts DIR]
+                 [--evolve [--max-time S] [--json FILE]]
       Structure-aware fuzzing of the container / stream / HTTP / Range
       parsers (v1/v2 containers and v3 delta segments) plus the encoder
       target, which decodes each input into a hostile model pair
       (denormals, signed zeros, NaN/Inf, zero-dim and huge tensors) and
-      pushes it through the pipeline and the delta encoder. Replays the
-      checked-in crasher corpus (--corpus, default fuzz_corpus/), then
-      runs --cases generate-and-mutate inputs per target under the
-      never-panic / alloc-budget / time-budget / roundtrip-idempotence
-      invariants. Minimized reproducers go to --artifacts; exits nonzero
-      on any violation. Fixed --seed makes runs bit-reproducible (the
-      CI fuzz-smoke job).
+      pushes it through the pipeline and the delta encoder, and the
+      delta_apply target, which frames a (parent, delta) pair whose
+      parent was mutated AFTER the delta fingerprinted it — apply must
+      reject with a structured error or reproduce the target
+      byte-exactly, never panic or overallocate. Replays the checked-in
+      crasher corpus (--corpus, default fuzz_corpus/), then runs --cases
+      generate-and-mutate inputs per target under the never-panic /
+      alloc-budget / time-budget / roundtrip-idempotence invariants.
+      Minimized reproducers go to --artifacts; exits nonzero on any
+      violation. Fixed --seed makes runs bit-reproducible (the CI
+      fuzz-smoke job).
+      --evolve switches to the coverage-guided loop (build with
+      --features fuzz-cov so the edge-counter probes record): the corpus
+      seeds a pool scheduled by edge rarity, mutants reaching new edges
+      are promoted (written to --artifacts as promoted_*.bin) and
+      periodically re-minimized, and an edges-over-execs curve plus
+      per-target unique-edge counts against the same-budget fixed-seed
+      batch go to --json (default BENCH_fuzz.json). --max-time S caps
+      each target's loop at S seconds (0 = run all --cases); a run with
+      a fixed --seed and an uncut case budget is byte-reproducible.
 ";
 
 #[cfg(test)]
@@ -514,6 +528,22 @@ mod tests {
         // --cases 0 is a usage error like every other count flag
         let a = Args::parse(&sv(&["fuzz", "--cases", "0"])).unwrap();
         assert!(a.get_count("cases", 256).is_err());
+        // evolve-mode flags: --evolve is a switch, --max-time/--json take
+        // values, and delta_apply parses as a target name
+        let a = Args::parse(&sv(&[
+            "fuzz", "--target", "delta_apply", "--evolve", "--max-time", "60",
+            "--json", "BENCH_fuzz.json", "--artifacts", "fuzz_artifacts",
+        ]))
+        .unwrap();
+        assert!(a.has("evolve"));
+        assert_eq!(a.get_or("target", "all"), "delta_apply");
+        assert_eq!(a.get_usize("max-time", 0).unwrap(), 60);
+        assert_eq!(a.get_or("json", "BENCH_fuzz.json"), "BENCH_fuzz.json");
+        // --max-time 0 is valid (no cap), unlike the count flags
+        let a = Args::parse(&sv(&["fuzz", "--evolve", "--max-time", "0"])).unwrap();
+        assert_eq!(a.get_usize("max-time", 0).unwrap(), 0);
+        let a = Args::parse(&sv(&["fuzz"])).unwrap();
+        assert!(!a.has("evolve"));
         // --hostile 0 stays valid for loadgen (an amount, not a count)
         let a = Args::parse(&sv(&["loadgen", "--hostile", "0"])).unwrap();
         assert_eq!(a.get_usize("hostile", 0).unwrap(), 0);

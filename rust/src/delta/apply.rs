@@ -34,6 +34,7 @@ pub fn apply(
 ) -> Result<CompressedModel> {
     let fp = fingerprint(parent);
     if fp != delta.parent_fp {
+        crate::fuzz::cov::edge!("apply_fp_mismatch");
         bail!(
             "delta apply: parent fingerprint mismatch (delta expects {:016x}, \
              base is {:016x})",
@@ -41,6 +42,7 @@ pub fn apply(
             fp
         );
     }
+    crate::fuzz::cov::edge!("apply_ok");
     apply_layers(parent, &delta.layers, &delta.name, workers)
 }
 
@@ -83,6 +85,7 @@ impl<'a> StreamApplier<'a> {
             match ev {
                 StreamEvent::Start { version, n_layers, parent_fp, .. } => {
                     if version != crate::model::container::VERSION_DELTA {
+                        crate::fuzz::cov::edge!("sapply_not_delta");
                         bail!(
                             "stream apply: container is version {version}, \
                              not a delta segment — fetch it without --from"
@@ -90,14 +93,18 @@ impl<'a> StreamApplier<'a> {
                     }
                     match parent_fp {
                         Some(fp) if fp == self.parent_fp => {}
-                        Some(fp) => bail!(
-                            "stream apply: parent fingerprint mismatch \
-                             (delta expects {fp:016x}, base is {:016x})",
-                            self.parent_fp
-                        ),
+                        Some(fp) => {
+                            crate::fuzz::cov::edge!("sapply_fp_mismatch");
+                            bail!(
+                                "stream apply: parent fingerprint mismatch \
+                                 (delta expects {fp:016x}, base is {:016x})",
+                                self.parent_fp
+                            )
+                        }
                         None => bail!("stream apply: v3 prelude missing parent fingerprint"),
                     }
                     if n_layers != self.parent.layers.len() {
+                        crate::fuzz::cov::edge!("sapply_layer_count");
                         bail!(
                             "stream apply: parent has {} layers, delta {}",
                             self.parent.layers.len(),
@@ -131,6 +138,7 @@ impl<'a> StreamApplier<'a> {
             None => bail!("stream apply: delta has more layers than parent"),
         };
         if pl.name != l.name {
+            crate::fuzz::cov::edge!("sapply_name_mismatch");
             bail!(
                 "stream apply: layer name mismatch ({:?} vs {:?})",
                 pl.name,
@@ -139,6 +147,7 @@ impl<'a> StreamApplier<'a> {
         }
         if l.skipped {
             // carried over from the base: reconstruct from the parent
+            crate::fuzz::cov::edge!("sapply_skip");
             return Ok(DecodedLayer {
                 index: l.index,
                 name: pl.name.clone(),
@@ -153,6 +162,7 @@ impl<'a> StreamApplier<'a> {
             });
         }
         if pl.n_weights != l.n_weights {
+            crate::fuzz::cov::edge!("sapply_weight_count");
             bail!(
                 "stream apply: layer {:?} weight count mismatch ({} vs {})",
                 l.name,
@@ -163,8 +173,10 @@ impl<'a> StreamApplier<'a> {
         let p = parent_levels_on(pl, &l.grid, self.workers);
         let mut levels = Vec::with_capacity(l.levels.len());
         for (&q, &r) in p.iter().zip(&l.levels) {
-            let t = i32::try_from(q as i64 + r as i64)
-                .map_err(|_| anyhow::anyhow!("level overflow applying layer {:?}", l.name))?;
+            let t = i32::try_from(q as i64 + r as i64).map_err(|_| {
+                crate::fuzz::cov::edge!("sapply_overflow");
+                anyhow::anyhow!("level overflow applying layer {:?}", l.name)
+            })?;
             levels.push(t);
         }
         let weights = l.grid.dequantize(&levels);

@@ -75,6 +75,7 @@ pub fn materialize(
     workers: usize,
 ) -> Result<CompressedModel> {
     if tier >= p.n_tiers() {
+        crate::fuzz::cov::edge!("mat_tier_range");
         bail!(
             "tier {tier} out of range: progressive container has {} tiers",
             p.n_tiers()
@@ -136,6 +137,7 @@ impl ProgressiveApplier {
             match ev {
                 StreamEvent::Start { version, .. } => {
                     if version != VERSION_PROGRESSIVE {
+                        crate::fuzz::cov::edge!("papply_not_v4");
                         bail!(
                             "progressive apply: container is version {version}, \
                              not progressive — fetch it without --tier"
@@ -145,6 +147,7 @@ impl ProgressiveApplier {
                 }
                 StreamEvent::Layer(l) => self.absorb(*l)?,
                 StreamEvent::Tier { tier, n_tiers } => {
+                    crate::fuzz::cov::edge!("papply_tier");
                     out.push(TierSnapshot {
                         tier,
                         n_tiers,
@@ -177,9 +180,13 @@ impl ProgressiveApplier {
         }
         let cur = match self.layers.get_mut(l.index) {
             Some(cur) => cur,
-            None => bail!("progressive apply: refinement has more layers than base"),
+            None => {
+                crate::fuzz::cov::edge!("papply_extra_layer");
+                bail!("progressive apply: refinement has more layers than base")
+            }
         };
         if cur.name != l.name {
+            crate::fuzz::cov::edge!("papply_name_mismatch");
             bail!(
                 "progressive apply: layer name mismatch ({:?} vs {:?})",
                 cur.name,
@@ -188,9 +195,11 @@ impl ProgressiveApplier {
         }
         if l.skipped {
             // carried over: previous tier's layer stays current
+            crate::fuzz::cov::edge!("papply_skip");
             return Ok(());
         }
         if cur.n_weights != l.n_weights {
+            crate::fuzz::cov::edge!("papply_weight_count");
             bail!(
                 "progressive apply: layer {:?} weight count mismatch ({} vs {})",
                 l.name,
@@ -204,6 +213,7 @@ impl ProgressiveApplier {
         for (&w, &r) in cur.weights.iter().zip(&l.levels) {
             let q = l.grid.nearest_level(w);
             let t = i32::try_from(q as i64 + r as i64).map_err(|_| {
+                crate::fuzz::cov::edge!("papply_overflow");
                 anyhow::anyhow!("level overflow applying layer {:?}", l.name)
             })?;
             levels.push(t);

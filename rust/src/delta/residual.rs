@@ -216,6 +216,7 @@ pub(crate) fn apply_layer(
     workers: usize,
 ) -> Result<CompressedLayer> {
     if pl.n_weights != d.n_weights {
+        crate::fuzz::cov::edge!("rapply_weight_count");
         bail!(
             "delta apply: layer {:?} weight count mismatch ({} vs {})",
             d.name,
@@ -225,6 +226,7 @@ pub(crate) fn apply_layer(
     }
     let residual = d.decode_levels_with(workers);
     if residual.len() != d.n_weights {
+        crate::fuzz::cov::edge!("rapply_residual_short");
         bail!("delta apply: layer {:?} residual decodes short", d.name);
     }
     let target = target_levels(pl, d, &residual, workers)?;
@@ -254,8 +256,10 @@ pub(crate) fn target_levels(
     let p = parent_levels_on(pl, &d.grid, workers);
     let mut target = Vec::with_capacity(residual.len());
     for (&q, &r) in p.iter().zip(residual) {
-        let t = i32::try_from(q as i64 + r as i64)
-            .map_err(|_| anyhow::anyhow!("level overflow applying layer {:?}", d.name))?;
+        let t = i32::try_from(q as i64 + r as i64).map_err(|_| {
+            crate::fuzz::cov::edge!("rapply_overflow");
+            anyhow::anyhow!("level overflow applying layer {:?}", d.name)
+        })?;
         target.push(t);
     }
     Ok(target)
@@ -273,6 +277,7 @@ pub(crate) fn apply_layers(
     workers: usize,
 ) -> Result<CompressedModel> {
     if parent.layers.len() != layers.len() {
+        crate::fuzz::cov::edge!("rapply_layer_count");
         bail!(
             "delta apply: parent has {} layers, delta {}",
             parent.layers.len(),
@@ -282,6 +287,7 @@ pub(crate) fn apply_layers(
     let mut out = Vec::with_capacity(layers.len());
     for (pl, dl) in parent.layers.iter().zip(layers) {
         if pl.name != dl.name() {
+            crate::fuzz::cov::edge!("rapply_name_mismatch");
             bail!(
                 "delta apply: layer name mismatch ({:?} vs {:?})",
                 pl.name,
@@ -289,8 +295,14 @@ pub(crate) fn apply_layers(
             );
         }
         match dl {
-            DeltaLayer::Skipped(_) => out.push(pl.clone()),
-            DeltaLayer::Coded(d) => out.push(apply_layer(pl, d, workers)?),
+            DeltaLayer::Skipped(_) => {
+                crate::fuzz::cov::edge!("rapply_skip");
+                out.push(pl.clone())
+            }
+            DeltaLayer::Coded(d) => {
+                crate::fuzz::cov::edge!("rapply_coded");
+                out.push(apply_layer(pl, d, workers)?)
+            }
         }
     }
     Ok(CompressedModel { name: name.to_string(), layers: out })

@@ -1,0 +1,288 @@
+//! Cheap edge-counter instrumentation for coverage-guided fuzzing.
+//!
+//! The classic greybox trick (AFL's `trace_bits`, libFuzzer's inline
+//! 8-bit counters) done dependency-free and opt-in: a thread-local
+//! 64 KiB hit-count map, bumped by [`edge!`] probes hand-placed at the
+//! guard/branch sites of the hot parsers (`model/container.rs`,
+//! `serve/http.rs`, `cabac/decoder.rs`, `delta/*`). Each probe is keyed
+//! by a *compile-time* FNV-1a hash of `module_path!() + "::" + name`,
+//! so recording one edge is a thread-local index + saturating `u8`
+//! increment — cheap enough to leave in the CABAC bin loop.
+//!
+//! # Zero cost without the feature
+//!
+//! Unless the `fuzz-cov` cargo feature is enabled, `edge!` expands to
+//! an empty block and every function in this module is a no-op stub, so
+//! `cargo build --release` produces byte-for-byte uninstrumented hot
+//! paths. This is pinned at compile time by `_PROBE_IS_CONST_NOTHING`
+//! below: the probe expansion must be const-evaluable (i.e. contain no
+//! calls at all) whenever the feature is off.
+//!
+//! # Session discipline
+//!
+//! The map is thread-local and cumulative; the evolve loop calls
+//! [`reset`] before each case and [`hot_slots`] after, giving a
+//! deterministic per-case edge set (single-threaded execution, fixed
+//! inputs — no wall-clock or address-space dependence anywhere).
+
+/// Size of the hit-count map. 64 KiB, same order as AFL's default: big
+/// enough that a few hundred hand-placed probes essentially never
+/// collide (birthday bound ≈ 0.3 % for 200 probes), small enough to
+/// scan after every case.
+pub const MAP_SIZE: usize = 1 << 16;
+
+/// Compile-time FNV-1a of the probe name, reduced to a map slot.
+///
+/// `const fn` so every `edge!` call site bakes its slot into the binary
+/// as an immediate — no hashing at record time.
+pub const fn edge_id(name: &str) -> usize {
+    let bytes = name.as_bytes();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut i = 0;
+    while i < bytes.len() {
+        h ^= bytes[i] as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        i += 1;
+    }
+    (h % (MAP_SIZE as u64)) as usize
+}
+
+/// Record one edge hit. Named `edge!` at every call site; probes pass a
+/// short string literal unique within their module, e.g.
+/// `crate::fuzz::cov::edge!("layer_bad_chunks")`.
+///
+/// Expands to an empty block unless the `fuzz-cov` feature is on — the
+/// name literal is consumed at compile time either way.
+#[macro_export]
+macro_rules! __cov_edge {
+    ($name:literal) => {{
+        #[cfg(feature = "fuzz-cov")]
+        {
+            const __SLOT: usize =
+                $crate::fuzz::cov::edge_id(concat!(module_path!(), "::", $name));
+            $crate::fuzz::cov::hit(__SLOT);
+        }
+    }};
+}
+pub use crate::__cov_edge as edge;
+
+/// True when this build records coverage (the `fuzz-cov` feature).
+pub const fn enabled() -> bool {
+    cfg!(feature = "fuzz-cov")
+}
+
+// Compile-time pin of the no-op guarantee: with the feature off the
+// probe must be const-evaluable *nothing* (an empty block). If anyone
+// sneaks runtime work into the disabled expansion, `hit` is not a
+// `const fn` and this item stops compiling.
+#[cfg(not(feature = "fuzz-cov"))]
+#[allow(clippy::let_unit_value)]
+const _PROBE_IS_CONST_NOTHING: () = crate::fuzz::cov::edge!("noop_pin");
+
+#[cfg(feature = "fuzz-cov")]
+mod imp {
+    use super::MAP_SIZE;
+    use std::cell::RefCell;
+
+    thread_local! {
+        // Boxed so a thread that never fuzzes doesn't reserve 64 KiB of
+        // TLS; allocated lazily on the first probe/reset of a thread.
+        static MAP: RefCell<Box<[u8; MAP_SIZE]>> =
+            RefCell::new(Box::new([0u8; MAP_SIZE]));
+    }
+
+    /// Saturating bump of one slot's hit counter.
+    #[inline]
+    pub fn hit(slot: usize) {
+        MAP.with(|m| {
+            let mut m = m.borrow_mut();
+            let c = &mut m[slot % MAP_SIZE];
+            *c = c.saturating_add(1);
+        });
+    }
+
+    /// Zero the calling thread's map (start of a coverage session or of
+    /// one per-case measurement).
+    pub fn reset() {
+        MAP.with(|m| m.borrow_mut().fill(0));
+    }
+
+    /// Slots with a nonzero hit count since the last [`reset`],
+    /// ascending. Order is deterministic (index order), so two replays
+    /// of the same inputs compare equal.
+    pub fn hot_slots() -> Vec<usize> {
+        MAP.with(|m| {
+            m.borrow()
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c != 0)
+                .map(|(i, _)| i)
+                .collect()
+        })
+    }
+
+    /// Number of distinct edges hit since the last [`reset`].
+    pub fn unique_edges() -> usize {
+        MAP.with(|m| m.borrow().iter().filter(|&&c| c != 0).count())
+    }
+
+    /// FNV-1a over the whole hit-count map — a cheap fingerprint for
+    /// "two runs produced the identical coverage profile" assertions.
+    pub fn map_hash() -> u64 {
+        MAP.with(|m| {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for &b in m.borrow().iter() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h
+        })
+    }
+}
+
+#[cfg(not(feature = "fuzz-cov"))]
+mod imp {
+    //! Feature-off stubs: same signatures, no state, `const` where the
+    //! compile-time pin needs it.
+
+    #[inline]
+    pub const fn hit(_slot: usize) {}
+
+    pub fn reset() {}
+
+    pub fn hot_slots() -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn unique_edges() -> usize {
+        0
+    }
+
+    pub fn map_hash() -> u64 {
+        0
+    }
+}
+
+pub use imp::{hit, hot_slots, map_hash, reset, unique_edges};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_ids_are_stable_and_in_range() {
+        let a = edge_id("a");
+        let b = edge_id("b");
+        assert_eq!(a, edge_id("a"));
+        assert_ne!(a, b);
+        assert!(a < MAP_SIZE && b < MAP_SIZE);
+    }
+
+    #[test]
+    fn probe_names_used_in_tree_do_not_collide() {
+        // edge_id reduces a 64-bit hash mod 2^16; with tens of probes
+        // the birthday bound is tiny but not zero, so pin the actual
+        // in-tree probes pairwise-distinct — hashing the same
+        // module-qualified strings the macro expands to (update if a
+        // probe is added that collides: rename it, names are arbitrary).
+        const M_CONTAINER: &str = "deepcabac::model::container";
+        const M_HTTP: &str = "deepcabac::serve::http";
+        const M_CABAC: &str = "deepcabac::cabac::decoder";
+        const M_APPLY: &str = "deepcabac::delta::apply";
+        const M_RESIDUAL: &str = "deepcabac::delta::residual";
+        const M_PROGRESSIVE: &str = "deepcabac::delta::progressive";
+        const M_COV: &str = "deepcabac::fuzz::cov";
+        let probes: [(&str, &[&str]); 7] = [
+            (M_CONTAINER, &[
+                "prefix_bad_magic", "prefix_short", "prefix_bad_version",
+                "prefix_v3_fp", "prefix_bad_tiers", "prefix_tier_len",
+                "prefix_tier_overflow", "prefix_ok", "dlayer_coded",
+                "dlayer_skip", "dlayer_bad_flag", "layer_bad_rank",
+                "layer_bad_remainder", "layer_bad_chunks",
+                "layer_chunk_canonical", "layer_too_many_weights",
+                "layer_payload_density", "layer_level_density",
+                "layer_chunk_overflow", "layer_chunk_tile", "layer_ok",
+                "varint_overlong", "string_too_long",
+                "tail_truncated_payload", "tail_truncated_bias",
+                "tail_bias_too_big", "batch_v3_redirect",
+                "batch_v4_redirect", "batch_trailing", "batch_ok",
+                "v3_wrong_version", "v3_trailing", "v3_ok",
+                "v4_wrong_version", "v4_tier0_span", "v4_truncated_tier",
+                "v4_tier_span", "v4_trailing", "v4_ok",
+            ]),
+            (M_HTTP, &[
+                "head_too_large", "head_not_utf8", "head_empty",
+                "head_bad_request_line", "head_header_line", "head_ok",
+                "range_absent", "range_not_bytes", "range_multi",
+                "range_no_dash", "range_empty_pair", "range_suffix_bad",
+                "range_suffix_zero", "range_suffix_ok", "range_open_bad",
+                "range_open_ok", "range_closed_bad", "range_closed_ok",
+                "range_unsat", "range_sat",
+            ]),
+            (M_CABAC, &[
+                "cabac_mps", "cabac_lps", "cabac_renorm",
+                "cabac_bypass_one", "cabac_eg_break",
+            ]),
+            (M_APPLY, &[
+                "apply_fp_mismatch", "apply_ok", "sapply_not_delta",
+                "sapply_fp_mismatch", "sapply_layer_count",
+                "sapply_name_mismatch", "sapply_skip",
+                "sapply_weight_count", "sapply_overflow",
+            ]),
+            (M_RESIDUAL, &[
+                "rapply_weight_count", "rapply_residual_short",
+                "rapply_overflow", "rapply_layer_count",
+                "rapply_name_mismatch", "rapply_skip", "rapply_coded",
+            ]),
+            (M_PROGRESSIVE, &[
+                "mat_tier_range", "papply_not_v4", "papply_extra_layer",
+                "papply_name_mismatch", "papply_skip",
+                "papply_weight_count", "papply_overflow", "papply_tier",
+            ]),
+            (M_COV, &["noop_pin"]),
+        ];
+        let mut slots = std::collections::BTreeSet::new();
+        for (module, names) in probes {
+            for n in names {
+                let full = format!("{module}::{n}");
+                assert!(
+                    slots.insert(edge_id(&full)),
+                    "probe {full:?} collides with an earlier slot"
+                );
+            }
+        }
+    }
+
+    #[cfg(feature = "fuzz-cov")]
+    #[test]
+    fn hits_accumulate_and_reset() {
+        reset();
+        assert_eq!(unique_edges(), 0);
+        edge!("cov_test_alpha");
+        edge!("cov_test_alpha");
+        edge!("cov_test_beta");
+        assert_eq!(unique_edges(), 2);
+        let hot = hot_slots();
+        assert_eq!(hot.len(), 2);
+        assert!(hot.windows(2).all(|w| w[0] < w[1]), "slots sorted");
+        let h1 = map_hash();
+        reset();
+        assert_eq!(unique_edges(), 0);
+        edge!("cov_test_alpha");
+        edge!("cov_test_alpha");
+        edge!("cov_test_beta");
+        assert_eq!(map_hash(), h1, "same hits => same map hash");
+    }
+
+    #[cfg(feature = "fuzz-cov")]
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        reset();
+        for _ in 0..1000 {
+            edge!("cov_test_saturate");
+        }
+        // still exactly one unique edge; the counter must not have
+        // wrapped through zero (which would erase the edge)
+        assert_eq!(unique_edges(), 1);
+    }
+}

@@ -50,6 +50,14 @@ pub enum TargetKind {
     /// input must be rejected with a structured error, and every
     /// accepted delta must apply back to the target byte-for-byte.
     Encoder,
+    /// The delta-apply trust boundary: a framed (parent, delta) pair
+    /// (see [`gen::split_delta_pair`]) where the parent container was
+    /// typically mutated *after* the delta's fingerprint was taken —
+    /// byte noise, chunk-table lies, truncation. [`crate::delta::apply`]
+    /// must reject with a structured error or produce a byte-sane
+    /// container (canonical, stream-apply-identical); never panic or
+    /// blow the alloc budget on a lying parent.
+    DeltaApply,
 }
 
 impl TargetKind {
@@ -60,16 +68,18 @@ impl TargetKind {
             TargetKind::Http => "http",
             TargetKind::Range => "range",
             TargetKind::Encoder => "encoder",
+            TargetKind::DeltaApply => "delta_apply",
         }
     }
 
-    pub fn all() -> [TargetKind; 5] {
+    pub fn all() -> [TargetKind; 6] {
         [
             TargetKind::Container,
             TargetKind::Stream,
             TargetKind::Http,
             TargetKind::Range,
             TargetKind::Encoder,
+            TargetKind::DeltaApply,
         ]
     }
 }
@@ -161,9 +171,9 @@ impl FuzzStats {
 const SELFTEST_PANIC_MARKER: &[u8] = b"__fuzz_selftest_panic__";
 
 #[derive(Debug, Clone, Copy, Default)]
-struct CaseOutcome {
-    survived_prefix: bool,
-    accepted: bool,
+pub(crate) struct CaseOutcome {
+    pub(crate) survived_prefix: bool,
+    pub(crate) accepted: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -193,10 +203,10 @@ fn install_quiet_hook() {
 
 /// RAII guard: panics on this thread are expected (and silenced) while
 /// it lives. Other threads' panics keep their normal reporting.
-struct Quiet;
+pub(crate) struct Quiet;
 
 impl Quiet {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         install_quiet_hook();
         QUIET.with(|q| q.set(true));
         Quiet
@@ -226,7 +236,58 @@ fn exec(target: TargetKind, input: &[u8]) -> CaseOutcome {
         TargetKind::Http => exec_http(input),
         TargetKind::Range => exec_range(input),
         TargetKind::Encoder => exec_encoder(input),
+        TargetKind::DeltaApply => exec_delta_apply(input),
     }
+}
+
+/// The mutated-parent apply target: split the framed input into parent
+/// container bytes and delta segment bytes, parse both, and push them
+/// through [`crate::delta::apply`]. The parent half was usually mutated
+/// *after* the delta was encoded against it, so the fingerprint check
+/// is the boundary under test: apply must reject with a structured
+/// error, or — when the mutation canonicalizes away (or the pair is
+/// pristine) — produce a container that is canonical on the wire and
+/// identical to what the streaming applier reconstructs.
+fn exec_delta_apply(input: &[u8]) -> CaseOutcome {
+    let (parent_bytes, delta_bytes) = gen::split_delta_pair(input);
+    let parent = CompressedModel::deserialize(parent_bytes);
+    let delta = DeltaModel::deserialize(delta_bytes);
+    let (Ok(parent), Ok(delta)) = (parent, delta) else {
+        // a mutated parent (or delta) may simply be unparseable — the
+        // structured parse error is the rejection
+        return CaseOutcome::default();
+    };
+    // both halves parsed: this case reached the apply trust boundary
+    let survived_prefix = true;
+    let Ok(applied) = crate::delta::apply(&parent, &delta, 1) else {
+        return CaseOutcome { survived_prefix, accepted: false };
+    };
+    // byte-sane, part 1: the output is a canonical container
+    let y = applied.serialize();
+    let m2 = CompressedModel::deserialize(&y)
+        .unwrap_or_else(|e| panic!("applied container rejected by its own parser: {e}"));
+    assert_eq!(m2.serialize(), y, "delta apply output is not canonical");
+    // byte-sane, part 2: batch-accept ⇒ stream-accept, with identical
+    // reconstructed levels (both sides ran the same fingerprint check
+    // against the same parent, so they must agree)
+    let mut sa = crate::delta::StreamApplier::new(&parent, 1);
+    let streamed = sa
+        .feed(delta_bytes)
+        .and_then(|ls| {
+            sa.finish()?;
+            Ok(ls)
+        })
+        .unwrap_or_else(|e| panic!("batch apply accepted but stream apply rejected: {e}"));
+    assert_eq!(streamed.len(), applied.layers.len());
+    for (sl, bl) in streamed.iter().zip(&applied.layers) {
+        assert_eq!(
+            sl.levels,
+            bl.decode_levels_with(1),
+            "stream apply diverged from batch apply on layer {:?}",
+            bl.name
+        );
+    }
+    CaseOutcome { survived_prefix, accepted: true }
 }
 
 fn exec_container(input: &[u8]) -> CaseOutcome {
@@ -467,7 +528,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 }
 
 /// Run one input against one target; `None` means every invariant held.
-fn run_case(
+pub(crate) fn run_case(
     target: TargetKind,
     input: &[u8],
     budgets: &Budgets,
@@ -492,34 +553,63 @@ fn run_case(
     }
 }
 
-/// Deterministic ddmin-style shrink: repeatedly delete byte chunks
-/// (halving the chunk size) while the input still crashes. Bounded at
-/// 4000 attempts so minimization can never become the hang.
-pub fn minimize(target: TargetKind, input: &[u8], budgets: &Budgets, metered: bool) -> Vec<u8> {
-    let crashes = |buf: &[u8]| run_case(target, buf, budgets, metered).0.is_some();
+/// Run one input with per-case coverage capture: clears the thread's
+/// edge map, runs the case, and returns the slots it hit (always empty
+/// when the `fuzz-cov` feature is off).
+pub(crate) fn run_case_cov(
+    target: TargetKind,
+    input: &[u8],
+    budgets: &Budgets,
+    metered: bool,
+) -> (Option<CrashKind>, CaseOutcome, Vec<usize>) {
+    super::cov::reset();
+    let (crash, outcome) = run_case(target, input, budgets, metered);
+    (crash, outcome, super::cov::hot_slots())
+}
+
+/// Deterministic ddmin-style chunk removal over an arbitrary predicate:
+/// repeatedly delete byte chunks (halving the chunk size) while `holds`
+/// stays true, bounded by `max_attempts` probes so minimization can
+/// never become the hang.
+///
+/// The caller vouches that `holds(input)` is true — the unmodified
+/// input is never re-probed (the fuzz loops only minimize inputs that
+/// just crashed, so re-running the predicate on them wastes a probe and
+/// re-fires flaky crashers for nothing).
+///
+/// The allocation meter is reset before every probe, so predicates
+/// keyed on [`alloc::peak`] — alloc-budget crashers, coverage-preserving
+/// re-minimization under metering — judge each candidate in isolation
+/// instead of inheriting the peak of whatever probe ran before it.
+pub fn ddmin(
+    input: &[u8],
+    mut holds: impl FnMut(&[u8]) -> bool,
+    max_attempts: usize,
+) -> Vec<u8> {
+    let mut probe = |buf: &[u8]| {
+        alloc::reset();
+        holds(buf)
+    };
     let mut cur = input.to_vec();
-    if !crashes(&cur) {
-        return cur; // flaky (e.g. borderline time budget): keep as-is
-    }
     let mut attempts = 0usize;
     let mut chunk = (cur.len() / 2).max(1);
     loop {
         let mut progress = false;
         let mut start = 0usize;
-        while start < cur.len() && attempts < 4000 {
+        while start < cur.len() && attempts < max_attempts {
             let end = (start + chunk).min(cur.len());
             let mut cand = Vec::with_capacity(cur.len() - (end - start));
             cand.extend_from_slice(&cur[..start]);
             cand.extend_from_slice(&cur[end..]);
             attempts += 1;
-            if crashes(&cand) {
+            if probe(&cand) {
                 cur = cand;
                 progress = true;
             } else {
                 start = end;
             }
         }
-        if attempts >= 4000 {
+        if attempts >= max_attempts {
             break;
         }
         if !progress {
@@ -532,11 +622,19 @@ pub fn minimize(target: TargetKind, input: &[u8], budgets: &Budgets, metered: bo
     cur
 }
 
+/// Shrink a known-crashing input with [`ddmin`] under the "still
+/// crashes" predicate. `input` must crash (callers have just observed
+/// the crash); a flaky input simply fails to shrink and comes back
+/// unchanged.
+pub fn minimize(target: TargetKind, input: &[u8], budgets: &Budgets, metered: bool) -> Vec<u8> {
+    ddmin(input, |buf| run_case(target, buf, budgets, metered).0.is_some(), 4000)
+}
+
 // ---------------------------------------------------------------------------
 // Fuzz loops + corpus replay
 // ---------------------------------------------------------------------------
 
-fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
+pub(crate) fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
     // 1-in-8 cases run unmutated: keeps the accept/roundtrip invariants
     // exercised and anchors the survival baseline
     let pristine = rng.below(8) == 0;
@@ -575,6 +673,11 @@ fn make_input(target: TargetKind, rng: &mut SplitMix64) -> Vec<u8> {
             let base = gen::range_value(rng);
             if pristine { base } else { mutate::range(&base, rng) }.into_bytes()
         }
+        TargetKind::DeltaApply => {
+            // the generator owns the post-fingerprint parent mutation
+            // (pristine pairs are its 1-in-8 arm)
+            gen::delta_apply_pair(rng)
+        }
     }
 }
 
@@ -604,25 +707,34 @@ pub fn fuzz_target(
     (stats, crashes)
 }
 
+/// Corpus subdirectory → fuzz-target mapping shared by
+/// [`replay_corpus`], the evolve loop's corpus loader and the
+/// coverage-floor test. Container corpus files (v1/v2, v3 delta
+/// segments *and* v4 progressive containers) run against **both** the
+/// batch and the stream targets.
+pub fn corpus_groups() -> [(&'static str, &'static [TargetKind]); 5] {
+    [
+        ("container", &[TargetKind::Container, TargetKind::Stream]),
+        ("http", &[TargetKind::Http]),
+        ("range", &[TargetKind::Range]),
+        ("encoder", &[TargetKind::Encoder]),
+        ("delta_apply", &[TargetKind::DeltaApply]),
+    ]
+}
+
 /// Replay the checked-in corpus at `root` (`container/`, `http/`,
-/// `range/`, `encoder/` subdirectories; missing ones are skipped).
-/// Filename conventions: `accept_*` must parse Ok, `reject_*` must parse
-/// Err, anything else only has to uphold the crash invariants. Container
-/// corpus files (v1/v2, v3 delta segments *and* v4 progressive
-/// containers) run against **both** the batch and the stream targets;
-/// `encoder/` files are hostile-model recipes.
+/// `range/`, `encoder/`, `delta_apply/` subdirectories; missing ones
+/// are skipped). Filename conventions: `accept_*` must parse Ok,
+/// `reject_*` must parse Err, anything else only has to uphold the
+/// crash invariants. Container corpus files run against both the batch
+/// and the stream targets; `encoder/` files are hostile-model recipes;
+/// `delta_apply/` files are framed (parent, delta) pairs.
 pub fn replay_corpus(root: &Path, budgets: &Budgets) -> Result<(FuzzStats, Vec<Crash>)> {
     let _quiet = Quiet::new();
     let metered = alloc::probe();
     let mut stats = FuzzStats { alloc_metered: metered, ..Default::default() };
     let mut crashes = Vec::new();
-    let groups: [(&str, &[TargetKind]); 4] = [
-        ("container", &[TargetKind::Container, TargetKind::Stream]),
-        ("http", &[TargetKind::Http]),
-        ("range", &[TargetKind::Range]),
-        ("encoder", &[TargetKind::Encoder]),
-    ];
-    for (sub, targets) in groups {
+    for (sub, targets) in corpus_groups() {
         let dir = root.join(sub);
         if !dir.is_dir() {
             continue;
@@ -762,6 +874,75 @@ mod tests {
                 c1[0].input.len()
             );
         }
+    }
+
+    #[test]
+    fn pristine_delta_apply_pairs_are_accepted_with_no_crashes() {
+        // 1-in-8 generated pairs keep the parent pristine, so a fixed
+        // seed sweep must find accepted cases; every case (mutated or
+        // not) must uphold the crash invariants
+        let mut rng = SplitMix64::new(109);
+        let budgets = Budgets::default();
+        let mut accepted = 0usize;
+        for _ in 0..64 {
+            let input = gen::delta_apply_pair(&mut rng);
+            let (crash, outcome) = run_case(TargetKind::DeltaApply, &input, &budgets, false);
+            assert!(crash.is_none(), "delta_apply crashed: {crash:?}");
+            if outcome.accepted {
+                accepted += 1;
+                assert!(outcome.survived_prefix);
+            }
+        }
+        assert!(accepted > 0, "no pristine pair applied cleanly in 64 draws");
+    }
+
+    #[test]
+    fn delta_apply_rejects_truncated_and_lying_parents() {
+        // hand-build a pristine pair, then break the parent three ways:
+        // truncation, byte noise in the payload, and a version-byte lie.
+        // All must come back as structured rejections, never crashes.
+        let mut rng = SplitMix64::new(113);
+        let budgets = Budgets::default();
+        let (parent, delta) = gen::delta_apply_parts(&mut rng);
+        let pristine = gen::frame_delta_pair(&parent, &delta);
+        let (crash, outcome) = run_case(TargetKind::DeltaApply, &pristine, &budgets, false);
+        assert!(crash.is_none(), "{crash:?}");
+        assert!(outcome.accepted, "pristine pair must apply");
+
+        let mut cases: Vec<Vec<u8>> = Vec::new();
+        cases.push(gen::frame_delta_pair(&parent[..parent.len() / 2], &delta));
+        let mut noisy = parent.clone();
+        let mid = noisy.len() / 2;
+        noisy[mid] ^= 0xFF;
+        cases.push(gen::frame_delta_pair(&noisy, &delta));
+        let mut vlie = parent.clone();
+        vlie[4] = 9; // unsupported version
+        cases.push(gen::frame_delta_pair(&vlie, &delta));
+        for (i, input) in cases.iter().enumerate() {
+            let (crash, outcome) = run_case(TargetKind::DeltaApply, input, &budgets, false);
+            assert!(crash.is_none(), "mutated-parent case {i} crashed: {crash:?}");
+            assert!(!outcome.accepted, "mutated-parent case {i} must not apply byte-noise");
+        }
+    }
+
+    #[test]
+    fn ddmin_never_reprobes_the_unmodified_input() {
+        // the caller vouches for the input; every probe must be a strict
+        // sub-input (the old minimize wasted a probe re-running it)
+        let input = [1u8, 2, 3, 4];
+        let mut probed_full = false;
+        let min = ddmin(
+            &input,
+            |buf| {
+                if buf == input {
+                    probed_full = true;
+                }
+                buf.contains(&3)
+            },
+            4000,
+        );
+        assert_eq!(min, [3]);
+        assert!(!probed_full, "ddmin re-probed the unmodified input");
     }
 
     #[test]

@@ -1,0 +1,448 @@
+//! AFL-style corpus evolution on top of the edge-counter shim
+//! ([`super::cov`]).
+//!
+//! The loop keeps a pool of *seeds* (the on-disk corpus plus every
+//! promoted find), schedules them by **energy** — the rarity of the
+//! edges a seed reaches, `Σ 1/freq[slot]` over its edge set, so inputs
+//! that alone exercise an obscure parser path get mutated more often —
+//! and promotes any mutant that lights up a never-seen edge slot.
+//! Promoted finds are periodically re-minimized with a
+//! coverage-preserving [`super::driver::ddmin`] predicate (the shrunk
+//! input must still hit every slot the find was promoted for, without
+//! crashing), so the corpus stays small enough to replay in CI.
+//!
+//! Everything is deterministic under a fixed seed *and* a fixed case
+//! count: the RNG is `SplitMix64` salted per target, scheduling breaks
+//! ties by index, and no wall-clock feeds back into decisions — the
+//! optional `max_millis` cap only decides where the loop *stops*, so a
+//! time-capped run is a prefix of the uncapped one.
+//!
+//! Without the `fuzz-cov` feature every edge set is empty: scheduling
+//! degrades to uniform, nothing is ever promoted, and the loop becomes
+//! a plain seed-mutating fuzzer — still useful, still deterministic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::driver::{
+    self, corpus_groups, make_input, run_case_cov, Budgets, Crash, TargetKind,
+};
+use super::{alloc, cov, gen, mutate};
+use crate::util::{fnv1a, SplitMix64};
+
+/// Extra RNG salt so an evolved run never replays the exact generation
+/// sequence of the fixed-seed batch loop it is compared against.
+const EVOLVE_SALT: u64 = 0xE501_F0E5_ED0C_AB0C;
+
+/// Knobs for one [`evolve_target`] run.
+#[derive(Debug, Clone, Copy)]
+pub struct EvolveCfg {
+    /// Base RNG seed (salted per target, like the batch loop).
+    pub seed: u64,
+    /// Mutant executions to perform (re-minimization probes and the
+    /// initial corpus replay are not counted against this).
+    pub cases: usize,
+    /// Wall-clock cap in milliseconds; `0` means no cap. The cap only
+    /// stops the loop early — it never alters scheduling, so a capped
+    /// run is a prefix of the uncapped run with the same seed.
+    pub max_millis: u64,
+    /// Per-case resource budgets (same invariants as the batch loop).
+    pub budgets: Budgets,
+    /// Re-minimize one not-yet-shrunk promoted find every this many
+    /// executions; `0` disables re-minimization.
+    pub reminimize_every: usize,
+}
+
+impl Default for EvolveCfg {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            cases: 2000,
+            max_millis: 0,
+            budgets: Budgets::default(),
+            reminimize_every: 256,
+        }
+    }
+}
+
+/// What one [`evolve_target`] run did — the per-target record behind
+/// `BENCH_fuzz.json`.
+#[derive(Debug, Clone)]
+pub struct EvolveReport {
+    pub target: TargetKind,
+    /// Mutant executions actually performed (≤ `cfg.cases`; smaller only
+    /// when the `max_millis` cap fired).
+    pub cases: usize,
+    /// Unique edge slots hit across the whole run (0 without `fuzz-cov`).
+    pub unique_edges: usize,
+    /// Final seed-pool size (initial corpus + promoted finds).
+    pub corpus_len: usize,
+    /// Mutants promoted for reaching a never-seen edge.
+    pub promoted: usize,
+    /// Invariant violations found (inputs minimized).
+    pub crashes: Vec<Crash>,
+    /// Edge-discovery curve: `(execution index, cumulative unique
+    /// edges)` at every promotion, plus a final point at the end of the
+    /// run. Execution index 0 is the initial corpus replay.
+    pub discovery: Vec<(usize, usize)>,
+    /// The promoted (and possibly re-minimized) inputs, in promotion
+    /// order — the corpus growth to check in / upload.
+    pub promoted_inputs: Vec<Vec<u8>>,
+    pub elapsed_ms: u64,
+    pub execs_per_sec: f64,
+    pub alloc_metered: bool,
+    pub cov_enabled: bool,
+}
+
+/// One scheduled corpus entry.
+struct Seed {
+    input: Vec<u8>,
+    /// Every edge slot this input hits.
+    edges: Vec<usize>,
+    /// The never-before-seen slots this input was promoted for (empty
+    /// for initial-corpus seeds) — the set its re-minimization preserves.
+    novel: BTreeSet<usize>,
+    minimized: bool,
+}
+
+/// Rarity-weighted energies for the current pool: seed *i* gets
+/// `BASE + Σ 1/freq[slot]` over its edges, where `freq[slot]` counts
+/// pool members hitting that slot. The constant base keeps zero-edge
+/// seeds (and the whole pool when `fuzz-cov` is off) schedulable.
+fn energies(pool: &[Seed]) -> Vec<f64> {
+    const BASE: f64 = 0.05;
+    let mut freq: BTreeMap<usize, usize> = BTreeMap::new();
+    for s in pool {
+        for &e in &s.edges {
+            *freq.entry(e).or_insert(0) += 1;
+        }
+    }
+    pool.iter()
+        .map(|s| BASE + s.edges.iter().map(|e| 1.0 / freq[e] as f64).sum::<f64>())
+        .collect()
+}
+
+/// Deterministic weighted pick: first index whose cumulative energy
+/// passes `x · total`.
+fn pick_weighted(energy: &[f64], rng: &mut SplitMix64) -> usize {
+    let total: f64 = energy.iter().sum();
+    let mut x = rng.next_f64() * total;
+    for (i, &e) in energy.iter().enumerate() {
+        x -= e;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    energy.len() - 1
+}
+
+/// Generic byte havoc for inputs with no field map (encoder recipes,
+/// containers the walker rejects): flips, rewrites, truncation, inserts.
+fn havoc(input: &[u8], rng: &mut SplitMix64) -> Vec<u8> {
+    let mut out = input.to_vec();
+    if out.is_empty() {
+        return (0..1 + rng.below(16)).map(|_| rng.next_u64() as u8).collect();
+    }
+    let ops = 1 + rng.below(4);
+    for _ in 0..ops {
+        if out.is_empty() {
+            out.push(rng.next_u64() as u8);
+        }
+        match rng.below(4) {
+            0 => {
+                let i = rng.below(out.len() as u64) as usize;
+                out[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                let i = rng.below(out.len() as u64) as usize;
+                out[i] = rng.next_u64() as u8;
+            }
+            2 => {
+                let keep = rng.below(out.len() as u64 + 1) as usize;
+                out.truncate(keep);
+            }
+            _ => {
+                let i = rng.below(out.len() as u64 + 1) as usize;
+                out.insert(i, rng.next_u64() as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Mutate a scheduled seed with the target's structure-aware operators
+/// (falling back to [`havoc`] when the input no longer field-maps).
+fn mutate_seed(target: TargetKind, input: &[u8], rng: &mut SplitMix64) -> Vec<u8> {
+    match target {
+        TargetKind::Container | TargetKind::Stream => match gen::map_fields(input) {
+            Ok(fields) => mutate::container(input, &fields, rng),
+            Err(_) => havoc(input, rng),
+        },
+        TargetKind::Http => mutate::http(input, rng),
+        TargetKind::Range => {
+            let s = String::from_utf8_lossy(input).into_owned();
+            mutate::range(&s, rng).into_bytes()
+        }
+        TargetKind::Encoder => havoc(input, rng),
+        TargetKind::DeltaApply => {
+            // frame-aware: split the pair, mutate one side (field-aware
+            // when it still maps), reframe — so the length prefix stays
+            // coherent and mutants keep reaching the apply logic
+            let (parent, delta) = gen::split_delta_pair(input);
+            if rng.below(4) == 0 {
+                let nd = match gen::map_fields(delta) {
+                    Ok(fields) => mutate::container(delta, &fields, rng),
+                    Err(_) => havoc(delta, rng),
+                };
+                gen::frame_delta_pair(parent, &nd)
+            } else {
+                let np = match gen::map_fields(parent) {
+                    Ok(fields) => mutate::container(parent, &fields, rng),
+                    Err(_) => havoc(parent, rng),
+                };
+                gen::frame_delta_pair(&np, delta)
+            }
+        }
+    }
+}
+
+/// Evolve a corpus against one target. `initial` seeds the pool (the
+/// on-disk corpus, typically — including all the hand-built reject
+/// cases the generators rarely produce); when empty, a few generated
+/// inputs bootstrap it so the loop always has something to schedule.
+pub fn evolve_target(target: TargetKind, cfg: &EvolveCfg, initial: &[Vec<u8>]) -> EvolveReport {
+    let _quiet = driver::Quiet::new();
+    let metered = alloc::probe();
+    let mut rng =
+        SplitMix64::new(cfg.seed ^ fnv1a(target.as_str().as_bytes()) ^ EVOLVE_SALT);
+    let t0 = Instant::now();
+
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    let mut pool: Vec<Seed> = Vec::new();
+    let mut crashes: Vec<Crash> = Vec::new();
+    let mut discovery: Vec<(usize, usize)> = Vec::new();
+
+    let mut bootstrap: Vec<Vec<u8>> = Vec::new();
+    if initial.is_empty() {
+        for _ in 0..4 {
+            bootstrap.push(make_input(target, &mut rng));
+        }
+    }
+    for input in initial.iter().chain(&bootstrap) {
+        let (crash, _outcome, edges) = run_case_cov(target, input, &cfg.budgets, metered);
+        if let Some(kind) = crash {
+            // the checked-in corpus replays clean by invariant; a crash
+            // here is a real regression — report it, don't schedule it
+            let input = driver::minimize(target, input, &cfg.budgets, metered);
+            crashes.push(Crash { target, kind, input });
+            continue;
+        }
+        seen.extend(edges.iter().copied());
+        pool.push(Seed { input: input.clone(), edges, novel: BTreeSet::new(), minimized: true });
+    }
+    discovery.push((0, seen.len()));
+
+    let mut energy = energies(&pool);
+    let mut executed = 0usize;
+    let mut promoted = 0usize;
+    while executed < cfg.cases {
+        if cfg.max_millis > 0 && t0.elapsed().as_millis() as u64 >= cfg.max_millis {
+            break;
+        }
+        // 1-in-16 executions inject a fresh generated input instead of
+        // mutating a seed, so the pool never inbreeds (and an empty pool
+        // — every initial seed crashed — always generates)
+        let mutant = if pool.is_empty() || rng.below(16) == 0 {
+            make_input(target, &mut rng)
+        } else {
+            let i = pick_weighted(&energy, &mut rng);
+            mutate_seed(target, &pool[i].input, &mut rng)
+        };
+        executed += 1;
+        let (crash, _outcome, edges) = run_case_cov(target, &mutant, &cfg.budgets, metered);
+        if let Some(kind) = crash {
+            let input = driver::minimize(target, &mutant, &cfg.budgets, metered);
+            crashes.push(Crash { target, kind, input });
+            continue;
+        }
+        let novel: BTreeSet<usize> =
+            edges.iter().copied().filter(|e| !seen.contains(e)).collect();
+        if !novel.is_empty() {
+            seen.extend(novel.iter().copied());
+            pool.push(Seed { input: mutant, edges, novel, minimized: false });
+            promoted += 1;
+            discovery.push((executed, seen.len()));
+            energy = energies(&pool);
+        }
+        // periodic re-minimization: shrink one promoted find, keeping
+        // its novel slots reachable and the input non-crashing
+        if cfg.reminimize_every > 0 && executed % cfg.reminimize_every == 0 {
+            if let Some(idx) = pool.iter().position(|s| !s.minimized) {
+                let keep = pool[idx].novel.clone();
+                let shrunk = driver::ddmin(
+                    &pool[idx].input,
+                    |buf| {
+                        let (c, _o, slots) =
+                            run_case_cov(target, buf, &cfg.budgets, metered);
+                        c.is_none()
+                            && keep.iter().all(|s| slots.binary_search(s).is_ok())
+                    },
+                    512,
+                );
+                let (_c, _o, edges) =
+                    run_case_cov(target, &shrunk, &cfg.budgets, metered);
+                let s = &mut pool[idx];
+                s.input = shrunk;
+                s.edges = edges;
+                s.minimized = true;
+                energy = energies(&pool);
+            }
+        }
+    }
+
+    let elapsed_ms = t0.elapsed().as_millis() as u64;
+    discovery.push((executed, seen.len()));
+    let promoted_inputs: Vec<Vec<u8>> =
+        pool.iter().filter(|s| !s.novel.is_empty()).map(|s| s.input.clone()).collect();
+    EvolveReport {
+        target,
+        cases: executed,
+        unique_edges: seen.len(),
+        corpus_len: pool.len(),
+        promoted,
+        crashes,
+        discovery,
+        promoted_inputs,
+        elapsed_ms,
+        execs_per_sec: executed as f64 / (elapsed_ms.max(1) as f64 / 1000.0),
+        alloc_metered: metered,
+        cov_enabled: cov::enabled(),
+    }
+}
+
+/// Unique edges hit by the plain fixed-seed batch loop at the same
+/// budget — the comparison baseline for `evolve beats batch`. Replays
+/// [`driver::fuzz_target`]'s exact generation sequence (same RNG
+/// derivation), just with per-case coverage capture.
+pub fn batch_coverage(target: TargetKind, cases: usize, seed: u64, budgets: &Budgets) -> usize {
+    let _quiet = driver::Quiet::new();
+    let metered = alloc::probe();
+    let mut rng = SplitMix64::new(seed ^ fnv1a(target.as_str().as_bytes()));
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    for _ in 0..cases {
+        let input = make_input(target, &mut rng);
+        let (_crash, _outcome, edges) = run_case_cov(target, &input, budgets, metered);
+        seen.extend(edges);
+    }
+    seen.len()
+}
+
+/// Replay the on-disk corpus with coverage capture: one `(target,
+/// edge-set)` entry per target in [`corpus_groups`] order. The
+/// coverage-floor regression test asserts these sets against committed
+/// floors, and runs the function twice to pin replay determinism.
+pub fn replay_corpus_coverage(
+    root: &Path,
+    budgets: &Budgets,
+) -> Result<Vec<(TargetKind, BTreeSet<usize>)>> {
+    let _quiet = driver::Quiet::new();
+    let metered = alloc::probe();
+    let mut out: Vec<(TargetKind, BTreeSet<usize>)> = Vec::new();
+    for (sub, targets) in corpus_groups() {
+        let dir = root.join(sub);
+        let mut paths: Vec<_> = if dir.is_dir() {
+            std::fs::read_dir(&dir)
+                .with_context(|| format!("reading corpus dir {dir:?}"))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.is_file())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        paths.sort();
+        let mut inputs = Vec::with_capacity(paths.len());
+        for path in &paths {
+            inputs.push(
+                std::fs::read(path).with_context(|| format!("reading corpus file {path:?}"))?,
+            );
+        }
+        for &t in targets {
+            let mut seen: BTreeSet<usize> = BTreeSet::new();
+            for input in &inputs {
+                let (_crash, _outcome, edges) = run_case_cov(t, input, budgets, metered);
+                seen.extend(edges);
+            }
+            out.push((t, seen));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> EvolveCfg {
+        EvolveCfg { seed: 7, cases: 60, max_millis: 0, reminimize_every: 20, ..Default::default() }
+    }
+
+    #[test]
+    fn evolve_is_byte_reproducible_under_a_fixed_seed() {
+        // same seed + same case count ⇒ identical everything, including
+        // the promoted corpus bytes (cov on or off)
+        let seeds = vec![b"GET / HTTP/1.1\r\nHost: x\r\n".to_vec()];
+        let a = evolve_target(TargetKind::Http, &small_cfg(), &seeds);
+        let b = evolve_target(TargetKind::Http, &small_cfg(), &seeds);
+        assert_eq!(a.cases, b.cases);
+        assert_eq!(a.unique_edges, b.unique_edges);
+        assert_eq!(a.promoted, b.promoted);
+        assert_eq!(a.discovery, b.discovery);
+        assert_eq!(a.promoted_inputs, b.promoted_inputs);
+        assert!(a.crashes.is_empty(), "http seed corpus must replay clean");
+    }
+
+    #[test]
+    fn evolve_bootstraps_an_empty_pool_and_stays_clean() {
+        for target in [TargetKind::Container, TargetKind::DeltaApply] {
+            let r = evolve_target(target, &small_cfg(), &[]);
+            assert_eq!(r.cases, 60);
+            assert!(r.corpus_len >= 4, "bootstrap seeds missing");
+            assert!(
+                r.crashes.is_empty(),
+                "{:?} evolve found crashes: {:?}",
+                target,
+                r.crashes.iter().map(|c| c.kind.to_string()).collect::<Vec<_>>()
+            );
+            assert_eq!(r.cov_enabled, cfg!(feature = "fuzz-cov"));
+            if !r.cov_enabled {
+                assert_eq!(r.unique_edges, 0);
+                assert_eq!(r.promoted, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_pick_is_deterministic_and_in_range() {
+        let energy = [0.5, 3.0, 0.25];
+        let mut rng = SplitMix64::new(3);
+        let picks: Vec<usize> = (0..64).map(|_| pick_weighted(&energy, &mut rng)).collect();
+        assert!(picks.iter().all(|&i| i < 3));
+        // the heavy seed dominates the schedule
+        assert!(picks.iter().filter(|&&i| i == 1).count() > 32);
+        let mut rng = SplitMix64::new(3);
+        let again: Vec<usize> = (0..64).map(|_| pick_weighted(&energy, &mut rng)).collect();
+        assert_eq!(picks, again);
+    }
+
+    #[cfg(feature = "fuzz-cov")]
+    #[test]
+    fn evolve_discovers_edges_and_promotes() {
+        let r = evolve_target(TargetKind::Container, &small_cfg(), &[]);
+        assert!(r.unique_edges > 0, "instrumented run hit no edges");
+        assert!(r.discovery.last().unwrap().1 == r.unique_edges);
+        assert_eq!(r.promoted_inputs.len(), r.promoted);
+    }
+}

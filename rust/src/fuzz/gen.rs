@@ -485,6 +485,110 @@ pub fn hostile_model_pair(input: &[u8]) -> (crate::model::Model, crate::model::M
     (parent, target)
 }
 
+// ---------------------------------------------------------------------------
+// Delta-apply (parent, delta) pairs
+// ---------------------------------------------------------------------------
+
+/// Frame a (parent, delta) pair into one fuzz input: 4-byte LE parent
+/// length, parent bytes, delta bytes. The inverse is
+/// [`split_delta_pair`], which stays total under mutation by clamping
+/// the declared length.
+pub fn frame_delta_pair(parent: &[u8], delta: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + parent.len() + delta.len());
+    out.extend_from_slice(&(parent.len() as u32).to_le_bytes());
+    out.extend_from_slice(parent);
+    out.extend_from_slice(delta);
+    out
+}
+
+/// Split a framed fuzz input back into (parent, delta) byte slices.
+/// Total on any input: fewer than 4 bytes yields two empty slices, and a
+/// lying length prefix is clamped to what is actually present (the
+/// mutator flips length bytes like any others).
+pub fn split_delta_pair(input: &[u8]) -> (&[u8], &[u8]) {
+    if input.len() < 4 {
+        return (&[], &[]);
+    }
+    let declared = u32::from_le_bytes([input[0], input[1], input[2], input[3]]) as usize;
+    let plen = declared.min(input.len() - 4);
+    (&input[4..4 + plen], &input[4 + plen..])
+}
+
+/// A *pristine* (parent, delta) pair as serialized bytes: the parent is
+/// a generated container, the target perturbs a few of its decoded
+/// levels (and sometimes a bias), and the delta is produced by the
+/// production [`crate::delta::encode`] — so `apply(parent, delta)`
+/// reconstructs the target byte-exactly.
+pub fn delta_apply_parts(rng: &mut SplitMix64) -> (Vec<u8>, Vec<u8>) {
+    let parent_bytes = container(rng);
+    let parent = CompressedModel::deserialize(&parent_bytes)
+        .expect("generator output must parse");
+    let mut target = parent.clone();
+    for tl in &mut target.layers {
+        if rng.next_f64() < 0.3 {
+            continue; // leave some layers byte-identical → skip records
+        }
+        let mut levels = tl.decode_levels_with(1);
+        let tweaks = 1 + rng.below(4) as usize;
+        for _ in 0..tweaks.min(levels.len()) {
+            let i = rng.below(levels.len().max(1) as u64) as usize;
+            levels[i] += if rng.next_u64() & 1 == 0 { 1 } else { -1 };
+        }
+        if !tl.bias.is_empty() && rng.next_f64() < 0.25 {
+            let i = rng.below(tl.bias.len() as u64) as usize;
+            tl.bias[i] += 0.25;
+        }
+        let splits: Vec<usize> = tl.chunk_spans().iter().map(|s| s.n_weights).collect();
+        let (payload, chunks) =
+            crate::delta::residual::encode_with_splits(&levels, tl.cfg, &splits);
+        tl.payload = payload;
+        tl.chunks = chunks;
+    }
+    let (delta, _report) =
+        crate::delta::encode(&parent, &target, 1).expect("matched pair must delta-encode");
+    (parent_bytes, delta.serialize())
+}
+
+/// A framed delta-apply fuzz input. 1-in-8 draws keep the parent
+/// pristine (the pair must apply byte-exactly); the rest mutate the
+/// parent *after* the delta captured its fingerprint — byte noise,
+/// structured field lies via [`map_fields`] + the container mutator, or
+/// truncation — probing the trust boundary `delta::apply` guards with
+/// the fingerprint check.
+pub fn delta_apply_pair(rng: &mut SplitMix64) -> Vec<u8> {
+    let (mut parent, delta) = delta_apply_parts(rng);
+    match rng.below(8) {
+        0 => {} // pristine: apply must succeed and round-trip
+        1 | 2 | 3 => {
+            // raw byte noise anywhere in the parent (including its
+            // header — a wrong version or magic must reject cleanly)
+            let flips = 1 + rng.below(4) as usize;
+            for _ in 0..flips {
+                if parent.is_empty() {
+                    break;
+                }
+                let i = rng.below(parent.len() as u64) as usize;
+                parent[i] ^= 1 << rng.below(8);
+            }
+        }
+        4 | 5 => {
+            // structured lies: chunk tables, varint lengths, payload
+            // splices — the same field-aware ops the container target uses
+            if let Ok(fields) = map_fields(&parent) {
+                parent = super::mutate::container(&parent, &fields, rng);
+            } else {
+                parent.truncate(parent.len() / 2);
+            }
+        }
+        _ => {
+            // truncation: the parent ends mid-record
+            let keep = rng.below(parent.len().max(1) as u64) as usize;
+            parent.truncate(keep);
+        }
+    }
+    frame_delta_pair(&parent, &delta)
+}
+
 /// A syntactically valid HTTP/1.1 request head (no terminating blank
 /// line — the shape [`crate::serve::http::parse_request_head`] takes),
 /// covering every route the server exposes plus Range headers.
@@ -656,6 +760,40 @@ mod tests {
         }
         let (p, _) = hostile_model_pair(&[]);
         assert!(p.weights.is_empty(), "empty recipe → zero-layer model");
+    }
+
+    #[test]
+    fn delta_pair_framing_round_trips_and_splits_totally() {
+        let (p, d) = (vec![1u8, 2, 3], vec![9u8, 8]);
+        let framed = frame_delta_pair(&p, &d);
+        assert_eq!(split_delta_pair(&framed), (&p[..], &d[..]));
+        // total on garbage: short inputs and lying length prefixes
+        assert_eq!(split_delta_pair(&[]), (&[][..], &[][..]));
+        assert_eq!(split_delta_pair(&[1, 2, 3]), (&[][..], &[][..]));
+        let lying = frame_delta_pair(&[0xAA; 8], &[]);
+        let mut cut = lying.clone();
+        cut.truncate(7); // declared 8 parent bytes, only 3 present
+        let (pp, dd) = split_delta_pair(&cut);
+        assert_eq!(pp.len(), 3);
+        assert!(dd.is_empty());
+        // empty-parent frame keeps the delta intact
+        let (pp, dd) = split_delta_pair(&frame_delta_pair(&[], &d));
+        assert!(pp.is_empty());
+        assert_eq!(dd, &d[..]);
+    }
+
+    #[test]
+    fn pristine_delta_parts_apply_byte_exactly() {
+        let mut rng = SplitMix64::new(41);
+        for _ in 0..8 {
+            let (pb, db) = delta_apply_parts(&mut rng);
+            let parent = CompressedModel::deserialize(&pb).unwrap();
+            let delta = DeltaModel::deserialize(&db).unwrap();
+            let applied = crate::delta::apply(&parent, &delta, 1).unwrap();
+            // the applied model is canonical under its own serializer
+            let y = applied.serialize();
+            assert_eq!(CompressedModel::deserialize(&y).unwrap().serialize(), y);
+        }
     }
 
     #[test]

@@ -34,14 +34,29 @@
 //! thrown at a real server, used by `tests/fault_injection.rs` and the
 //! loadgen's `--hostile` mode.
 //!
+//! On top of the fixed-seed battery sits the coverage-guided layer
+//! (PR 10): [`cov`] is a thread-local 64 KiB edge-counter map bumped by
+//! `cov::edge!` probes hand-placed at every guard/branch of the hot
+//! parsers — compiled to nothing unless the `fuzz-cov` cargo feature is
+//! on — and [`evolve`] is the AFL-style corpus-evolution loop (energy
+//! scheduling by edge rarity, promotion on new coverage, periodic ddmin
+//! re-minimization) that `deepcabac fuzz --evolve` runs per target,
+//! deterministic under a fixed seed.
+//!
 //! Entry points: `deepcabac fuzz` (CLI, used by the CI `fuzz-smoke`
 //! job) and the `fuzz_structured` / `fault_injection` test binaries.
 
 pub mod alloc;
+pub mod cov;
 pub mod driver;
+pub mod evolve;
 pub mod fault;
 pub mod gen;
 pub mod mutate;
 
-pub use driver::{fuzz_target, replay_corpus, Budgets, Crash, CrashKind, FuzzStats, TargetKind};
+pub use driver::{
+    corpus_groups, ddmin, fuzz_target, replay_corpus, Budgets, Crash, CrashKind, FuzzStats,
+    TargetKind,
+};
+pub use evolve::{batch_coverage, evolve_target, replay_corpus_coverage, EvolveCfg, EvolveReport};
 pub use fault::{FaultOutcome, FaultPlan, FaultyConn};

@@ -1616,7 +1616,10 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         "http" => vec![TargetKind::Http],
         "range" => vec![TargetKind::Range],
         "encoder" => vec![TargetKind::Encoder],
-        other => bail!("--target must be container|stream|http|range|encoder|all, got {other:?}"),
+        "delta_apply" => vec![TargetKind::DeltaApply],
+        other => bail!(
+            "--target must be container|stream|http|range|encoder|delta_apply|all, got {other:?}"
+        ),
     };
     let cases = args.get_count("cases", 256).map_err(|e| anyhow!(e))?;
     let seed = args.get_usize("seed", 42).map_err(|e| anyhow!(e))? as u64;
@@ -1634,6 +1637,11 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         if rstats.alloc_metered { "" } else { " (alloc unmetered)" },
     );
     all_crashes.extend(rcrashes);
+
+    if args.has("evolve") {
+        all_crashes.extend(cmd_fuzz_evolve(args, &targets, cases, seed, &corpus, &budgets)?);
+        return finish_fuzz(all_crashes, artifacts.as_deref());
+    }
 
     for &t in &targets {
         let (stats, crashes) = fuzz_target(t, cases, seed, &budgets);
@@ -1660,8 +1668,17 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         all_crashes.extend(crashes);
     }
 
+    finish_fuzz(all_crashes, artifacts.as_deref())
+}
+
+/// Shared fuzz epilogue: dump minimized reproducers (to `--artifacts`
+/// when given, stdout otherwise) and exit nonzero on any violation.
+fn finish_fuzz(
+    all_crashes: Vec<deepcabac::fuzz::Crash>,
+    artifacts: Option<&std::path::Path>,
+) -> Result<()> {
     if !all_crashes.is_empty() {
-        if let Some(dir) = &artifacts {
+        if let Some(dir) = artifacts {
             std::fs::create_dir_all(dir)?;
             for (i, c) in all_crashes.iter().enumerate() {
                 let p = dir.join(format!("crash_{:03}_{}.bin", i, c.target.as_str()));
@@ -1677,4 +1694,144 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
     }
     println!("fuzz: all invariants held");
     Ok(())
+}
+
+/// The `fuzz --evolve` mode: per target, seed the pool from the on-disk
+/// corpus, run the coverage-guided evolution loop, compare against the
+/// same-budget fixed-seed batch, print the edge-discovery curve, write
+/// promoted finds to `--artifacts`, and emit `BENCH_fuzz.json`
+/// (`--json`). Returns the crashes found (the caller turns any into a
+/// nonzero exit). `--max-time` caps each *target's* loop in seconds;
+/// `--cases` caps its executions — whichever fires first.
+fn cmd_fuzz_evolve(
+    args: &Args,
+    targets: &[deepcabac::fuzz::TargetKind],
+    cases: usize,
+    seed: u64,
+    corpus: &std::path::Path,
+    budgets: &deepcabac::fuzz::Budgets,
+) -> Result<Vec<deepcabac::fuzz::Crash>> {
+    use deepcabac::fuzz::{batch_coverage, corpus_groups, cov, evolve_target, EvolveCfg};
+
+    let max_time = args.get_usize("max-time", 0).map_err(|e| anyhow!(e))? as u64;
+    let json_path = args.get_or("json", "BENCH_fuzz.json");
+    let artifacts = args.get("artifacts").map(std::path::PathBuf::from);
+    if !cov::enabled() {
+        println!(
+            "note: built without --features fuzz-cov — no edges will be recorded, \
+             evolution degrades to uniform seed scheduling"
+        );
+    }
+
+    let mut crashes = Vec::new();
+    let mut target_rows: Vec<Json> = Vec::new();
+    let mut alloc_metered = true;
+    for &t in targets {
+        // the seed pool: every checked-in corpus file for a group that
+        // replays against this target, in sorted (deterministic) order
+        let mut initial: Vec<Vec<u8>> = Vec::new();
+        for (sub, group) in corpus_groups() {
+            if !group.contains(&t) {
+                continue;
+            }
+            let dir = corpus.join(sub);
+            if !dir.is_dir() {
+                continue;
+            }
+            let mut paths: Vec<_> = std::fs::read_dir(&dir)?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.is_file())
+                .collect();
+            paths.sort();
+            for p in paths {
+                initial.push(std::fs::read(&p)?);
+            }
+        }
+        let cfg = EvolveCfg {
+            seed,
+            cases,
+            max_millis: max_time * 1000,
+            budgets: *budgets,
+            ..EvolveCfg::default()
+        };
+        let report = evolve_target(t, &cfg, &initial);
+        // same-budget comparison: the plain fixed-seed batch loop's
+        // unique edges over the executions evolve actually performed
+        let batch_edges = batch_coverage(t, report.cases, seed, budgets);
+        alloc_metered &= report.alloc_metered;
+        println!(
+            "{:<11} evolve: {} execs ({:.0}/s), {} edges (batch {}), {} promoted, corpus {} -> {}, {} crashes",
+            t.as_str(),
+            report.cases,
+            report.execs_per_sec,
+            report.unique_edges,
+            batch_edges,
+            report.promoted,
+            initial.len(),
+            report.corpus_len,
+            report.crashes.len(),
+        );
+        // the discovery curve, decimated to ~10 points for the log
+        let step = (report.discovery.len() / 10).max(1);
+        let curve: Vec<String> = report
+            .discovery
+            .iter()
+            .step_by(step)
+            .chain(
+                report
+                    .discovery
+                    .last()
+                    .filter(|_| (report.discovery.len() - 1) % step != 0),
+            )
+            .map(|(i, e)| format!("{i}:{e}"))
+            .collect();
+        println!("            edges over execs: {}", curve.join(" "));
+        if let Some(dir) = &artifacts {
+            std::fs::create_dir_all(dir)?;
+            for (i, input) in report.promoted_inputs.iter().enumerate() {
+                let p = dir.join(format!("promoted_{}_{:03}.bin", t.as_str(), i));
+                std::fs::write(&p, input)?;
+            }
+            if !report.promoted_inputs.is_empty() {
+                println!(
+                    "            wrote {} promoted finds to {dir:?}",
+                    report.promoted_inputs.len()
+                );
+            }
+        }
+        target_rows.push(json::obj(vec![
+            ("target", json::s(t.as_str())),
+            ("mode", json::s("evolve")),
+            ("cases", json::num(report.cases as f64)),
+            ("execs_per_s", json::num(report.execs_per_sec)),
+            ("unique_edges", json::num(report.unique_edges as f64)),
+            ("batch_unique_edges", json::num(batch_edges as f64)),
+            ("corpus_size", json::num(report.corpus_len as f64)),
+            ("promoted", json::num(report.promoted as f64)),
+            ("crashes", json::num(report.crashes.len() as f64)),
+            (
+                "discovery",
+                json::arr(
+                    report
+                        .discovery
+                        .iter()
+                        .map(|&(i, e)| {
+                            json::arr(vec![json::num(i as f64), json::num(e as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+        crashes.extend(report.crashes);
+    }
+    let j = json::obj(vec![
+        ("bench", json::s("fuzz")),
+        ("seed", json::num(seed as f64)),
+        ("cov_enabled", json::boolean(cov::enabled())),
+        ("alloc_metered", json::boolean(alloc_metered)),
+        ("targets", json::arr(target_rows)),
+    ]);
+    std::fs::write(json_path, j.to_string_pretty())?;
+    println!("wrote {json_path}");
+    Ok(crashes)
 }

@@ -205,12 +205,14 @@ impl CompressedModel {
             Parsed::NeedMore => bail!("truncated container prelude"),
         };
         if prefix.version == VERSION_DELTA {
+            crate::fuzz::cov::edge!("batch_v3_redirect");
             bail!(
                 "container is a version-3 delta segment; use deserialize_any \
                  or DeltaModel::deserialize"
             );
         }
         if prefix.version == VERSION_PROGRESSIVE {
+            crate::fuzz::cov::edge!("batch_v4_redirect");
             bail!(
                 "container is a version-4 progressive container; use \
                  deserialize_any or ProgressiveModel::deserialize"
@@ -232,8 +234,10 @@ impl CompressedModel {
             layers.push(layer);
         }
         if pos != buf.len() {
+            crate::fuzz::cov::edge!("batch_trailing");
             bail!("trailing bytes in container");
         }
+        crate::fuzz::cov::edge!("batch_ok");
         Ok(Self { name: prefix.name, layers })
     }
 }
@@ -289,6 +293,7 @@ fn write_layer_body(out: &mut Vec<u8>, l: &CompressedLayer, chunk_table: bool) {
 fn read_layer_tail(buf: &[u8], hdr: LayerHeader) -> Result<(CompressedLayer, usize)> {
     let mut pos = 0usize;
     if hdr.payload_len > buf.len() {
+        crate::fuzz::cov::edge!("tail_truncated_payload");
         bail!("truncated payload");
     }
     let payload = buf[..hdr.payload_len].to_vec();
@@ -298,9 +303,13 @@ fn read_layer_tail(buf: &[u8], hdr: LayerHeader) -> Result<(CompressedLayer, usi
             pos += n;
             v as usize
         }
-        Parsed::NeedMore => bail!("truncated bias"),
+        Parsed::NeedMore => {
+            crate::fuzz::cov::edge!("tail_truncated_bias");
+            bail!("truncated bias")
+        }
     };
     if blen > crate::baselines::MAX_DECODE_ELEMS || blen * 4 > buf.len() - pos {
+        crate::fuzz::cov::edge!("tail_bias_too_big");
         bail!("truncated bias");
     }
     let mut bias = vec![0f32; blen];
@@ -407,6 +416,7 @@ impl DeltaModel {
             Parsed::NeedMore => bail!("truncated container prelude"),
         };
         if prefix.version != VERSION_DELTA {
+            crate::fuzz::cov::edge!("v3_wrong_version");
             bail!("not a delta segment (version {})", prefix.version);
         }
         let parent_fp = prefix.parent_fp.expect("v3 prelude carries a fingerprint");
@@ -428,8 +438,10 @@ impl DeltaModel {
             layers.push(DeltaLayer::Coded(layer));
         }
         if pos != buf.len() {
+            crate::fuzz::cov::edge!("v3_trailing");
             bail!("trailing bytes in container");
         }
+        crate::fuzz::cov::edge!("v3_ok");
         Ok(Self { parent_fp, name: prefix.name, layers })
     }
 }
@@ -519,6 +531,7 @@ impl ProgressiveModel {
             Parsed::NeedMore => bail!("truncated container prelude"),
         };
         if prefix.version != VERSION_PROGRESSIVE {
+            crate::fuzz::cov::edge!("v4_wrong_version");
             bail!("not a progressive container (version {})", prefix.version);
         }
         let tier_lens = &prefix.tier_lens;
@@ -537,6 +550,7 @@ impl ProgressiveModel {
             base.push(layer);
         }
         if (pos - tier_start) as u64 != tier_lens[0] {
+            crate::fuzz::cov::edge!("v4_tier0_span");
             bail!(
                 "tier 0 body is {} bytes but the tier table declares {}",
                 pos - tier_start,
@@ -548,6 +562,7 @@ impl ProgressiveModel {
             if pos == buf.len() {
                 // progressive truncation rule: EOF exactly at a tier-body
                 // boundary is a complete container at the preceding tier
+                crate::fuzz::cov::edge!("v4_truncated_tier");
                 break;
             }
             let tier_start = pos;
@@ -569,6 +584,7 @@ impl ProgressiveModel {
                 layers.push(DeltaLayer::Coded(layer));
             }
             if (pos - tier_start) as u64 != tlen {
+                crate::fuzz::cov::edge!("v4_tier_span");
                 bail!(
                     "tier {t} body is {} bytes but the tier table declares {tlen}",
                     pos - tier_start
@@ -577,8 +593,10 @@ impl ProgressiveModel {
             refinements.push(layers);
         }
         if pos != buf.len() {
+            crate::fuzz::cov::edge!("v4_trailing");
             bail!("trailing bytes in container");
         }
+        crate::fuzz::cov::edge!("v4_ok");
         Ok(Self { name: prefix.name, base, refinements })
     }
 }
@@ -696,7 +714,10 @@ impl<'a> Cur<'a> {
             }
             // 10 bytes always decide a u64 varint — still undecided means
             // an overlong encoding, not a short buffer
-            None if self.buf.len() - self.pos >= 10 => bail!("malformed varint"),
+            None if self.buf.len() - self.pos >= 10 => {
+                crate::fuzz::cov::edge!("varint_overlong");
+                bail!("malformed varint")
+            }
             None => Ok(None),
         }
     }
@@ -713,6 +734,7 @@ impl<'a> Cur<'a> {
     fn string(&mut self, what: &str) -> Result<Option<String>> {
         let Some(len) = self.varint()? else { return Ok(None) };
         if len as usize > MAX_NAME_BYTES {
+            crate::fuzz::cov::edge!("string_too_long");
             bail!("{what} claims {len} bytes (hostile header?)");
         }
         let Some(bytes) = self.take(len as usize) else { return Ok(None) };
@@ -735,13 +757,16 @@ pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
     // reject a wrong magic as early as the bytes allow
     let probe = buf.len().min(4);
     if buf[..probe] != MAGIC[..probe] {
+        crate::fuzz::cov::edge!("prefix_bad_magic");
         bail!("not a DCBC container");
     }
     if buf.len() < 5 {
+        crate::fuzz::cov::edge!("prefix_short");
         return Ok(Parsed::NeedMore);
     }
     let version = buf[4];
     if version < VERSION || version > MAX_SUPPORTED_VERSION {
+        crate::fuzz::cov::edge!("prefix_bad_version");
         bail!(
             "unsupported DCBC version {version} (this reader supports \
              versions {VERSION}..={MAX_SUPPORTED_VERSION})"
@@ -749,6 +774,7 @@ pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
     }
     let mut cur = Cur { buf, pos: 5 };
     let parent_fp = if version == VERSION_DELTA {
+        crate::fuzz::cov::edge!("prefix_v3_fp");
         Some(u64::from_le_bytes(need!(cur.take(8)).try_into().unwrap()))
     } else {
         None
@@ -759,22 +785,27 @@ pub fn parse_container_prefix(buf: &[u8]) -> Result<Parsed<ContainerPrefix>> {
     if version == VERSION_PROGRESSIVE {
         let n_tiers = need!(cur.varint()?) as usize;
         if n_tiers == 0 || n_tiers > MAX_TIERS {
+            crate::fuzz::cov::edge!("prefix_bad_tiers");
             bail!("progressive container claims {n_tiers} tiers (hostile header?)");
         }
         tier_lens.reserve(n_tiers);
         let mut total = 0u64;
         for _ in 0..n_tiers {
             let len = need!(cur.varint()?);
-            total = total
-                .checked_add(len)
-                .ok_or_else(|| anyhow!("tier table byte-length overflow"))?;
+            crate::fuzz::cov::edge!("prefix_tier_len");
+            total = total.checked_add(len).ok_or_else(|| {
+                crate::fuzz::cov::edge!("prefix_tier_overflow");
+                anyhow!("tier table byte-length overflow")
+            })?;
             tier_lens.push(len);
         }
         // the whole file must stay addressable on this platform
         if total > usize::MAX as u64 {
+            crate::fuzz::cov::edge!("prefix_tier_overflow");
             bail!("tier table byte-length overflow");
         }
     }
+    crate::fuzz::cov::edge!("prefix_ok");
     Ok(Parsed::Complete(
         ContainerPrefix { version, name, n_layers, parent_fp, tier_lens },
         cur.pos,
@@ -788,8 +819,11 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
     if version == VERSION_DELTA {
         let skip = need!(cur.take(1))[0];
         match skip {
-            0 => {}
+            0 => {
+                crate::fuzz::cov::edge!("dlayer_coded");
+            }
             1 => {
+                crate::fuzz::cov::edge!("dlayer_skip");
                 let name = need!(cur.string("layer name")?);
                 return Ok(Parsed::Complete(
                     LayerHeader {
@@ -806,12 +840,16 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
                     cur.pos,
                 ));
             }
-            v => bail!("bad delta skip flag {v}"),
+            v => {
+                crate::fuzz::cov::edge!("dlayer_bad_flag");
+                bail!("bad delta skip flag {v}")
+            }
         }
     }
     let name = need!(cur.string("layer name")?);
     let ndims = need!(cur.varint()?) as usize;
     if ndims > MAX_DIMS {
+        crate::fuzz::cov::edge!("layer_bad_rank");
         bail!("layer claims rank {ndims} (hostile header?)");
     }
     let mut dims = Vec::with_capacity(ndims.min(1 << 8));
@@ -824,12 +862,15 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
     let params = need!(cur.take(4));
     let (n_abs_flags, rem_tag, rem_param, flags) =
         (params[0] as u32, params[1], params[2] as u32, params[3]);
-    let remainder = RemainderMode::from_tag(rem_tag, rem_param)
-        .ok_or_else(|| anyhow!("bad remainder tag {rem_tag}"))?;
+    let remainder = RemainderMode::from_tag(rem_tag, rem_param).ok_or_else(|| {
+        crate::fuzz::cov::edge!("layer_bad_remainder");
+        anyhow!("bad remainder tag {rem_tag}")
+    })?;
     let mut chunks = Vec::new();
     if version == VERSION_CHUNKED || version == VERSION_DELTA {
         let n_chunks = need!(cur.varint()?) as usize;
         if n_chunks == 0 || n_chunks > MAX_CHUNKS {
+            crate::fuzz::cov::edge!("layer_bad_chunks");
             bail!("layer claims {n_chunks} chunks (hostile header?)");
         }
         chunks.reserve(n_chunks.min(1 << 10));
@@ -839,11 +880,13 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
             chunks.push(ChunkInfo { n_weights: cw, bytes: cb });
         }
         if n_chunks == 1 {
+            crate::fuzz::cov::edge!("layer_chunk_canonical");
             chunks.clear(); // canonical monolithic representation
         }
     }
     let n_weights = need!(cur.varint()?) as usize;
     if n_weights > crate::baselines::MAX_DECODE_ELEMS {
+        crate::fuzz::cov::edge!("layer_too_many_weights");
         bail!("layer claims {n_weights} weights (hostile header?)");
     }
     let payload_len = need!(cur.varint()?) as usize;
@@ -854,6 +897,7 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
     // without this cap a streaming decoder could be made to buffer an
     // arbitrarily large claimed payload
     if payload_len > n_weights.saturating_mul(512).saturating_add(4096) {
+        crate::fuzz::cov::edge!("layer_payload_density");
         bail!("layer claims {payload_len} payload bytes for {n_weights} weights (hostile header?)");
     }
     // ...and the reverse direction: a level-density bound. The M-coder's
@@ -865,21 +909,28 @@ pub fn parse_layer_header(buf: &[u8], version: u8) -> Result<Parsed<LayerHeader>
     // which would otherwise force a ~1 GiB allocation and 2^28 decode
     // steps out of a few dozen input bytes.
     if n_weights > payload_len.saturating_mul(2048).saturating_add(4096) {
+        crate::fuzz::cov::edge!("layer_level_density");
         bail!("layer claims {n_weights} weights for {payload_len} payload bytes (hostile header?)");
     }
     // a chunk table must tile the payload and the weight count
     if !chunks.is_empty() {
         let (mut ws, mut bs) = (0usize, 0usize);
         for c in &chunks {
-            ws = ws
-                .checked_add(c.n_weights)
-                .ok_or_else(|| anyhow!("chunk weight overflow"))?;
-            bs = bs.checked_add(c.bytes).ok_or_else(|| anyhow!("chunk byte overflow"))?;
+            ws = ws.checked_add(c.n_weights).ok_or_else(|| {
+                crate::fuzz::cov::edge!("layer_chunk_overflow");
+                anyhow!("chunk weight overflow")
+            })?;
+            bs = bs.checked_add(c.bytes).ok_or_else(|| {
+                crate::fuzz::cov::edge!("layer_chunk_overflow");
+                anyhow!("chunk byte overflow")
+            })?;
         }
         if ws != n_weights || bs != payload_len {
+            crate::fuzz::cov::edge!("layer_chunk_tile");
             bail!("chunk table inconsistent: {ws}/{n_weights} weights, {bs}/{payload_len} bytes");
         }
     }
+    crate::fuzz::cov::edge!("layer_ok");
     Ok(Parsed::Complete(
         LayerHeader {
             name,

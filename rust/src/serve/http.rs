@@ -37,39 +37,63 @@ impl Request {
     /// only for a syntactically valid single bytes-range that lies
     /// outside the body (→ 416).
     pub fn byte_range(&self, len: usize) -> RangeOutcome {
-        let Some(spec) = self.header("range") else { return RangeOutcome::Ignored };
+        let Some(spec) = self.header("range") else {
+            crate::fuzz::cov::edge!("range_absent");
+            return RangeOutcome::Ignored;
+        };
         let spec = spec.trim();
         let Some(spec) = spec.strip_prefix("bytes=") else {
+            crate::fuzz::cov::edge!("range_not_bytes");
             return RangeOutcome::Ignored; // unknown unit: MUST ignore
         };
         if spec.contains(',') {
+            crate::fuzz::cov::edge!("range_multi");
             return RangeOutcome::Ignored; // multipart unsupported: serve full
         }
-        let Some((a, b)) = spec.split_once('-') else { return RangeOutcome::Ignored };
+        let Some((a, b)) = spec.split_once('-') else {
+            crate::fuzz::cov::edge!("range_no_dash");
+            return RangeOutcome::Ignored;
+        };
         let (start, end) = match (a.trim(), b.trim()) {
-            ("", "") => return RangeOutcome::Ignored,
+            ("", "") => {
+                crate::fuzz::cov::edge!("range_empty_pair");
+                return RangeOutcome::Ignored;
+            }
             // suffix range: last N bytes
             ("", n) => {
-                let Ok(n) = n.parse::<usize>() else { return RangeOutcome::Ignored };
+                let Ok(n) = n.parse::<usize>() else {
+                    crate::fuzz::cov::edge!("range_suffix_bad");
+                    return RangeOutcome::Ignored;
+                };
                 if n == 0 {
+                    crate::fuzz::cov::edge!("range_suffix_zero");
                     return RangeOutcome::Unsatisfiable;
                 }
+                crate::fuzz::cov::edge!("range_suffix_ok");
                 (len.saturating_sub(n), len)
             }
             (s, "") => {
-                let Ok(s) = s.parse::<usize>() else { return RangeOutcome::Ignored };
+                let Ok(s) = s.parse::<usize>() else {
+                    crate::fuzz::cov::edge!("range_open_bad");
+                    return RangeOutcome::Ignored;
+                };
+                crate::fuzz::cov::edge!("range_open_ok");
                 (s, len)
             }
             (s, e) => {
                 let (Ok(s), Ok(e)) = (s.parse::<usize>(), e.parse::<usize>()) else {
+                    crate::fuzz::cov::edge!("range_closed_bad");
                     return RangeOutcome::Ignored;
                 };
+                crate::fuzz::cov::edge!("range_closed_ok");
                 (s, e.saturating_add(1).min(len))
             }
         };
         if start >= len || start >= end {
+            crate::fuzz::cov::edge!("range_unsat");
             return RangeOutcome::Unsatisfiable;
         }
+        crate::fuzz::cov::edge!("range_sat");
         RangeOutcome::Satisfiable(start..end)
     }
 }
@@ -141,20 +165,43 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
 /// sequence must come back as `Ok` or `Err`, never a panic.
 pub fn parse_request_head(head: &[u8]) -> Result<Request> {
     if head.len() > MAX_HEAD_BYTES {
+        crate::fuzz::cov::edge!("head_too_large");
         bail!("request head too large");
     }
-    let head = std::str::from_utf8(head).context("non-utf8 request head")?;
+    let head = std::str::from_utf8(head)
+        .map_err(|e| {
+            crate::fuzz::cov::edge!("head_not_utf8");
+            e
+        })
+        .context("non-utf8 request head")?;
     let mut lines = head.lines();
-    let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
+    let request_line = lines.next().ok_or_else(|| {
+        crate::fuzz::cov::edge!("head_empty");
+        anyhow!("empty request")
+    })?;
     let mut parts = request_line.split_whitespace();
-    let method = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
-    let path = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let method = parts
+        .next()
+        .ok_or_else(|| {
+            crate::fuzz::cov::edge!("head_bad_request_line");
+            anyhow!("bad request line")
+        })?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| {
+            crate::fuzz::cov::edge!("head_bad_request_line");
+            anyhow!("bad request line")
+        })?
+        .to_string();
     let mut headers = Vec::new();
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
+            crate::fuzz::cov::edge!("head_header_line");
             headers.push((k.trim().to_string(), v.trim().to_string()));
         }
     }
+    crate::fuzz::cov::edge!("head_ok");
     Ok(Request { method, path, headers })
 }
 

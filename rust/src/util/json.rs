@@ -192,6 +192,11 @@ pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// (`bool` is a keyword, hence the long name.)
+pub fn boolean(v: bool) -> Json {
+    Json::Bool(v)
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,

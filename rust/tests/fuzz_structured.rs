@@ -111,3 +111,158 @@ fn decode_allocation_stays_budgeted() {
         "decoding a generated container peaked at {peak} bytes"
     );
 }
+
+/// `ddmin` must reset the allocation meter before every probe: this
+/// predicate holds only while the candidate still allocates ≥ 32 KiB in
+/// one go, and — crucially — it never resets the meter itself. Without
+/// the per-probe reset every candidate would inherit the previous
+/// probe's peak, every deletion would "hold", and the input would shrink
+/// to nothing; with it, ddmin converges to exactly the 32-byte core.
+#[test]
+fn ddmin_resets_the_meter_between_probes() {
+    let input = vec![7u8; 100];
+    let holds = |buf: &[u8]| {
+        // allocate 1 KiB per input byte, then ask the meter — a stand-in
+        // for an alloc-budget crasher whose allocation scales with input
+        let v = vec![0u8; buf.len() * 1024];
+        std::hint::black_box(&v);
+        alloc::peak() >= 32 * 1024
+    };
+    assert!(holds(&input), "the unminimized input must hold");
+    let min = deepcabac::fuzz::ddmin(&input, holds, 4000);
+    assert_eq!(
+        min.len(),
+        32,
+        "meter-sensitive ddmin must converge to the 32-byte core, got {} bytes",
+        min.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coverage-guided layer (needs --features fuzz-cov to record edges)
+// ---------------------------------------------------------------------------
+
+/// Per-target unique-edge floors for replaying the checked-in corpus,
+/// parsed from the committed `BENCH_fuzz_baseline.json` (the same file
+/// the CI gate reads) — one source of truth for "the corpus exercises
+/// at least this much of the parsers".
+#[cfg(feature = "fuzz-cov")]
+fn committed_floors() -> std::collections::BTreeMap<String, usize> {
+    let raw = include_str!("../BENCH_fuzz_baseline.json");
+    let j = deepcabac::util::json::Json::parse(raw).expect("baseline JSON parses");
+    let obj = j.get("floors").expect("baseline has a floors object");
+    let mut floors = std::collections::BTreeMap::new();
+    for t in TargetKind::all() {
+        let v = obj
+            .get(t.as_str())
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("baseline floors missing target {}", t.as_str()));
+        floors.insert(t.as_str().to_string(), v);
+    }
+    floors
+}
+
+/// The coverage-floor regression gate: replaying the full corpus with
+/// instrumentation must light up at least the committed number of
+/// unique edges per target. A refactor that quietly stops a corpus case
+/// short of the deep parsing code fails here, not in production.
+#[cfg(feature = "fuzz-cov")]
+#[test]
+fn corpus_coverage_meets_committed_floors() {
+    let budgets = Budgets::default();
+    let cov = deepcabac::fuzz::replay_corpus_coverage(&corpus_root(), &budgets).unwrap();
+    let floors = committed_floors();
+    for (target, edges) in &cov {
+        let floor = floors[target.as_str()];
+        assert!(
+            edges.len() >= floor,
+            "{}: corpus replay hit {} unique edges, committed floor is {}",
+            target.as_str(),
+            edges.len(),
+            floor
+        );
+    }
+}
+
+/// Two instrumented replays of the same corpus produce the identical
+/// edge map per target — coverage capture is deterministic, so floor
+/// failures in CI reproduce locally.
+#[cfg(feature = "fuzz-cov")]
+#[test]
+fn corpus_coverage_is_deterministic_across_replays() {
+    let budgets = Budgets::default();
+    let a = deepcabac::fuzz::replay_corpus_coverage(&corpus_root(), &budgets).unwrap();
+    let b = deepcabac::fuzz::replay_corpus_coverage(&corpus_root(), &budgets).unwrap();
+    assert_eq!(a.len(), b.len());
+    for ((t1, e1), (t2, e2)) in a.iter().zip(&b) {
+        assert_eq!(t1, t2);
+        assert_eq!(e1, e2, "{}: edge sets differ between replays", t1.as_str());
+    }
+}
+
+/// The tentpole acceptance criterion: at an equal execution budget, the
+/// corpus-seeded evolve loop must discover strictly more unique edges
+/// than the fixed-seed generate-and-mutate batch — on the container and
+/// the delta-apply targets. The corpus seeds carry hand-built reject
+/// cases (overlong varints, bad magic, hostile tier tables) the
+/// generators essentially never produce, so evolution starts from
+/// coverage the batch cannot reach and grows from there.
+#[cfg(feature = "fuzz-cov")]
+#[test]
+fn evolve_beats_same_budget_batch_on_container_and_delta_apply() {
+    use deepcabac::fuzz::{batch_coverage, corpus_groups, evolve_target, EvolveCfg};
+
+    let budgets = Budgets::default();
+    for target in [TargetKind::Container, TargetKind::DeltaApply] {
+        let mut initial = Vec::new();
+        for (sub, group) in corpus_groups() {
+            if !group.contains(&target) {
+                continue;
+            }
+            let dir = corpus_root().join(sub);
+            let mut paths: Vec<_> = std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.is_file())
+                .collect();
+            paths.sort();
+            for p in paths {
+                initial.push(std::fs::read(&p).unwrap());
+            }
+        }
+        assert!(!initial.is_empty(), "{}: no corpus seeds", target.as_str());
+        let cfg = EvolveCfg { seed: 0xD5EE9CABAC, cases: 160, max_millis: 0, budgets, ..EvolveCfg::default() };
+        let report = evolve_target(target, &cfg, &initial);
+        let batch = batch_coverage(target, 160, 0xD5EE9CABAC, &budgets);
+        assert!(
+            report.crashes.is_empty(),
+            "{}: evolve found {} crashes",
+            target.as_str(),
+            report.crashes.len()
+        );
+        assert!(
+            report.unique_edges > batch,
+            "{}: evolve hit {} unique edges, batch hit {} — evolution must win",
+            target.as_str(),
+            report.unique_edges,
+            batch
+        );
+    }
+}
+
+/// Instrumented evolve is byte-reproducible under a fixed seed with the
+/// metering allocator installed — the CI artifact (promoted finds +
+/// BENCH_fuzz.json) is stable run to run.
+#[cfg(feature = "fuzz-cov")]
+#[test]
+fn evolve_is_reproducible_with_instrumentation_and_metering() {
+    use deepcabac::fuzz::{evolve_target, EvolveCfg};
+
+    let cfg = EvolveCfg { seed: 99, cases: 80, ..EvolveCfg::default() };
+    let a = evolve_target(TargetKind::Container, &cfg, &[]);
+    let b = evolve_target(TargetKind::Container, &cfg, &[]);
+    assert_eq!(a.unique_edges, b.unique_edges);
+    assert_eq!(a.promoted, b.promoted);
+    assert_eq!(a.discovery, b.discovery);
+    assert_eq!(a.promoted_inputs, b.promoted_inputs);
+}
